@@ -1,0 +1,33 @@
+//! Table V driver: measure W32A32 vs W8A8 perplexity of the trained nano
+//! model on the held-out synthetic corpus.
+//!
+//!     cargo run --release --example ppl_eval [max_tokens]
+
+use std::path::Path;
+
+use anyhow::Result;
+use llamaf::exp::table5;
+
+fn main() -> Result<()> {
+    let max_tokens: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("max_tokens must be an integer"))
+        .unwrap_or(2048);
+    let art = Path::new("artifacts");
+    for f in ["nano_f32.lfck", "nano_q8.lfq8", "corpus_val.txt"] {
+        anyhow::ensure!(art.join(f).exists(), "missing artifacts/{f}; run `make artifacts`");
+    }
+    println!("evaluating PPL on {max_tokens} held-out predictions (W32A32 then W8A8)...");
+    let r = table5::eval(
+        &art.join("nano_f32.lfck"),
+        &art.join("nano_q8.lfq8"),
+        &art.join("corpus_val.txt"),
+        max_tokens,
+    )?;
+    let delta = 100.0 * (r.ppl_q8 - r.ppl_f32) / r.ppl_f32;
+    println!("\n  W32A32 PPL: {:.4}", r.ppl_f32);
+    println!("  W8A8   PPL: {:.4}  (GS=256)", r.ppl_q8);
+    println!("  delta:      {delta:+.3}%   (paper: +0.57% on TinyLlama/WikiText-2)");
+    anyhow::ensure!(delta.abs() < 5.0, "quantization degraded PPL by more than 5%");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! SQuAD-style QA workload (paper §V-C): answer a batch of questions with
+//! greedy sampling, EOS omitted, at step sizes 64/128/224, measuring tok/s
+//! for the PS baseline and the LlamaF engine (sync + async).
+//!
+//! The real SQuAD set is unavailable offline; the questions below follow
+//! the same "short factual question over a context" shape using the
+//! synthetic corpus domain (DESIGN.md §5 substitution 3).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+use llamaf::engine::forward::{CpuEngine, Engine};
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::engine::llamaf::LlamafEngine;
+use llamaf::ps::ThreadedGqmv;
+use llamaf::runtime::Runtime;
+use llamaf::sched::SchedMode;
+use llamaf::tokenizer::Tokenizer;
+use llamaf::util::ThreadPool;
+
+const QUESTIONS: &[&str] = &[
+    "what does the engineer build? ",
+    "where does the old captain carry the wooden boat? ",
+    "who repairs the broken clock near the river? ",
+    "when does a student measure the glass prism? ",
+];
+
+fn bench_engine(name: &str, engine: &mut dyn Engine, tok: &Tokenizer, steps: usize) -> Result<f64> {
+    let mut total_toks = 0usize;
+    let mut total_s = 0.0f64;
+    for q in QUESTIONS {
+        let ids = tok.encode(q, true);
+        let out = generate(engine, &ids, steps, Sampler::Greedy, false)?;
+        total_toks += out.generated.len();
+        total_s += out.generated.len() as f64 / out.tok_per_s;
+    }
+    let tps = total_toks as f64 / total_s;
+    println!("  {name:<34} steps={steps:<4} {tps:>9.2} tok/s");
+    Ok(tps)
+}
+
+fn main() -> Result<()> {
+    let artifacts = Path::new("artifacts");
+    let ckpt = artifacts.join("nano_q8.lfq8");
+    anyhow::ensure!(ckpt.exists(), "run `make artifacts` first");
+    let qm = llamaf::ckpt::read_q8(&ckpt)?;
+    let tok = Tokenizer::new(qm.cfg.vocab_size);
+    // nano seq_len=256: prompts ~50 tokens, so cap steps at 64/128/192
+    let steps_list = [64usize, 128, 192];
+
+    println!("SQuAD-style QA benchmark ({} questions, greedy, EOS omitted)\n", QUESTIONS.len());
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+
+    let pool = Arc::new(ThreadPool::new(4));
+    let mut ps = CpuEngine::new(qm.clone(), Box::new(ThreadedGqmv::new(pool)));
+    let mut ps_row = vec![];
+    for &s in &steps_list {
+        ps_row.push(bench_engine("ZCU102-PS analogue (threaded x4)", &mut ps, &tok, s)?);
+    }
+    rows.push(("PS".into(), ps_row));
+
+    let rt = Arc::new(Runtime::load(artifacts)?);
+    for (label, mode) in [("LlamaF no-sched (sync)", SchedMode::Sync), ("LlamaF (async)", SchedMode::Async)] {
+        let mut eng = LlamafEngine::open(&ckpt, Arc::clone(&rt), mode)?;
+        let mut row = vec![];
+        for &s in &steps_list {
+            row.push(bench_engine(label, &mut eng, &tok, s)?);
+        }
+        rows.push((label.into(), row));
+    }
+
+    println!("\nsample answers (LlamaF async, 48 steps):");
+    let mut eng = LlamafEngine::open(&ckpt, rt, SchedMode::Async)?;
+    for q in QUESTIONS.iter().take(2) {
+        let ids = tok.encode(q, true);
+        let out = generate(&mut eng, &ids, 48, Sampler::Greedy, false)?;
+        println!("  Q: {q}\n  A: {}", tok.decode(&out.generated).replace('\n', " "));
+    }
+    Ok(())
+}

@@ -1,0 +1,136 @@
+"""AOT export: lower the Pallas GQMV kernel to HLO text for the Rust runtime.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published `xla` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+One executable per GQMV shape, mirroring the paper's statically
+instantiated kernel1 (n = dim) / kernel2 (n = hidden_dim).  The Rust
+runtime compiles each at startup and calls them from the decode hot path
+with (xq, xs, wq, ws) buffers — python is never on the request path.
+
+Outputs under artifacts/:
+  gqmv_m{M}_n{N}_g{GS}.hlo.txt   per shape
+  manifest.json                  shape -> file map + config metadata
+  golden_gqmv_*.bin              input/output fixture for the Rust runtime
+                                 smoke test (xq i8, xs f32, wq i8, ws f32,
+                                 out f32 raw little-endian arrays)
+
+Usage: python -m compile.aot --out ../artifacts [--full]
+       (--full additionally exports the TinyLlama-1.1B geometry kernels)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import ref
+from .kernels.gqmv import gqmv
+from .model import NANO, TINYLLAMA_1_1B, LlamaConfig
+
+
+def gqmv_shapes(cfg: LlamaConfig) -> dict[str, tuple[int, int]]:
+    """The matrix shapes Algorithm 2 needs (rows m, cols n).  Fused QKV and
+    W1+W3 per paper §III-B; classifier reuses kernel1 with m=vocab."""
+    return {
+        "qkv": (cfg.dim + 2 * cfg.kv_dim, cfg.dim),
+        "wo": (cfg.dim, cfg.dim),
+        "w13": (2 * cfg.hidden_dim, cfg.dim),
+        "w2": (cfg.dim, cfg.hidden_dim),
+        "cls": (cfg.vocab_size, cfg.dim),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gqmv(m: int, n: int, gs: int) -> str:
+    g = n // gs
+    specs = (
+        jax.ShapeDtypeStruct((n,), jnp.int8),
+        jax.ShapeDtypeStruct((g,), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.int8),
+        jax.ShapeDtypeStruct((m, g), jnp.float32),
+    )
+    lowered = jax.jit(lambda xq, xs, wq, ws: gqmv(xq, xs, wq, ws, gs=gs)).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def export_golden(out_dir: str, m: int, n: int, gs: int, seed: int = 123) -> dict:
+    """Raw-array fixture so the Rust runtime test can verify numerics."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((m, n)).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    wq, ws = ref.quantize(w, gs)
+    xq, xs = ref.quantize(x, gs)
+    ws2 = ws.reshape(m, n // gs)
+    out = ref.gqmv_ref(xq, xs, wq, ws2, gs)
+    files = {}
+    for name, arr in [("xq", xq), ("xs", xs), ("wq", wq), ("ws", ws2), ("out", out)]:
+        path = f"golden_gqmv_{name}.bin"
+        arr.tofile(os.path.join(out_dir, path))
+        files[name] = path
+    return {"m": m, "n": n, "gs": gs, "files": files}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also export TinyLlama-1.1B geometry kernels")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: dict = {"gs": NANO.gs, "kernels": [], "configs": {}}
+    shapes: dict[tuple[int, int], str] = {}
+
+    def add_config(name: str, cfg: LlamaConfig):
+        manifest["configs"][name] = {
+            "dim": cfg.dim, "hidden_dim": cfg.hidden_dim,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "vocab_size": cfg.vocab_size,
+            "seq_len": cfg.seq_len, "gs": cfg.gs,
+            "kernels": {},
+        }
+        for role, (m, n) in gqmv_shapes(cfg).items():
+            fname = f"gqmv_m{m}_n{n}_g{cfg.gs}.hlo.txt"
+            manifest["configs"][name]["kernels"][role] = fname
+            if (m, n) not in shapes:
+                shapes[(m, n)] = fname
+
+    add_config("nano", NANO)
+    if args.full:
+        add_config("tinyllama-1.1b", TINYLLAMA_1_1B)
+
+    for (m, n), fname in sorted(shapes.items()):
+        text = lower_gqmv(m, n, NANO.gs)
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["kernels"].append({"m": m, "n": n, "gs": NANO.gs, "file": fname})
+        print(f"wrote {fname} ({len(text)/1024:.0f} KiB)")
+
+    golden = export_golden(args.out, m=64, n=512, gs=NANO.gs)
+    manifest["golden"] = golden
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['kernels'])} kernels, "
+          f"configs: {list(manifest['configs'])}")
+
+
+if __name__ == "__main__":
+    main()

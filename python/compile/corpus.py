@@ -1,0 +1,93 @@
+"""Deterministic synthetic corpus generator.
+
+The image is offline (no WikiText-2 / SQuAD), so all language-modeling
+experiments use a synthetic English-like corpus produced by a small seeded
+template grammar.  The corpus is deterministic (seed 42), byte-level
+tokenizable, and has enough structure (agreement, templates, punctuation,
+numerals) that a ~4M-parameter model's cross-entropy drops well below the
+uniform baseline — making the W32A32 vs W8A8 PPL comparison (Table V)
+meaningful.  See DESIGN.md §5 (substitution 3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SUBJECTS = [
+    "the engineer", "a student", "the quick fox", "the old captain",
+    "my neighbor", "the tall robot", "a young writer", "the museum guide",
+    "the ship's crew", "an honest merchant", "the night watchman",
+    "the curious child", "a wandering monk", "the village baker",
+]
+VERBS = [
+    "builds", "sees", "repairs", "studies", "paints", "measures",
+    "describes", "follows", "carries", "designs", "observes", "records",
+    "collects", "examines",
+]
+OBJECTS = [
+    "a small bridge", "the broken clock", "an ancient map", "the wooden boat",
+    "a copper wire", "the stone tower", "a paper lantern", "the silver coin",
+    "an iron gate", "the glass prism", "a woolen coat", "the marble statue",
+]
+PLACES = [
+    "near the river", "in the market", "behind the hill", "at the harbor",
+    "under the bridge", "inside the library", "by the old mill",
+    "along the coast", "in the valley", "on the mountain",
+]
+CONNECTIVES = ["and then", "because", "while", "although", "so", "after that"]
+QUESTION_WORDS = ["what", "where", "when", "who", "why", "how"]
+
+
+def _sentence(rng: np.random.Generator) -> str:
+    s = rng.choice(SUBJECTS)
+    v = rng.choice(VERBS)
+    o = rng.choice(OBJECTS)
+    p = rng.choice(PLACES)
+    form = rng.integers(0, 5)
+    if form == 0:
+        return f"{s} {v} {o} {p}."
+    if form == 1:
+        return f"{s} {v} {o}."
+    if form == 2:
+        c = rng.choice(CONNECTIVES)
+        s2, v2, o2 = rng.choice(SUBJECTS), rng.choice(VERBS), rng.choice(OBJECTS)
+        return f"{s} {v} {o} {c} {s2} {v2} {o2}."
+    if form == 3:
+        q = rng.choice(QUESTION_WORDS)
+        return f"{q} does {s} {v.removesuffix('s')} {o}? {s} {v} {o} {p}."
+    n = int(rng.integers(2, 100))
+    return f"{s} {v} {n} of {o.split(' ', 1)[1]} {p}."
+
+
+def generate(n_bytes: int, seed: int = 42) -> str:
+    """Generate at least n_bytes of corpus text."""
+    rng = np.random.default_rng(seed)
+    parts: list[str] = []
+    size = 0
+    while size < n_bytes:
+        para_len = int(rng.integers(3, 9))
+        para = " ".join(_sentence(rng) for _ in range(para_len))
+        parts.append(para)
+        size += len(para) + 2
+    return "\n\n".join(parts)
+
+
+def train_val_split(n_train: int = 262144, n_val: int = 32768, seed: int = 42):
+    """Disjoint train/val texts (different seeds => different samples)."""
+    return generate(n_train, seed=seed), generate(n_val, seed=seed + 1)
+
+
+# --- byte-level tokenizer (mirrored exactly by rust/src/tokenizer) ---------
+PAD_ID, BOS_ID, EOS_ID = 0, 1, 2
+BYTE_OFFSET = 3  # token id of byte b is b + 3
+
+
+def encode(text: str, bos: bool = True) -> list[int]:
+    ids = [BOS_ID] if bos else []
+    ids.extend(b + BYTE_OFFSET for b in text.encode("utf-8"))
+    return ids
+
+
+def decode(ids: list[int]) -> str:
+    data = bytes(i - BYTE_OFFSET for i in ids if i >= BYTE_OFFSET)
+    return data.decode("utf-8", errors="replace")

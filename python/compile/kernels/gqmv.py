@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernel: group-wise quantized matrix-vector multiply (GQMV).
+
+This is the compute hot-spot the paper offloads to the FPGA PL.  The HLS
+dataflow pipeline (paper §IV: pre-processing -> dot-product w/ adder tree ->
+accumulate) is re-thought for a TPU-style memory hierarchy:
+
+  * the `w_stream` DDR burst reads become the Pallas *grid*: each grid step
+    DMAs one (TM, n) weight tile HBM->VMEM (double-buffered by the Pallas
+    pipeline — the analogue of DATAFLOW stage overlap);
+  * the BRAM-cached activation becomes a VMEM-resident block whose
+    index_map is constant (loaded once, reused every step);
+  * the GS-lane SIMD multiply + depth-8 adder tree becomes a vectorized
+    int16 multiply with an int32 group reduction;
+  * the gradual INT8 -> INT16 -> INT32 -> FP32 cast chain is kept verbatim
+    so results are bit-identical with the hardware algorithm (ref.py).
+
+interpret=True is REQUIRED on this image: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so the kernel lowers to plain HLO.  See DESIGN.md
+§Hardware-Adaptation for the VMEM/MXU analysis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Max rows of W processed per grid step.  256 rows x n=5632 int8 = 1.4 MiB
+# per tile: two in-flight tiles (double buffering) + x + scales stay well
+# under a real TPU core's ~16 MiB VMEM.  Perf note (EXPERIMENTS.md §Perf):
+# the CPU-PJRT execution of the lowered grid loop costs ~20-30 us per grid
+# step, so the TILE_M sweep 8 -> 64 -> 128 -> 256 cut kernel latency up to
+# ~13x at identical numerics; on a real TPU the same change trades grid
+# parallelism for VMEM pressure and stays comfortably inside budget.
+TILE_M = 256
+
+
+def _pick_tile(m: int) -> int:
+    """Largest tile <= TILE_M dividing m (every Algorithm-2 shape is a
+    multiple of 256; smaller test shapes fall back to their own divisors)."""
+    t = min(TILE_M, m)
+    while m % t:
+        t -= 1
+    return t
+
+
+def _gqmv_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, *, gs: int):
+    """One grid step: out[TM] for a (TM, n) weight tile.
+
+    Cast chain mirrors the FPGA datapath:
+      int8 -> int16 (pre-processing stage casts both operands),
+      int16 * int16 products (|p| <= 127*127 fits int16),
+      int32 group sums (adder tree's first layer widens),
+      fp32 scale & accumulate.
+    """
+    n = wq_ref.shape[1]
+    g = n // gs
+    w16 = wq_ref[...].astype(jnp.int16)             # (TM, n)
+    x16 = xq_ref[...].astype(jnp.int16)             # (n,)
+    prod = w16 * x16[None, :]                       # (TM, n) int16
+    gsum = jnp.sum(
+        prod.reshape(prod.shape[0], g, gs).astype(jnp.int32), axis=2
+    )                                               # (TM, g) int32
+    scale = ws_ref[...] * xs_ref[...][None, :]      # (TM, g) f32
+    out_ref[...] = jnp.sum(gsum.astype(jnp.float32) * scale, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("gs",))
+def gqmv(xq, xs, wq, ws, *, gs: int = 256):
+    """Group-wise quantized matvec via Pallas.
+
+    Args:
+      xq: int8[n]        quantized activation
+      xs: f32[n//gs]     activation group scales
+      wq: int8[m, n]     quantized weight matrix (row-major)
+      ws: f32[m, n//gs]  weight group scales
+      gs: group size (static)
+
+    Returns f32[m].
+    """
+    m, n = wq.shape
+    assert n % gs == 0, f"n={n} must be a multiple of GS={gs}"
+    tile = _pick_tile(m)
+    g = n // gs
+    grid = (m // tile,)
+    return pl.pallas_call(
+        functools.partial(_gqmv_kernel, gs=gs),
+        grid=grid,
+        in_specs=[
+            # activation: same block every step -> resident in VMEM (BRAM analogue)
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+            # weights/scales: streamed one row-tile per step (w_stream analogue)
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, g), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(xq, xs, wq, ws)
+
+
+def quantize_jnp(r, gs: int):
+    """jnp twin of ref.quantize (round-half-away, symmetric, group-wise).
+
+    Used by the L2 model so activation quantization lowers into the same
+    HLO module as the kernel call.
+    """
+    flat = r.reshape(-1)
+    groups = flat.reshape(-1, gs)
+    gmax = jnp.max(jnp.abs(groups), axis=1)
+    scales = (gmax / 127.0).astype(jnp.float32)
+    safe = jnp.where(scales == 0.0, 1.0, scales)
+    q = jnp.sign(groups / safe[:, None]) * jnp.floor(
+        jnp.abs(groups / safe[:, None]) + 0.5
+    )
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q.reshape(r.shape), scales
+
+
+def gqmv_fused(x, wq, ws, *, gs: int = 256):
+    """Run-time quantization of x fused with the GQMV kernel (paper §III-A:
+    'run-time quantization of inference parameters')."""
+    xq, xs = quantize_jnp(x, gs)
+    return gqmv(xq, xs, wq, ws, gs=gs)

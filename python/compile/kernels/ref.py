@@ -1,0 +1,95 @@
+"""Pure-jnp / numpy oracle for group-wise quantized matrix-vector multiply.
+
+This mirrors the paper's Algorithm 1 (GQMV) exactly, including the cast
+chain the hardware uses (INT8 -> INT16 products -> INT32 group sums ->
+FP32 scaled accumulation).  It is the single source of truth: the Pallas
+kernel (gqmv.py), the JAX model (model.py), the numpy reference engine
+(refmodel.py) and the Rust implementations are all tested against it.
+
+Quantization scheme (symmetric, group-wise, W8A8 as in paper Eq. 1-2):
+
+    S    = max(|r|_group) / 127.0
+    q    = clip(round_half_away(r / S), -127, 127)      (int8)
+    rhat = q * S
+
+The paper writes S = 2*max|r|/255 (= max|r|/127.5); we use the llama2.c
+convention max|r|/127 so that +max quantizes exactly to +127.  The error
+characteristics (Table IV) are statistically identical; see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def round_half_away(x: np.ndarray) -> np.ndarray:
+    """Round half away from zero (matches Rust f32::round, not numpy's
+    banker's rounding)."""
+    return np.sign(x) * np.floor(np.abs(x) + 0.5)
+
+
+def quantize(r: np.ndarray, gs: int) -> tuple[np.ndarray, np.ndarray]:
+    """Group-wise symmetric INT8 quantization of a flat array.
+
+    Returns (q int8[shape], scales f32[size // gs]).
+    """
+    r = np.asarray(r, dtype=np.float32)
+    flat = r.reshape(-1)
+    assert flat.size % gs == 0, f"size {flat.size} not divisible by GS={gs}"
+    groups = flat.reshape(-1, gs)
+    gmax = np.max(np.abs(groups), axis=1)
+    scales = (gmax / 127.0).astype(np.float32)
+    safe = np.where(scales == 0.0, 1.0, scales)
+    q = round_half_away(groups / safe[:, None])
+    q = np.clip(q, -127, 127).astype(np.int8)
+    return q.reshape(r.shape), scales
+
+
+def dequantize(q: np.ndarray, scales: np.ndarray, gs: int) -> np.ndarray:
+    """Inverse of quantize (Eq. 2)."""
+    flat = q.reshape(-1).astype(np.float32)
+    groups = flat.reshape(-1, gs)
+    out = groups * np.asarray(scales, np.float32)[:, None]
+    return out.reshape(q.shape).astype(np.float32)
+
+
+def gqmv_ref(
+    xq: np.ndarray,
+    xs: np.ndarray,
+    wq: np.ndarray,
+    ws: np.ndarray,
+    gs: int,
+) -> np.ndarray:
+    """Algorithm 1: out[i] = sum_g (sum_k xq[g*GS+k] * wq[i,g*GS+k]) * ws[i,g] * xs[g].
+
+    xq: int8[n], xs: f32[n//gs], wq: int8[m, n], ws: f32[m, n//gs].
+    Returns f32[m].  Group sums are exact int32; the scaled accumulation is
+    f32 in ascending group order (matching the sequential hardware
+    accumulate stage).
+    """
+    m, n = wq.shape
+    g = n // gs
+    assert xq.shape == (n,)
+    assert xs.shape == (g,)
+    assert ws.shape == (m, g)
+    # INT16 products (8b x 8b fits 16b: |q| <= 127 so |prod| <= 16129),
+    # INT32 group sums (adder tree first layer casts to int32).
+    prod = wq.astype(np.int16) * xq.astype(np.int16)[None, :]
+    gsum = prod.reshape(m, g, gs).astype(np.int32).sum(axis=2)
+    # float_scale = ws * xs FIRST (the hardware's accumulate stage, §IV-D),
+    # then applied to the group sums — matches the Pallas kernel and every
+    # Rust backend bit-for-bit.
+    scaled = gsum.astype(np.float32) * (ws * xs[None, :].astype(np.float32))
+    # Sequential accumulation over groups, mirroring the accumulate stage.
+    out = np.zeros(m, dtype=np.float32)
+    for j in range(g):
+        out += scaled[:, j]
+    return out
+
+
+def gqmv_dequant_ref(x: np.ndarray, w: np.ndarray, gs: int) -> np.ndarray:
+    """Float reference: quantize both operands, run GQMV.  Convenience for
+    end-to-end accuracy tests (how far is quantized matvec from w @ x)."""
+    xq, xs = quantize(x, gs)
+    wq, ws = quantize(w, gs)
+    return gqmv_ref(xq, xs, wq, ws.reshape(w.shape[0], -1), gs)

@@ -1,0 +1,289 @@
+"""Layer-2: Llama2-architecture model in JAX.
+
+Two forwards:
+  * `forward_float`  — fp32 training/eval forward over a whole sequence
+    (used by train.py and the W32A32 PPL row of Table V);
+  * `forward_quant`  — W8A8 forward whose every matrix-vector product goes
+    through the Pallas GQMV kernel (kernels/gqmv.py), exactly as the FPGA
+    path does: weights pre-quantized (post-training), activations quantized
+    at run time (paper §III-A).
+
+The architecture matches the paper's Fig. 1 / Table I: RMSNorm, fused QKV
+projection, RoPE, GQA attention, SwiGLU FFN, final RMSNorm + classifier.
+RoPE uses the llama2.c interleaved-pair convention, which the Rust engines
+mirror exactly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.gqmv import gqmv
+from .kernels import ref
+
+RMS_EPS = 1e-5
+ROPE_THETA = 10000.0
+
+
+@dataclass(frozen=True)
+class LlamaConfig:
+    dim: int
+    hidden_dim: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    vocab_size: int
+    seq_len: int
+    gs: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.head_dim * self.n_kv_heads
+
+    def validate(self) -> None:
+        assert self.dim % self.n_heads == 0
+        assert self.n_heads % self.n_kv_heads == 0
+        for name in ("dim", "hidden_dim", "vocab_size"):
+            v = getattr(self, name)
+            assert v % self.gs == 0, f"{name}={v} not divisible by GS={self.gs}"
+
+
+# The E2E model: every Llama2 feature, dims divisible by GS=256.
+NANO = LlamaConfig(dim=256, hidden_dim=768, n_layers=4, n_heads=4,
+                   n_kv_heads=2, vocab_size=512, seq_len=256)
+
+# The paper's TinyLlama 1.1B geometry (perf experiments use synthetic weights).
+TINYLLAMA_1_1B = LlamaConfig(dim=2048, hidden_dim=5632, n_layers=22,
+                             n_heads=32, n_kv_heads=4, vocab_size=32000,
+                             seq_len=2048)
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: LlamaConfig, key: jax.Array) -> dict:
+    """Scaled-normal init (GPT-2 style residual scaling)."""
+    cfg.validate()
+    std = 0.02
+    res_std = std / np.sqrt(2 * cfg.n_layers)
+
+    def norm(k, shape, s):
+        return (jax.random.normal(k, shape, dtype=jnp.float32) * s)
+
+    keys = iter(jax.random.split(key, 4 + 9 * cfg.n_layers))
+    params = {
+        "tok_emb": norm(next(keys), (cfg.vocab_size, cfg.dim), std),
+        "layers": [],
+        "final_norm": jnp.ones((cfg.dim,), jnp.float32),
+        "cls": norm(next(keys), (cfg.vocab_size, cfg.dim), std),
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "att_norm": jnp.ones((cfg.dim,), jnp.float32),
+            "wq": norm(next(keys), (cfg.dim, cfg.dim), std),
+            "wk": norm(next(keys), (cfg.kv_dim, cfg.dim), std),
+            "wv": norm(next(keys), (cfg.kv_dim, cfg.dim), std),
+            "wo": norm(next(keys), (cfg.dim, cfg.dim), res_std),
+            "ffn_norm": jnp.ones((cfg.dim,), jnp.float32),
+            "w1": norm(next(keys), (cfg.hidden_dim, cfg.dim), std),
+            "w2": norm(next(keys), (cfg.dim, cfg.hidden_dim), res_std),
+            "w3": norm(next(keys), (cfg.hidden_dim, cfg.dim), std),
+        })
+    return params
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array) -> jax.Array:
+    ss = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ss + RMS_EPS) * w
+
+
+def rope_angles(cfg: LlamaConfig, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(cos, sin) of shape (T, head_dim//2), llama2.c frequency layout."""
+    half = cfg.head_dim // 2
+    freqs = ROPE_THETA ** (-jnp.arange(0, half, dtype=jnp.float32) * 2.0 / cfg.head_dim)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (T, H, head_dim) with interleaved (even, odd) pairs."""
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    r0 = x0 * c - x1 * s
+    r1 = x0 * s + x1 * c
+    out = jnp.stack([r0, r1], axis=-1)  # (T, H, half, 2)
+    return out.reshape(x.shape)
+
+
+# --------------------------------------------------------------------------
+# float forward (training / W32A32 eval)
+# --------------------------------------------------------------------------
+
+def forward_float(cfg: LlamaConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """tokens: int32 (B, T) -> logits (B, T, vocab)."""
+    B, T = tokens.shape
+    x = params["tok_emb"][tokens]  # (B, T, dim)
+    positions = jnp.arange(T)
+    cos, sin = rope_angles(cfg, positions)
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    rep = cfg.n_heads // cfg.n_kv_heads
+
+    for layer in params["layers"]:
+        xb = rmsnorm(x, layer["att_norm"])
+        q = xb @ layer["wq"].T  # (B, T, dim)
+        k = xb @ layer["wk"].T  # (B, T, kv_dim)
+        v = xb @ layer["wv"].T
+        q = q.reshape(B, T, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        q = jax.vmap(apply_rope, in_axes=(0, None, None))(q, cos, sin)
+        k = jax.vmap(apply_rope, in_axes=(0, None, None))(k, cos, sin)
+        # GQA: expand kv heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        att = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(cfg.head_dim)
+        att = jnp.where(mask[None, None, :, :], att, -jnp.inf)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, cfg.dim)
+        x = x + out @ layer["wo"].T
+
+        xb = rmsnorm(x, layer["ffn_norm"])
+        h1 = xb @ layer["w1"].T
+        h3 = xb @ layer["w3"].T
+        h = jax.nn.silu(h1) * h3
+        x = x + h @ layer["w2"].T
+
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["cls"].T
+
+
+def loss_fn(cfg: LlamaConfig, params: dict, tokens: jax.Array, targets: jax.Array) -> jax.Array:
+    logits = forward_float(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    valid = targets != 0  # PAD
+    return -(ll * valid).sum() / valid.sum()
+
+
+# --------------------------------------------------------------------------
+# quantized forward (single token, KV cache) — the LlamaF datapath in JAX
+# --------------------------------------------------------------------------
+
+def quantize_params(cfg: LlamaConfig, params: dict) -> dict:
+    """Post-training W8A8 quantization of all matrix weights (Table I: norm
+    vectors stay fp32). numpy-side; returns int8 data + f32 scales."""
+    gs = cfg.gs
+
+    def q(t):
+        arr = np.asarray(t, np.float32)
+        qd, sc = ref.quantize(arr, gs)
+        return {"q": qd, "s": sc.reshape(arr.shape[0], -1)}
+
+    out = {
+        "tok_emb": q(params["tok_emb"]),
+        "layers": [],
+        "final_norm": np.asarray(params["final_norm"], np.float32),
+        "cls": q(params["cls"]),
+    }
+    for layer in params["layers"]:
+        out["layers"].append({
+            "att_norm": np.asarray(layer["att_norm"], np.float32),
+            "wq": q(layer["wq"]), "wk": q(layer["wk"]), "wv": q(layer["wv"]),
+            "wo": q(layer["wo"]),
+            "ffn_norm": np.asarray(layer["ffn_norm"], np.float32),
+            "w1": q(layer["w1"]), "w2": q(layer["w2"]), "w3": q(layer["w3"]),
+        })
+    return out
+
+
+def _quantize_act(x: jax.Array, gs: int):
+    groups = x.reshape(-1, gs)
+    gmax = jnp.max(jnp.abs(groups), axis=1)
+    scales = (gmax / 127.0).astype(jnp.float32)
+    safe = jnp.where(scales == 0.0, 1.0, scales)
+    g = groups / safe[:, None]
+    q = jnp.clip(jnp.sign(g) * jnp.floor(jnp.abs(g) + 0.5), -127, 127)
+    return q.reshape(x.shape).astype(jnp.int8), scales
+
+
+def forward_quant_step(cfg: LlamaConfig, qparams: dict, token: int,
+                       pos: int, kcache: np.ndarray, vcache: np.ndarray) -> np.ndarray:
+    """One decode step of the quantized model; every matvec runs the Pallas
+    GQMV kernel.  kcache/vcache: (n_layers, seq_len, kv_dim), updated in
+    place.  Returns logits f32[vocab].  Mirrors Algorithm 2 line by line."""
+    gs = cfg.gs
+    emb = qparams["tok_emb"]
+    x = ref.dequantize(emb["q"][token], emb["s"][token], gs).astype(np.float32)
+
+    half = cfg.head_dim // 2
+    freqs = ROPE_THETA ** (-np.arange(half, dtype=np.float32) * 2.0 / cfg.head_dim)
+    cos = np.cos(pos * freqs).astype(np.float32)
+    sin = np.sin(pos * freqs).astype(np.float32)
+    rep = cfg.n_heads // cfg.n_kv_heads
+
+    def kernel(xv, wdict):
+        xq, xs = _quantize_act(jnp.asarray(xv), gs)
+        out = gqmv(xq, xs, jnp.asarray(wdict["q"]), jnp.asarray(wdict["s"]), gs=gs)
+        return np.asarray(out)
+
+    def kernel_fused(xv, wdicts):
+        wq = np.concatenate([w["q"] for w in wdicts], axis=0)
+        ws = np.concatenate([w["s"] for w in wdicts], axis=0)
+        xq, xs = _quantize_act(jnp.asarray(xv), gs)
+        return np.asarray(gqmv(xq, xs, jnp.asarray(wq), jnp.asarray(ws), gs=gs))
+
+    def rope(vec):
+        v = vec.reshape(-1, cfg.head_dim).copy()
+        v0, v1 = v[:, 0::2].copy(), v[:, 1::2].copy()
+        v[:, 0::2] = v0 * cos - v1 * sin
+        v[:, 1::2] = v0 * sin + v1 * cos
+        return v.reshape(vec.shape)
+
+    for li, layer in enumerate(qparams["layers"]):
+        xb = _rmsnorm_np(x, layer["att_norm"])
+        qkv = kernel_fused(xb, [layer["wq"], layer["wk"], layer["wv"]])  # Alg.2 l.4
+        q, k, v = qkv[:cfg.dim], qkv[cfg.dim:cfg.dim + cfg.kv_dim], qkv[cfg.dim + cfg.kv_dim:]
+        q, k = rope(q), rope(k)                                          # Alg.2 l.5
+        kcache[li, pos] = k
+        vcache[li, pos] = v
+        att_out = np.zeros(cfg.dim, np.float32)
+        qh = q.reshape(cfg.n_heads, cfg.head_dim)
+        kh = kcache[li, : pos + 1].reshape(pos + 1, cfg.n_kv_heads, cfg.head_dim)
+        vh = vcache[li, : pos + 1].reshape(pos + 1, cfg.n_kv_heads, cfg.head_dim)
+        for h in range(cfg.n_heads):                                     # Alg.2 l.7
+            kv_h = h // rep
+            scores = kh[:, kv_h] @ qh[h] / np.sqrt(cfg.head_dim)
+            scores = scores - scores.max()
+            p = np.exp(scores)
+            p /= p.sum()
+            att_out[h * cfg.head_dim:(h + 1) * cfg.head_dim] = p @ vh[:, kv_h]
+        x = x + kernel(att_out, layer["wo"])                             # Alg.2 l.9-10
+
+        xb = _rmsnorm_np(x, layer["ffn_norm"])
+        h13 = kernel_fused(xb, [layer["w1"], layer["w3"]])               # Alg.2 l.12
+        h1, h3 = h13[:cfg.hidden_dim], h13[cfg.hidden_dim:]
+        h = h1 / (1.0 + np.exp(-h1)) * h3                                # SwiGLU
+        x = x + kernel(h, layer["w2"])                                   # Alg.2 l.14-15
+
+    x = _rmsnorm_np(x, qparams["final_norm"])
+    return kernel(x, qparams["cls"])                                     # Alg.2 l.17
+
+
+def _rmsnorm_np(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    ss = float(np.mean(x.astype(np.float32) ** 2))
+    return (x / np.sqrt(ss + RMS_EPS) * w).astype(np.float32)

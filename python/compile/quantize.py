@@ -1,0 +1,192 @@
+"""Checkpoint formats + post-training quantizer.
+
+Two little-endian binary formats, mirrored bit-for-bit by rust/src/ckpt:
+
+LFCK (float32 checkpoint)
+  magic  b"LFCK"
+  u32    version (=1)
+  u32 x8 dim, hidden_dim, n_layers, n_heads, n_kv_heads, vocab_size,
+         seq_len, gs
+  f32    tok_emb      (vocab, dim)
+  per layer l in 0..n_layers:
+    f32  att_norm (dim)
+    f32  wq (dim, dim)   wk (kv_dim, dim)   wv (kv_dim, dim)   wo (dim, dim)
+    f32  ffn_norm (dim)
+    f32  w1 (hidden, dim)   w2 (dim, hidden)   w3 (hidden, dim)
+  f32    final_norm (dim)
+  f32    cls          (vocab, dim)
+
+LFQ8 (W8A8 group-quantized checkpoint, GS from header)
+  magic  b"LFQ8"; same header fields.
+  Quantized tensors are stored as   i8 data  then  f32 scales (size/gs).
+  Norm vectors stay f32 (Table I: RMSNorm weights are not quantized).
+  Tensor order identical to LFCK.  The per-layer grouping is what lets the
+  Rust engine stream one layer at a time (paper §III-B: sequential buffer
+  loads, 111.5 MB instead of 1.1 GB resident).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from .kernels import ref
+from .model import LlamaConfig
+
+MAGIC_F32 = b"LFCK"
+MAGIC_Q8 = b"LFQ8"
+VERSION = 1
+
+
+def _header(magic: bytes, cfg: LlamaConfig) -> bytes:
+    return magic + struct.pack(
+        "<9I", VERSION, cfg.dim, cfg.hidden_dim, cfg.n_layers, cfg.n_heads,
+        cfg.n_kv_heads, cfg.vocab_size, cfg.seq_len, cfg.gs,
+    )
+
+
+def _parse_header(data: bytes, magic: bytes) -> tuple[LlamaConfig, int]:
+    assert data[:4] == magic, f"bad magic {data[:4]!r}, want {magic!r}"
+    (version, dim, hidden, n_layers, n_heads, n_kv, vocab, seq, gs) = struct.unpack(
+        "<9I", data[4:40]
+    )
+    assert version == VERSION
+    cfg = LlamaConfig(dim=dim, hidden_dim=hidden, n_layers=n_layers,
+                      n_heads=n_heads, n_kv_heads=n_kv, vocab_size=vocab,
+                      seq_len=seq, gs=gs)
+    return cfg, 40
+
+
+def _tensor_order(cfg: LlamaConfig):
+    """Yield (path, shape, quantized?) in file order."""
+    yield ("tok_emb", (cfg.vocab_size, cfg.dim), True)
+    for li in range(cfg.n_layers):
+        yield (f"layers.{li}.att_norm", (cfg.dim,), False)
+        yield (f"layers.{li}.wq", (cfg.dim, cfg.dim), True)
+        yield (f"layers.{li}.wk", (cfg.kv_dim, cfg.dim), True)
+        yield (f"layers.{li}.wv", (cfg.kv_dim, cfg.dim), True)
+        yield (f"layers.{li}.wo", (cfg.dim, cfg.dim), True)
+        yield (f"layers.{li}.ffn_norm", (cfg.dim,), False)
+        yield (f"layers.{li}.w1", (cfg.hidden_dim, cfg.dim), True)
+        yield (f"layers.{li}.w2", (cfg.dim, cfg.hidden_dim), True)
+        yield (f"layers.{li}.w3", (cfg.hidden_dim, cfg.dim), True)
+    yield ("final_norm", (cfg.dim,), False)
+    yield ("cls", (cfg.vocab_size, cfg.dim), True)
+
+
+def _get(params: dict, path: str):
+    cur = params
+    for part in path.split("."):
+        cur = cur[int(part)] if part.isdigit() else cur[part]
+    return cur
+
+
+def _set(params: dict, path: str, value) -> None:
+    parts = path.split(".")
+    cur = params
+    for part in parts[:-1]:
+        key = int(part) if part.isdigit() else part
+        if isinstance(key, int):
+            while len(cur) <= key:
+                cur.append({})
+            cur = cur[key]
+        else:
+            cur = cur.setdefault(key, [] if key == "layers" else {})
+    cur[parts[-1]] = value
+
+
+def write_f32(path: str, cfg: LlamaConfig, params: dict) -> None:
+    with open(path, "wb") as f:
+        f.write(_header(MAGIC_F32, cfg))
+        for name, shape, _ in _tensor_order(cfg):
+            t = np.asarray(_get(params, name), np.float32)
+            assert t.shape == shape, f"{name}: {t.shape} != {shape}"
+            f.write(t.astype("<f4").tobytes())
+
+
+def read_f32(path: str) -> tuple[LlamaConfig, dict]:
+    data = open(path, "rb").read()
+    cfg, off = _parse_header(data, MAGIC_F32)
+    params: dict = {"layers": []}
+    for name, shape, _ in _tensor_order(cfg):
+        count = int(np.prod(shape))
+        t = np.frombuffer(data, "<f4", count, off).reshape(shape).copy()
+        off += 4 * count
+        _set(params, name, t)
+    assert off == len(data), f"trailing bytes: {len(data) - off}"
+    return cfg, params
+
+
+def quantize_checkpoint(cfg: LlamaConfig, params: dict) -> dict:
+    """Post-training W8A8 quantization (weights only; Table I)."""
+    qparams: dict = {"layers": []}
+    for name, shape, quant in _tensor_order(cfg):
+        t = np.asarray(_get(params, name), np.float32)
+        if quant:
+            q, s = ref.quantize(t, cfg.gs)
+            _set(qparams, name, {"q": q, "s": s.reshape(shape[0], -1)})
+        else:
+            _set(qparams, name, t)
+    return qparams
+
+
+def write_q8(path: str, cfg: LlamaConfig, qparams: dict) -> None:
+    with open(path, "wb") as f:
+        f.write(_header(MAGIC_Q8, cfg))
+        for name, shape, quant in _tensor_order(cfg):
+            t = _get(qparams, name)
+            if quant:
+                q = np.ascontiguousarray(t["q"], dtype=np.int8)
+                s = np.ascontiguousarray(t["s"], dtype="<f4")
+                assert q.shape == shape
+                assert s.size == q.size // cfg.gs
+                f.write(q.tobytes())
+                f.write(s.tobytes())
+            else:
+                f.write(np.asarray(t, "<f4").tobytes())
+
+
+def read_q8(path: str) -> tuple[LlamaConfig, dict]:
+    data = open(path, "rb").read()
+    cfg, off = _parse_header(data, MAGIC_Q8)
+    qparams: dict = {"layers": []}
+    for name, shape, quant in _tensor_order(cfg):
+        count = int(np.prod(shape))
+        if quant:
+            q = np.frombuffer(data, np.int8, count, off).reshape(shape).copy()
+            off += count
+            ns = count // cfg.gs
+            s = np.frombuffer(data, "<f4", ns, off).reshape(shape[0], -1).copy()
+            off += 4 * ns
+            _set(qparams, name, {"q": q, "s": s})
+        else:
+            t = np.frombuffer(data, "<f4", count, off).reshape(shape).copy()
+            off += 4 * count
+            _set(qparams, name, t)
+    assert off == len(data), f"trailing bytes: {len(data) - off}"
+    return cfg, qparams
+
+
+def quant_error_stats(cfg: LlamaConfig, params: dict) -> dict:
+    """Table IV: statistics of |rhat - r| over every quantized weight, plus
+    the error-percentage distribution the paper quotes (3.30% +- 11.57%)."""
+    errs = []
+    pct = []
+    for name, _, quant in _tensor_order(cfg):
+        if not quant:
+            continue
+        t = np.asarray(_get(params, name), np.float32)
+        q, s = ref.quantize(t, cfg.gs)
+        rhat = ref.dequantize(q, s, cfg.gs)
+        e = np.abs(rhat - t).reshape(-1)
+        errs.append(e)
+        nz = np.abs(t.reshape(-1)) > 1e-12
+        pct.append(e[nz] / np.abs(t.reshape(-1)[nz]))
+    e = np.concatenate(errs)
+    p = np.concatenate(pct)
+    return {
+        "max": float(e.max()), "min": float(e.min()),
+        "mean": float(e.mean()), "std": float(e.std()),
+        "pct_mean": float(p.mean() * 100), "pct_std": float(p.std() * 100),
+    }

@@ -1,0 +1,149 @@
+"""Pure-numpy incremental (KV-cached) quantized inference engine.
+
+This is the executable specification of the Rust engines: the exact op
+order, cast chain, RoPE convention and accumulation order that
+`rust/src/ps` and `rust/src/engine` implement.  train.py uses it to export
+golden tokens/logits that the Rust integration tests compare against.
+
+It differs from model.forward_quant_step only in the GQMV backend (numpy
+ref.gqmv_ref instead of the Pallas kernel); the two are asserted equal in
+python/tests/test_model.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernels import ref
+from .model import LlamaConfig, RMS_EPS, ROPE_THETA
+
+
+class QuantWeight:
+    """int8 data + per-group f32 scales for one matrix (m, n)."""
+
+    __slots__ = ("q", "s")
+
+    def __init__(self, q: np.ndarray, s: np.ndarray):
+        self.q = q  # int8 (m, n)
+        self.s = s  # f32  (m, n // gs)
+
+    @staticmethod
+    def from_float(w: np.ndarray, gs: int) -> "QuantWeight":
+        q, s = ref.quantize(w, gs)
+        return QuantWeight(q, s.reshape(w.shape[0], -1))
+
+    def concat(self, *others: "QuantWeight") -> "QuantWeight":
+        """Row-wise fusion (the paper concatenates Wq/Wk/Wv and W1/W3)."""
+        return QuantWeight(
+            np.concatenate([self.q] + [o.q for o in others], axis=0),
+            np.concatenate([self.s] + [o.s for o in others], axis=0),
+        )
+
+
+class RefEngine:
+    """Numpy twin of the Rust LlamaF/PS engine."""
+
+    def __init__(self, cfg: LlamaConfig, qparams: dict):
+        self.cfg = cfg
+        self.p = qparams
+        half = cfg.head_dim // 2
+        self.freqs = ROPE_THETA ** (
+            -np.arange(half, dtype=np.float32) * 2.0 / cfg.head_dim
+        )
+        self.reset()
+
+    def reset(self) -> None:
+        c = self.cfg
+        self.kcache = np.zeros((c.n_layers, c.seq_len, c.kv_dim), np.float32)
+        self.vcache = np.zeros((c.n_layers, c.seq_len, c.kv_dim), np.float32)
+
+    # -- ops (all mirrored in rust/src/ps/ops.rs) ------------------------
+    @staticmethod
+    def rmsnorm(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+        ss = float(np.mean(x.astype(np.float32) ** 2))
+        return (x / np.sqrt(ss + RMS_EPS) * w).astype(np.float32)
+
+    def rope(self, vec: np.ndarray, pos: int) -> np.ndarray:
+        cos = np.cos(pos * self.freqs).astype(np.float32)
+        sin = np.sin(pos * self.freqs).astype(np.float32)
+        v = vec.reshape(-1, self.cfg.head_dim).copy()
+        v0, v1 = v[:, 0::2].copy(), v[:, 1::2].copy()
+        v[:, 0::2] = v0 * cos - v1 * sin
+        v[:, 1::2] = v0 * sin + v1 * cos
+        return v.reshape(vec.shape)
+
+    def gqmv(self, x: np.ndarray, w) -> np.ndarray:
+        gs = self.cfg.gs
+        xq, xs = ref.quantize(x, gs)
+        if isinstance(w, dict):
+            wq, ws = w["q"], w["s"]
+        else:
+            wq, ws = w.q, w.s
+        return ref.gqmv_ref(xq, xs, wq, ws, gs)
+
+    # -- Algorithm 2 ------------------------------------------------------
+    def forward(self, token: int, pos: int) -> np.ndarray:
+        c, p, gs = self.cfg, self.p, self.cfg.gs
+        emb = p["tok_emb"]
+        x = ref.dequantize(emb["q"][token], emb["s"][token], gs)
+        rep = c.n_heads // c.n_kv_heads
+
+        for li, layer in enumerate(p["layers"]):
+            xb = self.rmsnorm(x, layer["att_norm"])
+            wqkv = QuantWeight(layer["wq"]["q"], layer["wq"]["s"]).concat(
+                QuantWeight(layer["wk"]["q"], layer["wk"]["s"]),
+                QuantWeight(layer["wv"]["q"], layer["wv"]["s"]),
+            )
+            qkv = self.gqmv(xb, wqkv)
+            q = qkv[: c.dim]
+            k = qkv[c.dim: c.dim + c.kv_dim]
+            v = qkv[c.dim + c.kv_dim:]
+            q, k = self.rope(q, pos), self.rope(k, pos)
+            self.kcache[li, pos] = k
+            self.vcache[li, pos] = v
+
+            att_out = np.zeros(c.dim, np.float32)
+            qh = q.reshape(c.n_heads, c.head_dim)
+            kh = self.kcache[li, : pos + 1].reshape(pos + 1, c.n_kv_heads, c.head_dim)
+            vh = self.vcache[li, : pos + 1].reshape(pos + 1, c.n_kv_heads, c.head_dim)
+            for h in range(c.n_heads):
+                kv_h = h // rep
+                scores = kh[:, kv_h] @ qh[h] / np.sqrt(c.head_dim)
+                scores = scores - scores.max()
+                pr = np.exp(scores)
+                pr /= pr.sum()
+                att_out[h * c.head_dim:(h + 1) * c.head_dim] = pr @ vh[:, kv_h]
+            x = x + self.gqmv(att_out, layer["wo"])
+
+            xb = self.rmsnorm(x, layer["ffn_norm"])
+            w13 = QuantWeight(layer["w1"]["q"], layer["w1"]["s"]).concat(
+                QuantWeight(layer["w3"]["q"], layer["w3"]["s"])
+            )
+            h13 = self.gqmv(xb, w13)
+            h1, h3 = h13[: c.hidden_dim], h13[c.hidden_dim:]
+            h = (h1 / (1.0 + np.exp(-h1)) * h3).astype(np.float32)
+            x = x + self.gqmv(h, layer["w2"])
+
+        x = self.rmsnorm(x, p["final_norm"])
+        return self.gqmv(x, p["cls"])
+
+    def generate(self, prompt_ids: list[int], steps: int) -> tuple[list[int], np.ndarray]:
+        """Greedy generation (paper §V-C: greedy sampling, no EOS stop).
+
+        Returns (all token ids, per-step logits (steps, vocab))."""
+        self.reset()
+        ids = list(prompt_ids)
+        logits_log = []
+        pos = 0
+        # consume prompt
+        for t in ids[:-1]:
+            self.forward(t, pos)
+            pos += 1
+        cur = ids[-1]
+        for _ in range(steps):
+            logits = self.forward(cur, pos)
+            logits_log.append(logits.copy())
+            cur = int(np.argmax(logits))
+            ids.append(cur)
+            pos += 1
+        return ids, np.stack(logits_log) if logits_log else np.zeros((0, self.cfg.vocab_size), np.float32)

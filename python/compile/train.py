@@ -1,0 +1,152 @@
+"""Train the Llama2-nano model on the synthetic corpus and export artifacts.
+
+Build-time only (invoked by `make artifacts`).  Produces, under artifacts/:
+
+  nano_f32.lfck        fp32 checkpoint (LFCK)
+  nano_q8.lfq8         W8A8 GS=256 checkpoint (LFQ8) — what the Rust engine loads
+  loss_curve.csv       step,loss — the E2E training record (EXPERIMENTS.md)
+  corpus_train.txt     training text (Rust PPL eval re-uses the val split)
+  corpus_val.txt       held-out text for Table V PPL
+  golden_prompt.txt    prompt used for golden generation
+  golden_tokens.json   greedy token ids from the numpy reference engine
+  golden_logits.bin    f32 per-step logits (steps x vocab) from the reference
+  quant_error.json     Table IV statistics for the trained checkpoint
+
+Usage: python -m compile.train --out ../artifacts [--steps 400]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, quantize
+from .model import NANO, init_params, loss_fn
+from .refmodel import RefEngine
+
+GOLDEN_PROMPT = "the engineer builds"
+GOLDEN_STEPS = 48
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        x = np.stack([tokens[i: i + seq] for i in idx])
+        y = np.stack([tokens[i + 1: i + seq + 1] for i in idx])
+        yield jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32)
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+
+    def upd(p, m_, v_):
+        return p - lr * (m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + eps) + wd * p)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = NANO
+    train_text, val_text = corpus.train_val_split()
+    with open(os.path.join(args.out, "corpus_train.txt"), "w") as f:
+        f.write(train_text)
+    with open(os.path.join(args.out, "corpus_val.txt"), "w") as f:
+        f.write(val_text)
+    tokens = np.asarray(corpus.encode(train_text), np.int32)
+    print(f"corpus: {len(train_text)} chars -> {len(tokens)} tokens")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"nano model: {n_params/1e6:.2f}M params "
+          f"(dim={cfg.dim} hidden={cfg.hidden_dim} layers={cfg.n_layers} "
+          f"heads={cfg.n_heads}/{cfg.n_kv_heads} vocab={cfg.vocab_size})")
+
+    @jax.jit
+    def step(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y))(params)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    opt = adamw_init(params)
+    gen = batches(tokens, args.batch, args.seq, args.seed)
+    curve = []
+    t0 = time.time()
+    warmup = max(10, args.steps // 20)
+    for i in range(args.steps):
+        # linear warmup then cosine decay
+        if i < warmup:
+            lr = args.lr * (i + 1) / warmup
+        else:
+            prog = (i - warmup) / max(1, args.steps - warmup)
+            lr = args.lr * 0.5 * (1 + np.cos(np.pi * prog))
+        x, y = next(gen)
+        params, opt, loss = step(params, opt, x, y, lr)
+        curve.append((i, float(loss)))
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(loss):.4f}  lr {lr:.2e}  "
+                  f"({time.time()-t0:.1f}s)")
+
+    with open(os.path.join(args.out, "loss_curve.csv"), "w") as f:
+        f.write("step,loss\n")
+        for i, l in curve:
+            f.write(f"{i},{l:.6f}\n")
+
+    # -- export checkpoints ------------------------------------------------
+    params_np = jax.tree.map(lambda t: np.asarray(t, np.float32), params)
+    f32_path = os.path.join(args.out, "nano_f32.lfck")
+    q8_path = os.path.join(args.out, "nano_q8.lfq8")
+    quantize.write_f32(f32_path, cfg, params_np)
+    qparams = quantize.quantize_checkpoint(cfg, params_np)
+    quantize.write_q8(q8_path, cfg, qparams)
+    print(f"wrote {f32_path} ({os.path.getsize(f32_path)/1e6:.1f} MB), "
+          f"{q8_path} ({os.path.getsize(q8_path)/1e6:.1f} MB)")
+
+    # -- Table IV statistics ----------------------------------------------
+    stats = quantize.quant_error_stats(cfg, params_np)
+    with open(os.path.join(args.out, "quant_error.json"), "w") as f:
+        json.dump(stats, f, indent=2)
+    print("quant error:", stats)
+
+    # -- golden generation (numpy reference engine) ------------------------
+    engine = RefEngine(cfg, qparams)
+    prompt_ids = corpus.encode(GOLDEN_PROMPT)
+    ids, logits = engine.generate(prompt_ids, GOLDEN_STEPS)
+    with open(os.path.join(args.out, "golden_prompt.txt"), "w") as f:
+        f.write(GOLDEN_PROMPT)
+    with open(os.path.join(args.out, "golden_tokens.json"), "w") as f:
+        json.dump({"prompt_ids": prompt_ids, "all_ids": ids,
+                   "steps": GOLDEN_STEPS}, f)
+    logits.astype("<f4").tofile(os.path.join(args.out, "golden_logits.bin"))
+    print(f"golden: '{corpus.decode(ids)}'")
+    print(f"train done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas GQMV kernel vs the numpy oracle (ref.py).
+
+This is the CORE correctness signal for the accelerator datapath.
+hypothesis sweeps shapes, group sizes and value distributions; targeted
+tests pin down the cast chain and edge cases (overflow, zeros, extremes).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gqmv import gqmv, gqmv_fused, quantize_jnp
+
+
+def run_kernel(xq, xs, wq, ws, gs):
+    out = gqmv(jnp.asarray(xq), jnp.asarray(xs), jnp.asarray(wq),
+               jnp.asarray(ws), gs=gs)
+    return np.asarray(out)
+
+
+def make_case(m, n, gs, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((m, n)) * scale).astype(np.float32)
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    wq, ws = ref.quantize(w, gs)
+    xq, xs = ref.quantize(x, gs)
+    return xq, xs, wq, ws.reshape(m, n // gs)
+
+
+@pytest.mark.parametrize("m,n,gs", [
+    (8, 256, 256),        # minimal single tile, single group
+    (16, 512, 256),       # two groups
+    (64, 256, 64),        # small groups
+    (256, 256, 256),      # nano wo shape
+    (512, 256, 256),      # nano qkv/cls shape
+    (1536, 256, 256),     # nano w13 shape
+    (256, 768, 256),      # nano w2 shape (kernel2 analogue: n=hidden)
+    (8, 128, 32),         # tiny groups
+    (40, 512, 128),       # m not a power of two (tile fallback)
+])
+def test_kernel_matches_ref_shapes(m, n, gs):
+    xq, xs, wq, ws = make_case(m, n, gs, seed=m * 31 + n)
+    expected = ref.gqmv_ref(xq, xs, wq, ws, gs)
+    got = run_kernel(xq, xs, wq, ws, gs)
+    np.testing.assert_allclose(got, expected, rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 8),
+    g=st.integers(1, 6),
+    gs_pow=st.integers(3, 8),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+)
+def test_kernel_matches_ref_hypothesis(mt, g, gs_pow, seed, scale):
+    gs = 2 ** gs_pow
+    m, n = mt * 8, g * gs  # small m exercises the _pick_tile fallback
+    xq, xs, wq, ws = make_case(m, n, gs, seed, scale)
+    expected = ref.gqmv_ref(xq, xs, wq, ws, gs)
+    got = run_kernel(xq, xs, wq, ws, gs)
+    # relative tolerance scaled by magnitude of output
+    tol = max(1e-5, float(np.abs(expected).max()) * 1e-6)
+    np.testing.assert_allclose(got, expected, rtol=1e-6, atol=tol)
+
+
+def test_kernel_extreme_values_no_overflow():
+    """All-|127| operands: per-group int32 sum is 256 * 16129 = 4,129,024 —
+    must not saturate/overflow anywhere in the cast chain."""
+    m, n, gs = 8, 2048, 256
+    wq = np.full((m, n), 127, np.int8)
+    wq[1::2] = -127
+    xq = np.full(n, 127, np.int8)
+    ws = np.full((m, n // gs), 0.01, np.float32)
+    xs = np.full(n // gs, 0.02, np.float32)
+    expected = ref.gqmv_ref(xq, xs, wq, ws, gs)
+    got = run_kernel(xq, xs, wq, ws, gs)
+    assert expected[0] == pytest.approx(127 * 127 * n * 0.01 * 0.02, rel=1e-5)
+    np.testing.assert_allclose(got, expected, rtol=1e-6)
+
+
+def test_kernel_zero_inputs():
+    m, n, gs = 16, 512, 256
+    out = run_kernel(np.zeros(n, np.int8), np.zeros(n // gs, np.float32),
+                     np.zeros((m, n), np.int8), np.zeros((m, n // gs), np.float32),
+                     gs)
+    np.testing.assert_array_equal(out, np.zeros(m, np.float32))
+
+
+def test_kernel_identity_rows():
+    """W rows that select single elements: out[i] = xq[i]*ws*xs."""
+    m, n, gs = 8, 256, 256
+    wq = np.zeros((m, n), np.int8)
+    for i in range(m):
+        wq[i, i] = 1
+    ws = np.ones((m, 1), np.float32)
+    rng = np.random.default_rng(3)
+    xq = rng.integers(-127, 128, n).astype(np.int8)
+    xs = np.asarray([0.5], np.float32)
+    got = run_kernel(xq, xs, wq, ws, gs)
+    np.testing.assert_allclose(got, xq[:m].astype(np.float32) * 0.5, rtol=1e-6)
+
+
+def test_quantize_jnp_matches_ref():
+    rng = np.random.default_rng(11)
+    x = (rng.standard_normal(1024) * 3).astype(np.float32)
+    q_ref, s_ref = ref.quantize(x, 256)
+    q_jnp, s_jnp = quantize_jnp(jnp.asarray(x), 256)
+    np.testing.assert_array_equal(np.asarray(q_jnp), q_ref)
+    np.testing.assert_allclose(np.asarray(s_jnp), s_ref, rtol=1e-7)
+
+
+def test_gqmv_fused_runtime_quantization():
+    """Paper §III-A: activations quantized at run time, fused with kernel."""
+    rng = np.random.default_rng(5)
+    m, n, gs = 32, 512, 256
+    w = rng.standard_normal((m, n)).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    wq, ws = ref.quantize(w, gs)
+    got = np.asarray(gqmv_fused(jnp.asarray(x), jnp.asarray(wq),
+                                jnp.asarray(ws.reshape(m, n // gs)), gs=gs))
+    expected = ref.gqmv_dequant_ref(x, w, gs)
+    np.testing.assert_allclose(got, expected, rtol=1e-6, atol=1e-5)
+
+
+def test_quantized_matvec_close_to_float():
+    """End-to-end quantization quality: GQMV approximates W @ x (the whole
+    point of W8A8 — paper Table IV/V territory)."""
+    rng = np.random.default_rng(9)
+    m, n, gs = 128, 2048, 256
+    w = rng.standard_normal((m, n)).astype(np.float32) * 0.05
+    x = rng.standard_normal(n).astype(np.float32)
+    got = ref.gqmv_dequant_ref(x, w, gs)
+    exact = w @ x
+    err = np.abs(got - exact) / (np.abs(exact) + 1e-3)
+    assert float(np.median(err)) < 0.05, f"median rel err {np.median(err)}"
+
+
+def test_round_half_away():
+    x = np.asarray([0.5, -0.5, 1.5, -1.5, 2.4, -2.4, 2.6])
+    np.testing.assert_array_equal(ref.round_half_away(x),
+                                  [1, -1, 2, -2, 2, -2, 3])
+
+
+def test_quantize_all_zero_group():
+    q, s = ref.quantize(np.zeros(512, np.float32), 256)
+    np.testing.assert_array_equal(q, np.zeros(512, np.int8))
+    np.testing.assert_array_equal(s, np.zeros(2, np.float32))
+
+
+def test_quantize_max_maps_to_127():
+    x = np.linspace(-4, 4, 256).astype(np.float32)
+    q, s = ref.quantize(x, 256)
+    assert q.max() == 127 and q.min() == -127
+    np.testing.assert_allclose(ref.dequantize(q, s, 256), x, atol=4 / 127 / 2 + 1e-6)

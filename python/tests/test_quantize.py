@@ -1,0 +1,123 @@
+"""Checkpoint format round-trips + quantization error statistics (Table IV)."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+from compile.kernels import ref
+from compile.model import LlamaConfig, init_params
+
+TINY = LlamaConfig(dim=64, hidden_dim=128, n_layers=2, n_heads=2,
+                   n_kv_heads=1, vocab_size=64, seq_len=32, gs=32)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return jax.tree.map(lambda t: np.asarray(t, np.float32),
+                        init_params(TINY, jax.random.PRNGKey(0)))
+
+
+def test_f32_roundtrip(tmp_path, tiny_params):
+    path = os.path.join(tmp_path, "m.lfck")
+    quantize.write_f32(path, TINY, tiny_params)
+    cfg2, params2 = quantize.read_f32(path)
+    assert cfg2 == TINY
+    np.testing.assert_array_equal(params2["tok_emb"], tiny_params["tok_emb"])
+    for l1, l2 in zip(tiny_params["layers"], params2["layers"]):
+        for k in l1:
+            np.testing.assert_array_equal(l2[k], np.asarray(l1[k]))
+    np.testing.assert_array_equal(params2["cls"], tiny_params["cls"])
+
+
+def test_q8_roundtrip(tmp_path, tiny_params):
+    path = os.path.join(tmp_path, "m.lfq8")
+    qp = quantize.quantize_checkpoint(TINY, tiny_params)
+    quantize.write_q8(path, TINY, qp)
+    cfg2, qp2 = quantize.read_q8(path)
+    assert cfg2 == TINY
+    np.testing.assert_array_equal(qp2["tok_emb"]["q"], qp["tok_emb"]["q"])
+    np.testing.assert_array_equal(qp2["tok_emb"]["s"], qp["tok_emb"]["s"])
+    for l1, l2 in zip(qp["layers"], qp2["layers"]):
+        np.testing.assert_array_equal(l1["att_norm"], l2["att_norm"])
+        for k in ("wq", "wk", "wv", "wo", "w1", "w2", "w3"):
+            np.testing.assert_array_equal(l1[k]["q"], l2[k]["q"])
+            np.testing.assert_array_equal(l1[k]["s"], l2[k]["s"])
+
+
+def test_q8_file_smaller_than_f32(tmp_path, tiny_params):
+    """The paper's 4.4GB -> 1.1GB claim: q8 ~ 1/4 + scale overhead."""
+    fp = os.path.join(tmp_path, "m.lfck")
+    qp_path = os.path.join(tmp_path, "m.lfq8")
+    quantize.write_f32(fp, TINY, tiny_params)
+    quantize.write_q8(qp_path, TINY, quantize.quantize_checkpoint(TINY, tiny_params))
+    ratio = os.path.getsize(fp) / os.path.getsize(qp_path)
+    assert 3.0 < ratio < 4.1, f"compression ratio {ratio}"
+
+
+def test_bad_magic_rejected(tmp_path, tiny_params):
+    path = os.path.join(tmp_path, "m.lfck")
+    quantize.write_f32(path, TINY, tiny_params)
+    data = bytearray(open(path, "rb").read())
+    data[:4] = b"XXXX"
+    bad = os.path.join(tmp_path, "bad.lfck")
+    open(bad, "wb").write(bytes(data))
+    with pytest.raises(AssertionError):
+        quantize.read_f32(bad)
+
+
+def test_truncated_rejected(tmp_path, tiny_params):
+    path = os.path.join(tmp_path, "m.lfq8")
+    quantize.write_q8(path, TINY, quantize.quantize_checkpoint(TINY, tiny_params))
+    data = open(path, "rb").read()
+    bad = os.path.join(tmp_path, "bad.lfq8")
+    open(bad, "wb").write(data + b"\x00" * 17)
+    with pytest.raises(AssertionError):
+        quantize.read_q8(bad)
+
+
+def test_quant_error_stats_shape(tiny_params):
+    stats = quantize.quant_error_stats(TINY, tiny_params)
+    # Theoretical bound: per-group max error is scale/2 = max|r|/254.
+    assert stats["max"] <= float(
+        max(np.abs(np.asarray(tiny_params["cls"])).max(),
+            np.abs(np.asarray(tiny_params["tok_emb"])).max(), 1.0)
+    ) / 254 * 1.01 + 1e-6 or stats["max"] < 0.01
+    assert 0 <= stats["min"] <= stats["mean"] <= stats["max"]
+    assert stats["std"] > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    gs_pow=st.integers(2, 8),
+    groups=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_quant_error_bounded_by_half_scale(gs_pow, groups, seed, scale):
+    """|rhat - r| <= S/2 per group (rounding), the Table IV theory."""
+    gs = 2 ** gs_pow
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(groups * gs) * scale).astype(np.float32)
+    q, s = ref.quantize(x, gs)
+    rhat = ref.dequantize(q, s, gs)
+    err = np.abs(rhat - x).reshape(groups, gs)
+    bound = s[:, None] / 2 * (1 + 1e-5) + 1e-9
+    assert (err <= bound).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), gs_pow=st.integers(2, 6))
+def test_quantize_idempotent_on_lattice(seed, gs_pow):
+    """Quantizing an already-dequantized array is lossless."""
+    gs = 2 ** gs_pow
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(4 * gs).astype(np.float32)
+    q, s = ref.quantize(x, gs)
+    rhat = ref.dequantize(q, s, gs)
+    q2, s2 = ref.quantize(rhat, gs)
+    np.testing.assert_array_equal(q, q2)
+    np.testing.assert_allclose(s, s2, rtol=1e-6)

@@ -1,0 +1,43 @@
+//! Bench target regenerating Fig. 2 (sync vs async scheduling), both the
+//! paper-scale modeled timeline and a measured nano wall-clock comparison.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use llamaf::cli::Args;
+use llamaf::engine::forward::Engine;
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::engine::llamaf::LlamafEngine;
+use llamaf::runtime::Runtime;
+use llamaf::sched::SchedMode;
+use llamaf::tokenizer::Tokenizer;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(&argv).expect("args");
+    llamaf::exp::fig2::run(&args).expect("fig2");
+
+    // measured: nano engine, sync vs async staging
+    let art = Path::new("artifacts");
+    let ckpt = art.join("nano_q8.lfq8");
+    if !ckpt.exists() {
+        println!("\n[measured section skipped: run `make artifacts`]");
+        return;
+    }
+    println!("\n=== measured on this testbed (nano, PJRT kernels) ===");
+    let rt = Arc::new(Runtime::load(art).expect("runtime"));
+    for (name, mode) in [("sync", SchedMode::Sync), ("async", SchedMode::Async)] {
+        let mut eng = LlamafEngine::open(&ckpt, Arc::clone(&rt), mode).expect("engine");
+        let tok = Tokenizer::new(eng.cfg().vocab_size);
+        let ids = tok.encode("the engineer builds", true);
+        let out = generate(&mut eng, &ids, 64, Sampler::Greedy, false).expect("generate");
+        let (total, blocked, n) = eng.transfer_stats();
+        println!(
+            "  {name:<6} {:.2} tok/s | staging: {n} transfers, {:.1} ms total, {:.1} ms blocking ({:.0}% hidden)",
+            out.tok_per_s,
+            total * 1e3,
+            blocked * 1e3,
+            100.0 * (1.0 - blocked / total.max(1e-12)),
+        );
+    }
+}

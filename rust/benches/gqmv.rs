@@ -1,0 +1,99 @@
+//! GQMV micro-benchmarks: every backend at every Algorithm-2 shape, plus
+//! the GOPS figures for Table VI's first column.
+
+use std::sync::Arc;
+
+use llamaf::bench::{section, Bench};
+use llamaf::fpga::{DataflowSim, PlConfig};
+use llamaf::model::{MatKind, NANO, TINYLLAMA_1_1B};
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::{ScalarGqmv, ThreadedGqmv};
+use llamaf::quant::{quantize_activation, QuantizedTensor};
+use llamaf::util::{Rng, ThreadPool};
+
+fn bench_backend(exec: &mut dyn GqmvExec, m: usize, n: usize, gs: usize, b: &Bench) -> f64 {
+    let mut rng = Rng::new((m * 31 + n) as u64);
+    let w = QuantizedTensor {
+        q: rng.i8_vec(m * n),
+        s: (0..m * n / gs).map(|_| rng.next_f32() * 1e-3).collect(),
+        rows: m,
+        cols: n,
+        gs,
+    };
+    let (xq, xs) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
+    let mut out = vec![0.0f32; m];
+    let r = b.run(&format!("{} {m}x{n}", exec.name()), || {
+        exec.gqmv(&xq, &xs, &w, &mut out).unwrap();
+    });
+    let gops = 2.0 * (m * n) as f64 / r.mean_s / 1e9;
+    println!("{}  -> {gops:.3} GOPS", r.row());
+    gops
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let pool = Arc::new(ThreadPool::new(4));
+
+    section("GQMV backends at nano shapes (Algorithm 2 launches)");
+    for kind in [MatKind::Qkv, MatKind::Wo, MatKind::W13, MatKind::W2, MatKind::Cls] {
+        let (m, n) = NANO.mat_shape(kind);
+        bench_backend(&mut ScalarGqmv, m, n, NANO.gs, &b);
+        let mut th = ThreadedGqmv::new(pool.clone());
+        bench_backend(&mut th, m, n, NANO.gs, &b);
+    }
+
+    section("GQMV at the paper's logits shape (32000x2048) — Table VI GOPS column");
+    let (m, n) = TINYLLAMA_1_1B.mat_shape(MatKind::Cls);
+    let slow = Bench { budget_s: if quick { 0.5 } else { 4.0 }, min_iters: 3, ..Bench::default() };
+    let scalar_gops = bench_backend(&mut ScalarGqmv, m, n, 256, &slow);
+    let mut th = ThreadedGqmv::new(Arc::new(ThreadPool::new(4)));
+    let th4 = bench_backend(&mut th, m, n, 256, &slow);
+    let mut th_all = ThreadedGqmv::new(Arc::new(ThreadPool::new(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8),
+    )));
+    let th_all_gops = bench_backend(&mut th_all, m, n, 256, &slow);
+
+    let pl = PlConfig::default();
+    println!("\nmodelled FPGA PL (205 MHz, 16 B/cyc): {:.3} GOPS (paper: 4.696)", pl.gops(m, n, 256));
+    println!("paper ZCU102 PS (4x A53 OpenMP):      0.201 GOPS");
+    println!("this CPU scalar: {scalar_gops:.3} | threaded x4: {th4:.3} | all cores: {th_all_gops:.3}");
+
+    section("PJRT kernel path (requires artifacts): upload vs execute split");
+    if let Ok(rt) = llamaf::runtime::Runtime::load(std::path::Path::new("artifacts")) {
+        let mut rng = Rng::new(7);
+        for (m, n) in [(512usize, 256usize), (1536, 256)] {
+            let gs = 256;
+            let w = QuantizedTensor {
+                q: rng.i8_vec(m * n),
+                s: (0..m * n / gs).map(|_| rng.next_f32() * 1e-3).collect(),
+                rows: m,
+                cols: n,
+                gs,
+            };
+            let (xq, xs) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
+            let mut out = vec![0.0f32; m];
+            let up = b.run(&format!("pjrt upload {m}x{n}"), || {
+                let dw = rt.upload(&w).unwrap();
+                std::hint::black_box(&dw);
+            });
+            println!("{}", up.row());
+            let dw = rt.upload(&w).unwrap();
+            let ex = b.run(&format!("pjrt execute {m}x{n}"), || {
+                rt.gqmv_device(&dw, &xq, &xs, &mut out).unwrap();
+            });
+            println!("{}  -> {:.3} GOPS", ex.row(), 2.0 * (m * n) as f64 / ex.mean_s / 1e9);
+        }
+    } else {
+        println!("(skipped: run `make artifacts`)");
+    }
+
+    section("dataflow simulator functional throughput (host-side cost of simulation)");
+    let mut sim = DataflowSim::new(PlConfig::default());
+    bench_backend(&mut sim, 512, 256, 256, &b);
+    println!(
+        "simulated PL time for those calls: {:.3} ms ({:.3} simulated GOPS)",
+        sim.simulated_time_s() * 1e3,
+        sim.achieved_gops()
+    );
+}

@@ -1,0 +1,11 @@
+//! Bench target regenerating Table II (forward-pass runtime distribution).
+//!
+//!     cargo bench --bench table2_profile [-- --geometry tinyllama]
+
+use llamaf::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(&argv).expect("args");
+    llamaf::exp::table2::run(&args).expect("table2");
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating Table VI (inference speed & power): the
+//! paper-scale model plus the measured nano end-to-end rows.
+//!
+//!     cargo bench --bench table6_inference
+
+use llamaf::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(&argv).expect("args");
+    llamaf::exp::table6::run(&args).expect("table6");
+}

@@ -1,0 +1,13 @@
+//! Bench target regenerating the static tables: I (weight specs),
+//! III (resource utilization), IV (quantization error), V (PPL).
+
+use llamaf::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(&argv).expect("args");
+    llamaf::exp::table1::run(&args).expect("table1");
+    llamaf::exp::table3::run(&args).expect("table3");
+    llamaf::exp::table4::run(&args).expect("table4");
+    llamaf::exp::table5::run(&args).expect("table5");
+}

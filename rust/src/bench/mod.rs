@@ -1,0 +1,128 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + fixed-duration adaptive iteration, reporting mean / p50 / p99
+//! and derived throughput.  Used by every `rust/benches/*.rs` target.
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            crate::util::timer::fmt_duration(self.mean_s),
+            crate::util::timer::fmt_duration(self.p50_s),
+            crate::util::timer::fmt_duration(self.p99_s),
+        )
+    }
+}
+
+/// Benchmark runner with warmup and a wall-clock budget.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, min_iters: 10, max_iters: 10_000, budget_s: 2.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, min_iters: 3, max_iters: 100, budget_s: 0.5 }
+    }
+
+    /// Run `f` repeatedly; returns timing stats.  `f` should perform one
+    /// complete unit of work per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.budget_s && samples.len() < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples_to_result(name, samples)
+    }
+}
+
+fn samples_to_result(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    let iters = samples.len();
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: percentile(&samples, 50.0),
+        p99_s: percentile(&samples, 99.0),
+        min_s: samples[0],
+    }
+}
+
+/// Print a section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_at_least_min_iters() {
+        let b = Bench { warmup_iters: 0, min_iters: 5, max_iters: 10, budget_s: 0.0 };
+        let mut count = 0;
+        let r = b.run("noop", || count += 1);
+        assert!(r.iters >= 5);
+        assert_eq!(count, r.iters);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bench { warmup_iters: 0, min_iters: 1, max_iters: 7, budget_s: 60.0 };
+        let r = b.run("noop", || {});
+        assert!(r.iters <= 7);
+    }
+
+    #[test]
+    fn stats_ordered() {
+        let r = samples_to_result("x", vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(r.min_s, 1.0);
+        assert!(r.p50_s <= r.p99_s);
+        assert!((r.mean_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_inverse_of_mean() {
+        let r = samples_to_result("x", vec![0.5, 0.5]);
+        assert!((r.throughput(1.0) - 2.0).abs() < 1e-9);
+    }
+}

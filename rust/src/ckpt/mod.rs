@@ -1,0 +1,448 @@
+//! Checkpoint I/O — bit-for-bit mirror of `python/compile/quantize.py`.
+//!
+//! `LFCK` = float32 checkpoint, `LFQ8` = W8A8 group-quantized checkpoint.
+//! Layout (little-endian): 4-byte magic, 9×u32 header (version, dim,
+//! hidden_dim, n_layers, n_heads, n_kv_heads, vocab_size, seq_len, gs),
+//! then tensors in a fixed order grouped *per layer* — the grouping is what
+//! allows the engine to stream one layer at a time from "DDR" (paper
+//! §III-B) instead of keeping all weights resident.
+//!
+//! Quantized tensors are stored as int8 data followed by f32 group scales.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{FloatLayer, FloatModel, LlamaConfig, QuantLayer, QuantModel};
+use crate::quant::QuantizedTensor;
+
+pub const MAGIC_F32: &[u8; 4] = b"LFCK";
+pub const MAGIC_Q8: &[u8; 4] = b"LFQ8";
+pub const VERSION: u32 = 1;
+pub const HEADER_BYTES: u64 = 40;
+
+// ---------------------------------------------------------------------------
+// header
+// ---------------------------------------------------------------------------
+
+fn read_header(r: &mut impl Read, magic: &[u8; 4]) -> Result<LlamaConfig> {
+    let mut m = [0u8; 4];
+    r.read_exact(&mut m).context("reading magic")?;
+    if &m != magic {
+        bail!(
+            "bad magic {:?} (expected {:?})",
+            String::from_utf8_lossy(&m),
+            String::from_utf8_lossy(magic)
+        );
+    }
+    let mut buf = [0u8; 36];
+    r.read_exact(&mut buf).context("reading header")?;
+    let u = |i: usize| u32::from_le_bytes(buf[4 * i..4 * i + 4].try_into().unwrap()) as usize;
+    let version = u(0);
+    if version != VERSION as usize {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let cfg = LlamaConfig {
+        dim: u(1),
+        hidden_dim: u(2),
+        n_layers: u(3),
+        n_heads: u(4),
+        n_kv_heads: u(5),
+        vocab_size: u(6),
+        seq_len: u(7),
+        gs: u(8),
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!("invalid config in header: {e}"))?;
+    Ok(cfg)
+}
+
+fn write_header(w: &mut impl Write, magic: &[u8; 4], cfg: &LlamaConfig) -> Result<()> {
+    w.write_all(magic)?;
+    for v in [
+        VERSION as usize,
+        cfg.dim,
+        cfg.hidden_dim,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.vocab_size,
+        cfg.seq_len,
+        cfg.gs,
+    ] {
+        w.write_all(&(v as u32).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Peek only the config of a checkpoint file (either format).
+pub fn peek_config(path: &Path) -> Result<(LlamaConfig, bool)> {
+    let mut f = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut m = [0u8; 4];
+    f.read_exact(&mut m)?;
+    f.seek(SeekFrom::Start(0))?;
+    let quantized = &m == MAGIC_Q8;
+    let cfg = read_header(&mut f, if quantized { MAGIC_Q8 } else { MAGIC_F32 })?;
+    Ok((cfg, quantized))
+}
+
+// ---------------------------------------------------------------------------
+// primitive readers/writers
+// ---------------------------------------------------------------------------
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes).context("reading f32 tensor")?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn read_i8s(r: &mut impl Read, n: usize) -> Result<Vec<i8>> {
+    let mut bytes = vec![0u8; n];
+    r.read_exact(&mut bytes).context("reading i8 tensor")?;
+    Ok(bytes.into_iter().map(|b| b as i8).collect())
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    for &v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_i8s(w: &mut impl Write, data: &[i8]) -> Result<()> {
+    // i8 -> u8 reinterpretation is the identity at byte level
+    let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_quant(r: &mut impl Read, rows: usize, cols: usize, gs: usize) -> Result<QuantizedTensor> {
+    let q = read_i8s(r, rows * cols)?;
+    let s = read_f32s(r, rows * cols / gs)?;
+    Ok(QuantizedTensor { q, s, rows, cols, gs })
+}
+
+fn write_quant(w: &mut impl Write, t: &QuantizedTensor) -> Result<()> {
+    write_i8s(w, &t.q)?;
+    write_f32s(w, &t.s)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// LFQ8 (quantized) — what the engines load
+// ---------------------------------------------------------------------------
+
+/// Read one LFQ8 layer block. Fuses Wq‖Wk‖Wv and W1‖W3 on the fly.
+fn read_q8_layer(r: &mut impl Read, cfg: &LlamaConfig) -> Result<QuantLayer> {
+    let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
+    let att_norm = read_f32s(r, d)?;
+    let wq = read_quant(r, d, d, gs)?;
+    let wk = read_quant(r, kv, d, gs)?;
+    let wv = read_quant(r, kv, d, gs)?;
+    let wo = read_quant(r, d, d, gs)?;
+    let ffn_norm = read_f32s(r, d)?;
+    let w1 = read_quant(r, h, d, gs)?;
+    let w2 = read_quant(r, d, h, gs)?;
+    let w3 = read_quant(r, h, d, gs)?;
+    Ok(QuantLayer {
+        att_norm,
+        wqkv: QuantizedTensor::concat_rows(&[&wq, &wk, &wv]),
+        wo,
+        ffn_norm,
+        w13: QuantizedTensor::concat_rows(&[&w1, &w3]),
+        w2,
+    })
+}
+
+/// Load a full LFQ8 checkpoint with every layer resident.
+pub fn read_q8(path: &Path) -> Result<QuantModel> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let cfg = read_header(&mut r, MAGIC_Q8)?;
+    let tok_emb = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs)?;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for li in 0..cfg.n_layers {
+        layers.push(read_q8_layer(&mut r, &cfg).with_context(|| format!("layer {li}"))?);
+    }
+    let final_norm = read_f32s(&mut r, cfg.dim)?;
+    let cls = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs)?;
+    let mut trailing = Vec::new();
+    r.read_to_end(&mut trailing)?;
+    if !trailing.is_empty() {
+        bail!("{} trailing bytes after checkpoint", trailing.len());
+    }
+    Ok(QuantModel { cfg, tok_emb, layers, final_norm, cls })
+}
+
+fn q8_tensor_bytes(rows: usize, cols: usize, gs: usize) -> u64 {
+    (rows * cols + 4 * rows * cols / gs) as u64
+}
+
+/// Byte size of one LFQ8 layer block.
+pub fn q8_layer_bytes(cfg: &LlamaConfig) -> u64 {
+    let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
+    4 * d as u64 // att_norm
+        + q8_tensor_bytes(d, d, gs) // wq
+        + 2 * q8_tensor_bytes(kv, d, gs) // wk wv
+        + q8_tensor_bytes(d, d, gs) // wo
+        + 4 * d as u64 // ffn_norm
+        + 2 * q8_tensor_bytes(h, d, gs) // w1 w3
+        + q8_tensor_bytes(d, h, gs) // w2
+}
+
+/// File offset of layer `l`'s block in an LFQ8 file.
+pub fn q8_layer_offset(cfg: &LlamaConfig, layer: usize) -> u64 {
+    HEADER_BYTES
+        + q8_tensor_bytes(cfg.vocab_size, cfg.dim, cfg.gs)
+        + layer as u64 * q8_layer_bytes(cfg)
+}
+
+/// Streaming LFQ8 reader: fetches one layer block at a time from disk —
+/// the "DDR" the scheduler transfers from.  Keeping only the embeddings,
+/// norms and classifier resident mirrors the paper's 111.5 MB buffer
+/// strategy instead of the 1.1 GB all-resident layout.
+pub struct Q8LayerSource {
+    file: File,
+    pub cfg: LlamaConfig,
+}
+
+impl Q8LayerSource {
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let cfg = read_header(&mut file, MAGIC_Q8)?;
+        Ok(Q8LayerSource { file, cfg })
+    }
+
+    /// Read layer `l`'s block (a real disk read every call — deliberate:
+    /// this is the off-chip transfer the async scheduler overlaps).
+    pub fn fetch_layer(&mut self, layer: usize) -> Result<QuantLayer> {
+        if layer >= self.cfg.n_layers {
+            bail!("layer {layer} out of range ({} layers)", self.cfg.n_layers);
+        }
+        self.file
+            .seek(SeekFrom::Start(q8_layer_offset(&self.cfg, layer)))?;
+        let mut r = BufReader::new(&mut self.file);
+        read_q8_layer(&mut r, &self.cfg.clone())
+    }
+
+    /// Non-layer ("resident") tensors: embeddings, final norm, classifier.
+    pub fn fetch_resident(
+        &mut self,
+    ) -> Result<(QuantizedTensor, Vec<f32>, QuantizedTensor)> {
+        let cfg = self.cfg;
+        self.file.seek(SeekFrom::Start(HEADER_BYTES))?;
+        let mut r = BufReader::new(&mut self.file);
+        let tok_emb = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs)?;
+        drop(r);
+        self.file
+            .seek(SeekFrom::Start(q8_layer_offset(&cfg, cfg.n_layers)))?;
+        let mut r = BufReader::new(&mut self.file);
+        let final_norm = read_f32s(&mut r, cfg.dim)?;
+        let cls = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs)?;
+        Ok((tok_emb, final_norm, cls))
+    }
+}
+
+/// Write an LFQ8 checkpoint from an (unfused) float model by quantizing —
+/// used by tests and by `llamaf synth` to build paper-geometry checkpoints.
+pub fn write_q8_from_float(path: &Path, fm: &FloatModel) -> Result<()> {
+    let cfg = fm.cfg;
+    let gs = cfg.gs;
+    let mut w = BufWriter::new(File::create(path)?);
+    write_header(&mut w, MAGIC_Q8, &cfg)?;
+    let q = |data: &[f32], rows: usize, cols: usize| {
+        QuantizedTensor::from_f32(data, rows, cols, gs)
+    };
+    write_quant(&mut w, &q(&fm.tok_emb, cfg.vocab_size, cfg.dim))?;
+    for l in &fm.layers {
+        write_f32s(&mut w, &l.att_norm)?;
+        write_quant(&mut w, &q(&l.wq, cfg.dim, cfg.dim))?;
+        write_quant(&mut w, &q(&l.wk, cfg.kv_dim(), cfg.dim))?;
+        write_quant(&mut w, &q(&l.wv, cfg.kv_dim(), cfg.dim))?;
+        write_quant(&mut w, &q(&l.wo, cfg.dim, cfg.dim))?;
+        write_f32s(&mut w, &l.ffn_norm)?;
+        write_quant(&mut w, &q(&l.w1, cfg.hidden_dim, cfg.dim))?;
+        write_quant(&mut w, &q(&l.w2, cfg.dim, cfg.hidden_dim))?;
+        write_quant(&mut w, &q(&l.w3, cfg.hidden_dim, cfg.dim))?;
+    }
+    write_f32s(&mut w, &fm.final_norm)?;
+    write_quant(&mut w, &q(&fm.cls, cfg.vocab_size, cfg.dim))?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// LFCK (float) — the W32A32 baseline for Table V
+// ---------------------------------------------------------------------------
+
+pub fn read_f32_model(path: &Path) -> Result<FloatModel> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let cfg = read_header(&mut r, MAGIC_F32)?;
+    let (d, h, kv) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim());
+    let tok_emb = read_f32s(&mut r, cfg.vocab_size * d)?;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for _ in 0..cfg.n_layers {
+        layers.push(FloatLayer {
+            att_norm: read_f32s(&mut r, d)?,
+            wq: read_f32s(&mut r, d * d)?,
+            wk: read_f32s(&mut r, kv * d)?,
+            wv: read_f32s(&mut r, kv * d)?,
+            wo: read_f32s(&mut r, d * d)?,
+            ffn_norm: read_f32s(&mut r, d)?,
+            w1: read_f32s(&mut r, h * d)?,
+            w2: read_f32s(&mut r, d * h)?,
+            w3: read_f32s(&mut r, h * d)?,
+        });
+    }
+    let final_norm = read_f32s(&mut r, d)?;
+    let cls = read_f32s(&mut r, cfg.vocab_size * d)?;
+    let mut trailing = Vec::new();
+    r.read_to_end(&mut trailing)?;
+    if !trailing.is_empty() {
+        bail!("{} trailing bytes after checkpoint", trailing.len());
+    }
+    Ok(FloatModel { cfg, tok_emb, layers, final_norm, cls })
+}
+
+pub fn write_f32_model(path: &Path, fm: &FloatModel) -> Result<()> {
+    let cfg = fm.cfg;
+    let mut w = BufWriter::new(File::create(path)?);
+    write_header(&mut w, MAGIC_F32, &cfg)?;
+    write_f32s(&mut w, &fm.tok_emb)?;
+    for l in &fm.layers {
+        for t in [&l.att_norm, &l.wq, &l.wk, &l.wv, &l.wo, &l.ffn_norm, &l.w1, &l.w2, &l.w3] {
+            write_f32s(&mut w, t)?;
+        }
+    }
+    write_f32s(&mut w, &fm.final_norm)?;
+    write_f32s(&mut w, &fm.cls)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LlamaConfig;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let fm = FloatModel::random(tiny_cfg(), 1);
+        let dir = std::env::temp_dir().join("llamaf_test_f32.lfck");
+        write_f32_model(&dir, &fm).unwrap();
+        let fm2 = read_f32_model(&dir).unwrap();
+        assert_eq!(fm2.cfg, fm.cfg);
+        assert_eq!(fm2.tok_emb, fm.tok_emb);
+        assert_eq!(fm2.layers[1].w2, fm.layers[1].w2);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn q8_roundtrip_matches_in_memory_quantization() {
+        let fm = FloatModel::random(tiny_cfg(), 2);
+        let path = std::env::temp_dir().join("llamaf_test_q8.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let qm_file = read_q8(&path).unwrap();
+        let qm_mem = QuantModel::from_float(&fm);
+        assert_eq!(qm_file.tok_emb, qm_mem.tok_emb);
+        for (a, b) in qm_file.layers.iter().zip(&qm_mem.layers) {
+            assert_eq!(a.wqkv, b.wqkv);
+            assert_eq!(a.wo, b.wo);
+            assert_eq!(a.w13, b.w13);
+            assert_eq!(a.w2, b.w2);
+            assert_eq!(a.att_norm, b.att_norm);
+        }
+        assert_eq!(qm_file.cls, qm_mem.cls);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn layer_source_matches_full_read() {
+        let fm = FloatModel::random(tiny_cfg(), 3);
+        let path = std::env::temp_dir().join("llamaf_test_stream.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let qm = read_q8(&path).unwrap();
+        let mut src = Q8LayerSource::open(&path).unwrap();
+        for li in 0..qm.cfg.n_layers {
+            let layer = src.fetch_layer(li).unwrap();
+            assert_eq!(layer.wqkv, qm.layers[li].wqkv);
+            assert_eq!(layer.w2, qm.layers[li].w2);
+        }
+        let (emb, norm, cls) = src.fetch_resident().unwrap();
+        assert_eq!(emb, qm.tok_emb);
+        assert_eq!(norm, qm.final_norm);
+        assert_eq!(cls, qm.cls);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = std::env::temp_dir().join("llamaf_test_badmagic.lfq8");
+        std::fs::write(&path, b"XXXX0000000000000000000000000000000000000000").unwrap();
+        assert!(read_q8(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let fm = FloatModel::random(tiny_cfg(), 4);
+        let path = std::env::temp_dir().join("llamaf_test_trunc.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 10]).unwrap();
+        assert!(read_q8(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let fm = FloatModel::random(tiny_cfg(), 5);
+        let path = std::env::temp_dir().join("llamaf_test_trail.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        data.extend_from_slice(&[0u8; 13]);
+        std::fs::write(&path, &data).unwrap();
+        assert!(read_q8(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn layer_offsets_consistent() {
+        let cfg = tiny_cfg();
+        let fm = FloatModel::random(cfg, 6);
+        let path = std::env::temp_dir().join("llamaf_test_off.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let file_len = std::fs::metadata(&path).unwrap().len();
+        let expected = q8_layer_offset(&cfg, cfg.n_layers)
+            + 4 * cfg.dim as u64
+            + q8_tensor_bytes(cfg.vocab_size, cfg.dim, cfg.gs);
+        assert_eq!(file_len, expected);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn out_of_range_layer_rejected() {
+        let fm = FloatModel::random(tiny_cfg(), 7);
+        let path = std::env::temp_dir().join("llamaf_test_oor.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let mut src = Q8LayerSource::open(&path).unwrap();
+        assert!(src.fetch_layer(99).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,145 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Flags that take no value (everything else consumes the next token).
+const BOOL_FLAGS: &[&str] = &[
+    "help", "full", "no-sched", "sync", "async", "quiet", "verbose", "json",
+    "stream", "greedy",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if BOOL_FLAGS.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    if i + 1 >= argv.len() {
+                        bail!("option --{rest} requires a value");
+                    }
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("generate --ckpt model.lfq8 --steps 64 --prompt hello");
+        assert_eq!(a.command.as_deref(), Some("generate"));
+        assert_eq!(a.get("ckpt"), Some("model.lfq8"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 64);
+        assert_eq!(a.get("prompt"), Some("hello"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("tables --table=6 --json");
+        assert_eq!(a.get("table"), Some("6"));
+        assert!(a.flag("json"));
+    }
+
+    #[test]
+    fn bool_flags_consume_nothing() {
+        let a = parse("bench --no-sched --steps 10");
+        assert!(a.flag("no-sched"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let argv = vec!["x".to_string(), "--ckpt".to_string()];
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse("x --steps abc");
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("mode", "sync"), "sync");
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+        assert!((a.get_f64("top-p", 0.9).unwrap() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("run file1 file2 --k v");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

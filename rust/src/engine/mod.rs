@@ -1,0 +1,46 @@
+//! Inference engines implementing Algorithm 2 (FPGA-accelerated
+//! transformer forward pass, host side).
+//!
+//! * [`CpuEngine`] — weights resident, GQMV on a pluggable CPU backend
+//!   (scalar / threaded = the PS baseline; dataflow sim = the modeled PL).
+//! * [`LlamafEngine`] — the paper's system: PS control flow + streamed
+//!   per-layer weights + GQMV executed by the AOT Pallas kernel via PJRT,
+//!   with sync or async staging ([`crate::sched`]).
+//!
+//! Both produce identical logits (integration-tested) because every GQMV
+//! backend is bit-exact with Algorithm 1.
+
+pub mod forward;
+pub mod generate;
+pub mod llamaf;
+pub mod ppl;
+
+pub use forward::{CpuEngine, Engine, Scratch};
+pub use generate::{generate, GenOutput, Sampler};
+pub use llamaf::LlamafEngine;
+pub use ppl::perplexity;
+
+use crate::metrics::ForwardProfile;
+
+impl Engine for crate::ps::float::FloatEngine {
+    fn cfg(&self) -> &crate::model::LlamaConfig {
+        &self.model.cfg
+    }
+
+    fn forward(
+        &mut self,
+        token: u32,
+        pos: usize,
+        _prof: &mut ForwardProfile,
+    ) -> anyhow::Result<&[f32]> {
+        crate::ps::float::FloatEngine::forward(self, token, pos)
+    }
+
+    fn reset(&mut self) {
+        crate::ps::float::FloatEngine::reset(self)
+    }
+
+    fn name(&self) -> String {
+        "float-w32a32".into()
+    }
+}

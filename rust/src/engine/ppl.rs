@@ -1,0 +1,103 @@
+//! Perplexity evaluation (paper Table V: WikiText-2 → our held-out
+//! synthetic corpus; the *relative* W32A32 vs W8A8 degradation transfers).
+
+use anyhow::Result;
+
+use crate::engine::forward::Engine;
+use crate::metrics::ForwardProfile;
+use crate::tensor::log_sum_exp;
+
+/// Compute PPL of `tokens` under `engine`, processing non-overlapping
+/// context windows of `engine.cfg().seq_len` (the standard stride=ctx
+/// protocol).  At most `max_tokens` predictions are scored.
+pub fn perplexity(engine: &mut dyn Engine, tokens: &[u32], max_tokens: usize) -> Result<f64> {
+    anyhow::ensure!(tokens.len() >= 2, "need at least 2 tokens");
+    let ctx = engine.cfg().seq_len;
+    let mut prof = ForwardProfile::default();
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    let mut start = 0usize;
+    while start + 1 < tokens.len() && count < max_tokens {
+        let end = (start + ctx).min(tokens.len());
+        engine.reset();
+        for (pos, i) in (start..end - 1).enumerate() {
+            let logits = engine.forward(tokens[i], pos, &mut prof)?;
+            let target = tokens[i + 1] as usize;
+            anyhow::ensure!(target < logits.len(), "target token out of range");
+            let lse = log_sum_exp(logits) as f64;
+            nll += lse - logits[target] as f64;
+            count += 1;
+            if count >= max_tokens {
+                break;
+            }
+        }
+        start = end;
+    }
+    anyhow::ensure!(count > 0, "no predictions scored");
+    Ok((nll / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::forward::CpuEngine;
+    use crate::model::{FloatModel, LlamaConfig, QuantModel};
+    use crate::ps::float::FloatEngine;
+    use crate::ps::ScalarGqmv;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 16,
+            gs: 32,
+        }
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        // an untrained model's PPL over random tokens ~ vocab size
+        let fm = FloatModel::random(tiny_cfg(), 1);
+        let mut e = FloatEngine::new(fm);
+        let mut rng = crate::util::Rng::new(2);
+        let toks: Vec<u32> = (0..200).map(|_| rng.below(64) as u32).collect();
+        let ppl = perplexity(&mut e, &toks, 150).unwrap();
+        assert!(ppl > 64.0 * 0.5 && ppl < 64.0 * 1.5, "ppl {ppl}");
+    }
+
+    #[test]
+    fn quantized_ppl_close_to_float() {
+        // Table V's shape: W8A8 PPL within ~2% of W32A32 on the same data
+        let fm = FloatModel::random(tiny_cfg(), 3);
+        let qm = QuantModel::from_float(&fm);
+        let mut fe = FloatEngine::new(fm);
+        let mut qe = CpuEngine::new(qm, Box::new(ScalarGqmv));
+        let mut rng = crate::util::Rng::new(4);
+        let toks: Vec<u32> = (0..150).map(|_| rng.below(64) as u32).collect();
+        let p_f = perplexity(&mut fe, &toks, 100).unwrap();
+        let p_q = perplexity(&mut qe, &toks, 100).unwrap();
+        let delta = (p_q - p_f).abs() / p_f;
+        assert!(delta < 0.05, "float {p_f} quant {p_q} delta {delta}");
+    }
+
+    #[test]
+    fn too_short_input_rejected() {
+        let fm = FloatModel::random(tiny_cfg(), 5);
+        let mut e = FloatEngine::new(fm);
+        assert!(perplexity(&mut e, &[1], 10).is_err());
+    }
+
+    #[test]
+    fn windows_reset_context() {
+        // ppl over a sequence longer than seq_len must not panic
+        let fm = FloatModel::random(tiny_cfg(), 6);
+        let mut e = FloatEngine::new(fm);
+        let toks: Vec<u32> = (0..64).map(|i| (i % 60) as u32).collect();
+        let ppl = perplexity(&mut e, &toks, 60).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Every driver prints the paper's reported values next to this
+//! reproduction's measured/modeled values so the "shape" claims are
+//! auditable from the terminal:
+//!
+//! ```bash
+//! llamaf tables --table 6          # inference speed & power (Table VI)
+//! llamaf tables --fig 2            # sync vs async timeline (Fig. 2)
+//! llamaf tables --all
+//! ```
+
+pub mod fig2;
+pub mod paper;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+
+/// Dispatch `llamaf tables ...`.
+pub fn run(args: &Args) -> Result<()> {
+    if let Some(fig) = args.get("fig") {
+        match fig {
+            "2" => return fig2::run(args),
+            other => anyhow::bail!("unknown figure {other} (have: 2)"),
+        }
+    }
+    let table = args.get("table");
+    let all = table.is_none();
+    let want = |t: &str| all || table == Some(t);
+    if want("1") {
+        table1::run(args)?;
+    }
+    if want("2") {
+        table2::run(args)?;
+    }
+    if want("3") {
+        table3::run(args)?;
+    }
+    if want("4") {
+        table4::run(args)?;
+    }
+    if want("5") {
+        table5::run(args)?;
+    }
+    if want("6") {
+        table6::run(args)?;
+    }
+    if all {
+        fig2::run(args)?;
+    }
+    Ok(())
+}
+
+pub(crate) fn header(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}

@@ -1,0 +1,49 @@
+//! The paper's reported numbers, used for side-by-side printing and for
+//! the shape assertions in tests.  Source: LlamaF (CS.AR 2024), §V.
+
+/// Table II — PS-only forward-pass runtime distribution (%).
+pub const TABLE2: [(&str, [f64; 3]); 5] = [
+    ("Matrix Computation", [98.98, 98.53, 97.64]),
+    ("Multi-head Attention", [0.47, 0.92, 1.82]),
+    ("SwiGLU", [0.13, 0.13, 0.13]),
+    ("RoPE", [0.07, 0.07, 0.07]),
+    ("RMSNorm", [0.06, 0.06, 0.05]),
+];
+pub const TABLE2_POSITIONS: [usize; 3] = [63, 127, 255];
+
+/// Table III — utilization % on ZCU102.
+pub const TABLE3: [(&str, f64); 4] =
+    [("LUT", 59.72), ("FF", 31.31), ("BRAM", 24.45), ("DSP", 20.95)];
+
+/// Table IV — group-wise quantization error stats (GS=256) on TinyLlama.
+pub const TABLE4_MAX: f64 = 0.0115;
+pub const TABLE4_MIN: f64 = 0.0;
+pub const TABLE4_MEAN: f64 = 0.000265;
+pub const TABLE4_STD: f64 = 0.000173;
+pub const ERR_PCT_MEAN: f64 = 3.30;
+pub const ERR_PCT_STD: f64 = 11.57;
+
+/// Table V — TinyLlama WikiText-2 PPL.
+pub const TABLE5_PPL_F32: f64 = 7.05;
+pub const TABLE5_PPL_Q8: f64 = 7.09;
+
+/// Table VI — inference speed & power.
+pub const PS_GOPS: f64 = 0.201;
+pub const LLAMAF_GOPS: f64 = 4.696;
+pub const PS_TOKS: [f64; 3] = [0.0935, 0.0933, 0.0928]; // steps 64/128/256
+pub const LLAMAF_NOSCHED_TOKS: [f64; 3] = [0.936, 0.915, 0.853];
+pub const LLAMAF_TOKS: [f64; 3] = [1.478, 1.424, 1.328];
+pub const PS_EFF: f64 = 0.0480;
+pub const LLAMAF_EFF: f64 = 0.291;
+pub const STEPS: [usize; 3] = [64, 128, 256];
+
+/// Calibrated PS GQMV throughput (GOPS) used by the paper-scale model —
+/// back-derived from Table II/VI: matrix time = 98.98% of 1/0.0935 s.
+pub const PS_MODEL_GOPS: f64 = 0.1954;
+
+/// Multi-head-attention time per position step on the PS (seconds/pos,
+/// all layers, OpenMP x4) — from Table II: 0.47% of 10.695 s at pos 63.
+pub const PS_MHA_S_PER_POS: f64 = 0.0503 / 64.0;
+
+/// Constant small-op time per token on the PS (SwiGLU+RoPE+RMSNorm).
+pub const PS_SMALLOPS_S: f64 = 0.0278;

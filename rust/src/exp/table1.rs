@@ -1,0 +1,28 @@
+//! Table I — Llama2 weight matrix specifications.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::exp::header;
+use crate::model::{NANO, TINYLLAMA_1_1B};
+
+pub fn run(args: &Args) -> Result<()> {
+    header("Table I: Llama2 weight matrix specifications");
+    for (name, cfg) in [("TinyLlama 1.1B (paper)", TINYLLAMA_1_1B), ("nano (trained E2E model)", NANO)] {
+        println!("\n  {name}:  dim={} hidden={} layers={} heads={}/{} vocab={}",
+            cfg.dim, cfg.hidden_dim, cfg.n_layers, cfg.n_heads, cfg.n_kv_heads, cfg.vocab_size);
+        println!("  {:<16} {:>10} {:>10}   {:<10}", "Matrix", "rows", "cols", "quantized");
+        for (mname, rows, cols, quant) in cfg.table1_rows() {
+            println!("  {:<16} {:>10} {:>10}   {}", mname, rows, cols, if quant { "yes" } else { "no" });
+        }
+        println!(
+            "  params: {:.2}M   f32 size: {:.2} GB   W8A8 (GS={}) size: {:.2} GB",
+            cfg.param_count() as f64 / 1e6,
+            cfg.param_count() as f64 * 4.0 / 1e9,
+            cfg.gs,
+            (cfg.param_count() as f64 * (1.0 + 4.0 / cfg.gs as f64)) / 1e9,
+        );
+    }
+    let _ = args;
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Table III — hardware utilization of LlamaF on ZCU102 (analytic model).
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::exp::header;
+use crate::fpga::ResourceModel;
+
+pub fn run(args: &Args) -> Result<()> {
+    header("Table III: hardware utilization of LlamaF on ZCU102 (model vs paper)");
+    let gs = args.get_usize("gs", 256)? as u64;
+    let model = ResourceModel { gs, ..Default::default() };
+    let u = model.utilization();
+    println!(
+        "  design: GS={gs}, {} kernels, max {} groups/row, max n={}\n",
+        model.kernels, model.max_groups, model.max_n
+    );
+    println!(
+        "  {:<6} {:>12} {:>12} {:>12} {:>12}",
+        "", "total", "model used", "model %", "paper %"
+    );
+    let totals = [
+        ("LUT", crate::fpga::resources::ZCU102_LUT, u.lut),
+        ("FF", crate::fpga::resources::ZCU102_FF, u.ff),
+        ("BRAM", crate::fpga::resources::ZCU102_BRAM, u.bram),
+        ("DSP", crate::fpga::resources::ZCU102_DSP, u.dsp),
+    ];
+    for ((name, total, used), (_, model_pct, paper_pct)) in totals.iter().zip(model.table3()) {
+        println!(
+            "  {:<6} {:>12} {:>12} {:>11.2}% {:>11.2}%",
+            name, total, used, model_pct, paper_pct
+        );
+    }
+    println!("\n  (component estimates documented in rust/src/fpga/resources.rs)");
+    Ok(())
+}

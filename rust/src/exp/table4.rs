@@ -1,0 +1,85 @@
+//! Table IV — statistics of group-wise quantization error (GS=256).
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::cli::Args;
+use crate::ckpt;
+use crate::exp::{header, paper};
+use crate::model::FloatModel;
+use crate::quant::QuantErrorStats;
+
+/// Accumulate Table IV stats over every quantized tensor of a float model.
+pub fn stats_for_model(fm: &FloatModel) -> QuantErrorStats {
+    let cfg = fm.cfg;
+    let gs = cfg.gs;
+    let mut st = QuantErrorStats::default();
+    st.add_tensor(&fm.tok_emb, cfg.vocab_size, cfg.dim, gs);
+    st.add_tensor(&fm.cls, cfg.vocab_size, cfg.dim, gs);
+    for l in &fm.layers {
+        st.add_tensor(&l.wq, cfg.dim, cfg.dim, gs);
+        st.add_tensor(&l.wk, cfg.kv_dim(), cfg.dim, gs);
+        st.add_tensor(&l.wv, cfg.kv_dim(), cfg.dim, gs);
+        st.add_tensor(&l.wo, cfg.dim, cfg.dim, gs);
+        st.add_tensor(&l.w1, cfg.hidden_dim, cfg.dim, gs);
+        st.add_tensor(&l.w2, cfg.dim, cfg.hidden_dim, gs);
+        st.add_tensor(&l.w3, cfg.hidden_dim, cfg.dim, gs);
+    }
+    st
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    header("Table IV: statistics of group-wise quantization error (GS=256)");
+    let ckpt_path = args.get_or("f32-ckpt", "artifacts/nano_f32.lfck");
+    let fm = if Path::new(ckpt_path).exists() {
+        println!("  checkpoint: {ckpt_path} (trained nano)");
+        ckpt::read_f32_model(Path::new(ckpt_path))?
+    } else {
+        println!("  checkpoint {ckpt_path} missing; using synthetic N(0, 0.02) nano weights");
+        FloatModel::random(crate::model::NANO, 7)
+    };
+    let st = stats_for_model(&fm);
+    println!("\n  {:<24} {:>12} {:>12} {:>12} {:>12}", "Method", "Max", "Min", "Mean", "Std");
+    println!(
+        "  {:<24} {:>12.6} {:>12.6} {:>12.6} {:>12.6}",
+        "INT8 (this repro)",
+        st.abs.max(),
+        st.abs.min(),
+        st.abs.mean(),
+        st.abs.std()
+    );
+    println!(
+        "  {:<24} {:>12.6} {:>12.6} {:>12.6} {:>12.6}",
+        "INT8 (paper, TinyLlama)",
+        paper::TABLE4_MAX,
+        paper::TABLE4_MIN,
+        paper::TABLE4_MEAN,
+        paper::TABLE4_STD
+    );
+    println!(
+        "\n  error %%: mean {:.2}% std {:.2}%   (paper: mean {:.2}% std {:.2}%)",
+        st.pct.mean(),
+        st.pct.std(),
+        paper::ERR_PCT_MEAN,
+        paper::ERR_PCT_STD
+    );
+    println!("  note: absolute stats scale with weight magnitude (1.1B vs 4M params);");
+    println!("  the relative (percentage) distribution is the transferable quantity.");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_pct_in_paper_range() {
+        // The % error distribution is weight-scale invariant; for trained
+        // or N(0,sigma) weights at GS=256 it lands near the paper's 3.3%.
+        let fm = FloatModel::random(crate::model::NANO, 3);
+        let st = stats_for_model(&fm);
+        assert!(st.pct.mean() > 1.0 && st.pct.mean() < 8.0, "pct mean {}", st.pct.mean());
+        assert!(st.abs.min() >= 0.0);
+        assert!(st.abs.max() < 0.02); // sigma=0.02 weights: max err ~ max|w|/254
+    }
+}

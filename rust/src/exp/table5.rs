@@ -1,0 +1,70 @@
+//! Table V — PPL of the quantized vs float model (WikiText-2 → held-out
+//! synthetic corpus; DESIGN.md §5 substitution 3).
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::cli::Args;
+use crate::ckpt;
+use crate::engine::forward::CpuEngine;
+use crate::engine::ppl::perplexity;
+use crate::exp::{header, paper};
+use crate::ps::float::FloatEngine;
+use crate::ps::ScalarGqmv;
+use crate::tokenizer::Tokenizer;
+
+pub struct PplResult {
+    pub ppl_f32: f64,
+    pub ppl_q8: f64,
+}
+
+pub fn eval(
+    f32_ckpt: &Path,
+    q8_ckpt: &Path,
+    corpus: &Path,
+    max_tokens: usize,
+) -> Result<PplResult> {
+    let fm = ckpt::read_f32_model(f32_ckpt)?;
+    let qm = ckpt::read_q8(q8_ckpt)?;
+    anyhow::ensure!(fm.cfg == qm.cfg, "checkpoint configs differ");
+    let text = std::fs::read_to_string(corpus)?;
+    let tok = Tokenizer::new(fm.cfg.vocab_size);
+    let ids = tok.encode(&text, true);
+
+    let mut fe = FloatEngine::new(fm);
+    let ppl_f32 = perplexity(&mut fe, &ids, max_tokens)?;
+    let mut qe = CpuEngine::new(qm, Box::new(ScalarGqmv));
+    let ppl_q8 = perplexity(&mut qe, &ids, max_tokens)?;
+    Ok(PplResult { ppl_f32, ppl_q8 })
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    header("Table V: model perplexity, W32A32 vs W8A8 (lower is better)");
+    let f32_ckpt = args.get_or("f32-ckpt", "artifacts/nano_f32.lfck");
+    let q8_ckpt = args.get_or("ckpt", "artifacts/nano_q8.lfq8");
+    let corpus = args.get_or("corpus", "artifacts/corpus_val.txt");
+    let max_tokens = args.get_usize("ppl-tokens", 2048)?;
+    for p in [f32_ckpt, q8_ckpt, corpus] {
+        if !Path::new(p).exists() {
+            println!("  missing {p}; run `make artifacts` first");
+            return Ok(());
+        }
+    }
+    println!("  eval: {max_tokens} predictions on held-out synthetic corpus ({corpus})\n");
+    let r = eval(Path::new(f32_ckpt), Path::new(q8_ckpt), Path::new(corpus), max_tokens)?;
+    let delta = 100.0 * (r.ppl_q8 - r.ppl_f32) / r.ppl_f32;
+    println!("  {:<28} {:>14} {:>18}", "Model", "W32A32 PPL", "W8A8 (GS=256) PPL");
+    println!(
+        "  {:<28} {:>14.4} {:>18.4}   (delta {:+.2}%)",
+        "nano (this repro)", r.ppl_f32, r.ppl_q8, delta
+    );
+    println!(
+        "  {:<28} {:>14.2} {:>18.2}   (delta {:+.2}%)",
+        "TinyLlama / WikiText-2 (paper)",
+        paper::TABLE5_PPL_F32,
+        paper::TABLE5_PPL_Q8,
+        100.0 * (paper::TABLE5_PPL_Q8 - paper::TABLE5_PPL_F32) / paper::TABLE5_PPL_F32
+    );
+    println!("\n  shape check: quantization costs well under ~2% PPL.");
+    Ok(())
+}

@@ -1,0 +1,241 @@
+//! Table VI — inference speed and power consumption.
+//!
+//! Two sections:
+//!  1. **Paper-scale model**: PS analytic model + PL dataflow model + AXI
+//!     staging model + power model at TinyLlama-1.1B geometry — reproduces
+//!     the paper's own magnitudes (0.0935 → 1.478 tok/s etc.).
+//!  2. **Testbed measurement** (needs `make artifacts`): the trained nano
+//!     model run end-to-end on this machine — PS-threaded baseline vs the
+//!     LlamaF engine (PJRT Pallas kernel) with sync vs async scheduling.
+
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::cli::Args;
+use crate::engine::forward::CpuEngine;
+use crate::engine::generate::{generate, Sampler};
+use crate::engine::llamaf::LlamafEngine;
+use crate::exp::{header, paper};
+use crate::fpga::power::ExecMode;
+use crate::fpga::{AxiModel, PlConfig, PowerModel};
+use crate::model::{LlamaConfig, MatKind, TINYLLAMA_1_1B};
+use crate::ps::ThreadedGqmv;
+use crate::runtime::Runtime;
+use crate::sched::{sim_token_time, SchedMode};
+use crate::tokenizer::Tokenizer;
+use crate::util::ThreadPool;
+
+/// MAC count of one token's matrix pipeline.
+pub fn token_macs(cfg: &LlamaConfig) -> f64 {
+    let per_layer: usize = [MatKind::Qkv, MatKind::Wo, MatKind::W13, MatKind::W2]
+        .iter()
+        .map(|&k| {
+            let (m, n) = cfg.mat_shape(k);
+            m * n
+        })
+        .sum();
+    let (mc, nc) = cfg.mat_shape(MatKind::Cls);
+    (cfg.n_layers * per_layer + mc * nc) as f64
+}
+
+/// PS multi-head-attention model time at `pos` (scaled from the paper's
+/// Table II measurement by the geometry's attention FLOP ratio = 1 here).
+fn mha_time(pos: usize) -> f64 {
+    paper::PS_MHA_S_PER_POS * (pos + 1) as f64
+}
+
+/// Modeled per-token time on the PS at `pos`.
+pub fn ps_token_time(cfg: &LlamaConfig, pos: usize) -> f64 {
+    2.0 * token_macs(cfg) / (paper::PS_MODEL_GOPS * 1e9) + mha_time(pos) + paper::PS_SMALLOPS_S
+}
+
+/// Modeled per-token time on LlamaF at `pos`.
+pub fn llamaf_token_time(cfg: &LlamaConfig, pos: usize, scheduled: bool) -> f64 {
+    let (sync_s, async_s) = sim_token_time(cfg, &PlConfig::default(), &AxiModel::default());
+    let matrix = if scheduled { async_s } else { sync_s };
+    matrix + mha_time(pos) + paper::PS_SMALLOPS_S
+}
+
+/// tok/s over a fixed-step generation = steps / total wall time — exactly
+/// what the paper measures.  MHA grows linearly with position, which is
+/// why tok/s declines with larger step counts.
+pub fn toks_over_steps(_cfg: &LlamaConfig, steps: usize, f: impl Fn(usize) -> f64) -> f64 {
+    let total: f64 = (0..steps).map(f).sum();
+    steps as f64 / total
+}
+
+/// The full paper-scale modeled table.
+pub struct ModeledTable {
+    pub ps_gops: f64,
+    pub lf_gops: f64,
+    pub ps_toks: [f64; 3],
+    pub lf_nosched_toks: [f64; 3],
+    pub lf_toks: [f64; 3],
+    pub ps_eff: f64,
+    pub lf_eff: f64,
+}
+
+pub fn modeled_table() -> ModeledTable {
+    let cfg = TINYLLAMA_1_1B;
+    let pl = PlConfig::default();
+    let (mc, nc) = cfg.mat_shape(MatKind::Cls);
+    let power = PowerModel::default();
+    let mut t = ModeledTable {
+        ps_gops: paper::PS_MODEL_GOPS,
+        lf_gops: pl.gops(mc, nc, cfg.gs),
+        ps_toks: [0.0; 3],
+        lf_nosched_toks: [0.0; 3],
+        lf_toks: [0.0; 3],
+        ps_eff: 0.0,
+        lf_eff: 0.0,
+    };
+    for (i, &steps) in paper::STEPS.iter().enumerate() {
+        t.ps_toks[i] = toks_over_steps(&cfg, steps, |p| ps_token_time(&cfg, p));
+        t.lf_nosched_toks[i] = toks_over_steps(&cfg, steps, |p| llamaf_token_time(&cfg, p, false));
+        t.lf_toks[i] = toks_over_steps(&cfg, steps, |p| llamaf_token_time(&cfg, p, true));
+    }
+    t.ps_eff = power.efficiency(t.ps_toks[2], ExecMode::PsOnly);
+    t.lf_eff = power.efficiency(t.lf_toks[2], ExecMode::PsPlusPl);
+    t
+}
+
+fn print_row(name: &str, gops: f64, toks: &[f64; 3], eff: f64) {
+    println!(
+        "  {:<24} {:>7.3} {:>10.4} {:>10.4} {:>10.4} {:>12.4}",
+        name, gops, toks[0], toks[1], toks[2], eff
+    );
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    header("Table VI: inference speed and power (paper-scale model)");
+    println!(
+        "  {:<24} {:>7} {:>10} {:>10} {:>10} {:>12}",
+        "Method", "GOPS", "64 tok/s", "128 tok/s", "256 tok/s", "tok/s/W"
+    );
+    let m = modeled_table();
+    print_row("ZCU102 PS (model)", m.ps_gops, &m.ps_toks, m.ps_eff);
+    print_row("paper", paper::PS_GOPS, &paper::PS_TOKS, paper::PS_EFF);
+    println!();
+    print_row(
+        "LlamaF no-sched (model)",
+        m.lf_gops,
+        &m.lf_nosched_toks,
+        PowerModel::default().efficiency(m.lf_nosched_toks[2], ExecMode::PsPlusPl),
+    );
+    print_row("paper", paper::LLAMAF_GOPS, &paper::LLAMAF_NOSCHED_TOKS, 0.207);
+    println!();
+    print_row("LlamaF (model)", m.lf_gops, &m.lf_toks, m.lf_eff);
+    print_row("paper", paper::LLAMAF_GOPS, &paper::LLAMAF_TOKS, paper::LLAMAF_EFF);
+    println!(
+        "\n  modeled speedup @256: {:.1}x (paper 14.3x)   sched gain: {:.1}%/{:.1}%/{:.1}% (paper 55.6-57.9%)",
+        m.lf_toks[2] / m.ps_toks[2],
+        100.0 * (m.lf_toks[0] / m.lf_nosched_toks[0] - 1.0),
+        100.0 * (m.lf_toks[1] / m.lf_nosched_toks[1] - 1.0),
+        100.0 * (m.lf_toks[2] / m.lf_nosched_toks[2] - 1.0),
+    );
+
+    // ---------------- testbed measurement (nano, real PJRT) -------------
+    let ckpt = args.get_or("ckpt", "artifacts/nano_q8.lfq8");
+    let art = args.get_or("artifacts", "artifacts");
+    if !Path::new(ckpt).exists() || !Path::new(art).join("manifest.json").exists() {
+        println!("\n  [testbed section skipped: run `make artifacts` to build {ckpt}]");
+        return Ok(());
+    }
+    header("Table VI (testbed): nano model end-to-end on this machine");
+    let steps_list: Vec<usize> = if args.flag("quiet") { vec![16] } else { vec![64, 128, 224] };
+    let prompt_text = "what does the engineer build? ";
+    let qm = crate::ckpt::read_q8(Path::new(ckpt))?;
+    let tok = Tokenizer::new(qm.cfg.vocab_size);
+    let prompt = tok.encode(prompt_text, true);
+
+    println!(
+        "  {:<28} {:>12} {:>12} {:>12}",
+        "Method",
+        format!("{} tok/s", steps_list[0]),
+        format!("{} tok/s", steps_list.get(1).copied().unwrap_or(0)),
+        format!("{} tok/s", steps_list.get(2).copied().unwrap_or(0)),
+    );
+
+    // PS baseline (threaded, 4 workers = A53 analogue)
+    let pool = Arc::new(ThreadPool::new(args.get_usize("threads", 4)?));
+    let mut ps = CpuEngine::new(qm.clone(), Box::new(ThreadedGqmv::new(pool)));
+    let mut row = vec![];
+    for &s in &steps_list {
+        row.push(generate(&mut ps, &prompt, s, Sampler::Greedy, false)?.tok_per_s);
+    }
+    print_measured("PS baseline (threaded x4)", &row);
+
+    let rt = Arc::new(Runtime::load(Path::new(art))?);
+    for (name, mode) in [
+        ("LlamaF no-sched (PJRT sync)", SchedMode::Sync),
+        ("LlamaF (PJRT async sched)", SchedMode::Async),
+    ] {
+        let mut eng = LlamafEngine::open(Path::new(ckpt), Arc::clone(&rt), mode)?;
+        let mut row = vec![];
+        for &s in &steps_list {
+            row.push(generate(&mut eng, &prompt, s, Sampler::Greedy, false)?.tok_per_s);
+        }
+        print_measured(name, &row);
+    }
+    println!("\n  note: at nano scale kernels are microseconds, so PJRT call overhead");
+    println!("  dominates; the paper-scale model above carries the Table VI claims.");
+    Ok(())
+}
+
+fn print_measured(name: &str, row: &[f64]) {
+    print!("  {:<28}", name);
+    for v in row {
+        print!(" {:>12.2}", v);
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_table_matches_paper_shape() {
+        let m = modeled_table();
+        // GOPS within 2%
+        assert!((m.lf_gops - paper::LLAMAF_GOPS).abs() / paper::LLAMAF_GOPS < 0.02);
+        // PS tok/s within 5% at every step
+        for i in 0..3 {
+            let rel = (m.ps_toks[i] - paper::PS_TOKS[i]).abs() / paper::PS_TOKS[i];
+            assert!(rel < 0.05, "ps step {i}: {} vs {}", m.ps_toks[i], paper::PS_TOKS[i]);
+        }
+        // LlamaF rows within 10%
+        for i in 0..3 {
+            let rel = (m.lf_toks[i] - paper::LLAMAF_TOKS[i]).abs() / paper::LLAMAF_TOKS[i];
+            assert!(rel < 0.10, "lf step {i}: {} vs {}", m.lf_toks[i], paper::LLAMAF_TOKS[i]);
+            let rel = (m.lf_nosched_toks[i] - paper::LLAMAF_NOSCHED_TOKS[i]).abs()
+                / paper::LLAMAF_NOSCHED_TOKS[i];
+            assert!(rel < 0.10, "lf-ns step {i}: {}", m.lf_nosched_toks[i]);
+        }
+        // headline ratios
+        let speedup = m.lf_toks[2] / m.ps_toks[2];
+        assert!(speedup > 12.0 && speedup < 18.0, "speedup {speedup}");
+        let eff_gain = m.lf_eff / m.ps_eff;
+        assert!(eff_gain > 5.0 && eff_gain < 7.5, "eff gain {eff_gain}");
+        // scheduling gain in the paper's 40-75% window
+        for i in 0..3 {
+            let gain = m.lf_toks[i] / m.lf_nosched_toks[i] - 1.0;
+            assert!(gain > 0.40 && gain < 0.75, "sched gain {gain}");
+        }
+    }
+
+    #[test]
+    fn tok_s_declines_with_steps() {
+        let m = modeled_table();
+        assert!(m.ps_toks[0] >= m.ps_toks[2]);
+        assert!(m.lf_toks[0] > m.lf_toks[2]);
+    }
+
+    #[test]
+    fn token_macs_tinyllama() {
+        // ~1.03e9 MACs per token (22 layers + classifier)
+        let macs = token_macs(&TINYLLAMA_1_1B);
+        assert!(macs > 1.00e9 && macs < 1.07e9, "{macs}");
+    }
+}

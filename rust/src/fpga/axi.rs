@@ -1,0 +1,94 @@
+//! AXI / DDR transfer-time models.
+//!
+//! Two distinct data movements exist in the paper's system, and each gets
+//! a model here:
+//!
+//! 1. **Kernel-side AXI HP streaming** (DDR → PL while the GQMV kernel
+//!    runs): already billed inside `dataflow::PlConfig` as 16 B/cycle ×
+//!    efficiency.  `AxiModel::hp_stream_time` exposes the same math for
+//!    standalone analysis (Fig. 2 timelines).
+//! 2. **Host-side buffer staging** (model file → pinned DDR kernel
+//!    buffers, the per-layer copy of §III-B that async scheduling hides):
+//!    `AxiModel::staging_time`, a bandwidth + latency model of the A53
+//!    memcpy path.  1.93 GB/s calibrates LlamaF(no-sched) → LlamaF in
+//!    Table VI and is consistent with measured A53 DDR4 copy bandwidth.
+
+/// Transfer-time model for the ZCU102 memory system.
+#[derive(Clone, Copy, Debug)]
+pub struct AxiModel {
+    /// Peak full-duplex HP bandwidth (paper §V-A: 85 Gbps).
+    pub hp_peak_gbps: f64,
+    /// Effective fraction of HP peak.
+    pub hp_efficiency: f64,
+    /// Host-side staging copy bandwidth, bytes/s (A53 memcpy into pinned
+    /// buffers; calibration constant, see module docs).
+    pub staging_bw: f64,
+    /// Fixed per-transfer latency (descriptor setup, cache maintenance).
+    pub latency_s: f64,
+}
+
+impl Default for AxiModel {
+    fn default() -> Self {
+        AxiModel {
+            hp_peak_gbps: 85.0,
+            hp_efficiency: 0.727,
+            staging_bw: 1.80e9,
+            latency_s: 20e-6,
+        }
+    }
+}
+
+impl AxiModel {
+    /// Seconds to stream `bytes` DDR→PL over the HP ports.
+    pub fn hp_stream_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 * 8.0 / (self.hp_peak_gbps * 1e9 * self.hp_efficiency)
+    }
+
+    /// Seconds for the host to stage `bytes` into a kernel buffer.
+    pub fn staging_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.staging_bw
+    }
+
+    /// Effective HP bytes/s.
+    pub fn hp_effective_bps(&self) -> f64 {
+        self.hp_peak_gbps * 1e9 * self.hp_efficiency / 8.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_bytes() {
+        let m = AxiModel::default();
+        assert!(m.staging_time(1 << 20) < m.staging_time(1 << 24));
+        assert!(m.hp_stream_time(1 << 20) < m.hp_stream_time(1 << 24));
+    }
+
+    #[test]
+    fn latency_floor() {
+        let m = AxiModel::default();
+        assert!(m.staging_time(0) >= m.latency_s);
+    }
+
+    #[test]
+    fn paper_scale_staging() {
+        // staging one TinyLlama layer (~50 MB) must take ~26 ms so that a
+        // full 22-layer pass costs ~0.58 s — the gap between LlamaF
+        // no-sched (0.853 tok/s) and scheduled (1.328 tok/s) in Table VI.
+        let m = AxiModel::default();
+        let layer = crate::model::TINYLLAMA_1_1B.layer_stream_bytes();
+        let t = m.staging_time(layer);
+        assert!(t > 0.020 && t < 0.032, "layer staging {t}");
+    }
+
+    #[test]
+    fn hp_effective_near_16b_per_cycle() {
+        // 16 B/cycle at 205 MHz x efficiency ~ 2.38 GB/s; the 85 Gbps
+        // full-duplex figure with the same efficiency is ~7.7 GB/s across
+        // all ports — per-kernel streaming uses a single port pair.
+        let m = AxiModel::default();
+        assert!(m.hp_effective_bps() > 5e9);
+    }
+}

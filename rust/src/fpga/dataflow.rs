@@ -1,0 +1,260 @@
+//! Cycle-approximate simulator of the LlamaF GQMV accelerator (paper §IV).
+//!
+//! **Functional model.**  The three HLS dataflow stages are executed
+//! explicitly, with the same dataflow and cast chain as the hardware:
+//!
+//!   pre-processing: cache xq (INT8→INT16) + xs in "BRAM"; per row,
+//!                   stream GS-wide INT16 weight vectors into `w_stream`
+//!                   and n/GS scale vectors into `ws_stream`;
+//!   dot-product:    GS-lane SIMD multiply (INT16), then a binary adder
+//!                   tree of depth log2(GS) whose first level widens to
+//!                   INT32 — one INT32 group sum per group;
+//!   accumulate:     float_scale = ws ⊙ xs, dot with FP32-cast group sums,
+//!                   sequential over groups, one FP32 output per row.
+//!
+//! **Timing model.**  The accelerator is DDR-bandwidth bound: each row
+//! must stream `n` weight bytes + `4·n/GS` scale bytes over AXI HP ports
+//! that move 16 bytes/cycle at 205 MHz (paper §V-B "transfers 16 8-bit
+//! values per cycle").  `axi_efficiency` (< 1) captures burst gaps,
+//! refresh and arbitration; 0.727 calibrates the model to the paper's
+//! measured 4.696 GOPS on the 32000×2048 logits GQMV and is within the
+//! 70–80 % range typically quoted for Zynq HP ports.
+
+use anyhow::Result;
+
+use crate::ps::gqmv::{check_shapes, GqmvExec};
+use crate::quant::QuantizedTensor;
+
+/// PL clock/bandwidth parameters (defaults = paper's ZCU102 design).
+#[derive(Clone, Copy, Debug)]
+pub struct PlConfig {
+    pub freq_mhz: f64,
+    /// AXI HP payload bytes per PL cycle (128-bit ports).
+    pub bytes_per_cycle: f64,
+    /// Effective fraction of peak AXI bandwidth (calibration constant).
+    pub axi_efficiency: f64,
+    /// Pipeline fill: stage latency + adder-tree depth + stream priming.
+    pub fill_cycles: u64,
+}
+
+impl Default for PlConfig {
+    fn default() -> Self {
+        PlConfig {
+            freq_mhz: 205.0,
+            bytes_per_cycle: 16.0,
+            axi_efficiency: 0.727,
+            fill_cycles: 64,
+        }
+    }
+}
+
+impl PlConfig {
+    /// Streamed bytes for one output row: int8 weights + f32 group scales.
+    pub fn row_bytes(&self, n: usize, gs: usize) -> f64 {
+        n as f64 + 4.0 * (n / gs) as f64
+    }
+
+    /// Cycles to compute a full (m, n) GQMV.
+    pub fn kernel_cycles(&self, m: usize, n: usize, gs: usize) -> f64 {
+        let per_row = self.row_bytes(n, gs) / (self.bytes_per_cycle * self.axi_efficiency);
+        self.fill_cycles as f64 + m as f64 * per_row
+    }
+
+    pub fn kernel_time_s(&self, m: usize, n: usize, gs: usize) -> f64 {
+        self.kernel_cycles(m, n, gs) / (self.freq_mhz * 1e6)
+    }
+
+    /// GOPS of one GQMV call (2 int ops per MAC, the paper's metric).
+    pub fn gops(&self, m: usize, n: usize, gs: usize) -> f64 {
+        2.0 * m as f64 * n as f64 / self.kernel_time_s(m, n, gs) / 1e9
+    }
+}
+
+/// Depth-log2(GS) binary adder tree; first level widens INT16→INT32
+/// exactly as the hardware does (paper §IV-C).
+fn adder_tree(products: &[i16]) -> i32 {
+    debug_assert!(products.len().is_power_of_two());
+    // first layer: pairwise INT16 + INT16 -> INT32
+    let mut level: Vec<i32> = products
+        .chunks_exact(2)
+        .map(|p| p[0] as i32 + p[1] as i32)
+        .collect();
+    while level.len() > 1 {
+        level = level.chunks_exact(2).map(|p| p[0] + p[1]).collect();
+    }
+    level[0]
+}
+
+/// Functional + timing simulator; implements [`GqmvExec`] so engines can
+/// run on it directly.  Accumulates simulated cycles across calls.
+pub struct DataflowSim {
+    pub cfg: PlConfig,
+    /// Total simulated PL cycles since construction/reset.
+    pub cycles: f64,
+    /// Total MAC ops processed (for GOPS reporting).
+    pub macs: u64,
+    /// Peak stream occupancy observed (w_stream FIFO high-water, groups).
+    pub peak_stream_depth: usize,
+}
+
+impl DataflowSim {
+    pub fn new(cfg: PlConfig) -> Self {
+        DataflowSim { cfg, cycles: 0.0, macs: 0, peak_stream_depth: 0 }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.cycles = 0.0;
+        self.macs = 0;
+        self.peak_stream_depth = 0;
+    }
+
+    pub fn simulated_time_s(&self) -> f64 {
+        self.cycles / (self.cfg.freq_mhz * 1e6)
+    }
+
+    pub fn achieved_gops(&self) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            2.0 * self.macs as f64 / self.simulated_time_s() / 1e9
+        }
+    }
+
+    /// Algorithm 3 (GQMV accelerator) — functional execution.
+    fn run(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) {
+        let gs = w.gs;
+        let groups = w.cols / gs;
+        // --- pre-fetch stage: cache x in BRAM, cast INT8 -> INT16 -------
+        let xq16: Vec<i16> = xq.iter().map(|&v| v as i16).collect();
+
+        let mut w_stream: Vec<i16> = Vec::with_capacity(gs); // hls::vector<GS>
+        let mut group_sum_stream: Vec<i32> = Vec::with_capacity(groups);
+        for i in 0..w.rows {
+            group_sum_stream.clear();
+            // --- read_cast / read_scale: stream one row ----------------
+            let row = &w.q[i * w.cols..(i + 1) * w.cols];
+            let ws_row = &w.s[i * groups..(i + 1) * groups];
+            for g in 0..groups {
+                w_stream.clear();
+                w_stream.extend(row[g * gs..(g + 1) * gs].iter().map(|&v| v as i16));
+                // --- dot-product stage: SIMD mult + adder tree ---------
+                let prods: Vec<i16> = w_stream
+                    .iter()
+                    .zip(&xq16[g * gs..(g + 1) * gs])
+                    .map(|(&a, &b)| a * b) // |p| <= 127*127 fits i16
+                    .collect();
+                group_sum_stream.push(adder_tree(&prods));
+                self.peak_stream_depth = self.peak_stream_depth.max(group_sum_stream.len());
+            }
+            // --- accumulate stage: FP32 scale dot, sequential ----------
+            let mut sum = 0.0f32;
+            for g in 0..groups {
+                let float_scale = ws_row[g] * xs[g];
+                sum += group_sum_stream[g] as f32 * float_scale;
+            }
+            out[i] = sum;
+        }
+        self.cycles += self.cfg.kernel_cycles(w.rows, w.cols, gs);
+        self.macs += (w.rows * w.cols) as u64;
+    }
+}
+
+impl GqmvExec for DataflowSim {
+    fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
+        check_shapes(xq, xs, w, out)?;
+        anyhow::ensure!(w.gs.is_power_of_two(), "adder tree needs power-of-two GS");
+        self.run(xq, xs, w, out);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "fpga-dataflow-sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::gqmv::ScalarGqmv;
+    use crate::quant::quantize_activation;
+    use crate::util::Rng;
+
+    #[test]
+    fn functional_bit_exact_with_scalar() {
+        let mut rng = Rng::new(1);
+        for (m, n, gs) in [(8, 256, 256), (64, 512, 128), (256, 768, 256), (16, 64, 16)] {
+            let w = QuantizedTensor::from_f32(&rng.normal_vec(m * n, 0.4), m, n, gs);
+            let (xq, xs) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
+            let mut a = vec![0.0; m];
+            let mut b = vec![0.0; m];
+            ScalarGqmv.gqmv(&xq, &xs, &w, &mut a).unwrap();
+            DataflowSim::new(PlConfig::default()).gqmv(&xq, &xs, &w, &mut b).unwrap();
+            assert_eq!(a, b, "m={m} n={n} gs={gs}");
+        }
+    }
+
+    #[test]
+    fn adder_tree_equals_sum() {
+        let mut rng = Rng::new(2);
+        for len in [2usize, 4, 16, 256] {
+            let v: Vec<i16> = (0..len).map(|_| rng.range_i64(-16129, 16130) as i16).collect();
+            let expect: i32 = v.iter().map(|&x| x as i32).sum();
+            assert_eq!(adder_tree(&v), expect);
+        }
+    }
+
+    #[test]
+    fn paper_gops_reproduced() {
+        // The paper measures GOPS on the logits GQMV (32000 x 2048, GS=256)
+        // and reports 4.696.  The calibrated model must land within 2%.
+        let cfg = PlConfig::default();
+        let gops = cfg.gops(32000, 2048, 256);
+        assert!((gops - 4.696).abs() / 4.696 < 0.02, "model gops {gops}");
+    }
+
+    #[test]
+    fn gops_independent_of_m_for_large_m() {
+        // streaming-bound design: throughput saturates with row count
+        let cfg = PlConfig::default();
+        let a = cfg.gops(2048, 2048, 256);
+        let b = cfg.gops(32000, 2048, 256);
+        assert!((a - b).abs() / b < 0.01);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut sim = DataflowSim::new(PlConfig::default());
+        let mut rng = Rng::new(3);
+        let w = QuantizedTensor::from_f32(&rng.normal_vec(16 * 256, 0.3), 16, 256, 256);
+        let (xq, xs) = quantize_activation(&rng.normal_vec(256, 1.0), 256);
+        let mut out = vec![0.0; 16];
+        sim.gqmv(&xq, &xs, &w, &mut out).unwrap();
+        sim.gqmv(&xq, &xs, &w, &mut out).unwrap();
+        assert_eq!(sim.macs, 2 * 16 * 256);
+        assert!(sim.cycles > 0.0);
+        assert!(sim.achieved_gops() > 0.0);
+        sim.reset_counters();
+        assert_eq!(sim.macs, 0);
+    }
+
+    #[test]
+    fn non_power_of_two_gs_rejected() {
+        let w = QuantizedTensor { q: vec![0; 96], s: vec![0.0; 2], rows: 1, cols: 96, gs: 48 };
+        let xq = vec![0i8; 96];
+        let xs = vec![0f32; 2];
+        let mut out = vec![0.0; 1];
+        assert!(DataflowSim::new(PlConfig::default()).gqmv(&xq, &xs, &w, &mut out).is_err());
+    }
+
+    #[test]
+    fn stream_depth_bounded_by_groups() {
+        let mut sim = DataflowSim::new(PlConfig::default());
+        let mut rng = Rng::new(4);
+        // n=5632 (hidden_dim) -> 22 groups, the paper's kernel2 case
+        let w = QuantizedTensor::from_f32(&rng.normal_vec(8 * 5632, 0.3), 8, 5632, 256);
+        let (xq, xs) = quantize_activation(&rng.normal_vec(5632, 1.0), 256);
+        let mut out = vec![0.0; 8];
+        sim.gqmv(&xq, &xs, &w, &mut out).unwrap();
+        assert_eq!(sim.peak_stream_depth, 22);
+    }
+}

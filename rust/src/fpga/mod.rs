@@ -1,0 +1,24 @@
+//! Simulated ZCU102 programmable logic (PL).
+//!
+//! The physical FPGA is unavailable on this testbed (DESIGN.md §5,
+//! substitution 1), so the paper's accelerator exists here twice:
+//!
+//! * [`dataflow`] — a *functional + timing* simulator of the paper's
+//!   three-stage HLS pipeline (pre-processing → dot-product with adder
+//!   tree → accumulate).  Functionally bit-exact with Algorithm 1; the
+//!   cycle model reproduces the paper's 4.696 GOPS at TinyLlama geometry.
+//! * [`crate::runtime`] — the *executable* path: the Pallas GQMV kernel
+//!   AOT-lowered to HLO and run through PJRT.
+//!
+//! [`axi`], [`resources`] and [`power`] model the platform: AXI HP
+//! transfer time, Table III utilization, and the SCUI power figures.
+
+pub mod axi;
+pub mod dataflow;
+pub mod power;
+pub mod resources;
+
+pub use axi::AxiModel;
+pub use dataflow::{DataflowSim, PlConfig};
+pub use power::PowerModel;
+pub use resources::ResourceModel;

@@ -1,0 +1,84 @@
+//! Power/energy model — the SCUI substitute (DESIGN.md §5, substitution 4).
+//!
+//! The ZCU102 system-controller power rails are not available here, so
+//! power is modelled with two constants back-derived from the paper's own
+//! Table VI (efficiency = tok/s ÷ W):
+//!
+//!   PS-only:   0.0935 tok/s ÷ 0.0480 tok/s/W = **1.948 W**
+//!   PS + PL:   1.328  tok/s ÷ 0.291  tok/s/W = **4.564 W**
+//!
+//! (Both are consistent with typical ZCU102 measurements: ~2 W for the A53
+//! cluster + DDR under load, +~2.6 W for a 60 %-LUT PL design at 205 MHz.)
+
+/// Platform power draw by execution mode.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// PS cluster + DDR, watts (A53s busy).
+    pub ps_watts: f64,
+    /// Additional PL + AXI power when the accelerator is active, watts.
+    pub pl_extra_watts: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel { ps_watts: 1.948, pl_extra_watts: 2.616 }
+    }
+}
+
+/// Which parts of the MPSoC a run keeps busy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    PsOnly,
+    PsPlusPl,
+}
+
+impl PowerModel {
+    pub fn watts(&self, mode: ExecMode) -> f64 {
+        match mode {
+            ExecMode::PsOnly => self.ps_watts,
+            ExecMode::PsPlusPl => self.ps_watts + self.pl_extra_watts,
+        }
+    }
+
+    /// tok/s/W — the paper's efficiency column.
+    pub fn efficiency(&self, tok_per_s: f64, mode: ExecMode) -> f64 {
+        tok_per_s / self.watts(mode)
+    }
+
+    /// Joules consumed per generated token.
+    pub fn energy_per_token(&self, tok_per_s: f64, mode: ExecMode) -> f64 {
+        self.watts(mode) / tok_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_efficiency() {
+        let pm = PowerModel::default();
+        // PS row: 0.0935 tok/s -> 0.0480 tok/s/W
+        let e_ps = pm.efficiency(0.0935, ExecMode::PsOnly);
+        assert!((e_ps - 0.0480).abs() < 0.001, "{e_ps}");
+        // LlamaF row: 1.328 tok/s -> 0.291 tok/s/W
+        let e_lf = pm.efficiency(1.328, ExecMode::PsPlusPl);
+        assert!((e_lf - 0.291).abs() < 0.002, "{e_lf}");
+        // 6.1x improvement
+        assert!((e_lf / e_ps - 6.06).abs() < 0.15);
+    }
+
+    #[test]
+    fn energy_per_token_paper_scale() {
+        let pm = PowerModel::default();
+        // PS: ~20.8 J/token; LlamaF: ~3.4 J/token
+        assert!((pm.energy_per_token(0.0935, ExecMode::PsOnly) - 20.8).abs() < 0.5);
+        assert!((pm.energy_per_token(1.328, ExecMode::PsPlusPl) - 3.44).abs() < 0.1);
+    }
+
+    #[test]
+    fn pl_mode_draws_more() {
+        let pm = PowerModel::default();
+        assert!(pm.watts(ExecMode::PsPlusPl) > pm.watts(ExecMode::PsOnly));
+    }
+}

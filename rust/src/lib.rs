@@ -1,0 +1,55 @@
+//! # LlamaF — Llama2-architecture accelerator reproduction
+//!
+//! Reproduction of *LlamaF: An Efficient Llama2 Architecture Accelerator on
+//! Embedded FPGAs* (Xu, Li, Ji — CS.AR 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the ZCU102 *processing
+//!   system* (PS) side of the paper. Transformer control loop
+//!   (Algorithm 2), KV cache, RMSNorm/RoPE/attention/SwiGLU, sampling,
+//!   weight streaming with sync/async task-level scheduling (Fig. 2), and
+//!   the experiment/bench harness for every paper table.
+//! * **Layer 2/1 (python, build-time only)** — the JAX model and the Pallas
+//!   GQMV kernel, AOT-lowered to HLO text once by `make artifacts`.
+//! * **Runtime bridge** — [`runtime`] loads `artifacts/*.hlo.txt` through
+//!   the PJRT C API (`xla` crate) and executes the group-wise quantized
+//!   matrix-vector multiply (GQMV) from the decode hot path: the functional
+//!   stand-in for the FPGA *programmable logic* (PL).
+//!
+//! The FPGA itself is additionally modelled by [`fpga`]: a
+//! cycle-approximate simulator of the paper's three-stage HLS dataflow
+//! pipeline plus AXI bandwidth, resource (Table III) and power models, so
+//! the paper-scale numbers (4.696 GOPS, 14.3–15.8× speedup, 6.1× energy
+//! efficiency) can be regenerated on this testbed.
+//!
+//! Quickstart: see `examples/quickstart.rs`, or:
+//!
+//! ```bash
+//! make artifacts && cargo run --release -- generate \
+//!     --ckpt artifacts/nano_q8.lfq8 --prompt "the engineer builds" --steps 48
+//! ```
+
+pub mod bench;
+pub mod ckpt;
+pub mod cli;
+pub mod engine;
+pub mod exp;
+pub mod fpga;
+pub mod metrics;
+pub mod model;
+pub mod ps;
+pub mod quant;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod tensor;
+pub mod testutil;
+pub mod tokenizer;
+pub mod util;
+
+/// Group size used throughout the paper (GS=256); checkpoints carry their
+/// own GS in the header, this is only the default.
+pub const DEFAULT_GS: usize = 256;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";

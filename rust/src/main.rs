@@ -1,0 +1,191 @@
+//! LlamaF CLI — the layer-3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   generate  — greedy/top-p text generation (PS / LlamaF engines)
+//!   serve     — line-oriented TCP generation server (batch=1 realtime)
+//!   tables    — regenerate every paper table/figure (see exp/)
+//!   ppl       — Table V perplexity evaluation
+//!   profile   — Table II component profiling
+//!   synth     — write a synthetic LFQ8 checkpoint at a chosen geometry
+//!   info      — runtime/artifact inventory
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use llamaf::cli::Args;
+use llamaf::engine::forward::{CpuEngine, Engine};
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::engine::llamaf::LlamafEngine;
+use llamaf::ps::{ScalarGqmv, ThreadedGqmv};
+use llamaf::runtime::Runtime;
+use llamaf::sched::SchedMode;
+use llamaf::tokenizer::Tokenizer;
+use llamaf::util::ThreadPool;
+
+const USAGE: &str = "\
+llamaf — LlamaF (Llama2-on-FPGA) reproduction
+
+USAGE: llamaf <command> [options]
+
+COMMANDS
+  generate  --ckpt <lfq8> --prompt <text> [--steps N] [--engine ps|llamaf]
+            [--sync|--async] [--top-p P --temperature T --seed S]
+  serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|llamaf]
+  tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
+  ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
+  profile   [--geometry nano|tinyllama] [--threads N]
+  synth     --out <path.lfq8> [--geometry nano|tinyllama] [--seed S]
+  info      [--artifacts <dir>]
+";
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn build_engine(args: &Args) -> Result<Box<dyn Engine>> {
+    let ckpt = args.get_or("ckpt", "artifacts/nano_q8.lfq8");
+    let path = Path::new(ckpt);
+    anyhow::ensure!(path.exists(), "checkpoint {ckpt} not found (run `make artifacts`)");
+    match args.get_or("engine", "llamaf") {
+        "ps" => {
+            let qm = llamaf::ckpt::read_q8(path)?;
+            let pool = Arc::new(ThreadPool::new(args.get_usize("threads", 4)?));
+            Ok(Box::new(CpuEngine::new(qm, Box::new(ThreadedGqmv::new(pool)))))
+        }
+        "ps-scalar" => {
+            let qm = llamaf::ckpt::read_q8(path)?;
+            Ok(Box::new(CpuEngine::new(qm, Box::new(ScalarGqmv))))
+        }
+        "sim" => {
+            let qm = llamaf::ckpt::read_q8(path)?;
+            Ok(Box::new(CpuEngine::new(
+                qm,
+                Box::new(llamaf::fpga::DataflowSim::new(llamaf::fpga::PlConfig::default())),
+            )))
+        }
+        "llamaf" => {
+            let art = args.get_or("artifacts", "artifacts");
+            let rt = Arc::new(Runtime::load(Path::new(art))?);
+            let mode = if args.flag("sync") { SchedMode::Sync } else { SchedMode::Async };
+            Ok(Box::new(LlamafEngine::open(path, rt, mode)?))
+        }
+        other => bail!("unknown engine '{other}' (ps | ps-scalar | sim | llamaf)"),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.flag("help") || args.command.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.command.as_deref().unwrap() {
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "tables" => llamaf::exp::run(&args),
+        "ppl" => llamaf::exp::table5::run(&args),
+        "profile" => llamaf::exp::table2::run(&args),
+        "synth" => cmd_synth(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt = args.get("prompt").context("--prompt required")?.to_string();
+    let steps = args.get_usize("steps", 64)?;
+    let mut engine = build_engine(args)?;
+    let tok = Tokenizer::new(engine.cfg().vocab_size);
+    let prompt_ids = tok.encode(&prompt, true);
+    let sampler = if let Some(p) = args.get("top-p") {
+        Sampler::TopP {
+            p: p.parse().context("--top-p")?,
+            temperature: args.get_f64("temperature", 1.0)? as f32,
+            seed: args.get_usize("seed", 0)? as u64,
+        }
+    } else {
+        Sampler::Greedy
+    };
+    eprintln!("engine: {}  prompt tokens: {}  steps: {steps}", engine.name(), prompt_ids.len());
+    let out = generate(engine.as_mut(), &prompt_ids, steps, sampler, !args.flag("greedy"))?;
+    println!("{}{}", prompt, tok.decode(&out.generated));
+    eprintln!(
+        "\n[{} tokens  {:.3} tok/s  p50 {:.2} ms  p99 {:.2} ms  matrix {:.0}%]",
+        out.generated.len(),
+        out.tok_per_s,
+        out.latency_p50_s * 1e3,
+        out.latency_p99_s * 1e3,
+        100.0 * out.profile.matrix_s / out.profile.total().max(1e-12),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7077");
+    let mut engine = build_engine(args)?;
+    let server = llamaf::server::Server::bind(addr, engine.cfg().vocab_size)?;
+    eprintln!(
+        "llamaf serving on {} (engine: {}) — protocol: GEN <steps> <prompt> | PING | QUIT",
+        server.local_addr()?,
+        engine.name()
+    );
+    server.serve(engine.as_mut(), None)?;
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let out = args.get("out").context("--out required")?;
+    let cfg = match args.get_or("geometry", "nano") {
+        "tinyllama" => llamaf::model::TINYLLAMA_1_1B,
+        _ => llamaf::model::NANO,
+    };
+    let seed = args.get_usize("seed", 42)? as u64;
+    eprintln!(
+        "building synthetic float model ({:.1}M params) and quantizing...",
+        cfg.param_count() as f64 / 1e6
+    );
+    let fm = llamaf::model::FloatModel::random(cfg, seed);
+    llamaf::ckpt::write_q8_from_float(Path::new(out), &fm)?;
+    eprintln!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let art = args.get_or("artifacts", "artifacts");
+    println!("llamaf {} — three-layer Rust+JAX+Pallas LlamaF reproduction", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {art}");
+    match Runtime::load(Path::new(art)) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("compiled GQMV kernels:");
+            for (m, n) in rt.compiled_shapes() {
+                println!("  {m:>6} x {n:<6} (g{})", rt.gs);
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e:#}"),
+    }
+    for ck in ["nano_q8.lfq8", "nano_f32.lfck"] {
+        let p = Path::new(art).join(ck);
+        if p.exists() {
+            let (cfg, quant) = llamaf::ckpt::peek_config(&p)?;
+            println!(
+                "checkpoint {ck}: dim={} hidden={} layers={} vocab={} ({})",
+                cfg.dim,
+                cfg.hidden_dim,
+                cfg.n_layers,
+                cfg.vocab_size,
+                if quant { "W8A8" } else { "f32" }
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Runtime metrics: token throughput, GQMV GOPS accounting, latency
+//! histograms — the quantities Table VI reports.
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// Counts GQMV work (the paper's GOPS metric: 2 int ops per MAC, measured
+/// on matrix computation only).
+#[derive(Clone, Debug, Default)]
+pub struct GopsCounter {
+    pub macs: u64,
+    pub seconds: f64,
+}
+
+impl GopsCounter {
+    pub fn record(&mut self, rows: usize, cols: usize, seconds: f64) {
+        self.macs += (rows * cols) as u64;
+        self.seconds += seconds;
+    }
+
+    pub fn gops(&self) -> f64 {
+        if self.seconds == 0.0 {
+            0.0
+        } else {
+            2.0 * self.macs as f64 / self.seconds / 1e9
+        }
+    }
+}
+
+/// Per-token latency recorder -> tok/s + percentiles.
+#[derive(Debug)]
+pub struct TokenMeter {
+    start: Instant,
+    last: Instant,
+    pub latencies_s: Vec<f64>,
+}
+
+impl Default for TokenMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TokenMeter {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        TokenMeter { start: now, last: now, latencies_s: Vec::new() }
+    }
+
+    /// Mark one token produced.
+    pub fn tick(&mut self) {
+        let now = Instant::now();
+        self.latencies_s.push(now.duration_since(self.last).as_secs_f64());
+        self.last = now;
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.latencies_s.len()
+    }
+
+    pub fn tok_per_s(&self) -> f64 {
+        let total = self.last.duration_since(self.start).as_secs_f64();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.tokens() as f64 / total
+        }
+    }
+
+    pub fn p50_p99(&self) -> (f64, f64) {
+        if self.latencies_s.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut v = self.latencies_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (percentile(&v, 50.0), percentile(&v, 99.0))
+    }
+}
+
+/// Component timing breakdown of a forward pass (Table II rows).
+#[derive(Clone, Debug, Default)]
+pub struct ForwardProfile {
+    pub matrix_s: f64,
+    pub attention_s: f64,
+    pub swiglu_s: f64,
+    pub rope_s: f64,
+    pub rmsnorm_s: f64,
+    /// quantize + residual + embedding + sampling glue
+    pub other_s: f64,
+    /// time spent staging weights (transfer; 0 when resident)
+    pub transfer_s: f64,
+}
+
+impl ForwardProfile {
+    pub fn total(&self) -> f64 {
+        self.matrix_s + self.attention_s + self.swiglu_s + self.rope_s + self.rmsnorm_s
+            + self.other_s
+            + self.transfer_s
+    }
+
+    /// Percentages over compute components (paper Table II excludes
+    /// transfer and glue: it profiles the PS-only run's compute).
+    pub fn table2_rows(&self) -> Vec<(&'static str, f64)> {
+        let compute =
+            self.matrix_s + self.attention_s + self.swiglu_s + self.rope_s + self.rmsnorm_s;
+        let pct = |x: f64| if compute == 0.0 { 0.0 } else { 100.0 * x / compute };
+        vec![
+            ("Matrix Computation", pct(self.matrix_s)),
+            ("Multi-head Attention", pct(self.attention_s)),
+            ("SwiGLU", pct(self.swiglu_s)),
+            ("RoPE", pct(self.rope_s)),
+            ("RMSNorm", pct(self.rmsnorm_s)),
+        ]
+    }
+
+    pub fn merge(&mut self, o: &ForwardProfile) {
+        self.matrix_s += o.matrix_s;
+        self.attention_s += o.attention_s;
+        self.swiglu_s += o.swiglu_s;
+        self.rope_s += o.rope_s;
+        self.rmsnorm_s += o.rmsnorm_s;
+        self.other_s += o.other_s;
+        self.transfer_s += o.transfer_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_math() {
+        let mut g = GopsCounter::default();
+        g.record(1000, 1000, 0.001);
+        // 2 * 1e6 MACs / 1e-3 s = 2e9 ops/s = 2 GOPS
+        assert!((g.gops() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_meter_counts() {
+        let mut m = TokenMeter::new();
+        for _ in 0..5 {
+            m.tick();
+        }
+        assert_eq!(m.tokens(), 5);
+        assert!(m.tok_per_s() > 0.0);
+        let (p50, p99) = m.p50_p99();
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn table2_percentages_sum_to_100() {
+        let p = ForwardProfile {
+            matrix_s: 0.97,
+            attention_s: 0.02,
+            swiglu_s: 0.005,
+            rope_s: 0.003,
+            rmsnorm_s: 0.002,
+            other_s: 0.5, // excluded
+            transfer_s: 0.3,
+        };
+        let sum: f64 = p.table2_rows().iter().map(|(_, v)| v).sum();
+        assert!((sum - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = ForwardProfile { matrix_s: 1.0, ..Default::default() };
+        let b = ForwardProfile { matrix_s: 2.0, attention_s: 0.5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.matrix_s, 3.0);
+        assert_eq!(a.attention_s, 0.5);
+    }
+}

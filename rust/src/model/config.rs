@@ -1,0 +1,219 @@
+//! Llama2 architecture configuration (paper Table I geometry).
+
+/// Hyper-parameters of a Llama2-architecture model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LlamaConfig {
+    pub dim: usize,
+    pub hidden_dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    /// Quantization group size (paper uses 256).
+    pub gs: usize,
+}
+
+/// The trained E2E model: every architectural feature of TinyLlama (GQA,
+/// RoPE, SwiGLU, RMSNorm) with dims divisible by GS=256.
+pub const NANO: LlamaConfig = LlamaConfig {
+    dim: 256,
+    hidden_dim: 768,
+    n_layers: 4,
+    n_heads: 4,
+    n_kv_heads: 2,
+    vocab_size: 512,
+    seq_len: 256,
+    gs: 256,
+};
+
+/// TinyLlama 1.1B geometry (paper §II-A / Table I): dim 2048, hidden 5632,
+/// 22 layers, 32 heads with 4 KV heads, vocab 32000.  Used with synthetic
+/// weights for the performance experiments.
+pub const TINYLLAMA_1_1B: LlamaConfig = LlamaConfig {
+    dim: 2048,
+    hidden_dim: 5632,
+    n_layers: 22,
+    n_heads: 32,
+    n_kv_heads: 4,
+    vocab_size: 32000,
+    seq_len: 2048,
+    gs: 256,
+};
+
+/// Which GQMV the engine is issuing — determines (rows, cols) and which of
+/// the paper's two kernels (kernel1: n=dim, kernel2: n=hidden_dim) serves it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatKind {
+    /// Fused Wq‖Wk‖Wv: (dim + 2*kv_dim, dim)
+    Qkv,
+    /// Wo: (dim, dim)
+    Wo,
+    /// Fused W1‖W3: (2*hidden_dim, dim)
+    W13,
+    /// W2: (dim, hidden_dim) — the only kernel2 user
+    W2,
+    /// Classifier: (vocab_size, dim)
+    Cls,
+}
+
+impl LlamaConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.head_dim() * self.n_kv_heads
+    }
+
+    /// Heads per KV head (GQA sharing factor).
+    pub fn kv_rep(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dim % self.n_heads != 0 {
+            return Err(format!("dim {} % n_heads {} != 0", self.dim, self.n_heads));
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err(format!(
+                "n_heads {} % n_kv_heads {} != 0",
+                self.n_heads, self.n_kv_heads
+            ));
+        }
+        for (name, v) in [
+            ("dim", self.dim),
+            ("hidden_dim", self.hidden_dim),
+            ("vocab_size", self.vocab_size),
+        ] {
+            if v % self.gs != 0 {
+                return Err(format!("{name}={v} not divisible by gs={}", self.gs));
+            }
+        }
+        if self.head_dim() % 2 != 0 {
+            return Err("head_dim must be even for RoPE".into());
+        }
+        Ok(())
+    }
+
+    /// (rows, cols) of each GQMV the forward pass issues.
+    pub fn mat_shape(&self, kind: MatKind) -> (usize, usize) {
+        match kind {
+            MatKind::Qkv => (self.dim + 2 * self.kv_dim(), self.dim),
+            MatKind::Wo => (self.dim, self.dim),
+            MatKind::W13 => (2 * self.hidden_dim, self.dim),
+            MatKind::W2 => (self.dim, self.hidden_dim),
+            MatKind::Cls => (self.vocab_size, self.dim),
+        }
+    }
+
+    /// All distinct GQMV shapes (what the AOT manifest must provide).
+    pub fn all_mat_shapes(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = [MatKind::Qkv, MatKind::Wo, MatKind::W13, MatKind::W2, MatKind::Cls]
+            .iter()
+            .map(|&k| self.mat_shape(k))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Total parameter count (float elements).
+    pub fn param_count(&self) -> usize {
+        let per_layer = self.dim // att_norm
+            + self.dim * self.dim // wq
+            + 2 * self.kv_dim() * self.dim // wk, wv
+            + self.dim * self.dim // wo
+            + self.dim // ffn_norm
+            + 3 * self.hidden_dim * self.dim; // w1, w2, w3
+        2 * self.vocab_size * self.dim + self.n_layers * per_layer + self.dim
+    }
+
+    /// Size of one transformer layer's quantized stream (int8 + f32 scales
+    /// + f32 norms) — the paper's per-layer DDR buffer (§III-B: 111.5 MB
+    /// for all-layers-resident TinyLlama would be 1.1 GB).
+    pub fn layer_stream_bytes(&self) -> usize {
+        let q8 = |elems: usize| elems + 4 * elems / self.gs;
+        2 * self.dim * 4 // att_norm + ffn_norm (f32)
+            + q8(self.dim * self.dim) // wq
+            + q8(2 * self.kv_dim() * self.dim) // wk, wv
+            + q8(self.dim * self.dim) // wo
+            + q8(3 * self.hidden_dim * self.dim) // w1, w2, w3
+    }
+
+    /// Paper Table I rows: (name, rows, cols, quantized).
+    pub fn table1_rows(&self) -> Vec<(&'static str, usize, usize, bool)> {
+        vec![
+            ("W_embeddings", self.vocab_size, self.dim, true),
+            ("W_classifier", self.vocab_size, self.dim, true),
+            ("W_q, W_o", self.dim, self.dim, true),
+            ("W_k, W_v", self.kv_dim(), self.dim, true),
+            ("W_1, W_3", self.hidden_dim, self.dim, true),
+            ("W_2", self.dim, self.hidden_dim, true),
+            ("W_att_norm", self.dim, 1, false),
+            ("W_ffn_norm", self.dim, 1, false),
+            ("W_norm_output", self.dim, 1, false),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_valid() {
+        NANO.validate().unwrap();
+        TINYLLAMA_1_1B.validate().unwrap();
+    }
+
+    #[test]
+    fn tinyllama_geometry_matches_paper() {
+        let c = TINYLLAMA_1_1B;
+        assert_eq!(c.head_dim(), 64);
+        assert_eq!(c.kv_dim(), 256);
+        assert_eq!(c.mat_shape(MatKind::Qkv), (2560, 2048));
+        assert_eq!(c.mat_shape(MatKind::W13), (11264, 2048));
+        assert_eq!(c.mat_shape(MatKind::W2), (2048, 5632));
+        assert_eq!(c.mat_shape(MatKind::Cls), (32000, 2048));
+        // ~1.1B parameters
+        let p = c.param_count();
+        assert!(p > 1_000_000_000 && p < 1_200_000_000, "params {p}");
+    }
+
+    #[test]
+    fn nano_geometry() {
+        let c = NANO;
+        assert_eq!(c.head_dim(), 64);
+        assert_eq!(c.kv_dim(), 128);
+        assert_eq!(c.kv_rep(), 2);
+        assert_eq!(c.mat_shape(MatKind::Qkv), (512, 256));
+        assert_eq!(c.mat_shape(MatKind::W13), (1536, 256));
+        assert!(c.param_count() > 3_000_000 && c.param_count() < 4_000_000);
+    }
+
+    #[test]
+    fn layer_stream_bytes_paper_scale() {
+        // Paper §III-B: the quoted 111.5MB buffer covers ~2 layer slots +
+        // embeddings; one TinyLlama layer block is ~45 MB.
+        let b = TINYLLAMA_1_1B.layer_stream_bytes();
+        assert!(b > 40_000_000 && b < 50_000_000, "bytes {b}");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = NANO;
+        c.dim = 250; // not divisible by gs / heads
+        assert!(c.validate().is_err());
+        let mut c2 = NANO;
+        c2.n_kv_heads = 3;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn all_mat_shapes_dedup() {
+        // nano: qkv (512,256) == cls (512,256) -> deduped
+        let shapes = NANO.all_mat_shapes();
+        assert_eq!(shapes.len(), 4);
+    }
+}

@@ -1,0 +1,124 @@
+//! KV cache — lives on the PS (paper §III-B: "transformer controller with
+//! KV caches runs on the PS").
+
+use crate::model::LlamaConfig;
+
+/// Per-layer key/value cache for incremental decoding, batch size 1.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub kv_dim: usize,
+    /// Highest position written + 1.
+    pub filled: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &LlamaConfig) -> Self {
+        let size = cfg.n_layers * cfg.seq_len * cfg.kv_dim();
+        KvCache {
+            k: vec![0.0; size],
+            v: vec![0.0; size],
+            n_layers: cfg.n_layers,
+            seq_len: cfg.seq_len,
+            kv_dim: cfg.kv_dim(),
+            filled: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.filled = 0;
+        // No need to zero: positions > filled are never read.
+    }
+
+    #[inline]
+    fn idx(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.seq_len + pos) * self.kv_dim
+    }
+
+    /// Store k/v for (layer, pos).
+    pub fn store(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.seq_len, "pos {pos} >= seq_len {}", self.seq_len);
+        assert_eq!(k.len(), self.kv_dim);
+        assert_eq!(v.len(), self.kv_dim);
+        let i = self.idx(layer, pos);
+        self.k[i..i + self.kv_dim].copy_from_slice(k);
+        self.v[i..i + self.kv_dim].copy_from_slice(v);
+        self.filled = self.filled.max(pos + 1);
+    }
+
+    /// Key vector of one kv-head at (layer, pos).
+    #[inline]
+    pub fn key(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        let i = self.idx(layer, pos) + kv_head * head_dim;
+        &self.k[i..i + head_dim]
+    }
+
+    #[inline]
+    pub fn value(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        let i = self.idx(layer, pos) + kv_head * head_dim;
+        &self.v[i..i + head_dim]
+    }
+
+    /// Memory footprint in bytes (PS DDR budget accounting).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::NANO;
+
+    #[test]
+    fn store_and_read_back() {
+        let mut kv = KvCache::new(&NANO);
+        let hd = NANO.head_dim();
+        let k: Vec<f32> = (0..NANO.kv_dim()).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..NANO.kv_dim()).map(|i| -(i as f32)).collect();
+        kv.store(2, 5, &k, &v);
+        assert_eq!(kv.key(2, 5, 0, hd), &k[..hd]);
+        assert_eq!(kv.key(2, 5, 1, hd), &k[hd..2 * hd]);
+        assert_eq!(kv.value(2, 5, 1, hd), &v[hd..2 * hd]);
+        assert_eq!(kv.filled, 6);
+    }
+
+    #[test]
+    fn layers_do_not_alias() {
+        let mut kv = KvCache::new(&NANO);
+        let hd = NANO.head_dim();
+        let a = vec![1.0; NANO.kv_dim()];
+        let b = vec![2.0; NANO.kv_dim()];
+        kv.store(0, 0, &a, &a);
+        kv.store(1, 0, &b, &b);
+        assert_eq!(kv.key(0, 0, 0, hd)[0], 1.0);
+        assert_eq!(kv.key(1, 0, 0, hd)[0], 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pos")]
+    fn out_of_range_pos_panics() {
+        let mut kv = KvCache::new(&NANO);
+        let z = vec![0.0; NANO.kv_dim()];
+        kv.store(0, NANO.seq_len, &z, &z);
+    }
+
+    #[test]
+    fn bytes_matches_paper_scale() {
+        // TinyLlama KV cache at 2048 ctx: 22*2048*256*2*4 bytes ~ 92 MB
+        let kv = KvCache::new(&crate::model::TINYLLAMA_1_1B);
+        assert_eq!(kv.bytes(), 22 * 2048 * 256 * 2 * 4);
+    }
+
+    #[test]
+    fn reset_clears_fill() {
+        let mut kv = KvCache::new(&NANO);
+        let z = vec![0.0; NANO.kv_dim()];
+        kv.store(0, 3, &z, &z);
+        kv.reset();
+        assert_eq!(kv.filled, 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Model definition: configuration presets, weight containers, KV cache.
+
+pub mod config;
+pub mod kv;
+pub mod weights;
+
+pub use config::{LlamaConfig, MatKind, NANO, TINYLLAMA_1_1B};
+pub use kv::KvCache;
+pub use weights::{FloatLayer, FloatModel, QuantLayer, QuantModel};

@@ -1,0 +1,245 @@
+//! Weight containers.
+//!
+//! `QuantLayer` already stores the *fused* matrices the paper's host code
+//! uses (§III-B): Wq‖Wk‖Wv as one (dim + 2·kv_dim, dim) tensor and W1‖W3
+//! as one (2·hidden, dim) tensor, so each becomes a single kernel launch.
+
+use crate::model::LlamaConfig;
+use crate::quant::QuantizedTensor;
+use crate::util::Rng;
+
+/// One transformer layer, quantized + fused.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    pub att_norm: Vec<f32>,
+    /// Wq‖Wk‖Wv  (dim + 2*kv_dim, dim)
+    pub wqkv: QuantizedTensor,
+    /// Wo (dim, dim)
+    pub wo: QuantizedTensor,
+    pub ffn_norm: Vec<f32>,
+    /// W1‖W3  (2*hidden_dim, dim)
+    pub w13: QuantizedTensor,
+    /// W2 (dim, hidden_dim)
+    pub w2: QuantizedTensor,
+}
+
+impl QuantLayer {
+    /// Bytes of the streamed representation (AXI billing / buffer sizing).
+    pub fn stream_bytes(&self) -> usize {
+        self.wqkv.stream_bytes()
+            + self.wo.stream_bytes()
+            + self.w13.stream_bytes()
+            + self.w2.stream_bytes()
+            + 4 * (self.att_norm.len() + self.ffn_norm.len())
+    }
+}
+
+/// Full quantized model (all layers resident).
+#[derive(Clone, Debug)]
+pub struct QuantModel {
+    pub cfg: LlamaConfig,
+    pub tok_emb: QuantizedTensor,
+    pub layers: Vec<QuantLayer>,
+    pub final_norm: Vec<f32>,
+    pub cls: QuantizedTensor,
+}
+
+/// One float32 layer (W32A32 baseline for Table V).
+#[derive(Clone, Debug)]
+pub struct FloatLayer {
+    pub att_norm: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub w3: Vec<f32>,
+}
+
+/// Full float model.
+#[derive(Clone, Debug)]
+pub struct FloatModel {
+    pub cfg: LlamaConfig,
+    pub tok_emb: Vec<f32>,
+    pub layers: Vec<FloatLayer>,
+    pub final_norm: Vec<f32>,
+    pub cls: Vec<f32>,
+}
+
+impl QuantModel {
+    /// Synthetic quantized model with N(0, std)-shaped weights, used for
+    /// the TinyLlama-geometry performance experiments (DESIGN.md §5.2).
+    pub fn synthetic(cfg: LlamaConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let gs = cfg.gs;
+        let std = 0.02f32;
+        let mk = |rng: &mut Rng, rows: usize, cols: usize| {
+            // draw int8 + scales directly: statistically equivalent to
+            // quantizing N(0, std) weights, ~30x faster to build at 1.1B
+            let q = rng.i8_vec(rows * cols);
+            let s = (0..rows * cols / gs)
+                .map(|_| (rng.next_f32() * 0.5 + 0.75) * (3.0 * std / 127.0))
+                .collect();
+            QuantizedTensor { q, s, rows, cols, gs }
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| QuantLayer {
+                att_norm: vec![1.0; cfg.dim],
+                wqkv: mk(&mut rng, cfg.dim + 2 * cfg.kv_dim(), cfg.dim),
+                wo: mk(&mut rng, cfg.dim, cfg.dim),
+                ffn_norm: vec![1.0; cfg.dim],
+                w13: mk(&mut rng, 2 * cfg.hidden_dim, cfg.dim),
+                w2: mk(&mut rng, cfg.dim, cfg.hidden_dim),
+            })
+            .collect();
+        QuantModel {
+            cfg,
+            tok_emb: mk(&mut rng, cfg.vocab_size, cfg.dim),
+            layers,
+            final_norm: vec![1.0; cfg.dim],
+            cls: mk(&mut rng, cfg.vocab_size, cfg.dim),
+        }
+    }
+
+    /// Quantize a float model (post-training quantization, paper §III-A).
+    pub fn from_float(fm: &FloatModel) -> Self {
+        let cfg = fm.cfg;
+        let gs = cfg.gs;
+        let kv = cfg.kv_dim();
+        let q = |data: &[f32], rows: usize, cols: usize| {
+            QuantizedTensor::from_f32(data, rows, cols, gs)
+        };
+        let layers = fm
+            .layers
+            .iter()
+            .map(|l| {
+                let wq = q(&l.wq, cfg.dim, cfg.dim);
+                let wk = q(&l.wk, kv, cfg.dim);
+                let wv = q(&l.wv, kv, cfg.dim);
+                let w1 = q(&l.w1, cfg.hidden_dim, cfg.dim);
+                let w3 = q(&l.w3, cfg.hidden_dim, cfg.dim);
+                QuantLayer {
+                    att_norm: l.att_norm.clone(),
+                    wqkv: QuantizedTensor::concat_rows(&[&wq, &wk, &wv]),
+                    wo: q(&l.wo, cfg.dim, cfg.dim),
+                    ffn_norm: l.ffn_norm.clone(),
+                    w13: QuantizedTensor::concat_rows(&[&w1, &w3]),
+                    w2: q(&l.w2, cfg.dim, cfg.hidden_dim),
+                }
+            })
+            .collect();
+        QuantModel {
+            cfg,
+            tok_emb: q(&fm.tok_emb, cfg.vocab_size, cfg.dim),
+            layers,
+            final_norm: fm.final_norm.clone(),
+            cls: q(&fm.cls, cfg.vocab_size, cfg.dim),
+        }
+    }
+
+    pub fn total_stream_bytes(&self) -> usize {
+        self.tok_emb.stream_bytes()
+            + self.cls.stream_bytes()
+            + 4 * self.final_norm.len()
+            + self.layers.iter().map(|l| l.stream_bytes()).sum::<usize>()
+    }
+}
+
+impl FloatModel {
+    /// Small random float model for tests.
+    pub fn random(cfg: LlamaConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let std = 0.02f32;
+        let kv = cfg.kv_dim();
+        let layers = (0..cfg.n_layers)
+            .map(|_| FloatLayer {
+                att_norm: vec![1.0; cfg.dim],
+                wq: rng.normal_vec(cfg.dim * cfg.dim, std),
+                wk: rng.normal_vec(kv * cfg.dim, std),
+                wv: rng.normal_vec(kv * cfg.dim, std),
+                wo: rng.normal_vec(cfg.dim * cfg.dim, std),
+                ffn_norm: vec![1.0; cfg.dim],
+                w1: rng.normal_vec(cfg.hidden_dim * cfg.dim, std),
+                w2: rng.normal_vec(cfg.dim * cfg.hidden_dim, std),
+                w3: rng.normal_vec(cfg.hidden_dim * cfg.dim, std),
+            })
+            .collect();
+        FloatModel {
+            cfg,
+            tok_emb: rng.normal_vec(cfg.vocab_size * cfg.dim, std),
+            layers,
+            final_norm: vec![1.0; cfg.dim],
+            cls: rng.normal_vec(cfg.vocab_size * cfg.dim, std),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::NANO;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        }
+    }
+
+    #[test]
+    fn from_float_fuses_shapes() {
+        let cfg = tiny_cfg();
+        let fm = FloatModel::random(cfg, 1);
+        let qm = QuantModel::from_float(&fm);
+        assert_eq!(qm.layers.len(), 2);
+        assert_eq!(qm.layers[0].wqkv.rows, cfg.dim + 2 * cfg.kv_dim());
+        assert_eq!(qm.layers[0].wqkv.cols, cfg.dim);
+        assert_eq!(qm.layers[0].w13.rows, 2 * cfg.hidden_dim);
+        assert_eq!(qm.layers[0].w2.cols, cfg.hidden_dim);
+    }
+
+    #[test]
+    fn fused_qkv_rows_match_parts() {
+        let cfg = tiny_cfg();
+        let fm = FloatModel::random(cfg, 2);
+        let qm = QuantModel::from_float(&fm);
+        let wq = QuantizedTensor::from_f32(&fm.layers[0].wq, cfg.dim, cfg.dim, cfg.gs);
+        // first dim rows of fused tensor == standalone Wq quantization
+        assert_eq!(&qm.layers[0].wqkv.q[..wq.q.len()], &wq.q[..]);
+        assert_eq!(&qm.layers[0].wqkv.s[..wq.s.len()], &wq.s[..]);
+    }
+
+    #[test]
+    fn synthetic_model_shapes() {
+        let qm = QuantModel::synthetic(NANO, 3);
+        assert_eq!(qm.tok_emb.rows, NANO.vocab_size);
+        assert_eq!(qm.layers.len(), NANO.n_layers);
+        assert_eq!(qm.layers[0].w2.cols, NANO.hidden_dim);
+    }
+
+    #[test]
+    fn stream_bytes_consistent_with_config() {
+        let qm = QuantModel::synthetic(NANO, 4);
+        let per_layer = qm.layers[0].stream_bytes();
+        assert_eq!(per_layer, NANO.layer_stream_bytes());
+    }
+
+    #[test]
+    fn quantized_model_4x_smaller() {
+        let cfg = tiny_cfg();
+        let fm = FloatModel::random(cfg, 5);
+        let qm = QuantModel::from_float(&fm);
+        let float_bytes = cfg.param_count() * 4;
+        let q_bytes = qm.total_stream_bytes();
+        let ratio = float_bytes as f64 / q_bytes as f64;
+        assert!(ratio > 3.0 && ratio < 4.2, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,195 @@
+//! W32A32 float inference engine — the unquantized baseline of Table V.
+//!
+//! Same Algorithm-2 structure as the quantized engines, but every matvec is
+//! plain f32.  Used to measure the PPL delta caused by W8A8 quantization.
+
+use anyhow::Result;
+
+use crate::model::{FloatModel, KvCache};
+use crate::tensor;
+
+/// Incremental float forward pass with KV cache.
+pub struct FloatEngine {
+    pub model: FloatModel,
+    kv: KvCache,
+    // scratch
+    x: Vec<f32>,
+    xb: Vec<f32>,
+    qkv: Vec<f32>,
+    att_out: Vec<f32>,
+    h13: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl FloatEngine {
+    pub fn new(model: FloatModel) -> Self {
+        let cfg = model.cfg;
+        FloatEngine {
+            kv: KvCache::new(&cfg),
+            x: vec![0.0; cfg.dim],
+            xb: vec![0.0; cfg.dim],
+            qkv: vec![0.0; cfg.dim + 2 * cfg.kv_dim()],
+            att_out: vec![0.0; cfg.dim],
+            h13: vec![0.0; 2 * cfg.hidden_dim],
+            logits: vec![0.0; cfg.vocab_size],
+            model,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.kv.reset();
+    }
+
+    /// One decode step; returns the logits slice.
+    pub fn forward(&mut self, token: u32, pos: usize) -> Result<&[f32]> {
+        let cfg = self.model.cfg;
+        let (d, kv_d, hd) = (cfg.dim, cfg.kv_dim(), cfg.head_dim());
+        anyhow::ensure!((token as usize) < cfg.vocab_size, "token {token} out of range");
+        anyhow::ensure!(pos < cfg.seq_len, "pos {pos} >= seq_len");
+
+        self.x.copy_from_slice(&self.model.tok_emb[token as usize * d..(token as usize + 1) * d]);
+
+        for li in 0..cfg.n_layers {
+            let layer = &self.model.layers[li];
+            tensor::rmsnorm(&mut self.xb, &self.x, &layer.att_norm);
+            // fused QKV (single input vector, three matrices)
+            tensor::matvec_f32(&mut self.qkv[..d], &layer.wq, &self.xb);
+            tensor::matvec_f32(&mut self.qkv[d..d + kv_d], &layer.wk, &self.xb);
+            tensor::matvec_f32(&mut self.qkv[d + kv_d..], &layer.wv, &self.xb);
+            let (q, kvs) = self.qkv.split_at_mut(d);
+            let (k, v) = kvs.split_at_mut(kv_d);
+            tensor::rope(q, pos, hd);
+            tensor::rope(k, pos, hd);
+            self.kv.store(li, pos, k, v);
+
+            attention(&cfg, &self.kv, li, pos, q, &mut self.att_out);
+            tensor::matvec_f32(&mut self.xb, &layer.wo, &self.att_out);
+            tensor::add_assign(&mut self.x, &self.xb);
+
+            tensor::rmsnorm(&mut self.xb, &self.x, &layer.ffn_norm);
+            let h = cfg.hidden_dim;
+            tensor::matvec_f32(&mut self.h13[..h], &layer.w1, &self.xb);
+            tensor::matvec_f32(&mut self.h13[h..], &layer.w3, &self.xb);
+            let (h1, h3) = self.h13.split_at_mut(h);
+            tensor::swiglu(h1, h3);
+            tensor::matvec_f32(&mut self.xb, &layer.w2, h1);
+            tensor::add_assign(&mut self.x, &self.xb);
+        }
+
+        tensor::rmsnorm(&mut self.xb, &self.x, &self.model.final_norm);
+        tensor::matvec_f32(&mut self.logits, &self.model.cls, &self.xb);
+        Ok(&self.logits)
+    }
+}
+
+/// Multi-head GQA attention over the KV cache (shared by float and
+/// quantized engines — both run it on the PS, per the paper).
+pub fn attention(
+    cfg: &crate::model::LlamaConfig,
+    kv: &KvCache,
+    layer: usize,
+    pos: usize,
+    q: &[f32],
+    out: &mut [f32],
+) {
+    let hd = cfg.head_dim();
+    let rep = cfg.kv_rep();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; pos + 1];
+    for h in 0..cfg.n_heads {
+        let kv_h = h / rep;
+        let qh = &q[h * hd..(h + 1) * hd];
+        for (t, s) in scores.iter_mut().enumerate() {
+            *s = tensor::dot(kv.key(layer, t, kv_h, hd), qh) * scale;
+        }
+        tensor::softmax(&mut scores);
+        let oh = &mut out[h * hd..(h + 1) * hd];
+        oh.fill(0.0);
+        for (t, &p) in scores.iter().enumerate() {
+            let vh = kv.value(layer, t, kv_h, hd);
+            for i in 0..hd {
+                oh[i] += p * vh[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LlamaConfig;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        }
+    }
+
+    #[test]
+    fn forward_finite_and_deterministic() {
+        let fm = FloatModel::random(tiny_cfg(), 1);
+        let mut e1 = FloatEngine::new(fm.clone());
+        let mut e2 = FloatEngine::new(fm);
+        for (pos, tok) in [3u32, 9, 12, 1].iter().enumerate() {
+            let a = e1.forward(*tok, pos).unwrap().to_vec();
+            let b = e2.forward(*tok, pos).unwrap().to_vec();
+            assert_eq!(a, b);
+            assert!(a.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn context_changes_logits() {
+        let fm = FloatModel::random(tiny_cfg(), 2);
+        let mut e = FloatEngine::new(fm);
+        let l0 = e.forward(5, 0).unwrap().to_vec();
+        let l1 = e.forward(5, 1).unwrap().to_vec();
+        // same token, different position/context => different logits
+        assert_ne!(l0, l1);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let fm = FloatModel::random(tiny_cfg(), 3);
+        let mut e = FloatEngine::new(fm);
+        let first = e.forward(7, 0).unwrap().to_vec();
+        e.forward(8, 1).unwrap();
+        e.reset();
+        let again = e.forward(7, 0).unwrap().to_vec();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn invalid_token_rejected() {
+        let fm = FloatModel::random(tiny_cfg(), 4);
+        let mut e = FloatEngine::new(fm);
+        assert!(e.forward(9999, 0).is_err());
+    }
+
+    #[test]
+    fn attention_at_pos0_returns_v() {
+        // with a single cached position, softmax is 1 and out == V
+        let cfg = tiny_cfg();
+        let mut kv = KvCache::new(&cfg);
+        let k: Vec<f32> = (0..cfg.kv_dim()).map(|i| 0.1 * i as f32).collect();
+        let v: Vec<f32> = (0..cfg.kv_dim()).map(|i| -0.2 * i as f32).collect();
+        kv.store(0, 0, &k, &v);
+        let q = vec![0.3; cfg.dim];
+        let mut out = vec![0.0; cfg.dim];
+        attention(&cfg, &kv, 0, 0, &q, &mut out);
+        let hd = cfg.head_dim();
+        // both heads share kv head 0 (GQA): head h output == v[0..hd]
+        for h in 0..cfg.n_heads {
+            for i in 0..hd {
+                assert!((out[h * hd + i] - v[i]).abs() < 1e-6);
+            }
+        }
+    }
+}

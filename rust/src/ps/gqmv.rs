@@ -1,0 +1,257 @@
+//! CPU implementations of Algorithm 1 (GQMV) — the PS baseline.
+//!
+//! Both implementations keep the paper's exact cast chain
+//! (INT8→INT16 products, INT32 group sums, FP32 scaled accumulation in
+//! ascending group order), so they are bit-exact with the Pallas kernel,
+//! the numpy oracle and the dataflow simulator.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::quant::QuantizedTensor;
+use crate::util::ThreadPool;
+
+/// A GQMV execution backend.  `xq`/`xs` are the run-time-quantized
+/// activation; `w` the streamed weight matrix; `out` receives f32 rows.
+pub trait GqmvExec {
+    fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// One output row of Algorithm 1.
+#[inline]
+pub fn gqmv_row(xq: &[i8], xs: &[f32], wq_row: &[i8], ws_row: &[f32], gs: usize) -> f32 {
+    let groups = xq.len() / gs;
+    let mut sum = 0.0f32;
+    for g in 0..groups {
+        let base = g * gs;
+        // Iterator form lets LLVM drop the bounds checks and auto-vectorize
+        // the widening multiply-accumulate.  The i16 intermediate product
+        // is exact (|q| <= 127 so |p| <= 16129) and mirrors the hardware's
+        // INT16 product lane (§IV-C).  Perf iterations (indexed loop,
+        // 4-wide manual unroll, i32 products) are logged in
+        // EXPERIMENTS.md §Perf; this variant won.
+        let group_sum: i32 = wq_row[base..base + gs]
+            .iter()
+            .zip(&xq[base..base + gs])
+            .map(|(&w, &x)| ((w as i16) * (x as i16)) as i32)
+            .sum();
+        // float_scale (= ws ⊙ xs) is computed FIRST, then applied to the
+        // group sum — the accumulate-stage order of the hardware (§IV-D).
+        // Every backend uses this exact association so results are
+        // bit-identical across scalar/threaded/dataflow/Pallas paths.
+        sum += group_sum as f32 * (ws_row[g] * xs[g]);
+    }
+    sum
+}
+
+/// Single-threaded reference implementation.
+#[derive(Default)]
+pub struct ScalarGqmv;
+
+impl GqmvExec for ScalarGqmv {
+    fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
+        check_shapes(xq, xs, w, out)?;
+        let gpr = w.groups_per_row();
+        for i in 0..w.rows {
+            out[i] = gqmv_row(
+                xq,
+                xs,
+                &w.q[i * w.cols..(i + 1) * w.cols],
+                &w.s[i * gpr..(i + 1) * gpr],
+                w.gs,
+            );
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "ps-scalar"
+    }
+}
+
+/// Row-parallel implementation — the OpenMP `parallel for` analogue.
+/// The paper's PS baseline uses all four A53 cores; pool size is the knob.
+pub struct ThreadedGqmv {
+    pool: Arc<ThreadPool>,
+    /// Matrices below this many MACs run on the calling thread: dispatching
+    /// the pool costs ~30 us, which scalar GQMV beats on anything under
+    /// ~1 MMAC (every nano-model matrix).  Measured in EXPERIMENTS.md §Perf.
+    pub min_parallel_macs: usize,
+}
+
+impl ThreadedGqmv {
+    pub fn new(pool: Arc<ThreadPool>) -> Self {
+        ThreadedGqmv { pool, min_parallel_macs: 1 << 20 }
+    }
+}
+
+impl GqmvExec for ThreadedGqmv {
+    fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
+        check_shapes(xq, xs, w, out)?;
+        let gpr = w.groups_per_row();
+        let serial_below = if w.rows * w.cols < self.min_parallel_macs { w.rows + 1 } else { 0 };
+        let out_ptr = SendMutPtr(out.as_mut_ptr());
+        self.pool.parallel_for(w.rows, serial_below, |range| {
+            let p = &out_ptr;
+            for i in range {
+                let v = gqmv_row(
+                    xq,
+                    xs,
+                    &w.q[i * w.cols..(i + 1) * w.cols],
+                    &w.s[i * gpr..(i + 1) * gpr],
+                    w.gs,
+                );
+                // SAFETY: each row index i is visited by exactly one chunk.
+                unsafe { *p.0.add(i) = v };
+            }
+        });
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "ps-threaded"
+    }
+}
+
+struct SendMutPtr(*mut f32);
+unsafe impl Sync for SendMutPtr {}
+
+pub(crate) fn check_shapes(
+    xq: &[i8],
+    xs: &[f32],
+    w: &QuantizedTensor,
+    out: &mut [f32],
+) -> Result<()> {
+    if xq.len() != w.cols {
+        anyhow::bail!("xq len {} != cols {}", xq.len(), w.cols);
+    }
+    if xs.len() != w.cols / w.gs {
+        anyhow::bail!("xs len {} != groups {}", xs.len(), w.cols / w.gs);
+    }
+    if out.len() != w.rows {
+        anyhow::bail!("out len {} != rows {}", out.len(), w.rows);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_activation;
+    use crate::util::Rng;
+
+    fn random_case(m: usize, n: usize, gs: usize, seed: u64) -> (Vec<i8>, Vec<f32>, QuantizedTensor) {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(m * n, 0.5);
+        let x = rng.normal_vec(n, 1.0);
+        let wt = QuantizedTensor::from_f32(&w, m, n, gs);
+        let (xq, xs) = quantize_activation(&x, gs);
+        (xq, xs, wt)
+    }
+
+    #[test]
+    fn scalar_matches_manual_small() {
+        // 1 row, 1 group of 4, hand-computed
+        let w = QuantizedTensor {
+            q: vec![1, -2, 3, 4],
+            s: vec![0.5],
+            rows: 1,
+            cols: 4,
+            gs: 4,
+        };
+        let xq = vec![10i8, 20, -30, 40];
+        let xs = vec![0.1f32];
+        let mut out = vec![0.0];
+        ScalarGqmv.gqmv(&xq, &xs, &w, &mut out).unwrap();
+        // group_sum = 10 - 40 - 90 + 160 = 40; 40 * 0.5 * 0.1 = 2.0
+        assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threaded_matches_scalar() {
+        let pool = Arc::new(ThreadPool::new(4));
+        for (m, n, gs) in [(8, 256, 256), (512, 256, 256), (256, 768, 256), (40, 512, 128)] {
+            let (xq, xs, w) = random_case(m, n, gs, (m + n) as u64);
+            let mut a = vec![0.0; m];
+            let mut b = vec![0.0; m];
+            ScalarGqmv.gqmv(&xq, &xs, &w, &mut a).unwrap();
+            let mut th = ThreadedGqmv::new(pool.clone());
+            th.min_parallel_macs = 0; // force threading
+            th.gqmv(&xq, &xs, &w, &mut b).unwrap();
+            assert_eq!(a, b, "m={m} n={n} gs={gs}");
+        }
+    }
+
+    #[test]
+    fn extreme_values_no_overflow() {
+        // per-group i32 sum may reach 256 * 16129 ~ 4.1e6, far below i32 max
+        let gs = 256;
+        let n = 2048;
+        let w = QuantizedTensor {
+            q: vec![127i8; n],
+            s: vec![0.01; n / gs],
+            rows: 1,
+            cols: n,
+            gs,
+        };
+        let xq = vec![127i8; n];
+        let xs = vec![0.02f32; n / gs];
+        let mut out = vec![0.0];
+        ScalarGqmv.gqmv(&xq, &xs, &w, &mut out).unwrap();
+        let expect = 127.0 * 127.0 * n as f32 * 0.01 * 0.02;
+        assert!((out[0] - expect).abs() / expect < 1e-5);
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let (xq, xs, w) = random_case(8, 256, 256, 1);
+        let mut out = vec![0.0; 8];
+        assert!(ScalarGqmv.gqmv(&xq[..128], &xs, &w, &mut out).is_err());
+        assert!(ScalarGqmv.gqmv(&xq, &xs[..0], &w, &mut out).is_err());
+        let mut short = vec![0.0; 4];
+        assert!(ScalarGqmv.gqmv(&xq, &xs, &w, &mut short).is_err());
+    }
+
+    #[test]
+    fn matches_golden_fixture_if_present() {
+        // artifacts/golden_gqmv_*.bin are written by python aot.py from the
+        // numpy oracle; when built, verify bit-level agreement.
+        let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let paths = ["xq", "xs", "wq", "ws", "out"]
+            .map(|n| art.join(format!("golden_gqmv_{n}.bin")));
+        if !paths.iter().all(|p| p.exists()) {
+            eprintln!("skipping golden fixture test (artifacts not built)");
+            return;
+        }
+        let read_i8 = |p: &std::path::Path| -> Vec<i8> {
+            std::fs::read(p).unwrap().into_iter().map(|b| b as i8).collect()
+        };
+        let read_f32 = |p: &std::path::Path| -> Vec<f32> {
+            std::fs::read(p)
+                .unwrap()
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        let xq = read_i8(&paths[0]);
+        let xs = read_f32(&paths[1]);
+        let wq = read_i8(&paths[2]);
+        let ws = read_f32(&paths[3]);
+        let expect = read_f32(&paths[4]);
+        let (m, gs) = (expect.len(), 256);
+        let n = wq.len() / m;
+        let w = QuantizedTensor { q: wq, s: ws, rows: m, cols: n, gs };
+        let mut out = vec![0.0; m];
+        ScalarGqmv.gqmv(&xq, &xs, &w, &mut out).unwrap();
+        for i in 0..m {
+            assert!(
+                (out[i] - expect[i]).abs() <= 1e-5 + expect[i].abs() * 1e-6,
+                "row {i}: {} vs {}",
+                out[i],
+                expect[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PS-side compute: the ZCU102 processing-system baseline.
+//!
+//! The paper's comparison point runs the *same* W8A8-quantized TinyLlama
+//! entirely on the quad-core Cortex-A53 PS, with OpenMP parallelizing the
+//! GQMV row loop.  [`gqmv`] provides the scalar and threaded CPU
+//! implementations of Algorithm 1 (both bit-exact with the oracle), and
+//! [`float`] the W32A32 float engine used by Table V.
+
+pub mod float;
+pub mod gqmv;
+
+pub use gqmv::{GqmvExec, ScalarGqmv, ThreadedGqmv};

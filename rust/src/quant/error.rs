@@ -1,0 +1,77 @@
+//! Quantization error statistics — reproduces paper Table IV and the
+//! error-percentage figures quoted in §V-B (mean 3.30%, std 11.57%).
+
+use super::QuantizedTensor;
+use crate::util::OnlineStats;
+
+/// Statistics of |rhat - r| and of the relative error percentage.
+#[derive(Clone, Debug, Default)]
+pub struct QuantErrorStats {
+    pub abs: OnlineStats,
+    pub pct: OnlineStats,
+}
+
+impl QuantErrorStats {
+    /// Accumulate errors for one float tensor quantized at group size `gs`.
+    pub fn add_tensor(&mut self, data: &[f32], rows: usize, cols: usize, gs: usize) {
+        let t = QuantizedTensor::from_f32(data, rows, cols, gs);
+        let back = t.dequantize();
+        for i in 0..data.len() {
+            let err = (back[i] - data[i]).abs() as f64;
+            self.abs.push(err);
+            let r = data[i].abs() as f64;
+            if r > 1e-12 {
+                self.pct.push(err / r * 100.0);
+            }
+        }
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "max {:.6}  min {:.6}  mean {:.6}  std {:.6}  |  err%: mean {:.2}%  std {:.2}%",
+            self.abs.max(),
+            self.abs.min(),
+            self.abs.mean(),
+            self.abs.std(),
+            self.pct.mean(),
+            self.pct.std()
+        )
+    }
+}
+
+/// One-shot helper for a single tensor.
+pub fn error_stats(data: &[f32], rows: usize, cols: usize, gs: usize) -> QuantErrorStats {
+    let mut s = QuantErrorStats::default();
+    s.add_tensor(data, rows, cols, gs);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn normal_weights_error_scale() {
+        // For N(0, sigma) weights with GS=256, the group max is ~2.9 sigma,
+        // so scale ~ 2.9 sigma/127 and mean |err| ~ scale/4 ~ 0.0057 sigma.
+        let mut rng = Rng::new(1);
+        let sigma = 0.02f32; // typical trained-weight std
+        let data = rng.normal_vec(256 * 256, sigma);
+        let st = error_stats(&data, 256, 256, 256);
+        assert!(st.abs.max() < 3.0 * sigma as f64 / 127.0 * 2.0);
+        assert!(st.abs.mean() > 0.0);
+        assert!(st.abs.mean() < st.abs.max());
+        // paper-order percentages: a few percent mean
+        assert!(st.pct.mean() > 0.1 && st.pct.mean() < 20.0, "pct {}", st.pct.mean());
+    }
+
+    #[test]
+    fn exact_lattice_zero_error() {
+        // values already on the quantization lattice
+        let t = QuantizedTensor::from_f32(&vec![0.5, -0.5, 0.25, 0.0].repeat(16), 1, 64, 64);
+        let back = t.dequantize();
+        let st = error_stats(&back, 1, 64, 64);
+        assert!(st.abs.max() < 1e-7);
+    }
+}

@@ -1,0 +1,255 @@
+//! Group-wise symmetric INT8 quantization (paper §II-B, Eq. 1–2).
+//!
+//! Bit-exact twin of `python/compile/kernels/ref.py`:
+//!   scale  S = max(|r|_group) / 127
+//!   q      = clip(round_half_away(r / S), -127, 127)
+//!   rhat   = q * S
+//!
+//! `QuantizedTensor` stores a row-major (rows, cols) int8 matrix with one
+//! f32 scale per GS-sized group; rows are what GQMV iterates over, so a
+//! fused tensor (e.g. Wq‖Wk‖Wv) is just a row-wise concatenation.
+
+pub mod error;
+
+pub use error::{error_stats, QuantErrorStats};
+
+/// A group-quantized matrix (weights) or vector (activations, rows == 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedTensor {
+    pub q: Vec<i8>,
+    pub s: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    pub gs: usize,
+}
+
+impl QuantizedTensor {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols / self.gs
+    }
+
+    /// Quantize a row-major float matrix.
+    pub fn from_f32(data: &[f32], rows: usize, cols: usize, gs: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        assert!(cols % gs == 0, "cols={cols} not divisible by gs={gs}");
+        let n_groups = data.len() / gs;
+        let mut q = vec![0i8; data.len()];
+        let mut s = vec![0f32; n_groups];
+        for g in 0..n_groups {
+            let chunk = &data[g * gs..(g + 1) * gs];
+            let (qc, scale) = quantize_group(chunk);
+            q[g * gs..(g + 1) * gs].copy_from_slice(&qc);
+            s[g] = scale;
+        }
+        QuantizedTensor { q, s, rows, cols, gs }
+    }
+
+    /// Dequantize everything back to f32 (Eq. 2).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.q.len()];
+        for g in 0..self.s.len() {
+            let scale = self.s[g];
+            for k in 0..self.gs {
+                out[g * self.gs + k] = self.q[g * self.gs + k] as f32 * scale;
+            }
+        }
+        out
+    }
+
+    /// Dequantize a single row (used for the token-embedding lookup).
+    pub fn dequantize_row(&self, row: usize, out: &mut [f32]) {
+        assert!(row < self.rows);
+        assert_eq!(out.len(), self.cols);
+        let gpr = self.groups_per_row();
+        for j in 0..gpr {
+            let scale = self.s[row * gpr + j];
+            let base = row * self.cols + j * self.gs;
+            for k in 0..self.gs {
+                out[j * self.gs + k] = self.q[base + k] as f32 * scale;
+            }
+        }
+    }
+
+    /// Row-wise concatenation (paper §III-B fuses Wq‖Wk‖Wv and W1‖W3 so a
+    /// single kernel launch consumes a shared input vector).
+    pub fn concat_rows(parts: &[&QuantizedTensor]) -> Self {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let gs = parts[0].gs;
+        for p in parts {
+            assert_eq!(p.cols, cols);
+            assert_eq!(p.gs, gs);
+        }
+        let rows = parts.iter().map(|p| p.rows).sum();
+        let mut q = Vec::with_capacity(rows * cols);
+        let mut s = Vec::with_capacity(rows * cols / gs);
+        for p in parts {
+            q.extend_from_slice(&p.q);
+            s.extend_from_slice(&p.s);
+        }
+        QuantizedTensor { q, s, rows, cols, gs }
+    }
+
+    /// Bytes this tensor occupies in the streamed format (i8 data + f32
+    /// scales) — the quantity the AXI transfer model bills.
+    pub fn stream_bytes(&self) -> usize {
+        self.q.len() + 4 * self.s.len()
+    }
+}
+
+/// Round half away from zero — matches numpy-side `round_half_away` and is
+/// exactly `f32::round` semantics (kept explicit for documentation).
+#[inline]
+pub fn round_half_away(x: f32) -> f32 {
+    x.round()
+}
+
+/// Quantize one group, returning (int8 values, scale).
+pub fn quantize_group(chunk: &[f32]) -> (Vec<i8>, f32) {
+    let mut max = 0f32;
+    for &v in chunk {
+        max = max.max(v.abs());
+    }
+    let scale = max / 127.0;
+    let inv = if scale == 0.0 { 0.0 } else { 1.0 / scale };
+    let q = chunk
+        .iter()
+        .map(|&v| round_half_away(v * inv).clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+/// Quantize an activation vector into caller-provided buffers (the hot-path
+/// version: zero allocation per token).  x.len() must be a multiple of gs.
+pub fn quantize_activation_into(x: &[f32], gs: usize, q: &mut [i8], s: &mut [f32]) {
+    debug_assert_eq!(x.len() % gs, 0);
+    debug_assert_eq!(q.len(), x.len());
+    debug_assert_eq!(s.len(), x.len() / gs);
+    for g in 0..s.len() {
+        let chunk = &x[g * gs..(g + 1) * gs];
+        let mut max = 0f32;
+        for &v in chunk {
+            max = max.max(v.abs());
+        }
+        let scale = max / 127.0;
+        s[g] = scale;
+        let inv = if scale == 0.0 { 0.0 } else { 1.0 / scale };
+        let qc = &mut q[g * gs..(g + 1) * gs];
+        for k in 0..gs {
+            qc[k] = round_half_away(chunk[k] * inv).clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Convenience allocating wrapper around `quantize_activation_into`.
+pub fn quantize_activation(x: &[f32], gs: usize) -> (Vec<i8>, Vec<f32>) {
+    let mut q = vec![0i8; x.len()];
+    let mut s = vec![0f32; x.len() / gs];
+    quantize_activation_into(x, gs, &mut q, &mut s);
+    (q, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(1);
+        for gs in [32, 64, 256] {
+            let x = rng.normal_vec(4 * gs, 1.7);
+            let t = QuantizedTensor::from_f32(&x, 4, gs, gs);
+            let back = t.dequantize();
+            for g in 0..t.s.len() {
+                for k in 0..gs {
+                    let i = g * gs + k;
+                    assert!(
+                        (back[i] - x[i]).abs() <= t.s[g] / 2.0 + 1e-7,
+                        "err {} > S/2 {}",
+                        (back[i] - x[i]).abs(),
+                        t.s[g] / 2.0
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_value_maps_to_127() {
+        let mut x = vec![0.25f32; 64];
+        x[10] = -2.0; // group max
+        let (q, s) = quantize_group(&x);
+        assert_eq!(q[10], -127);
+        assert!((s - 2.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_group_quantizes_to_zero() {
+        let (q, s) = quantize_group(&[0.0; 32]);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn idempotent_on_lattice() {
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(256, 3.0);
+        let t = QuantizedTensor::from_f32(&x, 1, 256, 64);
+        let back = t.dequantize();
+        let t2 = QuantizedTensor::from_f32(&back, 1, 256, 64);
+        assert_eq!(t.q, t2.q);
+        for (a, b) in t.s.iter().zip(&t2.s) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn concat_rows_matches_block_layout() {
+        let mut rng = Rng::new(2);
+        let a = QuantizedTensor::from_f32(&rng.normal_vec(2 * 64, 1.0), 2, 64, 32);
+        let b = QuantizedTensor::from_f32(&rng.normal_vec(3 * 64, 1.0), 3, 64, 32);
+        let c = QuantizedTensor::concat_rows(&[&a, &b]);
+        assert_eq!(c.rows, 5);
+        assert_eq!(&c.q[..a.q.len()], &a.q[..]);
+        assert_eq!(&c.q[a.q.len()..], &b.q[..]);
+        assert_eq!(&c.s[..a.s.len()], &a.s[..]);
+    }
+
+    #[test]
+    fn dequantize_row_matches_full() {
+        let mut rng = Rng::new(3);
+        let t = QuantizedTensor::from_f32(&rng.normal_vec(4 * 128, 1.0), 4, 128, 64);
+        let full = t.dequantize();
+        let mut row = vec![0f32; 128];
+        for r in 0..4 {
+            t.dequantize_row(r, &mut row);
+            assert_eq!(&row[..], &full[r * 128..(r + 1) * 128]);
+        }
+    }
+
+    #[test]
+    fn activation_into_matches_tensor_path() {
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(512, 2.0);
+        let (q, s) = quantize_activation(&x, 256);
+        let t = QuantizedTensor::from_f32(&x, 1, 512, 256);
+        assert_eq!(q, t.q);
+        assert_eq!(s, t.s);
+    }
+
+    #[test]
+    fn round_half_away_semantics() {
+        assert_eq!(round_half_away(0.5), 1.0);
+        assert_eq!(round_half_away(-0.5), -1.0);
+        assert_eq!(round_half_away(2.5), 3.0);
+        assert_eq!(round_half_away(-2.5), -3.0);
+        assert_eq!(round_half_away(2.4), 2.0);
+    }
+
+    #[test]
+    fn stream_bytes_accounts_scales() {
+        let t = QuantizedTensor::from_f32(&vec![1.0; 512], 2, 256, 256);
+        assert_eq!(t.stream_bytes(), 512 + 4 * 2);
+    }
+}

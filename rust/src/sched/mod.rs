@@ -1,0 +1,316 @@
+//! Task-level weight-streaming scheduler (paper §III-B, Fig. 2).
+//!
+//! The quantized model lives in "DDR" (the LFQ8 file / an in-memory layer
+//! store); only a small number of per-layer buffers exist device-side.
+//! For every token, each layer's weights must be staged host→device before
+//! its GQMV kernels can run.  Two schedules:
+//!
+//! * **Sync** — stage layer *l*, then compute layer *l* (Fig. 2 top).
+//! * **Async** — while layer *l* computes, a prefetch thread stages layer
+//!   *l+1* (wrapping to layer 0 for the next token), hiding the transfer
+//!   behind the kernel (Fig. 2 bottom).  First-layer weights are staged at
+//!   start-up, exactly as the paper initializes its buffers.
+//!
+//! The same module also provides the *modeled* timeline
+//! ([`sim_token_time`]) used to regenerate Fig. 2 / Table VI at paper
+//! scale, where transfer and kernel times come from the AXI and dataflow
+//! models rather than wall-clock.
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::Q8LayerSource;
+use crate::fpga::{AxiModel, PlConfig};
+use crate::model::{LlamaConfig, MatKind, QuantLayer};
+use crate::runtime::{DeviceWeights, Runtime};
+
+/// Scheduling policy for weight staging.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    Sync,
+    Async,
+}
+
+/// A layer staged on the device: host copies (norm vectors + shapes) plus
+/// device-resident GQMV weight buffers.
+pub struct PreparedLayer {
+    pub host: QuantLayer,
+    pub wqkv: DeviceWeights,
+    pub wo: DeviceWeights,
+    pub w13: DeviceWeights,
+    pub w2: DeviceWeights,
+}
+
+/// Source of host-side layer weights ("DDR").
+pub trait LayerFetcher: Send {
+    fn fetch(&mut self, layer: usize) -> Result<QuantLayer>;
+    fn n_layers(&self) -> usize;
+}
+
+/// Streams layers from an LFQ8 file (real disk I/O per fetch).
+pub struct DiskFetcher {
+    src: Q8LayerSource,
+}
+
+impl DiskFetcher {
+    pub fn open(path: &std::path::Path) -> Result<Self> {
+        Ok(DiskFetcher { src: Q8LayerSource::open(path)? })
+    }
+
+    pub fn cfg(&self) -> LlamaConfig {
+        self.src.cfg
+    }
+}
+
+impl LayerFetcher for DiskFetcher {
+    fn fetch(&mut self, layer: usize) -> Result<QuantLayer> {
+        self.src.fetch_layer(layer)
+    }
+
+    fn n_layers(&self) -> usize {
+        self.src.cfg.n_layers
+    }
+}
+
+/// Serves layers from memory, cloning on fetch (models the memcpy from the
+/// mmap'd model into the pinned kernel buffer — the staging the paper's
+/// async schedule hides).
+pub struct MemFetcher {
+    pub layers: Arc<Vec<QuantLayer>>,
+}
+
+impl LayerFetcher for MemFetcher {
+    fn fetch(&mut self, layer: usize) -> Result<QuantLayer> {
+        self.layers
+            .get(layer)
+            .cloned()
+            .with_context(|| format!("layer {layer} out of range"))
+    }
+
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+fn stage(rt: &Runtime, host: QuantLayer) -> Result<PreparedLayer> {
+    let wqkv = rt.upload(&host.wqkv)?;
+    let wo = rt.upload(&host.wo)?;
+    let w13 = rt.upload(&host.w13)?;
+    let w2 = rt.upload(&host.w2)?;
+    Ok(PreparedLayer { host, wqkv, wo, w13, w2 })
+}
+
+/// Double-buffered layer streamer.
+pub struct Streamer {
+    rt: Arc<Runtime>,
+    fetcher: Arc<Mutex<dyn LayerFetcher>>,
+    pub mode: SchedMode,
+    n_layers: usize,
+    current: Option<(usize, PreparedLayer)>,
+    pending: Option<(usize, JoinHandle<Result<(PreparedLayer, f64)>>)>,
+    /// Time the compute thread *blocked* on staging (visible latency).
+    pub blocked_transfer_s: f64,
+    /// Total staging work performed (foreground + background).
+    pub total_transfer_s: f64,
+    /// Number of layer stagings performed.
+    pub transfers: u64,
+}
+
+impl Streamer {
+    /// Create the streamer and stage layer 0 ("buffers initialized and
+    /// loaded at program start", paper §III-B).
+    pub fn new(
+        rt: Arc<Runtime>,
+        fetcher: impl LayerFetcher + 'static,
+        mode: SchedMode,
+    ) -> Result<Self> {
+        let n_layers = fetcher.n_layers();
+        let mut s = Streamer {
+            rt,
+            fetcher: Arc::new(Mutex::new(fetcher)),
+            mode,
+            n_layers,
+            current: None,
+            pending: None,
+            blocked_transfer_s: 0.0,
+            total_transfer_s: 0.0,
+            transfers: 0,
+        };
+        let t = Instant::now();
+        let l0 = s.fetch_and_stage(0)?;
+        s.total_transfer_s += t.elapsed().as_secs_f64();
+        s.transfers += 1;
+        s.current = Some((0, l0));
+        Ok(s)
+    }
+
+    fn fetch_and_stage(&self, li: usize) -> Result<PreparedLayer> {
+        let host = self.fetcher.lock().unwrap().fetch(li)?;
+        stage(&self.rt, host)
+    }
+
+    fn spawn_prefetch(&mut self, li: usize) {
+        let rt = Arc::clone(&self.rt);
+        let fetcher = Arc::clone(&self.fetcher);
+        let handle = std::thread::Builder::new()
+            .name(format!("llamaf-prefetch-{li}"))
+            .spawn(move || {
+                let t = Instant::now();
+                let host = fetcher.lock().unwrap().fetch(li)?;
+                let staged = stage(&rt, host)?;
+                Ok((staged, t.elapsed().as_secs_f64()))
+            })
+            .expect("spawn prefetch thread");
+        self.pending = Some((li, handle));
+    }
+
+    /// Obtain layer `li` for compute.  In async mode this also kicks off
+    /// the prefetch of the *next* layer (wrapping, so layer 0 of the next
+    /// token is staged during the current token's last layer).
+    pub fn layer(&mut self, li: usize) -> Result<&PreparedLayer> {
+        if li >= self.n_layers {
+            bail!("layer {li} out of range ({} layers)", self.n_layers);
+        }
+        let have = self.current.as_ref().map(|(i, _)| *i);
+        if have != Some(li) {
+            // need to obtain it
+            let staged = if let Some((pi, handle)) = self.pending.take() {
+                if pi == li {
+                    let t = Instant::now();
+                    let (lay, bg_s) =
+                        handle.join().map_err(|_| anyhow::anyhow!("prefetch panicked"))??;
+                    // we only *blocked* for the remaining join time; the
+                    // background staging work is billed to total.
+                    self.blocked_transfer_s += t.elapsed().as_secs_f64();
+                    self.total_transfer_s += bg_s;
+                    self.transfers += 1;
+                    lay
+                } else {
+                    // wrong prefetch (e.g. after reset): discard, fetch inline
+                    let _ = handle.join();
+                    let t = Instant::now();
+                    let lay = self.fetch_and_stage(li)?;
+                    let dt = t.elapsed().as_secs_f64();
+                    self.blocked_transfer_s += dt;
+                    self.total_transfer_s += dt;
+                    self.transfers += 1;
+                    lay
+                }
+            } else {
+                let t = Instant::now();
+                let lay = self.fetch_and_stage(li)?;
+                let dt = t.elapsed().as_secs_f64();
+                self.blocked_transfer_s += dt;
+                self.total_transfer_s += dt;
+                self.transfers += 1;
+                lay
+            };
+            self.current = Some((li, staged));
+        }
+        if self.mode == SchedMode::Async {
+            let next = (li + 1) % self.n_layers;
+            if self.pending.is_none() {
+                self.spawn_prefetch(next);
+            }
+        }
+        Ok(&self.current.as_ref().unwrap().1)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+}
+
+impl Drop for Streamer {
+    fn drop(&mut self) {
+        // A prefetch may still be in flight; join it so no thread touches
+        // PJRT state during process/engine teardown.
+        if let Some((_, handle)) = self.pending.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Modeled timelines (paper-scale Fig. 2 / Table VI)
+// ---------------------------------------------------------------------------
+
+/// Per-layer modeled times.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerTimes {
+    pub transfer_s: f64,
+    pub kernel_s: f64,
+}
+
+/// Kernel time of one layer = the four GQMV calls (Algorithm 2).
+pub fn model_layer_kernel_time(cfg: &LlamaConfig, pl: &PlConfig) -> f64 {
+    [MatKind::Qkv, MatKind::Wo, MatKind::W13, MatKind::W2]
+        .iter()
+        .map(|&k| {
+            let (m, n) = cfg.mat_shape(k);
+            pl.kernel_time_s(m, n, cfg.gs)
+        })
+        .sum()
+}
+
+/// Modeled per-layer transfer + kernel times.
+pub fn model_layer_times(cfg: &LlamaConfig, pl: &PlConfig, axi: &AxiModel) -> LayerTimes {
+    LayerTimes {
+        transfer_s: axi.staging_time(cfg.layer_stream_bytes()),
+        kernel_s: model_layer_kernel_time(cfg, pl),
+    }
+}
+
+/// Modeled time of one token's *matrix pipeline* (all layers + classifier)
+/// under each schedule.  Returns (sync_s, async_s).
+pub fn sim_token_time(cfg: &LlamaConfig, pl: &PlConfig, axi: &AxiModel) -> (f64, f64) {
+    let lt = model_layer_times(cfg, pl, axi);
+    let (mc, nc) = cfg.mat_shape(MatKind::Cls);
+    let cls = pl.kernel_time_s(mc, nc, cfg.gs);
+    let l = cfg.n_layers as f64;
+    // Sync: every layer pays transfer then kernel.
+    let sync = l * (lt.transfer_s + lt.kernel_s) + cls;
+    // Async: steady state pays max(transfer, kernel) per layer; transfers
+    // wrap across tokens so even layer 0 is prefetched.
+    let async_ = l * lt.transfer_s.max(lt.kernel_s) + cls;
+    (sync, async_)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TINYLLAMA_1_1B;
+
+    #[test]
+    fn async_never_slower_in_model() {
+        let (sync, async_) = sim_token_time(&TINYLLAMA_1_1B, &PlConfig::default(), &AxiModel::default());
+        assert!(async_ <= sync);
+    }
+
+    #[test]
+    fn paper_schedule_gain_shape() {
+        // Paper: async scheduling gives 55.6-57.9% tok/s improvement over
+        // no-scheduling *on the full token time*.  On the matrix pipeline
+        // alone the gain is larger; assert the direction and magnitude
+        // window here (full-token check lives in exp/table6).
+        let (sync, async_) = sim_token_time(&TINYLLAMA_1_1B, &PlConfig::default(), &AxiModel::default());
+        let gain = sync / async_;
+        assert!(gain > 1.3 && gain < 2.2, "gain {gain}");
+    }
+
+    #[test]
+    fn transfer_bound_regime() {
+        // TinyLlama staging (~26ms/layer) vs kernel (~20ms/layer): the
+        // design is transfer-bound, matching the paper's observation that
+        // async hides *kernel-side* stalls (transfer > kernel).
+        let lt = model_layer_times(&TINYLLAMA_1_1B, &PlConfig::default(), &AxiModel::default());
+        assert!(lt.transfer_s > lt.kernel_s * 0.8, "{lt:?}");
+        assert!(lt.transfer_s < lt.kernel_s * 2.5, "{lt:?}");
+    }
+
+    // Wall-clock Streamer behaviour is covered by rust/tests/ integration
+    // tests (requires PJRT runtime + artifacts).
+}

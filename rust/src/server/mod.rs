@@ -1,0 +1,178 @@
+//! Minimal line-oriented generation server (batch = 1, the paper's
+//! real-time embedded setting).
+//!
+//! Protocol (one request per line over TCP):
+//!   `GEN <steps> <prompt text...>`  →  one line: generated text
+//!   `PING`                          →  `PONG`
+//!   `QUIT`                          →  closes the connection
+//!
+//! Requests are served sequentially from a single engine — deliberately:
+//! the paper argues batch-1 latency is the constraint on embedded devices,
+//! so the server optimizes time-to-first-token over aggregate throughput.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{Context, Result};
+
+use crate::engine::forward::Engine;
+use crate::engine::generate::{generate, Sampler};
+use crate::tokenizer::Tokenizer;
+
+/// Serve until `max_requests` have been handled (None = forever).
+pub struct Server {
+    pub listener: TcpListener,
+    pub tokenizer: Tokenizer,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str, vocab_size: usize) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(Server { listener, tokenizer: Tokenizer::new(vocab_size) })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Run the accept loop on the calling thread.
+    pub fn serve(&self, engine: &mut dyn Engine, max_requests: Option<usize>) -> Result<usize> {
+        let mut handled = 0usize;
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            handled += self.handle_conn(stream, engine)?;
+            if let Some(max) = max_requests {
+                if handled >= max {
+                    break;
+                }
+            }
+        }
+        Ok(handled)
+    }
+
+    fn handle_conn(&self, stream: TcpStream, engine: &mut dyn Engine) -> Result<usize> {
+        let mut out = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        let mut handled = 0usize;
+        for line in reader.lines() {
+            let line = line?;
+            let reply = match self.handle_line(&line, engine) {
+                Ok(Some(r)) => r,
+                Ok(None) => break, // QUIT
+                Err(e) => format!("ERR {e}"),
+            };
+            handled += 1;
+            out.write_all(reply.as_bytes())?;
+            out.write_all(b"\n")?;
+            out.flush()?;
+        }
+        Ok(handled)
+    }
+
+    fn handle_line(&self, line: &str, engine: &mut dyn Engine) -> Result<Option<String>> {
+        let line = line.trim();
+        if line == "PING" {
+            return Ok(Some("PONG".into()));
+        }
+        if line == "QUIT" {
+            return Ok(None);
+        }
+        if let Some(rest) = line.strip_prefix("GEN ") {
+            let (steps_str, prompt) = rest
+                .split_once(' ')
+                .context("usage: GEN <steps> <prompt>")?;
+            let steps: usize = steps_str.parse().context("steps must be an integer")?;
+            anyhow::ensure!(steps > 0 && steps <= engine.cfg().seq_len, "bad step count");
+            let prompt_ids = self.tokenizer.encode(prompt, true);
+            let out = generate(engine, &prompt_ids, steps, Sampler::Greedy, false)?;
+            let text = self.tokenizer.decode(&out.generated);
+            return Ok(Some(format!(
+                "OK {:.3} tok/s | {}",
+                out.tok_per_s,
+                text.replace('\n', " ")
+            )));
+        }
+        anyhow::bail!("unknown command (GEN/PING/QUIT)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::forward::CpuEngine;
+    use crate::model::{FloatModel, LlamaConfig, QuantModel};
+    use crate::ps::ScalarGqmv;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn tiny_engine() -> CpuEngine {
+        let cfg = LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 512,
+            seq_len: 64,
+            gs: 32,
+        };
+        CpuEngine::new(
+            QuantModel::from_float(&FloatModel::random(cfg, 1)),
+            Box::new(ScalarGqmv),
+        )
+    }
+
+    #[test]
+    fn ping_gen_quit_roundtrip() {
+        let server = Server::bind("127.0.0.1:0", 512).unwrap();
+        let addr = server.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut engine = tiny_engine();
+            server.serve(&mut engine, Some(3)).unwrap()
+        });
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+
+        conn.write_all(b"PING\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+
+        line.clear();
+        conn.write_all(b"GEN 4 hello\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "{line}");
+
+        line.clear();
+        conn.write_all(b"GEN abc bad\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR "), "{line}");
+
+        conn.write_all(b"QUIT\n").unwrap();
+        drop(conn);
+        let handled = t.join().unwrap();
+        assert!(handled >= 3);
+    }
+
+    #[test]
+    fn unknown_command_is_error_not_crash() {
+        let server = Server::bind("127.0.0.1:0", 512).unwrap();
+        let addr = server.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut engine = tiny_engine();
+            server.serve(&mut engine, Some(1)).unwrap()
+        });
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(b"BOGUS\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR "));
+        // close the write half explicitly: `reader` holds a clone of the
+        // socket, so merely dropping `conn` would keep the fd open and the
+        // server's read loop alive.
+        conn.write_all(b"QUIT\n").unwrap();
+        drop(conn);
+        t.join().unwrap();
+    }
+}

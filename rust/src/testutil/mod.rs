@@ -1,0 +1,75 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `forall` runs a property across `iters` deterministic seeds; on failure
+//! it panics with the exact seed so the case can be replayed:
+//!
+//! ```rust,no_run
+//! use llamaf::testutil::forall;
+//! forall("quant roundtrip", 64, |rng| {
+//!     let x = rng.normal_vec(256, 1.0);
+//!     // ... return true if the property holds
+//!     !x.is_empty()
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Run `prop` for `iters` seeded cases; panic with the failing seed.
+pub fn forall<F>(name: &str, iters: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> bool,
+{
+    for seed in 0..iters {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if !prop(&mut rng) {
+            panic!("property '{name}' failed at seed index {seed} (replay: forall_one(\"{name}\", {seed}, prop))");
+        }
+    }
+}
+
+/// Replay a single seed index from a `forall` failure.
+pub fn forall_one<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> bool,
+{
+    let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    assert!(prop(&mut rng), "property '{name}' failed at seed index {seed}");
+}
+
+/// Relative-or-absolute closeness for float comparisons in properties.
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// All-elements closeness.
+pub fn all_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| close(x, y, rtol, atol))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("trivial", 16, |rng| rng.next_f64() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "seed index")]
+    fn forall_reports_seed() {
+        forall("always-false", 4, |_| false);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-9, 0.0, 1e-8));
+    }
+
+    #[test]
+    fn all_close_length_mismatch_fails() {
+        assert!(!all_close(&[1.0], &[1.0, 2.0], 1e-6, 1e-6));
+    }
+}

@@ -1,0 +1,92 @@
+//! Byte-level tokenizer — exact mirror of `python/compile/corpus.py`.
+//!
+//! ids: 0 = PAD, 1 = BOS, 2 = EOS, byte b -> b + 3.  The vocab is padded to
+//! a GS multiple (512 for nano) so the classifier matrix stays GQMV-able.
+
+pub const PAD_ID: u32 = 0;
+pub const BOS_ID: u32 = 1;
+pub const EOS_ID: u32 = 2;
+pub const BYTE_OFFSET: u32 = 3;
+
+/// Byte-level tokenizer with a fixed vocab size.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(vocab_size >= 256 + BYTE_OFFSET as usize);
+        Tokenizer { vocab_size }
+    }
+
+    pub fn encode(&self, text: &str, bos: bool) -> Vec<u32> {
+        let mut ids = Vec::with_capacity(text.len() + 1);
+        if bos {
+            ids.push(BOS_ID);
+        }
+        ids.extend(text.bytes().map(|b| b as u32 + BYTE_OFFSET));
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&i| i >= BYTE_OFFSET && i < 256 + BYTE_OFFSET)
+            .map(|&i| (i - BYTE_OFFSET) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode a single token (empty for specials).
+    pub fn decode_one(&self, id: u32) -> String {
+        self.decode(&[id])
+    }
+
+    pub fn is_special(&self, id: u32) -> bool {
+        id < BYTE_OFFSET
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new(512);
+        let text = "the quick fox? 42 _#\n ok";
+        let ids = t.encode(text, true);
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = Tokenizer::new(512);
+        let text = "héllo → 世界";
+        let ids = t.encode(text, false);
+        assert_eq!(ids.len(), text.len()); // bytes, not chars
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = Tokenizer::new(512);
+        let ids = vec![BOS_ID, 'h' as u32 + 3, EOS_ID, 'i' as u32 + 3, PAD_ID];
+        assert_eq!(t.decode(&ids), "hi");
+    }
+
+    #[test]
+    fn matches_python_ids() {
+        // python: corpus.encode("ab") == [1, 100, 101]
+        let t = Tokenizer::new(512);
+        assert_eq!(t.encode("ab", true), vec![1, 100, 101]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_small_vocab_rejected() {
+        Tokenizer::new(128);
+    }
+}

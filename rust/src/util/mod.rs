@@ -1,0 +1,14 @@
+//! Small self-contained substrates: PRNG, statistics, timers, thread pool.
+//!
+//! The offline build has no `rand`/`rayon`/`criterion`, so these are
+//! implemented from scratch and unit-tested here.
+
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use pool::ThreadPool;
+pub use rng::Rng;
+pub use stats::OnlineStats;
+pub use timer::Timer;

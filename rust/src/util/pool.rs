@@ -1,0 +1,206 @@
+//! Persistent scoped thread pool — the OpenMP analogue for the PS engine.
+//!
+//! The paper's PS baseline parallelizes GQMV row loops over the four
+//! Cortex-A53 cores with OpenMP (`#pragma omp parallel for`).  `rayon` is
+//! not available offline, so this is a small persistent pool with a scoped
+//! `parallel_for`: the calling thread blocks until every chunk completes,
+//! which is what makes lending non-`'static` closures to the workers sound.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Done {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Fixed-size persistent worker pool.
+pub struct ThreadPool {
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (the PS model uses 4, matching the A53 cluster).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<Job>();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("llamaf-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { senders, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Run `f` over `0..n` split into one contiguous chunk per worker and
+    /// block until all chunks finish.  `f` may borrow from the caller's
+    /// stack: the blocking wait guarantees those borrows outlive the jobs.
+    ///
+    /// Falls back to inline execution when `n < serial_below` (threading a
+    /// 256-row nano matvec costs more than it saves; see EXPERIMENTS.md
+    /// §Perf).
+    pub fn parallel_for<F>(&self, n: usize, serial_below: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let k = self.senders.len().min(n);
+        if n < serial_below || k == 1 {
+            f(0..n);
+            return;
+        }
+        let done = Arc::new(Done {
+            remaining: Mutex::new(k),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let chunk = n.div_ceil(k);
+        // SAFETY: every job signals `done` (even on panic, via Guard), and
+        // we block below until all k jobs have signalled, so the borrowed
+        // `f` outlives every use inside the workers.
+        let f_ptr: &(dyn Fn(Range<usize>) + Sync) = &f;
+        let f_static: &'static (dyn Fn(Range<usize>) + Sync) =
+            unsafe { std::mem::transmute(f_ptr) };
+        for (i, tx) in self.senders.iter().take(k).enumerate() {
+            let lo = i * chunk;
+            let hi = ((i + 1) * chunk).min(n);
+            let done = Arc::clone(&done);
+            let job: Job = Box::new(move || {
+                struct Guard(Arc<Done>);
+                impl Drop for Guard {
+                    fn drop(&mut self) {
+                        if std::thread::panicking() {
+                            self.0.panicked.store(true, Ordering::SeqCst);
+                        }
+                        let mut rem = self.0.remaining.lock().unwrap();
+                        *rem -= 1;
+                        if *rem == 0 {
+                            self.0.cv.notify_all();
+                        }
+                    }
+                }
+                let _guard = Guard(done);
+                if lo < hi {
+                    f_static(lo..hi);
+                }
+            });
+            tx.send(job).expect("worker channel closed");
+        }
+        let mut rem = done.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = done.cv.wait(rem).unwrap();
+        }
+        drop(rem);
+        if done.panicked.load(Ordering::SeqCst) {
+            panic!("worker panicked inside parallel_for");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes channels, workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(1000, 0, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn serial_fallback() {
+        let pool = ThreadPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.parallel_for(10, 100, |range| {
+            count.fetch_add(range.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn reusable_many_times() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let sum = AtomicUsize::new(0);
+            pool.parallel_for(round + 1, 0, |range| {
+                sum.fetch_add(range.map(|i| i + 1).sum::<usize>(), Ordering::Relaxed);
+            });
+            let n = round + 1;
+            assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn writes_to_disjoint_slices() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0u64; 4096];
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.parallel_for(4096, 0, |range| {
+            let p = &ptr;
+            for i in range {
+                // SAFETY: ranges are disjoint per worker.
+                unsafe { *p.0.add(i) = i as u64 * 3 };
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 * 3));
+    }
+
+    struct SendPtr(*mut u64);
+    unsafe impl Sync for SendPtr {}
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn propagates_panic() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(2, 0, |range| {
+            if range.start == 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn n_zero_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, 0, |_| panic!("should not run"));
+    }
+}

@@ -1,0 +1,173 @@
+//! Cross-module property tests using the in-repo `testutil` framework
+//! (proptest is unavailable offline).  These cover the coordinator
+//! invariants: GQMV backend equivalence, quantization round-trip bounds,
+//! checkpoint round-trips, scheduler-model monotonicity.
+
+use std::sync::Arc;
+
+use llamaf::fpga::{AxiModel, DataflowSim, PlConfig};
+use llamaf::model::{FloatModel, LlamaConfig, QuantModel};
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::{ScalarGqmv, ThreadedGqmv};
+use llamaf::quant::{quantize_activation, QuantizedTensor};
+use llamaf::sched::sim_token_time;
+use llamaf::testutil::{all_close, forall};
+use llamaf::util::{Rng, ThreadPool};
+
+fn random_gqmv_case(rng: &mut Rng) -> (Vec<i8>, Vec<f32>, QuantizedTensor) {
+    let gs = *rng.choose(&[16usize, 32, 64, 128, 256]);
+    let groups = rng.below(5) as usize + 1;
+    let n = gs * groups;
+    let m = (rng.below(48) as usize + 1) * 8;
+    let scale = *rng.choose(&[0.01f32, 0.3, 1.0, 30.0]);
+    let w = QuantizedTensor::from_f32(&rng.normal_vec(m * n, scale), m, n, gs);
+    let (xq, xs) = quantize_activation(&rng.normal_vec(n, scale), gs);
+    (xq, xs, w)
+}
+
+#[test]
+fn prop_all_gqmv_backends_bit_identical() {
+    let pool = Arc::new(ThreadPool::new(4));
+    forall("gqmv backends identical", 48, |rng| {
+        let (xq, xs, w) = random_gqmv_case(rng);
+        let m = w.rows;
+        let mut scalar = vec![0.0f32; m];
+        ScalarGqmv.gqmv(&xq, &xs, &w, &mut scalar).unwrap();
+
+        let mut th = ThreadedGqmv::new(pool.clone());
+        th.min_parallel_macs = 0;
+        let mut threaded = vec![0.0f32; m];
+        th.gqmv(&xq, &xs, &w, &mut threaded).unwrap();
+        if scalar != threaded {
+            return false;
+        }
+        let mut sim_out = vec![0.0f32; m];
+        DataflowSim::new(PlConfig::default()).gqmv(&xq, &xs, &w, &mut sim_out).unwrap();
+        scalar == sim_out
+    });
+}
+
+#[test]
+fn prop_quant_roundtrip_bounded() {
+    forall("quant roundtrip |err| <= S/2", 64, |rng| {
+        let gs = *rng.choose(&[16usize, 64, 256]);
+        let groups = rng.below(6) as usize + 1;
+        let scale = *rng.choose(&[1e-3f32, 1.0, 1e3]);
+        let x = rng.normal_vec(gs * groups, scale);
+        let t = QuantizedTensor::from_f32(&x, 1, x.len(), gs);
+        let back = t.dequantize();
+        (0..x.len()).all(|i| {
+            let g = i / gs;
+            (back[i] - x[i]).abs() <= t.s[g] / 2.0 * 1.0001 + 1e-12
+        })
+    });
+}
+
+#[test]
+fn prop_gqmv_linearity_in_weight_scale() {
+    // doubling every weight scale doubles the output exactly (f32*2 exact)
+    forall("gqmv scale linearity", 32, |rng| {
+        let (xq, xs, w) = random_gqmv_case(rng);
+        let mut out1 = vec![0.0f32; w.rows];
+        ScalarGqmv.gqmv(&xq, &xs, &w, &mut out1).unwrap();
+        let w2 = QuantizedTensor {
+            s: w.s.iter().map(|&s| s * 2.0).collect(),
+            ..w.clone()
+        };
+        let mut out2 = vec![0.0f32; w.rows];
+        ScalarGqmv.gqmv(&xq, &xs, &w2, &mut out2).unwrap();
+        let doubled: Vec<f32> = out1.iter().map(|&v| v * 2.0).collect();
+        all_close(&doubled, &out2, 1e-6, 1e-9)
+    });
+}
+
+#[test]
+fn prop_gqmv_zero_activation_zero_output() {
+    forall("gqmv zero x -> zero out", 16, |rng| {
+        let (_, _, w) = random_gqmv_case(rng);
+        let xq = vec![0i8; w.cols];
+        let xs = vec![0.0f32; w.cols / w.gs];
+        let mut out = vec![1.0f32; w.rows];
+        ScalarGqmv.gqmv(&xq, &xs, &w, &mut out).unwrap();
+        out.iter().all(|&v| v == 0.0)
+    });
+}
+
+#[test]
+fn prop_ckpt_q8_roundtrip() {
+    forall("lfq8 write/read roundtrip", 8, |rng| {
+        let cfg = LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: (rng.below(3) + 1) as usize,
+            n_heads: 2,
+            n_kv_heads: *rng.choose(&[1usize, 2]),
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        };
+        let fm = FloatModel::random(cfg, rng.next_u64());
+        let path = std::env::temp_dir().join(format!("llamaf_prop_{}.lfq8", rng.next_u64()));
+        llamaf::ckpt::write_q8_from_float(&path, &fm).unwrap();
+        let from_file = llamaf::ckpt::read_q8(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let from_mem = QuantModel::from_float(&fm);
+        from_file.tok_emb == from_mem.tok_emb
+            && from_file.cls == from_mem.cls
+            && from_file
+                .layers
+                .iter()
+                .zip(&from_mem.layers)
+                .all(|(a, b)| a.wqkv == b.wqkv && a.wo == b.wo && a.w13 == b.w13 && a.w2 == b.w2)
+    });
+}
+
+#[test]
+fn prop_sched_model_async_never_slower() {
+    forall("async <= sync in timeline model", 32, |rng| {
+        let cfg = LlamaConfig {
+            dim: 256 * (rng.below(8) + 1) as usize,
+            hidden_dim: 256 * (rng.below(24) + 1) as usize,
+            n_layers: (rng.below(30) + 1) as usize,
+            n_heads: 4,
+            n_kv_heads: 2,
+            vocab_size: 256 * (rng.below(100) + 2) as usize,
+            seq_len: 2048,
+            gs: 256,
+        };
+        if cfg.validate().is_err() {
+            return true; // skip invalid draws
+        }
+        let (sync_s, async_s) = sim_token_time(&cfg, &PlConfig::default(), &AxiModel::default());
+        async_s <= sync_s && async_s > 0.0
+    });
+}
+
+#[test]
+fn prop_engine_backends_same_tokens() {
+    // whole-engine equivalence on random tiny models
+    use llamaf::engine::forward::CpuEngine;
+    use llamaf::engine::generate::{generate, Sampler};
+    let pool = Arc::new(ThreadPool::new(4));
+    forall("cpu engines same greedy tokens", 6, |rng| {
+        let cfg = LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        };
+        let qm = QuantModel::from_float(&FloatModel::random(cfg, rng.next_u64()));
+        let prompt = vec![1u32, rng.below(60) as u32 + 3, rng.below(60) as u32 + 3];
+        let mut e1 = CpuEngine::new(qm.clone(), Box::new(ScalarGqmv));
+        let mut th = ThreadedGqmv::new(pool.clone());
+        th.min_parallel_macs = 0;
+        let mut e2 = CpuEngine::new(qm, Box::new(th));
+        let a = generate(&mut e1, &prompt, 10, Sampler::Greedy, false).unwrap();
+        let b = generate(&mut e2, &prompt, 10, Sampler::Greedy, false).unwrap();
+        a.ids == b.ids
+    });
+}

@@ -11,9 +11,9 @@ use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::Result;
+use llamaf::engine::forward::Engine;
 use llamaf::engine::generate::{generate, Sampler};
 use llamaf::engine::llamaf::LlamafEngine;
-use llamaf::engine::forward::Engine;
 use llamaf::runtime::Runtime;
 use llamaf::sched::SchedMode;
 use llamaf::tokenizer::Tokenizer;

@@ -1,8 +1,18 @@
 //! Algorithm 2 on resident weights with a pluggable CPU GQMV backend.
+//!
+//! The quantized weights are immutable and shared: `CpuEngine` holds its
+//! [`QuantModel`] behind an `Arc`, so N engines (one per serving worker)
+//! reference one copy — the scarce resource on an embedded board is weight
+//! memory, not compute.  Mutable decode state lives in a
+//! [`Session`](crate::engine::session::Session) (KV cache + position); the
+//! engine keeps a private one for the classic batch-1 [`Engine`] API and
+//! can also drive external sessions via [`CpuEngine::forward_session`].
 
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::engine::session::Session;
 use crate::metrics::ForwardProfile;
 use crate::model::{KvCache, LlamaConfig, QuantModel};
 use crate::ps::float::attention;
@@ -71,22 +81,131 @@ fn quant_gqmv(
     Ok(())
 }
 
-/// Resident-weight engine with a CPU GQMV backend.
+/// One full Algorithm-2 forward pass: shared weights in, per-session KV
+/// in/out, logits left in `s.logits`.  Free function so the engine can
+/// split-borrow its fields when driving either its own or an external
+/// session.
+#[allow(clippy::too_many_arguments)]
+fn forward_pass(
+    model: &QuantModel,
+    exec: &mut dyn GqmvExec,
+    s: &mut Scratch,
+    kv: &mut KvCache,
+    token: u32,
+    pos: usize,
+    prof: &mut ForwardProfile,
+) -> Result<()> {
+    let cfg = model.cfg;
+    let (d, kv_d, hd, gs) = (cfg.dim, cfg.kv_dim(), cfg.head_dim(), cfg.gs);
+    anyhow::ensure!((token as usize) < cfg.vocab_size, "token {token} out of range");
+    anyhow::ensure!(pos < cfg.seq_len, "pos {pos} >= seq_len {}", cfg.seq_len);
+
+    let t0 = Instant::now();
+    model.tok_emb.dequantize_row(token as usize, &mut s.x);
+    prof.other_s += t0.elapsed().as_secs_f64();
+
+    for li in 0..cfg.n_layers {
+        let layer = &model.layers[li];
+
+        // RMSNorm + quantize + fused QKV GQMV (Alg. 2 l.3-4)
+        let t = Instant::now();
+        tensor::rmsnorm(&mut s.xb, &s.x, &layer.att_norm);
+        prof.rmsnorm_s += t.elapsed().as_secs_f64();
+        quant_gqmv(exec, &s.xb, &layer.wqkv, &mut s.qkv, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
+
+        // RoPE (l.5)
+        let t = Instant::now();
+        let (q, kvs) = s.qkv.split_at_mut(d);
+        let (k, v) = kvs.split_at_mut(kv_d);
+        tensor::rope(q, pos, hd);
+        tensor::rope(k, pos, hd);
+        prof.rope_s += t.elapsed().as_secs_f64();
+        kv.store(li, pos, k, v);
+
+        // multi-head attention on the PS (l.6-7)
+        let t = Instant::now();
+        attention(&cfg, kv, li, pos, q, &mut s.att_out);
+        prof.attention_s += t.elapsed().as_secs_f64();
+
+        // quantize + Wo GQMV + residual (l.8-10)
+        quant_gqmv(exec, &s.att_out, &layer.wo, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
+        let t = Instant::now();
+        tensor::add_assign(&mut s.x, &s.xb);
+        prof.other_s += t.elapsed().as_secs_f64();
+
+        // FFN: RMSNorm + fused W1|W3 + SwiGLU + W2 + residual (l.11-15)
+        let t = Instant::now();
+        tensor::rmsnorm(&mut s.xb, &s.x, &layer.ffn_norm);
+        prof.rmsnorm_s += t.elapsed().as_secs_f64();
+        quant_gqmv(exec, &s.xb, &layer.w13, &mut s.h13, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
+        let t = Instant::now();
+        let (h1, h3) = s.h13.split_at_mut(cfg.hidden_dim);
+        tensor::swiglu(h1, h3);
+        prof.swiglu_s += t.elapsed().as_secs_f64();
+        let h1 = &s.h13[..cfg.hidden_dim];
+        quant_gqmv(exec, h1, &layer.w2, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
+        let t = Instant::now();
+        tensor::add_assign(&mut s.x, &s.xb);
+        prof.other_s += t.elapsed().as_secs_f64();
+    }
+
+    // final RMSNorm + classifier (l.16-17)
+    let t = Instant::now();
+    tensor::rmsnorm(&mut s.xb, &s.x, &model.final_norm);
+    prof.rmsnorm_s += t.elapsed().as_secs_f64();
+    quant_gqmv(exec, &s.xb, &model.cls, &mut s.logits, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
+    Ok(())
+}
+
+/// Resident-weight engine with a CPU GQMV backend.  Weights are shared
+/// (`Arc`); scratch and the default session are private per engine.
 pub struct CpuEngine {
-    pub model: QuantModel,
+    pub model: Arc<QuantModel>,
     pub exec: Box<dyn GqmvExec>,
-    kv: KvCache,
+    session: Session,
     s: Scratch,
 }
 
 impl CpuEngine {
-    pub fn new(model: QuantModel, exec: Box<dyn GqmvExec>) -> Self {
+    /// Accepts an owned `QuantModel` (wrapped into a fresh `Arc`) or an
+    /// `Arc<QuantModel>` already shared with other engines.
+    pub fn new(model: impl Into<Arc<QuantModel>>, exec: Box<dyn GqmvExec>) -> Self {
+        let model = model.into();
         let cfg = model.cfg;
-        CpuEngine { exec, kv: KvCache::new(&cfg), s: Scratch::new(&cfg), model }
+        CpuEngine { exec, session: Session::new(&cfg), s: Scratch::new(&cfg), model }
     }
 
     pub fn backend_name(&self) -> &'static str {
         self.exec.name()
+    }
+
+    /// Handle to the shared weights — clone to build sibling engines
+    /// (serving workers) on the same weight copy.
+    pub fn shared_model(&self) -> Arc<QuantModel> {
+        Arc::clone(&self.model)
+    }
+
+    /// Decode one token against an *external* session at the session's own
+    /// position, advancing it on success.  This is the multi-session
+    /// serving path: one engine (scratch + backend) time-slices any number
+    /// of pooled sessions.
+    pub fn forward_session(
+        &mut self,
+        sess: &mut Session,
+        token: u32,
+        prof: &mut ForwardProfile,
+    ) -> Result<&[f32]> {
+        forward_pass(
+            &self.model,
+            self.exec.as_mut(),
+            &mut self.s,
+            &mut sess.kv,
+            token,
+            sess.pos,
+            prof,
+        )?;
+        sess.pos += 1;
+        Ok(&self.s.logits)
     }
 }
 
@@ -96,86 +215,21 @@ impl Engine for CpuEngine {
     }
 
     fn forward(&mut self, token: u32, pos: usize, prof: &mut ForwardProfile) -> Result<&[f32]> {
-        let cfg = self.model.cfg;
-        let (d, kv_d, hd, gs) = (cfg.dim, cfg.kv_dim(), cfg.head_dim(), cfg.gs);
-        anyhow::ensure!((token as usize) < cfg.vocab_size, "token {token} out of range");
-        anyhow::ensure!(pos < cfg.seq_len, "pos {pos} >= seq_len {}", cfg.seq_len);
-
-        let t0 = Instant::now();
-        self.model.tok_emb.dequantize_row(token as usize, &mut self.s.x);
-        prof.other_s += t0.elapsed().as_secs_f64();
-
-        for li in 0..cfg.n_layers {
-            let layer = &self.model.layers[li];
-
-            // RMSNorm + quantize + fused QKV GQMV (Alg. 2 l.3-4)
-            let t = Instant::now();
-            tensor::rmsnorm(&mut self.s.xb, &self.s.x, &layer.att_norm);
-            prof.rmsnorm_s += t.elapsed().as_secs_f64();
-            quant_gqmv(
-                self.exec.as_mut(), &self.s.xb, &layer.wqkv, &mut self.s.qkv,
-                &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
-            )?;
-
-            // RoPE (l.5)
-            let t = Instant::now();
-            let (q, kvs) = self.s.qkv.split_at_mut(d);
-            let (k, v) = kvs.split_at_mut(kv_d);
-            tensor::rope(q, pos, hd);
-            tensor::rope(k, pos, hd);
-            prof.rope_s += t.elapsed().as_secs_f64();
-            self.kv.store(li, pos, k, v);
-
-            // multi-head attention on the PS (l.6-7)
-            let t = Instant::now();
-            attention(&cfg, &self.kv, li, pos, q, &mut self.s.att_out);
-            prof.attention_s += t.elapsed().as_secs_f64();
-
-            // quantize + Wo GQMV + residual (l.8-10)
-            quant_gqmv(
-                self.exec.as_mut(), &self.s.att_out, &layer.wo, &mut self.s.xb,
-                &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
-            )?;
-            let t = Instant::now();
-            tensor::add_assign(&mut self.s.x, &self.s.xb);
-            prof.other_s += t.elapsed().as_secs_f64();
-
-            // FFN: RMSNorm + fused W1|W3 + SwiGLU + W2 + residual (l.11-15)
-            let t = Instant::now();
-            tensor::rmsnorm(&mut self.s.xb, &self.s.x, &layer.ffn_norm);
-            prof.rmsnorm_s += t.elapsed().as_secs_f64();
-            quant_gqmv(
-                self.exec.as_mut(), &self.s.xb, &layer.w13, &mut self.s.h13,
-                &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
-            )?;
-            let t = Instant::now();
-            let (h1, h3) = self.s.h13.split_at_mut(cfg.hidden_dim);
-            tensor::swiglu(h1, h3);
-            prof.swiglu_s += t.elapsed().as_secs_f64();
-            let h1 = &self.s.h13[..cfg.hidden_dim];
-            // borrow juggling: copy h1 view into xb-sized? w2 input is hidden-dim
-            quant_gqmv(
-                self.exec.as_mut(), h1, &layer.w2, &mut self.s.xb,
-                &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
-            )?;
-            let t = Instant::now();
-            tensor::add_assign(&mut self.s.x, &self.s.xb);
-            prof.other_s += t.elapsed().as_secs_f64();
-        }
-
-        // final RMSNorm + classifier (l.16-17)
-        let t = Instant::now();
-        tensor::rmsnorm(&mut self.s.xb, &self.s.x, &self.model.final_norm);
-        prof.rmsnorm_s += t.elapsed().as_secs_f64();
-        quant_gqmv(
-            self.exec.as_mut(), &self.s.xb, &self.model.cls, &mut self.s.logits,
-            &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
+        forward_pass(
+            &self.model,
+            self.exec.as_mut(),
+            &mut self.s,
+            &mut self.session.kv,
+            token,
+            pos,
+            prof,
         )?;
+        self.session.pos = pos + 1;
         Ok(&self.s.logits)
     }
 
     fn reset(&mut self) {
-        self.kv.reset();
+        self.session.reset();
     }
 
     fn name(&self) -> String {
@@ -219,6 +273,26 @@ mod tests {
             let b = e2.forward(*t, pos, &mut p).unwrap().to_vec();
             assert_eq!(a, b);
             assert!(a.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn shared_arc_engines_match_owned_engines() {
+        // one weight copy, two engines — identical logits to engines with
+        // their own copies, and actually shared (strong count check)
+        let qm = Arc::new(tiny_model(9));
+        let mut owned = CpuEngine::new((*qm).clone(), Box::new(ScalarGqmv));
+        let mut s1 = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let mut s2 = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        assert_eq!(Arc::strong_count(&qm), 3, "engines must share, not clone");
+        assert!(Arc::ptr_eq(&s1.shared_model(), &s2.shared_model()));
+        let mut p = ForwardProfile::default();
+        for (pos, t) in [5u32, 8, 2].iter().enumerate() {
+            let a = owned.forward(*t, pos, &mut p).unwrap().to_vec();
+            let b = s1.forward(*t, pos, &mut p).unwrap().to_vec();
+            let c = s2.forward(*t, pos, &mut p).unwrap().to_vec();
+            assert_eq!(a, b);
+            assert_eq!(a, c);
         }
     }
 

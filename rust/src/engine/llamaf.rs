@@ -228,6 +228,10 @@ impl Engine for LlamafEngine {
 
     fn reset(&mut self) {
         self.kv.reset();
+        // Re-arm the weight prefetch for the next generation's first layer;
+        // without this, a reset that lands mid-token leaves a stale pending
+        // staging and the first layers pay blocked (sync-style) transfers.
+        self.streamer.reset();
     }
 
     fn name(&self) -> String {

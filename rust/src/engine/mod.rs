@@ -14,11 +14,13 @@ pub mod forward;
 pub mod generate;
 pub mod llamaf;
 pub mod ppl;
+pub mod session;
 
 pub use forward::{CpuEngine, Engine, Scratch};
 pub use generate::{generate, GenOutput, Sampler};
 pub use llamaf::LlamafEngine;
 pub use ppl::perplexity;
+pub use session::{generate_session, PoolBusy, Session, SessionGen, SessionPool};
 
 use crate::metrics::ForwardProfile;
 

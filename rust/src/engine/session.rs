@@ -1,0 +1,301 @@
+//! Per-session decode state and the shared-weight session pool.
+//!
+//! The paper's system is batch-1: one engine owns one KV cache.  Serving
+//! many users from one embedded board inverts the scarcity — the quantized
+//! weights are the large, read-only resource (shared via `Arc` by every
+//! engine/worker), while the per-user state is small and mutable.  That
+//! state is [`Session`]: a KV cache plus decode position, checked out of a
+//! capacity-bounded [`SessionPool`] with LRU eviction of idle sessions.
+//!
+//! Workers own the compute (an engine with its scratch buffers); sessions
+//! own the conversation.  Any worker can drive any session, so N clients
+//! produce outputs byte-identical to N sequential batch-1 runs.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::engine::forward::{CpuEngine, Engine};
+use crate::metrics::{ForwardProfile, TokenMeter};
+use crate::model::{KvCache, LlamaConfig};
+use crate::tensor;
+
+/// Mutable per-user decode state (everything `Arc`-shared weights are not).
+#[derive(Debug)]
+pub struct Session {
+    pub kv: KvCache,
+    /// Next decode position (== tokens consumed so far).
+    pub pos: usize,
+    /// LRU stamp, maintained by the pool on release.
+    last_used: u64,
+}
+
+impl Session {
+    pub fn new(cfg: &LlamaConfig) -> Self {
+        Session { kv: KvCache::new(cfg), pos: 0, last_used: 0 }
+    }
+
+    /// Rewind to an empty context (the KV cache is lazily overwritten).
+    pub fn reset(&mut self) {
+        self.kv.reset();
+        self.pos = 0;
+    }
+
+    /// KV memory footprint in bytes (pool capacity budgeting).
+    pub fn bytes(&self) -> usize {
+        self.kv.bytes()
+    }
+}
+
+/// All sessions are currently checked out and none can be evicted.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolBusy;
+
+impl fmt::Display for PoolBusy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "session pool exhausted (all sessions in use)")
+    }
+}
+
+impl std::error::Error for PoolBusy {}
+
+struct PoolInner {
+    idle: HashMap<u64, Session>,
+    in_use: usize,
+    clock: u64,
+}
+
+/// Capacity-bounded pool of [`Session`]s keyed by caller id.
+///
+/// * `acquire(id)` returns the caller's existing idle session, or a fresh
+///   one — evicting the least-recently-used *idle* session when at
+///   capacity.  If every session is checked out, it fails with [`PoolBusy`]
+///   instead of blocking (the server surfaces this as `ERR busy`).
+/// * `release(id)` returns the session for later reuse by the same id.
+pub struct SessionPool {
+    cfg: LlamaConfig,
+    capacity: usize,
+    inner: Mutex<PoolInner>,
+}
+
+impl SessionPool {
+    pub fn new(cfg: LlamaConfig, capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        SessionPool {
+            cfg,
+            capacity,
+            inner: Mutex::new(PoolInner { idle: HashMap::new(), in_use: 0, clock: 0 }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// (idle, in_use) session counts.
+    pub fn counts(&self) -> (usize, usize) {
+        let g = self.inner.lock().unwrap();
+        (g.idle.len(), g.in_use)
+    }
+
+    pub fn acquire(&self, id: u64) -> Result<Session, PoolBusy> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(sess) = g.idle.remove(&id) {
+            g.in_use += 1;
+            return Ok(sess);
+        }
+        if g.idle.len() + g.in_use >= self.capacity {
+            // evict the least-recently-used idle session and recycle its
+            // KV allocation for the new owner (a reset is enough: stale
+            // positions are never read)
+            let lru = g.idle.iter().min_by_key(|(_, s)| s.last_used).map(|(&k, _)| k);
+            match lru {
+                Some(k) => {
+                    let mut sess = g.idle.remove(&k).expect("lru key just observed");
+                    sess.reset();
+                    g.in_use += 1;
+                    return Ok(sess);
+                }
+                None => return Err(PoolBusy),
+            }
+        }
+        g.in_use += 1;
+        Ok(Session::new(&self.cfg))
+    }
+
+    pub fn release(&self, id: u64, mut sess: Session) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        sess.last_used = g.clock;
+        g.in_use = g.in_use.saturating_sub(1);
+        g.idle.insert(id, sess);
+    }
+}
+
+/// Result of a session-driven generation.
+#[derive(Debug)]
+pub struct SessionGen {
+    pub generated: Vec<u32>,
+    pub tok_per_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+}
+
+/// Greedy generation against an external [`Session`] — the serving path.
+///
+/// Semantics match [`crate::engine::generate::generate`] with
+/// `Sampler::Greedy` / `stop_at_eos = false` exactly (same reset, same
+/// prompt consumption, same argmax), so concurrent sessions reproduce
+/// batch-1 outputs token for token.  `on_token(step, id)` fires per
+/// generated token, letting the server stream `TOK` lines.
+pub fn generate_session(
+    engine: &mut CpuEngine,
+    sess: &mut Session,
+    prompt_ids: &[u32],
+    steps: usize,
+    mut on_token: impl FnMut(usize, u32) -> Result<()>,
+) -> Result<SessionGen> {
+    anyhow::ensure!(!prompt_ids.is_empty(), "empty prompt");
+    let seq_len = engine.cfg().seq_len;
+    anyhow::ensure!(
+        prompt_ids.len() + steps <= seq_len,
+        "prompt ({}) + steps ({steps}) exceeds seq_len {seq_len}",
+        prompt_ids.len()
+    );
+    sess.reset();
+    let mut prof = ForwardProfile::default();
+    for &t in &prompt_ids[..prompt_ids.len() - 1] {
+        engine.forward_session(sess, t, &mut prof)?;
+    }
+    let mut meter = TokenMeter::new();
+    let mut cur = *prompt_ids.last().unwrap();
+    let mut generated = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let logits = engine.forward_session(sess, cur, &mut prof)?;
+        let next = tensor::argmax(logits) as u32;
+        meter.tick();
+        cur = next;
+        generated.push(next);
+        on_token(step, next)?;
+    }
+    let (p50, p99) = meter.p50_p99();
+    Ok(SessionGen {
+        generated,
+        tok_per_s: meter.tok_per_s(),
+        latency_p50_s: p50,
+        latency_p99_s: p99,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::generate::{generate, Sampler};
+    use crate::model::{FloatModel, QuantModel};
+    use crate::ps::ScalarGqmv;
+    use std::sync::Arc;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        }
+    }
+
+    fn tiny_model(seed: u64) -> Arc<QuantModel> {
+        Arc::new(QuantModel::from_float(&FloatModel::random(tiny_cfg(), seed)))
+    }
+
+    #[test]
+    fn session_generation_matches_batch1_generate() {
+        let qm = tiny_model(1);
+        let prompt = [1u32, 10, 11];
+        let mut batch1 = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let expect = generate(&mut batch1, &prompt, 8, Sampler::Greedy, false).unwrap();
+
+        let mut engine = CpuEngine::new(qm, Box::new(ScalarGqmv));
+        let mut sess = Session::new(engine.cfg());
+        let mut streamed = Vec::new();
+        let out = generate_session(&mut engine, &mut sess, &prompt, 8, |_, id| {
+            streamed.push(id);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(out.generated, expect.generated);
+        assert_eq!(streamed, expect.generated);
+        assert_eq!(sess.pos, prompt.len() + 8);
+    }
+
+    #[test]
+    fn interleaved_sessions_are_isolated() {
+        // two sessions time-sliced on ONE engine must reproduce two
+        // dedicated batch-1 engines step for step
+        let qm = tiny_model(2);
+        let seq_a = [5u32, 8, 2, 60];
+        let seq_b = [3u32, 40, 7, 1];
+        let mut prof = ForwardProfile::default();
+
+        let mut e_a = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let mut e_b = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let mut want_a = Vec::new();
+        let mut want_b = Vec::new();
+        for (pos, (&ta, &tb)) in seq_a.iter().zip(&seq_b).enumerate() {
+            want_a.push(e_a.forward(ta, pos, &mut prof).unwrap().to_vec());
+            want_b.push(e_b.forward(tb, pos, &mut prof).unwrap().to_vec());
+        }
+
+        let mut shared = CpuEngine::new(qm, Box::new(ScalarGqmv));
+        let mut sa = Session::new(shared.cfg());
+        let mut sb = Session::new(shared.cfg());
+        for (step, (&ta, &tb)) in seq_a.iter().zip(&seq_b).enumerate() {
+            let la = shared.forward_session(&mut sa, ta, &mut prof).unwrap().to_vec();
+            assert_eq!(la, want_a[step], "session A diverged at step {step}");
+            let lb = shared.forward_session(&mut sb, tb, &mut prof).unwrap().to_vec();
+            assert_eq!(lb, want_b[step], "session B diverged at step {step}");
+        }
+    }
+
+    #[test]
+    fn pool_reuses_sessions_by_id() {
+        let pool = SessionPool::new(tiny_cfg(), 2);
+        let mut s = pool.acquire(7).unwrap();
+        s.pos = 5;
+        pool.release(7, s);
+        let s = pool.acquire(7).unwrap();
+        assert_eq!(s.pos, 5, "same id must get its session back");
+        assert_eq!(pool.counts(), (0, 1));
+    }
+
+    #[test]
+    fn pool_evicts_lru_idle_at_capacity() {
+        let pool = SessionPool::new(tiny_cfg(), 2);
+        let s1 = pool.acquire(1).unwrap();
+        pool.release(1, s1);
+        let s2 = pool.acquire(2).unwrap();
+        pool.release(2, s2);
+        // capacity reached; id 1 is least recently used -> evicted
+        let _s3 = pool.acquire(3).unwrap();
+        let (idle, in_use) = pool.counts();
+        assert_eq!((idle, in_use), (1, 1));
+        // id 2 survived; a fresh acquire(2) keeps its state
+        let s2 = pool.acquire(2).unwrap();
+        assert_eq!(s2.pos, 0);
+    }
+
+    #[test]
+    fn pool_busy_when_all_checked_out() {
+        let pool = SessionPool::new(tiny_cfg(), 1);
+        let held = pool.acquire(1).unwrap();
+        assert!(pool.acquire(2).is_err(), "no idle session to evict -> busy");
+        pool.release(1, held);
+        assert!(pool.acquire(2).is_ok(), "idle session is evictable");
+    }
+}

@@ -11,10 +11,17 @@
 //!   the experiment/bench harness for every paper table.
 //! * **Layer 2/1 (python, build-time only)** — the JAX model and the Pallas
 //!   GQMV kernel, AOT-lowered to HLO text once by `make artifacts`.
-//! * **Runtime bridge** — [`runtime`] loads `artifacts/*.hlo.txt` through
-//!   the PJRT C API (`xla` crate) and executes the group-wise quantized
+//! * **Runtime bridge** — [`runtime`] executes the group-wise quantized
 //!   matrix-vector multiply (GQMV) from the decode hot path: the functional
-//!   stand-in for the FPGA *programmable logic* (PL).
+//!   stand-in for the FPGA *programmable logic* (PL).  With `--features
+//!   pjrt` it loads `artifacts/*.hlo.txt` through the PJRT C API (`xla`
+//!   bindings); by default a bit-exact host simulator serves the same
+//!   contract so everything builds and tests offline.
+//!
+//! On top of the single-stream engine sits a concurrent serving layer
+//! ([`server`]): N workers share one `Arc`'d weight copy, per-client KV
+//! state lives in a bounded LRU [`engine::session::SessionPool`], and
+//! greedy outputs stay byte-identical to batch-1 serving.
 //!
 //! The FPGA itself is additionally modelled by [`fpga`]: a
 //! cycle-approximate simulator of the paper's three-stage HLS dataflow

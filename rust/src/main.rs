@@ -32,7 +32,10 @@ USAGE: llamaf <command> [options]
 COMMANDS
   generate  --ckpt <lfq8> --prompt <text> [--steps N] [--engine ps|llamaf]
             [--sync|--async] [--top-p P --temperature T --seed S]
-  serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|llamaf]
+  serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
+            [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
+            ps/ps-scalar/sim: N workers share one weight copy (sessions
+            pooled, LRU-evicted); llamaf: sequential batch-1 streaming
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
@@ -131,14 +134,58 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7077");
-    let mut engine = build_engine(args)?;
-    let server = llamaf::server::Server::bind(addr, engine.cfg().vocab_size)?;
-    eprintln!(
-        "llamaf serving on {} (engine: {}) — protocol: GEN <steps> <prompt> | PING | QUIT",
-        server.local_addr()?,
-        engine.name()
-    );
-    server.serve(engine.as_mut(), None)?;
+    let engine_kind = args.get_or("engine", "llamaf").to_string();
+    match engine_kind.as_str() {
+        // CPU-backend engines share one Arc'd weight copy across N workers
+        "ps" | "ps-scalar" | "sim" => {
+            let ckpt = args.get_or("ckpt", "artifacts/nano_q8.lfq8");
+            let path = Path::new(ckpt);
+            anyhow::ensure!(path.exists(), "checkpoint {ckpt} not found (run `make artifacts`)");
+            let qm = Arc::new(llamaf::ckpt::read_q8(path)?);
+            let opts = llamaf::server::ServeOpts {
+                workers: args.get_usize("workers", 4)?,
+                queue_depth: args.get_usize("queue-depth", 64)?,
+                max_sessions: args.get_usize("max-sessions", 16)?,
+            };
+            let threads = args.get_usize("threads", 4)?;
+            let make_exec: Box<llamaf::server::ExecFactory> = match engine_kind.as_str() {
+                "ps" => {
+                    let pool = Arc::new(ThreadPool::new(threads));
+                    Box::new(move || Box::new(ThreadedGqmv::new(Arc::clone(&pool))))
+                }
+                "ps-scalar" => Box::new(|| Box::new(ScalarGqmv)),
+                _ => Box::new(|| {
+                    Box::new(llamaf::fpga::DataflowSim::new(llamaf::fpga::PlConfig::default()))
+                }),
+            };
+            let server = llamaf::server::Server::bind(addr, qm.cfg.vocab_size)?;
+            eprintln!(
+                "llamaf serving on {} ({} x{} workers, {} pooled sessions, queue {}) — \
+                 protocol: GEN/SGEN <steps> <prompt> | STATS | PING | SHUTDOWN | QUIT",
+                server.local_addr()?,
+                engine_kind,
+                opts.workers,
+                opts.max_sessions,
+                opts.queue_depth,
+            );
+            let report = server.serve_shared(qm, make_exec.as_ref(), &opts, None)?;
+            eprintln!(
+                "llamaf serve done: {} conns, {} requests ({} rejected), {} tokens",
+                report.accepted, report.requests, report.rejected, report.tokens
+            );
+        }
+        // the streamed-weight engine is single-owner: sequential batch-1
+        _ => {
+            let mut engine = build_engine(args)?;
+            let server = llamaf::server::Server::bind(addr, engine.cfg().vocab_size)?;
+            eprintln!(
+                "llamaf serving on {} (engine: {}, batch-1) — protocol: GEN <steps> <prompt> | PING | QUIT",
+                server.local_addr()?,
+                engine.name()
+            );
+            server.serve(engine.as_mut(), None)?;
+        }
+    }
     Ok(())
 }
 

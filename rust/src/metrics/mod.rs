@@ -1,6 +1,10 @@
 //! Runtime metrics: token throughput, GQMV GOPS accounting, latency
-//! histograms — the quantities Table VI reports.
+//! histograms — the quantities Table VI reports, plus the serving-side
+//! counters (per-request latency/throughput histograms, queue-depth
+//! gauges) the concurrent server exports via its `STATS` command.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::stats::percentile;
@@ -125,6 +129,154 @@ impl ForwardProfile {
     }
 }
 
+/// Log₂ bucket count / base of [`Histogram`]: buckets span ~1 µs to ~2 min.
+const HIST_BUCKETS: usize = 28;
+const HIST_BASE: f64 = 1e-6;
+
+/// Bounded log₂-bucketed histogram for positive samples (latencies in
+/// seconds, rates in tok/s, ...).  Bucket `i` covers `(BASE·2^(i-1),
+/// BASE·2^i]` with `BASE` = 1e-6 — constant memory however long the
+/// server runs.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: [0; HIST_BUCKETS], count: 0, sum: 0.0, max: 0.0 }
+    }
+}
+
+impl Histogram {
+    fn bucket_of(v: f64) -> usize {
+        if v <= HIST_BASE {
+            return 0;
+        }
+        let b = (v / HIST_BASE).log2().ceil() as usize;
+        b.min(HIST_BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Upper edge of the bucket holding the q-quantile sample (q in 0..=1).
+    /// Resolution is a factor of 2 — enough for serving dashboards.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return HIST_BASE * (1u64 << i) as f64;
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, o: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&o.counts) {
+            *a += b;
+        }
+        self.count += o.count;
+        self.sum += o.sum;
+        self.max = self.max.max(o.max);
+    }
+}
+
+/// Shared serving metrics: request counters, token throughput, per-request
+/// latency/throughput histograms and queue-depth gauges.  All methods take
+/// `&self` so one instance can be shared by the accept loop and every
+/// worker.
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub requests: AtomicU64,
+    pub rejected: AtomicU64,
+    pub tokens: AtomicU64,
+    queue_depth: AtomicUsize,
+    queue_peak: AtomicUsize,
+    latency: Mutex<Histogram>,
+    throughput: Mutex<Histogram>,
+}
+
+impl ServerMetrics {
+    /// Record one completed generation request.
+    pub fn record_request(&self, wall_s: f64, tokens: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.tokens.fetch_add(tokens, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(wall_s);
+        if wall_s > 0.0 {
+            self.throughput.lock().unwrap().record(tokens as f64 / wall_s);
+        }
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Gauge: current depth of the pending-connection queue.
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_peak(&self) -> usize {
+        self.queue_peak.load(Ordering::Relaxed)
+    }
+
+    /// One-line snapshot (the server prepends session-pool counts).
+    pub fn summary(&self) -> String {
+        let lat = self.latency.lock().unwrap().clone();
+        let thr = self.throughput.lock().unwrap().clone();
+        format!(
+            "requests={} rejected={} tokens={} queue={} queue_peak={} \
+             p50_ms={:.3} p99_ms={:.3} mean_ms={:.3} tok_s_p50={:.1}",
+            self.requests.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.tokens.load(Ordering::Relaxed),
+            self.queue_depth(),
+            self.queue_peak(),
+            1e3 * lat.quantile(0.5),
+            1e3 * lat.quantile(0.99),
+            1e3 * lat.mean(),
+            thr.quantile(0.5),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +323,59 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.matrix_s, 3.0);
         assert_eq!(a.attention_s, 0.5);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = Histogram::default();
+        for _ in 0..90 {
+            h.record(0.001); // 1 ms
+        }
+        for _ in 0..10 {
+            h.record(0.1); // 100 ms
+        }
+        assert_eq!(h.count(), 100);
+        // log2 buckets: answers are within a factor of 2 of the sample
+        let p50 = h.quantile(0.5);
+        assert!((0.0005..=0.002).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((0.05..=0.2).contains(&p99), "p99 {p99}");
+        assert!(p50 <= p99);
+        let mean = h.mean();
+        assert!((mean - 0.0109).abs() < 1e-4, "mean {mean}");
+        assert_eq!(h.max(), 0.1);
+    }
+
+    #[test]
+    fn histogram_ignores_garbage_and_merges() {
+        let mut a = Histogram::default();
+        a.record(f64::NAN);
+        a.record(-1.0);
+        assert_eq!(a.count(), 0);
+        assert_eq!(a.quantile(0.5), 0.0);
+        a.record(0.01);
+        let mut b = Histogram::default();
+        b.record(0.04);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max() == 0.04);
+    }
+
+    #[test]
+    fn server_metrics_counts_and_summary() {
+        let m = ServerMetrics::default();
+        m.record_request(0.050, 16);
+        m.record_request(0.100, 16);
+        m.record_rejected();
+        m.set_queue_depth(3);
+        m.set_queue_depth(1);
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.queue_peak(), 3);
+        let s = m.summary();
+        assert!(s.contains("requests=2"), "{s}");
+        assert!(s.contains("rejected=1"), "{s}");
+        assert!(s.contains("tokens=32"), "{s}");
+        assert!(s.contains("queue=1"), "{s}");
+        assert!(s.contains("queue_peak=3"), "{s}");
     }
 }

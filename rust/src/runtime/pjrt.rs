@@ -1,0 +1,206 @@
+//! PJRT runtime — loads the AOT-compiled Pallas GQMV kernels and executes
+//! them from the decode hot path.  This is the functional stand-in for the
+//! FPGA PL: python lowers the kernels once (`make artifacts`), this module
+//! compiles the HLO text at startup and serves per-token GQMV calls.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Data movement mirrors the board:
+//!   * weights: host (`QuantizedTensor`, the "DDR model buffer") →
+//!     [`DeviceWeights`] PJRT buffers (the "pinned kernel buffer") via
+//!     [`Runtime::upload`] — the transfer the async scheduler overlaps;
+//!   * activations: quantized on the PS each call, tiny (n + n/GS bytes).
+//!
+//! Compiled only with `--features pjrt` (requires the vendored `xla`
+//! bindings); the default build uses the bit-exact host simulator in
+//! [`super::sim`] instead.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ps::gqmv::{check_shapes, GqmvExec};
+use crate::quant::QuantizedTensor;
+use crate::runtime::{parse_kernel_filename, ShapeKey};
+
+/// Weights resident on the PJRT device (the PL-side buffer analogue).
+pub struct DeviceWeights {
+    pub wq: xla::PjRtBuffer,
+    pub ws: xla::PjRtBuffer,
+    pub rows: usize,
+    pub cols: usize,
+    pub gs: usize,
+}
+
+// SAFETY: PJRT C-API objects are thread-safe (the PJRT specification
+// requires clients, buffers and executables to support concurrent use; the
+// CPU plugin honors it).  The Rust wrapper types only lack the auto-traits
+// because they hold raw pointers.  Buffers are created on one thread
+// (async prefetch) and consumed on another, never concurrently mutated.
+unsafe impl Send for DeviceWeights {}
+unsafe impl Sync for DeviceWeights {}
+
+struct Exe(xla::PjRtLoadedExecutable);
+// SAFETY: see DeviceWeights — PJRT executables are thread-safe.
+unsafe impl Send for Exe {}
+unsafe impl Sync for Exe {}
+
+/// PJRT CPU runtime holding one compiled executable per GQMV shape.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<ShapeKey, Exe>>,
+    /// Serializes all PJRT C-API entry points.  Empirically, xla_extension
+    /// 0.5.1's buffer creation racing an execute corrupts the allocator
+    /// (observed as `malloc_consolidate` aborts), so uploads and executes
+    /// take this lock.  The *host-side* half of staging (disk read +
+    /// decode, the dominant cost at real scale) still overlaps compute.
+    device: Mutex<()>,
+    artifacts_dir: PathBuf,
+    pub gs: usize,
+}
+
+// SAFETY: see DeviceWeights — the PJRT client is thread-safe.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU PJRT client and pre-compile every `gqmv_m*_n*_g*.hlo.txt`
+    /// found in `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let rt = Runtime {
+            client,
+            exes: Mutex::new(HashMap::new()),
+            device: Mutex::new(()),
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            gs: crate::DEFAULT_GS,
+        };
+        let mut found = 0;
+        for entry in std::fs::read_dir(artifacts_dir)
+            .with_context(|| format!("reading artifacts dir {artifacts_dir:?}"))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+            if let Some(key) = parse_kernel_filename(&name) {
+                rt.compile_file(key, &path)?;
+                found += 1;
+            }
+        }
+        if found == 0 {
+            bail!("no gqmv_m*_n*_g*.hlo.txt kernels in {artifacts_dir:?}; run `make artifacts`");
+        }
+        Ok(rt)
+    }
+
+    /// Platform string (e.g. "cpu") — surfaced by `llamaf info`.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn compiled_shapes(&self) -> Vec<ShapeKey> {
+        let mut v: Vec<ShapeKey> = self.exes.lock().unwrap().keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn compile_file(&self, key: ShapeKey, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        self.exes.lock().unwrap().insert(key, Exe(exe));
+        Ok(())
+    }
+
+    /// Compile the kernel for (m, n) on demand if the artifact exists.
+    pub fn ensure_shape(&self, m: usize, n: usize) -> Result<()> {
+        if self.exes.lock().unwrap().contains_key(&(m, n)) {
+            return Ok(());
+        }
+        let fname = format!("gqmv_m{m}_n{n}_g{}.hlo.txt", self.gs);
+        let path = self.artifacts_dir.join(&fname);
+        if !path.exists() {
+            bail!(
+                "no compiled kernel for GQMV {m}x{n} and artifact {fname} not found; \
+                 re-run `make artifacts` (python -m compile.aot)"
+            );
+        }
+        self.compile_file((m, n), &path)
+    }
+
+    /// Upload a weight matrix to the device — the DDR→PL staging transfer.
+    pub fn upload(&self, w: &QuantizedTensor) -> Result<DeviceWeights> {
+        let _guard = self.device.lock().unwrap();
+        let wq = self
+            .client
+            .buffer_from_host_buffer(&w.q, &[w.rows, w.cols], None)
+            .context("uploading wq")?;
+        let ws = self
+            .client
+            .buffer_from_host_buffer(&w.s, &[w.rows, w.groups_per_row()], None)
+            .context("uploading ws")?;
+        Ok(DeviceWeights { wq, ws, rows: w.rows, cols: w.cols, gs: w.gs })
+    }
+
+    /// Execute GQMV with pre-uploaded weights.  The activation (xq, xs) is
+    /// uploaded inline — it is tiny and changes every call.
+    pub fn gqmv_device(
+        &self,
+        dw: &DeviceWeights,
+        xq: &[i8],
+        xs: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        anyhow::ensure!(xq.len() == dw.cols, "xq len {} != cols {}", xq.len(), dw.cols);
+        anyhow::ensure!(out.len() == dw.rows, "out len {} != rows {}", out.len(), dw.rows);
+        let exes = self.exes.lock().unwrap();
+        let exe = exes
+            .get(&(dw.rows, dw.cols))
+            .with_context(|| format!("no compiled kernel for {}x{}", dw.rows, dw.cols))?;
+        let _guard = self.device.lock().unwrap();
+        let xq_buf = self
+            .client
+            .buffer_from_host_buffer(xq, &[xq.len()], None)
+            .context("uploading xq")?;
+        let xs_buf = self
+            .client
+            .buffer_from_host_buffer(xs, &[xs.len()], None)
+            .context("uploading xs")?;
+        // Parameter order matches aot.py: (xq, xs, wq, ws).
+        let results = exe.0.execute_b(&[&xq_buf, &xs_buf, &dw.wq, &dw.ws])?;
+        let lit = results[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let out_lit = lit.to_tuple1()?;
+        let v = out_lit.to_vec::<f32>()?;
+        anyhow::ensure!(v.len() == out.len(), "kernel returned {} rows", v.len());
+        out.copy_from_slice(&v);
+        Ok(())
+    }
+}
+
+/// `GqmvExec` adapter that uploads weights on every call — models the
+/// paper's *unscheduled* path where each kernel launch waits for its
+/// weight staging.  The scheduled path keeps `DeviceWeights` ahead of the
+/// compute via `sched::Streamer` instead.
+pub struct PjrtGqmv<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl GqmvExec for PjrtGqmv<'_> {
+    fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
+        check_shapes(xq, xs, w, out)?;
+        self.rt.ensure_shape(w.rows, w.cols)?;
+        let dw = self.rt.upload(w)?;
+        self.rt.gqmv_device(&dw, xq, xs, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-pallas"
+    }
+}

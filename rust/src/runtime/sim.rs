@@ -1,0 +1,210 @@
+//! Host-simulated device runtime — the default (no-PJRT) backend.
+//!
+//! Mirrors the PJRT runtime's contract exactly so the engine, the weight
+//! streamer and the experiment harness run unchanged in environments where
+//! the `xla` bindings are unavailable (CI, fresh checkouts):
+//!
+//!   * `load` scans the artifacts dir for `gqmv_m*_n*_g*.hlo.txt` kernels
+//!     and registers their shapes (the HLO text itself is not parsed);
+//!   * `upload` copies the weight tensor into a [`DeviceWeights`] buffer —
+//!     a real memcpy, so staging cost and the sync/async scheduling
+//!     behaviour around it stay observable;
+//!   * `gqmv_device` executes Algorithm 1 with the same cast chain as the
+//!     Pallas kernel, so logits are bit-identical to the CPU backends.
+//!
+//! Shape bookkeeping (and its error messages) is kept identical to the
+//! PJRT path so "missing kernel" failures reproduce without hardware.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ps::gqmv::{check_shapes, gqmv_row, GqmvExec};
+use crate::quant::QuantizedTensor;
+use crate::runtime::{parse_kernel_filename, ShapeKey};
+
+/// Weights "resident on the device": a staged host copy of the tensor.
+pub struct DeviceWeights {
+    wq: Vec<i8>,
+    ws: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    pub gs: usize,
+}
+
+/// Simulated device runtime holding one registered shape per GQMV kernel.
+pub struct Runtime {
+    shapes: Mutex<HashSet<ShapeKey>>,
+    artifacts_dir: PathBuf,
+    pub gs: usize,
+}
+
+impl Runtime {
+    /// Register every `gqmv_m*_n*_g*.hlo.txt` kernel in `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let rt = Runtime {
+            shapes: Mutex::new(HashSet::new()),
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            gs: crate::DEFAULT_GS,
+        };
+        let mut found = 0;
+        for entry in std::fs::read_dir(artifacts_dir)
+            .with_context(|| format!("reading artifacts dir {artifacts_dir:?}"))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+            if let Some(key) = parse_kernel_filename(&name) {
+                rt.shapes.lock().unwrap().insert(key);
+                found += 1;
+            }
+        }
+        if found == 0 {
+            bail!("no gqmv_m*_n*_g*.hlo.txt kernels in {artifacts_dir:?}; run `make artifacts`");
+        }
+        Ok(rt)
+    }
+
+    /// Runtime with a fixed shape set and no artifacts directory — for
+    /// tests that exercise staging/scheduling without built artifacts.
+    pub fn with_shapes(shapes: &[ShapeKey]) -> Self {
+        Runtime {
+            shapes: Mutex::new(shapes.iter().copied().collect()),
+            artifacts_dir: PathBuf::new(),
+            gs: crate::DEFAULT_GS,
+        }
+    }
+
+    /// Platform string — surfaced by `llamaf info`.
+    pub fn platform(&self) -> String {
+        "cpu-sim".to_string()
+    }
+
+    pub fn compiled_shapes(&self) -> Vec<ShapeKey> {
+        let mut v: Vec<ShapeKey> = self.shapes.lock().unwrap().iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Register the kernel for (m, n) on demand if the artifact exists.
+    pub fn ensure_shape(&self, m: usize, n: usize) -> Result<()> {
+        if self.shapes.lock().unwrap().contains(&(m, n)) {
+            return Ok(());
+        }
+        let fname = format!("gqmv_m{m}_n{n}_g{}.hlo.txt", self.gs);
+        let path = self.artifacts_dir.join(&fname);
+        if !path.exists() {
+            bail!(
+                "no compiled kernel for GQMV {m}x{n} and artifact {fname} not found; \
+                 re-run `make artifacts` (python -m compile.aot)"
+            );
+        }
+        self.shapes.lock().unwrap().insert((m, n));
+        Ok(())
+    }
+
+    /// Stage a weight matrix "on the device" — a real copy, so the
+    /// transfer the async scheduler overlaps still costs wall-clock time.
+    pub fn upload(&self, w: &QuantizedTensor) -> Result<DeviceWeights> {
+        Ok(DeviceWeights {
+            wq: w.q.clone(),
+            ws: w.s.clone(),
+            rows: w.rows,
+            cols: w.cols,
+            gs: w.gs,
+        })
+    }
+
+    /// Execute GQMV with pre-staged weights — Algorithm 1, bit-exact with
+    /// every CPU backend and the Pallas kernel.
+    pub fn gqmv_device(
+        &self,
+        dw: &DeviceWeights,
+        xq: &[i8],
+        xs: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        anyhow::ensure!(xq.len() == dw.cols, "xq len {} != cols {}", xq.len(), dw.cols);
+        anyhow::ensure!(out.len() == dw.rows, "out len {} != rows {}", out.len(), dw.rows);
+        anyhow::ensure!(
+            self.shapes.lock().unwrap().contains(&(dw.rows, dw.cols)),
+            "no compiled kernel for {}x{}",
+            dw.rows,
+            dw.cols
+        );
+        let gpr = dw.cols / dw.gs;
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = gqmv_row(
+                xq,
+                xs,
+                &dw.wq[i * dw.cols..(i + 1) * dw.cols],
+                &dw.ws[i * gpr..(i + 1) * gpr],
+                dw.gs,
+            );
+        }
+        Ok(())
+    }
+}
+
+/// `GqmvExec` adapter that stages weights on every call — models the
+/// paper's *unscheduled* path where each kernel launch waits for its
+/// weight staging.  The scheduled path keeps `DeviceWeights` ahead of the
+/// compute via `sched::Streamer` instead.
+pub struct PjrtGqmv<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl GqmvExec for PjrtGqmv<'_> {
+    fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
+        check_shapes(xq, xs, w, out)?;
+        self.rt.ensure_shape(w.rows, w.cols)?;
+        let dw = self.rt.upload(w)?;
+        self.rt.gqmv_device(&dw, xq, xs, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "sim-pallas"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::ScalarGqmv;
+    use crate::quant::quantize_activation;
+    use crate::util::Rng;
+
+    #[test]
+    fn sim_matches_scalar_backend_bitwise() {
+        let rt = Runtime::with_shapes(&[(64, 256)]);
+        let mut rng = Rng::new(11);
+        let w = QuantizedTensor::from_f32(&rng.normal_vec(64 * 256, 0.3), 64, 256, 256);
+        let (xq, xs) = quantize_activation(&rng.normal_vec(256, 1.0), 256);
+        let mut expect = vec![0.0f32; 64];
+        ScalarGqmv.gqmv(&xq, &xs, &w, &mut expect).unwrap();
+        let dw = rt.upload(&w).unwrap();
+        let mut got = vec![0.0f32; 64];
+        rt.gqmv_device(&dw, &xq, &xs, &mut got).unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn unregistered_shape_is_error() {
+        let rt = Runtime::with_shapes(&[(64, 256)]);
+        let mut rng = Rng::new(12);
+        let w = QuantizedTensor::from_f32(&rng.normal_vec(32 * 256, 0.3), 32, 256, 256);
+        let dw = rt.upload(&w).unwrap();
+        let (xq, xs) = quantize_activation(&rng.normal_vec(256, 1.0), 256);
+        let mut out = vec![0.0f32; 32];
+        let err = rt.gqmv_device(&dw, &xq, &xs, &mut out).unwrap_err().to_string();
+        assert!(err.contains("no compiled kernel"), "{err}");
+    }
+
+    #[test]
+    fn ensure_shape_without_artifact_mentions_aot() {
+        let rt = Runtime::with_shapes(&[]);
+        let err = rt.ensure_shape(123, 456).unwrap_err().to_string();
+        assert!(err.contains("make artifacts") || err.contains("compile.aot"), "{err}");
+    }
+}

@@ -1,25 +1,101 @@
-//! Minimal line-oriented generation server (batch = 1, the paper's
-//! real-time embedded setting).
+//! Line-oriented generation server.
+//!
+//! Two serving modes share one TCP protocol:
+//!
+//! * **Legacy batch-1** ([`Server::serve`]) — requests served sequentially
+//!   from a single engine (the paper's real-time embedded setting, where
+//!   batch-1 latency is the constraint).  Works with any [`Engine`],
+//!   including the weight-streaming `LlamafEngine`.
+//! * **Concurrent shared-weight** ([`Server::serve_shared`]) — a
+//!   multi-threaded accept loop feeding a bounded connection queue drained
+//!   by N workers.  Every worker owns an engine (scratch + GQMV backend)
+//!   built on ONE `Arc`-shared copy of the quantized weights; per-client
+//!   KV state comes from a capacity-bounded [`SessionPool`] with LRU
+//!   eviction.  Greedy outputs are byte-identical to batch-1 serving.
 //!
 //! Protocol (one request per line over TCP):
-//!   `GEN <steps> <prompt text...>`  →  one line: generated text
+//!   `GEN <steps> <prompt text...>`  →  one line: `OK <tok/s> | <text>`
+//!   `SGEN <steps> <prompt text...>` →  `TOK <step> <id> <piece>` per
+//!                                      token, then `DONE <n> <tok/s>`
+//!                                      (shared mode)
+//!   `STATS`                         →  one-line metrics snapshot
 //!   `PING`                          →  `PONG`
+//!   `SHUTDOWN`                      →  `OK shutting down`; drains queued
+//!                                      connections, then exits (shared)
 //!   `QUIT`                          →  closes the connection
 //!
-//! Requests are served sequentially from a single engine — deliberately:
-//! the paper argues batch-1 latency is the constraint on embedded devices,
-//! so the server optimizes time-to-first-token over aggregate throughput.
+//! Overload behaviour is explicit: when the connection queue is full the
+//! accept loop answers `ERR busy` and closes instead of queueing unbounded
+//! work; when every session is checked out, `GEN`/`SGEN` answer `ERR busy`.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::engine::forward::Engine;
+use crate::engine::forward::{CpuEngine, Engine};
 use crate::engine::generate::{generate, Sampler};
+use crate::engine::session::{generate_session, Session, SessionPool};
+use crate::metrics::ServerMetrics;
+use crate::model::QuantModel;
+use crate::ps::gqmv::GqmvExec;
 use crate::tokenizer::Tokenizer;
 
-/// Serve until `max_requests` have been handled (None = forever).
+/// Factory building one GQMV backend per worker (shared across threads).
+pub type ExecFactory = dyn Fn() -> Box<dyn GqmvExec> + Sync;
+
+/// Knobs of the concurrent serving mode.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Worker threads, each owning one engine on the shared weights.
+    pub workers: usize,
+    /// Pending-connection queue bound; overflow is answered `ERR busy`.
+    pub queue_depth: usize,
+    /// Session-pool capacity (bounds total KV-cache memory).
+    pub max_sessions: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { workers: 4, queue_depth: 64, max_sessions: 16 }
+    }
+}
+
+/// What a `serve_shared` run did (tests and the CLI summary).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeReport {
+    pub accepted: usize,
+    pub requests: u64,
+    pub rejected: u64,
+    pub tokens: u64,
+}
+
+/// State shared by the accept loop and every worker.
+struct Shared {
+    queue: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    pool: SessionPool,
+    metrics: ServerMetrics,
+    next_conn: AtomicU64,
+    workers_live: AtomicUsize,
+    addr: std::net::SocketAddr,
+}
+
+impl Shared {
+    /// Signal shutdown and unblock both the workers and the accept loop
+    /// (the latter by poking a throwaway connection at ourselves).
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
 pub struct Server {
     pub listener: TcpListener,
     pub tokenizer: Tokenizer,
@@ -36,7 +112,12 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Run the accept loop on the calling thread.
+    // ------------------------------------------------------------------
+    // Legacy batch-1 mode
+    // ------------------------------------------------------------------
+
+    /// Run the sequential accept loop on the calling thread until
+    /// `max_requests` have been handled (None = forever).
     pub fn serve(&self, engine: &mut dyn Engine, max_requests: Option<usize>) -> Result<usize> {
         let mut handled = 0usize;
         for stream in self.listener.incoming() {
@@ -79,22 +160,250 @@ impl Server {
             return Ok(None);
         }
         if let Some(rest) = line.strip_prefix("GEN ") {
-            let (steps_str, prompt) = rest
-                .split_once(' ')
-                .context("usage: GEN <steps> <prompt>")?;
-            let steps: usize = steps_str.parse().context("steps must be an integer")?;
-            anyhow::ensure!(steps > 0 && steps <= engine.cfg().seq_len, "bad step count");
+            let (steps, prompt) = parse_gen(rest, engine.cfg().seq_len)?;
             let prompt_ids = self.tokenizer.encode(prompt, true);
             let out = generate(engine, &prompt_ids, steps, Sampler::Greedy, false)?;
             let text = self.tokenizer.decode(&out.generated);
-            return Ok(Some(format!(
-                "OK {:.3} tok/s | {}",
-                out.tok_per_s,
-                text.replace('\n', " ")
-            )));
+            return Ok(Some(format!("OK {:.3} tok/s | {}", out.tok_per_s, text.replace('\n', " "))));
         }
         anyhow::bail!("unknown command (GEN/PING/QUIT)")
     }
+
+    // ------------------------------------------------------------------
+    // Concurrent shared-weight mode
+    // ------------------------------------------------------------------
+
+    /// Serve with `opts.workers` threads sharing one weight copy.
+    ///
+    /// `make_exec` builds each worker's GQMV backend.  `max_conns` bounds
+    /// how many connections the accept loop takes before draining and
+    /// returning (None = until `SHUTDOWN`); rejected (queue-full)
+    /// connections count as accepted.
+    pub fn serve_shared(
+        &self,
+        model: Arc<QuantModel>,
+        make_exec: &ExecFactory,
+        opts: &ServeOpts,
+        max_conns: Option<usize>,
+    ) -> Result<ServeReport> {
+        anyhow::ensure!(opts.workers >= 1, "need at least one worker");
+        anyhow::ensure!(opts.queue_depth >= 1, "need a queue depth of at least 1");
+        let shared = Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            pool: SessionPool::new(model.cfg, opts.max_sessions),
+            metrics: ServerMetrics::default(),
+            next_conn: AtomicU64::new(0),
+            workers_live: AtomicUsize::new(0),
+            addr: self.local_addr()?,
+        };
+        let mut accepted = 0usize;
+
+        std::thread::scope(|scope| -> Result<()> {
+            for wi in 0..opts.workers {
+                let shared = &shared;
+                let model = Arc::clone(&model);
+                std::thread::Builder::new()
+                    .name(format!("llamaf-serve-{wi}"))
+                    .spawn_scoped(scope, move || {
+                        shared.workers_live.fetch_add(1, Ordering::SeqCst);
+                        let mut engine = CpuEngine::new(model, make_exec());
+                        while let Some(conn) = next_conn(shared) {
+                            if let Err(e) = self.handle_shared_conn(conn, &mut engine, shared) {
+                                eprintln!("llamaf-serve-{wi}: connection error: {e:#}");
+                            }
+                        }
+                        shared.workers_live.fetch_sub(1, Ordering::SeqCst);
+                    })
+                    .expect("spawn serve worker");
+            }
+
+            for stream in self.listener.incoming() {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                accepted += 1;
+                let mut q = shared.queue.lock().unwrap();
+                if q.len() >= opts.queue_depth {
+                    drop(q);
+                    shared.metrics.record_rejected();
+                    let mut s = stream;
+                    let _ = s.write_all(b"ERR busy: connection queue full\n");
+                    let _ = s.flush();
+                } else {
+                    q.push_back(stream);
+                    shared.metrics.set_queue_depth(q.len());
+                    shared.cv.notify_one();
+                }
+                if let Some(max) = max_conns {
+                    if accepted >= max {
+                        break;
+                    }
+                }
+            }
+            // Drain: workers finish everything already queued, then exit.
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.cv.notify_all();
+            Ok(())
+        })?;
+
+        Ok(ServeReport {
+            accepted,
+            requests: shared.metrics.requests.load(Ordering::Relaxed),
+            rejected: shared.metrics.rejected.load(Ordering::Relaxed),
+            tokens: shared.metrics.tokens.load(Ordering::Relaxed),
+        })
+    }
+
+    fn handle_shared_conn(
+        &self,
+        stream: TcpStream,
+        engine: &mut CpuEngine,
+        shared: &Shared,
+    ) -> Result<()> {
+        let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+        let mut out = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        let mut session: Option<Session> = None;
+
+        let mut result = Ok(());
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    result = Err(e.into());
+                    break;
+                }
+            };
+            let line = line.trim().to_string();
+            if line == "QUIT" {
+                break;
+            }
+            let reply = self.shared_command(&line, engine, shared, conn_id, &mut session, &mut out);
+            match reply {
+                Ok(Some(r)) => {
+                    if out.write_all(r.as_bytes()).and_then(|_| out.write_all(b"\n")).is_err() {
+                        break; // client went away mid-reply
+                    }
+                    let _ = out.flush();
+                }
+                Ok(None) => {} // streaming command wrote its own lines
+                Err(e) => {
+                    let _ = out.write_all(format!("ERR {e}\n").as_bytes());
+                    let _ = out.flush();
+                }
+            }
+            if line == "SHUTDOWN" {
+                break;
+            }
+        }
+        if let Some(sess) = session.take() {
+            shared.pool.release(conn_id, sess);
+        }
+        result
+    }
+
+    /// Execute one shared-mode command.  `Ok(Some(reply))` for one-line
+    /// replies, `Ok(None)` when the command streamed its own output.
+    fn shared_command(
+        &self,
+        line: &str,
+        engine: &mut CpuEngine,
+        shared: &Shared,
+        conn_id: u64,
+        session: &mut Option<Session>,
+        out: &mut TcpStream,
+    ) -> Result<Option<String>> {
+        if line == "PING" {
+            return Ok(Some("PONG".into()));
+        }
+        if line == "SHUTDOWN" {
+            shared.begin_shutdown();
+            return Ok(Some("OK shutting down".into()));
+        }
+        if line == "STATS" {
+            let (idle, in_use) = shared.pool.counts();
+            return Ok(Some(format!(
+                "OK sessions_idle={idle} sessions_busy={in_use} sessions_cap={} workers={} {}",
+                shared.pool.capacity(),
+                shared.workers_live.load(Ordering::SeqCst),
+                shared.metrics.summary()
+            )));
+        }
+        let (streaming, rest) = if let Some(r) = line.strip_prefix("SGEN ") {
+            (true, r)
+        } else if let Some(r) = line.strip_prefix("GEN ") {
+            (false, r)
+        } else {
+            anyhow::bail!("unknown command (GEN/SGEN/STATS/PING/SHUTDOWN/QUIT)")
+        };
+
+        let (steps, prompt) = parse_gen(rest, engine.cfg().seq_len)?;
+        if session.is_none() {
+            match shared.pool.acquire(conn_id) {
+                Ok(s) => *session = Some(s),
+                Err(_) => {
+                    shared.metrics.record_rejected();
+                    anyhow::bail!("busy: all sessions in use")
+                }
+            }
+        }
+        let sess = session.as_mut().expect("session acquired above");
+
+        let t = Instant::now();
+        let gen = if streaming {
+            generate_session(engine, sess, &self.tokenizer.encode(prompt, true), steps, |i, id| {
+                let piece = self.tokenizer.decode_one(id).replace('\n', " ");
+                out.write_all(format!("TOK {i} {id} {piece}\n").as_bytes())?;
+                out.flush()?;
+                Ok(())
+            })?
+        } else {
+            generate_session(engine, sess, &self.tokenizer.encode(prompt, true), steps, |_, _| {
+                Ok(())
+            })?
+        };
+        shared.metrics.record_request(t.elapsed().as_secs_f64(), gen.generated.len() as u64);
+
+        if streaming {
+            out.write_all(
+                format!("DONE {} {:.3} tok/s\n", gen.generated.len(), gen.tok_per_s).as_bytes(),
+            )?;
+            out.flush()?;
+            Ok(None)
+        } else {
+            let text = self.tokenizer.decode(&gen.generated);
+            Ok(Some(format!("OK {:.3} tok/s | {}", gen.tok_per_s, text.replace('\n', " "))))
+        }
+    }
+}
+
+/// Pop the next queued connection, or None when shut down and drained.
+fn next_conn(shared: &Shared) -> Option<TcpStream> {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if let Some(conn) = q.pop_front() {
+            shared.metrics.set_queue_depth(q.len());
+            return Some(conn);
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return None;
+        }
+        q = shared.cv.wait(q).unwrap();
+    }
+}
+
+/// Parse `"<steps> <prompt...>"`, validating the step count.
+fn parse_gen(rest: &str, seq_len: usize) -> Result<(usize, &str)> {
+    let (steps_str, prompt) = rest.split_once(' ').context("usage: GEN <steps> <prompt>")?;
+    let steps: usize = steps_str.parse().context("steps must be an integer")?;
+    anyhow::ensure!(steps > 0 && steps <= seq_len, "bad step count");
+    Ok((steps, prompt))
 }
 
 #[cfg(test)]
@@ -116,10 +425,7 @@ mod tests {
             seq_len: 64,
             gs: 32,
         };
-        CpuEngine::new(
-            QuantModel::from_float(&FloatModel::random(cfg, 1)),
-            Box::new(ScalarGqmv),
-        )
+        CpuEngine::new(QuantModel::from_float(&FloatModel::random(cfg, 1)), Box::new(ScalarGqmv))
     }
 
     #[test]

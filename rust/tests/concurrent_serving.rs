@@ -1,0 +1,188 @@
+//! Integration: concurrent multi-session serving over one shared weight
+//! copy.
+//!
+//!  * ≥ 4 parallel TCP clients streaming through one `SessionPool` get
+//!    greedy token streams byte-identical to sequential batch-1 serving.
+//!  * Connection-queue overflow answers `ERR busy` instead of hanging.
+//!  * `STATS` exposes the serving metrics.
+//!
+//! Runs on the synthetic tiny model — no artifacts required.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use llamaf::engine::forward::CpuEngine;
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::model::{FloatModel, LlamaConfig, QuantModel};
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::ScalarGqmv;
+use llamaf::server::{ServeOpts, Server};
+use llamaf::tokenizer::Tokenizer;
+
+fn scalar_exec() -> Box<dyn GqmvExec> {
+    Box::new(ScalarGqmv)
+}
+
+fn tiny_model(seed: u64) -> Arc<QuantModel> {
+    let cfg = LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 512,
+        seq_len: 64,
+        gs: 32,
+    };
+    Arc::new(QuantModel::from_float(&FloatModel::random(cfg, seed)))
+}
+
+#[test]
+fn four_concurrent_clients_match_sequential_batch1() {
+    let model = tiny_model(7);
+    let steps = 8usize;
+    let prompts =
+        ["the engineer builds", "a student studies", "hello world", "fpga streams weights"];
+
+    // sequential batch-1 reference, one dedicated engine per prompt
+    let tok = Tokenizer::new(512);
+    let mut expected = Vec::new();
+    for p in prompts {
+        let mut eng = CpuEngine::new(Arc::clone(&model), Box::new(ScalarGqmv));
+        let ids = tok.encode(p, true);
+        let out = generate(&mut eng, &ids, steps, Sampler::Greedy, false).unwrap();
+        expected.push(out.generated);
+    }
+
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts { workers: 4, queue_depth: 16, max_sessions: 8 };
+    let m2 = Arc::clone(&model);
+    let server_thread = std::thread::spawn(move || {
+        server.serve_shared(m2, &scalar_exec, &opts, Some(prompts.len())).unwrap()
+    });
+
+    let clients: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let p = p.to_string();
+            std::thread::spawn(move || -> Vec<u32> {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                conn.write_all(format!("SGEN {steps} {p}\n").as_bytes()).unwrap();
+                let mut ids = Vec::new();
+                loop {
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let line = line.trim_end();
+                    if let Some(rest) = line.strip_prefix("TOK ") {
+                        // TOK <step> <id> <piece...>
+                        let mut parts = rest.splitn(3, ' ');
+                        let step: usize = parts.next().unwrap().parse().unwrap();
+                        assert_eq!(step, ids.len(), "out-of-order TOK line");
+                        let id_str = parts.next().expect("TOK line missing token id");
+                        ids.push(id_str.parse().unwrap());
+                    } else if line.starts_with("DONE ") {
+                        break;
+                    } else {
+                        panic!("unexpected server line: {line:?}");
+                    }
+                }
+                conn.write_all(b"QUIT\n").unwrap();
+                ids
+            })
+        })
+        .collect();
+
+    for (client, want) in clients.into_iter().zip(&expected) {
+        let got = client.join().unwrap();
+        assert_eq!(&got, want, "concurrent session diverged from batch-1 serving");
+    }
+    let report = server_thread.join().unwrap();
+    assert_eq!(report.accepted, prompts.len());
+    assert_eq!(report.requests, prompts.len() as u64);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.tokens, (prompts.len() * steps) as u64);
+}
+
+#[test]
+fn queue_overflow_returns_err_busy_not_hang() {
+    let model = tiny_model(8);
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts { workers: 1, queue_depth: 1, max_sessions: 2 };
+    let server_thread = std::thread::spawn(move || {
+        server.serve_shared(model, &scalar_exec, &opts, Some(3)).unwrap()
+    });
+
+    // A occupies the single worker (PONG proves it was dequeued)
+    let mut a = TcpStream::connect(addr).unwrap();
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    a.write_all(b"PING\n").unwrap();
+    let mut line = String::new();
+    ra.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "PONG");
+
+    // B fills the one queue slot (the worker is still held by A)
+    let b = TcpStream::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // let the accept loop enqueue B
+
+    // C overflows the bounded queue -> immediate ERR busy, no hang
+    let c = TcpStream::connect(addr).unwrap();
+    let mut rc = BufReader::new(c.try_clone().unwrap());
+    line.clear();
+    rc.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR busy"), "expected busy rejection, got {line:?}");
+
+    // release the worker; B gets served (EOF) and the server drains
+    a.write_all(b"QUIT\n").unwrap();
+    drop(a);
+    drop(ra);
+    drop(b);
+    let report = server_thread.join().unwrap();
+    assert_eq!(report.accepted, 3);
+    assert_eq!(report.rejected, 1);
+}
+
+#[test]
+fn stats_and_plain_gen_roundtrip() {
+    let model = tiny_model(9);
+    // reference output for the same prompt through the batch-1 path
+    let tok = Tokenizer::new(512);
+    let mut eng = CpuEngine::new(Arc::clone(&model), Box::new(ScalarGqmv));
+    let ids = tok.encode("hello", true);
+    let want = generate(&mut eng, &ids, 4, Sampler::Greedy, false).unwrap();
+    let want_text = tok.decode(&want.generated).replace('\n', " ");
+
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts { workers: 2, queue_depth: 8, max_sessions: 4 };
+    let server_thread = std::thread::spawn(move || {
+        server.serve_shared(model, &scalar_exec, &opts, Some(1)).unwrap()
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    conn.write_all(b"GEN 4 hello\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    let text = line.trim_end().split_once(" | ").expect("OK <rate> | <text>").1.to_string();
+    assert_eq!(text, want_text, "shared-mode GEN diverged from batch-1 output");
+
+    conn.write_all(b"STATS\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    for field in ["sessions_idle=", "sessions_busy=", "sessions_cap=4", "requests=1", "tokens=4"] {
+        assert!(line.contains(field), "STATS missing {field}: {line}");
+    }
+
+    conn.write_all(b"QUIT\n").unwrap();
+    drop(conn);
+    let report = server_thread.join().unwrap();
+    assert_eq!(report.requests, 1);
+}

@@ -42,7 +42,7 @@ fn runtime_loads_and_lists_kernels() {
     let shapes = rt.compiled_shapes();
     assert!(shapes.contains(&(512, 256)), "{shapes:?}"); // nano qkv/cls
     assert!(shapes.contains(&(256, 768)), "{shapes:?}"); // nano w2 (kernel2)
-    assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+    assert!(rt.platform().to_lowercase().contains("cpu"));
 }
 
 #[test]

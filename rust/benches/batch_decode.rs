@@ -1,0 +1,79 @@
+//! Batched-decoding macro-benchmark: aggregate throughput and weight
+//! staging volume of the step-synchronous `BatchScheduler` as batch size
+//! grows.
+//!
+//! The interesting column is `staged B/tok`: one layer walk per step is
+//! shared by all B lanes, so bytes staged per decoded token should fall
+//! ~B× versus B independent passes (the paper's DDR-bandwidth bound,
+//! §III-B, attacked at serving scale).  Aggregate tok/s rises both from
+//! the staging amortization and from the batched GQMV reusing each
+//! weight row across lanes while it is cache-hot.
+//!
+//! Run: `cargo bench --bench batch_decode [-- --quick]`
+//! (NANO geometry; TinyLlama-1.1B synthetic weights need ~1.1 GB and are
+//! left to `table6_inference`.)
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use llamaf::bench::section;
+use llamaf::engine::batch::{BatchOpts, BatchScheduler};
+use llamaf::engine::session::Session;
+use llamaf::model::{QuantModel, NANO};
+use llamaf::ps::ScalarGqmv;
+
+/// Decode `b` concurrent lanes of `steps` tokens; returns
+/// (aggregate tok/s, staged bytes/token, mean occupancy).
+fn run_batch(model: &Arc<QuantModel>, b: usize, steps: usize) -> (f64, f64, f64) {
+    let sched = BatchScheduler::new(
+        Arc::clone(model),
+        Box::new(ScalarGqmv),
+        BatchOpts { max_batch: b, ..Default::default() },
+    );
+    let barrier = Arc::new(Barrier::new(b + 1));
+    let handles: Vec<_> = (0..b)
+        .map(|i| {
+            let sched = Arc::clone(&sched);
+            let model = Arc::clone(model);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let prompt = [1u32, (i as u32 % 60) + 2, 7];
+                let (sess, out) =
+                    sched.generate(Session::new(&model.cfg), &prompt, steps, |_, _| Ok(()));
+                assert!(sess.is_some(), "session lost");
+                out.expect("generation failed").generated.len()
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t = Instant::now();
+    let tokens: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = t.elapsed().as_secs_f64();
+    let bpt = sched.metrics().bytes_per_token();
+    let occ = sched.metrics().occupancy_mean();
+    sched.shutdown();
+    (tokens as f64 / dt.max(1e-9), bpt, occ)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 16 } else { 64 };
+    let model = Arc::new(QuantModel::synthetic(NANO, 42));
+
+    section("step-synchronous batched decoding (NANO geometry, scalar GQMV)");
+    println!("{steps} steps/lane, async weight streaming, one decode thread\n");
+    let mut base_bpt = 0.0f64;
+    for b in [1usize, 2, 4, 8] {
+        let (tps, bpt, occ) = run_batch(&model, b, steps);
+        if b == 1 {
+            base_bpt = bpt;
+        }
+        let reduction = if bpt > 0.0 { base_bpt / bpt } else { 0.0 };
+        println!(
+            "B={b:<2}  mean_occupancy {occ:>5.2}  aggregate {tps:>9.1} tok/s  \
+             staged {bpt:>12.0} B/tok  reduction {reduction:>5.2}x"
+        );
+    }
+    println!("\n(reduction ≈ mean occupancy: each step stages every layer once, shared by B lanes)");
+}

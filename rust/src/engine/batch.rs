@@ -1,0 +1,563 @@
+//! Step-synchronous batched decoding: one weight-streaming pass per step,
+//! shared by every active session.
+//!
+//! The paper's bottleneck analysis (§III-B, Fig. 2) says TinyLlama decode
+//! on the ZCU102 is off-chip-bandwidth bound: per token, every layer's
+//! weights must cross DDR→PL once.  Concurrent serving with a private
+//! forward pass per session multiplies that cost by the session count —
+//! the same layer is staged N times per wall-clock step.  The
+//! [`BatchScheduler`] removes the multiplier: a dedicated decode thread
+//! collects every session with a pending token into *lanes*, then drives
+//! **one** [`forward_batch`] walk over the layers, staging each layer
+//! exactly once (via the async [`Streamer`] prefetch) and applying it to
+//! all B activation vectors before moving on.
+//!
+//! A *step barrier* sits between tokens: lanes join and leave only at
+//! step boundaries, so a new connection enters mid-flight without
+//! perturbing anyone else's arithmetic.  Because every lane's math is the
+//! exact batch-1 operation sequence (see [`forward_batch`]), token
+//! streams are **bit-identical** to sequential batch-1 generation no
+//! matter how lanes interleave — integration-tested in
+//! `rust/tests/batched_decoding.rs`.
+//!
+//! Occupancy and staging volume are exported through [`BatchMetrics`]
+//! (the server appends them to `STATS`): with B sessions active, the
+//! weight-bytes-staged-per-token counter drops by ~B× relative to B
+//! independent passes.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::forward::{forward_batch, BatchLane, BatchScratch};
+use crate::engine::session::{Session, SessionGen};
+use crate::metrics::{BatchMetrics, ForwardProfile, TokenMeter};
+use crate::model::{LlamaConfig, QuantModel};
+use crate::ps::gqmv::GqmvExec;
+use crate::runtime::Runtime;
+use crate::sched::{ModelFetcher, SchedMode, Streamer};
+use crate::tensor;
+
+/// Knobs of the step-synchronous batch scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOpts {
+    /// Maximum lanes decoded per step (bounds scratch memory and the
+    /// per-step latency envelope).
+    pub max_batch: usize,
+    /// Maximum lanes waiting for a step slot before
+    /// [`BatchScheduler::generate`] rejects with a saturation error —
+    /// overload is explicit, never unbounded queue growth (each queued
+    /// lane holds a full KV cache).
+    pub max_pending: usize,
+    /// Weight-staging schedule of the shared streamer.  [`SchedMode::Async`]
+    /// prefetches layer *l+1* while the batched kernels of layer *l* run.
+    pub sched: SchedMode,
+}
+
+impl Default for BatchOpts {
+    fn default() -> Self {
+        BatchOpts { max_batch: 8, max_pending: 64, sched: SchedMode::Async }
+    }
+}
+
+/// Prefix of load-shedding errors from [`BatchScheduler::generate`]
+/// (scheduler saturation).  The server matches on this to count
+/// rejections; keep the two in lockstep via this constant.
+pub const BUSY_ERR_PREFIX: &str = "busy:";
+
+/// Messages from the decode thread back to a waiting [`BatchScheduler::generate`].
+enum LaneMsg {
+    /// One greedy token was produced for this lane.
+    Token { step: usize, id: u32 },
+    /// The lane retired; its session is returned to the caller along
+    /// with the decode-side cadence meter.  `Err` carries a
+    /// human-readable reason (step failure, cancellation, ...).
+    Done { sess: Box<Session>, meter: Option<TokenMeter>, result: Result<(), String> },
+}
+
+/// One queued/active generation request.
+struct LaneJob {
+    sess: Box<Session>,
+    prompt: Vec<u32>,
+    /// Forward passes done so far (prompt consumption + decoding).
+    fed: usize,
+    /// Last sampled token — the next feed once the prompt is consumed.
+    last: u32,
+    steps: usize,
+    produced: usize,
+    /// Decode-side cadence meter, baselined at this lane's first sampled
+    /// token — measures true decode cadence, independent of how fast the
+    /// caller drains its channel (a slow client must not skew rates).
+    meter: Option<TokenMeter>,
+    tx: Sender<LaneMsg>,
+    cancel: Arc<AtomicBool>,
+}
+
+struct SchedState {
+    pending: VecDeque<LaneJob>,
+    shutdown: bool,
+}
+
+/// Step-synchronous batched decoder shared by all serving workers.
+///
+/// Construction spawns one decode thread that owns the GQMV backend, the
+/// batch scratch and a weight [`Streamer`] over the shared model.  Callers
+/// submit work with [`BatchScheduler::generate`] (blocking, one call per
+/// request); the scheduler multiplexes all concurrent calls onto batched
+/// steps.  Call [`BatchScheduler::shutdown`] when done — the decode
+/// thread holds an `Arc` to the scheduler, so dropping the last external
+/// handle alone will not stop it.
+pub struct BatchScheduler {
+    cfg: LlamaConfig,
+    max_pending: usize,
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    metrics: BatchMetrics,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl BatchScheduler {
+    /// Spawn the decode thread over `model` with the given GQMV backend.
+    pub fn new(
+        model: Arc<QuantModel>,
+        exec: Box<dyn GqmvExec + Send>,
+        opts: BatchOpts,
+    ) -> Arc<Self> {
+        assert!(opts.max_batch >= 1);
+        assert!(opts.max_pending >= 1);
+        let sched = Arc::new(BatchScheduler {
+            cfg: model.cfg,
+            max_pending: opts.max_pending,
+            state: Mutex::new(SchedState { pending: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            metrics: BatchMetrics::default(),
+            worker: Mutex::new(None),
+        });
+        let thread_sched = Arc::clone(&sched);
+        let handle = std::thread::Builder::new()
+            .name("llamaf-batch-decode".into())
+            .spawn(move || {
+                // Whatever takes this thread down — normal shutdown, an
+                // init failure, or a panic mid-step — the guard marks the
+                // scheduler shut down and rejects queued lanes, so no
+                // caller ever blocks on a decode thread that is gone.
+                let _guard = ExitGuard(Arc::clone(&thread_sched));
+                decode_loop(thread_sched, model, exec, opts);
+            })
+            .expect("spawn batch decode thread");
+        *sched.worker.lock().unwrap() = Some(handle);
+        sched
+    }
+
+    /// Batch-occupancy / staging counters of the decode thread.
+    pub fn metrics(&self) -> &BatchMetrics {
+        &self.metrics
+    }
+
+    /// Run one greedy generation through the batch: token semantics
+    /// (reset, prompt consumption, argmax, step count) match
+    /// [`crate::engine::session::generate_session`] exactly, so outputs
+    /// are bit-identical to batch-1 serving.  Timing differs by design:
+    /// the returned rate/latency are metered on the decode thread —
+    /// inter-token decode cadence baselined at the lane's first sampled
+    /// token — so queue wait, prompt time, and the caller's own drain
+    /// speed do not skew them.  `on_token(step, id)` runs on *this*
+    /// thread per streamed token; returning an error cancels the lane at
+    /// the next step barrier (remaining tokens are discarded).
+    ///
+    /// Returns the session (so the caller can release it back to its
+    /// pool) plus the generation result.  The session is `None` only if
+    /// the decode thread died with the lane in flight.
+    pub fn generate(
+        &self,
+        mut sess: Session,
+        prompt_ids: &[u32],
+        steps: usize,
+        mut on_token: impl FnMut(usize, u32) -> Result<()>,
+    ) -> (Option<Session>, Result<SessionGen>) {
+        // Validation mirrors generate_session; a bad request must never
+        // reach the decode thread where it would poison a whole step.
+        if prompt_ids.is_empty() {
+            return (Some(sess), Err(anyhow!("empty prompt")));
+        }
+        if steps == 0 {
+            return (Some(sess), Err(anyhow!("steps must be >= 1")));
+        }
+        if prompt_ids.len() + steps > self.cfg.seq_len {
+            return (
+                Some(sess),
+                Err(anyhow!(
+                    "prompt ({}) + steps ({steps}) exceeds seq_len {}",
+                    prompt_ids.len(),
+                    self.cfg.seq_len
+                )),
+            );
+        }
+        if let Some(&bad) = prompt_ids.iter().find(|&&t| t as usize >= self.cfg.vocab_size) {
+            return (Some(sess), Err(anyhow!("prompt token {bad} out of range")));
+        }
+        sess.reset();
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let job = LaneJob {
+            sess: Box::new(sess),
+            prompt: prompt_ids.to_vec(),
+            fed: 0,
+            last: *prompt_ids.last().unwrap(),
+            steps,
+            produced: 0,
+            meter: None,
+            tx,
+            cancel: Arc::clone(&cancel),
+        };
+        {
+            let mut st =
+                self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if st.shutdown {
+                return (Some(*job.sess), Err(anyhow!("batch scheduler is shut down")));
+            }
+            if st.pending.len() >= self.max_pending {
+                return (
+                    Some(*job.sess),
+                    Err(anyhow!(
+                        "{BUSY_ERR_PREFIX} batch scheduler saturated ({} lanes pending)",
+                        st.pending.len()
+                    )),
+                );
+            }
+            st.pending.push_back(job);
+        }
+        self.cv.notify_all();
+
+        let mut generated = Vec::with_capacity(steps);
+        let mut cb_err: Option<anyhow::Error> = None;
+        loop {
+            match rx.recv() {
+                Ok(LaneMsg::Token { step, id }) => {
+                    generated.push(id);
+                    if cb_err.is_none() {
+                        if let Err(e) = on_token(step, id) {
+                            // client went away mid-stream: stop decoding
+                            // this lane at the next barrier, keep draining
+                            // so the session comes back
+                            cb_err = Some(e);
+                            cancel.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Ok(LaneMsg::Done { sess, meter, result }) => {
+                    let sess = Some(*sess);
+                    return match (cb_err, result) {
+                        (Some(e), _) => (sess, Err(e)),
+                        (None, Err(m)) => (sess, Err(anyhow!(m))),
+                        (None, Ok(())) => {
+                            // decode-side meter: true decode cadence,
+                            // baselined at the first sampled token —
+                            // excludes queue wait, prompt consumption and
+                            // the caller's own drain speed.  (steps == 1
+                            // reports rate 0: one token has no cadence.)
+                            let meter = meter.unwrap_or_default();
+                            let (p50, p99) = meter.p50_p99();
+                            (
+                                sess,
+                                Ok(SessionGen {
+                                    generated,
+                                    tok_per_s: meter.tok_per_s(),
+                                    latency_p50_s: p50,
+                                    latency_p99_s: p99,
+                                }),
+                            )
+                        }
+                    };
+                }
+                Err(_) => return (None, Err(anyhow!("batch decode thread died"))),
+            }
+        }
+    }
+
+    /// Stop accepting work, finish every in-flight lane, and join the
+    /// decode thread.  Idempotent.
+    pub fn shutdown(&self) {
+        {
+            self.state
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .shutdown = true;
+        }
+        self.cv.notify_all();
+        let handle = self.worker.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The decode thread: admit lanes at the step barrier, run one batched
+/// forward, emit tokens, retire finished lanes, repeat.
+fn decode_loop(
+    sched: Arc<BatchScheduler>,
+    model: Arc<QuantModel>,
+    mut exec: Box<dyn GqmvExec + Send>,
+    opts: BatchOpts,
+) {
+    let cfg = model.cfg;
+    // The streamer stages layers out of the Arc'd model ("DDR") into the
+    // device runtime, hiding the copy behind the batched kernels in async
+    // mode.  No compiled-kernel shapes are needed: the batched GQMV runs
+    // on the staged host copy through `exec`.
+    //
+    // Cost model, deliberately: staging copies every layer once per STEP
+    // (host fetch + device upload, exactly like `LlamafEngine` does per
+    // token) because the paper's PL cannot hold the model — streaming is
+    // the workload being amortized, and the prefetch thread hides it.
+    // A provider that skips staging entirely exists
+    // ([`crate::engine::forward::ResidentLayers`]) for contexts where
+    // the weights are genuinely resident.
+    #[cfg(not(feature = "pjrt"))]
+    let rt = Arc::new(Runtime::with_shapes(&[]));
+    // Known pjrt-feature limitation: the real device runtime needs the
+    // AOT artifacts and performs real uploads the CPU exec never reads;
+    // a missing artifacts dir fails every request with a clear error
+    // rather than serving.  (The pjrt feature additionally requires the
+    // vendored `xla` bindings to build at all — see rust/Cargo.toml.)
+    #[cfg(feature = "pjrt")]
+    let rt = match Runtime::load(std::path::Path::new(crate::ARTIFACTS_DIR)) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            fail_pending_forever(&sched, format!("batch runtime init failed: {e:#}"));
+            return;
+        }
+    };
+    let fetcher = ModelFetcher { model: Arc::clone(&model) };
+    let mut streamer = match Streamer::new(rt, fetcher, opts.sched) {
+        Ok(s) => s,
+        Err(e) => {
+            fail_pending_forever(&sched, format!("batch streamer init failed: {e:#}"));
+            return;
+        }
+    };
+    let mut scratch = BatchScratch::new(&cfg, opts.max_batch);
+    let mut active: Vec<LaneJob> = Vec::new();
+    // staged-bytes high-water already attributed to a recorded step;
+    // starting at 0 charges the construction-time layer-0 staging to the
+    // first step, keeping BatchMetrics.bytes_staged == Streamer.staged_bytes
+    let mut bytes_attributed = 0u64;
+
+    loop {
+        // ---- step barrier: retire/admit lanes ------------------------
+        {
+            let mut st = sched.state.lock().unwrap();
+            loop {
+                while active.len() < opts.max_batch {
+                    match st.pending.pop_front() {
+                        Some(j) => active.push(j),
+                        None => break,
+                    }
+                }
+                if !active.is_empty() {
+                    break;
+                }
+                if st.shutdown {
+                    return; // nothing active, nothing pending: drained
+                }
+                st = sched.cv.wait(st).unwrap();
+            }
+        }
+        // lanes whose client vanished leave at the barrier
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].cancel.load(Ordering::Relaxed) {
+                let mut j = active.swap_remove(i);
+                let meter = j.meter.take();
+                let _ = j.tx.send(LaneMsg::Done {
+                    sess: j.sess,
+                    meter,
+                    result: Err("canceled by client".into()),
+                });
+            } else {
+                i += 1;
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+
+        // ---- one step-synchronous batched forward --------------------
+        let mut prof = ForwardProfile::default();
+        let step_result = {
+            let mut lanes: Vec<BatchLane> = active
+                .iter_mut()
+                .map(|j| BatchLane {
+                    pos: j.sess.pos,
+                    token: if j.fed < j.prompt.len() { j.prompt[j.fed] } else { j.last },
+                    kv: &mut j.sess.kv,
+                })
+                .collect();
+            forward_batch(&model, &mut streamer, exec.as_mut(), &mut scratch, &mut lanes, &mut prof)
+        };
+        if let Err(e) = step_result {
+            // submit-time validation makes this unreachable in practice;
+            // if it happens, every lane of the step fails loudly and the
+            // sessions travel back to their callers
+            let msg = format!("batched decode step failed: {e:#}");
+            for mut j in active.drain(..) {
+                let meter = j.meter.take();
+                let _ =
+                    j.tx.send(LaneMsg::Done { sess: j.sess, meter, result: Err(msg.clone()) });
+            }
+            continue;
+        }
+        sched.metrics.record_step(active.len(), streamer.staged_bytes - bytes_attributed, &prof);
+        bytes_attributed = streamer.staged_bytes;
+
+        // ---- per-lane post-step: advance, sample, emit, retire -------
+        let mut keep = Vec::with_capacity(active.len());
+        for (b, mut j) in active.drain(..).enumerate() {
+            j.sess.pos += 1;
+            j.fed += 1;
+            let mut done = false;
+            if j.fed >= j.prompt.len() {
+                let next = tensor::argmax(scratch.logits(b)) as u32;
+                // cadence is metered HERE on the decode thread: baseline
+                // at the first sample, tick on each subsequent one
+                if j.meter.is_none() {
+                    j.meter = Some(TokenMeter::new());
+                } else if let Some(m) = j.meter.as_mut() {
+                    m.tick();
+                }
+                let step = j.produced;
+                j.produced += 1;
+                j.last = next;
+                let _ = j.tx.send(LaneMsg::Token { step, id: next });
+                done = j.produced >= j.steps;
+            }
+            if done {
+                let meter = j.meter.take();
+                let _ = j.tx.send(LaneMsg::Done { sess: j.sess, meter, result: Ok(()) });
+            } else {
+                keep.push(j);
+            }
+        }
+        active = keep;
+    }
+}
+
+/// Terminal decode-thread failure: reject everything queued and mark the
+/// scheduler shut down so future submissions fail fast.  Tolerates a
+/// poisoned mutex (the decode thread may have panicked while holding it).
+fn fail_pending_forever(sched: &BatchScheduler, msg: String) {
+    let mut st = sched.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    st.shutdown = true;
+    for mut j in st.pending.drain(..) {
+        let meter = j.meter.take();
+        let _ = j.tx.send(LaneMsg::Done { sess: j.sess, meter, result: Err(msg.clone()) });
+    }
+}
+
+/// Runs [`fail_pending_forever`] when the decode thread exits by ANY path
+/// (drop runs on panic unwind too).  Lanes active at a panic lose their
+/// senders when the unwinding drops them, so their callers get a
+/// "decode thread died" error instead of blocking forever.
+struct ExitGuard(Arc<BatchScheduler>);
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        fail_pending_forever(&self.0, "batch decode thread exited".into());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::forward::CpuEngine;
+    use crate::engine::generate::{generate, Sampler};
+    use crate::model::FloatModel;
+    use crate::ps::ScalarGqmv;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        }
+    }
+
+    fn tiny_model(seed: u64) -> Arc<QuantModel> {
+        Arc::new(QuantModel::from_float(&FloatModel::random(tiny_cfg(), seed)))
+    }
+
+    #[test]
+    fn single_lane_matches_batch1_generate() {
+        let qm = tiny_model(1);
+        let prompt = [1u32, 10, 11];
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let want = generate(&mut ref_engine, &prompt, 8, Sampler::Greedy, false).unwrap();
+
+        let sched = BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let mut streamed = Vec::new();
+        let (sess, out) = sched.generate(Session::new(&qm.cfg), &prompt, 8, |step, id| {
+            assert_eq!(step, streamed.len());
+            streamed.push(id);
+            Ok(())
+        });
+        let out = out.unwrap();
+        assert_eq!(out.generated, want.generated);
+        assert_eq!(streamed, want.generated);
+        // len-1 prompt feeds + 8 sampled forwards (the last generated
+        // token is never fed back)
+        assert_eq!(sess.expect("session returned").pos, prompt.len() - 1 + 8);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_rejected_with_session_returned() {
+        let qm = tiny_model(2);
+        let sched = BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let cfg = qm.cfg;
+        let (s, r) = sched.generate(Session::new(&cfg), &[], 4, |_, _| Ok(()));
+        assert!(s.is_some() && r.is_err(), "empty prompt");
+        let (s, r) = sched.generate(Session::new(&cfg), &[1, 2], 0, |_, _| Ok(()));
+        assert!(s.is_some() && r.is_err(), "zero steps");
+        let (s, r) = sched.generate(Session::new(&cfg), &[1, 2], 1000, |_, _| Ok(()));
+        assert!(s.is_some() && r.is_err(), "context overflow");
+        let (s, r) = sched.generate(Session::new(&cfg), &[9999], 4, |_, _| Ok(()));
+        assert!(s.is_some() && r.is_err(), "bad token");
+        sched.shutdown();
+        let (s, r) = sched.generate(Session::new(&cfg), &[1, 2], 4, |_, _| Ok(()));
+        assert!(s.is_some() && r.is_err(), "post-shutdown submit");
+    }
+
+    #[test]
+    fn callback_error_cancels_lane_and_returns_session() {
+        let qm = tiny_model(3);
+        let sched = BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let (sess, r) = sched.generate(Session::new(&qm.cfg), &[1, 5], 16, |step, _| {
+            anyhow::ensure!(step < 2, "client hung up");
+            Ok(())
+        });
+        assert!(sess.is_some(), "session must come back after cancel");
+        assert!(r.is_err());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drains() {
+        let qm = tiny_model(4);
+        let sched = BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let (sess, r) = sched.generate(Session::new(&qm.cfg), &[3, 4, 5], 4, |_, _| Ok(()));
+        assert!(r.is_ok());
+        assert!(sess.is_some());
+        sched.shutdown();
+        sched.shutdown();
+        assert_eq!(sched.metrics().steps(), 6, "3-token prompt + 4 steps = 6 forwards");
+    }
+}

@@ -22,28 +22,39 @@ use crate::tensor;
 
 /// A single-token incremental inference engine (batch = 1).
 pub trait Engine {
+    /// Model geometry this engine serves.
     fn cfg(&self) -> &LlamaConfig;
     /// Decode one token at `pos`, returning logits.  Component timings are
     /// accumulated into `prof` (Table II / VI accounting).
     fn forward(&mut self, token: u32, pos: usize, prof: &mut ForwardProfile) -> Result<&[f32]>;
+    /// Rewind to an empty context (new generation).
     fn reset(&mut self);
+    /// Human-readable engine/backend identifier.
     fn name(&self) -> String;
 }
 
 /// Pre-allocated working buffers — nothing allocates on the hot path.
 pub struct Scratch {
+    /// Residual stream (dim).
     pub x: Vec<f32>,
+    /// Normed/intermediate vector (dim).
     pub xb: Vec<f32>,
+    /// Fused QKV output (dim + 2·kv_dim).
     pub qkv: Vec<f32>,
+    /// Attention output (dim).
     pub att_out: Vec<f32>,
+    /// Fused W1|W3 output (2·hidden_dim).
     pub h13: Vec<f32>,
+    /// Classifier output (vocab_size).
     pub logits: Vec<f32>,
     /// quantized-activation buffers, sized for the largest GQMV input
     pub qbuf: Vec<i8>,
+    /// per-group activation scales matching [`Scratch::qbuf`]
     pub sbuf: Vec<f32>,
 }
 
 impl Scratch {
+    /// Allocate every buffer Algorithm 2 needs for `cfg`.
     pub fn new(cfg: &LlamaConfig) -> Self {
         let max_in = cfg.dim.max(cfg.hidden_dim);
         Scratch {
@@ -157,10 +168,258 @@ fn forward_pass(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Step-synchronous batched forward pass
+// ---------------------------------------------------------------------------
+
+/// Supplies each transformer layer's weights to [`forward_batch`], one
+/// layer at a time in ascending order.
+///
+/// Implementations: [`ResidentLayers`] hands out the `Arc`-shared model's
+/// layers directly (zero staging), and [`crate::sched::Streamer`] stages
+/// each layer host→device (sync or async prefetch) before lending its
+/// host copy — the paper's streamed-weights path, now amortized over a
+/// whole batch per call.
+pub trait LayerProvider {
+    /// Borrow layer `li`'s weights, staging them first if necessary.
+    fn provide(&mut self, li: usize) -> Result<&crate::model::QuantLayer>;
+}
+
+/// Resident-weight [`LayerProvider`]: layers come straight out of the
+/// shared quantized model, nothing is staged.
+pub struct ResidentLayers {
+    /// The shared quantized model whose layers are lent out.
+    pub model: Arc<QuantModel>,
+}
+
+impl LayerProvider for ResidentLayers {
+    fn provide(&mut self, li: usize) -> Result<&crate::model::QuantLayer> {
+        self.model
+            .layers
+            .get(li)
+            .ok_or_else(|| anyhow::anyhow!("layer {li} out of range"))
+    }
+}
+
+/// One decoding lane of a batched step: a session's KV cache plus the
+/// token to feed at its position.  Lanes are independent — only the
+/// weight traversal is shared.
+pub struct BatchLane<'a> {
+    /// This lane's private KV cache.
+    pub kv: &'a mut KvCache,
+    /// Decode position of `token` (the lane's session position).
+    pub pos: usize,
+    /// Token fed to the embedding lookup this step.
+    pub token: u32,
+}
+
+/// Pre-allocated working buffers for up to `max_batch` lanes — the
+/// batched analogue of [`Scratch`].  Per-GQMV inputs/outputs are packed
+/// contiguously (`nb × len`) so one [`GqmvExec::gqmv_batch`] call serves
+/// the whole step.
+pub struct BatchScratch {
+    /// Maximum number of lanes a single step may carry.
+    pub max_batch: usize,
+    dim: usize,
+    qkv_w: usize,
+    h2: usize,
+    vocab: usize,
+    x: Vec<f32>,
+    xb: Vec<f32>,
+    qkv: Vec<f32>,
+    att_out: Vec<f32>,
+    h13: Vec<f32>,
+    logits: Vec<f32>,
+    qbuf: Vec<i8>,
+    sbuf: Vec<f32>,
+}
+
+impl BatchScratch {
+    /// Allocate buffers for `max_batch` lanes of `cfg`-shaped decoding.
+    pub fn new(cfg: &LlamaConfig, max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        let b = max_batch;
+        let max_in = cfg.dim.max(cfg.hidden_dim);
+        BatchScratch {
+            max_batch,
+            dim: cfg.dim,
+            qkv_w: cfg.dim + 2 * cfg.kv_dim(),
+            h2: 2 * cfg.hidden_dim,
+            vocab: cfg.vocab_size,
+            x: vec![0.0; b * cfg.dim],
+            xb: vec![0.0; b * cfg.dim],
+            qkv: vec![0.0; b * (cfg.dim + 2 * cfg.kv_dim())],
+            att_out: vec![0.0; b * cfg.dim],
+            h13: vec![0.0; b * 2 * cfg.hidden_dim],
+            logits: vec![0.0; b * cfg.vocab_size],
+            qbuf: vec![0; b * max_in],
+            sbuf: vec![0.0; b * (max_in / cfg.gs)],
+        }
+    }
+
+    /// Logits of lane `b` after a [`forward_batch`] call.
+    pub fn logits(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.vocab..(b + 1) * self.vocab]
+    }
+}
+
+/// Quantize `nb` lane vectors (lane `b` at `x[b*x_stride .. +w.cols]`)
+/// and run one batched GQMV, billing quantize + matmul to `matrix_s`.
+#[allow(clippy::too_many_arguments)]
+fn quant_gqmv_batch(
+    exec: &mut dyn GqmvExec,
+    x: &[f32],
+    x_stride: usize,
+    w: &crate::quant::QuantizedTensor,
+    out: &mut [f32],
+    qbuf: &mut [i8],
+    sbuf: &mut [f32],
+    gs: usize,
+    nb: usize,
+    prof: &mut ForwardProfile,
+) -> Result<()> {
+    let t = Instant::now();
+    let n = w.cols;
+    let gpr = n / gs;
+    for b in 0..nb {
+        quantize_activation_into(
+            &x[b * x_stride..b * x_stride + n],
+            gs,
+            &mut qbuf[b * n..(b + 1) * n],
+            &mut sbuf[b * gpr..(b + 1) * gpr],
+        );
+    }
+    exec.gqmv_batch(&qbuf[..nb * n], &sbuf[..nb * gpr], w, &mut out[..nb * w.rows], nb)?;
+    prof.matrix_s += t.elapsed().as_secs_f64();
+    Ok(())
+}
+
+/// One step-synchronous batched forward pass: a single walk over the
+/// layers serves every lane before moving on, so a streamed
+/// [`LayerProvider`] stages each layer's weights exactly once per step
+/// instead of once per lane.
+///
+/// Per-lane arithmetic is the exact batch-1 sequence of `forward_pass`
+/// operations (same RMSNorm/RoPE/attention/SwiGLU calls, same
+/// quantization, same [`crate::ps::gqmv::gqmv_row`] cast chain), so each
+/// lane's logits — left in `s.logits(b)` — are **bit-identical** to a
+/// dedicated batch-1 forward of that lane's (token, pos, KV) state.
+/// Lane sessions' positions are *not* advanced; the caller does that
+/// after consuming the logits.
+pub fn forward_batch(
+    model: &QuantModel,
+    layers: &mut dyn LayerProvider,
+    exec: &mut dyn GqmvExec,
+    s: &mut BatchScratch,
+    lanes: &mut [BatchLane<'_>],
+    prof: &mut ForwardProfile,
+) -> Result<()> {
+    let cfg = model.cfg;
+    let nb = lanes.len();
+    anyhow::ensure!(nb >= 1, "empty batch");
+    anyhow::ensure!(nb <= s.max_batch, "batch {nb} exceeds scratch capacity {}", s.max_batch);
+    let (d, kv_d, hd, gs) = (cfg.dim, cfg.kv_dim(), cfg.head_dim(), cfg.gs);
+    let (qkv_w, h2) = (s.qkv_w, s.h2);
+    debug_assert_eq!(d, s.dim);
+    for lane in lanes.iter() {
+        anyhow::ensure!((lane.token as usize) < cfg.vocab_size, "token {} out of range", lane.token);
+        anyhow::ensure!(lane.pos < cfg.seq_len, "pos {} >= seq_len {}", lane.pos, cfg.seq_len);
+    }
+
+    let t0 = Instant::now();
+    for (b, lane) in lanes.iter().enumerate() {
+        model.tok_emb.dequantize_row(lane.token as usize, &mut s.x[b * d..(b + 1) * d]);
+    }
+    prof.other_s += t0.elapsed().as_secs_f64();
+
+    for li in 0..cfg.n_layers {
+        // stage (or receive prefetched) layer weights — ONCE for all lanes
+        let layer = layers.provide(li)?;
+
+        // RMSNorm + quantize + fused QKV GQMV (Alg. 2 l.3-4, batched)
+        let t = Instant::now();
+        for b in 0..nb {
+            tensor::rmsnorm(&mut s.xb[b * d..(b + 1) * d], &s.x[b * d..(b + 1) * d], &layer.att_norm);
+        }
+        prof.rmsnorm_s += t.elapsed().as_secs_f64();
+        quant_gqmv_batch(
+            exec, &s.xb, d, &layer.wqkv, &mut s.qkv, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+        )?;
+
+        // RoPE + KV store (l.5), per lane at its own position
+        let t = Instant::now();
+        for (b, lane) in lanes.iter_mut().enumerate() {
+            let qkv = &mut s.qkv[b * qkv_w..(b + 1) * qkv_w];
+            let (q, kvs) = qkv.split_at_mut(d);
+            let (k, v) = kvs.split_at_mut(kv_d);
+            tensor::rope(q, lane.pos, hd);
+            tensor::rope(k, lane.pos, hd);
+            lane.kv.store(li, lane.pos, k, v);
+        }
+        prof.rope_s += t.elapsed().as_secs_f64();
+
+        // multi-head attention on the PS (l.6-7), per lane on its own KV
+        let t = Instant::now();
+        for (b, lane) in lanes.iter().enumerate() {
+            let q = &s.qkv[b * qkv_w..b * qkv_w + d];
+            attention(&cfg, &*lane.kv, li, lane.pos, q, &mut s.att_out[b * d..(b + 1) * d]);
+        }
+        prof.attention_s += t.elapsed().as_secs_f64();
+
+        // quantize + Wo GQMV + residual (l.8-10)
+        quant_gqmv_batch(
+            exec, &s.att_out, d, &layer.wo, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+        )?;
+        let t = Instant::now();
+        for b in 0..nb {
+            tensor::add_assign(&mut s.x[b * d..(b + 1) * d], &s.xb[b * d..(b + 1) * d]);
+        }
+        prof.other_s += t.elapsed().as_secs_f64();
+
+        // FFN: RMSNorm + fused W1|W3 + SwiGLU + W2 + residual (l.11-15)
+        let t = Instant::now();
+        for b in 0..nb {
+            tensor::rmsnorm(&mut s.xb[b * d..(b + 1) * d], &s.x[b * d..(b + 1) * d], &layer.ffn_norm);
+        }
+        prof.rmsnorm_s += t.elapsed().as_secs_f64();
+        quant_gqmv_batch(
+            exec, &s.xb, d, &layer.w13, &mut s.h13, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+        )?;
+        let t = Instant::now();
+        for b in 0..nb {
+            let lane_h = &mut s.h13[b * h2..(b + 1) * h2];
+            let (h1, h3) = lane_h.split_at_mut(cfg.hidden_dim);
+            tensor::swiglu(h1, h3);
+        }
+        prof.swiglu_s += t.elapsed().as_secs_f64();
+        quant_gqmv_batch(
+            exec, &s.h13, h2, &layer.w2, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+        )?;
+        let t = Instant::now();
+        for b in 0..nb {
+            tensor::add_assign(&mut s.x[b * d..(b + 1) * d], &s.xb[b * d..(b + 1) * d]);
+        }
+        prof.other_s += t.elapsed().as_secs_f64();
+    }
+
+    // final RMSNorm + classifier (l.16-17)
+    let t = Instant::now();
+    for b in 0..nb {
+        tensor::rmsnorm(&mut s.xb[b * d..(b + 1) * d], &s.x[b * d..(b + 1) * d], &model.final_norm);
+    }
+    prof.rmsnorm_s += t.elapsed().as_secs_f64();
+    quant_gqmv_batch(
+        exec, &s.xb, d, &model.cls, &mut s.logits, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+    )?;
+    Ok(())
+}
+
 /// Resident-weight engine with a CPU GQMV backend.  Weights are shared
 /// (`Arc`); scratch and the default session are private per engine.
 pub struct CpuEngine {
+    /// Shared (read-only) quantized weights.
     pub model: Arc<QuantModel>,
+    /// GQMV backend executing Algorithm 1.
     pub exec: Box<dyn GqmvExec>,
     session: Session,
     s: Scratch,
@@ -175,6 +434,7 @@ impl CpuEngine {
         CpuEngine { exec, session: Session::new(&cfg), s: Scratch::new(&cfg), model }
     }
 
+    /// Name of the GQMV backend this engine runs on.
     pub fn backend_name(&self) -> &'static str {
         self.exec.name()
     }
@@ -370,6 +630,94 @@ mod tests {
         assert!(p.attention_s > 0.0);
         // matrix computation dominates even at nano scale
         assert!(p.matrix_s > p.rope_s);
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_sequential_sessions() {
+        use crate::engine::session::Session;
+        // 3 lanes at *different* positions and tokens, decoded batched,
+        // must equal 3 dedicated batch-1 session decodes bit for bit
+        let qm = Arc::new(tiny_model(11));
+        let cfg = qm.cfg;
+        let seqs = [[5u32, 8, 2, 60], [3, 40, 7, 1], [9, 9, 9, 9]];
+        let mut prof = ForwardProfile::default();
+
+        // reference: one engine per lane, sequential
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for seq in &seqs {
+            let mut e = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+            let mut lane = Vec::new();
+            for (pos, &t) in seq.iter().enumerate() {
+                lane.push(e.forward(t, pos, &mut prof).unwrap().to_vec());
+            }
+            want.push(lane);
+        }
+
+        // batched: one scratch + exec, lanes share each layer walk.
+        // lane 2 "joins late": it only enters the batch from step 2 on,
+        // at its own (earlier) position — the step barrier semantics.
+        let mut sessions: Vec<Session> = (0..3).map(|_| Session::new(&cfg)).collect();
+        let mut exec = ScalarGqmv;
+        let mut provider = ResidentLayers { model: Arc::clone(&qm) };
+        let mut bs = BatchScratch::new(&cfg, 4);
+        for step in 0..4 {
+            let joined: Vec<usize> =
+                if step < 2 { vec![0, 1] } else { vec![0, 1, 2] };
+            // late lane catches up on its missed steps first (sequentially)
+            if step == 2 {
+                for catchup in 0..2 {
+                    let mut lanes = vec![BatchLane {
+                        pos: sessions[2].pos,
+                        token: seqs[2][catchup],
+                        kv: &mut sessions[2].kv,
+                    }];
+                    forward_batch(&qm, &mut provider, &mut exec, &mut bs, &mut lanes, &mut prof)
+                        .unwrap();
+                    sessions[2].pos += 1;
+                    assert_eq!(bs.logits(0), &want[2][catchup][..], "catchup {catchup}");
+                }
+            }
+            let mut lanes: Vec<BatchLane> = Vec::new();
+            for (idx, sess) in sessions.iter_mut().enumerate() {
+                if joined.contains(&idx) {
+                    lanes.push(BatchLane {
+                        pos: sess.pos,
+                        token: seqs[idx][sess.pos],
+                        kv: &mut sess.kv,
+                    });
+                }
+            }
+            forward_batch(&qm, &mut provider, &mut exec, &mut bs, &mut lanes, &mut prof).unwrap();
+            drop(lanes);
+            for (b, &lane_idx) in joined.iter().enumerate() {
+                let pos = sessions[lane_idx].pos;
+                assert_eq!(
+                    bs.logits(b),
+                    &want[lane_idx][pos][..],
+                    "lane {lane_idx} diverged at pos {pos}"
+                );
+                sessions[lane_idx].pos += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_rejects_bad_lanes() {
+        use crate::engine::session::Session;
+        let qm = Arc::new(tiny_model(12));
+        let cfg = qm.cfg;
+        let mut sess = Session::new(&cfg);
+        let mut exec = ScalarGqmv;
+        let mut provider = ResidentLayers { model: Arc::clone(&qm) };
+        let mut bs = BatchScratch::new(&cfg, 2);
+        let mut prof = ForwardProfile::default();
+        let mut lanes =
+            vec![BatchLane { pos: 0, token: 9999, kv: &mut sess.kv }];
+        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &mut lanes, &mut prof)
+            .is_err());
+        let mut lanes: Vec<BatchLane> = Vec::new();
+        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &mut lanes, &mut prof)
+            .is_err());
     }
 
     #[test]

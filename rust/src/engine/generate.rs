@@ -17,7 +17,14 @@ pub enum Sampler {
     /// argmax (paper's evaluation mode)
     Greedy,
     /// nucleus sampling
-    TopP { p: f32, temperature: f32, seed: u64 },
+    TopP {
+        /// cumulative-probability cutoff
+        p: f32,
+        /// softmax temperature (> 0)
+        temperature: f32,
+        /// RNG seed (reproducible sampling)
+        seed: u64,
+    },
 }
 
 /// Result of a generation run.
@@ -27,9 +34,13 @@ pub struct GenOutput {
     pub ids: Vec<u32>,
     /// generated-only ids
     pub generated: Vec<u32>,
+    /// End-to-end decode throughput.
     pub tok_per_s: f64,
+    /// Median per-token latency in seconds.
     pub latency_p50_s: f64,
+    /// 99th-percentile per-token latency in seconds.
     pub latency_p99_s: f64,
+    /// Component timing breakdown accumulated over the run.
     pub profile: ForwardProfile,
 }
 

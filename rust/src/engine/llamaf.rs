@@ -102,6 +102,7 @@ impl LlamafEngine {
         })
     }
 
+    /// Weight-staging schedule this engine runs with.
     pub fn mode(&self) -> SchedMode {
         self.streamer.mode
     }

@@ -6,16 +6,21 @@
 //! * [`LlamafEngine`] — the paper's system: PS control flow + streamed
 //!   per-layer weights + GQMV executed by the AOT Pallas kernel via PJRT,
 //!   with sync or async staging ([`crate::sched`]).
+//! * [`BatchScheduler`] — the serving hot path: step-synchronous batched
+//!   decoding, one weight-streaming pass per step shared by every active
+//!   session ([`forward::forward_batch`]).
 //!
-//! Both produce identical logits (integration-tested) because every GQMV
-//! backend is bit-exact with Algorithm 1.
+//! All produce identical logits (integration-tested) because every GQMV
+//! backend is bit-exact with Algorithm 1, batched or not.
 
+pub mod batch;
 pub mod forward;
 pub mod generate;
 pub mod llamaf;
 pub mod ppl;
 pub mod session;
 
+pub use batch::{BatchOpts, BatchScheduler};
 pub use forward::{CpuEngine, Engine, Scratch};
 pub use generate::{generate, GenOutput, Sampler};
 pub use llamaf::LlamafEngine;

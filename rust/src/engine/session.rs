@@ -25,6 +25,7 @@ use crate::tensor;
 /// Mutable per-user decode state (everything `Arc`-shared weights are not).
 #[derive(Debug)]
 pub struct Session {
+    /// This session's private KV cache.
     pub kv: KvCache,
     /// Next decode position (== tokens consumed so far).
     pub pos: usize,
@@ -33,6 +34,7 @@ pub struct Session {
 }
 
 impl Session {
+    /// Fresh session at position 0 with an empty KV cache.
     pub fn new(cfg: &LlamaConfig) -> Self {
         Session { kv: KvCache::new(cfg), pos: 0, last_used: 0 }
     }
@@ -81,6 +83,7 @@ pub struct SessionPool {
 }
 
 impl SessionPool {
+    /// Pool for `cfg`-shaped sessions, at most `capacity` alive at once.
     pub fn new(cfg: LlamaConfig, capacity: usize) -> Self {
         assert!(capacity >= 1);
         SessionPool {
@@ -90,6 +93,7 @@ impl SessionPool {
         }
     }
 
+    /// Maximum number of sessions (idle + checked out).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -100,6 +104,8 @@ impl SessionPool {
         (g.idle.len(), g.in_use)
     }
 
+    /// Check out `id`'s session (or a fresh/recycled one).  See the type
+    /// docs for the eviction/busy rules.
     pub fn acquire(&self, id: u64) -> Result<Session, PoolBusy> {
         let mut g = self.inner.lock().unwrap();
         if let Some(sess) = g.idle.remove(&id) {
@@ -125,6 +131,8 @@ impl SessionPool {
         Ok(Session::new(&self.cfg))
     }
 
+    /// Return `id`'s session for later reuse (stamps it most recently
+    /// used).
     pub fn release(&self, id: u64, mut sess: Session) {
         let mut g = self.inner.lock().unwrap();
         g.clock += 1;
@@ -132,14 +140,26 @@ impl SessionPool {
         g.in_use = g.in_use.saturating_sub(1);
         g.idle.insert(id, sess);
     }
+
+    /// A checked-out session was lost and can never be released (e.g. the
+    /// decode thread died holding it): give its capacity slot back so
+    /// `in_use` accounting stays truthful.
+    pub fn forget(&self, _id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.in_use = g.in_use.saturating_sub(1);
+    }
 }
 
 /// Result of a session-driven generation.
 #[derive(Debug)]
 pub struct SessionGen {
+    /// Generated token ids (prompt excluded).
     pub generated: Vec<u32>,
+    /// End-to-end decode throughput.
     pub tok_per_s: f64,
+    /// Median per-token latency in seconds.
     pub latency_p50_s: f64,
+    /// 99th-percentile per-token latency in seconds.
     pub latency_p99_s: f64,
 }
 
@@ -231,7 +251,9 @@ mod tests {
         .unwrap();
         assert_eq!(out.generated, expect.generated);
         assert_eq!(streamed, expect.generated);
-        assert_eq!(sess.pos, prompt.len() + 8);
+        // len-1 prompt feeds + 8 sampled forwards advance the position
+        // (the final generated token is never fed back)
+        assert_eq!(sess.pos, prompt.len() - 1 + 8);
     }
 
     #[test]
@@ -288,6 +310,17 @@ mod tests {
         // id 2 survived; a fresh acquire(2) keeps its state
         let s2 = pool.acquire(2).unwrap();
         assert_eq!(s2.pos, 0);
+    }
+
+    #[test]
+    fn pool_forget_restores_capacity() {
+        let pool = SessionPool::new(tiny_cfg(), 1);
+        let _lost = pool.acquire(1).unwrap();
+        assert!(pool.acquire(2).is_err(), "at capacity");
+        // the checkout can never be released (owner gone): forget frees
+        // the slot for a fresh session
+        pool.forget(1);
+        assert!(pool.acquire(2).is_ok());
     }
 
     #[test]

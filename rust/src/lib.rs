@@ -19,9 +19,17 @@
 //!   contract so everything builds and tests offline.
 //!
 //! On top of the single-stream engine sits a concurrent serving layer
-//! ([`server`]): N workers share one `Arc`'d weight copy, per-client KV
-//! state lives in a bounded LRU [`engine::session::SessionPool`], and
-//! greedy outputs stay byte-identical to batch-1 serving.
+//! ([`server`]): protocol workers share one `Arc`'d weight copy and
+//! submit every request to a step-synchronous
+//! [`engine::batch::BatchScheduler`], which folds all active sessions
+//! into ONE batched pass per decode step — each layer's weights are
+//! staged once per step instead of once per session-token, attacking the
+//! paper's DDR-bandwidth bound at serving scale.  Per-client KV state
+//! lives in a bounded LRU [`engine::session::SessionPool`], and greedy
+//! outputs stay byte-identical to batch-1 serving.
+//!
+//! `docs/ARCHITECTURE.md` maps every module to its paper section;
+//! `docs/PROTOCOL.md` specifies the TCP wire protocol.
 //!
 //! The FPGA itself is additionally modelled by [`fpga`]: a
 //! cycle-approximate simulator of the paper's three-stage HLS dataflow
@@ -39,6 +47,9 @@
 pub mod bench;
 pub mod ckpt;
 pub mod cli;
+// The serving-path modules gate `missing_docs`: every public item must be
+// documented, enforced by the CI `cargo doc` job (RUSTDOCFLAGS=-D warnings).
+#[warn(missing_docs)]
 pub mod engine;
 pub mod exp;
 pub mod fpga;
@@ -47,7 +58,9 @@ pub mod model;
 pub mod ps;
 pub mod quant;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod sched;
+#[warn(missing_docs)]
 pub mod server;
 pub mod tensor;
 pub mod testutil;

@@ -34,8 +34,12 @@ COMMANDS
             [--sync|--async] [--top-p P --temperature T --seed S]
   serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
             [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
-            ps/ps-scalar/sim: N workers share one weight copy (sessions
-            pooled, LRU-evicted); llamaf: sequential batch-1 streaming
+            [--max-batch B] [--sync]
+            ps/ps-scalar/sim: concurrent requests are folded into
+            step-synchronous batched decoding over one shared weight
+            copy (up to B lanes/step, weights staged once per step;
+            --sync disables the async layer prefetch); llamaf:
+            sequential batch-1 streaming
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
@@ -146,6 +150,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 workers: args.get_usize("workers", 4)?,
                 queue_depth: args.get_usize("queue-depth", 64)?,
                 max_sessions: args.get_usize("max-sessions", 16)?,
+                max_batch: args.get_usize("max-batch", 8)?,
+                sync_staging: args.flag("sync"),
             };
             let threads = args.get_usize("threads", 4)?;
             let make_exec: Box<llamaf::server::ExecFactory> = match engine_kind.as_str() {
@@ -160,11 +166,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             };
             let server = llamaf::server::Server::bind(addr, qm.cfg.vocab_size)?;
             eprintln!(
-                "llamaf serving on {} ({} x{} workers, {} pooled sessions, queue {}) — \
+                "llamaf serving on {} ({} x{} workers, batch<= {}, {} pooled sessions, queue {}) — \
                  protocol: GEN/SGEN <steps> <prompt> | STATS | PING | SHUTDOWN | QUIT",
                 server.local_addr()?,
                 engine_kind,
                 opts.workers,
+                opts.max_batch,
                 opts.max_sessions,
                 opts.queue_depth,
             );

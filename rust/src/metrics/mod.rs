@@ -277,6 +277,98 @@ impl ServerMetrics {
     }
 }
 
+/// Counters of the step-synchronous batch scheduler: occupancy histogram
+/// plus the weight-staging volume that batching amortizes.  All methods
+/// take `&self`; one instance is shared by the decode thread (writer) and
+/// the `STATS` command (reader).
+///
+/// The headline derived quantity is [`BatchMetrics::bytes_per_token`]:
+/// with B sessions decoding, one step stages each layer once but advances
+/// B lane tokens, so bytes/token falls ~B× below the batch-1 figure
+/// (`n_layers × layer_stream_bytes`).
+#[derive(Default)]
+pub struct BatchMetrics {
+    steps: AtomicU64,
+    lane_tokens: AtomicU64,
+    bytes_staged: AtomicU64,
+    occupancy: Mutex<Histogram>,
+    profile: Mutex<ForwardProfile>,
+}
+
+impl BatchMetrics {
+    /// Record one batched step that carried `occupancy` lanes, staged
+    /// `bytes` of weights, and spent its time per `prof` (the step's
+    /// component breakdown, merged into the lifetime profile).
+    pub fn record_step(&self, occupancy: usize, bytes: u64, prof: &ForwardProfile) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.lane_tokens.fetch_add(occupancy as u64, Ordering::Relaxed);
+        self.bytes_staged.fetch_add(bytes, Ordering::Relaxed);
+        self.occupancy.lock().unwrap().record(occupancy as f64);
+        self.profile.lock().unwrap().merge(prof);
+    }
+
+    /// Lifetime component-time breakdown of the decode thread (Table II
+    /// framing: where do batched steps spend their time?).
+    pub fn profile(&self) -> ForwardProfile {
+        self.profile.lock().unwrap().clone()
+    }
+
+    /// Batched steps executed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Lane-tokens processed (one per lane per step, prompt feeds
+    /// included).
+    pub fn lane_tokens(&self) -> u64 {
+        self.lane_tokens.load(Ordering::Relaxed)
+    }
+
+    /// Total weight bytes staged by the shared streamer.
+    pub fn bytes_staged(&self) -> u64 {
+        self.bytes_staged.load(Ordering::Relaxed)
+    }
+
+    /// Mean lanes per step.
+    pub fn occupancy_mean(&self) -> f64 {
+        self.occupancy.lock().unwrap().mean()
+    }
+
+    /// Peak lanes in any single step.
+    pub fn occupancy_max(&self) -> f64 {
+        self.occupancy.lock().unwrap().max()
+    }
+
+    /// Weight bytes staged per lane-token — the bandwidth-amortization
+    /// headline (0 until the first step).
+    pub fn bytes_per_token(&self) -> f64 {
+        let toks = self.lane_tokens();
+        if toks == 0 {
+            0.0
+        } else {
+            self.bytes_staged() as f64 / toks as f64
+        }
+    }
+
+    /// One-line snapshot appended to the server's `STATS` reply.
+    pub fn summary(&self) -> String {
+        let prof = self.profile();
+        let total = prof.total();
+        let matrix_pct = if total > 0.0 { 100.0 * prof.matrix_s / total } else { 0.0 };
+        format!(
+            "batch_steps={} batch_tokens={} batch_mean={:.2} batch_max={:.0} \
+             bytes_staged={} bytes_per_tok={:.0} matrix_pct={:.0}",
+            self.steps(),
+            self.lane_tokens(),
+            self.occupancy_mean(),
+            self.occupancy_max(),
+            self.bytes_staged(),
+            self.bytes_per_token(),
+            matrix_pct,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,6 +451,42 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!(a.max() == 0.04);
+    }
+
+    #[test]
+    fn batch_metrics_amortization_math() {
+        let m = BatchMetrics::default();
+        // 10 steps at occupancy 4, each staging 1000 bytes
+        let prof = ForwardProfile { matrix_s: 0.9, attention_s: 0.1, ..Default::default() };
+        for _ in 0..10 {
+            m.record_step(4, 1000, &prof);
+        }
+        assert!((m.profile().matrix_s - 9.0).abs() < 1e-9, "profile merges per step");
+        assert_eq!(m.steps(), 10);
+        assert_eq!(m.lane_tokens(), 40);
+        assert_eq!(m.bytes_staged(), 10_000);
+        assert!((m.bytes_per_token() - 250.0).abs() < 1e-9);
+        assert!((m.occupancy_mean() - 4.0).abs() < 1e-9);
+        assert_eq!(m.occupancy_max(), 4.0);
+        let s = m.summary();
+        for field in ["batch_steps=10", "batch_tokens=40", "bytes_staged=10000", "bytes_per_tok=250"]
+        {
+            assert!(s.contains(field), "summary missing {field}: {s}");
+        }
+        // batch-1 baseline on the same workload stages 4x the bytes/token
+        let b1 = BatchMetrics::default();
+        for _ in 0..40 {
+            b1.record_step(1, 1000, &ForwardProfile::default());
+        }
+        assert!(b1.bytes_per_token() / m.bytes_per_token() >= 3.0);
+    }
+
+    #[test]
+    fn batch_metrics_empty_is_zero() {
+        let m = BatchMetrics::default();
+        assert_eq!(m.bytes_per_token(), 0.0);
+        assert_eq!(m.occupancy_mean(), 0.0);
+        assert_eq!(m.steps(), 0);
     }
 
     #[test]

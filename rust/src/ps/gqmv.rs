@@ -14,8 +14,43 @@ use crate::util::ThreadPool;
 /// A GQMV execution backend.  `xq`/`xs` are the run-time-quantized
 /// activation; `w` the streamed weight matrix; `out` receives f32 rows.
 pub trait GqmvExec {
+    /// Multiply `w` by one quantized activation vector (Algorithm 1).
     fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()>;
 
+    /// Multiply `w` by `batch` quantized activation vectors at once — the
+    /// batched-decoding hot path that amortizes one weight traversal over
+    /// a whole step.  Layouts are row-major and contiguous: `xq` is
+    /// `batch × w.cols`, `xs` is `batch × groups_per_row`, `out` is
+    /// `batch × w.rows`.
+    ///
+    /// Every output element must be produced by the exact Algorithm-1
+    /// cast chain of [`gqmv_row`], so results are **bit-identical** to
+    /// `batch` separate [`GqmvExec::gqmv`] calls regardless of backend or
+    /// loop order.  The default implementation is that per-vector loop;
+    /// backends override it to reuse each streamed weight row across the
+    /// batch (one DDR fetch of the row serves all `batch` MAC chains).
+    fn gqmv_batch(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        w: &QuantizedTensor,
+        out: &mut [f32],
+        batch: usize,
+    ) -> Result<()> {
+        check_shapes_batch(xq, xs, w, out, batch)?;
+        let (rows, cols, gpr) = (w.rows, w.cols, w.groups_per_row());
+        for b in 0..batch {
+            self.gqmv(
+                &xq[b * cols..(b + 1) * cols],
+                &xs[b * gpr..(b + 1) * gpr],
+                w,
+                &mut out[b * rows..(b + 1) * rows],
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Stable backend identifier (Table VI rows, serving banner).
     fn name(&self) -> &'static str;
 }
 
@@ -66,6 +101,35 @@ impl GqmvExec for ScalarGqmv {
         Ok(())
     }
 
+    fn gqmv_batch(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        w: &QuantizedTensor,
+        out: &mut [f32],
+        batch: usize,
+    ) -> Result<()> {
+        check_shapes_batch(xq, xs, w, out, batch)?;
+        let gpr = w.groups_per_row();
+        // Row-outer / batch-inner: each weight row is read from memory once
+        // and applied to every activation vector while hot — the CPU mirror
+        // of staging a weight row once per batched step (§III-B at B > 1).
+        for i in 0..w.rows {
+            let wq_row = &w.q[i * w.cols..(i + 1) * w.cols];
+            let ws_row = &w.s[i * gpr..(i + 1) * gpr];
+            for b in 0..batch {
+                out[b * w.rows + i] = gqmv_row(
+                    &xq[b * w.cols..(b + 1) * w.cols],
+                    &xs[b * gpr..(b + 1) * gpr],
+                    wq_row,
+                    ws_row,
+                    w.gs,
+                );
+            }
+        }
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "ps-scalar"
     }
@@ -110,6 +174,41 @@ impl GqmvExec for ThreadedGqmv {
         Ok(())
     }
 
+    fn gqmv_batch(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        w: &QuantizedTensor,
+        out: &mut [f32],
+        batch: usize,
+    ) -> Result<()> {
+        check_shapes_batch(xq, xs, w, out, batch)?;
+        let gpr = w.groups_per_row();
+        let macs = batch * w.rows * w.cols;
+        let serial_below = if macs < self.min_parallel_macs { w.rows + 1 } else { 0 };
+        let out_ptr = SendMutPtr(out.as_mut_ptr());
+        self.pool.parallel_for(w.rows, serial_below, |range| {
+            let p = &out_ptr;
+            for i in range {
+                let wq_row = &w.q[i * w.cols..(i + 1) * w.cols];
+                let ws_row = &w.s[i * gpr..(i + 1) * gpr];
+                for b in 0..batch {
+                    let v = gqmv_row(
+                        &xq[b * w.cols..(b + 1) * w.cols],
+                        &xs[b * gpr..(b + 1) * gpr],
+                        wq_row,
+                        ws_row,
+                        w.gs,
+                    );
+                    // SAFETY: row ranges are disjoint per chunk, so every
+                    // (b, i) output index is written by exactly one worker.
+                    unsafe { *p.0.add(b * w.rows + i) = v };
+                }
+            }
+        });
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "ps-threaded"
     }
@@ -132,6 +231,28 @@ pub(crate) fn check_shapes(
     }
     if out.len() != w.rows {
         anyhow::bail!("out len {} != rows {}", out.len(), w.rows);
+    }
+    Ok(())
+}
+
+pub(crate) fn check_shapes_batch(
+    xq: &[i8],
+    xs: &[f32],
+    w: &QuantizedTensor,
+    out: &[f32],
+    batch: usize,
+) -> Result<()> {
+    if batch == 0 {
+        anyhow::bail!("batch must be >= 1");
+    }
+    if xq.len() != batch * w.cols {
+        anyhow::bail!("xq len {} != batch {batch} x cols {}", xq.len(), w.cols);
+    }
+    if xs.len() != batch * (w.cols / w.gs) {
+        anyhow::bail!("xs len {} != batch {batch} x groups {}", xs.len(), w.cols / w.gs);
+    }
+    if out.len() != batch * w.rows {
+        anyhow::bail!("out len {} != batch {batch} x rows {}", out.len(), w.rows);
     }
     Ok(())
 }
@@ -202,6 +323,90 @@ mod tests {
         ScalarGqmv.gqmv(&xq, &xs, &w, &mut out).unwrap();
         let expect = 127.0 * 127.0 * n as f32 * 0.01 * 0.02;
         assert!((out[0] - expect).abs() / expect < 1e-5);
+    }
+
+    fn random_batch(
+        m: usize,
+        n: usize,
+        gs: usize,
+        batch: usize,
+        seed: u64,
+    ) -> (Vec<i8>, Vec<f32>, QuantizedTensor) {
+        let mut rng = Rng::new(seed);
+        let w = QuantizedTensor::from_f32(&rng.normal_vec(m * n, 0.5), m, n, gs);
+        let mut xq = Vec::with_capacity(batch * n);
+        let mut xs = Vec::with_capacity(batch * n / gs);
+        for _ in 0..batch {
+            let (q, s) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
+            xq.extend(q);
+            xs.extend(s);
+        }
+        (xq, xs, w)
+    }
+
+    /// Reference: `batch` independent per-vector calls.
+    fn per_vector(xq: &[i8], xs: &[f32], w: &QuantizedTensor, batch: usize) -> Vec<f32> {
+        let gpr = w.groups_per_row();
+        let mut out = vec![0.0; batch * w.rows];
+        for b in 0..batch {
+            ScalarGqmv
+                .gqmv(
+                    &xq[b * w.cols..(b + 1) * w.cols],
+                    &xs[b * gpr..(b + 1) * gpr],
+                    w,
+                    &mut out[b * w.rows..(b + 1) * w.rows],
+                )
+                .unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_batch_bit_identical_to_per_vector() {
+        for batch in [1usize, 2, 4, 8] {
+            let (xq, xs, w) = random_batch(40, 512, 128, batch, batch as u64);
+            let want = per_vector(&xq, &xs, &w, batch);
+            let mut got = vec![0.0; batch * w.rows];
+            ScalarGqmv.gqmv_batch(&xq, &xs, &w, &mut got, batch).unwrap();
+            assert_eq!(got, want, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn threaded_batch_bit_identical_to_per_vector() {
+        let pool = Arc::new(ThreadPool::new(4));
+        for batch in [2usize, 4, 8] {
+            let (xq, xs, w) = random_batch(64, 256, 256, batch, 100 + batch as u64);
+            let want = per_vector(&xq, &xs, &w, batch);
+            let mut th = ThreadedGqmv::new(pool.clone());
+            th.min_parallel_macs = 0; // force threading
+            let mut got = vec![0.0; batch * w.rows];
+            th.gqmv_batch(&xq, &xs, &w, &mut got, batch).unwrap();
+            assert_eq!(got, want, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn default_batch_impl_bit_identical() {
+        // a backend without an override (the dataflow sim) goes through the
+        // trait's default per-vector loop
+        let mut sim = crate::fpga::DataflowSim::new(crate::fpga::PlConfig::default());
+        let (xq, xs, w) = random_batch(16, 256, 256, 3, 7);
+        let want = per_vector(&xq, &xs, &w, 3);
+        let mut got = vec![0.0; 3 * w.rows];
+        sim.gqmv_batch(&xq, &xs, &w, &mut got, 3).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn batch_shape_mismatches_rejected() {
+        let (xq, xs, w) = random_batch(8, 256, 256, 2, 9);
+        let mut out = vec![0.0; 2 * 8];
+        assert!(ScalarGqmv.gqmv_batch(&xq, &xs, &w, &mut out, 0).is_err());
+        assert!(ScalarGqmv.gqmv_batch(&xq[..256], &xs, &w, &mut out, 2).is_err());
+        assert!(ScalarGqmv.gqmv_batch(&xq, &xs[..1], &w, &mut out, 2).is_err());
+        let mut short = vec![0.0; 8];
+        assert!(ScalarGqmv.gqmv_batch(&xq, &xs, &w, &mut short, 2).is_err());
     }
 
     #[test]

@@ -30,23 +30,32 @@ use crate::runtime::{DeviceWeights, Runtime};
 /// Scheduling policy for weight staging.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedMode {
+    /// Stage layer *l*, then compute layer *l* (Fig. 2 top).
     Sync,
+    /// Prefetch layer *l+1* while layer *l* computes (Fig. 2 bottom).
     Async,
 }
 
 /// A layer staged on the device: host copies (norm vectors + shapes) plus
 /// device-resident GQMV weight buffers.
 pub struct PreparedLayer {
+    /// Host-side staged copy (norm vectors + the quantized matrices).
     pub host: QuantLayer,
+    /// Device buffer of the fused Wq‖Wk‖Wv matrix.
     pub wqkv: DeviceWeights,
+    /// Device buffer of Wo.
     pub wo: DeviceWeights,
+    /// Device buffer of the fused W1‖W3 matrix.
     pub w13: DeviceWeights,
+    /// Device buffer of W2.
     pub w2: DeviceWeights,
 }
 
 /// Source of host-side layer weights ("DDR").
 pub trait LayerFetcher: Send {
+    /// Produce a host copy of layer `layer`'s weights.
     fn fetch(&mut self, layer: usize) -> Result<QuantLayer>;
+    /// Number of transformer layers this source serves.
     fn n_layers(&self) -> usize;
 }
 
@@ -56,10 +65,12 @@ pub struct DiskFetcher {
 }
 
 impl DiskFetcher {
+    /// Open an LFQ8 checkpoint for layer-at-a-time streaming.
     pub fn open(path: &std::path::Path) -> Result<Self> {
         Ok(DiskFetcher { src: Q8LayerSource::open(path)? })
     }
 
+    /// Model geometry read from the checkpoint header.
     pub fn cfg(&self) -> LlamaConfig {
         self.src.cfg
     }
@@ -79,6 +90,7 @@ impl LayerFetcher for DiskFetcher {
 /// mmap'd model into the pinned kernel buffer — the staging the paper's
 /// async schedule hides).
 pub struct MemFetcher {
+    /// The in-memory layer store shared with the owner of the weights.
     pub layers: Arc<Vec<QuantLayer>>,
 }
 
@@ -95,6 +107,31 @@ impl LayerFetcher for MemFetcher {
     }
 }
 
+/// Serves layers out of a shared [`crate::model::QuantModel`]
+/// (clone-on-fetch, like
+/// [`MemFetcher`], without duplicating the layer store).  This is how the
+/// batch scheduler streams weights: the `Arc`'d model *is* the "DDR", and
+/// each fetch is the staging memcpy that the async prefetch thread hides
+/// behind the batched kernels.
+pub struct ModelFetcher {
+    /// The shared quantized model whose layers are streamed.
+    pub model: Arc<crate::model::QuantModel>,
+}
+
+impl LayerFetcher for ModelFetcher {
+    fn fetch(&mut self, layer: usize) -> Result<QuantLayer> {
+        self.model
+            .layers
+            .get(layer)
+            .cloned()
+            .with_context(|| format!("layer {layer} out of range"))
+    }
+
+    fn n_layers(&self) -> usize {
+        self.model.layers.len()
+    }
+}
+
 fn stage(rt: &Runtime, host: QuantLayer) -> Result<PreparedLayer> {
     let wqkv = rt.upload(&host.wqkv)?;
     let wo = rt.upload(&host.wo)?;
@@ -107,6 +144,7 @@ fn stage(rt: &Runtime, host: QuantLayer) -> Result<PreparedLayer> {
 pub struct Streamer {
     rt: Arc<Runtime>,
     fetcher: Arc<Mutex<dyn LayerFetcher>>,
+    /// Staging schedule ([`SchedMode::Sync`] or [`SchedMode::Async`]).
     pub mode: SchedMode,
     n_layers: usize,
     current: Option<(usize, PreparedLayer)>,
@@ -117,6 +155,10 @@ pub struct Streamer {
     pub total_transfer_s: f64,
     /// Number of layer stagings performed.
     pub transfers: u64,
+    /// Total weight bytes staged host→device (streamed representation:
+    /// int8 data + f32 scales + norms).  The batched-decoding win is this
+    /// counter growing per *step* instead of per *session-token*.
+    pub staged_bytes: u64,
 }
 
 impl Streamer {
@@ -138,11 +180,13 @@ impl Streamer {
             blocked_transfer_s: 0.0,
             total_transfer_s: 0.0,
             transfers: 0,
+            staged_bytes: 0,
         };
         let t = Instant::now();
         let l0 = s.fetch_and_stage(0)?;
         s.total_transfer_s += t.elapsed().as_secs_f64();
         s.transfers += 1;
+        s.staged_bytes += l0.host.stream_bytes() as u64;
         s.current = Some((0, l0));
         Ok(s)
     }
@@ -187,6 +231,7 @@ impl Streamer {
                     self.blocked_transfer_s += t.elapsed().as_secs_f64();
                     self.total_transfer_s += bg_s;
                     self.transfers += 1;
+                    self.staged_bytes += lay.host.stream_bytes() as u64;
                     lay
                 } else {
                     // wrong prefetch (e.g. after reset): discard, fetch inline
@@ -197,6 +242,7 @@ impl Streamer {
                     self.blocked_transfer_s += dt;
                     self.total_transfer_s += dt;
                     self.transfers += 1;
+                    self.staged_bytes += lay.host.stream_bytes() as u64;
                     lay
                 }
             } else {
@@ -206,6 +252,7 @@ impl Streamer {
                 self.blocked_transfer_s += dt;
                 self.total_transfer_s += dt;
                 self.transfers += 1;
+                self.staged_bytes += lay.host.stream_bytes() as u64;
                 lay
             };
             self.current = Some((li, staged));
@@ -259,8 +306,19 @@ impl Streamer {
         self.pending.as_ref().map(|(pi, _)| *pi)
     }
 
+    /// Number of transformer layers this streamer cycles through.
     pub fn n_layers(&self) -> usize {
         self.n_layers
+    }
+}
+
+impl crate::engine::forward::LayerProvider for Streamer {
+    /// Streamed provision: obtain the staged layer (possibly consuming the
+    /// async prefetch) and hand its host copy to the batched forward pass.
+    /// One call per (layer, step) regardless of how many lanes are decoded,
+    /// which is exactly the ~B× staging reduction of batched decoding.
+    fn provide(&mut self, li: usize) -> Result<&QuantLayer> {
+        Ok(&Streamer::layer(self, li)?.host)
     }
 }
 
@@ -281,7 +339,9 @@ impl Drop for Streamer {
 /// Per-layer modeled times.
 #[derive(Clone, Copy, Debug)]
 pub struct LayerTimes {
+    /// Modeled DDR→PL staging time of one layer's weights.
     pub transfer_s: f64,
+    /// Modeled kernel time of one layer's four GQMV launches.
     pub kernel_s: f64,
 }
 
@@ -458,6 +518,20 @@ mod streamer_tests {
         assert_eq!(s.pending_layer(), Some(1), "layer 0 resident -> stage layer 1");
         assert_layer_is(&mut s, 0, &layers);
         assert_eq!(s.pending_layer(), Some(1));
+    }
+
+    #[test]
+    fn staged_bytes_tracks_every_transfer() {
+        let (mut s, layers) = setup(SchedMode::Async);
+        let per = layers[0].stream_bytes() as u64;
+        assert_eq!(s.staged_bytes, per, "layer 0 staged at construction");
+        for li in 0..4 {
+            assert_layer_is(&mut s, li, &layers);
+            // repeated access must not re-stage
+            assert_layer_is(&mut s, li, &layers);
+        }
+        assert_eq!(s.staged_bytes, s.transfers * per);
+        assert_eq!(s.transfers, 4, "one staging per distinct layer");
     }
 
     #[test]

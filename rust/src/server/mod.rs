@@ -1,17 +1,22 @@
 //! Line-oriented generation server.
 //!
-//! Two serving modes share one TCP protocol:
+//! Two serving modes share one TCP protocol (specified in
+//! `docs/PROTOCOL.md`):
 //!
 //! * **Legacy batch-1** ([`Server::serve`]) — requests served sequentially
 //!   from a single engine (the paper's real-time embedded setting, where
 //!   batch-1 latency is the constraint).  Works with any [`Engine`],
 //!   including the weight-streaming `LlamafEngine`.
-//! * **Concurrent shared-weight** ([`Server::serve_shared`]) — a
-//!   multi-threaded accept loop feeding a bounded connection queue drained
-//!   by N workers.  Every worker owns an engine (scratch + GQMV backend)
-//!   built on ONE `Arc`-shared copy of the quantized weights; per-client
-//!   KV state comes from a capacity-bounded [`SessionPool`] with LRU
-//!   eviction.  Greedy outputs are byte-identical to batch-1 serving.
+//! * **Concurrent batched** ([`Server::serve_shared`]) — a multi-threaded
+//!   accept loop feeding a bounded connection queue drained by N protocol
+//!   workers.  Workers do not run private forward passes: every `GEN` /
+//!   `SGEN` is submitted to one shared
+//!   [`BatchScheduler`](crate::engine::batch::BatchScheduler), whose
+//!   decode thread folds all concurrent requests into step-synchronous
+//!   batched passes — each layer's weights are staged once per step for
+//!   the whole batch.  Per-client KV state comes from a capacity-bounded
+//!   [`SessionPool`] with LRU eviction.  Greedy outputs are byte-identical
+//!   to batch-1 serving.
 //!
 //! Protocol (one request per line over TCP):
 //!   `GEN <steps> <prompt text...>`  →  one line: `OK <tok/s> | <text>`
@@ -19,6 +24,8 @@
 //!                                      token, then `DONE <n> <tok/s>`
 //!                                      (shared mode)
 //!   `STATS`                         →  one-line metrics snapshot
+//!                                      (sessions, queue, latency, batch
+//!                                      occupancy, bytes staged)
 //!   `PING`                          →  `PONG`
 //!   `SHUTDOWN`                      →  `OK shutting down`; drains queued
 //!                                      connections, then exits (shared)
@@ -37,40 +44,58 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::engine::forward::{CpuEngine, Engine};
+use crate::engine::batch::{BatchOpts, BatchScheduler};
+use crate::engine::forward::Engine;
 use crate::engine::generate::{generate, Sampler};
-use crate::engine::session::{generate_session, Session, SessionPool};
+use crate::engine::session::{Session, SessionPool};
 use crate::metrics::ServerMetrics;
-use crate::model::QuantModel;
+use crate::model::{LlamaConfig, QuantModel};
 use crate::ps::gqmv::GqmvExec;
+use crate::sched::SchedMode;
 use crate::tokenizer::Tokenizer;
 
-/// Factory building one GQMV backend per worker (shared across threads).
-pub type ExecFactory = dyn Fn() -> Box<dyn GqmvExec> + Sync;
+/// Factory building GQMV backends (the batch scheduler's decode thread
+/// gets one; the backend must be `Send` to move onto it).
+pub type ExecFactory = dyn Fn() -> Box<dyn GqmvExec + Send> + Sync;
 
 /// Knobs of the concurrent serving mode.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOpts {
-    /// Worker threads, each owning one engine on the shared weights.
+    /// Protocol worker threads (connection parsing + streaming replies).
     pub workers: usize,
     /// Pending-connection queue bound; overflow is answered `ERR busy`.
     pub queue_depth: usize,
     /// Session-pool capacity (bounds total KV-cache memory).
     pub max_sessions: usize,
+    /// Maximum lanes per batched decode step.
+    pub max_batch: usize,
+    /// Stage layer weights synchronously instead of via the async
+    /// prefetch (Fig. 2 top vs bottom; for A/B measurement).
+    pub sync_staging: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { workers: 4, queue_depth: 64, max_sessions: 16 }
+        ServeOpts {
+            workers: 4,
+            queue_depth: 64,
+            max_sessions: 16,
+            max_batch: 8,
+            sync_staging: false,
+        }
     }
 }
 
 /// What a `serve_shared` run did (tests and the CLI summary).
 #[derive(Clone, Copy, Debug)]
 pub struct ServeReport {
+    /// Connections taken by the accept loop (including rejected ones).
     pub accepted: usize,
+    /// Completed generation requests.
     pub requests: u64,
+    /// Connections/requests answered `ERR busy`.
     pub rejected: u64,
+    /// Tokens generated across all requests.
     pub tokens: u64,
 }
 
@@ -81,6 +106,8 @@ struct Shared {
     shutdown: AtomicBool,
     pool: SessionPool,
     metrics: ServerMetrics,
+    sched: Arc<BatchScheduler>,
+    cfg: LlamaConfig,
     next_conn: AtomicU64,
     workers_live: AtomicUsize,
     addr: std::net::SocketAddr,
@@ -96,8 +123,11 @@ impl Shared {
     }
 }
 
+/// A bound TCP generation server (see the module docs for the protocol).
 pub struct Server {
+    /// The bound listener the accept loop runs on.
     pub listener: TcpListener,
+    /// Byte-level tokenizer shared by every connection.
     pub tokenizer: Tokenizer,
 }
 
@@ -108,6 +138,7 @@ impl Server {
         Ok(Server { listener, tokenizer: Tokenizer::new(vocab_size) })
     }
 
+    /// Address the listener actually bound (resolves ephemeral ports).
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
@@ -173,11 +204,13 @@ impl Server {
     // Concurrent shared-weight mode
     // ------------------------------------------------------------------
 
-    /// Serve with `opts.workers` threads sharing one weight copy.
+    /// Serve with `opts.workers` protocol threads over one shared weight
+    /// copy, decoding through a step-synchronous
+    /// [`BatchScheduler`](crate::engine::batch::BatchScheduler).
     ///
-    /// `make_exec` builds each worker's GQMV backend.  `max_conns` bounds
-    /// how many connections the accept loop takes before draining and
-    /// returning (None = until `SHUTDOWN`); rejected (queue-full)
+    /// `make_exec` builds the decode thread's GQMV backend.  `max_conns`
+    /// bounds how many connections the accept loop takes before draining
+    /// and returning (None = until `SHUTDOWN`); rejected (queue-full)
     /// connections count as accepted.
     pub fn serve_shared(
         &self,
@@ -188,29 +221,58 @@ impl Server {
     ) -> Result<ServeReport> {
         anyhow::ensure!(opts.workers >= 1, "need at least one worker");
         anyhow::ensure!(opts.queue_depth >= 1, "need a queue depth of at least 1");
+        anyhow::ensure!(opts.max_batch >= 1, "need a batch capacity of at least 1");
+        // resolve the address BEFORE spawning the decode thread: any `?`
+        // between scheduler creation and `sched.shutdown()` would leak it
+        let addr = self.local_addr()?;
+        let sched = BatchScheduler::new(
+            Arc::clone(&model),
+            make_exec(),
+            BatchOpts {
+                max_batch: opts.max_batch,
+                // a lane requires a checked-out session, so the pool
+                // already caps concurrent lanes; mirror that bound here
+                max_pending: opts.max_sessions.max(opts.max_batch),
+                sched: if opts.sync_staging { SchedMode::Sync } else { SchedMode::Async },
+            },
+        );
         let shared = Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             pool: SessionPool::new(model.cfg, opts.max_sessions),
             metrics: ServerMetrics::default(),
+            sched: Arc::clone(&sched),
+            cfg: model.cfg,
             next_conn: AtomicU64::new(0),
             workers_live: AtomicUsize::new(0),
-            addr: self.local_addr()?,
+            addr,
         };
         let mut accepted = 0usize;
 
-        std::thread::scope(|scope| -> Result<()> {
+        // Shut the decode thread down on EVERY exit path: a panic inside
+        // the scope (e.g. a worker assertion) unwinds past the normal
+        // call below, and an un-shutdown scheduler pins its thread, the
+        // scratch, the streamer, and a model Arc for the process
+        // lifetime.  shutdown() is idempotent, so the guard and the
+        // explicit call coexist.
+        struct ShutdownGuard<'a>(&'a BatchScheduler);
+        impl Drop for ShutdownGuard<'_> {
+            fn drop(&mut self) {
+                self.0.shutdown();
+            }
+        }
+        let shutdown_guard = ShutdownGuard(&sched);
+
+        let scope_result = std::thread::scope(|scope| -> Result<()> {
             for wi in 0..opts.workers {
                 let shared = &shared;
-                let model = Arc::clone(&model);
                 std::thread::Builder::new()
                     .name(format!("llamaf-serve-{wi}"))
                     .spawn_scoped(scope, move || {
                         shared.workers_live.fetch_add(1, Ordering::SeqCst);
-                        let mut engine = CpuEngine::new(model, make_exec());
                         while let Some(conn) = next_conn(shared) {
-                            if let Err(e) = self.handle_shared_conn(conn, &mut engine, shared) {
+                            if let Err(e) = self.handle_shared_conn(conn, shared) {
                                 eprintln!("llamaf-serve-{wi}: connection error: {e:#}");
                             }
                         }
@@ -250,7 +312,10 @@ impl Server {
             shared.shutdown.store(true, Ordering::SeqCst);
             shared.cv.notify_all();
             Ok(())
-        })?;
+        });
+        // All workers have joined; no lanes can be in flight any more.
+        drop(shutdown_guard);
+        scope_result?;
 
         Ok(ServeReport {
             accepted,
@@ -260,12 +325,7 @@ impl Server {
         })
     }
 
-    fn handle_shared_conn(
-        &self,
-        stream: TcpStream,
-        engine: &mut CpuEngine,
-        shared: &Shared,
-    ) -> Result<()> {
+    fn handle_shared_conn(&self, stream: TcpStream, shared: &Shared) -> Result<()> {
         let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
         let mut out = stream.try_clone()?;
         let reader = BufReader::new(stream);
@@ -284,7 +344,7 @@ impl Server {
             if line == "QUIT" {
                 break;
             }
-            let reply = self.shared_command(&line, engine, shared, conn_id, &mut session, &mut out);
+            let reply = self.shared_command(&line, shared, conn_id, &mut session, &mut out);
             match reply {
                 Ok(Some(r)) => {
                     if out.write_all(r.as_bytes()).and_then(|_| out.write_all(b"\n")).is_err() {
@@ -313,7 +373,6 @@ impl Server {
     fn shared_command(
         &self,
         line: &str,
-        engine: &mut CpuEngine,
         shared: &Shared,
         conn_id: u64,
         session: &mut Option<Session>,
@@ -329,10 +388,11 @@ impl Server {
         if line == "STATS" {
             let (idle, in_use) = shared.pool.counts();
             return Ok(Some(format!(
-                "OK sessions_idle={idle} sessions_busy={in_use} sessions_cap={} workers={} {}",
+                "OK sessions_idle={idle} sessions_busy={in_use} sessions_cap={} workers={} {} {}",
                 shared.pool.capacity(),
                 shared.workers_live.load(Ordering::SeqCst),
-                shared.metrics.summary()
+                shared.metrics.summary(),
+                shared.sched.metrics().summary(),
             )));
         }
         let (streaming, rest) = if let Some(r) = line.strip_prefix("SGEN ") {
@@ -343,7 +403,7 @@ impl Server {
             anyhow::bail!("unknown command (GEN/SGEN/STATS/PING/SHUTDOWN/QUIT)")
         };
 
-        let (steps, prompt) = parse_gen(rest, engine.cfg().seq_len)?;
+        let (steps, prompt) = parse_gen(rest, shared.cfg.seq_len)?;
         if session.is_none() {
             match shared.pool.acquire(conn_id) {
                 Ok(s) => *session = Some(s),
@@ -353,20 +413,40 @@ impl Server {
                 }
             }
         }
-        let sess = session.as_mut().expect("session acquired above");
+        let sess = session.take().expect("session acquired above");
+        let prompt_ids = self.tokenizer.encode(prompt, true);
 
+        // Submit to the shared batch scheduler: the decode thread folds
+        // this request into its step-synchronous batch; tokens stream
+        // back through the closure on THIS thread, so a slow client
+        // never stalls the batch.
         let t = Instant::now();
-        let gen = if streaming {
-            generate_session(engine, sess, &self.tokenizer.encode(prompt, true), steps, |i, id| {
+        let (sess_back, gen) = if streaming {
+            shared.sched.generate(sess, &prompt_ids, steps, |i, id| {
                 let piece = self.tokenizer.decode_one(id).replace('\n', " ");
                 out.write_all(format!("TOK {i} {id} {piece}\n").as_bytes())?;
                 out.flush()?;
                 Ok(())
-            })?
+            })
         } else {
-            generate_session(engine, sess, &self.tokenizer.encode(prompt, true), steps, |_, _| {
-                Ok(())
-            })?
+            shared.sched.generate(sess, &prompt_ids, steps, |_, _| Ok(()))
+        };
+        *session = sess_back; // released to the pool when the conn closes
+        if session.is_none() {
+            // the session died with the decode thread; give its capacity
+            // slot back so the pool's accounting stays truthful
+            shared.pool.forget(conn_id);
+        }
+        let gen = match gen {
+            Ok(g) => g,
+            Err(e) => {
+                // scheduler saturation is load shedding: count it like
+                // the other busy rejections so STATS stays truthful
+                if e.to_string().starts_with(crate::engine::batch::BUSY_ERR_PREFIX) {
+                    shared.metrics.record_rejected();
+                }
+                return Err(e);
+            }
         };
         shared.metrics.record_request(t.elapsed().as_secs_f64(), gen.generated.len() as u64);
 

@@ -1,0 +1,241 @@
+//! Integration: step-synchronous batched decoding.
+//!
+//! Property under test — the tentpole invariant of the batch scheduler:
+//! for any batch size B ∈ {2, 4, 8}, any interleaving, and lanes that
+//! join or leave mid-flight, every lane's greedy token stream is
+//! **bit-identical** to sequential batch-1 generation of the same
+//! prompt.  Plus the bandwidth claim: with 4 concurrent sessions the
+//! weight-bytes-staged-per-token counter drops ≥3× below 4 independent
+//! passes.
+//!
+//! Runs on the synthetic tiny model — no artifacts required.
+
+use std::sync::{Arc, Barrier};
+
+use llamaf::engine::batch::{BatchOpts, BatchScheduler};
+use llamaf::engine::forward::CpuEngine;
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::engine::session::Session;
+use llamaf::model::{FloatModel, LlamaConfig, QuantModel};
+use llamaf::ps::ScalarGqmv;
+
+fn tiny_cfg() -> LlamaConfig {
+    LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 4,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 64,
+        seq_len: 64,
+        gs: 32,
+    }
+}
+
+fn tiny_model(seed: u64) -> Arc<QuantModel> {
+    Arc::new(QuantModel::from_float(&FloatModel::random(tiny_cfg(), seed)))
+}
+
+/// Batch-1 reference: a dedicated engine decoding the prompt greedily.
+fn batch1_reference(model: &Arc<QuantModel>, prompt: &[u32], steps: usize) -> Vec<u32> {
+    let mut engine = CpuEngine::new(Arc::clone(model), Box::new(ScalarGqmv));
+    generate(&mut engine, prompt, steps, Sampler::Greedy, false).unwrap().generated
+}
+
+/// Run `specs` lanes concurrently through `sched`, asserting each lane's
+/// streamed and returned tokens equal its batch-1 reference.
+fn run_lanes_and_check(
+    model: &Arc<QuantModel>,
+    sched: &Arc<BatchScheduler>,
+    specs: &[(Vec<u32>, usize)],
+    sync_start: bool,
+) {
+    let barrier = Arc::new(Barrier::new(specs.len()));
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|(prompt, steps)| {
+            let model = Arc::clone(model);
+            let sched = Arc::clone(sched);
+            let prompt = prompt.clone();
+            let steps = *steps;
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let want = batch1_reference(&model, &prompt, steps);
+                if sync_start {
+                    barrier.wait();
+                }
+                let mut streamed = Vec::new();
+                let (sess, out) =
+                    sched.generate(Session::new(&model.cfg), &prompt, steps, |step, id| {
+                        assert_eq!(step, streamed.len(), "out-of-order token");
+                        streamed.push(id);
+                        Ok(())
+                    });
+                let out = out.expect("batched generation failed");
+                assert!(sess.is_some(), "session not returned");
+                assert_eq!(out.generated, want, "lane diverged from batch-1");
+                assert_eq!(streamed, want, "streamed tokens diverged");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn batched_decode_bit_identical_for_b_2_4_8() {
+    let model = tiny_model(21);
+    for &bsz in &[2usize, 4, 8] {
+        let sched = BatchScheduler::new(
+            Arc::clone(&model),
+            Box::new(ScalarGqmv),
+            BatchOpts { max_batch: bsz, ..Default::default() },
+        );
+        // distinct prompts AND distinct step counts: lanes retire at
+        // different steps, so the batch shrinks mid-flight while the
+        // stragglers keep decoding
+        let specs: Vec<(Vec<u32>, usize)> = (0..bsz)
+            .map(|i| {
+                let prompt: Vec<u32> = (0..(2 + i % 3)).map(|k| ((7 * i + k) % 64) as u32).collect();
+                (prompt, 4 + (i % 5))
+            })
+            .collect();
+        run_lanes_and_check(&model, &sched, &specs, true);
+        sched.shutdown();
+    }
+}
+
+#[test]
+fn overcommitted_batch_queues_lanes_and_stays_exact() {
+    // 6 lanes through a max_batch=3 scheduler: lanes wait at the step
+    // barrier for a slot and join mid-flight as earlier lanes retire
+    let model = tiny_model(22);
+    let sched = BatchScheduler::new(
+        Arc::clone(&model),
+        Box::new(ScalarGqmv),
+        BatchOpts { max_batch: 3, ..Default::default() },
+    );
+    let specs: Vec<(Vec<u32>, usize)> =
+        (0..6).map(|i| (vec![(i + 1) as u32, (5 * i + 2) as u32 % 64], 6 + i % 4)).collect();
+    run_lanes_and_check(&model, &sched, &specs, true);
+    sched.shutdown();
+}
+
+#[test]
+fn late_joining_lane_is_bit_exact() {
+    // lane B is submitted only after lane A has already streamed 3 tokens
+    // — a mid-flight join at a step barrier.  Bit-exactness is asserted
+    // unconditionally; the overlap itself is timing-dependent (the decode
+    // thread runs ahead of the caller's token drain), so on a loaded
+    // runner the attempt is retried with a fresh scheduler until the
+    // occupancy histogram proves the two lanes actually coexisted.
+    let model = tiny_model(23);
+    let prompt_a: Vec<u32> = vec![1, 10, 11];
+    let prompt_b: Vec<u32> = vec![9, 2];
+    let want_a = batch1_reference(&model, &prompt_a, 24);
+    let want_b = batch1_reference(&model, &prompt_b, 5);
+
+    const ATTEMPTS: usize = 5;
+    for attempt in 0..ATTEMPTS {
+        let sched = BatchScheduler::new(
+            Arc::clone(&model),
+            Box::new(ScalarGqmv),
+            BatchOpts { max_batch: 4, ..Default::default() },
+        );
+        let mut b_handle: Option<std::thread::JoinHandle<()>> = None;
+        let mut streamed_a = Vec::new();
+        let (sess_a, out_a) = {
+            let model = Arc::clone(&model);
+            let sched_b = Arc::clone(&sched);
+            let want_b = want_b.clone();
+            sched.generate(Session::new(&model.cfg), &prompt_a, 24, |_, id| {
+                streamed_a.push(id);
+                if streamed_a.len() == 3 && b_handle.is_none() {
+                    let model = Arc::clone(&model);
+                    let sched_b = Arc::clone(&sched_b);
+                    let prompt_b = prompt_b.clone();
+                    let want_b = want_b.clone();
+                    b_handle = Some(std::thread::spawn(move || {
+                        let (sess, out) = sched_b.generate(
+                            Session::new(&model.cfg),
+                            &prompt_b,
+                            5,
+                            |_, _| Ok(()),
+                        );
+                        assert!(sess.is_some());
+                        assert_eq!(out.unwrap().generated, want_b, "late joiner diverged");
+                    }));
+                }
+                Ok(())
+            })
+        };
+        assert!(sess_a.is_some());
+        assert_eq!(out_a.unwrap().generated, want_a, "original lane diverged");
+        assert_eq!(streamed_a, want_a);
+        b_handle.expect("lane B was never submitted").join().unwrap();
+        let overlapped = sched.metrics().occupancy_max() >= 2.0;
+        sched.shutdown();
+        if overlapped {
+            return; // the join genuinely happened mid-flight
+        }
+        eprintln!("attempt {attempt}: lanes never overlapped, retrying");
+    }
+    panic!("lane B never joined mid-flight in {ATTEMPTS} attempts");
+}
+
+#[test]
+fn four_sessions_stage_at_least_3x_fewer_bytes_per_token() {
+    // the acceptance criterion: batched occupancy-4 decoding vs 4
+    // independent (batch-1) passes over the same workloads.  Occupancy
+    // depends on how quickly the 4 client threads get scheduled after
+    // the barrier, so an attempt whose mean occupancy ramped too slowly
+    // (loaded CI runner) is discarded and retried with a fresh
+    // scheduler; bit-exactness is still asserted on every attempt.
+    let model = tiny_model(24);
+    let specs: Vec<(Vec<u32>, usize)> =
+        (0..4).map(|i| (vec![3, (i + 1) as u32, 17], 32)).collect();
+
+    // batch-1 baseline: identical workloads submitted one at a time
+    let solo = BatchScheduler::new(
+        Arc::clone(&model),
+        Box::new(ScalarGqmv),
+        BatchOpts { max_batch: 1, ..Default::default() },
+    );
+    for spec in &specs {
+        run_lanes_and_check(&model, &solo, std::slice::from_ref(spec), false);
+    }
+    let solo_bpt = solo.metrics().bytes_per_token();
+    solo.shutdown();
+    assert!(solo_bpt > 0.0);
+
+    const ATTEMPTS: usize = 5;
+    let mut last_mean = 0.0;
+    for attempt in 0..ATTEMPTS {
+        let batched = BatchScheduler::new(
+            Arc::clone(&model),
+            Box::new(ScalarGqmv),
+            BatchOpts { max_batch: 4, ..Default::default() },
+        );
+        run_lanes_and_check(&model, &batched, &specs, true);
+        let batched_bpt = batched.metrics().bytes_per_token();
+        last_mean = batched.metrics().occupancy_mean();
+        batched.shutdown();
+        if last_mean < 3.4 {
+            eprintln!("attempt {attempt}: mean occupancy {last_mean:.2}, retrying");
+            continue;
+        }
+        assert!(batched_bpt > 0.0);
+        let reduction = solo_bpt / batched_bpt;
+        assert!(
+            reduction >= 3.0,
+            "expected >=3x staging reduction at occupancy 4, got {reduction:.2}x \
+             (solo {solo_bpt:.0} B/tok, batched {batched_bpt:.0} B/tok)"
+        );
+        return;
+    }
+    panic!(
+        "batch never reached steady occupancy 4 in {ATTEMPTS} attempts \
+         (last mean {last_mean:.2})"
+    );
+}

@@ -21,7 +21,7 @@ use llamaf::ps::ScalarGqmv;
 use llamaf::server::{ServeOpts, Server};
 use llamaf::tokenizer::Tokenizer;
 
-fn scalar_exec() -> Box<dyn GqmvExec> {
+fn scalar_exec() -> Box<dyn GqmvExec + Send> {
     Box::new(ScalarGqmv)
 }
 
@@ -58,7 +58,7 @@ fn four_concurrent_clients_match_sequential_batch1() {
 
     let server = Server::bind("127.0.0.1:0", 512).unwrap();
     let addr = server.local_addr().unwrap();
-    let opts = ServeOpts { workers: 4, queue_depth: 16, max_sessions: 8 };
+    let opts = ServeOpts { workers: 4, queue_depth: 16, max_sessions: 8, ..Default::default() };
     let m2 = Arc::clone(&model);
     let server_thread = std::thread::spawn(move || {
         server.serve_shared(m2, &scalar_exec, &opts, Some(prompts.len())).unwrap()
@@ -112,7 +112,7 @@ fn queue_overflow_returns_err_busy_not_hang() {
     let model = tiny_model(8);
     let server = Server::bind("127.0.0.1:0", 512).unwrap();
     let addr = server.local_addr().unwrap();
-    let opts = ServeOpts { workers: 1, queue_depth: 1, max_sessions: 2 };
+    let opts = ServeOpts { workers: 1, queue_depth: 1, max_sessions: 2, ..Default::default() };
     let server_thread = std::thread::spawn(move || {
         server.serve_shared(model, &scalar_exec, &opts, Some(3)).unwrap()
     });
@@ -158,7 +158,7 @@ fn stats_and_plain_gen_roundtrip() {
 
     let server = Server::bind("127.0.0.1:0", 512).unwrap();
     let addr = server.local_addr().unwrap();
-    let opts = ServeOpts { workers: 2, queue_depth: 8, max_sessions: 4 };
+    let opts = ServeOpts { workers: 2, queue_depth: 8, max_sessions: 4, ..Default::default() };
     let server_thread = std::thread::spawn(move || {
         server.serve_shared(model, &scalar_exec, &opts, Some(1)).unwrap()
     });
@@ -177,7 +177,19 @@ fn stats_and_plain_gen_roundtrip() {
     line.clear();
     reader.read_line(&mut line).unwrap();
     assert!(line.starts_with("OK "), "{line}");
-    for field in ["sessions_idle=", "sessions_busy=", "sessions_cap=4", "requests=1", "tokens=4"] {
+    for field in [
+        "sessions_idle=",
+        "sessions_busy=",
+        "sessions_cap=4",
+        "requests=1",
+        "tokens=4",
+        // batched-decoding counters: "hello" encodes to 6 tokens (BOS +
+        // 5 bytes), so 5 prompt feeds + 4 sampled steps = 9 forwards
+        "batch_steps=9",
+        "batch_tokens=9",
+        "bytes_staged=",
+        "bytes_per_tok=",
+    ] {
         assert!(line.contains(field), "STATS missing {field}: {line}");
     }
 

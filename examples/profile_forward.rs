@@ -17,7 +17,8 @@ fn main() -> Result<()> {
         _ => (NANO, "nano geometry"),
     };
     println!("profiling PS forward pass: {name}");
-    let positions = [63usize, 127, 255].iter().copied().filter(|&p| p < cfg.seq_len).collect::<Vec<_>>();
+    let positions =
+        [63usize, 127, 255].iter().copied().filter(|&p| p < cfg.seq_len).collect::<Vec<_>>();
     let model = if geometry == "tinyllama" {
         QuantModel::synthetic(cfg, 42)
     } else {
@@ -25,7 +26,11 @@ fn main() -> Result<()> {
         if p.exists() { llamaf::ckpt::read_q8(p)? } else { QuantModel::synthetic(cfg, 42) }
     };
     let profiles = table2::measure(model, &positions, 4)?;
-    println!("\n  {:<22} {}", "Computation", positions.iter().map(|p| format!("{:>10}", format!("pos={p}"))).collect::<String>());
+    println!(
+        "\n  {:<22} {}",
+        "Computation",
+        positions.iter().map(|p| format!("{:>10}", format!("pos={p}"))).collect::<String>()
+    );
     let rows: [(&str, fn(&llamaf::metrics::ForwardProfile) -> f64); 5] = [
         ("Matrix Computation", |p| p.matrix_s),
         ("Multi-head Attention", |p| p.attention_s),
@@ -36,7 +41,8 @@ fn main() -> Result<()> {
     for (name, get) in rows {
         print!("  {name:<22}");
         for (_, prof) in &profiles {
-            let compute = prof.matrix_s + prof.attention_s + prof.swiglu_s + prof.rope_s + prof.rmsnorm_s;
+            let compute =
+                prof.matrix_s + prof.attention_s + prof.swiglu_s + prof.rope_s + prof.rmsnorm_s;
             print!("{:>9.2}% ", 100.0 * get(prof) / compute);
         }
         println!();

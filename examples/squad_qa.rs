@@ -61,7 +61,9 @@ fn main() -> Result<()> {
     rows.push(("PS".into(), ps_row));
 
     let rt = Arc::new(Runtime::load(artifacts)?);
-    for (label, mode) in [("LlamaF no-sched (sync)", SchedMode::Sync), ("LlamaF (async)", SchedMode::Async)] {
+    for (label, mode) in
+        [("LlamaF no-sched (sync)", SchedMode::Sync), ("LlamaF (async)", SchedMode::Async)]
+    {
         let mut eng = LlamafEngine::open(&ckpt, Arc::clone(&rt), mode)?;
         let mut row = vec![];
         for &s in &steps_list {

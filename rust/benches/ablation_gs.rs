@@ -11,12 +11,17 @@ use llamaf::fpga::{PlConfig, ResourceModel};
 use llamaf::model::{FloatModel, LlamaConfig, NANO, TINYLLAMA_1_1B};
 
 fn main() {
+    let mut report = llamaf::bench::Report::new("ablation_gs");
     println!("=== GS ablation (nano weights for error; TinyLlama geometry for HW) ===\n");
     println!(
         "  {:>5} {:>10} {:>10} {:>12} {:>10} {:>12} {:>12}",
         "GS", "err% mean", "err% std", "q8 size MB", "PL GOPS", "DSP util%", "layer MB"
     );
-    for gs in [32usize, 64, 128, 256, 512] {
+    // smoke mode keeps one error-sweep GS and one hardware-only GS so the
+    // full code path still runs without quantizing four nano models
+    let gs_list: &[usize] =
+        if llamaf::bench::smoke() { &[256, 512] } else { &[32, 64, 128, 256, 512] };
+    for &gs in gs_list {
         // error stats on a trained-or-synthetic nano float model at this GS
         // (nano's dim=256 caps the error sweep at GS=256; the hardware
         // columns use the TinyLlama geometry where GS=512 is valid)
@@ -56,10 +61,15 @@ fn main() {
             dsp_pct,
             tl.layer_stream_bytes() as f64 / 1e6,
         );
+        report.case(&format!("gs{gs}_pl"), gops, "GOPS");
     }
     println!(
         "\n  reading: smaller GS -> lower quantization error but more scale traffic\n\
          \x20 (lower PL GOPS) and a narrower SIMD stage; GS=256 sits where error has\n\
          \x20 plateaued while DSP cost and bandwidth overhead stay low — the paper's choice."
     );
+    match report.write() {
+        Ok(p) => eprintln!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 }

@@ -57,9 +57,17 @@ fn run_batch(model: &Arc<QuantModel>, b: usize, steps: usize) -> (f64, f64, f64)
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let steps = if quick { 16 } else { 64 };
+    let smoke = llamaf::bench::smoke();
+    let quick = std::env::args().any(|a| a == "--quick") || smoke;
+    let steps = if smoke {
+        8
+    } else if quick {
+        16
+    } else {
+        64
+    };
     let model = Arc::new(QuantModel::synthetic(NANO, 42));
+    let mut report = llamaf::bench::Report::new("batch_decode");
 
     section("step-synchronous batched decoding (NANO geometry, scalar GQMV)");
     println!("{steps} steps/lane, async weight streaming, one decode thread\n");
@@ -74,6 +82,14 @@ fn main() {
             "B={b:<2}  mean_occupancy {occ:>5.2}  aggregate {tps:>9.1} tok/s  \
              staged {bpt:>12.0} B/tok  reduction {reduction:>5.2}x"
         );
+        report.case(&format!("B{b}_aggregate"), tps, "tok/s");
+        report.case(&format!("B{b}_staged"), bpt, "B/tok");
     }
-    println!("\n(reduction ≈ mean occupancy: each step stages every layer once, shared by B lanes)");
+    println!(
+        "\n(reduction ≈ mean occupancy: each step stages every layer once, shared by B lanes)"
+    );
+    match report.write() {
+        Ok(p) => eprintln!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 }

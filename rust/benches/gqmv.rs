@@ -31,8 +31,9 @@ fn bench_backend(exec: &mut dyn GqmvExec, m: usize, n: usize, gs: usize, b: &Ben
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = std::env::args().any(|a| a == "--quick") || llamaf::bench::smoke();
     let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut report = llamaf::bench::Report::new("gqmv");
     let pool = Arc::new(ThreadPool::new(4));
 
     section("GQMV backends at nano shapes (Algorithm 2 launches)");
@@ -55,9 +56,18 @@ fn main() {
     let th_all_gops = bench_backend(&mut th_all, m, n, 256, &slow);
 
     let pl = PlConfig::default();
-    println!("\nmodelled FPGA PL (205 MHz, 16 B/cyc): {:.3} GOPS (paper: 4.696)", pl.gops(m, n, 256));
+    println!(
+        "\nmodelled FPGA PL (205 MHz, 16 B/cyc): {:.3} GOPS (paper: 4.696)",
+        pl.gops(m, n, 256)
+    );
     println!("paper ZCU102 PS (4x A53 OpenMP):      0.201 GOPS");
-    println!("this CPU scalar: {scalar_gops:.3} | threaded x4: {th4:.3} | all cores: {th_all_gops:.3}");
+    println!(
+        "this CPU scalar: {scalar_gops:.3} | threaded x4: {th4:.3} | all cores: \
+         {th_all_gops:.3}"
+    );
+    report.case("cls_scalar", scalar_gops, "GOPS");
+    report.case("cls_threaded_x4", th4, "GOPS");
+    report.case("cls_threaded_all", th_all_gops, "GOPS");
 
     section("PJRT kernel path (requires artifacts): upload vs execute split");
     if let Ok(rt) = llamaf::runtime::Runtime::load(std::path::Path::new("artifacts")) {
@@ -90,10 +100,15 @@ fn main() {
 
     section("dataflow simulator functional throughput (host-side cost of simulation)");
     let mut sim = DataflowSim::new(PlConfig::default());
-    bench_backend(&mut sim, 512, 256, 256, &b);
+    let sim_gops = bench_backend(&mut sim, 512, 256, 256, &b);
     println!(
         "simulated PL time for those calls: {:.3} ms ({:.3} simulated GOPS)",
         sim.simulated_time_s() * 1e3,
         sim.achieved_gops()
     );
+    report.case("dataflow_sim_host", sim_gops, "GOPS");
+    match report.write() {
+        Ok(p) => eprintln!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 }

@@ -7,5 +7,12 @@ use llamaf::cli::Args;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(&argv).expect("args");
+    let mut report = llamaf::bench::Report::new("table2_profile");
+    let t = std::time::Instant::now();
     llamaf::exp::table2::run(&args).expect("table2");
+    report.case("table2", t.elapsed().as_secs_f64(), "s");
+    match report.write() {
+        Ok(p) => eprintln!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 }

@@ -6,8 +6,18 @@ use llamaf::cli::Args;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(&argv).expect("args");
-    llamaf::exp::table1::run(&args).expect("table1");
-    llamaf::exp::table3::run(&args).expect("table3");
-    llamaf::exp::table4::run(&args).expect("table4");
-    llamaf::exp::table5::run(&args).expect("table5");
+    let mut report = llamaf::bench::Report::new("tables_static");
+    let mut timed = |name: &str, run: &dyn Fn() -> anyhow::Result<()>| {
+        let t = std::time::Instant::now();
+        run().expect(name);
+        report.case(name, t.elapsed().as_secs_f64(), "s");
+    };
+    timed("table1", &|| llamaf::exp::table1::run(&args));
+    timed("table3", &|| llamaf::exp::table3::run(&args));
+    timed("table4", &|| llamaf::exp::table4::run(&args));
+    timed("table5", &|| llamaf::exp::table5::run(&args));
+    match report.write() {
+        Ok(p) => eprintln!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 }

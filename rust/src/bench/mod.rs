@@ -2,10 +2,27 @@
 //!
 //! Warmup + fixed-duration adaptive iteration, reporting mean / p50 / p99
 //! and derived throughput.  Used by every `rust/benches/*.rs` target.
+//!
+//! Two CI-facing facilities live here too:
+//!
+//! * [`smoke`] — `BENCH_SMOKE=1` puts every harness-driven bench into a
+//!   one-quick-iteration mode so the CI `bench-smoke` job can compile and
+//!   run the whole `rust/benches/` suite in seconds (drift caught at PR
+//!   time, not at measurement time).
+//! * [`Report`] — each bench target records its headline numbers and
+//!   writes one JSON file (`BENCH_JSON_DIR`, default `bench-json/`); CI
+//!   uploads the directory as a workflow artifact.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::util::stats::percentile;
+
+/// True when `BENCH_SMOKE=1` is set: benches run one quick iteration per
+/// case (the CI smoke mode) instead of their full measurement budget.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -44,13 +61,21 @@ pub struct Bench {
 }
 
 impl Default for Bench {
+    /// Full measurement budget — or the smoke settings when
+    /// `BENCH_SMOKE=1`, so CI never pays for statistics it discards.
     fn default() -> Self {
+        if smoke() {
+            return Bench { warmup_iters: 0, min_iters: 1, max_iters: 1, budget_s: 0.0 };
+        }
         Bench { warmup_iters: 3, min_iters: 10, max_iters: 10_000, budget_s: 2.0 }
     }
 }
 
 impl Bench {
     pub fn quick() -> Self {
+        if smoke() {
+            return Bench::default();
+        }
         Bench { warmup_iters: 1, min_iters: 3, max_iters: 100, budget_s: 0.5 }
     }
 
@@ -92,6 +117,90 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench report.  Each bench target records its headline
+/// numbers via [`Report::case`] and writes one JSON file at exit; the CI
+/// `bench-smoke` job uploads the directory as a workflow artifact so
+/// bench output (and any drift in it) is inspectable per PR.
+pub struct Report {
+    name: String,
+    started: Instant,
+    cases: Vec<(String, f64, String)>,
+}
+
+impl Report {
+    /// Start a report for the bench target `name` (used as the file stem).
+    pub fn new(name: &str) -> Self {
+        Report { name: name.to_string(), started: Instant::now(), cases: Vec::new() }
+    }
+
+    /// Record one headline number (`value` in `unit`) under `case`.
+    pub fn case(&mut self, case: &str, value: f64, unit: &str) {
+        self.cases.push((case.to_string(), value, unit.to_string()));
+    }
+
+    /// Write `<dir>/<name>.json` where `dir` comes from `BENCH_JSON_DIR`
+    /// (default `bench-json`); returns the written path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| "bench-json".into());
+        self.write_to(Path::new(&dir))
+    }
+
+    /// Write the JSON report into `dir` (created if needed).
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        let mut cases = String::new();
+        for (i, (case, value, unit)) in self.cases.iter().enumerate() {
+            if i > 0 {
+                cases.push(',');
+            }
+            cases.push_str(&format!(
+                "\n    {{\"name\": {}, \"value\": {}, \"unit\": {}}}",
+                json_str(case),
+                json_num(*value),
+                json_str(unit)
+            ));
+        }
+        let body = format!(
+            "{{\n  \"bench\": {},\n  \"smoke\": {},\n  \"wall_s\": {:.6},\n  \"cases\": [{}\n  ]\n}}\n",
+            json_str(&self.name),
+            smoke(),
+            self.started.elapsed().as_secs_f64(),
+            cases
+        );
+        std::fs::write(&path, body)?;
+        Ok(path)
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number formatting (non-finite values become `null`).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +233,26 @@ mod tests {
     fn throughput_inverse_of_mean() {
         let r = samples_to_result("x", vec![0.5, 0.5]);
         assert!((r.throughput(1.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_writes_escaped_json() {
+        let mut rep = Report::new("unit_test_report");
+        rep.case("plain", 1.5, "tok/s");
+        rep.case("needs \"escaping\"\n", f64::NAN, "w\\m²");
+        let dir = std::env::temp_dir().join(format!("llamaf-bench-json-{}", std::process::id()));
+        let path = rep.write_to(&dir).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+        assert!(body.contains("\"bench\": \"unit_test_report\""), "{body}");
+        assert!(body.contains("\"value\": 1.5"), "{body}");
+        assert!(body.contains("\"value\": null"), "NaN must become null: {body}");
+        assert!(body.contains("needs \\\"escaping\\\"\\n"), "{body}");
+        assert!(body.contains("w\\\\m²"), "{body}");
+        // structurally sane: balanced braces/brackets, no raw control chars
+        assert_eq!(body.matches('{').count(), body.matches('}').count());
+        assert_eq!(body.matches('[').count(), body.matches(']').count());
+        assert!(!body.chars().any(|c| (c as u32) < 0x20 && c != '\n'), "{body:?}");
     }
 }

@@ -18,7 +18,7 @@ pub struct Args {
 /// Flags that take no value (everything else consumes the next token).
 const BOOL_FLAGS: &[&str] = &[
     "help", "full", "no-sched", "sync", "async", "quiet", "verbose", "json",
-    "stream", "greedy",
+    "stream", "greedy", "resident", "quick",
 ];
 
 impl Args {

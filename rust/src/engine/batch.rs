@@ -33,7 +33,9 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::forward::{forward_batch, BatchLane, BatchScratch};
+use crate::engine::forward::{
+    forward_batch, BatchLane, BatchScratch, LayerProvider, ResidentLayers,
+};
 use crate::engine::session::{Session, SessionGen};
 use crate::metrics::{BatchMetrics, ForwardProfile, TokenMeter};
 use crate::model::{LlamaConfig, QuantModel};
@@ -41,6 +43,19 @@ use crate::ps::gqmv::GqmvExec;
 use crate::runtime::Runtime;
 use crate::sched::{ModelFetcher, SchedMode, Streamer};
 use crate::tensor;
+
+/// How the decode thread obtains each layer's weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightMode {
+    /// Stage every layer host→device through the shared
+    /// [`Streamer`] once per step (the paper's DDR→PL economics; the
+    /// async prefetch worker hides the copies).  The default.
+    Streamed,
+    /// Serve layers zero-copy out of the `Arc`'d model
+    /// ([`ResidentLayers`]) — for deployments where the weights truly fit
+    /// device-side and staging would be pure overhead.
+    Resident,
+}
 
 /// Knobs of the step-synchronous batch scheduler.
 #[derive(Clone, Copy, Debug)]
@@ -55,12 +70,52 @@ pub struct BatchOpts {
     pub max_pending: usize,
     /// Weight-staging schedule of the shared streamer.  [`SchedMode::Async`]
     /// prefetches layer *l+1* while the batched kernels of layer *l* run.
+    /// Ignored under [`WeightMode::Resident`].
     pub sched: SchedMode,
+    /// Streamed (staged-per-step) vs resident (zero-copy) weights.
+    pub weights: WeightMode,
 }
 
 impl Default for BatchOpts {
     fn default() -> Self {
-        BatchOpts { max_batch: 8, max_pending: 64, sched: SchedMode::Async }
+        BatchOpts {
+            max_batch: 8,
+            max_pending: 64,
+            sched: SchedMode::Async,
+            weights: WeightMode::Streamed,
+        }
+    }
+}
+
+/// The decode thread's layer source: a zero-copy resident provider or the
+/// staging streamer, with uniform access to the staging counters.
+enum StepLayers {
+    /// Zero-copy layers out of the shared model.
+    Resident(ResidentLayers),
+    /// Per-step staging through the persistent prefetch worker.
+    Streamed(Streamer),
+}
+
+impl StepLayers {
+    fn provider(&mut self) -> &mut dyn LayerProvider {
+        match self {
+            StepLayers::Resident(r) => r,
+            StepLayers::Streamed(s) => s,
+        }
+    }
+
+    fn staged_bytes(&self) -> u64 {
+        match self {
+            StepLayers::Resident(_) => 0,
+            StepLayers::Streamed(s) => s.stats.staged_bytes,
+        }
+    }
+
+    fn prefetch_wait_s(&self) -> f64 {
+        match self {
+            StepLayers::Resident(_) => 0.0,
+            StepLayers::Streamed(s) => s.stats.prefetch_wait_s,
+        }
     }
 }
 
@@ -305,7 +360,7 @@ fn decode_loop(
     opts: BatchOpts,
 ) {
     let cfg = model.cfg;
-    // The streamer stages layers out of the Arc'd model ("DDR") into the
+    // Streamed mode stages layers out of the Arc'd model ("DDR") into the
     // device runtime, hiding the copy behind the batched kernels in async
     // mode.  No compiled-kernel shapes are needed: the batched GQMV runs
     // on the staged host copy through `exec`.
@@ -313,39 +368,45 @@ fn decode_loop(
     // Cost model, deliberately: staging copies every layer once per STEP
     // (host fetch + device upload, exactly like `LlamafEngine` does per
     // token) because the paper's PL cannot hold the model — streaming is
-    // the workload being amortized, and the prefetch thread hides it.
-    // A provider that skips staging entirely exists
-    // ([`crate::engine::forward::ResidentLayers`]) for contexts where
-    // the weights are genuinely resident.
-    #[cfg(not(feature = "pjrt"))]
-    let rt = Arc::new(Runtime::with_shapes(&[]));
-    // Known pjrt-feature limitation: the real device runtime needs the
-    // AOT artifacts and performs real uploads the CPU exec never reads;
-    // a missing artifacts dir fails every request with a clear error
-    // rather than serving.  (The pjrt feature additionally requires the
-    // vendored `xla` bindings to build at all — see rust/Cargo.toml.)
-    #[cfg(feature = "pjrt")]
-    let rt = match Runtime::load(std::path::Path::new(crate::ARTIFACTS_DIR)) {
-        Ok(rt) => Arc::new(rt),
-        Err(e) => {
-            fail_pending_forever(&sched, format!("batch runtime init failed: {e:#}"));
-            return;
-        }
-    };
-    let fetcher = ModelFetcher { model: Arc::clone(&model) };
-    let mut streamer = match Streamer::new(rt, fetcher, opts.sched) {
-        Ok(s) => s,
-        Err(e) => {
-            fail_pending_forever(&sched, format!("batch streamer init failed: {e:#}"));
-            return;
+    // the workload being amortized, and the persistent prefetch worker
+    // hides it.  Resident mode ([`WeightMode::Resident`], `serve
+    // --resident`) skips staging entirely for deployments where the
+    // weights genuinely fit.
+    let mut layers = if opts.weights == WeightMode::Resident {
+        StepLayers::Resident(ResidentLayers { model: Arc::clone(&model) })
+    } else {
+        #[cfg(not(feature = "pjrt"))]
+        let rt = Arc::new(Runtime::with_shapes(&[]));
+        // Known pjrt-feature limitation: the real device runtime needs the
+        // AOT artifacts and performs real uploads the CPU exec never
+        // reads; a missing artifacts dir fails every request with a clear
+        // error rather than serving.  (The pjrt feature additionally
+        // requires the vendored `xla` bindings to build at all — see
+        // rust/Cargo.toml.)
+        #[cfg(feature = "pjrt")]
+        let rt = match Runtime::load(std::path::Path::new(crate::ARTIFACTS_DIR)) {
+            Ok(rt) => Arc::new(rt),
+            Err(e) => {
+                fail_pending_forever(&sched, format!("batch runtime init failed: {e:#}"));
+                return;
+            }
+        };
+        let fetcher = ModelFetcher { model: Arc::clone(&model) };
+        match Streamer::new(rt, fetcher, opts.sched) {
+            Ok(s) => StepLayers::Streamed(s),
+            Err(e) => {
+                fail_pending_forever(&sched, format!("batch streamer init failed: {e:#}"));
+                return;
+            }
         }
     };
     let mut scratch = BatchScratch::new(&cfg, opts.max_batch);
     let mut active: Vec<LaneJob> = Vec::new();
-    // staged-bytes high-water already attributed to a recorded step;
-    // starting at 0 charges the construction-time layer-0 staging to the
-    // first step, keeping BatchMetrics.bytes_staged == Streamer.staged_bytes
+    // staging high-waters already attributed to a recorded step; starting
+    // at 0 charges the construction-time layer-0 staging to the first
+    // step, keeping BatchMetrics.bytes_staged == StreamerStats.staged_bytes
     let mut bytes_attributed = 0u64;
+    let mut wait_attributed = 0.0f64;
 
     loop {
         // ---- step barrier: retire/admit lanes ------------------------
@@ -397,7 +458,14 @@ fn decode_loop(
                     kv: &mut j.sess.kv,
                 })
                 .collect();
-            forward_batch(&model, &mut streamer, exec.as_mut(), &mut scratch, &mut lanes, &mut prof)
+            forward_batch(
+                &model,
+                layers.provider(),
+                exec.as_mut(),
+                &mut scratch,
+                &mut lanes,
+                &mut prof,
+            )
         };
         if let Err(e) = step_result {
             // submit-time validation makes this unreachable in practice;
@@ -411,8 +479,16 @@ fn decode_loop(
             }
             continue;
         }
-        sched.metrics.record_step(active.len(), streamer.staged_bytes - bytes_attributed, &prof);
-        bytes_attributed = streamer.staged_bytes;
+        let staged = layers.staged_bytes();
+        let waited = layers.prefetch_wait_s();
+        sched.metrics.record_step(
+            active.len(),
+            staged - bytes_attributed,
+            waited - wait_attributed,
+            &prof,
+        );
+        bytes_attributed = staged;
+        wait_attributed = waited;
 
         // ---- per-lane post-step: advance, sample, emit, retire -------
         let mut keep = Vec::with_capacity(active.len());
@@ -502,7 +578,8 @@ mod tests {
         let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
         let want = generate(&mut ref_engine, &prompt, 8, Sampler::Greedy, false).unwrap();
 
-        let sched = BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let sched =
+            BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
         let mut streamed = Vec::new();
         let (sess, out) = sched.generate(Session::new(&qm.cfg), &prompt, 8, |step, id| {
             assert_eq!(step, streamed.len());
@@ -521,7 +598,8 @@ mod tests {
     #[test]
     fn bad_requests_rejected_with_session_returned() {
         let qm = tiny_model(2);
-        let sched = BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let sched =
+            BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
         let cfg = qm.cfg;
         let (s, r) = sched.generate(Session::new(&cfg), &[], 4, |_, _| Ok(()));
         assert!(s.is_some() && r.is_err(), "empty prompt");
@@ -539,7 +617,8 @@ mod tests {
     #[test]
     fn callback_error_cancels_lane_and_returns_session() {
         let qm = tiny_model(3);
-        let sched = BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let sched =
+            BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
         let (sess, r) = sched.generate(Session::new(&qm.cfg), &[1, 5], 16, |step, _| {
             anyhow::ensure!(step < 2, "client hung up");
             Ok(())
@@ -550,9 +629,41 @@ mod tests {
     }
 
     #[test]
+    fn resident_mode_bit_identical_and_stages_nothing() {
+        let qm = tiny_model(5);
+        let prompt = [1u32, 10, 11];
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let want = generate(&mut ref_engine, &prompt, 8, Sampler::Greedy, false).unwrap();
+        let sched = BatchScheduler::new(
+            Arc::clone(&qm),
+            Box::new(ScalarGqmv),
+            BatchOpts { weights: WeightMode::Resident, ..Default::default() },
+        );
+        let (sess, out) = sched.generate(Session::new(&qm.cfg), &prompt, 8, |_, _| Ok(()));
+        assert!(sess.is_some());
+        assert_eq!(out.unwrap().generated, want.generated, "resident lane diverged");
+        assert_eq!(sched.metrics().bytes_staged(), 0, "resident mode must stage nothing");
+        assert_eq!(sched.metrics().prefetch_wait_s(), 0.0);
+        assert!(sched.metrics().steps() > 0);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn streamed_mode_reports_staging_counters() {
+        let qm = tiny_model(6);
+        let sched =
+            BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let (_sess, out) = sched.generate(Session::new(&qm.cfg), &[1, 2, 3], 4, |_, _| Ok(()));
+        out.unwrap();
+        assert!(sched.metrics().bytes_staged() > 0, "streamed mode stages per step");
+        sched.shutdown();
+    }
+
+    #[test]
     fn shutdown_is_idempotent_and_drains() {
         let qm = tiny_model(4);
-        let sched = BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let sched =
+            BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
         let (sess, r) = sched.generate(Session::new(&qm.cfg), &[3, 4, 5], 4, |_, _| Ok(()));
         assert!(r.is_ok());
         assert!(sess.is_some());

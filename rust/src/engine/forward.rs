@@ -33,7 +33,11 @@ pub trait Engine {
     fn name(&self) -> String;
 }
 
-/// Pre-allocated working buffers — nothing allocates on the hot path.
+/// Pre-allocated working buffers for a device-driven batch-1 pass —
+/// nothing allocates on the hot path.  Used by the streamed-weight
+/// [`LlamafEngine`](crate::engine::llamaf::LlamafEngine); the CPU engines
+/// use the batched analogue [`BatchScratch`] (at 1 lane) since the
+/// forward-path unification.
 pub struct Scratch {
     /// Residual stream (dim).
     pub x: Vec<f32>,
@@ -70,102 +74,29 @@ impl Scratch {
     }
 }
 
-/// Quantize `x` and run one GQMV on `exec`, billing the time to `matrix_s`
-/// (run-time activation quantization is part of the matrix pipeline,
-/// paper §III-A).
-#[allow(clippy::too_many_arguments)]
-fn quant_gqmv(
-    exec: &mut dyn GqmvExec,
-    x: &[f32],
-    w: &crate::quant::QuantizedTensor,
-    out: &mut [f32],
-    qbuf: &mut [i8],
-    sbuf: &mut [f32],
-    gs: usize,
-    prof: &mut ForwardProfile,
-) -> Result<()> {
-    let t = Instant::now();
-    let n = x.len();
-    quantize_activation_into(x, gs, &mut qbuf[..n], &mut sbuf[..n / gs]);
-    exec.gqmv(&qbuf[..n], &sbuf[..n / gs], w, out)?;
-    prof.matrix_s += t.elapsed().as_secs_f64();
-    Ok(())
-}
-
-/// One full Algorithm-2 forward pass: shared weights in, per-session KV
-/// in/out, logits left in `s.logits`.  Free function so the engine can
-/// split-borrow its fields when driving either its own or an external
-/// session.
-#[allow(clippy::too_many_arguments)]
+/// One full Algorithm-2 forward pass for a single (token, pos, KV) lane:
+/// shared weights in, per-session KV in/out, logits left in
+/// `s.logits(0)`.
+///
+/// Since the forward-path unification this is a thin adapter: it drives
+/// [`forward_batch`] with exactly **one lane** over the resident model
+/// layers, so the batch-1 and batched paths share a single copy of the
+/// Algorithm-2 arithmetic.  Outputs are bit-identical to the historical
+/// dedicated batch-1 op sequence, pinned by
+/// `rust/tests/forward_unification.rs` against an op-for-op reference of
+/// the pre-unification pass.
 fn forward_pass(
     model: &QuantModel,
     exec: &mut dyn GqmvExec,
-    s: &mut Scratch,
+    s: &mut BatchScratch,
     kv: &mut KvCache,
     token: u32,
     pos: usize,
     prof: &mut ForwardProfile,
 ) -> Result<()> {
-    let cfg = model.cfg;
-    let (d, kv_d, hd, gs) = (cfg.dim, cfg.kv_dim(), cfg.head_dim(), cfg.gs);
-    anyhow::ensure!((token as usize) < cfg.vocab_size, "token {token} out of range");
-    anyhow::ensure!(pos < cfg.seq_len, "pos {pos} >= seq_len {}", cfg.seq_len);
-
-    let t0 = Instant::now();
-    model.tok_emb.dequantize_row(token as usize, &mut s.x);
-    prof.other_s += t0.elapsed().as_secs_f64();
-
-    for li in 0..cfg.n_layers {
-        let layer = &model.layers[li];
-
-        // RMSNorm + quantize + fused QKV GQMV (Alg. 2 l.3-4)
-        let t = Instant::now();
-        tensor::rmsnorm(&mut s.xb, &s.x, &layer.att_norm);
-        prof.rmsnorm_s += t.elapsed().as_secs_f64();
-        quant_gqmv(exec, &s.xb, &layer.wqkv, &mut s.qkv, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
-
-        // RoPE (l.5)
-        let t = Instant::now();
-        let (q, kvs) = s.qkv.split_at_mut(d);
-        let (k, v) = kvs.split_at_mut(kv_d);
-        tensor::rope(q, pos, hd);
-        tensor::rope(k, pos, hd);
-        prof.rope_s += t.elapsed().as_secs_f64();
-        kv.store(li, pos, k, v);
-
-        // multi-head attention on the PS (l.6-7)
-        let t = Instant::now();
-        attention(&cfg, kv, li, pos, q, &mut s.att_out);
-        prof.attention_s += t.elapsed().as_secs_f64();
-
-        // quantize + Wo GQMV + residual (l.8-10)
-        quant_gqmv(exec, &s.att_out, &layer.wo, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
-        let t = Instant::now();
-        tensor::add_assign(&mut s.x, &s.xb);
-        prof.other_s += t.elapsed().as_secs_f64();
-
-        // FFN: RMSNorm + fused W1|W3 + SwiGLU + W2 + residual (l.11-15)
-        let t = Instant::now();
-        tensor::rmsnorm(&mut s.xb, &s.x, &layer.ffn_norm);
-        prof.rmsnorm_s += t.elapsed().as_secs_f64();
-        quant_gqmv(exec, &s.xb, &layer.w13, &mut s.h13, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
-        let t = Instant::now();
-        let (h1, h3) = s.h13.split_at_mut(cfg.hidden_dim);
-        tensor::swiglu(h1, h3);
-        prof.swiglu_s += t.elapsed().as_secs_f64();
-        let h1 = &s.h13[..cfg.hidden_dim];
-        quant_gqmv(exec, h1, &layer.w2, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
-        let t = Instant::now();
-        tensor::add_assign(&mut s.x, &s.xb);
-        prof.other_s += t.elapsed().as_secs_f64();
-    }
-
-    // final RMSNorm + classifier (l.16-17)
-    let t = Instant::now();
-    tensor::rmsnorm(&mut s.xb, &s.x, &model.final_norm);
-    prof.rmsnorm_s += t.elapsed().as_secs_f64();
-    quant_gqmv(exec, &s.xb, &model.cls, &mut s.logits, &mut s.qbuf, &mut s.sbuf, gs, prof)?;
-    Ok(())
+    let mut layers = ModelLayers { model };
+    let mut lanes = [BatchLane { kv, pos, token }];
+    forward_batch(model, &mut layers, exec, s, &mut lanes, prof)
 }
 
 // ---------------------------------------------------------------------------
@@ -193,6 +124,23 @@ pub struct ResidentLayers {
 }
 
 impl LayerProvider for ResidentLayers {
+    fn provide(&mut self, li: usize) -> Result<&crate::model::QuantLayer> {
+        self.model
+            .layers
+            .get(li)
+            .ok_or_else(|| anyhow::anyhow!("layer {li} out of range"))
+    }
+}
+
+/// Borrowed resident-weight [`LayerProvider`]: like [`ResidentLayers`]
+/// but over a plain `&QuantModel`, so the unified batch-1 path
+/// ([`CpuEngine`]) can lend its own model without an `Arc` round-trip.
+pub struct ModelLayers<'a> {
+    /// The borrowed quantized model whose layers are lent out.
+    pub model: &'a QuantModel,
+}
+
+impl LayerProvider for ModelLayers<'_> {
     fn provide(&mut self, li: usize) -> Result<&crate::model::QuantLayer> {
         self.model
             .layers
@@ -322,7 +270,11 @@ pub fn forward_batch(
     let (qkv_w, h2) = (s.qkv_w, s.h2);
     debug_assert_eq!(d, s.dim);
     for lane in lanes.iter() {
-        anyhow::ensure!((lane.token as usize) < cfg.vocab_size, "token {} out of range", lane.token);
+        anyhow::ensure!(
+            (lane.token as usize) < cfg.vocab_size,
+            "token {} out of range",
+            lane.token
+        );
         anyhow::ensure!(lane.pos < cfg.seq_len, "pos {} >= seq_len {}", lane.pos, cfg.seq_len);
     }
 
@@ -333,13 +285,22 @@ pub fn forward_batch(
     prof.other_s += t0.elapsed().as_secs_f64();
 
     for li in 0..cfg.n_layers {
-        // stage (or receive prefetched) layer weights — ONCE for all lanes
+        // stage (or receive prefetched) layer weights — ONCE for all
+        // lanes.  The wait is billed as transfer time (~0 for resident
+        // providers; the visible remainder of the staging for streamed
+        // ones).
+        let t = Instant::now();
         let layer = layers.provide(li)?;
+        prof.transfer_s += t.elapsed().as_secs_f64();
 
         // RMSNorm + quantize + fused QKV GQMV (Alg. 2 l.3-4, batched)
         let t = Instant::now();
         for b in 0..nb {
-            tensor::rmsnorm(&mut s.xb[b * d..(b + 1) * d], &s.x[b * d..(b + 1) * d], &layer.att_norm);
+            tensor::rmsnorm(
+                &mut s.xb[b * d..(b + 1) * d],
+                &s.x[b * d..(b + 1) * d],
+                &layer.att_norm,
+            );
         }
         prof.rmsnorm_s += t.elapsed().as_secs_f64();
         quant_gqmv_batch(
@@ -379,7 +340,11 @@ pub fn forward_batch(
         // FFN: RMSNorm + fused W1|W3 + SwiGLU + W2 + residual (l.11-15)
         let t = Instant::now();
         for b in 0..nb {
-            tensor::rmsnorm(&mut s.xb[b * d..(b + 1) * d], &s.x[b * d..(b + 1) * d], &layer.ffn_norm);
+            tensor::rmsnorm(
+                &mut s.xb[b * d..(b + 1) * d],
+                &s.x[b * d..(b + 1) * d],
+                &layer.ffn_norm,
+            );
         }
         prof.rmsnorm_s += t.elapsed().as_secs_f64();
         quant_gqmv_batch(
@@ -416,13 +381,17 @@ pub fn forward_batch(
 
 /// Resident-weight engine with a CPU GQMV backend.  Weights are shared
 /// (`Arc`); scratch and the default session are private per engine.
+///
+/// Decoding runs through the unified forward path: every call is a 1-lane
+/// [`forward_batch`], so this engine and the batch scheduler execute the
+/// same arithmetic.
 pub struct CpuEngine {
     /// Shared (read-only) quantized weights.
     pub model: Arc<QuantModel>,
     /// GQMV backend executing Algorithm 1.
     pub exec: Box<dyn GqmvExec>,
     session: Session,
-    s: Scratch,
+    s: BatchScratch,
 }
 
 impl CpuEngine {
@@ -431,7 +400,7 @@ impl CpuEngine {
     pub fn new(model: impl Into<Arc<QuantModel>>, exec: Box<dyn GqmvExec>) -> Self {
         let model = model.into();
         let cfg = model.cfg;
-        CpuEngine { exec, session: Session::new(&cfg), s: Scratch::new(&cfg), model }
+        CpuEngine { exec, session: Session::new(&cfg), s: BatchScratch::new(&cfg, 1), model }
     }
 
     /// Name of the GQMV backend this engine runs on.
@@ -465,7 +434,7 @@ impl CpuEngine {
             prof,
         )?;
         sess.pos += 1;
-        Ok(&self.s.logits)
+        Ok(self.s.logits(0))
     }
 }
 
@@ -485,7 +454,7 @@ impl Engine for CpuEngine {
             prof,
         )?;
         self.session.pos = pos + 1;
-        Ok(&self.s.logits)
+        Ok(self.s.logits(0))
     }
 
     fn reset(&mut self) {

@@ -110,9 +110,9 @@ impl LlamafEngine {
     /// Total/blocked staging seconds so far (Fig. 2 accounting).
     pub fn transfer_stats(&self) -> (f64, f64, u64) {
         (
-            self.streamer.total_transfer_s,
-            self.streamer.blocked_transfer_s,
-            self.streamer.transfers,
+            self.streamer.stats.total_transfer_s,
+            self.streamer.stats.blocked_transfer_s,
+            self.streamer.stats.transfers,
         )
     }
 
@@ -152,7 +152,7 @@ impl Engine for LlamafEngine {
 
         for li in 0..cfg.n_layers {
             // stage (or receive prefetched) layer weights
-            let blocked_before = self.streamer.blocked_transfer_s;
+            let blocked_before = self.streamer.stats.blocked_transfer_s;
             let layer = self.streamer.layer(li)?;
             // (borrow of streamer ends when layer refs are copied below)
             let att_norm = layer.host.att_norm.clone();
@@ -212,7 +212,7 @@ impl Engine for LlamafEngine {
             tensor::add_assign(&mut self.s.x, &self.s.xb);
             prof.other_s += t.elapsed().as_secs_f64();
 
-            prof.transfer_s += self.streamer.blocked_transfer_s - blocked_before;
+            prof.transfer_s += self.streamer.stats.blocked_transfer_s - blocked_before;
         }
 
         let t = Instant::now();
@@ -223,7 +223,7 @@ impl Engine for LlamafEngine {
             &self.rt, &self.resident.cls_dev, &self.s.xb, &mut self.s.logits,
             &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
         )?;
-        self.last_blocked_s = self.streamer.blocked_transfer_s;
+        self.last_blocked_s = self.streamer.stats.blocked_transfer_s;
         Ok(&self.s.logits)
     }
 

@@ -20,7 +20,7 @@ pub mod llamaf;
 pub mod ppl;
 pub mod session;
 
-pub use batch::{BatchOpts, BatchScheduler};
+pub use batch::{BatchOpts, BatchScheduler, WeightMode};
 pub use forward::{CpuEngine, Engine, Scratch};
 pub use generate::{generate, GenOutput, Sampler};
 pub use llamaf::LlamafEngine;

@@ -8,12 +8,22 @@ use crate::model::{NANO, TINYLLAMA_1_1B};
 
 pub fn run(args: &Args) -> Result<()> {
     header("Table I: Llama2 weight matrix specifications");
-    for (name, cfg) in [("TinyLlama 1.1B (paper)", TINYLLAMA_1_1B), ("nano (trained E2E model)", NANO)] {
-        println!("\n  {name}:  dim={} hidden={} layers={} heads={}/{} vocab={}",
-            cfg.dim, cfg.hidden_dim, cfg.n_layers, cfg.n_heads, cfg.n_kv_heads, cfg.vocab_size);
+    for (name, cfg) in
+        [("TinyLlama 1.1B (paper)", TINYLLAMA_1_1B), ("nano (trained E2E model)", NANO)]
+    {
+        println!(
+            "\n  {name}:  dim={} hidden={} layers={} heads={}/{} vocab={}",
+            cfg.dim, cfg.hidden_dim, cfg.n_layers, cfg.n_heads, cfg.n_kv_heads, cfg.vocab_size
+        );
         println!("  {:<16} {:>10} {:>10}   {:<10}", "Matrix", "rows", "cols", "quantized");
         for (mname, rows, cols, quant) in cfg.table1_rows() {
-            println!("  {:<16} {:>10} {:>10}   {}", mname, rows, cols, if quant { "yes" } else { "no" });
+            println!(
+                "  {:<16} {:>10} {:>10}   {}",
+                mname,
+                rows,
+                cols,
+                if quant { "yes" } else { "no" }
+            );
         }
         println!(
             "  params: {:.2}M   f32 size: {:.2} GB   W8A8 (GS={}) size: {:.2} GB",

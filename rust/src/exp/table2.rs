@@ -33,7 +33,11 @@ pub fn load_model(args: &Args) -> Result<QuantModel> {
 }
 
 /// Measured per-position profiles: Vec of (pos, profile).
-pub fn measure(model: QuantModel, positions: &[usize], threads: usize) -> Result<Vec<(usize, ForwardProfile)>> {
+pub fn measure(
+    model: QuantModel,
+    positions: &[usize],
+    threads: usize,
+) -> Result<Vec<(usize, ForwardProfile)>> {
     let pool = Arc::new(ThreadPool::new(threads));
     let mut engine = CpuEngine::new(model, Box::new(ThreadedGqmv::new(pool)));
     let max_pos = *positions.iter().max().unwrap();
@@ -52,7 +56,11 @@ pub fn measure(model: QuantModel, positions: &[usize], threads: usize) -> Result
         } else {
             let logits = engine.forward(tok, pos, &mut scrap)?;
             // greedy continuation keeps the run realistic; random fallback
-            tok = if pos % 7 == 0 { rng.below(vocab) as u32 } else { crate::tensor::argmax(logits) as u32 };
+            tok = if pos % 7 == 0 {
+                rng.below(vocab) as u32
+            } else {
+                crate::tensor::argmax(logits) as u32
+            };
         }
     }
     Ok(out)
@@ -80,7 +88,8 @@ pub fn run(args: &Args) -> Result<()> {
     for (i, (name, get)) in rows.iter().enumerate() {
         let mut cells = String::new();
         for (_, prof) in &profiles {
-            let compute = prof.matrix_s + prof.attention_s + prof.swiglu_s + prof.rope_s + prof.rmsnorm_s;
+            let compute =
+                prof.matrix_s + prof.attention_s + prof.swiglu_s + prof.rope_s + prof.rmsnorm_s;
             cells.push_str(&format!("{:>8.2}% ", 100.0 * get(prof) / compute));
             let paper_vals = paper::TABLE2[i].1;
             let _ = paper_vals;

@@ -34,12 +34,14 @@ COMMANDS
             [--sync|--async] [--top-p P --temperature T --seed S]
   serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
             [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
-            [--max-batch B] [--sync]
+            [--max-batch B] [--sync | --resident]
             ps/ps-scalar/sim: concurrent requests are folded into
             step-synchronous batched decoding over one shared weight
-            copy (up to B lanes/step, weights staged once per step;
-            --sync disables the async layer prefetch); llamaf:
-            sequential batch-1 streaming
+            copy (up to B lanes/step, weights staged once per step by
+            a persistent prefetch worker; --sync disables the async
+            layer prefetch, --resident skips staging entirely and
+            serves zero-copy resident weights); llamaf: sequential
+            batch-1 streaming
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
@@ -152,6 +154,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_sessions: args.get_usize("max-sessions", 16)?,
                 max_batch: args.get_usize("max-batch", 8)?,
                 sync_staging: args.flag("sync"),
+                resident: args.flag("resident"),
             };
             let threads = args.get_usize("threads", 4)?;
             let make_exec: Box<llamaf::server::ExecFactory> = match engine_kind.as_str() {
@@ -166,12 +169,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             };
             let server = llamaf::server::Server::bind(addr, qm.cfg.vocab_size)?;
             eprintln!(
-                "llamaf serving on {} ({} x{} workers, batch<= {}, {} pooled sessions, queue {}) — \
+                "llamaf serving on {} ({} x{} workers, batch<= {}, {} weights, {} pooled \
+                 sessions, queue {}) — \
                  protocol: GEN/SGEN <steps> <prompt> | STATS | PING | SHUTDOWN | QUIT",
                 server.local_addr()?,
                 engine_kind,
                 opts.workers,
                 opts.max_batch,
+                if opts.resident { "resident" } else { "streamed" },
                 opts.max_sessions,
                 opts.queue_depth,
             );
@@ -215,7 +220,10 @@ fn cmd_synth(args: &Args) -> Result<()> {
 
 fn cmd_info(args: &Args) -> Result<()> {
     let art = args.get_or("artifacts", "artifacts");
-    println!("llamaf {} — three-layer Rust+JAX+Pallas LlamaF reproduction", env!("CARGO_PKG_VERSION"));
+    println!(
+        "llamaf {} — three-layer Rust+JAX+Pallas LlamaF reproduction",
+        env!("CARGO_PKG_VERSION")
+    );
     println!("artifacts dir: {art}");
     match Runtime::load(Path::new(art)) {
         Ok(rt) => {

@@ -291,18 +291,34 @@ pub struct BatchMetrics {
     steps: AtomicU64,
     lane_tokens: AtomicU64,
     bytes_staged: AtomicU64,
+    /// Nanoseconds the decode thread spent waiting on *armed* prefetches
+    /// from the persistent worker — the staging latency the async
+    /// schedule failed to hide.  0 in resident mode and under sync
+    /// staging (nothing is ever armed; inline staging waits show up in
+    /// the step profile's `transfer_s` instead).
+    prefetch_wait_ns: AtomicU64,
     occupancy: Mutex<Histogram>,
     profile: Mutex<ForwardProfile>,
 }
 
 impl BatchMetrics {
     /// Record one batched step that carried `occupancy` lanes, staged
-    /// `bytes` of weights, and spent its time per `prof` (the step's
-    /// component breakdown, merged into the lifetime profile).
-    pub fn record_step(&self, occupancy: usize, bytes: u64, prof: &ForwardProfile) {
+    /// `bytes` of weights, waited `prefetch_wait_s` seconds on armed
+    /// prefetches, and spent its time per `prof` (the step's component
+    /// breakdown, merged into the lifetime profile).
+    pub fn record_step(
+        &self,
+        occupancy: usize,
+        bytes: u64,
+        prefetch_wait_s: f64,
+        prof: &ForwardProfile,
+    ) {
         self.steps.fetch_add(1, Ordering::Relaxed);
         self.lane_tokens.fetch_add(occupancy as u64, Ordering::Relaxed);
         self.bytes_staged.fetch_add(bytes, Ordering::Relaxed);
+        if prefetch_wait_s > 0.0 {
+            self.prefetch_wait_ns.fetch_add((prefetch_wait_s * 1e9) as u64, Ordering::Relaxed);
+        }
         self.occupancy.lock().unwrap().record(occupancy as f64);
         self.profile.lock().unwrap().merge(prof);
     }
@@ -327,6 +343,13 @@ impl BatchMetrics {
     /// Total weight bytes staged by the shared streamer.
     pub fn bytes_staged(&self) -> u64 {
         self.bytes_staged.load(Ordering::Relaxed)
+    }
+
+    /// Seconds the decode thread spent waiting on armed prefetches — the
+    /// latency the async schedule fails to hide (0 when fully hidden,
+    /// under sync staging, or when serving resident weights).
+    pub fn prefetch_wait_s(&self) -> f64 {
+        self.prefetch_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
     /// Mean lanes per step.
@@ -357,13 +380,14 @@ impl BatchMetrics {
         let matrix_pct = if total > 0.0 { 100.0 * prof.matrix_s / total } else { 0.0 };
         format!(
             "batch_steps={} batch_tokens={} batch_mean={:.2} batch_max={:.0} \
-             bytes_staged={} bytes_per_tok={:.0} matrix_pct={:.0}",
+             bytes_staged={} bytes_per_tok={:.0} prefetch_wait_ms={:.3} matrix_pct={:.0}",
             self.steps(),
             self.lane_tokens(),
             self.occupancy_mean(),
             self.occupancy_max(),
             self.bytes_staged(),
             self.bytes_per_token(),
+            1e3 * self.prefetch_wait_s(),
             matrix_pct,
         )
     }
@@ -459,7 +483,7 @@ mod tests {
         // 10 steps at occupancy 4, each staging 1000 bytes
         let prof = ForwardProfile { matrix_s: 0.9, attention_s: 0.1, ..Default::default() };
         for _ in 0..10 {
-            m.record_step(4, 1000, &prof);
+            m.record_step(4, 1000, 0.002, &prof);
         }
         assert!((m.profile().matrix_s - 9.0).abs() < 1e-9, "profile merges per step");
         assert_eq!(m.steps(), 10);
@@ -468,15 +492,21 @@ mod tests {
         assert!((m.bytes_per_token() - 250.0).abs() < 1e-9);
         assert!((m.occupancy_mean() - 4.0).abs() < 1e-9);
         assert_eq!(m.occupancy_max(), 4.0);
+        assert!((m.prefetch_wait_s() - 0.02).abs() < 1e-6, "{}", m.prefetch_wait_s());
         let s = m.summary();
-        for field in ["batch_steps=10", "batch_tokens=40", "bytes_staged=10000", "bytes_per_tok=250"]
-        {
+        for field in [
+            "batch_steps=10",
+            "batch_tokens=40",
+            "bytes_staged=10000",
+            "bytes_per_tok=250",
+            "prefetch_wait_ms=20.000",
+        ] {
             assert!(s.contains(field), "summary missing {field}: {s}");
         }
         // batch-1 baseline on the same workload stages 4x the bytes/token
         let b1 = BatchMetrics::default();
         for _ in 0..40 {
-            b1.record_step(1, 1000, &ForwardProfile::default());
+            b1.record_step(1, 1000, 0.0, &ForwardProfile::default());
         }
         assert!(b1.bytes_per_token() / m.bytes_per_token() >= 3.0);
     }

@@ -109,10 +109,11 @@ impl LlamaConfig {
 
     /// All distinct GQMV shapes (what the AOT manifest must provide).
     pub fn all_mat_shapes(&self) -> Vec<(usize, usize)> {
-        let mut v: Vec<(usize, usize)> = [MatKind::Qkv, MatKind::Wo, MatKind::W13, MatKind::W2, MatKind::Cls]
-            .iter()
-            .map(|&k| self.mat_shape(k))
-            .collect();
+        let mut v: Vec<(usize, usize)> =
+            [MatKind::Qkv, MatKind::Wo, MatKind::W13, MatKind::W2, MatKind::Cls]
+                .iter()
+                .map(|&k| self.mat_shape(k))
+                .collect();
         v.sort_unstable();
         v.dedup();
         v

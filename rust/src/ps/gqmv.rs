@@ -263,7 +263,12 @@ mod tests {
     use crate::quant::quantize_activation;
     use crate::util::Rng;
 
-    fn random_case(m: usize, n: usize, gs: usize, seed: u64) -> (Vec<i8>, Vec<f32>, QuantizedTensor) {
+    fn random_case(
+        m: usize,
+        n: usize,
+        gs: usize,
+        seed: u64,
+    ) -> (Vec<i8>, Vec<f32>, QuantizedTensor) {
         let mut rng = Rng::new(seed);
         let w = rng.normal_vec(m * n, 0.5);
         let x = rng.normal_vec(n, 1.0);

@@ -16,7 +16,9 @@
 //!   batched passes — each layer's weights are staged once per step for
 //!   the whole batch.  Per-client KV state comes from a capacity-bounded
 //!   [`SessionPool`] with LRU eviction.  Greedy outputs are byte-identical
-//!   to batch-1 serving.
+//!   to batch-1 serving.  Weights are streamed (staged once per step via
+//!   the persistent prefetch worker) by default, or served zero-copy with
+//!   `--resident` when the model truly fits device-side.
 //!
 //! Protocol (one request per line over TCP):
 //!   `GEN <steps> <prompt text...>`  →  one line: `OK <tok/s> | <text>`
@@ -44,7 +46,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::engine::batch::{BatchOpts, BatchScheduler};
+use crate::engine::batch::{BatchOpts, BatchScheduler, WeightMode};
 use crate::engine::forward::Engine;
 use crate::engine::generate::{generate, Sampler};
 use crate::engine::session::{Session, SessionPool};
@@ -70,8 +72,13 @@ pub struct ServeOpts {
     /// Maximum lanes per batched decode step.
     pub max_batch: usize,
     /// Stage layer weights synchronously instead of via the async
-    /// prefetch (Fig. 2 top vs bottom; for A/B measurement).
+    /// prefetch (Fig. 2 top vs bottom; for A/B measurement).  Only
+    /// meaningful when streaming; rejected together with `resident`.
     pub sync_staging: bool,
+    /// Serve zero-copy resident weights ([`WeightMode::Resident`])
+    /// instead of streaming them through the staging scheduler — for
+    /// deployments where the model truly fits device-side.
+    pub resident: bool,
 }
 
 impl Default for ServeOpts {
@@ -82,6 +89,7 @@ impl Default for ServeOpts {
             max_sessions: 16,
             max_batch: 8,
             sync_staging: false,
+            resident: false,
         }
     }
 }
@@ -108,6 +116,8 @@ struct Shared {
     metrics: ServerMetrics,
     sched: Arc<BatchScheduler>,
     cfg: LlamaConfig,
+    /// `resident` or `streamed` — surfaced in `STATS`.
+    weights: &'static str,
     next_conn: AtomicU64,
     workers_live: AtomicUsize,
     addr: std::net::SocketAddr,
@@ -222,6 +232,10 @@ impl Server {
         anyhow::ensure!(opts.workers >= 1, "need at least one worker");
         anyhow::ensure!(opts.queue_depth >= 1, "need a queue depth of at least 1");
         anyhow::ensure!(opts.max_batch >= 1, "need a batch capacity of at least 1");
+        anyhow::ensure!(
+            !(opts.resident && opts.sync_staging),
+            "--resident serves from memory; --sync only applies to streamed staging"
+        );
         // resolve the address BEFORE spawning the decode thread: any `?`
         // between scheduler creation and `sched.shutdown()` would leak it
         let addr = self.local_addr()?;
@@ -234,6 +248,7 @@ impl Server {
                 // already caps concurrent lanes; mirror that bound here
                 max_pending: opts.max_sessions.max(opts.max_batch),
                 sched: if opts.sync_staging { SchedMode::Sync } else { SchedMode::Async },
+                weights: if opts.resident { WeightMode::Resident } else { WeightMode::Streamed },
             },
         );
         let shared = Shared {
@@ -244,6 +259,7 @@ impl Server {
             metrics: ServerMetrics::default(),
             sched: Arc::clone(&sched),
             cfg: model.cfg,
+            weights: if opts.resident { "resident" } else { "streamed" },
             next_conn: AtomicU64::new(0),
             workers_live: AtomicUsize::new(0),
             addr,
@@ -388,9 +404,11 @@ impl Server {
         if line == "STATS" {
             let (idle, in_use) = shared.pool.counts();
             return Ok(Some(format!(
-                "OK sessions_idle={idle} sessions_busy={in_use} sessions_cap={} workers={} {} {}",
+                "OK sessions_idle={idle} sessions_busy={in_use} sessions_cap={} workers={} \
+                 weights={} {} {}",
                 shared.pool.capacity(),
                 shared.workers_live.load(Ordering::SeqCst),
+                shared.weights,
                 shared.metrics.summary(),
                 shared.sched.metrics().summary(),
             )));

@@ -22,7 +22,10 @@ where
     for seed in 0..iters {
         let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
         if !prop(&mut rng) {
-            panic!("property '{name}' failed at seed index {seed} (replay: forall_one(\"{name}\", {seed}, prop))");
+            panic!(
+                "property '{name}' failed at seed index {seed} \
+                 (replay: forall_one(\"{name}\", {seed}, prop))"
+            );
         }
     }
 }

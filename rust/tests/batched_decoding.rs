@@ -12,7 +12,7 @@
 
 use std::sync::{Arc, Barrier};
 
-use llamaf::engine::batch::{BatchOpts, BatchScheduler};
+use llamaf::engine::batch::{BatchOpts, BatchScheduler, WeightMode};
 use llamaf::engine::forward::CpuEngine;
 use llamaf::engine::generate::{generate, Sampler};
 use llamaf::engine::session::Session;
@@ -97,7 +97,8 @@ fn batched_decode_bit_identical_for_b_2_4_8() {
         // stragglers keep decoding
         let specs: Vec<(Vec<u32>, usize)> = (0..bsz)
             .map(|i| {
-                let prompt: Vec<u32> = (0..(2 + i % 3)).map(|k| ((7 * i + k) % 64) as u32).collect();
+                let prompt: Vec<u32> =
+                    (0..(2 + i % 3)).map(|k| ((7 * i + k) % 64) as u32).collect();
                 (prompt, 4 + (i % 5))
             })
             .collect();
@@ -182,6 +183,57 @@ fn late_joining_lane_is_bit_exact() {
         eprintln!("attempt {attempt}: lanes never overlapped, retrying");
     }
     panic!("lane B never joined mid-flight in {ATTEMPTS} attempts");
+}
+
+#[test]
+fn resident_scheduler_bit_exact_and_stages_zero_bytes() {
+    // `serve --resident` path: the decode thread runs ResidentLayers
+    // (zero-copy), so token streams stay bit-identical to batch-1 while
+    // the staging counters stay at zero.
+    let model = tiny_model(25);
+    let sched = BatchScheduler::new(
+        Arc::clone(&model),
+        Box::new(ScalarGqmv),
+        BatchOpts { max_batch: 4, weights: WeightMode::Resident, ..Default::default() },
+    );
+    let specs: Vec<(Vec<u32>, usize)> =
+        (0..4).map(|i| (vec![(i + 2) as u32, (3 * i + 1) as u32 % 64], 6 + i)).collect();
+    run_lanes_and_check(&model, &sched, &specs, true);
+    assert!(sched.metrics().steps() > 0);
+    assert_eq!(sched.metrics().bytes_staged(), 0, "resident mode must never stage");
+    assert_eq!(sched.metrics().prefetch_wait_s(), 0.0, "no staging, no staging waits");
+    sched.shutdown();
+}
+
+#[test]
+fn persistent_worker_survives_many_sequential_generations() {
+    // Lifecycle soak of the persistent prefetch worker: one streamed
+    // scheduler serves many generations back to back (each ends with the
+    // streamer wrapped mid-cycle, so the next lane's layer-0 access
+    // exercises the stale-prefetch discard + re-arm path).  Every
+    // generation must stay bit-exact, and the staging counters must keep
+    // advancing — a wedged or dead worker would hang or error here.
+    let model = tiny_model(26);
+    let sched = BatchScheduler::new(
+        Arc::clone(&model),
+        Box::new(ScalarGqmv),
+        BatchOpts { max_batch: 2, ..Default::default() },
+    );
+    let mut staged_last = 0;
+    for round in 0u32..6 {
+        let prompt = vec![1 + round % 8, 10, (7 * round + 3) % 64];
+        let steps = 3 + (round as usize % 3);
+        let want = batch1_reference(&model, &prompt, steps);
+        let (sess, out) = sched.generate(Session::new(&model.cfg), &prompt, steps, |_, _| Ok(()));
+        assert!(sess.is_some(), "round {round}: session lost");
+        assert_eq!(out.unwrap().generated, want, "round {round} diverged");
+        let staged = sched.metrics().bytes_staged();
+        assert!(staged > staged_last, "round {round}: staging stopped advancing");
+        staged_last = staged;
+    }
+    let wait = sched.metrics().prefetch_wait_s();
+    assert!(wait.is_finite() && wait >= 0.0, "prefetch wait must be sane: {wait}");
+    sched.shutdown();
 }
 
 #[test]

@@ -181,6 +181,7 @@ fn stats_and_plain_gen_roundtrip() {
         "sessions_idle=",
         "sessions_busy=",
         "sessions_cap=4",
+        "weights=streamed",
         "requests=1",
         "tokens=4",
         // batched-decoding counters: "hello" encodes to 6 tokens (BOS +
@@ -189,6 +190,7 @@ fn stats_and_plain_gen_roundtrip() {
         "batch_tokens=9",
         "bytes_staged=",
         "bytes_per_tok=",
+        "prefetch_wait_ms=",
     ] {
         assert!(line.contains(field), "STATS missing {field}: {line}");
     }
@@ -197,4 +199,62 @@ fn stats_and_plain_gen_roundtrip() {
     drop(conn);
     let report = server_thread.join().unwrap();
     assert_eq!(report.requests, 1);
+}
+
+#[test]
+fn resident_serving_matches_batch1_and_reports_zero_staging() {
+    // `serve --resident`: same protocol, zero-copy weights.  Outputs must
+    // still be byte-identical to batch-1 serving, and STATS must show
+    // weights=resident with no staged bytes.
+    let model = tiny_model(10);
+    let tok = Tokenizer::new(512);
+    let mut eng = CpuEngine::new(Arc::clone(&model), Box::new(ScalarGqmv));
+    let ids = tok.encode("resident weights", true);
+    let want = generate(&mut eng, &ids, 6, Sampler::Greedy, false).unwrap();
+    let want_text = tok.decode(&want.generated).replace('\n', " ");
+
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 2,
+        queue_depth: 8,
+        max_sessions: 4,
+        resident: true,
+        ..Default::default()
+    };
+    let server_thread = std::thread::spawn(move || {
+        server.serve_shared(model, &scalar_exec, &opts, Some(1)).unwrap()
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    conn.write_all(b"GEN 6 resident weights\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    let text = line.trim_end().split_once(" | ").expect("OK <rate> | <text>").1.to_string();
+    assert_eq!(text, want_text, "resident serving diverged from batch-1 output");
+
+    conn.write_all(b"STATS\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    for field in ["weights=resident", "bytes_staged=0 ", "prefetch_wait_ms=0.000"] {
+        assert!(line.contains(field), "STATS missing {field}: {line}");
+    }
+
+    conn.write_all(b"QUIT\n").unwrap();
+    drop(conn);
+    let report = server_thread.join().unwrap();
+    assert_eq!(report.requests, 1);
+    assert_eq!(report.tokens, 6);
+}
+
+#[test]
+fn resident_plus_sync_is_rejected_at_startup() {
+    let model = tiny_model(11);
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let opts = ServeOpts { resident: true, sync_staging: true, ..Default::default() };
+    let err = server.serve_shared(model, &scalar_exec, &opts, Some(1)).unwrap_err();
+    assert!(err.to_string().contains("--resident"), "{err}");
 }

@@ -1,0 +1,206 @@
+//! Guard of the forward-path unification: batch-1 decoding now routes
+//! through a 1-lane `forward_batch`, and this test pins its outputs
+//! against an op-for-op reference of the **pre-unification** dedicated
+//! batch-1 pass (the historical `forward_pass` body, reproduced below
+//! from the public primitives).  Any arithmetic drift in the unified
+//! path — reordered ops, changed associativity, a different cast chain —
+//! breaks bit-equality here.
+//!
+//! Runs on the synthetic tiny model — no artifacts required.
+
+use std::sync::Arc;
+
+use llamaf::engine::forward::CpuEngine;
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::engine::session::Session;
+use llamaf::engine::Engine;
+use llamaf::metrics::ForwardProfile;
+use llamaf::model::{FloatModel, KvCache, LlamaConfig, QuantModel};
+use llamaf::ps::float::attention;
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::ScalarGqmv;
+use llamaf::quant::{quantize_activation_into, QuantizedTensor};
+use llamaf::tensor;
+
+fn tiny_cfg() -> LlamaConfig {
+    LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 3,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 64,
+        seq_len: 32,
+        gs: 32,
+    }
+}
+
+fn tiny_model(seed: u64) -> Arc<QuantModel> {
+    Arc::new(QuantModel::from_float(&FloatModel::random(tiny_cfg(), seed)))
+}
+
+/// Pre-unification reference scratch (the historical `Scratch` layout).
+struct RefScratch {
+    x: Vec<f32>,
+    xb: Vec<f32>,
+    qkv: Vec<f32>,
+    att_out: Vec<f32>,
+    h13: Vec<f32>,
+    logits: Vec<f32>,
+    qbuf: Vec<i8>,
+    sbuf: Vec<f32>,
+}
+
+impl RefScratch {
+    fn new(cfg: &LlamaConfig) -> Self {
+        let max_in = cfg.dim.max(cfg.hidden_dim);
+        RefScratch {
+            x: vec![0.0; cfg.dim],
+            xb: vec![0.0; cfg.dim],
+            qkv: vec![0.0; cfg.dim + 2 * cfg.kv_dim()],
+            att_out: vec![0.0; cfg.dim],
+            h13: vec![0.0; 2 * cfg.hidden_dim],
+            logits: vec![0.0; cfg.vocab_size],
+            qbuf: vec![0; max_in],
+            sbuf: vec![0.0; max_in / cfg.gs],
+        }
+    }
+}
+
+/// quantize + one GQMV, exactly as the historical batch-1 pass did it.
+fn ref_quant_gqmv(
+    exec: &mut dyn GqmvExec,
+    x: &[f32],
+    w: &QuantizedTensor,
+    out: &mut [f32],
+    qbuf: &mut [i8],
+    sbuf: &mut [f32],
+    gs: usize,
+) {
+    let n = x.len();
+    quantize_activation_into(x, gs, &mut qbuf[..n], &mut sbuf[..n / gs]);
+    exec.gqmv(&qbuf[..n], &sbuf[..n / gs], w, out).unwrap();
+}
+
+/// The historical dedicated batch-1 Algorithm-2 op sequence, verbatim:
+/// embed, then per layer RMSNorm → QKV GQMV → RoPE → KV store →
+/// attention → Wo GQMV → residual → RMSNorm → W1‖W3 GQMV → SwiGLU →
+/// W2 GQMV → residual, then final RMSNorm → classifier GQMV.
+fn ref_forward_pass(
+    model: &QuantModel,
+    exec: &mut dyn GqmvExec,
+    s: &mut RefScratch,
+    kv: &mut KvCache,
+    token: u32,
+    pos: usize,
+) {
+    let cfg = model.cfg;
+    let (d, kv_d, hd, gs) = (cfg.dim, cfg.kv_dim(), cfg.head_dim(), cfg.gs);
+    model.tok_emb.dequantize_row(token as usize, &mut s.x);
+    for li in 0..cfg.n_layers {
+        let layer = &model.layers[li];
+        tensor::rmsnorm(&mut s.xb, &s.x, &layer.att_norm);
+        ref_quant_gqmv(exec, &s.xb, &layer.wqkv, &mut s.qkv, &mut s.qbuf, &mut s.sbuf, gs);
+        let (q, kvs) = s.qkv.split_at_mut(d);
+        let (k, v) = kvs.split_at_mut(kv_d);
+        tensor::rope(q, pos, hd);
+        tensor::rope(k, pos, hd);
+        kv.store(li, pos, k, v);
+        attention(&cfg, kv, li, pos, q, &mut s.att_out);
+        ref_quant_gqmv(exec, &s.att_out, &layer.wo, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs);
+        tensor::add_assign(&mut s.x, &s.xb);
+        tensor::rmsnorm(&mut s.xb, &s.x, &layer.ffn_norm);
+        ref_quant_gqmv(exec, &s.xb, &layer.w13, &mut s.h13, &mut s.qbuf, &mut s.sbuf, gs);
+        let (h1, h3) = s.h13.split_at_mut(cfg.hidden_dim);
+        tensor::swiglu(h1, h3);
+        let h1 = &s.h13[..cfg.hidden_dim];
+        ref_quant_gqmv(exec, h1, &layer.w2, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs);
+        tensor::add_assign(&mut s.x, &s.xb);
+    }
+    tensor::rmsnorm(&mut s.xb, &s.x, &model.final_norm);
+    ref_quant_gqmv(exec, &s.xb, &model.cls, &mut s.logits, &mut s.qbuf, &mut s.sbuf, gs);
+}
+
+#[test]
+fn unified_batch1_bit_identical_to_pre_refactor_pass() {
+    let qm = tiny_model(31);
+    let cfg = qm.cfg;
+    let tokens = [5u32, 8, 2, 60, 1, 33, 17, 9];
+
+    // reference: the historical op sequence, step by step
+    let mut ref_exec = ScalarGqmv;
+    let mut ref_s = RefScratch::new(&cfg);
+    let mut ref_kv = KvCache::new(&cfg);
+    let mut want: Vec<Vec<f32>> = Vec::new();
+    for (pos, &t) in tokens.iter().enumerate() {
+        ref_forward_pass(&qm, &mut ref_exec, &mut ref_s, &mut ref_kv, t, pos);
+        want.push(ref_s.logits.clone());
+    }
+
+    // unified: CpuEngine::forward (a 1-lane forward_batch since the
+    // unification) must reproduce every logit vector bit for bit
+    let mut engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+    let mut prof = ForwardProfile::default();
+    for (pos, &t) in tokens.iter().enumerate() {
+        let got = engine.forward(t, pos, &mut prof).unwrap();
+        assert_eq!(got, &want[pos][..], "unified pass diverged at pos {pos}");
+    }
+}
+
+#[test]
+fn unified_session_path_bit_identical_to_pre_refactor_pass() {
+    // the serving entry point (forward_session) rides the same unified
+    // pass; pin it against the reference too
+    let qm = tiny_model(32);
+    let cfg = qm.cfg;
+    let tokens = [3u32, 40, 7, 1, 22];
+
+    let mut ref_exec = ScalarGqmv;
+    let mut ref_s = RefScratch::new(&cfg);
+    let mut ref_kv = KvCache::new(&cfg);
+    let mut want: Vec<Vec<f32>> = Vec::new();
+    for (pos, &t) in tokens.iter().enumerate() {
+        ref_forward_pass(&qm, &mut ref_exec, &mut ref_s, &mut ref_kv, t, pos);
+        want.push(ref_s.logits.clone());
+    }
+
+    let mut engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+    let mut sess = Session::new(&cfg);
+    let mut prof = ForwardProfile::default();
+    for (pos, &t) in tokens.iter().enumerate() {
+        let got = engine.forward_session(&mut sess, t, &mut prof).unwrap();
+        assert_eq!(got, &want[pos][..], "session path diverged at pos {pos}");
+        assert_eq!(sess.pos, pos + 1);
+    }
+}
+
+#[test]
+fn unified_greedy_decode_matches_reference_decode() {
+    // end to end: a greedy generation through the unified engine equals
+    // a greedy generation driven by the reference pass
+    let qm = tiny_model(33);
+    let cfg = qm.cfg;
+    let prompt = [1u32, 10, 11];
+    let steps = 12;
+
+    let mut ref_exec = ScalarGqmv;
+    let mut ref_s = RefScratch::new(&cfg);
+    let mut ref_kv = KvCache::new(&cfg);
+    let mut pos = 0;
+    for &t in &prompt[..prompt.len() - 1] {
+        ref_forward_pass(&qm, &mut ref_exec, &mut ref_s, &mut ref_kv, t, pos);
+        pos += 1;
+    }
+    let mut cur = *prompt.last().unwrap();
+    let mut want = Vec::new();
+    for _ in 0..steps {
+        ref_forward_pass(&qm, &mut ref_exec, &mut ref_s, &mut ref_kv, cur, pos);
+        pos += 1;
+        cur = tensor::argmax(&ref_s.logits) as u32;
+        want.push(cur);
+    }
+
+    let mut engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+    let out = generate(&mut engine, &prompt, steps, Sampler::Greedy, false).unwrap();
+    assert_eq!(out.generated, want, "greedy stream diverged from pre-refactor reference");
+}

@@ -22,13 +22,19 @@ use llamaf::engine::session::Session;
 use llamaf::model::{QuantModel, NANO};
 use llamaf::ps::ScalarGqmv;
 
-/// Decode `b` concurrent lanes of `steps` tokens; returns
-/// (aggregate tok/s, staged bytes/token, mean occupancy).
-fn run_batch(model: &Arc<QuantModel>, b: usize, steps: usize) -> (f64, f64, f64) {
+/// Decode `b` concurrent lanes of `steps` tokens at staging-ring depth
+/// `prefetch_depth`; returns (aggregate tok/s, staged bytes/token, mean
+/// lane occupancy, mean ring occupancy).
+fn run_batch(
+    model: &Arc<QuantModel>,
+    b: usize,
+    steps: usize,
+    prefetch_depth: usize,
+) -> (f64, f64, f64, f64) {
     let sched = BatchScheduler::new(
         Arc::clone(model),
         Box::new(ScalarGqmv),
-        BatchOpts { max_batch: b, ..Default::default() },
+        BatchOpts { max_batch: b, prefetch_depth, ..Default::default() },
     );
     let barrier = Arc::new(Barrier::new(b + 1));
     let handles: Vec<_> = (0..b)
@@ -52,8 +58,9 @@ fn run_batch(model: &Arc<QuantModel>, b: usize, steps: usize) -> (f64, f64, f64)
     let dt = t.elapsed().as_secs_f64();
     let bpt = sched.metrics().bytes_per_token();
     let occ = sched.metrics().occupancy_mean();
+    let ring = sched.metrics().ring_occupancy();
     sched.shutdown();
-    (tokens as f64 / dt.max(1e-9), bpt, occ)
+    (tokens as f64 / dt.max(1e-9), bpt, occ, ring)
 }
 
 fn main() {
@@ -73,21 +80,31 @@ fn main() {
     println!("{steps} steps/lane, async weight streaming, one decode thread\n");
     let mut base_bpt = 0.0f64;
     for b in [1usize, 2, 4, 8] {
-        let (tps, bpt, occ) = run_batch(&model, b, steps);
+        let (tps, bpt, occ, ring) = run_batch(&model, b, steps, 2);
         if b == 1 {
             base_bpt = bpt;
         }
         let reduction = if bpt > 0.0 { base_bpt / bpt } else { 0.0 };
         println!(
             "B={b:<2}  mean_occupancy {occ:>5.2}  aggregate {tps:>9.1} tok/s  \
-             staged {bpt:>12.0} B/tok  reduction {reduction:>5.2}x"
+             staged {bpt:>12.0} B/tok  reduction {reduction:>5.2}x  ring_occ {ring:>4.2}"
         );
         report.case(&format!("B{b}_aggregate"), tps, "tok/s");
         report.case(&format!("B{b}_staged"), bpt, "B/tok");
+        report.case(&format!("B{b}_ring_occ"), ring, "layers");
     }
     println!(
         "\n(reduction ≈ mean occupancy: each step stages every layer once, shared by B lanes)"
     );
+
+    section("staging-ring depth sweep at B=4 (--prefetch-depth analogue)");
+    for depth in [1usize, 2, 4] {
+        let (tps, _bpt, _occ, ring) = run_batch(&model, 4, steps, depth);
+        println!("depth={depth}  aggregate {tps:>9.1} tok/s  ring_occ {ring:>4.2}");
+        report.case(&format!("depth{depth}_aggregate"), tps, "tok/s");
+        report.case(&format!("depth{depth}_ring_occ"), ring, "layers");
+    }
+    println!("\n(ring_occ > 0 at depth >= 2: the prefetch pipeline genuinely runs ahead)");
     match report.write() {
         Ok(p) => eprintln!("bench json: {}", p.display()),
         Err(e) => eprintln!("bench json write failed: {e}"),

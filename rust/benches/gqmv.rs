@@ -1,12 +1,16 @@
-//! GQMV micro-benchmarks: every backend at every Algorithm-2 shape, plus
-//! the GOPS figures for Table VI's first column.
+//! GQMV micro-benchmarks: every backend at every Algorithm-2 shape, the
+//! GOPS figures for Table VI's first column, and the dispatch-efficiency
+//! A/Bs of the pipelined execution engine — fused vs unfused same-input
+//! dispatch (7 vs 4 launches per layer) and blocked vs strided row
+//! kernels.
 
 use std::sync::Arc;
 
+use anyhow::Result;
 use llamaf::bench::{section, Bench};
 use llamaf::fpga::{DataflowSim, PlConfig};
-use llamaf::model::{MatKind, NANO, TINYLLAMA_1_1B};
-use llamaf::ps::gqmv::GqmvExec;
+use llamaf::model::{LlamaConfig, MatKind, NANO, TINYLLAMA_1_1B};
+use llamaf::ps::gqmv::{gqmv_row, gqmv_rows, GqmvExec};
 use llamaf::ps::{ScalarGqmv, ThreadedGqmv};
 use llamaf::quant::{quantize_activation, QuantizedTensor};
 use llamaf::util::{Rng, ThreadPool};
@@ -28,6 +32,129 @@ fn bench_backend(exec: &mut dyn GqmvExec, m: usize, n: usize, gs: usize, b: &Ben
     let gops = 2.0 * (m * n) as f64 / r.mean_s / 1e9;
     println!("{}  -> {gops:.3} GOPS", r.row());
     gops
+}
+
+/// Counts backend dispatches (pool wakeup opportunities) while delegating
+/// to an inner exec — the measurement behind the 7 → 4 launch claim.
+struct CountingExec<E: GqmvExec> {
+    inner: E,
+    dispatches: usize,
+}
+
+impl<E: GqmvExec> GqmvExec for CountingExec<E> {
+    fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
+        self.dispatches += 1;
+        self.inner.gqmv(xq, xs, w, out)
+    }
+
+    fn gqmv_fused(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        ws: &[&QuantizedTensor],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        self.dispatches += 1;
+        self.inner.gqmv_fused(xq, xs, ws, outs)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+/// One transformer layer's seven matrices (split, the unfused baseline)
+/// plus the activations feeding each of the four same-input groups.
+struct LayerCase {
+    wq: QuantizedTensor,
+    wk: QuantizedTensor,
+    wv: QuantizedTensor,
+    wo: QuantizedTensor,
+    w1: QuantizedTensor,
+    w3: QuantizedTensor,
+    w2: QuantizedTensor,
+    x_att: Vec<f32>,
+    x_o: Vec<f32>,
+    x_ffn: Vec<f32>,
+    x_h: Vec<f32>,
+}
+
+fn layer_case(cfg: &LlamaConfig, seed: u64) -> LayerCase {
+    let (d, kv, h, gs) = (cfg.dim, cfg.kv_dim(), cfg.hidden_dim, cfg.gs);
+    let mut rng = Rng::new(seed);
+    let mut mk = |rows: usize, cols: usize| {
+        QuantizedTensor::from_f32(&rng.normal_vec(rows * cols, 0.5), rows, cols, gs)
+    };
+    let (wq, wk, wv) = (mk(d, d), mk(kv, d), mk(kv, d));
+    let (wo, w1, w3, w2) = (mk(d, d), mk(h, d), mk(h, d), mk(d, h));
+    let mut rng2 = Rng::new(seed + 1);
+    LayerCase {
+        wq,
+        wk,
+        wv,
+        wo,
+        w1,
+        w3,
+        w2,
+        x_att: rng2.normal_vec(d, 1.0),
+        x_o: rng2.normal_vec(d, 1.0),
+        x_ffn: rng2.normal_vec(d, 1.0),
+        x_h: rng2.normal_vec(h, 1.0),
+    }
+}
+
+/// The unfused baseline: seven isolated gqmv calls, each paying its own
+/// activation quantization (the launch pattern the fused engine removes).
+fn layer_unfused(exec: &mut dyn GqmvExec, c: &LayerCase, gs: usize) -> usize {
+    let mut quants = 0usize;
+    let mut run = |x: &[f32], w: &QuantizedTensor, out: &mut [f32]| {
+        let (xq, xs) = quantize_activation(x, gs);
+        quants += 1;
+        exec.gqmv(&xq, &xs, w, out).unwrap();
+    };
+    let mut q = vec![0.0f32; c.wq.rows];
+    let mut k = vec![0.0f32; c.wk.rows];
+    let mut v = vec![0.0f32; c.wv.rows];
+    run(&c.x_att, &c.wq, &mut q);
+    run(&c.x_att, &c.wk, &mut k);
+    run(&c.x_att, &c.wv, &mut v);
+    let mut o = vec![0.0f32; c.wo.rows];
+    run(&c.x_o, &c.wo, &mut o);
+    let mut h1 = vec![0.0f32; c.w1.rows];
+    let mut h3 = vec![0.0f32; c.w3.rows];
+    run(&c.x_ffn, &c.w1, &mut h1);
+    run(&c.x_ffn, &c.w3, &mut h3);
+    let mut out2 = vec![0.0f32; c.w2.rows];
+    run(&c.x_h, &c.w2, &mut out2);
+    quants
+}
+
+/// The fused engine: Q/K/V share one quantization + one dispatch, W1/W3
+/// likewise — four launches per layer.
+fn layer_fused(exec: &mut dyn GqmvExec, c: &LayerCase, gs: usize) -> usize {
+    let mut quants = 0usize;
+    let (xq, xs) = quantize_activation(&c.x_att, gs);
+    quants += 1;
+    let mut q = vec![0.0f32; c.wq.rows];
+    let mut k = vec![0.0f32; c.wk.rows];
+    let mut v = vec![0.0f32; c.wv.rows];
+    let qkv = [&c.wq, &c.wk, &c.wv];
+    let mut qkv_outs = [&mut q[..], &mut k[..], &mut v[..]];
+    exec.gqmv_fused(&xq, &xs, &qkv, &mut qkv_outs).unwrap();
+    let (xq, xs) = quantize_activation(&c.x_o, gs);
+    quants += 1;
+    let mut o = vec![0.0f32; c.wo.rows];
+    exec.gqmv(&xq, &xs, &c.wo, &mut o).unwrap();
+    let (xq, xs) = quantize_activation(&c.x_ffn, gs);
+    quants += 1;
+    let mut h1 = vec![0.0f32; c.w1.rows];
+    let mut h3 = vec![0.0f32; c.w3.rows];
+    exec.gqmv_fused(&xq, &xs, &[&c.w1, &c.w3], &mut [&mut h1[..], &mut h3[..]]).unwrap();
+    let (xq, xs) = quantize_activation(&c.x_h, gs);
+    quants += 1;
+    let mut out2 = vec![0.0f32; c.w2.rows];
+    exec.gqmv(&xq, &xs, &c.w2, &mut out2).unwrap();
+    quants
 }
 
 fn main() {
@@ -68,6 +195,73 @@ fn main() {
     report.case("cls_scalar", scalar_gops, "GOPS");
     report.case("cls_threaded_x4", th4, "GOPS");
     report.case("cls_threaded_all", th_all_gops, "GOPS");
+
+    section("fused vs unfused same-input dispatch (7 vs 4 launches per layer, NANO)");
+    {
+        let case = layer_case(&NANO, 33);
+        let gs = NANO.gs;
+        let mut counter = CountingExec { inner: ThreadedGqmv::new(pool.clone()), dispatches: 0 };
+        counter.inner.min_parallel_macs = 0; // count real pool dispatches
+        let unfused_quants = layer_unfused(&mut counter, &case, gs);
+        let unfused_dispatches = counter.dispatches;
+        counter.dispatches = 0;
+        let fused_quants = layer_fused(&mut counter, &case, gs);
+        let fused_dispatches = counter.dispatches;
+        println!(
+            "per layer: {unfused_dispatches} dispatches / {unfused_quants} quantizations \
+             unfused  ->  {fused_dispatches} dispatches / {fused_quants} quantizations fused"
+        );
+        let mut th = ThreadedGqmv::new(pool.clone());
+        th.min_parallel_macs = 0;
+        let ru = b.run("layer unfused (7 launches)", || {
+            layer_unfused(&mut th, &case, gs);
+        });
+        println!("{}", ru.row());
+        let mut th = ThreadedGqmv::new(pool.clone());
+        th.min_parallel_macs = 0;
+        let rf = b.run("layer fused (4 launches)", || {
+            layer_fused(&mut th, &case, gs);
+        });
+        println!("{}", rf.row());
+        let speedup = ru.mean_s / rf.mean_s.max(1e-12);
+        println!("fused layer speedup: {speedup:.3}x");
+        report.case("layer_dispatches_unfused", unfused_dispatches as f64, "calls");
+        report.case("layer_dispatches_fused", fused_dispatches as f64, "calls");
+        report.case("layer_quants_unfused", unfused_quants as f64, "calls");
+        report.case("layer_quants_fused", fused_quants as f64, "calls");
+        report.case("fused_layer_speedup", speedup, "x");
+    }
+
+    section("blocked vs strided row kernel (single-thread, 512x256 g256)");
+    {
+        let (m, n, gs) = (512usize, 256usize, 256usize);
+        let mut rng = Rng::new(5);
+        let w = QuantizedTensor::from_f32(&rng.normal_vec(m * n, 0.5), m, n, gs);
+        let (xq, xs) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
+        let gpr = w.groups_per_row();
+        let mut strided = vec![0.0f32; m];
+        let rs = b.run("strided per-row loop", || {
+            for i in 0..m {
+                strided[i] = gqmv_row(
+                    &xq,
+                    &xs,
+                    &w.q[i * n..(i + 1) * n],
+                    &w.s[i * gpr..(i + 1) * gpr],
+                    gs,
+                );
+            }
+        });
+        println!("{}", rs.row());
+        let mut blocked = vec![0.0f32; m];
+        let rb = b.run("blocked row kernel", || {
+            gqmv_rows(&xq, &xs, &w.q, &w.s, gs, &mut blocked);
+        });
+        println!("{}", rb.row());
+        assert_eq!(blocked, strided, "blocked kernel must stay bit-identical");
+        let speedup = rs.mean_s / rb.mean_s.max(1e-12);
+        println!("blocked speedup: {speedup:.3}x (bit-identical outputs verified)");
+        report.case("blocked_row_speedup", speedup, "x");
+    }
 
     section("PJRT kernel path (requires artifacts): upload vs execute split");
     if let Ok(rt) = llamaf::runtime::Runtime::load(std::path::Path::new("artifacts")) {

@@ -12,6 +12,11 @@
 //! * [`Report`] — each bench target records its headline numbers and
 //!   writes one JSON file (`BENCH_JSON_DIR`, default `bench-json/`); CI
 //!   uploads the directory as a workflow artifact.
+//! * [`parse_report`] / [`diff_cases`] — read a previously written
+//!   report back and compare runs case by case, classifying changes as
+//!   regressions by unit direction (`tok/s` up is good, `s` up is bad).
+//!   The CI bench-smoke job downloads the previous run's artifact and
+//!   fails (advisorily) on >20% regressions via `llamaf bench-diff`.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -201,6 +206,178 @@ fn json_num(v: f64) -> String {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Run-to-run regression diffing
+// ---------------------------------------------------------------------------
+
+/// One case parsed back out of a written report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReportCase {
+    /// Case name as recorded by [`Report::case`].
+    pub name: String,
+    /// Recorded headline value (cases whose value was `null` are dropped
+    /// at parse time).
+    pub value: f64,
+    /// Unit string; drives the regression direction heuristic.
+    pub unit: String,
+}
+
+/// Whether a larger value of `unit` is an improvement.  Time-, volume-
+/// and count-like families regress upward (`s`, `ms`, `B/tok`, `MB`,
+/// `calls` — more seconds/bytes/dispatches is worse); everything else
+/// (`GOPS`, `tok/s`, speedup factors) regresses downward.  Matched by
+/// family, not exact string, so unit variants a future bench invents
+/// (`us/tok`, `KiB`, `iters`) inherit the right direction instead of
+/// silently inverting the advisory regression gate.
+pub fn higher_is_better(unit: &str) -> bool {
+    let time = matches!(unit, "s" | "ms" | "us" | "ns") || unit.starts_with("s/");
+    let volume = matches!(unit, "B" | "bytes" | "KB" | "KiB" | "MB" | "MiB" | "GB" | "GiB");
+    let count = matches!(unit, "calls" | "iters" | "spawns" | "transfers");
+    let per_unit_cost =
+        unit.ends_with("/tok") || unit.ends_with("/iter") || unit.ends_with("/step");
+    !(time || volume || count || per_unit_cost)
+}
+
+/// One compared case of a run-to-run diff.
+#[derive(Clone, Debug)]
+pub struct DiffEntry {
+    /// Case name shared by both runs.
+    pub name: String,
+    /// Unit string of the current run's case.
+    pub unit: String,
+    /// Previous run's value.
+    pub prev: f64,
+    /// Current run's value.
+    pub cur: f64,
+    /// Fractional change in the *worse* direction for this unit: +0.25
+    /// means 25% worse (slower / more bytes), negative means improved.
+    pub regression: f64,
+}
+
+impl DiffEntry {
+    /// Human-readable one-liner for logs.
+    pub fn row(&self) -> String {
+        // print the raw signed change; `regression` already folds in the
+        // unit direction, so undo it for display
+        let change = if higher_is_better(&self.unit) { -self.regression } else { self.regression };
+        format!(
+            "{:<40} {:>14.4} -> {:>14.4} {:<6} {:+.1}%{}",
+            self.name,
+            self.prev,
+            self.cur,
+            self.unit,
+            100.0 * change,
+            if self.regression > 0.0 { "  (worse)" } else { "" },
+        )
+    }
+}
+
+/// Extract a JSON string field (`"key": "..."`) from one case object
+/// written by [`Report::write_to`], undoing its escaping.
+fn field_str(obj: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\": \"");
+    let start = obj.find(&pat)? + pat.len();
+    let mut out = String::new();
+    let mut chars = obj[start..].chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                'n' => out.push('\n'),
+                'r' => out.push('\r'),
+                't' => out.push('\t'),
+                'u' => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    out.push(char::from_u32(u32::from_str_radix(&hex, 16).ok()?)?);
+                }
+                other => out.push(other), // covers \" and \\
+            },
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+/// Extract a JSON number field (`"key": 1.5`); `null` parses as `None`.
+fn field_num(obj: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\": ");
+    let start = obj.find(&pat)? + pat.len();
+    let rest = &obj[start..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    let tok = rest[..end].trim();
+    if tok == "null" {
+        return None;
+    }
+    tok.parse().ok()
+}
+
+/// Parse the cases out of a report body written by [`Report::write_to`].
+/// Only this crate's own format is supported (one case object per line);
+/// anything unrecognized is skipped rather than an error, so a corrupt
+/// or foreign artifact degrades to "nothing to compare".
+pub fn parse_report(body: &str) -> Vec<ReportCase> {
+    let Some(pos) = body.find("\"cases\":") else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for line in body[pos..].lines() {
+        let t = line.trim().trim_end_matches(',');
+        if !t.starts_with('{') {
+            continue;
+        }
+        let (Some(name), Some(unit)) = (field_str(t, "name"), field_str(t, "unit")) else {
+            continue;
+        };
+        if let Some(value) = field_num(t, "value") {
+            out.push(ReportCase { name, value, unit });
+        }
+    }
+    out
+}
+
+/// Compare two case lists name by name.  Cases present in only one run,
+/// non-finite values, and zero baselines are skipped (nothing meaningful
+/// to report).
+pub fn diff_cases(prev: &[ReportCase], cur: &[ReportCase]) -> Vec<DiffEntry> {
+    let mut out = Vec::new();
+    for c in cur {
+        let Some(p) = prev.iter().find(|p| p.name == c.name) else {
+            continue;
+        };
+        if !p.value.is_finite() || !c.value.is_finite() || p.value == 0.0 {
+            continue;
+        }
+        let change = (c.value - p.value) / p.value.abs();
+        let regression = if higher_is_better(&c.unit) { -change } else { change };
+        out.push(DiffEntry {
+            name: c.name.clone(),
+            unit: c.unit.clone(),
+            prev: p.value,
+            cur: c.value,
+            regression,
+        });
+    }
+    out
+}
+
+impl Report {
+    /// Diff this report's recorded cases against a previously written
+    /// JSON body (e.g. the same bench's file from the last CI run).
+    pub fn diff(&self, prev_json: &str) -> Vec<DiffEntry> {
+        let prev = parse_report(prev_json);
+        let cur: Vec<ReportCase> = self
+            .cases
+            .iter()
+            .map(|(name, value, unit)| ReportCase {
+                name: name.clone(),
+                value: *value,
+                unit: unit.clone(),
+            })
+            .collect();
+        diff_cases(&prev, &cur)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +410,85 @@ mod tests {
     fn throughput_inverse_of_mean() {
         let r = samples_to_result("x", vec![0.5, 0.5]);
         assert!((r.throughput(1.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_report_roundtrips_written_cases() {
+        let mut rep = Report::new("roundtrip");
+        rep.case("throughput", 123.5, "tok/s");
+        rep.case("staging", 2.5e6, "B/tok");
+        rep.case("weird \"name\"\t", 0.25, "x");
+        rep.case("broken", f64::NAN, "GOPS"); // null -> dropped at parse
+        let dir = std::env::temp_dir().join(format!("llamaf-bench-rt-{}", std::process::id()));
+        let path = rep.write_to(&dir).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+        let cases = parse_report(&body);
+        assert_eq!(
+            cases,
+            vec![
+                ReportCase { name: "throughput".into(), value: 123.5, unit: "tok/s".into() },
+                ReportCase { name: "staging".into(), value: 2.5e6, unit: "B/tok".into() },
+                ReportCase { name: "weird \"name\"\t".into(), value: 0.25, unit: "x".into() },
+            ]
+        );
+        assert!(parse_report("not json at all").is_empty());
+    }
+
+    #[test]
+    fn diff_classifies_regressions_by_unit_direction() {
+        let prev = vec![
+            ReportCase { name: "rate".into(), value: 100.0, unit: "tok/s".into() },
+            ReportCase { name: "lat".into(), value: 0.010, unit: "s".into() },
+            ReportCase { name: "gone".into(), value: 1.0, unit: "x".into() },
+            ReportCase { name: "zero".into(), value: 0.0, unit: "x".into() },
+        ];
+        let cur = vec![
+            // tok/s fell 30%: a regression of +0.30
+            ReportCase { name: "rate".into(), value: 70.0, unit: "tok/s".into() },
+            // latency fell 50%: an improvement (negative regression)
+            ReportCase { name: "lat".into(), value: 0.005, unit: "s".into() },
+            ReportCase { name: "new".into(), value: 5.0, unit: "x".into() },
+            ReportCase { name: "zero".into(), value: 3.0, unit: "x".into() },
+        ];
+        let diffs = diff_cases(&prev, &cur);
+        assert_eq!(diffs.len(), 2, "unpaired and zero-baseline cases skipped: {diffs:?}");
+        let rate = diffs.iter().find(|d| d.name == "rate").unwrap();
+        assert!((rate.regression - 0.30).abs() < 1e-9, "{rate:?}");
+        assert!(rate.row().contains("worse"), "{}", rate.row());
+        let lat = diffs.iter().find(|d| d.name == "lat").unwrap();
+        assert!((lat.regression + 0.50).abs() < 1e-9, "{lat:?}");
+        assert!(!lat.row().contains("worse"));
+    }
+
+    #[test]
+    fn report_diff_against_previous_json() {
+        let mut prev = Report::new("same");
+        prev.case("gops", 4.0, "GOPS");
+        let dir = std::env::temp_dir().join(format!("llamaf-bench-diff-{}", std::process::id()));
+        let path = prev.write_to(&dir).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+        let mut cur = Report::new("same");
+        cur.case("gops", 3.0, "GOPS");
+        let diffs = cur.diff(&body);
+        assert_eq!(diffs.len(), 1);
+        assert!((diffs[0].regression - 0.25).abs() < 1e-9, "{:?}", diffs[0]);
+    }
+
+    #[test]
+    fn unit_direction_heuristic() {
+        for unit in ["GOPS", "tok/s", "x", "layers"] {
+            assert!(higher_is_better(unit), "{unit}");
+        }
+        // dispatch/quantization counts regress UP: the 7 -> 4 fused-layer
+        // reduction must be guarded, not celebrated, by the differ —
+        // and family matching covers variants no bench emits yet
+        for unit in ["s", "ms", "B/tok", "bytes", "calls", "us/tok", "MiB", "iters", "ms/step"] {
+            assert!(!higher_is_better(unit), "{unit}");
+        }
     }
 
     #[test]

@@ -69,9 +69,15 @@ pub struct BatchOpts {
     /// lane holds a full KV cache).
     pub max_pending: usize,
     /// Weight-staging schedule of the shared streamer.  [`SchedMode::Async`]
-    /// prefetches layer *l+1* while the batched kernels of layer *l* run.
-    /// Ignored under [`WeightMode::Resident`].
+    /// prefetches upcoming layers while the batched kernels of layer *l*
+    /// run.  Ignored under [`WeightMode::Resident`].
     pub sched: SchedMode,
+    /// Staging-ring depth of the shared streamer (CLI `--prefetch-depth`):
+    /// 1 resident layer + `prefetch_depth - 1` transfers in flight.  2 is
+    /// the classic double buffer; deeper rings absorb transfer jitter at
+    /// the cost of extra staged-layer memory.  Ignored under
+    /// [`WeightMode::Resident`] and (effectively) under [`SchedMode::Sync`].
+    pub prefetch_depth: usize,
     /// Streamed (staged-per-step) vs resident (zero-copy) weights.
     pub weights: WeightMode,
 }
@@ -82,6 +88,7 @@ impl Default for BatchOpts {
             max_batch: 8,
             max_pending: 64,
             sched: SchedMode::Async,
+            prefetch_depth: crate::sched::DEFAULT_PREFETCH_DEPTH,
             weights: WeightMode::Streamed,
         }
     }
@@ -115,6 +122,13 @@ impl StepLayers {
         match self {
             StepLayers::Resident(_) => 0.0,
             StepLayers::Streamed(s) => s.stats.prefetch_wait_s,
+        }
+    }
+
+    fn ring_occupancy_mean(&self) -> f64 {
+        match self {
+            StepLayers::Resident(_) => 0.0,
+            StepLayers::Streamed(s) => s.stats.ring_occupancy_mean(),
         }
     }
 }
@@ -184,6 +198,7 @@ impl BatchScheduler {
     ) -> Arc<Self> {
         assert!(opts.max_batch >= 1);
         assert!(opts.max_pending >= 1);
+        assert!(opts.prefetch_depth >= 1, "prefetch depth must be >= 1");
         let sched = Arc::new(BatchScheduler {
             cfg: model.cfg,
             max_pending: opts.max_pending,
@@ -392,8 +407,11 @@ fn decode_loop(
             }
         };
         let fetcher = ModelFetcher { model: Arc::clone(&model) };
-        match Streamer::new(rt, fetcher, opts.sched) {
-            Ok(s) => StepLayers::Streamed(s),
+        match Streamer::with_depth(rt, fetcher, opts.sched, opts.prefetch_depth) {
+            Ok(s) => {
+                sched.metrics.set_ring_depth(opts.prefetch_depth);
+                StepLayers::Streamed(s)
+            }
             Err(e) => {
                 fail_pending_forever(&sched, format!("batch streamer init failed: {e:#}"));
                 return;
@@ -487,6 +505,7 @@ fn decode_loop(
             waited - wait_attributed,
             &prof,
         );
+        sched.metrics.set_ring_occupancy(layers.ring_occupancy_mean());
         bytes_attributed = staged;
         wait_attributed = waited;
 
@@ -656,6 +675,57 @@ mod tests {
         let (_sess, out) = sched.generate(Session::new(&qm.cfg), &[1, 2, 3], 4, |_, _| Ok(()));
         out.unwrap();
         assert!(sched.metrics().bytes_staged() > 0, "streamed mode stages per step");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn prefetch_depth_is_a_latency_knob_not_a_data_path() {
+        // depths 1, 2 and 4 must generate identical token streams; at
+        // depth >= 2 the ring must be observed running ahead (occupancy
+        // gauge > 0) and STATS must carry the configured depth
+        let qm = tiny_model(7);
+        let prompt = [1u32, 10, 11];
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let want = generate(&mut ref_engine, &prompt, 8, Sampler::Greedy, false).unwrap();
+        for depth in [1usize, 2, 4] {
+            let sched = BatchScheduler::new(
+                Arc::clone(&qm),
+                Box::new(ScalarGqmv),
+                BatchOpts { prefetch_depth: depth, ..Default::default() },
+            );
+            let (sess, out) = sched.generate(Session::new(&qm.cfg), &prompt, 8, |_, _| Ok(()));
+            assert!(sess.is_some());
+            assert_eq!(out.unwrap().generated, want.generated, "depth {depth} diverged");
+            let summary = sched.metrics().summary();
+            assert!(
+                summary.contains(&format!("prefetch_depth={depth}")),
+                "summary missing depth: {summary}"
+            );
+            assert_eq!(sched.metrics().ring_depth(), depth as u64);
+            if depth >= 2 {
+                assert!(
+                    sched.metrics().ring_occupancy() > 0.0,
+                    "depth {depth}: ring never ran ahead: {summary}"
+                );
+            } else {
+                assert_eq!(sched.metrics().ring_occupancy(), 0.0);
+            }
+            sched.shutdown();
+        }
+    }
+
+    #[test]
+    fn resident_mode_reports_no_ring() {
+        let qm = tiny_model(8);
+        let sched = BatchScheduler::new(
+            Arc::clone(&qm),
+            Box::new(ScalarGqmv),
+            BatchOpts { weights: WeightMode::Resident, ..Default::default() },
+        );
+        let (_s, out) = sched.generate(Session::new(&qm.cfg), &[1, 2], 4, |_, _| Ok(()));
+        out.unwrap();
+        assert_eq!(sched.metrics().ring_depth(), 0, "resident serving has no staging ring");
+        assert_eq!(sched.metrics().ring_occupancy(), 0.0);
         sched.shutdown();
     }
 

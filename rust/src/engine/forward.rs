@@ -211,15 +211,24 @@ impl BatchScratch {
     }
 }
 
-/// Quantize `nb` lane vectors (lane `b` at `x[b*x_stride .. +w.cols]`)
-/// and run one batched GQMV, billing quantize + matmul to `matrix_s`.
+/// Quantize `nb` lane vectors (lane `b` at `x[b*x_stride .. +cols]`) ONCE
+/// and run one fused-group GQMV dispatch: every matrix in `ws` consumes
+/// the same quantized activation.  Quantize + matmul are billed to
+/// `matrix_s`.
+///
+/// This is the dispatch-level half of the paper's §III-B fusion: the
+/// QKV and W1|W3 groups of Algorithm 2 cost one activation quantization
+/// and one backend dispatch each, whether the group arrives as one
+/// row-concatenated tensor (how [`crate::model::QuantLayer`] stores it —
+/// the singleton fast path below) or as separate per-matrix tensors
+/// (the [`GqmvExec::gqmv_fused`] path, bit-identical by construction).
 #[allow(clippy::too_many_arguments)]
-fn quant_gqmv_batch(
+fn quant_gqmv_fused_batch(
     exec: &mut dyn GqmvExec,
     x: &[f32],
     x_stride: usize,
-    w: &crate::quant::QuantizedTensor,
-    out: &mut [f32],
+    ws: &[&crate::quant::QuantizedTensor],
+    outs: &mut [&mut [f32]],
     qbuf: &mut [i8],
     sbuf: &mut [f32],
     gs: usize,
@@ -227,7 +236,8 @@ fn quant_gqmv_batch(
     prof: &mut ForwardProfile,
 ) -> Result<()> {
     let t = Instant::now();
-    let n = w.cols;
+    anyhow::ensure!(!ws.is_empty() && ws.len() == outs.len(), "malformed fused group");
+    let n = ws[0].cols;
     let gpr = n / gs;
     for b in 0..nb {
         quantize_activation_into(
@@ -237,7 +247,23 @@ fn quant_gqmv_batch(
             &mut sbuf[b * gpr..(b + 1) * gpr],
         );
     }
-    exec.gqmv_batch(&qbuf[..nb * n], &sbuf[..nb * gpr], w, &mut out[..nb * w.rows], nb)?;
+    let (xq, xs) = (&qbuf[..nb * n], &sbuf[..nb * gpr]);
+    if ws.len() == 1 {
+        // singleton group: the storage-fused tensor already makes the
+        // batched kernel a single dispatch
+        exec.gqmv_batch(xq, xs, ws[0], &mut outs[0][..nb * ws[0].rows], nb)?;
+    } else {
+        let mut trimmed: Vec<&mut [f32]> = ws
+            .iter()
+            .zip(outs.iter_mut())
+            .map(|(w, out)| &mut out[..nb * w.rows])
+            .collect();
+        if nb == 1 {
+            exec.gqmv_fused(xq, xs, ws, &mut trimmed)?;
+        } else {
+            exec.gqmv_fused_batch(xq, xs, ws, &mut trimmed, nb)?;
+        }
+    }
     prof.matrix_s += t.elapsed().as_secs_f64();
     Ok(())
 }
@@ -303,8 +329,19 @@ pub fn forward_batch(
             );
         }
         prof.rmsnorm_s += t.elapsed().as_secs_f64();
-        quant_gqmv_batch(
-            exec, &s.xb, d, &layer.wqkv, &mut s.qkv, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+        // fused QKV group: Wq|Wk|Wv is one storage-fused tensor, so the
+        // whole group is one quantization + one dispatch
+        quant_gqmv_fused_batch(
+            exec,
+            &s.xb,
+            d,
+            &[&layer.wqkv],
+            &mut [&mut s.qkv[..]],
+            &mut s.qbuf,
+            &mut s.sbuf,
+            gs,
+            nb,
+            prof,
         )?;
 
         // RoPE + KV store (l.5), per lane at its own position
@@ -328,8 +365,17 @@ pub fn forward_batch(
         prof.attention_s += t.elapsed().as_secs_f64();
 
         // quantize + Wo GQMV + residual (l.8-10)
-        quant_gqmv_batch(
-            exec, &s.att_out, d, &layer.wo, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+        quant_gqmv_fused_batch(
+            exec,
+            &s.att_out,
+            d,
+            &[&layer.wo],
+            &mut [&mut s.xb[..]],
+            &mut s.qbuf,
+            &mut s.sbuf,
+            gs,
+            nb,
+            prof,
         )?;
         let t = Instant::now();
         for b in 0..nb {
@@ -347,8 +393,19 @@ pub fn forward_batch(
             );
         }
         prof.rmsnorm_s += t.elapsed().as_secs_f64();
-        quant_gqmv_batch(
-            exec, &s.xb, d, &layer.w13, &mut s.h13, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+        // fused FFN-in group: W1|W3 is one storage-fused tensor (one
+        // quantization + one dispatch for both projections)
+        quant_gqmv_fused_batch(
+            exec,
+            &s.xb,
+            d,
+            &[&layer.w13],
+            &mut [&mut s.h13[..]],
+            &mut s.qbuf,
+            &mut s.sbuf,
+            gs,
+            nb,
+            prof,
         )?;
         let t = Instant::now();
         for b in 0..nb {
@@ -357,8 +414,17 @@ pub fn forward_batch(
             tensor::swiglu(h1, h3);
         }
         prof.swiglu_s += t.elapsed().as_secs_f64();
-        quant_gqmv_batch(
-            exec, &s.h13, h2, &layer.w2, &mut s.xb, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+        quant_gqmv_fused_batch(
+            exec,
+            &s.h13,
+            h2,
+            &[&layer.w2],
+            &mut [&mut s.xb[..]],
+            &mut s.qbuf,
+            &mut s.sbuf,
+            gs,
+            nb,
+            prof,
         )?;
         let t = Instant::now();
         for b in 0..nb {
@@ -373,8 +439,17 @@ pub fn forward_batch(
         tensor::rmsnorm(&mut s.xb[b * d..(b + 1) * d], &s.x[b * d..(b + 1) * d], &model.final_norm);
     }
     prof.rmsnorm_s += t.elapsed().as_secs_f64();
-    quant_gqmv_batch(
-        exec, &s.xb, d, &model.cls, &mut s.logits, &mut s.qbuf, &mut s.sbuf, gs, nb, prof,
+    quant_gqmv_fused_batch(
+        exec,
+        &s.xb,
+        d,
+        &[&model.cls],
+        &mut [&mut s.logits[..]],
+        &mut s.qbuf,
+        &mut s.sbuf,
+        gs,
+        nb,
+        prof,
     )?;
     Ok(())
 }
@@ -667,6 +742,73 @@ mod tests {
                 );
                 sessions[lane_idx].pos += 1;
             }
+        }
+    }
+
+    #[test]
+    fn fused_group_helper_bit_identical_to_singleton_groups() {
+        // a split Wq/Wk/Wv-style group through quant_gqmv_fused_batch must
+        // equal per-matrix singleton groups bit for bit, at 1 lane and at
+        // several lanes — the dispatch-count reduction is free of drift
+        use crate::quant::QuantizedTensor;
+        use crate::util::Rng;
+        let (n, gs) = (64usize, 32usize);
+        let mut rng = Rng::new(77);
+        let wa = QuantizedTensor::from_f32(&rng.normal_vec(16 * n, 0.5), 16, n, gs);
+        let wb = QuantizedTensor::from_f32(&rng.normal_vec(8 * n, 0.5), 8, n, gs);
+        for nb in [1usize, 3] {
+            let x: Vec<f32> = rng.normal_vec(nb * n, 1.0);
+            let mut qbuf = vec![0i8; nb * n];
+            let mut sbuf = vec![0.0f32; nb * (n / gs)];
+            let mut prof = ForwardProfile::default();
+            let mut exec = crate::ps::ScalarGqmv;
+
+            let mut want_a = vec![0.0f32; nb * 16];
+            let mut want_b = vec![0.0f32; nb * 8];
+            quant_gqmv_fused_batch(
+                &mut exec,
+                &x,
+                n,
+                &[&wa],
+                &mut [&mut want_a[..]],
+                &mut qbuf,
+                &mut sbuf,
+                gs,
+                nb,
+                &mut prof,
+            )
+            .unwrap();
+            quant_gqmv_fused_batch(
+                &mut exec,
+                &x,
+                n,
+                &[&wb],
+                &mut [&mut want_b[..]],
+                &mut qbuf,
+                &mut sbuf,
+                gs,
+                nb,
+                &mut prof,
+            )
+            .unwrap();
+
+            let mut got_a = vec![0.0f32; nb * 16];
+            let mut got_b = vec![0.0f32; nb * 8];
+            quant_gqmv_fused_batch(
+                &mut exec,
+                &x,
+                n,
+                &[&wa, &wb],
+                &mut [&mut got_a[..], &mut got_b[..]],
+                &mut qbuf,
+                &mut sbuf,
+                gs,
+                nb,
+                &mut prof,
+            )
+            .unwrap();
+            assert_eq!(got_a, want_a, "nb={nb}");
+            assert_eq!(got_b, want_b, "nb={nb}");
         }
     }
 

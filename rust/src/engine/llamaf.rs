@@ -3,7 +3,14 @@
 //!
 //! Control flow (RMSNorm, RoPE, attention, SwiGLU, sampling) stays on the
 //! "PS" (this thread); weight staging follows the configured
-//! [`SchedMode`]; kernels consume device-resident weight buffers.
+//! [`SchedMode`] and ring depth ([`Streamer::with_depth`], CLI
+//! `--prefetch-depth`); kernels consume device-resident weight buffers.
+//!
+//! The device path is already dispatch-minimal — four kernel launches per
+//! layer, because Wq‖Wk‖Wv and W1‖W3 ship as storage-fused buffers.  That
+//! is the device twin of the CPU backends' dispatch-time fusion
+//! ([`crate::ps::gqmv::GqmvExec::gqmv_fused`]); both are bit-identical to
+//! seven per-matrix launches by row independence.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -43,8 +50,21 @@ pub struct LlamafEngine {
 }
 
 impl LlamafEngine {
-    /// Open an LFQ8 checkpoint, compile/validate kernels, stage layer 0.
+    /// Open an LFQ8 checkpoint, compile/validate kernels, stage layer 0,
+    /// with the default double-buffer staging depth.
     pub fn open(ckpt_path: &Path, rt: Arc<Runtime>, mode: SchedMode) -> Result<Self> {
+        Self::open_with_depth(ckpt_path, rt, mode, crate::sched::DEFAULT_PREFETCH_DEPTH)
+    }
+
+    /// [`LlamafEngine::open`] with an explicit staging-pipeline depth
+    /// (CLI `--prefetch-depth`): the async schedule keeps up to
+    /// `depth - 1` layer transfers in flight ahead of compute.
+    pub fn open_with_depth(
+        ckpt_path: &Path,
+        rt: Arc<Runtime>,
+        mode: SchedMode,
+        depth: usize,
+    ) -> Result<Self> {
         let mut probe = DiskFetcher::open(ckpt_path)?;
         let cfg = probe.cfg();
         // validate all kernel shapes up front (fail fast before serving)
@@ -58,7 +78,7 @@ impl LlamafEngine {
         let resident = Resident { tok_emb, final_norm, cls_dev, cls_rows: cls.rows };
         // probe re-used as the streaming fetcher
         let _ = &mut probe;
-        let streamer = Streamer::new(Arc::clone(&rt), probe, mode)?;
+        let streamer = Streamer::with_depth(Arc::clone(&rt), probe, mode, depth)?;
         Ok(LlamafEngine {
             cfg,
             rt,
@@ -78,6 +98,16 @@ impl LlamafEngine {
         rt: Arc<Runtime>,
         mode: SchedMode,
     ) -> Result<Self> {
+        Self::from_model_with_depth(model, rt, mode, crate::sched::DEFAULT_PREFETCH_DEPTH)
+    }
+
+    /// [`LlamafEngine::from_model`] with an explicit staging depth.
+    pub fn from_model_with_depth(
+        model: crate::model::QuantModel,
+        rt: Arc<Runtime>,
+        mode: SchedMode,
+        depth: usize,
+    ) -> Result<Self> {
         let cfg = model.cfg;
         for (m, n) in cfg.all_mat_shapes() {
             rt.ensure_shape(m, n)?;
@@ -90,7 +120,7 @@ impl LlamafEngine {
             cls_rows: model.cls.rows,
         };
         let fetcher = MemFetcher { layers: Arc::new(model.layers) };
-        let streamer = Streamer::new(Arc::clone(&rt), fetcher, mode)?;
+        let streamer = Streamer::with_depth(Arc::clone(&rt), fetcher, mode, depth)?;
         Ok(LlamafEngine {
             cfg,
             rt,
@@ -114,6 +144,12 @@ impl LlamafEngine {
             self.streamer.stats.blocked_transfer_s,
             self.streamer.stats.transfers,
         )
+    }
+
+    /// Full staging counters, including ring occupancy and the per-depth
+    /// prefetch-wait buckets of the staging ring.
+    pub fn streamer_stats(&self) -> crate::sched::StreamerStats {
+        self.streamer.stats
     }
 
     fn quant_gqmv_dev(

@@ -31,22 +31,29 @@ USAGE: llamaf <command> [options]
 
 COMMANDS
   generate  --ckpt <lfq8> --prompt <text> [--steps N] [--engine ps|llamaf]
-            [--sync|--async] [--top-p P --temperature T --seed S]
+            [--sync|--async] [--prefetch-depth N]
+            [--top-p P --temperature T --seed S]
   serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
             [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
-            [--max-batch B] [--sync | --resident]
+            [--max-batch B] [--prefetch-depth N] [--sync | --resident]
             ps/ps-scalar/sim: concurrent requests are folded into
             step-synchronous batched decoding over one shared weight
             copy (up to B lanes/step, weights staged once per step by
-            a persistent prefetch worker; --sync disables the async
-            layer prefetch, --resident skips staging entirely and
-            serves zero-copy resident weights); llamaf: sequential
+            a persistent prefetch worker running a depth-N staging
+            ring: --prefetch-depth N keeps N-1 layer transfers in
+            flight, default 2 = double buffering; --sync disables the
+            async layer prefetch, --resident skips staging entirely
+            and serves zero-copy resident weights); llamaf: sequential
             batch-1 streaming
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
   synth     --out <path.lfq8> [--geometry nano|tinyllama] [--seed S]
   info      [--artifacts <dir>]
+  bench-diff --prev <dir> --cur <dir> [--threshold 0.20]
+            compare two bench-json/ directories case by case and fail
+            on regressions beyond the threshold (CI runs this
+            advisorily against the previous run's artifact)
 ";
 
 fn main() {
@@ -85,7 +92,8 @@ fn build_engine(args: &Args) -> Result<Box<dyn Engine>> {
             let art = args.get_or("artifacts", "artifacts");
             let rt = Arc::new(Runtime::load(Path::new(art))?);
             let mode = if args.flag("sync") { SchedMode::Sync } else { SchedMode::Async };
-            Ok(Box::new(LlamafEngine::open(path, rt, mode)?))
+            let depth = prefetch_depth(args)?;
+            Ok(Box::new(LlamafEngine::open_with_depth(path, rt, mode, depth)?))
         }
         other => bail!("unknown engine '{other}' (ps | ps-scalar | sim | llamaf)"),
     }
@@ -105,8 +113,16 @@ fn run() -> Result<()> {
         "profile" => llamaf::exp::table2::run(&args),
         "synth" => cmd_synth(&args),
         "info" => cmd_info(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
+}
+
+/// Parse and validate `--prefetch-depth` (staging-ring depth, default 2).
+fn prefetch_depth(args: &Args) -> Result<usize> {
+    let depth = args.get_usize("prefetch-depth", llamaf::sched::DEFAULT_PREFETCH_DEPTH)?;
+    anyhow::ensure!(depth >= 1, "--prefetch-depth must be >= 1");
+    Ok(depth)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -154,6 +170,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_sessions: args.get_usize("max-sessions", 16)?,
                 max_batch: args.get_usize("max-batch", 8)?,
                 sync_staging: args.flag("sync"),
+                prefetch_depth: prefetch_depth(args)?,
                 resident: args.flag("resident"),
             };
             let threads = args.get_usize("threads", 4)?;
@@ -169,14 +186,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             };
             let server = llamaf::server::Server::bind(addr, qm.cfg.vocab_size)?;
             eprintln!(
-                "llamaf serving on {} ({} x{} workers, batch<= {}, {} weights, {} pooled \
-                 sessions, queue {}) — \
+                "llamaf serving on {} ({} x{} workers, batch<= {}, {} weights, prefetch \
+                 depth {}, {} pooled sessions, queue {}) — \
                  protocol: GEN/SGEN <steps> <prompt> | STATS | PING | SHUTDOWN | QUIT",
                 server.local_addr()?,
                 engine_kind,
                 opts.workers,
                 opts.max_batch,
                 if opts.resident { "resident" } else { "streamed" },
+                opts.prefetch_depth,
                 opts.max_sessions,
                 opts.queue_depth,
             );
@@ -215,6 +233,54 @@ fn cmd_synth(args: &Args) -> Result<()> {
     let fm = llamaf::model::FloatModel::random(cfg, seed);
     llamaf::ckpt::write_q8_from_float(Path::new(out), &fm)?;
     eprintln!("wrote {out}");
+    Ok(())
+}
+
+/// Compare two `bench-json/` directories (previous vs current run) case
+/// by case; exit nonzero when any case regressed beyond `--threshold`
+/// (fractional, default 0.20).  CI runs this with `continue-on-error` so
+/// the signal is advisory — smoke-mode numbers are noisy by design.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let prev_dir = Path::new(args.get("prev").context("--prev <dir> required")?);
+    let cur_dir = Path::new(args.get("cur").context("--cur <dir> required")?);
+    let threshold = args.get_f64("threshold", 0.20)?;
+    anyhow::ensure!(threshold > 0.0, "--threshold must be positive");
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(cur_dir)
+        .with_context(|| format!("read {}", cur_dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    let mut compared = 0usize;
+    let mut regressed = 0usize;
+    for cur_path in &files {
+        let stem = cur_path.file_name().unwrap_or_default();
+        let prev_path = prev_dir.join(stem);
+        if !prev_path.exists() {
+            println!("{}: no previous report, skipping", stem.to_string_lossy());
+            continue;
+        }
+        let prev = llamaf::bench::parse_report(&std::fs::read_to_string(&prev_path)?);
+        let cur = llamaf::bench::parse_report(&std::fs::read_to_string(cur_path)?);
+        for d in llamaf::bench::diff_cases(&prev, &cur) {
+            compared += 1;
+            let flagged = d.regression > threshold;
+            if flagged {
+                regressed += 1;
+            }
+            println!(
+                "{}:{}{}",
+                stem.to_string_lossy(),
+                d.row(),
+                if flagged { "  << REGRESSION" } else { "" }
+            );
+        }
+    }
+    println!(
+        "bench-diff: {compared} cases compared, {regressed} regressed beyond {:.0}%",
+        100.0 * threshold
+    );
+    anyhow::ensure!(regressed == 0, "{regressed} bench regression(s) beyond the threshold");
     Ok(())
 }
 

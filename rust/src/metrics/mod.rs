@@ -297,6 +297,12 @@ pub struct BatchMetrics {
     /// staging (nothing is ever armed; inline staging waits show up in
     /// the step profile's `transfer_s` instead).
     prefetch_wait_ns: AtomicU64,
+    /// Configured staging-ring depth (0 = resident serving: no staging
+    /// pipeline exists).
+    ring_depth: AtomicU64,
+    /// Latest lifetime-mean armed-ring occupancy of the streamer,
+    /// milli-units (gauge; 0 for sync staging and resident serving).
+    ring_occ_milli: AtomicU64,
     occupancy: Mutex<Histogram>,
     profile: Mutex<ForwardProfile>,
 }
@@ -352,6 +358,30 @@ impl BatchMetrics {
         self.prefetch_wait_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Record the staging-ring configuration (once, at decode-thread
+    /// start).  Left at 0 for resident serving.
+    pub fn set_ring_depth(&self, depth: usize) {
+        self.ring_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Update the armed-ring occupancy gauge (the streamer's lifetime
+    /// mean, sampled once per step).
+    pub fn set_ring_occupancy(&self, occ: f64) {
+        let milli = if occ.is_finite() && occ > 0.0 { (occ * 1e3) as u64 } else { 0 };
+        self.ring_occ_milli.store(milli, Ordering::Relaxed);
+    }
+
+    /// Configured staging-ring depth (0 = resident serving).
+    pub fn ring_depth(&self) -> u64 {
+        self.ring_depth.load(Ordering::Relaxed)
+    }
+
+    /// Mean armed-ring occupancy observed by the streamer — > 0 means the
+    /// prefetch pipeline genuinely ran ahead of compute.
+    pub fn ring_occupancy(&self) -> f64 {
+        self.ring_occ_milli.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
     /// Mean lanes per step.
     pub fn occupancy_mean(&self) -> f64 {
         self.occupancy.lock().unwrap().mean()
@@ -380,7 +410,8 @@ impl BatchMetrics {
         let matrix_pct = if total > 0.0 { 100.0 * prof.matrix_s / total } else { 0.0 };
         format!(
             "batch_steps={} batch_tokens={} batch_mean={:.2} batch_max={:.0} \
-             bytes_staged={} bytes_per_tok={:.0} prefetch_wait_ms={:.3} matrix_pct={:.0}",
+             bytes_staged={} bytes_per_tok={:.0} prefetch_wait_ms={:.3} \
+             prefetch_depth={} ring_occ={:.2} matrix_pct={:.0}",
             self.steps(),
             self.lane_tokens(),
             self.occupancy_mean(),
@@ -388,6 +419,8 @@ impl BatchMetrics {
             self.bytes_staged(),
             self.bytes_per_token(),
             1e3 * self.prefetch_wait_s(),
+            self.ring_depth(),
+            self.ring_occupancy(),
             matrix_pct,
         )
     }
@@ -493,6 +526,10 @@ mod tests {
         assert!((m.occupancy_mean() - 4.0).abs() < 1e-9);
         assert_eq!(m.occupancy_max(), 4.0);
         assert!((m.prefetch_wait_s() - 0.02).abs() < 1e-6, "{}", m.prefetch_wait_s());
+        m.set_ring_depth(4);
+        m.set_ring_occupancy(2.25);
+        assert_eq!(m.ring_depth(), 4);
+        assert!((m.ring_occupancy() - 2.25).abs() < 1e-9);
         let s = m.summary();
         for field in [
             "batch_steps=10",
@@ -500,6 +537,8 @@ mod tests {
             "bytes_staged=10000",
             "bytes_per_tok=250",
             "prefetch_wait_ms=20.000",
+            "prefetch_depth=4",
+            "ring_occ=2.25",
         ] {
             assert!(s.contains(field), "summary missing {field}: {s}");
         }

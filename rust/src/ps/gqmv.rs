@@ -4,6 +4,26 @@
 //! (INT8→INT16 products, INT32 group sums, FP32 scaled accumulation in
 //! ascending group order), so they are bit-exact with the Pallas kernel,
 //! the numpy oracle and the dataflow simulator.
+//!
+//! Two dispatch-efficiency layers sit on top of the per-row math:
+//!
+//! * **Row blocking** ([`gqmv_rows`]) — workers process contiguous
+//!   [`ROW_BLOCK`]-row cache blocks (group-outer / row-inner) instead of
+//!   striding rows, reusing each activation group from L1 across the
+//!   block.
+//! * **Fused dispatch** ([`GqmvExec::gqmv_fused`]) — matrices that share
+//!   one input (Wq/Wk/Wv, W1/W3) run as a single quantization + a single
+//!   backend dispatch over their stacked row space, the dispatch-time
+//!   twin of the storage-time `QuantizedTensor::concat_rows` fusion.
+//!
+//! Both are bit-identical to the strided per-matrix path by construction
+//! (every output row goes through [`gqmv_row`]'s cast chain), pinned by
+//! unit tests.
+//!
+//! Threading note: the threaded backend pre-splits its outputs into
+//! disjoint per-worker slices (`split_at_mut`) and hands them to
+//! [`crate::util::ThreadPool::run_parts`] — there is no shared-pointer
+//! `unsafe` in this module.
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -50,6 +70,59 @@ pub trait GqmvExec {
         Ok(())
     }
 
+    /// Multiply several weight matrices by **one** quantized activation
+    /// vector in a single fused dispatch (the Wq/Wk/Wv and W1/W3 pattern
+    /// of Algorithm 2: matrices that consume the same input share one
+    /// activation quantization and one backend dispatch, cutting the
+    /// per-layer launch count from 7 to 4).
+    ///
+    /// `ws[i]` must all have the same `cols`/`gs` (they read the same
+    /// `xq`/`xs`); `outs[i]` receives `ws[i].rows` f32 results.  Every
+    /// output row must come from the exact [`gqmv_row`] cast chain, so
+    /// results are **bit-identical** to `ws.len()` separate
+    /// [`GqmvExec::gqmv`] calls — and, because group-quantized rows are
+    /// independent, also to one `gqmv` over the row-wise concatenation of
+    /// `ws` (see `QuantizedTensor::concat_rows`).  The default is the
+    /// per-matrix loop; backends override it to issue one combined
+    /// dispatch over the stacked row space.
+    ///
+    /// Backends may leave the `outs` *slice handles* empty after the call
+    /// (disjoint-split dispatch consumes them); the underlying buffers
+    /// are always fully written.  Build the slice list per call.
+    fn gqmv_fused(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        ws: &[&QuantizedTensor],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        check_shapes_fused(xq, xs, ws, outs)?;
+        for (w, out) in ws.iter().zip(outs.iter_mut()) {
+            self.gqmv(xq, xs, w, out)?;
+        }
+        Ok(())
+    }
+
+    /// Batched analogue of [`GqmvExec::gqmv_fused`]: `batch` activation
+    /// vectors against every matrix of the fused group.  Layouts follow
+    /// [`GqmvExec::gqmv_batch`] per matrix (`outs[i]` is
+    /// `batch × ws[i].rows`, packed).  Bit-identical to per-matrix
+    /// `gqmv_batch` calls by the same row-independence argument.
+    fn gqmv_fused_batch(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        ws: &[&QuantizedTensor],
+        outs: &mut [&mut [f32]],
+        batch: usize,
+    ) -> Result<()> {
+        check_shapes_fused_batch(xq, xs, ws, outs, batch)?;
+        for (w, out) in ws.iter().zip(outs.iter_mut()) {
+            self.gqmv_batch(xq, xs, w, out, batch)?;
+        }
+        Ok(())
+    }
+
     /// Stable backend identifier (Table VI rows, serving banner).
     fn name(&self) -> &'static str;
 }
@@ -81,6 +154,59 @@ pub fn gqmv_row(xq: &[i8], xs: &[f32], wq_row: &[i8], ws_row: &[f32], gs: usize)
     sum
 }
 
+/// Rows per cache block of [`gqmv_rows`].  Eight rows keep the block's
+/// accumulators in registers while one `gs`-sized activation group (256 B
+/// at the paper's g=256) is reused from L1 across all of them.
+pub const ROW_BLOCK: usize = 8;
+
+/// A contiguous block of output rows of Algorithm 1, cache-blocked.
+///
+/// Computes `out.len()` consecutive rows whose weights start at
+/// `wq_rows`/`ws_rows` (row-major, `xq.len()` columns).  The loop nest is
+/// group-outer / row-inner in blocks of [`ROW_BLOCK`]: each activation
+/// group is loaded once and multiplied against up to eight weight rows
+/// while hot, instead of being re-fetched per row as the strided per-row
+/// loop does.  Per row, partial sums still accumulate in ascending group
+/// order through the identical cast chain, so every output is
+/// **bit-identical** to [`gqmv_row`] on that row (pinned by
+/// `blocked_rows_bit_identical_to_per_row`).
+pub fn gqmv_rows(
+    xq: &[i8],
+    xs: &[f32],
+    wq_rows: &[i8],
+    ws_rows: &[f32],
+    gs: usize,
+    out: &mut [f32],
+) {
+    let cols = xq.len();
+    let groups = cols / gs;
+    let rows = out.len();
+    debug_assert_eq!(wq_rows.len(), rows * cols);
+    debug_assert_eq!(ws_rows.len(), rows * groups);
+    let mut r0 = 0;
+    while r0 < rows {
+        let rb = ROW_BLOCK.min(rows - r0);
+        let mut acc = [0.0f32; ROW_BLOCK];
+        for g in 0..groups {
+            let base = g * gs;
+            let xg = &xq[base..base + gs];
+            let xscale = xs[g];
+            for (r, a) in acc.iter_mut().enumerate().take(rb) {
+                let row = r0 + r;
+                let wbase = row * cols + base;
+                let group_sum: i32 = wq_rows[wbase..wbase + gs]
+                    .iter()
+                    .zip(xg)
+                    .map(|(&w, &x)| ((w as i16) * (x as i16)) as i32)
+                    .sum();
+                *a += group_sum as f32 * (ws_rows[row * groups + g] * xscale);
+            }
+        }
+        out[r0..r0 + rb].copy_from_slice(&acc[..rb]);
+        r0 += rb;
+    }
+}
+
 /// Single-threaded reference implementation.
 #[derive(Default)]
 pub struct ScalarGqmv;
@@ -88,16 +214,7 @@ pub struct ScalarGqmv;
 impl GqmvExec for ScalarGqmv {
     fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
         check_shapes(xq, xs, w, out)?;
-        let gpr = w.groups_per_row();
-        for i in 0..w.rows {
-            out[i] = gqmv_row(
-                xq,
-                xs,
-                &w.q[i * w.cols..(i + 1) * w.cols],
-                &w.s[i * gpr..(i + 1) * gpr],
-                w.gs,
-            );
-        }
+        gqmv_rows(xq, xs, &w.q, &w.s, w.gs, out);
         Ok(())
     }
 
@@ -151,25 +268,46 @@ impl ThreadedGqmv {
     }
 }
 
+/// Split `out` into contiguous `(start_row, chunk)` pieces of at most
+/// `chunk` rows — the safe disjoint-slice partition handed to
+/// [`crate::util::ThreadPool::run_parts`] (no two workers can alias).
+fn split_rows(out: &mut [f32], chunk: usize) -> Vec<(usize, &mut [f32])> {
+    let mut parts = Vec::with_capacity(out.len().div_ceil(chunk.max(1)));
+    let mut rest = out;
+    let mut row0 = 0;
+    while !rest.is_empty() {
+        let take = chunk.min(rest.len());
+        let (head, tail) = rest.split_at_mut(take);
+        parts.push((row0, head));
+        row0 += take;
+        rest = tail;
+    }
+    parts
+}
+
 impl GqmvExec for ThreadedGqmv {
     fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
         check_shapes(xq, xs, w, out)?;
         let gpr = w.groups_per_row();
-        let serial_below = if w.rows * w.cols < self.min_parallel_macs { w.rows + 1 } else { 0 };
-        let out_ptr = SendMutPtr(out.as_mut_ptr());
-        self.pool.parallel_for(w.rows, serial_below, |range| {
-            let p = &out_ptr;
-            for i in range {
-                let v = gqmv_row(
-                    xq,
-                    xs,
-                    &w.q[i * w.cols..(i + 1) * w.cols],
-                    &w.s[i * gpr..(i + 1) * gpr],
-                    w.gs,
-                );
-                // SAFETY: each row index i is visited by exactly one chunk.
-                unsafe { *p.0.add(i) = v };
-            }
+        if w.rows * w.cols < self.min_parallel_macs {
+            gqmv_rows(xq, xs, &w.q, &w.s, w.gs, out);
+            return Ok(());
+        }
+        // One contiguous row block per worker wakeup: each part owns its
+        // disjoint output slice (safe split, no shared mutable state) and
+        // runs the cache-blocked kernel over its rows.
+        let k = self.pool.workers().min(w.rows).max(1);
+        let parts = split_rows(out, w.rows.div_ceil(k));
+        self.pool.run_parts(parts, |(row0, chunk)| {
+            let rows = chunk.len();
+            gqmv_rows(
+                xq,
+                xs,
+                &w.q[row0 * w.cols..(row0 + rows) * w.cols],
+                &w.s[row0 * gpr..(row0 + rows) * gpr],
+                w.gs,
+                chunk,
+            );
         });
         Ok(())
     }
@@ -184,26 +322,97 @@ impl GqmvExec for ThreadedGqmv {
     ) -> Result<()> {
         check_shapes_batch(xq, xs, w, out, batch)?;
         let gpr = w.groups_per_row();
-        let macs = batch * w.rows * w.cols;
-        let serial_below = if macs < self.min_parallel_macs { w.rows + 1 } else { 0 };
-        let out_ptr = SendMutPtr(out.as_mut_ptr());
-        self.pool.parallel_for(w.rows, serial_below, |range| {
-            let p = &out_ptr;
-            for i in range {
-                let wq_row = &w.q[i * w.cols..(i + 1) * w.cols];
-                let ws_row = &w.s[i * gpr..(i + 1) * gpr];
-                for b in 0..batch {
-                    let v = gqmv_row(
-                        &xq[b * w.cols..(b + 1) * w.cols],
-                        &xs[b * gpr..(b + 1) * gpr],
-                        wq_row,
-                        ws_row,
-                        w.gs,
-                    );
-                    // SAFETY: row ranges are disjoint per chunk, so every
-                    // (b, i) output index is written by exactly one worker.
-                    unsafe { *p.0.add(b * w.rows + i) = v };
+        if batch * w.rows * w.cols < self.min_parallel_macs {
+            batch_rows(xq, xs, w, 0, &mut split_lanes_full(out, w.rows), batch);
+            return Ok(());
+        }
+        // Row-parallel with the row-outer/batch-inner reuse of the scalar
+        // backend: split EVERY lane's output at the same row boundaries so
+        // each worker owns one disjoint sub-slice per lane.
+        let k = self.pool.workers().min(w.rows).max(1);
+        let chunk = w.rows.div_ceil(k);
+        let mut lane_rests: Vec<&mut [f32]> = out.chunks_mut(w.rows).collect();
+        let mut parts: Vec<(usize, Vec<&mut [f32]>)> = Vec::with_capacity(k);
+        let mut row0 = 0;
+        while row0 < w.rows {
+            let take = chunk.min(w.rows - row0);
+            let mut lanes = Vec::with_capacity(batch);
+            for rest in lane_rests.iter_mut() {
+                let slice = std::mem::take(rest);
+                let (head, tail) = slice.split_at_mut(take);
+                lanes.push(head);
+                *rest = tail;
+            }
+            parts.push((row0, lanes));
+            row0 += take;
+        }
+        self.pool.run_parts(parts, |(row0, mut lanes)| {
+            batch_rows(xq, xs, w, row0, &mut lanes, batch);
+        });
+        Ok(())
+    }
+
+    fn gqmv_fused(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        ws: &[&QuantizedTensor],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        check_shapes_fused(xq, xs, ws, outs)?;
+        let cols = xq.len();
+        let total_rows: usize = ws.iter().map(|w| w.rows).sum();
+        if total_rows * cols < self.min_parallel_macs {
+            for (w, out) in ws.iter().zip(outs.iter_mut()) {
+                gqmv_rows(xq, xs, &w.q, &w.s, w.gs, out);
+            }
+            return Ok(());
+        }
+        // ONE pooled dispatch over the virtual concatenation of every
+        // matrix's rows: chunk the stacked row space, splitting each
+        // output at the chunk boundaries, so a group of same-input
+        // matrices costs a single wakeup instead of one per matrix.
+        struct Seg<'a> {
+            w: &'a QuantizedTensor,
+            row0: usize,
+            out: &'a mut [f32],
+        }
+        let k = self.pool.workers().min(total_rows).max(1);
+        let chunk = total_rows.div_ceil(k).max(1);
+        let mut parts: Vec<Vec<Seg>> = Vec::with_capacity(k);
+        let mut cur: Vec<Seg> = Vec::new();
+        let mut room = chunk;
+        for (w, out) in ws.iter().copied().zip(outs.iter_mut()) {
+            let mut rest: &mut [f32] = std::mem::take(out);
+            let mut row0 = 0;
+            while !rest.is_empty() {
+                let take = room.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                cur.push(Seg { w, row0, out: head });
+                rest = tail;
+                row0 += take;
+                room -= take;
+                if room == 0 {
+                    parts.push(std::mem::take(&mut cur));
+                    room = chunk;
                 }
+            }
+        }
+        if !cur.is_empty() {
+            parts.push(cur);
+        }
+        self.pool.run_parts(parts, |segs| {
+            for Seg { w, row0, out } in segs {
+                let gpr = w.groups_per_row();
+                let rows = out.len();
+                gqmv_rows(
+                    xq,
+                    xs,
+                    &w.q[row0 * w.cols..(row0 + rows) * w.cols],
+                    &w.s[row0 * gpr..(row0 + rows) * gpr],
+                    w.gs,
+                    out,
+                );
             }
         });
         Ok(())
@@ -214,8 +423,38 @@ impl GqmvExec for ThreadedGqmv {
     }
 }
 
-struct SendMutPtr(*mut f32);
-unsafe impl Sync for SendMutPtr {}
+/// Row-outer / batch-inner kernel over one row block: `lanes[b]` receives
+/// rows `row0..row0 + lanes[b].len()` of lane `b`'s output.  Each weight
+/// row is read once and applied to every activation vector while hot.
+fn batch_rows(
+    xq: &[i8],
+    xs: &[f32],
+    w: &QuantizedTensor,
+    row0: usize,
+    lanes: &mut [&mut [f32]],
+    batch: usize,
+) {
+    let gpr = w.groups_per_row();
+    let rows = lanes.first().map_or(0, |l| l.len());
+    for i in 0..rows {
+        let wq_row = &w.q[(row0 + i) * w.cols..(row0 + i + 1) * w.cols];
+        let ws_row = &w.s[(row0 + i) * gpr..(row0 + i + 1) * gpr];
+        for (b, lane) in lanes.iter_mut().enumerate().take(batch) {
+            lane[i] = gqmv_row(
+                &xq[b * w.cols..(b + 1) * w.cols],
+                &xs[b * gpr..(b + 1) * gpr],
+                wq_row,
+                ws_row,
+                w.gs,
+            );
+        }
+    }
+}
+
+/// View a packed `batch × rows` output as one full-size slice per lane.
+fn split_lanes_full(out: &mut [f32], rows: usize) -> Vec<&mut [f32]> {
+    out.chunks_mut(rows).collect()
+}
 
 pub(crate) fn check_shapes(
     xq: &[i8],
@@ -253,6 +492,70 @@ pub(crate) fn check_shapes_batch(
     }
     if out.len() != batch * w.rows {
         anyhow::bail!("out len {} != batch {batch} x rows {}", out.len(), w.rows);
+    }
+    Ok(())
+}
+
+pub(crate) fn check_shapes_fused(
+    xq: &[i8],
+    xs: &[f32],
+    ws: &[&QuantizedTensor],
+    outs: &[&mut [f32]],
+) -> Result<()> {
+    if ws.is_empty() {
+        anyhow::bail!("fused group must contain at least one matrix");
+    }
+    if ws.len() != outs.len() {
+        anyhow::bail!("{} matrices but {} outputs", ws.len(), outs.len());
+    }
+    let (cols, gs) = (ws[0].cols, ws[0].gs);
+    if xq.len() != cols {
+        anyhow::bail!("xq len {} != cols {cols}", xq.len());
+    }
+    if xs.len() != cols / gs {
+        anyhow::bail!("xs len {} != groups {}", xs.len(), cols / gs);
+    }
+    for (i, w) in ws.iter().enumerate() {
+        if w.cols != cols || w.gs != gs {
+            anyhow::bail!("fused matrix {i} shape ({}, g{}) != ({cols}, g{gs})", w.cols, w.gs);
+        }
+        if outs[i].len() != w.rows {
+            anyhow::bail!("out {i} len {} != rows {}", outs[i].len(), w.rows);
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn check_shapes_fused_batch(
+    xq: &[i8],
+    xs: &[f32],
+    ws: &[&QuantizedTensor],
+    outs: &[&mut [f32]],
+    batch: usize,
+) -> Result<()> {
+    if batch == 0 {
+        anyhow::bail!("batch must be >= 1");
+    }
+    if ws.is_empty() {
+        anyhow::bail!("fused group must contain at least one matrix");
+    }
+    if ws.len() != outs.len() {
+        anyhow::bail!("{} matrices but {} outputs", ws.len(), outs.len());
+    }
+    let (cols, gs) = (ws[0].cols, ws[0].gs);
+    if xq.len() != batch * cols {
+        anyhow::bail!("xq len {} != batch {batch} x cols {cols}", xq.len());
+    }
+    if xs.len() != batch * (cols / gs) {
+        anyhow::bail!("xs len {} != batch {batch} x groups {}", xs.len(), cols / gs);
+    }
+    for (i, w) in ws.iter().enumerate() {
+        if w.cols != cols || w.gs != gs {
+            anyhow::bail!("fused matrix {i} shape ({}, g{}) != ({cols}, g{gs})", w.cols, w.gs);
+        }
+        if outs[i].len() != batch * w.rows {
+            anyhow::bail!("out {i} len {} != batch {batch} x rows {}", outs[i].len(), w.rows);
+        }
     }
     Ok(())
 }
@@ -422,6 +725,162 @@ mod tests {
         assert!(ScalarGqmv.gqmv(&xq, &xs[..0], &w, &mut out).is_err());
         let mut short = vec![0.0; 4];
         assert!(ScalarGqmv.gqmv(&xq, &xs, &w, &mut short).is_err());
+    }
+
+    #[test]
+    fn blocked_rows_bit_identical_to_per_row() {
+        // gqmv_rows (group-outer, ROW_BLOCK-row cache blocks) must equal
+        // the strided per-row loop bit for bit — including row counts that
+        // are not multiples of the block size
+        let cases = [(1usize, 256usize, 256usize), (7, 256, 128), (8, 512, 256), (21, 256, 64)];
+        for (m, n, gs) in cases {
+            let (xq, xs, w) = random_case(m, n, gs, (3 * m + n) as u64);
+            let mut strided = vec![0.0f32; m];
+            let gpr = w.groups_per_row();
+            for i in 0..m {
+                strided[i] = gqmv_row(
+                    &xq,
+                    &xs,
+                    &w.q[i * n..(i + 1) * n],
+                    &w.s[i * gpr..(i + 1) * gpr],
+                    gs,
+                );
+            }
+            let mut blocked = vec![0.0f32; m];
+            gqmv_rows(&xq, &xs, &w.q, &w.s, gs, &mut blocked);
+            assert_eq!(blocked, strided, "m={m} n={n} gs={gs}");
+        }
+    }
+
+    /// Build a same-input fused group (the Wq/Wk/Wv shape pattern) plus
+    /// one quantized activation.
+    fn fused_case(
+        row_counts: &[usize],
+        n: usize,
+        gs: usize,
+        seed: u64,
+    ) -> (Vec<i8>, Vec<f32>, Vec<QuantizedTensor>) {
+        let mut rng = Rng::new(seed);
+        let ws: Vec<QuantizedTensor> = row_counts
+            .iter()
+            .map(|&m| QuantizedTensor::from_f32(&rng.normal_vec(m * n, 0.5), m, n, gs))
+            .collect();
+        let (xq, xs) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
+        (xq, xs, ws)
+    }
+
+    fn fused_outputs(
+        exec: &mut dyn GqmvExec,
+        xq: &[i8],
+        xs: &[f32],
+        ws: &[QuantizedTensor],
+    ) -> Vec<Vec<f32>> {
+        let refs: Vec<&QuantizedTensor> = ws.iter().collect();
+        let mut bufs: Vec<Vec<f32>> = ws.iter().map(|w| vec![0.0; w.rows]).collect();
+        let mut outs: Vec<&mut [f32]> = bufs.iter_mut().map(|b| &mut b[..]).collect();
+        exec.gqmv_fused(xq, xs, &refs, &mut outs).unwrap();
+        bufs
+    }
+
+    #[test]
+    fn fused_bit_identical_to_separate_and_to_concat() {
+        // the three equivalent execution strategies of a same-input group:
+        // N separate dispatches, one fused dispatch, one dispatch over the
+        // row-concatenated tensor (how QuantLayer stores Wq|Wk|Wv) — all
+        // must agree bit for bit, on every backend
+        let (xq, xs, ws) = fused_case(&[40, 8, 8], 256, 64, 9);
+        let mut separate: Vec<Vec<f32>> = Vec::new();
+        for w in &ws {
+            let mut out = vec![0.0; w.rows];
+            ScalarGqmv.gqmv(&xq, &xs, w, &mut out).unwrap();
+            separate.push(out);
+        }
+        let concat = QuantizedTensor::concat_rows(&ws.iter().collect::<Vec<_>>());
+        let mut concat_out = vec![0.0; concat.rows];
+        ScalarGqmv.gqmv(&xq, &xs, &concat, &mut concat_out).unwrap();
+        let flat: Vec<f32> = separate.iter().flatten().copied().collect();
+        assert_eq!(concat_out, flat, "concat dispatch != separate dispatches");
+
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut th = ThreadedGqmv::new(pool);
+        th.min_parallel_macs = 0; // force the combined pooled dispatch
+        for exec in [&mut ScalarGqmv as &mut dyn GqmvExec, &mut th] {
+            let name = exec.name();
+            let got = fused_outputs(exec, &xq, &xs, &ws);
+            assert_eq!(got, separate, "{name} fused dispatch diverged");
+        }
+    }
+
+    #[test]
+    fn fused_default_impl_bit_identical() {
+        // a backend without an override (the dataflow sim) rides the
+        // trait's default per-matrix loop
+        let mut sim = crate::fpga::DataflowSim::new(crate::fpga::PlConfig::default());
+        let (xq, xs, ws) = fused_case(&[16, 4, 4], 256, 256, 11);
+        let want: Vec<Vec<f32>> = ws
+            .iter()
+            .map(|w| {
+                let mut out = vec![0.0; w.rows];
+                ScalarGqmv.gqmv(&xq, &xs, w, &mut out).unwrap();
+                out
+            })
+            .collect();
+        assert_eq!(fused_outputs(&mut sim, &xq, &xs, &ws), want);
+    }
+
+    #[test]
+    fn fused_batch_bit_identical_to_per_matrix_batch() {
+        let n = 256;
+        let gs = 64;
+        let batch = 3;
+        let mut rng = Rng::new(21);
+        let ws = [
+            QuantizedTensor::from_f32(&rng.normal_vec(24 * n, 0.5), 24, n, gs),
+            QuantizedTensor::from_f32(&rng.normal_vec(8 * n, 0.5), 8, n, gs),
+        ];
+        let mut xq = Vec::new();
+        let mut xs = Vec::new();
+        for _ in 0..batch {
+            let (q, s) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
+            xq.extend(q);
+            xs.extend(s);
+        }
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for w in &ws {
+            let mut out = vec![0.0; batch * w.rows];
+            ScalarGqmv.gqmv_batch(&xq, &xs, w, &mut out, batch).unwrap();
+            want.push(out);
+        }
+        let refs: Vec<&QuantizedTensor> = ws.iter().collect();
+        let mut bufs: Vec<Vec<f32>> = ws.iter().map(|w| vec![0.0; batch * w.rows]).collect();
+        let mut outs: Vec<&mut [f32]> = bufs.iter_mut().map(|b| &mut b[..]).collect();
+        ScalarGqmv.gqmv_fused_batch(&xq, &xs, &refs, &mut outs, batch).unwrap();
+        assert_eq!(bufs, want);
+    }
+
+    #[test]
+    fn fused_shape_mismatches_rejected() {
+        let (xq, xs, ws) = fused_case(&[8, 8], 256, 64, 13);
+        let refs: Vec<&QuantizedTensor> = ws.iter().collect();
+        // outs count mismatch
+        let mut one = vec![0.0; 8];
+        let mut outs: Vec<&mut [f32]> = vec![&mut one[..]];
+        assert!(ScalarGqmv.gqmv_fused(&xq, &xs, &refs, &mut outs).is_err());
+        // empty group
+        let mut none: Vec<&mut [f32]> = Vec::new();
+        assert!(ScalarGqmv.gqmv_fused(&xq, &xs, &[], &mut none).is_err());
+        // wrong out length
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 7];
+        let mut outs: Vec<&mut [f32]> = vec![&mut a[..], &mut b[..]];
+        assert!(ScalarGqmv.gqmv_fused(&xq, &xs, &refs, &mut outs).is_err());
+        // mixed column counts across the group
+        let flat = vec![0.1f32; 8 * 128];
+        let narrow = QuantizedTensor::from_f32(&flat, 8, 128, 64);
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        let mut outs: Vec<&mut [f32]> = vec![&mut a[..], &mut b[..]];
+        assert!(ScalarGqmv.gqmv_fused(&xq, &xs, &[&ws[0], &narrow], &mut outs).is_err());
     }
 
     #[test]

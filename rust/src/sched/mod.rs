@@ -17,11 +17,24 @@
 //! thread spawns (the old design spawned and joined one OS thread per
 //! staged layer).
 //!
+//! The async schedule runs the worker ahead through a **depth-N staging
+//! ring** ([`Streamer::with_depth`], CLI `--prefetch-depth N`): up to
+//! N−1 future layers are requested while the current one computes, so a
+//! single slow transfer (a DDR stall, a disk hiccup in `DiskFetcher`)
+//! drains the ring instead of stalling the compute thread.  Depth 2 is
+//! the classic double buffer (one resident layer + one in flight) and
+//! the default; depth 1 degenerates to inline staging.  `layer(li)` pops
+//! the ring in order, discarding it wholesale whenever the requested
+//! sequence breaks (out-of-order access, [`Streamer::reset`]);
+//! [`StreamerStats`] tracks ring occupancy and buckets every prefetch
+//! wait by the occupancy at the time of the wait.
+//!
 //! The same module also provides the *modeled* timeline
 //! ([`sim_token_time`]) used to regenerate Fig. 2 / Table VI at paper
 //! scale, where transfer and kernel times come from the AXI and dataflow
 //! models rather than wall-clock.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -147,6 +160,15 @@ fn stage(rt: &Runtime, host: QuantLayer) -> Result<PreparedLayer> {
     Ok(PreparedLayer { host, wqkv, wo, w13, w2 })
 }
 
+/// Default staging-pipeline depth: the classic double buffer (one layer
+/// resident, one prefetch in flight).
+pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
+
+/// Bucket count of [`StreamerStats::prefetch_wait_by_occ_s`]: waits are
+/// indexed by the ring occupancy observed when the wait began, clamped to
+/// the last bucket.
+pub const RING_WAIT_BUCKETS: usize = 9;
+
 /// Staging counters of a [`Streamer`] (Fig. 2 accounting plus the serving
 /// metrics exported through `STATS`).
 #[derive(Clone, Copy, Debug, Default)]
@@ -159,6 +181,14 @@ pub struct StreamerStats {
     /// transfers fully, rising toward the full staging time when the
     /// design is transfer-bound.
     pub prefetch_wait_s: f64,
+    /// [`StreamerStats::prefetch_wait_s`] broken down by the ring
+    /// occupancy (armed stagings in flight or ready) at the moment the
+    /// wait began — the per-depth accounting of the staging ring.  A
+    /// deeper ring should move waits into higher-occupancy buckets and
+    /// shrink them: a wait at occupancy N−1 means even a full ring could
+    /// not hide the transfer (truly bandwidth-bound), while waits piled
+    /// at occupancy 1 mean more depth would help.
+    pub prefetch_wait_by_occ_s: [f64; RING_WAIT_BUCKETS],
     /// Total staging work performed by the worker (foreground +
     /// background).
     pub total_transfer_s: f64,
@@ -172,6 +202,28 @@ pub struct StreamerStats {
     /// (the persistent prefetch worker, spawned at construction): the
     /// steady-state decode path performs **zero** thread spawns.
     pub spawns: u64,
+    /// Configured staging-pipeline depth (resident slot + ring capacity).
+    pub ring_depth: usize,
+    /// Sum over staged-layer consumes of the armed ring occupancy at
+    /// consume time (0 whenever the needed layer was not armed — inline
+    /// stagings and all of sync mode).
+    pub ring_occupancy_sum: u64,
+    /// Number of occupancy samples (one per staged-layer consume).
+    pub ring_samples: u64,
+}
+
+impl StreamerStats {
+    /// Mean armed-ring occupancy observed when layers were consumed:
+    /// > 0 means the prefetch pipeline was actually running ahead
+    /// (0 for sync staging and resident serving; approaches
+    /// `ring_depth - 1` when transfers outpace compute).
+    pub fn ring_occupancy_mean(&self) -> f64 {
+        if self.ring_samples == 0 {
+            0.0
+        } else {
+            self.ring_occupancy_sum as f64 / self.ring_samples as f64
+        }
+    }
 }
 
 /// Requests the compute side sends to the persistent prefetch worker.
@@ -192,9 +244,9 @@ struct StagedResp {
     staged_s: f64,
 }
 
-/// The long-lived staging thread plus its request/response channels.  At
-/// most one request is in flight at a time (double buffering: one layer
-/// resident in [`Streamer::current`], one being staged here).
+/// The long-lived staging thread plus its request/response channels.  Up
+/// to `depth - 1` requests may be queued at once (the staging ring); the
+/// worker serves them strictly in order, so responses arrive FIFO.
 struct PrefetchWorker {
     /// `None` after shutdown — dropping the sender also stops the worker.
     req_tx: Option<Sender<StageReq>>,
@@ -222,7 +274,7 @@ fn prefetch_worker_loop(
     }
 }
 
-/// Double-buffered layer streamer over a **persistent prefetch worker**.
+/// Ring-buffered layer streamer over a **persistent prefetch worker**.
 ///
 /// One long-lived thread (spawned at construction) owns the layer fetcher
 /// and performs every staging — synchronous stagings block on the worker's
@@ -231,26 +283,56 @@ fn prefetch_worker_loop(
 /// zero thread spawns: where the previous design spawned and joined one OS
 /// thread per staged layer (~`n_layers` spawns per batched step), requests
 /// now travel over a channel to the worker spawned once per engine.
+///
+/// Async mode keeps a **staging ring** of up to `depth - 1` in-flight or
+/// ready layers ahead of the resident one ([`Streamer::with_depth`]).
+/// The ring always holds a consecutive (wrapping) run of the layers the
+/// walk will need next — possibly spanning token boundaries, so layer 0
+/// of the *next* token is staged during the current token's tail layers.
+/// Any access that breaks the sequence discards the ring wholesale and
+/// restarts it.
 pub struct Streamer {
     /// Staging schedule ([`SchedMode::Sync`] or [`SchedMode::Async`]).
     pub mode: SchedMode,
     n_layers: usize,
+    /// Pipeline depth: 1 resident slot + `depth - 1` ring slots.
+    depth: usize,
     current: Option<(usize, PreparedLayer)>,
-    /// Layer index of the staging request in flight, if any.
-    pending: Option<usize>,
+    /// Layer indices requested from the worker, oldest first (in flight
+    /// or already completed and parked in the response channel).
+    pending: VecDeque<usize>,
     worker: PrefetchWorker,
-    /// Staging counters (time, transfers, bytes, spawns).
+    /// Staging counters (time, transfers, bytes, spawns, ring occupancy).
     pub stats: StreamerStats,
 }
 
 impl Streamer {
     /// Spawn the prefetch worker and stage layer 0 ("buffers initialized
-    /// and loaded at program start", paper §III-B).
+    /// and loaded at program start", paper §III-B), with the default
+    /// double-buffer depth ([`DEFAULT_PREFETCH_DEPTH`]).
     pub fn new(
         rt: Arc<Runtime>,
         fetcher: impl LayerFetcher + 'static,
         mode: SchedMode,
     ) -> Result<Self> {
+        Self::with_depth(rt, fetcher, mode, DEFAULT_PREFETCH_DEPTH)
+    }
+
+    /// [`Streamer::new`] with an explicit staging-pipeline depth.
+    ///
+    /// `depth` counts the resident layer plus the ring: depth 2 is the
+    /// classic double buffer (today's default), depth 1 disables
+    /// prefetching entirely (every staging is inline, even in async
+    /// mode), deeper rings absorb transfer-time jitter at the cost of
+    /// `depth - 1` staged layers of memory.  Depths beyond `n_layers`
+    /// are legal — the ring then spans token boundaries.
+    pub fn with_depth(
+        rt: Arc<Runtime>,
+        fetcher: impl LayerFetcher + 'static,
+        mode: SchedMode,
+        depth: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(depth >= 1, "prefetch depth must be >= 1 (got {depth})");
         let n_layers = fetcher.n_layers();
         anyhow::ensure!(n_layers >= 1, "cannot stream a zero-layer model");
         let (req_tx, req_rx) = channel();
@@ -263,13 +345,14 @@ impl Streamer {
         let mut s = Streamer {
             mode,
             n_layers,
+            depth,
             current: None,
-            pending: None,
+            pending: VecDeque::with_capacity(depth),
             worker: PrefetchWorker { req_tx: Some(req_tx), resp_rx, handle: Some(handle) },
-            stats: StreamerStats { spawns: 1, ..StreamerStats::default() },
+            stats: StreamerStats { spawns: 1, ring_depth: depth, ..StreamerStats::default() },
         };
         s.request(0)?;
-        let (l0, staged_s, _wait_s) = s.wait_pending()?;
+        let (l0, staged_s, _wait_s) = s.wait_front()?;
         s.stats.total_transfer_s += staged_s;
         s.stats.transfers += 1;
         s.stats.staged_bytes += l0.host.stream_bytes() as u64;
@@ -277,9 +360,9 @@ impl Streamer {
         Ok(s)
     }
 
-    /// Ask the worker to stage layer `li` (non-blocking).
+    /// Ask the worker to stage layer `li` (non-blocking; queued behind any
+    /// earlier ring requests).
     fn request(&mut self, li: usize) -> Result<()> {
-        debug_assert!(self.pending.is_none(), "one staging in flight at a time");
         let tx = self
             .worker
             .req_tx
@@ -287,16 +370,16 @@ impl Streamer {
             .ok_or_else(|| anyhow!("streamer is shut down"))?;
         tx.send(StageReq::Stage(li))
             .map_err(|_| anyhow!("prefetch worker is gone (staging thread exited)"))?;
-        self.pending = Some(li);
+        self.pending.push_back(li);
         Ok(())
     }
 
-    /// Block until the in-flight staging completes.  Returns the staged
-    /// layer, the worker-side staging seconds, and the seconds *this*
-    /// thread spent waiting.  A dead worker (panicked fetcher/runtime)
-    /// surfaces as an error here instead of a hang.
-    fn wait_pending(&mut self) -> Result<(PreparedLayer, f64, f64)> {
-        let li = self.pending.take().expect("no staging in flight");
+    /// Block until the *oldest* ring staging completes.  Returns the
+    /// staged layer, the worker-side staging seconds, and the seconds
+    /// *this* thread spent waiting.  A dead worker (panicked
+    /// fetcher/runtime) surfaces as an error here instead of a hang.
+    fn wait_front(&mut self) -> Result<(PreparedLayer, f64, f64)> {
+        let li = self.pending.pop_front().expect("no staging in flight");
         let t = Instant::now();
         let resp = self
             .worker
@@ -312,38 +395,46 @@ impl Streamer {
         Ok((resp.result?, resp.staged_s, wait_s))
     }
 
-    /// Drop an in-flight staging whose layer is no longer wanted (stale
-    /// after a reset or an out-of-order access).  Discards are not billed
-    /// to any counter; a dead worker is tolerated (the next `request`
-    /// reports it).
-    fn discard_pending(&mut self) {
-        if self.pending.take().is_some() {
+    /// Drain the whole ring: every queued staging is received and dropped
+    /// (stale after a reset or an out-of-order access).  Discards are not
+    /// billed to any counter; a dead worker is tolerated (the next
+    /// `request` reports it).
+    fn discard_all(&mut self) {
+        while self.pending.pop_front().is_some() {
             let _ = self.worker.resp_rx.recv();
         }
     }
 
-    /// Obtain layer `li` for compute.  In async mode this also re-arms
-    /// the prefetch of the *next* layer (wrapping, so layer 0 of the next
-    /// token is staged during the current token's last layer).
+    /// Obtain layer `li` for compute.  In async mode this also tops the
+    /// staging ring back up with the layers the walk needs next
+    /// (wrapping, so layer 0 of the next token is staged during the
+    /// current token's tail layers).
     pub fn layer(&mut self, li: usize) -> Result<&PreparedLayer> {
         if li >= self.n_layers {
             bail!("layer {li} out of range ({} layers)", self.n_layers);
         }
         let have = self.current.as_ref().map(|(i, _)| *i);
         if have != Some(li) {
-            let armed = self.pending == Some(li);
+            let armed = self.pending.front() == Some(&li);
+            let occ = if armed { self.pending.len() } else { 0 };
             if !armed {
-                // wrong staging in flight (e.g. after an out-of-order
-                // jump): discard it and stage `li` inline via the worker
-                self.discard_pending();
+                // the ring does not lead with `li` (out-of-order jump or
+                // broken sequence): discard it wholesale and stage `li`
+                // inline via the worker
+                self.discard_all();
                 self.request(li)?;
             }
-            let (lay, staged_s, wait_s) = self.wait_pending()?;
+            self.stats.ring_occupancy_sum += occ as u64;
+            self.stats.ring_samples += 1;
+            let (lay, staged_s, wait_s) = self.wait_front()?;
             self.stats.blocked_transfer_s += wait_s;
             if armed {
                 // the staging ran in the background; we only waited for
-                // the remainder (0 when the transfer was fully hidden)
+                // the remainder (0 when the transfer was fully hidden).
+                // Bucket the wait by how full the ring was: waits at high
+                // occupancy mean even a full ring cannot hide transfers.
                 self.stats.prefetch_wait_s += wait_s;
+                self.stats.prefetch_wait_by_occ_s[occ.min(RING_WAIT_BUCKETS - 1)] += wait_s;
             }
             self.stats.total_transfer_s += staged_s;
             self.stats.transfers += 1;
@@ -351,51 +442,81 @@ impl Streamer {
             self.current = Some((li, lay));
         }
         if self.mode == SchedMode::Async && self.worker.req_tx.is_some() {
-            let next = (li + 1) % self.n_layers;
-            // Re-arm the prefetch.  A pending staging for any layer other
-            // than `next` is stale (a reset or out-of-order access broke
-            // the sequence): discard it and request the right one,
-            // otherwise the streamer silently degrades to inline (sync)
-            // staging for the rest of the run.  (After shutdown the
-            // already-resident layer stays readable; only new stagings
-            // fail.)
-            if self.pending.is_some() && self.pending != Some(next) {
-                self.discard_pending();
-            }
-            if self.pending.is_none() {
-                self.request(next)?;
-            }
+            self.rearm(li);
         }
         Ok(&self.current.as_ref().expect("staged above").1)
     }
 
-    /// Rewind for a new generation (engine `reset`).  Discards a stale
-    /// in-flight staging and re-arms the layer the next token will need
-    /// first, so async scheduling keeps hiding transfers across
-    /// generations — including resets that land mid-token.
+    /// Bring the ring back to "the next `depth - 1` layers after `li`, in
+    /// order" (steady-state re-arm after serving layer `li`).
+    fn rearm(&mut self, li: usize) {
+        self.top_up((li + 1) % self.n_layers);
+    }
+
+    /// Make the ring hold the consecutive wrapping run starting at
+    /// `first_needed`, up to its `depth - 1` capacity.  A ring that no
+    /// longer matches that sequence (a reset or out-of-order access broke
+    /// it) is discarded wholesale — otherwise the streamer would silently
+    /// degrade to inline staging.  Send failures are deferred: the next
+    /// `layer()` that actually needs the worker reports them.  Shared by
+    /// [`Streamer::layer`]'s re-arm and [`Streamer::reset`] so the two
+    /// paths cannot drift apart.
+    fn top_up(&mut self, first_needed: usize) {
+        let cap = self.depth - 1;
+        if cap == 0 {
+            return; // depth 1: inline staging only, nothing to arm
+        }
+        let mut expect = first_needed;
+        let mut consecutive = true;
+        for &p in &self.pending {
+            if p != expect {
+                consecutive = false;
+                break;
+            }
+            expect = (expect + 1) % self.n_layers;
+        }
+        if !consecutive {
+            self.discard_all();
+        }
+        let mut next = match self.pending.back() {
+            Some(&p) => (p + 1) % self.n_layers,
+            None => first_needed,
+        };
+        while self.pending.len() < cap {
+            if self.request(next).is_err() {
+                break; // dead/shut-down worker: deferred to the next layer()
+            }
+            next = (next + 1) % self.n_layers;
+        }
+    }
+
+    /// Rewind for a new generation (engine `reset`).  Drains any ring
+    /// contents the post-reset walk cannot use and re-arms the ring from
+    /// the layer the next token will need first, so async scheduling
+    /// keeps hiding transfers across generations — including resets that
+    /// land mid-token.
     pub fn reset(&mut self) {
         if self.mode != SchedMode::Async {
             return; // sync mode stages inline; nothing is in flight
         }
         // If layer 0 is already resident, the next staging needed is layer
-        // 1 (layer(0) will not consume the pending slot); otherwise 0.
+        // 1 (layer(0) will not consume the ring); otherwise 0.
         let desired = match self.current {
             Some((0, _)) => 1 % self.n_layers,
             _ => 0,
         };
-        if self.pending != Some(desired) {
-            self.discard_pending();
-            // a dead/shut-down worker must not panic a reset; the next
-            // layer() call surfaces the error
-            let _ = self.request(desired);
-        }
+        // re-point the ring at the post-reset walk: a ring already armed
+        // for it (reset on a token boundary) is kept, anything else is
+        // drained and re-requested; a dead/shut-down worker never panics
+        // a reset (top_up defers send failures to the next layer() call)
+        self.top_up(desired);
     }
 
-    /// Shutdown handshake: discard any in-flight staging, tell the worker
-    /// to exit, and join it.  Idempotent; [`Drop`] runs it too.  After
+    /// Shutdown handshake: drain the staging ring, tell the worker to
+    /// exit, and join it.  Idempotent; [`Drop`] runs it too.  After
     /// shutdown every `layer()` call fails fast instead of hanging.
     pub fn shutdown(&mut self) {
-        self.discard_pending();
+        self.discard_all();
         if let Some(tx) = self.worker.req_tx.take() {
             let _ = tx.send(StageReq::Shutdown);
         }
@@ -404,10 +525,21 @@ impl Streamer {
         }
     }
 
-    /// Layer index of the in-flight staging request, if any (test
-    /// observability).
+    /// Layer index of the *oldest* ring staging, if any (the next one
+    /// `layer()` would consume; test observability).
     pub fn pending_layer(&self) -> Option<usize> {
-        self.pending
+        self.pending.front().copied()
+    }
+
+    /// Number of armed stagings currently in the ring (in flight or
+    /// completed and waiting to be consumed).
+    pub fn ring_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Configured staging-pipeline depth (resident slot + ring capacity).
+    pub fn depth(&self) -> usize {
+        self.depth
     }
 
     /// Number of transformer layers this streamer cycles through.
@@ -775,5 +907,152 @@ mod streamer_tests {
         let rt = Arc::new(Runtime::with_shapes(&[]));
         let fetcher = PanicFetcher { layers, panic_on: 0 };
         assert!(Streamer::new(rt, fetcher, SchedMode::Sync).is_err());
+    }
+
+    // ------------------------------------------------------------------
+    // Depth-N staging ring
+    // ------------------------------------------------------------------
+
+    fn setup_depth(mode: SchedMode, depth: usize) -> (Streamer, Arc<Vec<QuantLayer>>) {
+        let qm = QuantModel::from_float(&FloatModel::random(tiny_cfg(), 42));
+        let layers = Arc::new(qm.layers);
+        let rt = Arc::new(Runtime::with_shapes(&[]));
+        let fetcher = MemFetcher { layers: Arc::clone(&layers) };
+        let s = Streamer::with_depth(rt, fetcher, mode, depth).unwrap();
+        (s, layers)
+    }
+
+    #[test]
+    fn depth_walks_bit_identical() {
+        // depth 1 (inline), 2 (double buffer) and 4 (deep ring) must all
+        // hand out exactly the same layer bytes over a multi-generation
+        // walk — pipeline depth is a latency knob, never a data path
+        for depth in [1usize, 2, 4] {
+            let (mut s, layers) = setup_depth(SchedMode::Async, depth);
+            assert_eq!(s.depth(), depth);
+            for _gen in 0..3 {
+                for li in 0..4 {
+                    assert_layer_is(&mut s, li, &layers);
+                    assert!(s.ring_len() <= depth.saturating_sub(1), "ring over capacity");
+                }
+                s.reset();
+            }
+            if depth == 1 {
+                assert_eq!(s.pending_layer(), None, "depth 1 must never arm a prefetch");
+                assert_eq!(s.stats.ring_occupancy_mean(), 0.0);
+            } else {
+                assert!(
+                    s.stats.ring_occupancy_mean() > 0.0,
+                    "depth {depth}: armed consumes must be observed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deep_ring_runs_ahead_and_wraps_tokens() {
+        let (mut s, layers) = setup_depth(SchedMode::Async, 4);
+        // first access fills the ring with the NEXT THREE layers
+        assert_layer_is(&mut s, 0, &layers);
+        assert_eq!(s.ring_len(), 3);
+        assert_eq!(s.pending_layer(), Some(1));
+        // walking consumes from the front while the tail tops up — across
+        // the token boundary (4-layer model: ring after layer 2 holds
+        // [3, 0, 1], i.e. next token's head layers)
+        assert_layer_is(&mut s, 1, &layers);
+        assert_layer_is(&mut s, 2, &layers);
+        assert_eq!(s.pending_layer(), Some(3));
+        assert_eq!(s.ring_len(), 3);
+        assert_layer_is(&mut s, 3, &layers);
+        assert_eq!(s.pending_layer(), Some(0), "ring wraps into the next token");
+        // second token consumes the wrapped prefetches without re-staging
+        let transfers = s.stats.transfers;
+        assert_layer_is(&mut s, 0, &layers);
+        assert_eq!(s.stats.transfers, transfers + 1, "wrapped prefetch must be consumed");
+    }
+
+    #[test]
+    fn reset_mid_ring_rearms_cleanly() {
+        let (mut s, layers) = setup_depth(SchedMode::Async, 4);
+        assert_layer_is(&mut s, 0, &layers);
+        assert_layer_is(&mut s, 1, &layers);
+        assert_eq!(s.pending_layer(), Some(2), "ring leads with layer 2 mid-token");
+        s.reset();
+        // current is layer 1, so the post-reset walk needs 0 first; the
+        // stale [2, 3, 0] ring must be drained and re-armed as [0, 1, 2]
+        assert_eq!(s.pending_layer(), Some(0), "reset must re-arm the ring at layer 0");
+        assert_eq!(s.ring_len(), 3);
+        let transfers = s.stats.transfers;
+        for li in 0..4 {
+            assert_layer_is(&mut s, li, &layers);
+        }
+        assert_eq!(s.stats.transfers, transfers + 4, "post-reset walk stages each layer once");
+    }
+
+    #[test]
+    fn reset_preserves_usable_ring() {
+        // a reset landing exactly at a token boundary finds the ring
+        // already armed for the next token — it must keep it, not thrash
+        let (mut s, layers) = setup_depth(SchedMode::Async, 3);
+        for li in 0..4 {
+            assert_layer_is(&mut s, li, &layers);
+        }
+        // after layer 3 the ring holds [0, 1] — exactly the post-reset need
+        assert_eq!(s.pending_layer(), Some(0));
+        let transfers = s.stats.transfers;
+        s.reset();
+        assert_eq!(s.pending_layer(), Some(0), "usable ring survives reset");
+        assert_eq!(s.ring_len(), 2);
+        assert_layer_is(&mut s, 0, &layers);
+        assert_eq!(s.stats.transfers, transfers + 1, "no extra stagings after no-op reset");
+    }
+
+    #[test]
+    fn worker_panic_with_full_ring_surfaces_error() {
+        let qm = QuantModel::from_float(&FloatModel::random(tiny_cfg(), 45));
+        let layers = Arc::new(qm.layers);
+        let rt = Arc::new(Runtime::with_shapes(&[]));
+        let fetcher = PanicFetcher { layers: Arc::clone(&layers), panic_on: 2 };
+        let mut s = Streamer::with_depth(rt, fetcher, SchedMode::Async, 4).unwrap();
+        // layer(0) arms [1, 2, 3]; the worker stages 1, then dies on 2
+        s.layer(0).unwrap();
+        // layer 1 was staged before the panic: still consumable
+        s.layer(1).unwrap();
+        // layer 2's staging died with the worker: error, never a hang
+        let err = s.layer(2).unwrap_err().to_string();
+        assert!(err.contains("worker died"), "{err}");
+        let err = s.layer(3).unwrap_err().to_string();
+        assert!(err.contains("worker"), "{err}");
+        s.reset(); // tolerated on a dead worker
+        s.shutdown(); // drains whatever the dead worker left behind
+    }
+
+    #[test]
+    fn invalid_depth_rejected() {
+        let qm = QuantModel::from_float(&FloatModel::random(tiny_cfg(), 46));
+        let layers = Arc::new(qm.layers);
+        let rt = Arc::new(Runtime::with_shapes(&[]));
+        let fetcher = MemFetcher { layers };
+        assert!(Streamer::with_depth(rt, fetcher, SchedMode::Async, 0).is_err());
+    }
+
+    #[test]
+    fn ring_wait_accounting_buckets_by_occupancy() {
+        let (mut s, layers) = setup_depth(SchedMode::Async, 4);
+        for _gen in 0..2 {
+            for li in 0..4 {
+                assert_layer_is(&mut s, li, &layers);
+            }
+        }
+        let by_occ: f64 = s.stats.prefetch_wait_by_occ_s.iter().sum();
+        assert!(
+            (by_occ - s.stats.prefetch_wait_s).abs() <= 1e-9,
+            "bucketed waits {by_occ} must sum to prefetch_wait_s {}",
+            s.stats.prefetch_wait_s
+        );
+        assert_eq!(s.stats.ring_depth, 4);
+        assert!(s.stats.ring_samples >= 7, "every staged consume sampled");
+        assert!(s.stats.ring_occupancy_mean() > 0.0);
+        assert!(s.stats.ring_occupancy_mean() <= 3.0, "occupancy bounded by ring capacity");
     }
 }

@@ -75,6 +75,11 @@ pub struct ServeOpts {
     /// prefetch (Fig. 2 top vs bottom; for A/B measurement).  Only
     /// meaningful when streaming; rejected together with `resident`.
     pub sync_staging: bool,
+    /// Staging-ring depth of the decode thread's weight streamer (CLI
+    /// `--prefetch-depth`): 1 resident layer + `prefetch_depth - 1`
+    /// transfers in flight.  Default 2 (double buffering); ignored with
+    /// `resident`, degenerate (inline staging) at 1.
+    pub prefetch_depth: usize,
     /// Serve zero-copy resident weights ([`WeightMode::Resident`])
     /// instead of streaming them through the staging scheduler — for
     /// deployments where the model truly fits device-side.
@@ -89,6 +94,7 @@ impl Default for ServeOpts {
             max_sessions: 16,
             max_batch: 8,
             sync_staging: false,
+            prefetch_depth: crate::sched::DEFAULT_PREFETCH_DEPTH,
             resident: false,
         }
     }
@@ -232,6 +238,7 @@ impl Server {
         anyhow::ensure!(opts.workers >= 1, "need at least one worker");
         anyhow::ensure!(opts.queue_depth >= 1, "need a queue depth of at least 1");
         anyhow::ensure!(opts.max_batch >= 1, "need a batch capacity of at least 1");
+        anyhow::ensure!(opts.prefetch_depth >= 1, "need a prefetch depth of at least 1");
         anyhow::ensure!(
             !(opts.resident && opts.sync_staging),
             "--resident serves from memory; --sync only applies to streamed staging"
@@ -248,6 +255,7 @@ impl Server {
                 // already caps concurrent lanes; mirror that bound here
                 max_pending: opts.max_sessions.max(opts.max_batch),
                 sched: if opts.sync_staging { SchedMode::Sync } else { SchedMode::Async },
+                prefetch_depth: opts.prefetch_depth,
                 weights: if opts.resident { WeightMode::Resident } else { WeightMode::Streamed },
             },
         );

@@ -20,6 +20,23 @@ struct Done {
     panicked: AtomicBool,
 }
 
+/// Signals `Done` when a job finishes — even on panic, via `Drop` — so the
+/// dispatching thread's blocking wait always terminates.
+struct DoneGuard(Arc<Done>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut rem = self.0.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.0.cv.notify_all();
+        }
+    }
+}
+
 /// Fixed-size persistent worker pool.
 pub struct ThreadPool {
     senders: Vec<Sender<Job>>,
@@ -78,44 +95,106 @@ impl ThreadPool {
             panicked: AtomicBool::new(false),
         });
         let chunk = n.div_ceil(k);
-        // SAFETY: every job signals `done` (even on panic, via Guard), and
-        // we block below until all k jobs have signalled, so the borrowed
-        // `f` outlives every use inside the workers.
+        // SAFETY: every job signals `done` (even on panic, via DoneGuard),
+        // and we block below until all k jobs have signalled, so the
+        // borrowed `f` outlives every use inside the workers.
         let f_ptr: &(dyn Fn(Range<usize>) + Sync) = &f;
         let f_static: &'static (dyn Fn(Range<usize>) + Sync) =
             unsafe { std::mem::transmute(f_ptr) };
         for (i, tx) in self.senders.iter().take(k).enumerate() {
             let lo = i * chunk;
             let hi = ((i + 1) * chunk).min(n);
-            let done = Arc::clone(&done);
+            // The guard is created BEFORE the job is queued and travels
+            // inside it, so a job that is dropped unexecuted (its worker
+            // died unwinding an earlier panic) still signals `done` when
+            // the dead worker's queue is torn down — the wait below can
+            // never hang on a job that will never run.  A rejected send
+            // (worker already gone) drops the job here, same effect.
+            let guard = DoneGuard(Arc::clone(&done));
             let job: Job = Box::new(move || {
-                struct Guard(Arc<Done>);
-                impl Drop for Guard {
-                    fn drop(&mut self) {
-                        if std::thread::panicking() {
-                            self.0.panicked.store(true, Ordering::SeqCst);
-                        }
-                        let mut rem = self.0.remaining.lock().unwrap();
-                        *rem -= 1;
-                        if *rem == 0 {
-                            self.0.cv.notify_all();
-                        }
-                    }
-                }
-                let _guard = Guard(done);
+                let _guard = guard;
                 if lo < hi {
                     f_static(lo..hi);
                 }
             });
-            tx.send(job).expect("worker channel closed");
+            if tx.send(job).is_err() {
+                // dropping the rejected job signalled `done`; record the
+                // dead worker so wait() panics instead of silently
+                // returning with this chunk's work skipped
+                done.panicked.store(true, Ordering::SeqCst);
+            }
         }
+        self.wait(&done, "parallel_for");
+    }
+
+    /// Run `f` once per element of `parts`, distributing the parts across
+    /// the workers and blocking until every invocation finishes.
+    ///
+    /// This is the *safe* disjoint-work primitive: the caller pre-splits
+    /// its mutable state into owned per-part values (e.g. contiguous
+    /// `&mut [f32]` output chunks obtained with `split_at_mut`), so no two
+    /// workers can alias — no raw-pointer `Sync` wrappers needed.  Like
+    /// [`ThreadPool::parallel_for`], parts may borrow from the caller's
+    /// stack: the blocking wait keeps those borrows alive past every use.
+    pub fn run_parts<W, F>(&self, parts: Vec<W>, f: F)
+    where
+        W: Send,
+        F: Fn(W) + Sync,
+    {
+        let k = parts.len();
+        if k == 0 {
+            return;
+        }
+        if k == 1 || self.senders.len() == 1 {
+            for part in parts {
+                f(part);
+            }
+            return;
+        }
+        let done = Arc::new(Done {
+            remaining: Mutex::new(k),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let workers = self.senders.len();
+        for (i, part) in parts.into_iter().enumerate() {
+            // As in parallel_for: the guard rides inside the job, so a
+            // part stranded in a panicked worker's queue (more parts than
+            // workers) signals `done` when the queue is dropped instead
+            // of hanging the wait; a rejected send drops the job (and
+            // signals) right here.  The (part, guard) tuple pins the drop
+            // order — tuple elements drop first-to-last — so the part is
+            // fully dropped BEFORE `done` is signalled and the caller's
+            // borrowed data can never be freed under a still-dropping W.
+            let payload = (part, DoneGuard(Arc::clone(&done)));
+            let f_ref = &f;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let (part, _guard) = payload;
+                f_ref(part);
+            });
+            // SAFETY: we block below until every job has signalled `done`,
+            // so the borrows of `f` and the parts outlive every use inside
+            // the workers; the transmute only erases that lifetime.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            if self.senders[i % workers].send(job).is_err() {
+                // dead worker: the dropped job signalled `done`; fail the
+                // wait loudly rather than skip this part's work silently
+                done.panicked.store(true, Ordering::SeqCst);
+            }
+        }
+        self.wait(&done, "run_parts");
+    }
+
+    /// Block until all jobs tracked by `done` have signalled, then
+    /// propagate any worker panic to the caller.
+    fn wait(&self, done: &Done, what: &str) {
         let mut rem = done.remaining.lock().unwrap();
         while *rem > 0 {
             rem = done.cv.wait(rem).unwrap();
         }
         drop(rem);
         if done.panicked.load(Ordering::SeqCst) {
-            panic!("worker panicked inside parallel_for");
+            panic!("worker panicked inside {what}");
         }
     }
 }
@@ -202,5 +281,74 @@ mod tests {
     fn n_zero_is_noop() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, 0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn run_parts_covers_disjoint_slices() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0u64; 1000];
+        let mut parts: Vec<(usize, &mut [u64])> = Vec::new();
+        let mut rest = &mut out[..];
+        let mut off = 0;
+        while !rest.is_empty() {
+            let take = 137.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            parts.push((off, head));
+            off += take;
+            rest = tail;
+        }
+        pool.run_parts(parts, |(off, chunk)| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (off + i) as u64 * 3;
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 * 3));
+    }
+
+    #[test]
+    fn run_parts_empty_and_single() {
+        let pool = ThreadPool::new(2);
+        pool.run_parts(Vec::<usize>::new(), |_| panic!("should not run"));
+        let count = AtomicUsize::new(0);
+        pool.run_parts(vec![7usize], |v| {
+            count.fetch_add(v, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn run_parts_more_parts_than_workers() {
+        let pool = ThreadPool::new(2);
+        let sum = AtomicUsize::new(0);
+        pool.run_parts((1..=20usize).collect(), |v| {
+            sum.fetch_add(v, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 210);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn run_parts_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        pool.run_parts(vec![0usize, 1], |v| {
+            if v == 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn run_parts_panic_with_queued_parts_does_not_hang() {
+        // part 0 panics worker 0 while part 2 is still queued behind it;
+        // the stranded job is dropped unexecuted when the worker unwinds
+        // and must still signal completion — a hang here (instead of the
+        // propagated panic) is the regression this test pins
+        let pool = ThreadPool::new(2);
+        pool.run_parts((0..4usize).collect(), |v| {
+            if v == 0 {
+                panic!("boom");
+            }
+        });
     }
 }

@@ -175,6 +175,79 @@ fn unified_session_path_bit_identical_to_pre_refactor_pass() {
 }
 
 #[test]
+fn blocked_threaded_backend_bit_identical_to_pre_refactor_pass() {
+    // the pipelined-execution refactor rebuilt the threaded backend on
+    // cache-blocked row kernels dispatched over safe disjoint output
+    // splits; its logits must still match the historical batch-1 op
+    // sequence (run with the scalar reference backend) bit for bit
+    use llamaf::ps::ThreadedGqmv;
+    use llamaf::util::ThreadPool;
+    let qm = tiny_model(34);
+    let cfg = qm.cfg;
+    let tokens = [4u32, 19, 8, 52, 2, 33];
+
+    let mut ref_exec = ScalarGqmv;
+    let mut ref_s = RefScratch::new(&cfg);
+    let mut ref_kv = KvCache::new(&cfg);
+    let mut want: Vec<Vec<f32>> = Vec::new();
+    for (pos, &t) in tokens.iter().enumerate() {
+        ref_forward_pass(&qm, &mut ref_exec, &mut ref_s, &mut ref_kv, t, pos);
+        want.push(ref_s.logits.clone());
+    }
+
+    let mut th = ThreadedGqmv::new(Arc::new(ThreadPool::new(4)));
+    th.min_parallel_macs = 0; // force real pool dispatches at nano scale
+    let mut engine = CpuEngine::new(Arc::clone(&qm), Box::new(th));
+    let mut prof = ForwardProfile::default();
+    for (pos, &t) in tokens.iter().enumerate() {
+        let got = engine.forward(t, pos, &mut prof).unwrap();
+        assert_eq!(got, &want[pos][..], "blocked threaded pass diverged at pos {pos}");
+    }
+}
+
+#[test]
+fn fused_dispatch_bit_identical_to_storage_fusion() {
+    // dispatch-level fusion (gqmv_fused over split Wq/Wk/Wv) must equal
+    // the storage-level fusion the model ships (one concatenated tensor,
+    // one gqmv) — the 7 -> 4 launch reduction cannot change a single bit
+    use llamaf::ps::ThreadedGqmv;
+    use llamaf::util::ThreadPool;
+    let cfg = tiny_cfg();
+    let (d, kv_d, gs) = (cfg.dim, cfg.kv_dim(), cfg.gs);
+    let mut rng = llamaf::util::Rng::new(35);
+    let wq = QuantizedTensor::from_f32(&rng.normal_vec(d * d, 0.5), d, d, gs);
+    let wk = QuantizedTensor::from_f32(&rng.normal_vec(kv_d * d, 0.5), kv_d, d, gs);
+    let wv = QuantizedTensor::from_f32(&rng.normal_vec(kv_d * d, 0.5), kv_d, d, gs);
+    let fused_tensor = QuantizedTensor::concat_rows(&[&wq, &wk, &wv]);
+    let x = rng.normal_vec(d, 1.0);
+    let mut xq = vec![0i8; d];
+    let mut xs = vec![0.0f32; d / gs];
+    quantize_activation_into(&x, gs, &mut xq, &mut xs);
+
+    let mut storage_out = vec![0.0f32; fused_tensor.rows];
+    ScalarGqmv.gqmv(&xq, &xs, &fused_tensor, &mut storage_out).unwrap();
+
+    for threaded in [false, true] {
+        let mut q = vec![0.0f32; d];
+        let mut k = vec![0.0f32; kv_d];
+        let mut v = vec![0.0f32; kv_d];
+        {
+            let mut outs = [&mut q[..], &mut k[..], &mut v[..]];
+            let ws = [&wq, &wk, &wv];
+            if threaded {
+                let mut th = ThreadedGqmv::new(Arc::new(ThreadPool::new(4)));
+                th.min_parallel_macs = 0;
+                th.gqmv_fused(&xq, &xs, &ws, &mut outs).unwrap();
+            } else {
+                ScalarGqmv.gqmv_fused(&xq, &xs, &ws, &mut outs).unwrap();
+            }
+        }
+        let dispatch_out: Vec<f32> = q.iter().chain(k.iter()).chain(v.iter()).copied().collect();
+        assert_eq!(dispatch_out, storage_out, "threaded={threaded}");
+    }
+}
+
+#[test]
 fn unified_greedy_decode_matches_reference_decode() {
     // end to end: a greedy generation through the unified engine equals
     // a greedy generation driven by the reference pass

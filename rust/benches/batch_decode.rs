@@ -1,6 +1,6 @@
 //! Batched-decoding macro-benchmark: aggregate throughput and weight
 //! staging volume of the step-synchronous `BatchScheduler` as batch size
-//! grows.
+//! grows, plus the staging-granularity sweep of the sub-layer pipeline.
 //!
 //! The interesting column is `staged B/tok`: one layer walk per step is
 //! shared by all B lanes, so bytes staged per decoded token should fall
@@ -9,32 +9,44 @@
 //! the staging amortization and from the batched GQMV reusing each
 //! weight row across lanes while it is cache-hot.
 //!
+//! The granularity sweep drives a `Streamer` directly against a
+//! simulated-DDR fetcher (per-byte transfer delay) and compares
+//! `--stream-granularity layer` vs `matrix` at depths 2 and 4: matrix
+//! granularity should slash the wait attributed to each layer's FIRST
+//! matrix (the transfer gating its first GQMV) while keeping overall
+//! overlap, because chunk *k+1* streams while chunk *k* computes.
+//!
 //! Run: `cargo bench --bench batch_decode [-- --quick]`
 //! (NANO geometry; TinyLlama-1.1B synthetic weights need ~1.1 GB and are
 //! left to `table6_inference`.)
 
 use std::sync::{Arc, Barrier};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use anyhow::Result;
 use llamaf::bench::section;
 use llamaf::engine::batch::{BatchOpts, BatchScheduler};
 use llamaf::engine::session::Session;
-use llamaf::model::{QuantModel, NANO};
+use llamaf::model::{LayerChunk, MatrixUnit, QuantLayer, QuantModel, MATRIX_UNITS, NANO};
 use llamaf::ps::ScalarGqmv;
+use llamaf::runtime::Runtime;
+use llamaf::sched::{LayerFetcher, SchedMode, StageGranularity, Streamer, StreamerStats};
 
 /// Decode `b` concurrent lanes of `steps` tokens at staging-ring depth
-/// `prefetch_depth`; returns (aggregate tok/s, staged bytes/token, mean
-/// lane occupancy, mean ring occupancy).
+/// `prefetch_depth` and granularity `gran`; returns (aggregate tok/s,
+/// staged bytes/token, mean lane occupancy, mean ring occupancy, staging
+/// MB/s).
 fn run_batch(
     model: &Arc<QuantModel>,
     b: usize,
     steps: usize,
     prefetch_depth: usize,
-) -> (f64, f64, f64, f64) {
+    gran: StageGranularity,
+) -> (f64, f64, f64, f64, f64) {
     let sched = BatchScheduler::new(
         Arc::clone(model),
         Box::new(ScalarGqmv),
-        BatchOpts { max_batch: b, prefetch_depth, ..Default::default() },
+        BatchOpts { max_batch: b, prefetch_depth, granularity: gran, ..Default::default() },
     );
     let barrier = Arc::new(Barrier::new(b + 1));
     let handles: Vec<_> = (0..b)
@@ -59,8 +71,71 @@ fn run_batch(
     let bpt = sched.metrics().bytes_per_token();
     let occ = sched.metrics().occupancy_mean();
     let ring = sched.metrics().ring_occupancy();
+    let mbs = sched.metrics().stage_mb_s();
     sched.shutdown();
-    (tokens as f64 / dt.max(1e-9), bpt, occ, ring)
+    (tokens as f64 / dt.max(1e-9), bpt, occ, ring, mbs)
+}
+
+/// Simulated-DDR fetcher: every fetch costs wall-clock time proportional
+/// to the bytes moved, so staging waits behave like a bandwidth-bound
+/// off-chip memory instead of a free memcpy.
+struct DdrFetcher {
+    layers: Arc<Vec<QuantLayer>>,
+    ns_per_byte: f64,
+}
+
+impl DdrFetcher {
+    fn stall(&self, bytes: usize) {
+        std::thread::sleep(Duration::from_nanos((bytes as f64 * self.ns_per_byte) as u64));
+    }
+}
+
+impl LayerFetcher for DdrFetcher {
+    fn fetch(&mut self, layer: usize) -> Result<QuantLayer> {
+        let lay = self.layers[layer].clone();
+        self.stall(lay.stream_bytes());
+        Ok(lay)
+    }
+
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn fetch_chunk(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
+        let chunk = self.layers[layer].chunk(unit);
+        self.stall(chunk.stream_bytes());
+        Ok(chunk)
+    }
+}
+
+/// Walk `tokens` full layer sweeps through a streamer over the simulated
+/// DDR, modeling per-matrix kernel time with a sleep, and return the
+/// staging counters.
+fn run_ddr_stream(
+    layers: &Arc<Vec<QuantLayer>>,
+    gran: StageGranularity,
+    depth: usize,
+    tokens: usize,
+    ns_per_byte: f64,
+    compute_per_mat: Duration,
+) -> StreamerStats {
+    let rt = Arc::new(Runtime::with_shapes(&[]));
+    let fetcher = DdrFetcher { layers: Arc::clone(layers), ns_per_byte };
+    let mut st = Streamer::with_opts(rt, fetcher, SchedMode::Async, depth, gran).unwrap();
+    let n = layers.len();
+    for _tok in 0..tokens {
+        for li in 0..n {
+            for u in MATRIX_UNITS {
+                st.unit(li, u).unwrap();
+                if u != MatrixUnit::Norms {
+                    std::thread::sleep(compute_per_mat); // the GQMV this chunk feeds
+                }
+            }
+        }
+    }
+    let stats = st.stats;
+    st.shutdown();
+    stats
 }
 
 fn main() {
@@ -80,7 +155,7 @@ fn main() {
     println!("{steps} steps/lane, async weight streaming, one decode thread\n");
     let mut base_bpt = 0.0f64;
     for b in [1usize, 2, 4, 8] {
-        let (tps, bpt, occ, ring) = run_batch(&model, b, steps, 2);
+        let (tps, bpt, occ, ring, _mbs) = run_batch(&model, b, steps, 2, StageGranularity::Layer);
         if b == 1 {
             base_bpt = bpt;
         }
@@ -99,12 +174,66 @@ fn main() {
 
     section("staging-ring depth sweep at B=4 (--prefetch-depth analogue)");
     for depth in [1usize, 2, 4] {
-        let (tps, _bpt, _occ, ring) = run_batch(&model, 4, steps, depth);
+        let (tps, _bpt, _occ, ring, _mbs) =
+            run_batch(&model, 4, steps, depth, StageGranularity::Layer);
         println!("depth={depth}  aggregate {tps:>9.1} tok/s  ring_occ {ring:>4.2}");
         report.case(&format!("depth{depth}_aggregate"), tps, "tok/s");
         report.case(&format!("depth{depth}_ring_occ"), ring, "layers");
     }
     println!("\n(ring_occ > 0 at depth >= 2: the prefetch pipeline genuinely runs ahead)");
+
+    section("stream-granularity sweep at B=4 (--stream-granularity analogue)");
+    for gran in [StageGranularity::Layer, StageGranularity::Matrix] {
+        for depth in [2usize, 4] {
+            let (tps, _bpt, _occ, _ring, mbs) = run_batch(&model, 4, steps, depth, gran);
+            println!(
+                "granularity={:<6} depth={depth}  aggregate {tps:>9.1} tok/s  \
+                 staging {mbs:>8.1} MB/s",
+                gran.label()
+            );
+            report.case(&format!("sched_{}_d{depth}_aggregate", gran.label()), tps, "tok/s");
+            report.case(&format!("sched_{}_d{depth}_stage_mb_s", gran.label()), mbs, "MB/s");
+        }
+    }
+
+    section("sub-layer overlap under simulated DDR (first-matrix wait, layer vs matrix)");
+    {
+        // a bandwidth-bound regime: transfer > compute per layer, so the
+        // schedule CANNOT hide everything — what matrix granularity
+        // changes is WHERE the unavoidable wait lands (spread over the
+        // five chunks instead of all gating the first matrix)
+        let layers = Arc::new(QuantModel::synthetic(NANO, 7).layers);
+        let tokens = 2;
+        let ns_per_byte = 5.0; // ~4 ms per NANO layer
+        let compute = Duration::from_micros(300); // ~1.2 ms per layer
+        for gran in [StageGranularity::Layer, StageGranularity::Matrix] {
+            for depth in [2usize, 4] {
+                let stats = run_ddr_stream(&layers, gran, depth, tokens, ns_per_byte, compute);
+                let overlap = if stats.total_transfer_s > 0.0 {
+                    1.0 - (stats.blocked_transfer_s / stats.total_transfer_s).min(1.0)
+                } else {
+                    0.0
+                };
+                // the wait gating each layer's first GQMV: norms + QKV
+                let first_wait_ms = 1e3 * (stats.wait_by_unit_s[0] + stats.wait_by_unit_s[1]);
+                println!(
+                    "granularity={:<6} depth={depth}  overlap {overlap:>5.2}  \
+                     first-matrix wait {first_wait_ms:>8.2} ms  stage {:>6.1} MB/s",
+                    gran.label(),
+                    stats.stage_mb_s()
+                );
+                let tag = format!("ddr_{}_d{depth}", gran.label());
+                report.case(&format!("{tag}_overlap"), overlap, "ratio");
+                report.case(&format!("{tag}_first_mat_wait"), first_wait_ms, "ms");
+                report.case(&format!("{tag}_stage_mb_s"), stats.stage_mb_s(), "MB/s");
+            }
+        }
+        println!(
+            "\n(matrix granularity: the first-matrix wait drops because a layer's tail \
+             chunks stream while its head computes)"
+        );
+    }
+
     match report.write() {
         Ok(p) => eprintln!("bench json: {}", p.display()),
         Err(e) => eprintln!("bench json write failed: {e}"),

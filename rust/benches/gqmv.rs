@@ -263,6 +263,37 @@ fn main() {
         report.case("blocked_row_speedup", speedup, "x");
     }
 
+    section("matrix- vs layer-granular staging: first-matrix availability (NANO uploads)");
+    #[cfg(not(feature = "pjrt"))]
+    {
+        // how long until the FIRST GQMV of a layer can launch: a
+        // layer-granular stage uploads all four matrices before anything
+        // runs; a matrix-granular stage needs only the QKV block.  The
+        // ratio is the latency head-start of --stream-granularity matrix.
+        use llamaf::model::QuantModel;
+        let qm = QuantModel::synthetic(NANO, 9);
+        let rt = llamaf::runtime::Runtime::with_shapes(&[]);
+        let layer = &qm.layers[0];
+        let rl = b.run("stage full layer (4 uploads)", || {
+            std::hint::black_box(rt.upload(&layer.wqkv).unwrap());
+            std::hint::black_box(rt.upload(&layer.wo).unwrap());
+            std::hint::black_box(rt.upload(&layer.w13).unwrap());
+            std::hint::black_box(rt.upload(&layer.w2).unwrap());
+        });
+        println!("{}", rl.row());
+        let rq = b.run("stage first matrix (QKV only)", || {
+            std::hint::black_box(rt.upload(&layer.wqkv).unwrap());
+        });
+        println!("{}", rq.row());
+        let head_start = rl.mean_s / rq.mean_s.max(1e-12);
+        println!("first-matrix availability: {head_start:.3}x earlier than whole-layer staging");
+        report.case("stage_full_layer", rl.mean_s, "s");
+        report.case("stage_first_matrix_qkv", rq.mean_s, "s");
+        report.case("first_matrix_head_start", head_start, "x");
+    }
+    #[cfg(feature = "pjrt")]
+    println!("(skipped under --features pjrt: uses the sim runtime's with_shapes)");
+
     section("PJRT kernel path (requires artifacts): upload vs execute split");
     if let Ok(rt) = llamaf::runtime::Runtime::load(std::path::Path::new("artifacts")) {
         let mut rng = Rng::new(7);

@@ -15,7 +15,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::{FloatLayer, FloatModel, LlamaConfig, QuantLayer, QuantModel};
+use crate::model::{
+    FloatLayer, FloatModel, LayerChunk, LlamaConfig, MatrixUnit, QuantLayer, QuantModel,
+};
 use crate::quant::QuantizedTensor;
 
 pub const MAGIC_F32: &[u8; 4] = b"LFCK";
@@ -200,6 +202,50 @@ pub fn q8_layer_offset(cfg: &LlamaConfig, layer: usize) -> u64 {
         + layer as u64 * q8_layer_bytes(cfg)
 }
 
+/// On-disk byte segments `(absolute_offset, length)` of one matrix-granular
+/// staging unit inside layer `layer`'s LFQ8 block.
+///
+/// Most units are one contiguous segment; two span a pair because of the
+/// fixed tensor order (`att_norm wq wk wv wo ffn_norm w1 w2 w3`):
+/// [`MatrixUnit::Norms`] covers `att_norm` + `ffn_norm`, and
+/// [`MatrixUnit::W13`] covers `w1` + `w3` (the on-disk layout interleaves
+/// `w2` between them).  Across all five units the segments are disjoint and
+/// tile the layer block exactly — pinned by unit tests against the bytes
+/// [`write_q8_from_float`] actually writes.
+pub fn q8_matrix_segments(cfg: &LlamaConfig, layer: usize, unit: MatrixUnit) -> Vec<(u64, u64)> {
+    let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
+    let base = q8_layer_offset(cfg, layer);
+    let norm = 4 * d as u64;
+    let dd = q8_tensor_bytes(d, d, gs); // wq / wo
+    let kvd = q8_tensor_bytes(kv, d, gs); // wk / wv
+    let hd = q8_tensor_bytes(h, d, gs); // w1 / w3
+    let dh = q8_tensor_bytes(d, h, gs); // w2
+    let wq_off = base + norm;
+    let wo_off = wq_off + dd + 2 * kvd;
+    let ffn_off = wo_off + dd;
+    let w1_off = ffn_off + norm;
+    let w2_off = w1_off + hd;
+    let w3_off = w2_off + dh;
+    match unit {
+        MatrixUnit::Norms => vec![(base, norm), (ffn_off, norm)],
+        MatrixUnit::Qkv => vec![(wq_off, dd + 2 * kvd)],
+        MatrixUnit::Wo => vec![(wo_off, dd)],
+        MatrixUnit::W13 => vec![(w1_off, hd), (w3_off, hd)],
+        MatrixUnit::W2 => vec![(w2_off, dh)],
+    }
+}
+
+/// Absolute file offset of `unit`'s first on-disk segment in layer `layer`
+/// (see [`q8_matrix_segments`] for the units that span two segments).
+pub fn q8_matrix_offset(cfg: &LlamaConfig, layer: usize, unit: MatrixUnit) -> u64 {
+    q8_matrix_segments(cfg, layer, unit)[0].0
+}
+
+/// Total on-disk bytes of one matrix-granular unit (all segments).
+pub fn q8_matrix_bytes(cfg: &LlamaConfig, unit: MatrixUnit) -> u64 {
+    q8_matrix_segments(cfg, 0, unit).iter().map(|&(_, len)| len).sum()
+}
+
 /// Streaming LFQ8 reader: fetches one layer block at a time from disk —
 /// the "DDR" the scheduler transfers from.  Keeping only the embeddings,
 /// norms and classifier resident mirrors the paper's 111.5 MB buffer
@@ -226,6 +272,51 @@ impl Q8LayerSource {
             .seek(SeekFrom::Start(q8_layer_offset(&self.cfg, layer)))?;
         let mut r = BufReader::new(&mut self.file);
         read_q8_layer(&mut r, &self.cfg.clone())
+    }
+
+    /// Read one matrix-granular chunk of layer `layer` — the sub-layer
+    /// staging unit of `--stream-granularity matrix`.  Only the chunk's
+    /// own byte segments are read (a ~45 MB TinyLlama layer is never
+    /// pulled to fetch its ~66 KB norm vectors), and fused blocks come
+    /// back exactly as [`Q8LayerSource::fetch_layer`] fuses them, so
+    /// matrix-granular staging is bit-identical to layer-granular.
+    pub fn fetch_matrix(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
+        if layer >= self.cfg.n_layers {
+            bail!("layer {layer} out of range ({} layers)", self.cfg.n_layers);
+        }
+        let cfg = self.cfg;
+        let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
+        let segs = q8_matrix_segments(&cfg, layer, unit);
+        self.file.seek(SeekFrom::Start(segs[0].0))?;
+        match unit {
+            MatrixUnit::Norms => {
+                let att_norm = read_f32s(&mut self.file, d)?;
+                self.file.seek(SeekFrom::Start(segs[1].0))?;
+                let ffn_norm = read_f32s(&mut self.file, d)?;
+                Ok(LayerChunk::Norms { att_norm, ffn_norm })
+            }
+            MatrixUnit::Qkv => {
+                let mut r = BufReader::new(&mut self.file);
+                let wq = read_quant(&mut r, d, d, gs)?;
+                let wk = read_quant(&mut r, kv, d, gs)?;
+                let wv = read_quant(&mut r, kv, d, gs)?;
+                Ok(LayerChunk::Mat(QuantizedTensor::concat_rows(&[&wq, &wk, &wv])))
+            }
+            MatrixUnit::Wo => {
+                let mut r = BufReader::new(&mut self.file);
+                Ok(LayerChunk::Mat(read_quant(&mut r, d, d, gs)?))
+            }
+            MatrixUnit::W13 => {
+                let w1 = read_quant(&mut BufReader::new(&mut self.file), h, d, gs)?;
+                self.file.seek(SeekFrom::Start(segs[1].0))?;
+                let w3 = read_quant(&mut BufReader::new(&mut self.file), h, d, gs)?;
+                Ok(LayerChunk::Mat(QuantizedTensor::concat_rows(&[&w1, &w3])))
+            }
+            MatrixUnit::W2 => {
+                let mut r = BufReader::new(&mut self.file);
+                Ok(LayerChunk::Mat(read_quant(&mut r, d, h, gs)?))
+            }
+        }
     }
 
     /// Non-layer ("resident") tensors: embeddings, final norm, classifier.
@@ -433,6 +524,117 @@ mod tests {
             + 4 * cfg.dim as u64
             + q8_tensor_bytes(cfg.vocab_size, cfg.dim, cfg.gs);
         assert_eq!(file_len, expected);
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Serialize a quantized tensor exactly as the LFQ8 writer does
+    /// (int8 data then f32 LE scales) — the oracle for offset pinning.
+    fn q8_bytes(t: &QuantizedTensor) -> Vec<u8> {
+        let mut out: Vec<u8> = t.q.iter().map(|&v| v as u8).collect();
+        for &s in &t.s {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out
+    }
+
+    fn f32_bytes(v: &[f32]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn matrix_segments_tile_every_layer_block() {
+        let cfg = tiny_cfg();
+        for layer in 0..cfg.n_layers {
+            let mut segs: Vec<(u64, u64)> = crate::model::MATRIX_UNITS
+                .iter()
+                .flat_map(|&u| q8_matrix_segments(&cfg, layer, u))
+                .collect();
+            segs.sort_unstable();
+            let base = q8_layer_offset(&cfg, layer);
+            let mut cursor = base;
+            for (off, len) in segs {
+                assert_eq!(off, cursor, "gap or overlap at offset {off}");
+                cursor += len;
+            }
+            assert_eq!(cursor, base + q8_layer_bytes(&cfg), "segments must cover the block");
+        }
+        let total: u64 = crate::model::MATRIX_UNITS
+            .iter()
+            .map(|&u| q8_matrix_bytes(&cfg, u))
+            .sum();
+        assert_eq!(total, q8_layer_bytes(&cfg));
+    }
+
+    #[test]
+    fn layer_and_matrix_offsets_pin_written_byte_layout() {
+        // The format contract: q8_layer_offset/q8_layer_bytes and the new
+        // q8_matrix_offset must locate the EXACT bytes write_q8_from_float
+        // puts on disk — format drift fails here, loudly.
+        use crate::model::MatrixUnit;
+        let cfg = tiny_cfg();
+        let fm = FloatModel::random(cfg, 8);
+        let path = std::env::temp_dir().join("llamaf_test_layout.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        let gs = cfg.gs;
+        let at = |off: u64, len: usize| &raw[off as usize..off as usize + len];
+        assert_eq!(
+            q8_layer_offset(&cfg, 1) - q8_layer_offset(&cfg, 0),
+            q8_layer_bytes(&cfg),
+            "consecutive layer blocks must be exactly q8_layer_bytes apart"
+        );
+        for (li, fl) in fm.layers.iter().enumerate() {
+            // layer block starts with the raw f32 att_norm
+            let base = q8_layer_offset(&cfg, li);
+            assert_eq!(at(base, 4 * cfg.dim), &f32_bytes(&fl.att_norm)[..], "layer {li} base");
+            // Norms unit: att_norm at segment 0, ffn_norm at segment 1
+            let segs = q8_matrix_segments(&cfg, li, MatrixUnit::Norms);
+            assert_eq!(q8_matrix_offset(&cfg, li, MatrixUnit::Norms), base);
+            assert_eq!(at(segs[1].0, segs[1].1 as usize), &f32_bytes(&fl.ffn_norm)[..]);
+            // Qkv unit: wq then wk then wv, quantized exactly like the writer
+            let wq = QuantizedTensor::from_f32(&fl.wq, cfg.dim, cfg.dim, gs);
+            let off = q8_matrix_offset(&cfg, li, MatrixUnit::Qkv);
+            let wq_bytes = q8_bytes(&wq);
+            assert_eq!(at(off, wq_bytes.len()), &wq_bytes[..], "layer {li} wq");
+            // W2 unit is one contiguous tensor
+            let w2 = QuantizedTensor::from_f32(&fl.w2, cfg.dim, cfg.hidden_dim, gs);
+            let off = q8_matrix_offset(&cfg, li, MatrixUnit::W2);
+            let w2_bytes = q8_bytes(&w2);
+            assert_eq!(at(off, w2_bytes.len()), &w2_bytes[..], "layer {li} w2");
+            // W13 unit: w1 at segment 0, w3 at segment 1 (w2 sits between)
+            let segs = q8_matrix_segments(&cfg, li, MatrixUnit::W13);
+            let w1 = QuantizedTensor::from_f32(&fl.w1, cfg.hidden_dim, cfg.dim, gs);
+            let w3 = QuantizedTensor::from_f32(&fl.w3, cfg.hidden_dim, cfg.dim, gs);
+            assert_eq!(at(segs[0].0, segs[0].1 as usize), &q8_bytes(&w1)[..], "layer {li} w1");
+            assert_eq!(at(segs[1].0, segs[1].1 as usize), &q8_bytes(&w3)[..], "layer {li} w3");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fetch_matrix_matches_fused_layer_read() {
+        use crate::model::{LayerChunk, MATRIX_UNITS};
+        let fm = FloatModel::random(tiny_cfg(), 9);
+        let path = std::env::temp_dir().join("llamaf_test_fetchmat.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let qm = read_q8(&path).unwrap();
+        let mut src = Q8LayerSource::open(&path).unwrap();
+        for (li, lay) in qm.layers.iter().enumerate() {
+            for &u in &MATRIX_UNITS {
+                match (src.fetch_matrix(li, u).unwrap(), u) {
+                    (LayerChunk::Norms { att_norm, ffn_norm }, crate::model::MatrixUnit::Norms) => {
+                        assert_eq!(att_norm, lay.att_norm);
+                        assert_eq!(ffn_norm, lay.ffn_norm);
+                    }
+                    (LayerChunk::Mat(t), crate::model::MatrixUnit::Qkv) => assert_eq!(t, lay.wqkv),
+                    (LayerChunk::Mat(t), crate::model::MatrixUnit::Wo) => assert_eq!(t, lay.wo),
+                    (LayerChunk::Mat(t), crate::model::MatrixUnit::W13) => assert_eq!(t, lay.w13),
+                    (LayerChunk::Mat(t), crate::model::MatrixUnit::W2) => assert_eq!(t, lay.w2),
+                    _ => panic!("chunk shape does not match requested unit {u:?}"),
+                }
+            }
+        }
+        assert!(src.fetch_matrix(99, crate::model::MatrixUnit::Qkv).is_err());
         std::fs::remove_file(path).ok();
     }
 

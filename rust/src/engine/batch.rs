@@ -41,7 +41,7 @@ use crate::metrics::{BatchMetrics, ForwardProfile, TokenMeter};
 use crate::model::{LlamaConfig, QuantModel};
 use crate::ps::gqmv::GqmvExec;
 use crate::runtime::Runtime;
-use crate::sched::{ModelFetcher, SchedMode, Streamer};
+use crate::sched::{ModelFetcher, SchedMode, StageGranularity, Streamer, STAGE_UNITS};
 use crate::tensor;
 
 /// How the decode thread obtains each layer's weights.
@@ -73,11 +73,17 @@ pub struct BatchOpts {
     /// run.  Ignored under [`WeightMode::Resident`].
     pub sched: SchedMode,
     /// Staging-ring depth of the shared streamer (CLI `--prefetch-depth`):
-    /// 1 resident layer + `prefetch_depth - 1` transfers in flight.  2 is
+    /// 1 resident unit + `prefetch_depth - 1` transfers in flight.  2 is
     /// the classic double buffer; deeper rings absorb transfer jitter at
-    /// the cost of extra staged-layer memory.  Ignored under
+    /// the cost of extra staged memory.  Ignored under
     /// [`WeightMode::Resident`] and (effectively) under [`SchedMode::Sync`].
     pub prefetch_depth: usize,
+    /// Unit of staging the shared streamer pipelines (CLI
+    /// `--stream-granularity`): whole layers (the classic schedule) or
+    /// per-matrix chunks, which overlap transfers *within* a layer and
+    /// shrink the wait gating each layer's first GQMV.  Bit-identical
+    /// either way; ignored under [`WeightMode::Resident`].
+    pub granularity: StageGranularity,
     /// Streamed (staged-per-step) vs resident (zero-copy) weights.
     pub weights: WeightMode,
 }
@@ -89,6 +95,7 @@ impl Default for BatchOpts {
             max_pending: 64,
             sched: SchedMode::Async,
             prefetch_depth: crate::sched::DEFAULT_PREFETCH_DEPTH,
+            granularity: StageGranularity::default(),
             weights: WeightMode::Streamed,
         }
     }
@@ -129,6 +136,20 @@ impl StepLayers {
         match self {
             StepLayers::Resident(_) => 0.0,
             StepLayers::Streamed(s) => s.stats.ring_occupancy_mean(),
+        }
+    }
+
+    fn total_transfer_s(&self) -> f64 {
+        match self {
+            StepLayers::Resident(_) => 0.0,
+            StepLayers::Streamed(s) => s.stats.total_transfer_s,
+        }
+    }
+
+    fn wait_by_unit_s(&self) -> [f64; STAGE_UNITS] {
+        match self {
+            StepLayers::Resident(_) => [0.0; STAGE_UNITS],
+            StepLayers::Streamed(s) => s.stats.wait_by_unit_s,
         }
     }
 }
@@ -407,9 +428,11 @@ fn decode_loop(
             }
         };
         let fetcher = ModelFetcher { model: Arc::clone(&model) };
-        match Streamer::with_depth(rt, fetcher, opts.sched, opts.prefetch_depth) {
+        match Streamer::with_opts(rt, fetcher, opts.sched, opts.prefetch_depth, opts.granularity)
+        {
             Ok(s) => {
                 sched.metrics.set_ring_depth(opts.prefetch_depth);
+                sched.metrics.set_granularity(opts.granularity.label());
                 StepLayers::Streamed(s)
             }
             Err(e) => {
@@ -506,6 +529,8 @@ fn decode_loop(
             &prof,
         );
         sched.metrics.set_ring_occupancy(layers.ring_occupancy_mean());
+        sched.metrics.set_staging_time(layers.total_transfer_s());
+        sched.metrics.set_unit_waits(layers.wait_by_unit_s());
         bytes_attributed = staged;
         wait_attributed = waited;
 
@@ -726,7 +751,40 @@ mod tests {
         out.unwrap();
         assert_eq!(sched.metrics().ring_depth(), 0, "resident serving has no staging ring");
         assert_eq!(sched.metrics().ring_occupancy(), 0.0);
+        assert_eq!(sched.metrics().granularity(), "none", "no staging pipeline exists");
+        assert_eq!(sched.metrics().stage_mb_s(), 0.0, "zero transfer must not divide");
         sched.shutdown();
+    }
+
+    #[test]
+    fn matrix_granularity_bit_identical_and_reports_bandwidth() {
+        // sub-layer streaming through the shared scheduler: token streams
+        // must stay byte-identical to batch-1 at depths 2 and 4, and the
+        // STATS-side gauges must reflect the configured granularity plus a
+        // derivable staging bandwidth
+        let qm = tiny_model(9);
+        let prompt = [1u32, 10, 11];
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let want = generate(&mut ref_engine, &prompt, 8, Sampler::Greedy, false).unwrap();
+        for depth in [2usize, 4] {
+            let sched = BatchScheduler::new(
+                Arc::clone(&qm),
+                Box::new(ScalarGqmv),
+                BatchOpts {
+                    prefetch_depth: depth,
+                    granularity: StageGranularity::Matrix,
+                    ..Default::default()
+                },
+            );
+            let (sess, out) = sched.generate(Session::new(&qm.cfg), &prompt, 8, |_, _| Ok(()));
+            assert!(sess.is_some());
+            assert_eq!(out.unwrap().generated, want.generated, "depth {depth} diverged");
+            let summary = sched.metrics().summary();
+            assert!(summary.contains("granularity=matrix"), "{summary}");
+            assert!(summary.contains("stage_mb_s="), "{summary}");
+            assert!(sched.metrics().stage_mb_s() > 0.0, "{summary}");
+            sched.shutdown();
+        }
     }
 
     #[test]

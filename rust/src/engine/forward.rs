@@ -17,7 +17,7 @@ use crate::metrics::ForwardProfile;
 use crate::model::{KvCache, LlamaConfig, QuantModel};
 use crate::ps::float::attention;
 use crate::ps::gqmv::GqmvExec;
-use crate::quant::quantize_activation_into;
+use crate::quant::{quantize_activation_into, QuantizedTensor};
 use crate::tensor;
 
 /// A single-token incremental inference engine (batch = 1).
@@ -31,47 +31,6 @@ pub trait Engine {
     fn reset(&mut self);
     /// Human-readable engine/backend identifier.
     fn name(&self) -> String;
-}
-
-/// Pre-allocated working buffers for a device-driven batch-1 pass —
-/// nothing allocates on the hot path.  Used by the streamed-weight
-/// [`LlamafEngine`](crate::engine::llamaf::LlamafEngine); the CPU engines
-/// use the batched analogue [`BatchScratch`] (at 1 lane) since the
-/// forward-path unification.
-pub struct Scratch {
-    /// Residual stream (dim).
-    pub x: Vec<f32>,
-    /// Normed/intermediate vector (dim).
-    pub xb: Vec<f32>,
-    /// Fused QKV output (dim + 2·kv_dim).
-    pub qkv: Vec<f32>,
-    /// Attention output (dim).
-    pub att_out: Vec<f32>,
-    /// Fused W1|W3 output (2·hidden_dim).
-    pub h13: Vec<f32>,
-    /// Classifier output (vocab_size).
-    pub logits: Vec<f32>,
-    /// quantized-activation buffers, sized for the largest GQMV input
-    pub qbuf: Vec<i8>,
-    /// per-group activation scales matching [`Scratch::qbuf`]
-    pub sbuf: Vec<f32>,
-}
-
-impl Scratch {
-    /// Allocate every buffer Algorithm 2 needs for `cfg`.
-    pub fn new(cfg: &LlamaConfig) -> Self {
-        let max_in = cfg.dim.max(cfg.hidden_dim);
-        Scratch {
-            x: vec![0.0; cfg.dim],
-            xb: vec![0.0; cfg.dim],
-            qkv: vec![0.0; cfg.dim + 2 * cfg.kv_dim()],
-            att_out: vec![0.0; cfg.dim],
-            h13: vec![0.0; 2 * cfg.hidden_dim],
-            logits: vec![0.0; cfg.vocab_size],
-            qbuf: vec![0; max_in],
-            sbuf: vec![0.0; max_in / cfg.gs],
-        }
-    }
 }
 
 /// One full Algorithm-2 forward pass for a single (token, pos, KV) lane:
@@ -103,17 +62,31 @@ fn forward_pass(
 // Step-synchronous batched forward pass
 // ---------------------------------------------------------------------------
 
-/// Supplies each transformer layer's weights to [`forward_batch`], one
-/// layer at a time in ascending order.
+/// Supplies each transformer layer's weights to [`forward_batch`] at
+/// **matrix granularity**: the pass asks for each piece right before its
+/// first use (att-norm → Wqkv → Wo → ffn-norm → W1‖W3 → W2), so a
+/// sub-layer streaming provider can lend matrix *k* while matrix *k+1* is
+/// still in flight.
 ///
-/// Implementations: [`ResidentLayers`] hands out the `Arc`-shared model's
-/// layers directly (zero staging), and [`crate::sched::Streamer`] stages
-/// each layer host→device (sync or async prefetch) before lending its
-/// host copy — the paper's streamed-weights path, now amortized over a
-/// whole batch per call.
+/// Implementations: [`ResidentLayers`] / [`ModelLayers`] hand out fields
+/// of the already-loaded layer (zero staging, every accessor instant),
+/// [`crate::sched::Streamer`] consumes its staging ring — whole layers or
+/// per-matrix chunks depending on `--stream-granularity` — and
+/// `engine::llamaf::DeviceLayers` additionally registers each staged
+/// matrix's device buffer for the paired device executor.
 pub trait LayerProvider {
-    /// Borrow layer `li`'s weights, staging them first if necessary.
-    fn provide(&mut self, li: usize) -> Result<&crate::model::QuantLayer>;
+    /// Attention RMSNorm vector of layer `li` (staged first if necessary).
+    fn att_norm(&mut self, li: usize) -> Result<&[f32]>;
+    /// Fused Wq‖Wk‖Wv of layer `li`.
+    fn wqkv(&mut self, li: usize) -> Result<&QuantizedTensor>;
+    /// Wo of layer `li`.
+    fn wo(&mut self, li: usize) -> Result<&QuantizedTensor>;
+    /// FFN RMSNorm vector of layer `li`.
+    fn ffn_norm(&mut self, li: usize) -> Result<&[f32]>;
+    /// Fused W1‖W3 of layer `li`.
+    fn w13(&mut self, li: usize) -> Result<&QuantizedTensor>;
+    /// W2 of layer `li`.
+    fn w2(&mut self, li: usize) -> Result<&QuantizedTensor>;
 }
 
 /// Resident-weight [`LayerProvider`]: layers come straight out of the
@@ -123,8 +96,8 @@ pub struct ResidentLayers {
     pub model: Arc<QuantModel>,
 }
 
-impl LayerProvider for ResidentLayers {
-    fn provide(&mut self, li: usize) -> Result<&crate::model::QuantLayer> {
+impl ResidentLayers {
+    fn layer(&self, li: usize) -> Result<&crate::model::QuantLayer> {
         self.model
             .layers
             .get(li)
@@ -140,14 +113,51 @@ pub struct ModelLayers<'a> {
     pub model: &'a QuantModel,
 }
 
-impl LayerProvider for ModelLayers<'_> {
-    fn provide(&mut self, li: usize) -> Result<&crate::model::QuantLayer> {
+impl ModelLayers<'_> {
+    fn layer(&self, li: usize) -> Result<&crate::model::QuantLayer> {
         self.model
             .layers
             .get(li)
             .ok_or_else(|| anyhow::anyhow!("layer {li} out of range"))
     }
 }
+
+/// Forward the six [`LayerProvider`] accessors to an inherent
+/// `layer(li) -> Result<&QuantLayer>` lookup — the resident providers
+/// differ only in how they hold the model, so one forwarding body serves
+/// both (and any future accessor is added in exactly one place).
+macro_rules! provide_from_resident_layer {
+    ($ty:ty) => {
+        impl LayerProvider for $ty {
+            fn att_norm(&mut self, li: usize) -> Result<&[f32]> {
+                Ok(&self.layer(li)?.att_norm)
+            }
+
+            fn wqkv(&mut self, li: usize) -> Result<&QuantizedTensor> {
+                Ok(&self.layer(li)?.wqkv)
+            }
+
+            fn wo(&mut self, li: usize) -> Result<&QuantizedTensor> {
+                Ok(&self.layer(li)?.wo)
+            }
+
+            fn ffn_norm(&mut self, li: usize) -> Result<&[f32]> {
+                Ok(&self.layer(li)?.ffn_norm)
+            }
+
+            fn w13(&mut self, li: usize) -> Result<&QuantizedTensor> {
+                Ok(&self.layer(li)?.w13)
+            }
+
+            fn w2(&mut self, li: usize) -> Result<&QuantizedTensor> {
+                Ok(&self.layer(li)?.w2)
+            }
+        }
+    };
+}
+
+provide_from_resident_layer!(ResidentLayers);
+provide_from_resident_layer!(ModelLayers<'_>);
 
 /// One decoding lane of a batched step: a session's KV cache plus the
 /// token to feed at its position.  Lanes are independent — only the
@@ -161,10 +171,11 @@ pub struct BatchLane<'a> {
     pub token: u32,
 }
 
-/// Pre-allocated working buffers for up to `max_batch` lanes — the
-/// batched analogue of [`Scratch`].  Per-GQMV inputs/outputs are packed
+/// Pre-allocated working buffers for up to `max_batch` lanes — nothing
+/// allocates on the hot path.  Per-GQMV inputs/outputs are packed
 /// contiguously (`nb × len`) so one [`GqmvExec::gqmv_batch`] call serves
-/// the whole step.
+/// the whole step.  Every engine uses this (the batch-1 paths at 1 lane)
+/// since the forward-path unification.
 pub struct BatchScratch {
     /// Maximum number of lanes a single step may carry.
     pub max_batch: usize,
@@ -271,7 +282,9 @@ fn quant_gqmv_fused_batch(
 /// One step-synchronous batched forward pass: a single walk over the
 /// layers serves every lane before moving on, so a streamed
 /// [`LayerProvider`] stages each layer's weights exactly once per step
-/// instead of once per lane.
+/// instead of once per lane.  Each weight piece is requested right before
+/// its first use, so a matrix-granular provider overlaps the transfer of
+/// a layer's tail matrices with compute on its head matrices.
 ///
 /// Per-lane arithmetic is the exact batch-1 sequence of `forward_pass`
 /// operations (same RMSNorm/RoPE/attention/SwiGLU calls, same
@@ -311,31 +324,30 @@ pub fn forward_batch(
     prof.other_s += t0.elapsed().as_secs_f64();
 
     for li in 0..cfg.n_layers {
-        // stage (or receive prefetched) layer weights — ONCE for all
-        // lanes.  The wait is billed as transfer time (~0 for resident
-        // providers; the visible remainder of the staging for streamed
-        // ones).
-        let t = Instant::now();
-        let layer = layers.provide(li)?;
-        prof.transfer_s += t.elapsed().as_secs_f64();
+        // Each piece below is staged (or received prefetched) ONCE for
+        // all lanes, right before its first use; waits are billed as
+        // transfer time (~0 for resident providers; the visible remainder
+        // of the staging for streamed ones).
 
         // RMSNorm + quantize + fused QKV GQMV (Alg. 2 l.3-4, batched)
         let t = Instant::now();
+        let att_norm = layers.att_norm(li)?;
+        prof.transfer_s += t.elapsed().as_secs_f64();
+        let t = Instant::now();
         for b in 0..nb {
-            tensor::rmsnorm(
-                &mut s.xb[b * d..(b + 1) * d],
-                &s.x[b * d..(b + 1) * d],
-                &layer.att_norm,
-            );
+            tensor::rmsnorm(&mut s.xb[b * d..(b + 1) * d], &s.x[b * d..(b + 1) * d], att_norm);
         }
         prof.rmsnorm_s += t.elapsed().as_secs_f64();
         // fused QKV group: Wq|Wk|Wv is one storage-fused tensor, so the
         // whole group is one quantization + one dispatch
+        let t = Instant::now();
+        let wqkv = layers.wqkv(li)?;
+        prof.transfer_s += t.elapsed().as_secs_f64();
         quant_gqmv_fused_batch(
             exec,
             &s.xb,
             d,
-            &[&layer.wqkv],
+            &[wqkv],
             &mut [&mut s.qkv[..]],
             &mut s.qbuf,
             &mut s.sbuf,
@@ -365,11 +377,14 @@ pub fn forward_batch(
         prof.attention_s += t.elapsed().as_secs_f64();
 
         // quantize + Wo GQMV + residual (l.8-10)
+        let t = Instant::now();
+        let wo = layers.wo(li)?;
+        prof.transfer_s += t.elapsed().as_secs_f64();
         quant_gqmv_fused_batch(
             exec,
             &s.att_out,
             d,
-            &[&layer.wo],
+            &[wo],
             &mut [&mut s.xb[..]],
             &mut s.qbuf,
             &mut s.sbuf,
@@ -385,21 +400,23 @@ pub fn forward_batch(
 
         // FFN: RMSNorm + fused W1|W3 + SwiGLU + W2 + residual (l.11-15)
         let t = Instant::now();
+        let ffn_norm = layers.ffn_norm(li)?;
+        prof.transfer_s += t.elapsed().as_secs_f64();
+        let t = Instant::now();
         for b in 0..nb {
-            tensor::rmsnorm(
-                &mut s.xb[b * d..(b + 1) * d],
-                &s.x[b * d..(b + 1) * d],
-                &layer.ffn_norm,
-            );
+            tensor::rmsnorm(&mut s.xb[b * d..(b + 1) * d], &s.x[b * d..(b + 1) * d], ffn_norm);
         }
         prof.rmsnorm_s += t.elapsed().as_secs_f64();
         // fused FFN-in group: W1|W3 is one storage-fused tensor (one
         // quantization + one dispatch for both projections)
+        let t = Instant::now();
+        let w13 = layers.w13(li)?;
+        prof.transfer_s += t.elapsed().as_secs_f64();
         quant_gqmv_fused_batch(
             exec,
             &s.xb,
             d,
-            &[&layer.w13],
+            &[w13],
             &mut [&mut s.h13[..]],
             &mut s.qbuf,
             &mut s.sbuf,
@@ -414,11 +431,14 @@ pub fn forward_batch(
             tensor::swiglu(h1, h3);
         }
         prof.swiglu_s += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let w2 = layers.w2(li)?;
+        prof.transfer_s += t.elapsed().as_secs_f64();
         quant_gqmv_fused_batch(
             exec,
             &s.h13,
             h2,
-            &[&layer.w2],
+            &[w2],
             &mut [&mut s.xb[..]],
             &mut s.qbuf,
             &mut s.sbuf,

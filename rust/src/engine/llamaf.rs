@@ -1,71 +1,270 @@
 //! The LlamaF engine: Algorithm 2 with streamed weights and GQMV executed
 //! by the AOT-compiled Pallas kernel via PJRT (the functional PL).
 //!
-//! Control flow (RMSNorm, RoPE, attention, SwiGLU, sampling) stays on the
-//! "PS" (this thread); weight staging follows the configured
-//! [`SchedMode`] and ring depth ([`Streamer::with_depth`], CLI
-//! `--prefetch-depth`); kernels consume device-resident weight buffers.
+//! Since the device-path unification there is **no private copy of the
+//! Algorithm-2 arithmetic here**: decoding runs through the same
+//! [`forward_batch`] as every CPU engine (one lane), with a device-aware
+//! provider/executor pair replacing the resident model:
 //!
-//! The device path is already dispatch-minimal — four kernel launches per
-//! layer, because Wq‖Wk‖Wv and W1‖W3 ship as storage-fused buffers.  That
-//! is the device twin of the CPU backends' dispatch-time fusion
-//! ([`crate::ps::gqmv::GqmvExec::gqmv_fused`]); both are bit-identical to
-//! seven per-matrix launches by row independence.
+//! * [`DeviceLayers`] streams layer weights through the staging
+//!   [`Streamer`] (sync/async, `--prefetch-depth`,
+//!   `--stream-granularity`), lends the HOST copies to the pass (norm
+//!   vectors, activation quantization) and registers each staged matrix's
+//!   DEVICE buffer;
+//! * [`DeviceGqmv`] executes every GQMV on those pre-staged device
+//!   buffers via [`Runtime::gqmv_device`] — including the split-tensor
+//!   fused launch ([`Runtime::gqmv_device_fused`]) when a same-input
+//!   group arrives as separate tensors.
+//!
+//! Control flow (RMSNorm, RoPE, attention, SwiGLU, sampling) stays on the
+//! "PS" (this thread); kernels consume device-resident weight buffers.
+//! The device path stays dispatch-minimal — four kernel launches per
+//! layer, because Wq‖Wk‖Wv and W1‖W3 ship as storage-fused buffers.
 
+use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::ckpt;
-use crate::engine::forward::{Engine, Scratch};
+use crate::engine::forward::{forward_batch, BatchLane, BatchScratch, Engine, LayerProvider};
 use crate::metrics::ForwardProfile;
-use crate::model::{KvCache, LlamaConfig};
-use crate::ps::float::attention;
-use crate::quant::{quantize_activation_into, QuantizedTensor};
+use crate::model::{KvCache, LlamaConfig, MatrixUnit, QuantModel};
+use crate::ps::gqmv::{check_shapes, check_shapes_fused, GqmvExec};
+use crate::quant::QuantizedTensor;
 use crate::runtime::{DeviceWeights, Runtime};
-use crate::sched::{DiskFetcher, MemFetcher, SchedMode, Streamer};
-use crate::tensor;
+use crate::sched::{
+    DiskFetcher, MemFetcher, PreparedMatrix, SchedMode, StageGranularity, Streamer, StreamerStats,
+};
 
-/// Weights that stay resident (paper: embeddings live host-side; we keep
-/// the classifier device-resident since it is reused every token).
-struct Resident {
-    tok_emb: QuantizedTensor,
-    final_norm: Vec<f32>,
-    cls_dev: DeviceWeights,
-    cls_rows: usize,
+/// Host-tensor → device-buffer map shared by the [`DeviceLayers`]
+/// provider (which registers buffers as the streamer stages them) and the
+/// [`DeviceGqmv`] executor (which launches kernels on them).  Keyed by
+/// the host tensor's data pointer: the provider lends exactly the host
+/// copies whose buffers it registered, so a lookup miss means the
+/// provider/executor pairing is broken — an error, never a re-upload.
+#[derive(Clone)]
+pub struct DevRegistry {
+    inner: Arc<Mutex<DevRegistryInner>>,
 }
 
-/// The full LlamaF system engine.
+struct DevRegistryInner {
+    /// Permanently resident buffers (the classifier).
+    pinned: HashMap<usize, Arc<DeviceWeights>>,
+    /// Buffers of the layer walk currently in flight; evicted wholesale at
+    /// the start of the next layer walk so the map stays bounded (≤ 4
+    /// entries + pinned) — even on a 1-layer model that restages the same
+    /// layer index every token.
+    layer: HashMap<usize, Arc<DeviceWeights>>,
+}
+
+fn key(host: &QuantizedTensor) -> usize {
+    host.q.as_ptr() as usize
+}
+
+impl DevRegistry {
+    /// Empty registry (no pinned or layer buffers yet).
+    pub fn new() -> Self {
+        DevRegistry {
+            inner: Arc::new(Mutex::new(DevRegistryInner {
+                pinned: HashMap::new(),
+                layer: HashMap::new(),
+            })),
+        }
+    }
+
+    /// Register a permanently resident buffer (survives layer turnover).
+    pub fn pin(&self, host: &QuantizedTensor, dev: Arc<DeviceWeights>) {
+        self.inner.lock().unwrap().pinned.insert(key(host), dev);
+    }
+
+    /// Register one staged layer matrix.  `first_of_layer` (the fused QKV
+    /// block, the first matrix every layer walk registers) evicts the
+    /// previous walk's entries, keeping the map bounded and its buffers
+    /// droppable.
+    fn register(&self, first_of_layer: bool, host: &QuantizedTensor, dev: Arc<DeviceWeights>) {
+        let mut inner = self.inner.lock().unwrap();
+        if first_of_layer {
+            inner.layer.clear();
+        }
+        inner.layer.insert(key(host), dev);
+    }
+
+    /// Device buffer registered for this host tensor, if any.
+    fn lookup(&self, host: &QuantizedTensor) -> Option<Arc<DeviceWeights>> {
+        let inner = self.inner.lock().unwrap();
+        let k = key(host);
+        inner.layer.get(&k).or_else(|| inner.pinned.get(&k)).cloned()
+    }
+}
+
+impl Default for DevRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Device-aware [`LayerProvider`]: streams layer weights through the
+/// staging [`Streamer`] at its configured granularity, lends the host
+/// copies to [`forward_batch`] and registers every staged matrix's device
+/// buffer in the shared [`DevRegistry`] so the paired [`DeviceGqmv`]
+/// launches kernels on pre-staged weights — never re-uploading on the
+/// decode hot path.
+pub struct DeviceLayers<'a> {
+    streamer: &'a mut Streamer,
+    registry: DevRegistry,
+}
+
+impl<'a> DeviceLayers<'a> {
+    /// Pair a streamer with the registry shared with a [`DeviceGqmv`].
+    pub fn new(streamer: &'a mut Streamer, registry: &DevRegistry) -> Self {
+        DeviceLayers { streamer, registry: registry.clone() }
+    }
+
+    fn mat(&mut self, li: usize, unit: MatrixUnit) -> Result<&QuantizedTensor> {
+        let staged = self.streamer.unit(li, unit)?;
+        let pm: &PreparedMatrix = match unit {
+            MatrixUnit::Qkv => staged.wqkv(),
+            MatrixUnit::Wo => staged.wo(),
+            MatrixUnit::W13 => staged.w13(),
+            MatrixUnit::W2 => staged.w2(),
+            MatrixUnit::Norms => anyhow::bail!("norms are host-side, not a device matrix"),
+        };
+        // the QKV block is the first matrix of every layer walk: its
+        // registration retires the previous walk's buffers
+        self.registry.register(unit == MatrixUnit::Qkv, &pm.host, Arc::clone(&pm.dev));
+        Ok(&pm.host)
+    }
+}
+
+impl LayerProvider for DeviceLayers<'_> {
+    fn att_norm(&mut self, li: usize) -> Result<&[f32]> {
+        Ok(self.streamer.unit(li, MatrixUnit::Norms)?.att_norm())
+    }
+
+    fn wqkv(&mut self, li: usize) -> Result<&QuantizedTensor> {
+        self.mat(li, MatrixUnit::Qkv)
+    }
+
+    fn wo(&mut self, li: usize) -> Result<&QuantizedTensor> {
+        self.mat(li, MatrixUnit::Wo)
+    }
+
+    fn ffn_norm(&mut self, li: usize) -> Result<&[f32]> {
+        Ok(self.streamer.unit(li, MatrixUnit::Norms)?.ffn_norm())
+    }
+
+    fn w13(&mut self, li: usize) -> Result<&QuantizedTensor> {
+        self.mat(li, MatrixUnit::W13)
+    }
+
+    fn w2(&mut self, li: usize) -> Result<&QuantizedTensor> {
+        self.mat(li, MatrixUnit::W2)
+    }
+}
+
+/// GQMV backend that launches device kernels on weights pre-staged by the
+/// paired [`DeviceLayers`] provider.  Same-input groups of *split*
+/// tensors go through the split-tensor fused launch
+/// ([`Runtime::gqmv_device_fused`]): one device dispatch over the
+/// group's stacked row space, bit-identical to per-matrix launches.
+pub struct DeviceGqmv {
+    rt: Arc<Runtime>,
+    registry: DevRegistry,
+}
+
+impl DeviceGqmv {
+    /// Pair a runtime with the registry shared with a [`DeviceLayers`].
+    pub fn new(rt: Arc<Runtime>, registry: DevRegistry) -> Self {
+        DeviceGqmv { rt, registry }
+    }
+
+    fn dev(&self, w: &QuantizedTensor) -> Result<Arc<DeviceWeights>> {
+        self.registry.lookup(w).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no device buffer staged for a {}x{} matrix (provider/executor desync)",
+                w.rows,
+                w.cols
+            )
+        })
+    }
+}
+
+impl GqmvExec for DeviceGqmv {
+    fn gqmv(&mut self, xq: &[i8], xs: &[f32], w: &QuantizedTensor, out: &mut [f32]) -> Result<()> {
+        check_shapes(xq, xs, w, out)?;
+        let dev = self.dev(w)?;
+        self.rt.gqmv_device(&dev, xq, xs, out)
+    }
+
+    fn gqmv_fused(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        ws: &[&QuantizedTensor],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        check_shapes_fused(xq, xs, ws, outs)?;
+        let devs = ws.iter().map(|w| self.dev(w)).collect::<Result<Vec<_>>>()?;
+        let dev_refs: Vec<&DeviceWeights> = devs.iter().map(|d| d.as_ref()).collect();
+        self.rt.gqmv_device_fused(&dev_refs, xq, xs, outs)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-staged"
+    }
+}
+
+/// The full LlamaF system engine: streamed layer weights + device GQMV,
+/// decoding through the unified [`forward_batch`] (one lane).
 pub struct LlamafEngine {
     cfg: LlamaConfig,
-    rt: Arc<Runtime>,
-    resident: Resident,
+    /// Resident tensors (embeddings, final norm, classifier) viewed as a
+    /// layer-less [`QuantModel`] so the unified pass can serve them; layer
+    /// weights never live here — they stream through `streamer`.  The
+    /// host classifier copy doubles as the registry key for its pinned
+    /// device buffer (the "DDR" copy every real deployment keeps anyway).
+    resident: QuantModel,
+    registry: DevRegistry,
+    exec: DeviceGqmv,
     streamer: Streamer,
     kv: KvCache,
-    s: Scratch,
-    /// blocked transfer time snapshot for per-token accounting
-    last_blocked_s: f64,
+    s: BatchScratch,
 }
 
 impl LlamafEngine {
-    /// Open an LFQ8 checkpoint, compile/validate kernels, stage layer 0,
-    /// with the default double-buffer staging depth.
+    /// Open an LFQ8 checkpoint, compile/validate kernels, stage the first
+    /// unit, with the default double-buffer staging depth and layer
+    /// granularity.
     pub fn open(ckpt_path: &Path, rt: Arc<Runtime>, mode: SchedMode) -> Result<Self> {
         Self::open_with_depth(ckpt_path, rt, mode, crate::sched::DEFAULT_PREFETCH_DEPTH)
     }
 
     /// [`LlamafEngine::open`] with an explicit staging-pipeline depth
     /// (CLI `--prefetch-depth`): the async schedule keeps up to
-    /// `depth - 1` layer transfers in flight ahead of compute.
+    /// `depth - 1` staging units in flight ahead of compute.
     pub fn open_with_depth(
         ckpt_path: &Path,
         rt: Arc<Runtime>,
         mode: SchedMode,
         depth: usize,
     ) -> Result<Self> {
-        let mut probe = DiskFetcher::open(ckpt_path)?;
+        Self::open_with_opts(ckpt_path, rt, mode, depth, StageGranularity::default())
+    }
+
+    /// [`LlamafEngine::open_with_depth`] with an explicit staging
+    /// granularity (CLI `--stream-granularity`): `matrix` streams each
+    /// layer as five independent chunks so compute overlaps transfers
+    /// *within* a layer.
+    pub fn open_with_opts(
+        ckpt_path: &Path,
+        rt: Arc<Runtime>,
+        mode: SchedMode,
+        depth: usize,
+        gran: StageGranularity,
+    ) -> Result<Self> {
+        let probe = DiskFetcher::open(ckpt_path)?;
         let cfg = probe.cfg();
         // validate all kernel shapes up front (fail fast before serving)
         for (m, n) in cfg.all_mat_shapes() {
@@ -74,25 +273,26 @@ impl LlamafEngine {
         }
         let mut src = ckpt::Q8LayerSource::open(ckpt_path)?;
         let (tok_emb, final_norm, cls) = src.fetch_resident()?;
-        let cls_dev = rt.upload(&cls)?;
-        let resident = Resident { tok_emb, final_norm, cls_dev, cls_rows: cls.rows };
+        let cls_dev = Arc::new(rt.upload(&cls)?);
+        let resident = QuantModel { cfg, tok_emb, layers: Vec::new(), final_norm, cls };
+        let registry = DevRegistry::new();
+        registry.pin(&resident.cls, cls_dev);
         // probe re-used as the streaming fetcher
-        let _ = &mut probe;
-        let streamer = Streamer::with_depth(Arc::clone(&rt), probe, mode, depth)?;
+        let streamer = Streamer::with_opts(Arc::clone(&rt), probe, mode, depth, gran)?;
         Ok(LlamafEngine {
             cfg,
-            rt,
             resident,
+            exec: DeviceGqmv::new(rt, registry.clone()),
+            registry,
             streamer,
             kv: KvCache::new(&cfg),
-            s: Scratch::new(&cfg),
-            last_blocked_s: 0.0,
+            s: BatchScratch::new(&cfg, 1),
         })
     }
 
     /// Build from an in-memory model (tests / synthetic geometry): layers
     /// are "staged" by cloning from memory, still exercising the
-    /// upload-per-layer path.
+    /// upload-per-chunk path.
     pub fn from_model(
         model: crate::model::QuantModel,
         rt: Arc<Runtime>,
@@ -108,33 +308,49 @@ impl LlamafEngine {
         mode: SchedMode,
         depth: usize,
     ) -> Result<Self> {
+        Self::from_model_with_opts(model, rt, mode, depth, StageGranularity::default())
+    }
+
+    /// [`LlamafEngine::from_model_with_depth`] with an explicit staging
+    /// granularity.
+    pub fn from_model_with_opts(
+        mut model: crate::model::QuantModel,
+        rt: Arc<Runtime>,
+        mode: SchedMode,
+        depth: usize,
+        gran: StageGranularity,
+    ) -> Result<Self> {
         let cfg = model.cfg;
         for (m, n) in cfg.all_mat_shapes() {
             rt.ensure_shape(m, n)?;
         }
-        let cls_dev = rt.upload(&model.cls)?;
-        let resident = Resident {
-            tok_emb: model.tok_emb,
-            final_norm: model.final_norm,
-            cls_dev,
-            cls_rows: model.cls.rows,
-        };
-        let fetcher = MemFetcher { layers: Arc::new(model.layers) };
-        let streamer = Streamer::with_depth(Arc::clone(&rt), fetcher, mode, depth)?;
+        // the layers move into the fetcher ("DDR"); everything else stays
+        // resident
+        let layers = std::mem::take(&mut model.layers);
+        let cls_dev = Arc::new(rt.upload(&model.cls)?);
+        let registry = DevRegistry::new();
+        registry.pin(&model.cls, cls_dev);
+        let fetcher = MemFetcher { layers: Arc::new(layers) };
+        let streamer = Streamer::with_opts(Arc::clone(&rt), fetcher, mode, depth, gran)?;
         Ok(LlamafEngine {
             cfg,
-            rt,
-            resident,
+            resident: model,
+            exec: DeviceGqmv::new(rt, registry.clone()),
+            registry,
             streamer,
             kv: KvCache::new(&cfg),
-            s: Scratch::new(&cfg),
-            last_blocked_s: 0.0,
+            s: BatchScratch::new(&cfg, 1),
         })
     }
 
     /// Weight-staging schedule this engine runs with.
     pub fn mode(&self) -> SchedMode {
         self.streamer.mode
+    }
+
+    /// Staging granularity this engine streams at.
+    pub fn granularity(&self) -> StageGranularity {
+        self.streamer.granularity()
     }
 
     /// Total/blocked staging seconds so far (Fig. 2 accounting).
@@ -146,28 +362,11 @@ impl LlamafEngine {
         )
     }
 
-    /// Full staging counters, including ring occupancy and the per-depth
-    /// prefetch-wait buckets of the staging ring.
-    pub fn streamer_stats(&self) -> crate::sched::StreamerStats {
+    /// Full staging counters, including ring occupancy, the per-depth
+    /// prefetch-wait buckets and the per-matrix wait attribution of the
+    /// staging ring.
+    pub fn streamer_stats(&self) -> StreamerStats {
         self.streamer.stats
-    }
-
-    fn quant_gqmv_dev(
-        rt: &Runtime,
-        dw: &DeviceWeights,
-        x: &[f32],
-        out: &mut [f32],
-        qbuf: &mut [i8],
-        sbuf: &mut [f32],
-        gs: usize,
-        prof: &mut ForwardProfile,
-    ) -> Result<()> {
-        let t = Instant::now();
-        let n = x.len();
-        quantize_activation_into(x, gs, &mut qbuf[..n], &mut sbuf[..n / gs]);
-        rt.gqmv_device(dw, &qbuf[..n], &sbuf[..n / gs], out)?;
-        prof.matrix_s += t.elapsed().as_secs_f64();
-        Ok(())
     }
 }
 
@@ -177,95 +376,25 @@ impl Engine for LlamafEngine {
     }
 
     fn forward(&mut self, token: u32, pos: usize, prof: &mut ForwardProfile) -> Result<&[f32]> {
-        let cfg = self.cfg;
-        let (d, kv_d, hd, gs) = (cfg.dim, cfg.kv_dim(), cfg.head_dim(), cfg.gs);
-        anyhow::ensure!((token as usize) < cfg.vocab_size, "token {token} out of range");
-        anyhow::ensure!(pos < cfg.seq_len, "pos {pos} >= seq_len {}", cfg.seq_len);
-
-        let t0 = Instant::now();
-        self.resident.tok_emb.dequantize_row(token as usize, &mut self.s.x);
-        prof.other_s += t0.elapsed().as_secs_f64();
-
-        for li in 0..cfg.n_layers {
-            // stage (or receive prefetched) layer weights
-            let blocked_before = self.streamer.stats.blocked_transfer_s;
-            let layer = self.streamer.layer(li)?;
-            // (borrow of streamer ends when layer refs are copied below)
-            let att_norm = layer.host.att_norm.clone();
-            let ffn_norm = layer.host.ffn_norm.clone();
-            // SAFETY-free re-borrow dance: DeviceWeights are behind the
-            // streamer's current slot; clone the Arc-less handles by
-            // splitting the call sequence instead.
-            let t = Instant::now();
-            tensor::rmsnorm(&mut self.s.xb, &self.s.x, &att_norm);
-            prof.rmsnorm_s += t.elapsed().as_secs_f64();
-
-            let layer = self.streamer.layer(li)?; // re-borrow (no-op)
-            Self::quant_gqmv_dev(
-                &self.rt, &layer.wqkv, &self.s.xb, &mut self.s.qkv,
-                &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
-            )?;
-
-            let t = Instant::now();
-            let (q, kvs) = self.s.qkv.split_at_mut(d);
-            let (k, v) = kvs.split_at_mut(kv_d);
-            tensor::rope(q, pos, hd);
-            tensor::rope(k, pos, hd);
-            prof.rope_s += t.elapsed().as_secs_f64();
-            self.kv.store(li, pos, k, v);
-
-            let t = Instant::now();
-            attention(&cfg, &self.kv, li, pos, q, &mut self.s.att_out);
-            prof.attention_s += t.elapsed().as_secs_f64();
-
-            let layer = self.streamer.layer(li)?;
-            Self::quant_gqmv_dev(
-                &self.rt, &layer.wo, &self.s.att_out, &mut self.s.xb,
-                &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
-            )?;
-            let t = Instant::now();
-            tensor::add_assign(&mut self.s.x, &self.s.xb);
-            tensor::rmsnorm(&mut self.s.xb, &self.s.x, &ffn_norm);
-            prof.rmsnorm_s += t.elapsed().as_secs_f64();
-
-            let layer = self.streamer.layer(li)?;
-            Self::quant_gqmv_dev(
-                &self.rt, &layer.w13, &self.s.xb, &mut self.s.h13,
-                &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
-            )?;
-            let t = Instant::now();
-            let (h1, h3) = self.s.h13.split_at_mut(cfg.hidden_dim);
-            tensor::swiglu(h1, h3);
-            prof.swiglu_s += t.elapsed().as_secs_f64();
-
-            let layer = self.streamer.layer(li)?;
-            let h1 = &self.s.h13[..cfg.hidden_dim];
-            Self::quant_gqmv_dev(
-                &self.rt, &layer.w2, h1, &mut self.s.xb,
-                &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
-            )?;
-            let t = Instant::now();
-            tensor::add_assign(&mut self.s.x, &self.s.xb);
-            prof.other_s += t.elapsed().as_secs_f64();
-
-            prof.transfer_s += self.streamer.stats.blocked_transfer_s - blocked_before;
-        }
-
-        let t = Instant::now();
-        tensor::rmsnorm(&mut self.s.xb, &self.s.x, &self.resident.final_norm);
-        prof.rmsnorm_s += t.elapsed().as_secs_f64();
-        anyhow::ensure!(self.s.logits.len() == self.resident.cls_rows);
-        Self::quant_gqmv_dev(
-            &self.rt, &self.resident.cls_dev, &self.s.xb, &mut self.s.logits,
-            &mut self.s.qbuf, &mut self.s.sbuf, gs, prof,
+        // One lane through the unified Algorithm-2 pass: DeviceLayers
+        // streams + registers weights, DeviceGqmv launches the kernels on
+        // the staged buffers.  There is no device-private op sequence.
+        let mut provider = DeviceLayers::new(&mut self.streamer, &self.registry);
+        let mut lanes = [BatchLane { kv: &mut self.kv, pos, token }];
+        forward_batch(
+            &self.resident,
+            &mut provider,
+            &mut self.exec,
+            &mut self.s,
+            &mut lanes,
+            prof,
         )?;
-        self.last_blocked_s = self.streamer.stats.blocked_transfer_s;
-        Ok(&self.s.logits)
+        Ok(self.s.logits(0))
     }
 
     fn reset(&mut self) {
         self.kv.reset();
-        // Re-arm the weight prefetch for the next generation's first layer;
+        // Re-arm the weight prefetch for the next generation's first unit;
         // without this, a reset that lands mid-token leaves a stale pending
         // staging and the first layers pay blocked (sync-style) transfers.
         self.streamer.reset();
@@ -282,4 +411,6 @@ impl Engine for LlamafEngine {
     }
 }
 
-// Integration tests live in rust/tests/ (require artifacts + PJRT).
+// Offline (sim-runtime) coverage lives in rust/tests/forward_unification.rs
+// (device path == CPU path bitwise, at every granularity × depth);
+// artifact-backed integration tests live in rust/tests/engine_e2e.rs.

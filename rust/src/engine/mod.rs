@@ -4,8 +4,9 @@
 //! * [`CpuEngine`] — weights resident, GQMV on a pluggable CPU backend
 //!   (scalar / threaded = the PS baseline; dataflow sim = the modeled PL).
 //! * [`LlamafEngine`] — the paper's system: PS control flow + streamed
-//!   per-layer weights + GQMV executed by the AOT Pallas kernel via PJRT,
-//!   with sync or async staging ([`crate::sched`]).
+//!   weights (layer- or matrix-granular, [`crate::sched`]) + GQMV
+//!   executed by the AOT Pallas kernel via PJRT, routed through the same
+//!   unified [`forward::forward_batch`] as the CPU engines.
 //! * [`BatchScheduler`] — the serving hot path: step-synchronous batched
 //!   decoding, one weight-streaming pass per step shared by every active
 //!   session ([`forward::forward_batch`]).
@@ -21,7 +22,7 @@ pub mod ppl;
 pub mod session;
 
 pub use batch::{BatchOpts, BatchScheduler, WeightMode};
-pub use forward::{CpuEngine, Engine, Scratch};
+pub use forward::{CpuEngine, Engine};
 pub use generate::{generate, GenOutput, Sampler};
 pub use llamaf::LlamafEngine;
 pub use ppl::perplexity;

@@ -20,7 +20,7 @@ use llamaf::engine::generate::{generate, Sampler};
 use llamaf::engine::llamaf::LlamafEngine;
 use llamaf::ps::{ScalarGqmv, ThreadedGqmv};
 use llamaf::runtime::Runtime;
-use llamaf::sched::SchedMode;
+use llamaf::sched::{SchedMode, StageGranularity};
 use llamaf::tokenizer::Tokenizer;
 use llamaf::util::ThreadPool;
 
@@ -32,19 +32,23 @@ USAGE: llamaf <command> [options]
 COMMANDS
   generate  --ckpt <lfq8> --prompt <text> [--steps N] [--engine ps|llamaf]
             [--sync|--async] [--prefetch-depth N]
+            [--stream-granularity layer|matrix]
             [--top-p P --temperature T --seed S]
   serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
             [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
-            [--max-batch B] [--prefetch-depth N] [--sync | --resident]
+            [--max-batch B] [--prefetch-depth N]
+            [--stream-granularity layer|matrix] [--sync | --resident]
             ps/ps-scalar/sim: concurrent requests are folded into
             step-synchronous batched decoding over one shared weight
             copy (up to B lanes/step, weights staged once per step by
             a persistent prefetch worker running a depth-N staging
-            ring: --prefetch-depth N keeps N-1 layer transfers in
-            flight, default 2 = double buffering; --sync disables the
-            async layer prefetch, --resident skips staging entirely
-            and serves zero-copy resident weights); llamaf: sequential
-            batch-1 streaming
+            ring: --prefetch-depth N keeps N-1 transfers in flight,
+            default 2 = double buffering; --stream-granularity matrix
+            streams per-matrix chunks so transfers overlap compute
+            WITHIN a layer, layer streams whole layers; --sync
+            disables the async prefetch, --resident skips staging
+            entirely and serves zero-copy resident weights); llamaf:
+            sequential batch-1 streaming
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
@@ -93,7 +97,8 @@ fn build_engine(args: &Args) -> Result<Box<dyn Engine>> {
             let rt = Arc::new(Runtime::load(Path::new(art))?);
             let mode = if args.flag("sync") { SchedMode::Sync } else { SchedMode::Async };
             let depth = prefetch_depth(args)?;
-            Ok(Box::new(LlamafEngine::open_with_depth(path, rt, mode, depth)?))
+            let gran = stream_granularity(args)?;
+            Ok(Box::new(LlamafEngine::open_with_opts(path, rt, mode, depth, gran)?))
         }
         other => bail!("unknown engine '{other}' (ps | ps-scalar | sim | llamaf)"),
     }
@@ -123,6 +128,15 @@ fn prefetch_depth(args: &Args) -> Result<usize> {
     let depth = args.get_usize("prefetch-depth", llamaf::sched::DEFAULT_PREFETCH_DEPTH)?;
     anyhow::ensure!(depth >= 1, "--prefetch-depth must be >= 1");
     Ok(depth)
+}
+
+/// Parse `--stream-granularity` (staging unit, default layer).
+fn stream_granularity(args: &Args) -> Result<StageGranularity> {
+    match args.get_or("stream-granularity", "layer") {
+        "layer" => Ok(StageGranularity::Layer),
+        "matrix" => Ok(StageGranularity::Matrix),
+        other => bail!("--stream-granularity must be 'layer' or 'matrix' (got '{other}')"),
+    }
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -171,6 +185,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_batch: args.get_usize("max-batch", 8)?,
                 sync_staging: args.flag("sync"),
                 prefetch_depth: prefetch_depth(args)?,
+                granularity: stream_granularity(args)?,
                 resident: args.flag("resident"),
             };
             let threads = args.get_usize("threads", 4)?;
@@ -187,7 +202,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let server = llamaf::server::Server::bind(addr, qm.cfg.vocab_size)?;
             eprintln!(
                 "llamaf serving on {} ({} x{} workers, batch<= {}, {} weights, prefetch \
-                 depth {}, {} pooled sessions, queue {}) — \
+                 depth {}, {}-granular staging, {} pooled sessions, queue {}) — \
                  protocol: GEN/SGEN <steps> <prompt> | STATS | PING | SHUTDOWN | QUIT",
                 server.local_addr()?,
                 engine_kind,
@@ -195,6 +210,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 opts.max_batch,
                 if opts.resident { "resident" } else { "streamed" },
                 opts.prefetch_depth,
+                opts.granularity.label(),
                 opts.max_sessions,
                 opts.queue_depth,
             );

@@ -303,9 +303,24 @@ pub struct BatchMetrics {
     /// Latest lifetime-mean armed-ring occupancy of the streamer,
     /// milli-units (gauge; 0 for sync staging and resident serving).
     ring_occ_milli: AtomicU64,
+    /// Lifetime worker-side staging time of the shared streamer (ns,
+    /// gauge) — the denominator of [`BatchMetrics::stage_mb_s`].
+    transfer_ns: AtomicU64,
+    /// Visible staging wait attributed to each matrix unit (ns, gauges),
+    /// mirroring `StreamerStats::wait_by_unit_s` — "which matrix stalls".
+    unit_wait_ns: [AtomicU64; MAT_WAIT_UNITS],
+    /// Streaming granularity label; empty until the decode thread starts
+    /// a streamer (resident serving never sets it).
+    granularity: Mutex<&'static str>,
     occupancy: Mutex<Histogram>,
     profile: Mutex<ForwardProfile>,
 }
+
+/// Matrix-granular wait buckets exported through `STATS` (`mat_wait_ms`):
+/// norms, fused QKV, Wo, fused W1‖W3, W2 — must equal
+/// `sched::STAGE_UNITS` (the compiler pins the array widths together at
+/// the decode-loop call site).
+pub const MAT_WAIT_UNITS: usize = 5;
 
 impl BatchMetrics {
     /// Record one batched step that carried `occupancy` lanes, staged
@@ -376,6 +391,67 @@ impl BatchMetrics {
         self.ring_depth.load(Ordering::Relaxed)
     }
 
+    /// Record the streamer's lifetime staging-transfer time (gauge,
+    /// sampled once per step).
+    pub fn set_staging_time(&self, total_s: f64) {
+        let ns = if total_s.is_finite() && total_s > 0.0 { (total_s * 1e9) as u64 } else { 0 };
+        self.transfer_ns.store(ns, Ordering::Relaxed);
+    }
+
+    /// Lifetime worker-side staging seconds (0 under resident serving).
+    pub fn staging_time_s(&self) -> f64 {
+        self.transfer_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Staging bandwidth in MB/s: bytes staged over worker transfer time.
+    /// 0.0 whenever nothing has been transferred (resident serving, a
+    /// fresh scheduler) — the zero case never divides by zero.
+    pub fn stage_mb_s(&self) -> f64 {
+        let t = self.staging_time_s();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.bytes_staged() as f64 / 1e6 / t
+        }
+    }
+
+    /// Record the per-matrix-unit visible staging waits (gauges, sampled
+    /// once per step from the streamer's lifetime counters).
+    pub fn set_unit_waits(&self, waits_s: [f64; MAT_WAIT_UNITS]) {
+        for (cell, w) in self.unit_wait_ns.iter().zip(waits_s) {
+            let ns = if w.is_finite() && w > 0.0 { (w * 1e9) as u64 } else { 0 };
+            cell.store(ns, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-matrix-unit visible staging waits in milliseconds (norms, QKV,
+    /// Wo, W1‖W3, W2) — under layer-granular staging everything lands in
+    /// the first bucket.
+    pub fn unit_wait_ms(&self) -> [f64; MAT_WAIT_UNITS] {
+        let mut out = [0.0; MAT_WAIT_UNITS];
+        for (o, cell) in out.iter_mut().zip(&self.unit_wait_ns) {
+            *o = cell.load(Ordering::Relaxed) as f64 / 1e6;
+        }
+        out
+    }
+
+    /// Record the streaming granularity label (once, at decode-thread
+    /// start; never set under resident serving).
+    pub fn set_granularity(&self, label: &'static str) {
+        *self.granularity.lock().unwrap() = label;
+    }
+
+    /// Streaming granularity label: `layer`, `matrix`, or `none` when no
+    /// staging pipeline exists (resident serving).
+    pub fn granularity(&self) -> &'static str {
+        let g = *self.granularity.lock().unwrap();
+        if g.is_empty() {
+            "none"
+        } else {
+            g
+        }
+    }
+
     /// Mean armed-ring occupancy observed by the streamer — > 0 means the
     /// prefetch pipeline genuinely ran ahead of compute.
     pub fn ring_occupancy(&self) -> f64 {
@@ -408,10 +484,12 @@ impl BatchMetrics {
         let prof = self.profile();
         let total = prof.total();
         let matrix_pct = if total > 0.0 { 100.0 * prof.matrix_s / total } else { 0.0 };
+        let mw = self.unit_wait_ms();
         format!(
             "batch_steps={} batch_tokens={} batch_mean={:.2} batch_max={:.0} \
              bytes_staged={} bytes_per_tok={:.0} prefetch_wait_ms={:.3} \
-             prefetch_depth={} ring_occ={:.2} matrix_pct={:.0}",
+             prefetch_depth={} ring_occ={:.2} granularity={} stage_mb_s={:.2} \
+             mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} matrix_pct={:.0}",
             self.steps(),
             self.lane_tokens(),
             self.occupancy_mean(),
@@ -421,6 +499,13 @@ impl BatchMetrics {
             1e3 * self.prefetch_wait_s(),
             self.ring_depth(),
             self.ring_occupancy(),
+            self.granularity(),
+            self.stage_mb_s(),
+            mw[0],
+            mw[1],
+            mw[2],
+            mw[3],
+            mw[4],
             matrix_pct,
         )
     }
@@ -528,8 +613,13 @@ mod tests {
         assert!((m.prefetch_wait_s() - 0.02).abs() < 1e-6, "{}", m.prefetch_wait_s());
         m.set_ring_depth(4);
         m.set_ring_occupancy(2.25);
+        m.set_granularity("matrix");
+        m.set_staging_time(0.005);
+        m.set_unit_waits([0.001, 0.002, 0.0, 0.0, 0.0005]);
         assert_eq!(m.ring_depth(), 4);
         assert!((m.ring_occupancy() - 2.25).abs() < 1e-9);
+        // 10_000 bytes over 5 ms = 2 MB/s
+        assert!((m.stage_mb_s() - 2.0).abs() < 1e-6, "{}", m.stage_mb_s());
         let s = m.summary();
         for field in [
             "batch_steps=10",
@@ -539,6 +629,9 @@ mod tests {
             "prefetch_wait_ms=20.000",
             "prefetch_depth=4",
             "ring_occ=2.25",
+            "granularity=matrix",
+            "stage_mb_s=2.00",
+            "mat_wait_ms=1.000/2.000/0.000/0.000/0.500",
         ] {
             assert!(s.contains(field), "summary missing {field}: {s}");
         }
@@ -556,6 +649,24 @@ mod tests {
         assert_eq!(m.bytes_per_token(), 0.0);
         assert_eq!(m.occupancy_mean(), 0.0);
         assert_eq!(m.steps(), 0);
+        assert_eq!(m.granularity(), "none", "unset granularity reads as none");
+        assert_eq!(m.unit_wait_ms(), [0.0; MAT_WAIT_UNITS]);
+    }
+
+    #[test]
+    fn stage_mb_s_zero_transfer_never_divides() {
+        // bytes but no recorded transfer time (resident serving, or the
+        // gauge not yet sampled): bandwidth must read 0, not inf/NaN
+        let m = BatchMetrics::default();
+        m.record_step(1, 1_000_000, 0.0, &ForwardProfile::default());
+        assert_eq!(m.stage_mb_s(), 0.0);
+        m.set_staging_time(0.0);
+        assert_eq!(m.stage_mb_s(), 0.0);
+        m.set_staging_time(f64::NAN);
+        assert_eq!(m.stage_mb_s(), 0.0, "garbage staging time is discarded");
+        // 1 MB in 0.5 s -> 2 MB/s
+        m.set_staging_time(0.5);
+        assert!((m.stage_mb_s() - 2.0).abs() < 1e-9, "{}", m.stage_mb_s());
     }
 
     #[test]

@@ -6,4 +6,6 @@ pub mod weights;
 
 pub use config::{LlamaConfig, MatKind, NANO, TINYLLAMA_1_1B};
 pub use kv::KvCache;
-pub use weights::{FloatLayer, FloatModel, QuantLayer, QuantModel};
+pub use weights::{
+    FloatLayer, FloatModel, LayerChunk, MatrixUnit, QuantLayer, QuantModel, MATRIX_UNITS,
+};

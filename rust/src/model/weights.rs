@@ -32,6 +32,97 @@ impl QuantLayer {
             + self.w2.stream_bytes()
             + 4 * (self.att_norm.len() + self.ffn_norm.len())
     }
+
+    /// Clone one matrix-granular chunk of this layer — how in-memory
+    /// fetchers serve sub-layer staging requests (the disk path reads the
+    /// same chunks directly via `ckpt::Q8LayerSource::fetch_matrix`).
+    pub fn chunk(&self, unit: MatrixUnit) -> LayerChunk {
+        match unit {
+            MatrixUnit::Norms => LayerChunk::Norms {
+                att_norm: self.att_norm.clone(),
+                ffn_norm: self.ffn_norm.clone(),
+            },
+            MatrixUnit::Qkv => LayerChunk::Mat(self.wqkv.clone()),
+            MatrixUnit::Wo => LayerChunk::Mat(self.wo.clone()),
+            MatrixUnit::W13 => LayerChunk::Mat(self.w13.clone()),
+            MatrixUnit::W2 => LayerChunk::Mat(self.w2.clone()),
+        }
+    }
+}
+
+/// Matrix-granular staging unit within one transformer layer — the
+/// sub-layer pipeline's unit of transfer (`--stream-granularity matrix`).
+/// Order matches Algorithm 2's first use of each piece, which is also the
+/// order the streaming ring delivers chunks in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatrixUnit {
+    /// Both norm vectors (`att_norm` + `ffn_norm`) — tiny, staged first so
+    /// the attention RMSNorm can start before any matrix arrives.
+    Norms,
+    /// The fused Wq‖Wk‖Wv block.
+    Qkv,
+    /// Wo.
+    Wo,
+    /// The fused W1‖W3 block.
+    W13,
+    /// W2.
+    W2,
+}
+
+/// All matrix-granular units of one layer, in consumption order.
+pub const MATRIX_UNITS: [MatrixUnit; 5] =
+    [MatrixUnit::Norms, MatrixUnit::Qkv, MatrixUnit::Wo, MatrixUnit::W13, MatrixUnit::W2];
+
+impl MatrixUnit {
+    /// Position of this unit in the per-layer consumption order
+    /// (0 = [`MatrixUnit::Norms`] … 4 = [`MatrixUnit::W2`]).
+    pub fn index(self) -> usize {
+        match self {
+            MatrixUnit::Norms => 0,
+            MatrixUnit::Qkv => 1,
+            MatrixUnit::Wo => 2,
+            MatrixUnit::W13 => 3,
+            MatrixUnit::W2 => 4,
+        }
+    }
+
+    /// Short stable label (STATS / bench output).
+    pub fn name(self) -> &'static str {
+        match self {
+            MatrixUnit::Norms => "norms",
+            MatrixUnit::Qkv => "qkv",
+            MatrixUnit::Wo => "wo",
+            MatrixUnit::W13 => "w13",
+            MatrixUnit::W2 => "w2",
+        }
+    }
+}
+
+/// One fetched matrix-granular chunk: either the two norm vectors or one
+/// fused weight matrix (which one is determined by the [`MatrixUnit`] the
+/// caller requested).
+pub enum LayerChunk {
+    /// The layer's two norm vectors.
+    Norms {
+        /// Attention RMSNorm weights (dim).
+        att_norm: Vec<f32>,
+        /// FFN RMSNorm weights (dim).
+        ffn_norm: Vec<f32>,
+    },
+    /// One (possibly fused) quantized weight matrix.
+    Mat(QuantizedTensor),
+}
+
+impl LayerChunk {
+    /// Bytes of this chunk's streamed representation — the per-chunk
+    /// analogue of [`QuantLayer::stream_bytes`]; the five units of a layer
+    /// sum exactly to the whole layer's figure.
+    pub fn stream_bytes(&self) -> usize {
+        match self {
+            LayerChunk::Norms { att_norm, ffn_norm } => 4 * (att_norm.len() + ffn_norm.len()),
+            LayerChunk::Mat(t) => t.stream_bytes(),
+        }
+    }
 }
 
 /// Full quantized model (all layers resident).
@@ -230,6 +321,34 @@ mod tests {
         let qm = QuantModel::synthetic(NANO, 4);
         let per_layer = qm.layers[0].stream_bytes();
         assert_eq!(per_layer, NANO.layer_stream_bytes());
+    }
+
+    #[test]
+    fn chunks_partition_the_layer() {
+        let cfg = tiny_cfg();
+        let qm = QuantModel::from_float(&FloatModel::random(cfg, 6));
+        let layer = &qm.layers[0];
+        let total: usize = MATRIX_UNITS.iter().map(|&u| layer.chunk(u).stream_bytes()).sum();
+        assert_eq!(total, layer.stream_bytes(), "unit chunks must tile the layer exactly");
+        match layer.chunk(MatrixUnit::Qkv) {
+            LayerChunk::Mat(t) => assert_eq!(t, layer.wqkv),
+            _ => panic!("Qkv chunk must be a matrix"),
+        }
+        match layer.chunk(MatrixUnit::Norms) {
+            LayerChunk::Norms { att_norm, ffn_norm } => {
+                assert_eq!(att_norm, layer.att_norm);
+                assert_eq!(ffn_norm, layer.ffn_norm);
+            }
+            _ => panic!("Norms chunk must carry both norm vectors"),
+        }
+    }
+
+    #[test]
+    fn matrix_unit_order_is_consumption_order() {
+        for (i, u) in MATRIX_UNITS.iter().enumerate() {
+            assert_eq!(u.index(), i);
+        }
+        assert_eq!(MatrixUnit::W2.name(), "w2");
     }
 
     #[test]

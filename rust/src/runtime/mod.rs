@@ -28,6 +28,28 @@ pub use sim::{DeviceWeights, PjrtGqmv, Runtime};
 /// A (rows, cols) GQMV shape key.
 pub type ShapeKey = (usize, usize);
 
+/// Drive one fused same-input launch over a group of pre-staged device
+/// buffers: validate the group shape, then run `launch` per member.
+/// Shared by both runtime backends (`sim` and `pjrt`) so the
+/// split-tensor fused-launch contract — and its error message — cannot
+/// drift between them.
+pub(crate) fn drive_fused_launch<D>(
+    dws: &[&D],
+    outs: &mut [&mut [f32]],
+    mut launch: impl FnMut(&D, &mut [f32]) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !dws.is_empty() && dws.len() == outs.len(),
+        "malformed fused device group ({} weights, {} outputs)",
+        dws.len(),
+        outs.len()
+    );
+    for (dw, out) in dws.iter().copied().zip(outs.iter_mut()) {
+        launch(dw, &mut **out)?;
+    }
+    Ok(())
+}
+
 /// Parse `gqmv_m{M}_n{N}_g{GS}.hlo.txt` into (M, N).
 pub fn parse_kernel_filename(name: &str) -> Option<ShapeKey> {
     let rest = name.strip_prefix("gqmv_m")?;

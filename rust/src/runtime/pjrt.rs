@@ -182,6 +182,21 @@ impl Runtime {
         out.copy_from_slice(&v);
         Ok(())
     }
+
+    /// Split-tensor fused launch: execute a same-input group of pre-staged
+    /// matrices back to back as one logical dispatch.  Bit-identical to
+    /// per-matrix [`Runtime::gqmv_device`] calls by row independence; a
+    /// true single-kernel multi-output launch needs a fused HLO artifact
+    /// (tracked in ROADMAP).
+    pub fn gqmv_device_fused(
+        &self,
+        dws: &[&DeviceWeights],
+        xq: &[i8],
+        xs: &[f32],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        super::drive_fused_launch(dws, outs, |dw, out| self.gqmv_device(dw, xq, xs, out))
+    }
 }
 
 /// `GqmvExec` adapter that uploads weights on every call — models the

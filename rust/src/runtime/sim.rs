@@ -145,6 +145,24 @@ impl Runtime {
         }
         Ok(())
     }
+
+    /// Split-tensor fused launch: execute a same-input group of pre-staged
+    /// matrices as ONE device dispatch over their stacked row space (the
+    /// device twin of [`crate::ps::gqmv::GqmvExec::gqmv_fused`]).  Every
+    /// output row still comes from the Algorithm-1 cast chain of
+    /// [`Runtime::gqmv_device`], so the fused launch is bit-identical to
+    /// per-matrix launches by row independence.  On the host simulator the
+    /// members simply run back to back (a host "launch" is free); the
+    /// PJRT backend amortizes its device-lock round-trips the same way.
+    pub fn gqmv_device_fused(
+        &self,
+        dws: &[&DeviceWeights],
+        xq: &[i8],
+        xs: &[f32],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        super::drive_fused_launch(dws, outs, |dw, out| self.gqmv_device(dw, xq, xs, out))
+    }
 }
 
 /// `GqmvExec` adapter that stages weights on every call — models the

@@ -7,7 +7,7 @@
 //!
 //! * **Sync** — stage layer *l*, then compute layer *l* (Fig. 2 top).
 //! * **Async** — while layer *l* computes, the prefetch worker stages
-//!   layer *l+1* (wrapping to layer 0 for the next token), hiding the
+//!   upcoming work (wrapping to layer 0 for the next token), hiding the
 //!   transfer behind the kernel (Fig. 2 bottom).  First-layer weights are
 //!   staged at start-up, exactly as the paper initializes its buffers.
 //!
@@ -19,15 +19,35 @@
 //!
 //! The async schedule runs the worker ahead through a **depth-N staging
 //! ring** ([`Streamer::with_depth`], CLI `--prefetch-depth N`): up to
-//! N−1 future layers are requested while the current one computes, so a
-//! single slow transfer (a DDR stall, a disk hiccup in `DiskFetcher`)
-//! drains the ring instead of stalling the compute thread.  Depth 2 is
-//! the classic double buffer (one resident layer + one in flight) and
-//! the default; depth 1 degenerates to inline staging.  `layer(li)` pops
-//! the ring in order, discarding it wholesale whenever the requested
-//! sequence breaks (out-of-order access, [`Streamer::reset`]);
-//! [`StreamerStats`] tracks ring occupancy and buckets every prefetch
-//! wait by the occupancy at the time of the wait.
+//! N−1 future staging units are requested while the current one computes,
+//! so a single slow transfer (a DDR stall, a disk hiccup in
+//! [`DiskFetcher`]) drains the ring instead of stalling the compute
+//! thread.  Depth 2 is the classic double buffer and the default; depth 1
+//! degenerates to inline staging.
+//!
+//! What a *unit* of staging is depends on the [`StageGranularity`]
+//! (CLI `--stream-granularity`):
+//!
+//! * **Layer** (default) — the ring holds whole layers, exactly the
+//!   classic schedule: within a layer, the first GQMV waits on the full
+//!   ~5-chunk transfer.
+//! * **Matrix** — the **matrix is the unit of staging**: each layer is
+//!   streamed as five independent chunks (norm vectors, fused Wq‖Wk‖Wv,
+//!   Wo, fused W1‖W3, W2, see [`MatrixUnit`]) and the ring depth counts
+//!   matrices.  The worker streams chunk *k+1* while compute runs on
+//!   chunk *k*, so the wait that gates a layer's *first* GQMV shrinks
+//!   from "the whole layer" to "the first chunk" — the paper's fully
+//!   pipelined MVM engine, applied below layer granularity.  Chunks are
+//!   fused exactly as the layer reader fuses them, so matrix-granular
+//!   staging is bit-identical to layer-granular at every depth.
+//!
+//! The consume side ([`Streamer::unit`] / [`Streamer::layer`]) pops the
+//! ring strictly in walk order, discarding it wholesale whenever the
+//! requested sequence breaks (out-of-order access, [`Streamer::reset`]);
+//! [`StreamerStats`] tracks ring occupancy, buckets every prefetch wait
+//! by the occupancy at the time of the wait, and attributes every visible
+//! wait to the matrix unit being consumed (`wait_by_unit_s`) so STATS can
+//! show exactly which matrix stalls.
 //!
 //! The same module also provides the *modeled* timeline
 //! ([`sim_token_time`]) used to regenerate Fig. 2 / Table VI at paper
@@ -44,7 +64,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::ckpt::Q8LayerSource;
 use crate::fpga::{AxiModel, PlConfig};
-use crate::model::{LlamaConfig, MatKind, QuantLayer};
+use crate::model::{LayerChunk, LlamaConfig, MatKind, MatrixUnit, QuantLayer, MATRIX_UNITS};
+use crate::quant::QuantizedTensor;
 use crate::runtime::{DeviceWeights, Runtime};
 
 /// Scheduling policy for weight staging.
@@ -52,31 +73,178 @@ use crate::runtime::{DeviceWeights, Runtime};
 pub enum SchedMode {
     /// Stage layer *l*, then compute layer *l* (Fig. 2 top).
     Sync,
-    /// Prefetch layer *l+1* while layer *l* computes (Fig. 2 bottom).
+    /// Prefetch upcoming staging units while layer *l* computes (Fig. 2
+    /// bottom, generalized to the depth-N ring).
     Async,
 }
 
-/// A layer staged on the device: host copies (norm vectors + shapes) plus
-/// device-resident GQMV weight buffers.
-pub struct PreparedLayer {
-    /// Host-side staged copy (norm vectors + the quantized matrices).
-    pub host: QuantLayer,
-    /// Device buffer of the fused Wq‖Wk‖Wv matrix.
-    pub wqkv: DeviceWeights,
-    /// Device buffer of Wo.
-    pub wo: DeviceWeights,
-    /// Device buffer of the fused W1‖W3 matrix.
-    pub w13: DeviceWeights,
-    /// Device buffer of W2.
-    pub w2: DeviceWeights,
+/// Unit of staging the ring pipelines (CLI `--stream-granularity`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StageGranularity {
+    /// Whole layers — the classic Fig. 2 schedule (default).
+    #[default]
+    Layer,
+    /// Matrix-granular chunks ([`MatrixUnit`]): the ring depth counts
+    /// matrices and compute overlaps transfers *within* a layer.
+    Matrix,
+}
+
+impl StageGranularity {
+    /// Stable label for STATS / bench output.
+    pub fn label(self) -> &'static str {
+        match self {
+            StageGranularity::Layer => "layer",
+            StageGranularity::Matrix => "matrix",
+        }
+    }
+}
+
+/// Matrix-granular units per layer ([`MATRIX_UNITS`]) — the size of
+/// [`StreamerStats::wait_by_unit_s`].
+pub const STAGE_UNITS: usize = MATRIX_UNITS.len();
+
+/// One unit of staging work the prefetch worker performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageUnit {
+    /// Stage one whole layer (layer granularity).
+    Layer(usize),
+    /// Stage one matrix-granular chunk of a layer (matrix granularity).
+    Matrix(usize, MatrixUnit),
+}
+
+/// A staged weight matrix: the host copy (norm-free quantized tensor the
+/// CPU backends consume) plus its device buffer.  The buffer is behind an
+/// `Arc` so a device-side executor can hold it across provider calls
+/// (see `engine::llamaf::DeviceGqmv`).
+pub struct PreparedMatrix {
+    /// Host-side staged copy of the (possibly fused) matrix.
+    pub host: QuantizedTensor,
+    /// Device-resident buffer uploaded by the prefetch worker.
+    pub dev: Arc<DeviceWeights>,
+}
+
+/// The staged layer currently lent to compute.  Under matrix granularity
+/// its parts fill in one chunk at a time — in consumption order, so
+/// compute can run on the fused QKV block while W2 is still in flight;
+/// under layer granularity everything arrives at once.
+pub struct StagedLayer {
+    li: usize,
+    /// Staging units consumed so far (contiguous from the walk start:
+    /// 0..=1 under layer granularity, 0..=[`STAGE_UNITS`] under matrix).
+    filled: usize,
+    att_norm: Option<Vec<f32>>,
+    ffn_norm: Option<Vec<f32>>,
+    wqkv: Option<PreparedMatrix>,
+    wo: Option<PreparedMatrix>,
+    w13: Option<PreparedMatrix>,
+    w2: Option<PreparedMatrix>,
+}
+
+impl StagedLayer {
+    fn empty(li: usize) -> Self {
+        StagedLayer {
+            li,
+            filled: 0,
+            att_norm: None,
+            ffn_norm: None,
+            wqkv: None,
+            wo: None,
+            w13: None,
+            w2: None,
+        }
+    }
+
+    /// Layer index this staged layer serves.
+    pub fn li(&self) -> usize {
+        self.li
+    }
+
+    /// Attention RMSNorm vector.  Panics if the norms chunk has not been
+    /// staged yet (obtain the layer via [`Streamer::unit`] first).
+    pub fn att_norm(&self) -> &[f32] {
+        self.att_norm.as_deref().expect("norms not staged")
+    }
+
+    /// FFN RMSNorm vector.  Panics if the norms chunk is not staged.
+    pub fn ffn_norm(&self) -> &[f32] {
+        self.ffn_norm.as_deref().expect("norms not staged")
+    }
+
+    /// Fused Wq‖Wk‖Wv.  Panics if the chunk is not staged.
+    pub fn wqkv(&self) -> &PreparedMatrix {
+        self.wqkv.as_ref().expect("wqkv not staged")
+    }
+
+    /// Wo.  Panics if the chunk is not staged.
+    pub fn wo(&self) -> &PreparedMatrix {
+        self.wo.as_ref().expect("wo not staged")
+    }
+
+    /// Fused W1‖W3.  Panics if the chunk is not staged.
+    pub fn w13(&self) -> &PreparedMatrix {
+        self.w13.as_ref().expect("w13 not staged")
+    }
+
+    /// W2.  Panics if the chunk is not staged.
+    pub fn w2(&self) -> &PreparedMatrix {
+        self.w2.as_ref().expect("w2 not staged")
+    }
+
+    /// Fill one staged payload into this layer, enforcing walk order.
+    fn fill(&mut self, payload: StagedPayload) -> Result<()> {
+        match payload {
+            StagedPayload::Layer(p) => {
+                anyhow::ensure!(self.filled == 0, "whole-layer payload into a partial layer");
+                let LayerParts { att_norm, ffn_norm, wqkv, wo, w13, w2 } = *p;
+                self.att_norm = Some(att_norm);
+                self.ffn_norm = Some(ffn_norm);
+                self.wqkv = Some(wqkv);
+                self.wo = Some(wo);
+                self.w13 = Some(w13);
+                self.w2 = Some(w2);
+                self.filled = 1; // layer granularity: one unit covers everything
+            }
+            StagedPayload::Norms { att_norm, ffn_norm } => {
+                anyhow::ensure!(self.filled == MatrixUnit::Norms.index(), "norms out of order");
+                self.att_norm = Some(att_norm);
+                self.ffn_norm = Some(ffn_norm);
+                self.filled += 1;
+            }
+            StagedPayload::Mat(u, pm) => {
+                anyhow::ensure!(
+                    self.filled == u.index(),
+                    "chunk {u:?} out of order (filled {})",
+                    self.filled
+                );
+                match u {
+                    MatrixUnit::Qkv => self.wqkv = Some(pm),
+                    MatrixUnit::Wo => self.wo = Some(pm),
+                    MatrixUnit::W13 => self.w13 = Some(pm),
+                    MatrixUnit::W2 => self.w2 = Some(pm),
+                    MatrixUnit::Norms => bail!("norms delivered as a matrix chunk"),
+                }
+                self.filled += 1;
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Source of host-side layer weights ("DDR").
 pub trait LayerFetcher: Send {
     /// Produce a host copy of layer `layer`'s weights.
     fn fetch(&mut self, layer: usize) -> Result<QuantLayer>;
+
     /// Number of transformer layers this source serves.
     fn n_layers(&self) -> usize;
+
+    /// Produce one matrix-granular chunk of layer `layer`.  The default
+    /// fetches the whole layer and carves the chunk out (correct but
+    /// unamortized); real sources override it with targeted reads
+    /// ([`Q8LayerSource::fetch_matrix`]) or per-chunk clones.
+    fn fetch_chunk(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
+        Ok(self.fetch(layer)?.chunk(unit))
+    }
 }
 
 /// Streams layers from an LFQ8 file (real disk I/O per fetch).
@@ -104,6 +272,11 @@ impl LayerFetcher for DiskFetcher {
     fn n_layers(&self) -> usize {
         self.src.cfg.n_layers
     }
+
+    fn fetch_chunk(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
+        // targeted read: only the chunk's own byte segments leave the disk
+        self.src.fetch_matrix(layer, unit)
+    }
 }
 
 /// Serves layers from memory, cloning on fetch (models the memcpy from the
@@ -124,6 +297,13 @@ impl LayerFetcher for MemFetcher {
 
     fn n_layers(&self) -> usize {
         self.layers.len()
+    }
+
+    fn fetch_chunk(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
+        self.layers
+            .get(layer)
+            .map(|l| l.chunk(unit))
+            .with_context(|| format!("layer {layer} out of range"))
     }
 }
 
@@ -150,17 +330,17 @@ impl LayerFetcher for ModelFetcher {
     fn n_layers(&self) -> usize {
         self.model.layers.len()
     }
+
+    fn fetch_chunk(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
+        self.model
+            .layers
+            .get(layer)
+            .map(|l| l.chunk(unit))
+            .with_context(|| format!("layer {layer} out of range"))
+    }
 }
 
-fn stage(rt: &Runtime, host: QuantLayer) -> Result<PreparedLayer> {
-    let wqkv = rt.upload(&host.wqkv)?;
-    let wo = rt.upload(&host.wo)?;
-    let w13 = rt.upload(&host.w13)?;
-    let w2 = rt.upload(&host.w2)?;
-    Ok(PreparedLayer { host, wqkv, wo, w13, w2 })
-}
-
-/// Default staging-pipeline depth: the classic double buffer (one layer
+/// Default staging-pipeline depth: the classic double buffer (one unit
 /// resident, one prefetch in flight).
 pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
 
@@ -189,10 +369,18 @@ pub struct StreamerStats {
     /// not hide the transfer (truly bandwidth-bound), while waits piled
     /// at occupancy 1 mean more depth would help.
     pub prefetch_wait_by_occ_s: [f64; RING_WAIT_BUCKETS],
+    /// Visible (blocked) staging wait attributed to the [`MatrixUnit`]
+    /// being consumed when the wait occurred — "which matrix stalls".
+    /// Under layer granularity the whole-layer wait gates the layer's
+    /// first unit, so it all lands in bucket 0; under matrix granularity
+    /// waits spread across the five buckets and the *first-matrix* share
+    /// (buckets 0+1: norms + QKV) is what the sub-layer pipeline shrinks.
+    pub wait_by_unit_s: [f64; STAGE_UNITS],
     /// Total staging work performed by the worker (foreground +
     /// background).
     pub total_transfer_s: f64,
-    /// Number of layer stagings performed.
+    /// Number of stagings performed (whole layers under layer
+    /// granularity, per-matrix chunks under matrix granularity).
     pub transfers: u64,
     /// Total weight bytes staged host→device (streamed representation:
     /// int8 data + f32 scales + norms).  The batched-decoding win is this
@@ -204,18 +392,18 @@ pub struct StreamerStats {
     pub spawns: u64,
     /// Configured staging-pipeline depth (resident slot + ring capacity).
     pub ring_depth: usize,
-    /// Sum over staged-layer consumes of the armed ring occupancy at
-    /// consume time (0 whenever the needed layer was not armed — inline
+    /// Sum over staged-unit consumes of the armed ring occupancy at
+    /// consume time (0 whenever the needed unit was not armed — inline
     /// stagings and all of sync mode).
     pub ring_occupancy_sum: u64,
-    /// Number of occupancy samples (one per staged-layer consume).
+    /// Number of occupancy samples (one per staged-unit consume).
     pub ring_samples: u64,
 }
 
 impl StreamerStats {
-    /// Mean armed-ring occupancy observed when layers were consumed:
-    /// > 0 means the prefetch pipeline was actually running ahead
-    /// (0 for sync staging and resident serving; approaches
+    /// Mean armed-ring occupancy observed when staging units were
+    /// consumed: > 0 means the prefetch pipeline was actually running
+    /// ahead (0 for sync staging and resident serving; approaches
     /// `ring_depth - 1` when transfers outpace compute).
     pub fn ring_occupancy_mean(&self) -> f64 {
         if self.ring_samples == 0 {
@@ -224,22 +412,72 @@ impl StreamerStats {
             self.ring_occupancy_sum as f64 / self.ring_samples as f64
         }
     }
+
+    /// Staging bandwidth in MB/s: bytes staged over worker-side transfer
+    /// time.  0.0 before anything has been transferred (a fresh streamer,
+    /// resident serving), so the zero case never divides by zero.
+    pub fn stage_mb_s(&self) -> f64 {
+        if self.total_transfer_s <= 0.0 {
+            0.0
+        } else {
+            self.staged_bytes as f64 / 1e6 / self.total_transfer_s
+        }
+    }
 }
 
 /// Requests the compute side sends to the persistent prefetch worker.
 enum StageReq {
-    /// Fetch + stage one layer and send it back.
-    Stage(usize),
+    /// Fetch + stage one unit and send it back.  `slot` is the ring-walk
+    /// index echoed in the response (consume-order sanity check).
+    Stage { slot: usize, unit: StageUnit },
     /// Exit the worker loop (shutdown handshake).
     Shutdown,
 }
 
+/// A fully staged layer's parts (the whole-layer payload).
+struct LayerParts {
+    att_norm: Vec<f32>,
+    ffn_norm: Vec<f32>,
+    wqkv: PreparedMatrix,
+    wo: PreparedMatrix,
+    w13: PreparedMatrix,
+    w2: PreparedMatrix,
+}
+
+/// What one staging request produced.
+enum StagedPayload {
+    /// A whole layer (layer granularity).
+    Layer(Box<LayerParts>),
+    /// The two norm vectors (matrix granularity).
+    Norms { att_norm: Vec<f32>, ffn_norm: Vec<f32> },
+    /// One fused weight matrix (matrix granularity).
+    Mat(MatrixUnit, PreparedMatrix),
+}
+
+impl StagedPayload {
+    /// Streamed bytes of this payload (chunks of one layer sum exactly to
+    /// the whole layer's `stream_bytes`).
+    fn stream_bytes(&self) -> usize {
+        match self {
+            StagedPayload::Layer(p) => {
+                4 * (p.att_norm.len() + p.ffn_norm.len())
+                    + p.wqkv.host.stream_bytes()
+                    + p.wo.host.stream_bytes()
+                    + p.w13.host.stream_bytes()
+                    + p.w2.host.stream_bytes()
+            }
+            StagedPayload::Norms { att_norm, ffn_norm } => 4 * (att_norm.len() + ffn_norm.len()),
+            StagedPayload::Mat(_, pm) => pm.host.stream_bytes(),
+        }
+    }
+}
+
 /// One completed staging, sent back from the worker.
 struct StagedResp {
-    /// Which layer this response answers (sanity-checked by the receiver).
-    layer: usize,
-    /// The staged layer, or the fetch/upload failure.
-    result: Result<PreparedLayer>,
+    /// Which ring slot this response answers (sanity-checked on consume).
+    slot: usize,
+    /// The staged payload, or the fetch/upload failure.
+    result: Result<StagedPayload>,
     /// Worker-side wall time of the fetch + upload.
     staged_s: f64,
 }
@@ -254,9 +492,47 @@ struct PrefetchWorker {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Upload one host matrix to the device, pairing the host copy with its
+/// device buffer.
+fn stage_matrix(rt: &Runtime, host: QuantizedTensor) -> Result<PreparedMatrix> {
+    let dev = Arc::new(rt.upload(&host)?);
+    Ok(PreparedMatrix { host, dev })
+}
+
+/// Fetch + upload one staging unit (runs on the worker thread).
+fn stage_unit(
+    rt: &Runtime,
+    fetcher: &mut dyn LayerFetcher,
+    unit: StageUnit,
+) -> Result<StagedPayload> {
+    match unit {
+        StageUnit::Layer(li) => {
+            let QuantLayer { att_norm, wqkv, wo, ffn_norm, w13, w2 } = fetcher.fetch(li)?;
+            Ok(StagedPayload::Layer(Box::new(LayerParts {
+                att_norm,
+                ffn_norm,
+                wqkv: stage_matrix(rt, wqkv)?,
+                wo: stage_matrix(rt, wo)?,
+                w13: stage_matrix(rt, w13)?,
+                w2: stage_matrix(rt, w2)?,
+            })))
+        }
+        StageUnit::Matrix(li, u) => match fetcher.fetch_chunk(li, u)? {
+            LayerChunk::Norms { att_norm, ffn_norm } => {
+                anyhow::ensure!(u == MatrixUnit::Norms, "fetcher returned norms for {u:?}");
+                Ok(StagedPayload::Norms { att_norm, ffn_norm })
+            }
+            LayerChunk::Mat(t) => {
+                anyhow::ensure!(u != MatrixUnit::Norms, "fetcher returned a matrix for norms");
+                Ok(StagedPayload::Mat(u, stage_matrix(rt, t)?))
+            }
+        },
+    }
+}
+
 /// Body of the persistent prefetch worker: owns the fetcher ("DDR") and
 /// the device runtime handle, serves staging requests until told to stop.
-/// A panic inside `fetch`/`stage` drops `resp_tx`, which the compute side
+/// A panic inside `fetch`/upload drops `resp_tx`, which the compute side
 /// observes as a disconnected channel — an error, never a hang.
 fn prefetch_worker_loop(
     rt: Arc<Runtime>,
@@ -264,42 +540,48 @@ fn prefetch_worker_loop(
     req_rx: Receiver<StageReq>,
     resp_tx: Sender<StagedResp>,
 ) {
-    while let Ok(StageReq::Stage(li)) = req_rx.recv() {
+    while let Ok(StageReq::Stage { slot, unit }) = req_rx.recv() {
         let t = Instant::now();
-        let result = fetcher.fetch(li).and_then(|host| stage(&rt, host));
+        let result = stage_unit(&rt, fetcher.as_mut(), unit);
         let staged_s = t.elapsed().as_secs_f64();
-        if resp_tx.send(StagedResp { layer: li, result, staged_s }).is_err() {
+        if resp_tx.send(StagedResp { slot, result, staged_s }).is_err() {
             break; // streamer gone without the handshake; nothing to serve
         }
     }
 }
 
-/// Ring-buffered layer streamer over a **persistent prefetch worker**.
+/// Ring-buffered weight streamer over a **persistent prefetch worker**.
 ///
-/// One long-lived thread (spawned at construction) owns the layer fetcher
-/// and performs every staging — synchronous stagings block on the worker's
+/// One long-lived thread (spawned at construction) owns the fetcher and
+/// performs every staging — synchronous stagings block on the worker's
 /// reply, asynchronous prefetches are requested early and collected when
-/// the layer is needed.  The steady-state decode path therefore performs
+/// the unit is needed.  The steady-state decode path therefore performs
 /// zero thread spawns: where the previous design spawned and joined one OS
 /// thread per staged layer (~`n_layers` spawns per batched step), requests
 /// now travel over a channel to the worker spawned once per engine.
 ///
 /// Async mode keeps a **staging ring** of up to `depth - 1` in-flight or
-/// ready layers ahead of the resident one ([`Streamer::with_depth`]).
-/// The ring always holds a consecutive (wrapping) run of the layers the
-/// walk will need next — possibly spanning token boundaries, so layer 0
-/// of the *next* token is staged during the current token's tail layers.
-/// Any access that breaks the sequence discards the ring wholesale and
+/// ready units ahead of the resident one ([`Streamer::with_depth`]).  The
+/// ring always holds a consecutive (wrapping) run of the units the walk
+/// will need next — possibly spanning token boundaries, so layer 0 of the
+/// *next* token is staged during the current token's tail layers.  Any
+/// access that breaks the sequence discards the ring wholesale and
 /// restarts it.
+///
+/// Under [`StageGranularity::Matrix`] the walk order interleaves the five
+/// [`MatrixUnit`]s of each layer, and [`Streamer::unit`] lets compute
+/// start on a layer's first chunks while its tail chunks (and the next
+/// layer's head) are still in flight — the sub-layer pipeline.
 pub struct Streamer {
     /// Staging schedule ([`SchedMode::Sync`] or [`SchedMode::Async`]).
     pub mode: SchedMode,
     n_layers: usize,
-    /// Pipeline depth: 1 resident slot + `depth - 1` ring slots.
+    /// Pipeline depth: 1 resident unit + `depth - 1` ring slots.
     depth: usize,
-    current: Option<(usize, PreparedLayer)>,
-    /// Layer indices requested from the worker, oldest first (in flight
-    /// or already completed and parked in the response channel).
+    gran: StageGranularity,
+    current: Option<StagedLayer>,
+    /// Ring-walk slot indices requested from the worker, oldest first (in
+    /// flight or already completed and parked in the response channel).
     pending: VecDeque<usize>,
     worker: PrefetchWorker,
     /// Staging counters (time, transfers, bytes, spawns, ring occupancy).
@@ -307,9 +589,10 @@ pub struct Streamer {
 }
 
 impl Streamer {
-    /// Spawn the prefetch worker and stage layer 0 ("buffers initialized
-    /// and loaded at program start", paper §III-B), with the default
-    /// double-buffer depth ([`DEFAULT_PREFETCH_DEPTH`]).
+    /// Spawn the prefetch worker and stage the first unit ("buffers
+    /// initialized and loaded at program start", paper §III-B), with the
+    /// default double-buffer depth ([`DEFAULT_PREFETCH_DEPTH`]) and layer
+    /// granularity.
     pub fn new(
         rt: Arc<Runtime>,
         fetcher: impl LayerFetcher + 'static,
@@ -318,19 +601,35 @@ impl Streamer {
         Self::with_depth(rt, fetcher, mode, DEFAULT_PREFETCH_DEPTH)
     }
 
-    /// [`Streamer::new`] with an explicit staging-pipeline depth.
+    /// [`Streamer::new`] with an explicit staging-pipeline depth and layer
+    /// granularity.
     ///
-    /// `depth` counts the resident layer plus the ring: depth 2 is the
+    /// `depth` counts the resident unit plus the ring: depth 2 is the
     /// classic double buffer (today's default), depth 1 disables
     /// prefetching entirely (every staging is inline, even in async
     /// mode), deeper rings absorb transfer-time jitter at the cost of
-    /// `depth - 1` staged layers of memory.  Depths beyond `n_layers`
+    /// `depth - 1` staged units of memory.  Depths beyond the walk length
     /// are legal — the ring then spans token boundaries.
     pub fn with_depth(
         rt: Arc<Runtime>,
         fetcher: impl LayerFetcher + 'static,
         mode: SchedMode,
         depth: usize,
+    ) -> Result<Self> {
+        Self::with_opts(rt, fetcher, mode, depth, StageGranularity::Layer)
+    }
+
+    /// [`Streamer::with_depth`] with an explicit [`StageGranularity`]
+    /// (CLI `--stream-granularity`).  Matrix granularity streams each
+    /// layer as five independent chunks; the ring depth then counts
+    /// matrices, and memory cost per ring slot drops from a whole layer
+    /// to one matrix.  Bit-identical to layer granularity at every depth.
+    pub fn with_opts(
+        rt: Arc<Runtime>,
+        fetcher: impl LayerFetcher + 'static,
+        mode: SchedMode,
+        depth: usize,
+        gran: StageGranularity,
     ) -> Result<Self> {
         anyhow::ensure!(depth >= 1, "prefetch depth must be >= 1 (got {depth})");
         let n_layers = fetcher.n_layers();
@@ -346,51 +645,86 @@ impl Streamer {
             mode,
             n_layers,
             depth,
+            gran,
             current: None,
             pending: VecDeque::with_capacity(depth),
             worker: PrefetchWorker { req_tx: Some(req_tx), resp_rx, handle: Some(handle) },
             stats: StreamerStats { spawns: 1, ring_depth: depth, ..StreamerStats::default() },
         };
+        // stage the walk's first unit (construction staging is billed to
+        // the worker totals but not to the blocked/decode counters)
         s.request(0)?;
-        let (l0, staged_s, _wait_s) = s.wait_front()?;
+        let (payload, staged_s, _wait_s) = s.wait_front()?;
         s.stats.total_transfer_s += staged_s;
         s.stats.transfers += 1;
-        s.stats.staged_bytes += l0.host.stream_bytes() as u64;
-        s.current = Some((0, l0));
+        s.stats.staged_bytes += payload.stream_bytes() as u64;
+        let mut cur = StagedLayer::empty(0);
+        cur.fill(payload)?;
+        s.current = Some(cur);
         Ok(s)
     }
 
-    /// Ask the worker to stage layer `li` (non-blocking; queued behind any
-    /// earlier ring requests).
-    fn request(&mut self, li: usize) -> Result<()> {
+    /// Staging units per layer (1 at layer granularity, [`STAGE_UNITS`]
+    /// at matrix granularity).
+    fn units_per_layer(&self) -> usize {
+        match self.gran {
+            StageGranularity::Layer => 1,
+            StageGranularity::Matrix => STAGE_UNITS,
+        }
+    }
+
+    /// Total ring-walk slots in one token (all layers).
+    fn slot_count(&self) -> usize {
+        self.n_layers * self.units_per_layer()
+    }
+
+    /// Map a ring-walk slot index to the staging unit it stands for.
+    fn slot_unit(&self, slot: usize) -> StageUnit {
+        match self.gran {
+            StageGranularity::Layer => StageUnit::Layer(slot),
+            StageGranularity::Matrix => {
+                StageUnit::Matrix(slot / STAGE_UNITS, MATRIX_UNITS[slot % STAGE_UNITS])
+            }
+        }
+    }
+
+    /// Per-layer walk index a consumer's request for `u` maps to.
+    fn target_idx(&self, u: MatrixUnit) -> usize {
+        match self.gran {
+            StageGranularity::Layer => 0, // one chunk carries everything
+            StageGranularity::Matrix => u.index(),
+        }
+    }
+
+    /// Ask the worker to stage slot `slot` (non-blocking; queued behind
+    /// any earlier ring requests).
+    fn request(&mut self, slot: usize) -> Result<()> {
         let tx = self
             .worker
             .req_tx
             .as_ref()
             .ok_or_else(|| anyhow!("streamer is shut down"))?;
-        tx.send(StageReq::Stage(li))
+        tx.send(StageReq::Stage { slot, unit: self.slot_unit(slot) })
             .map_err(|_| anyhow!("prefetch worker is gone (staging thread exited)"))?;
-        self.pending.push_back(li);
+        self.pending.push_back(slot);
         Ok(())
     }
 
     /// Block until the *oldest* ring staging completes.  Returns the
-    /// staged layer, the worker-side staging seconds, and the seconds
+    /// staged payload, the worker-side staging seconds, and the seconds
     /// *this* thread spent waiting.  A dead worker (panicked
     /// fetcher/runtime) surfaces as an error here instead of a hang.
-    fn wait_front(&mut self) -> Result<(PreparedLayer, f64, f64)> {
-        let li = self.pending.pop_front().expect("no staging in flight");
+    fn wait_front(&mut self) -> Result<(StagedPayload, f64, f64)> {
+        let slot = self.pending.pop_front().expect("no staging in flight");
         let t = Instant::now();
-        let resp = self
-            .worker
-            .resp_rx
-            .recv()
-            .map_err(|_| anyhow!("prefetch worker died while staging layer {li} (panicked?)"))?;
+        let resp = self.worker.resp_rx.recv().map_err(|_| {
+            anyhow!("prefetch worker died while staging {:?} (panicked?)", self.slot_unit(slot))
+        })?;
         let wait_s = t.elapsed().as_secs_f64();
         anyhow::ensure!(
-            resp.layer == li,
-            "prefetch worker answered layer {} for request {li}",
-            resp.layer
+            resp.slot == slot,
+            "prefetch worker answered slot {} for request {slot}",
+            resp.slot
         );
         Ok((resp.result?, resp.staged_s, wait_s))
     }
@@ -405,52 +739,97 @@ impl Streamer {
         }
     }
 
-    /// Obtain layer `li` for compute.  In async mode this also tops the
-    /// staging ring back up with the layers the walk needs next
-    /// (wrapping, so layer 0 of the next token is staged during the
-    /// current token's tail layers).
-    pub fn layer(&mut self, li: usize) -> Result<&PreparedLayer> {
+    /// Obtain layer `li` with at least unit `u` staged, for compute.  In
+    /// async mode this also tops the staging ring back up with the units
+    /// the walk needs next (wrapping across token boundaries).  Under
+    /// matrix granularity this is the sub-layer pipeline's consume point:
+    /// asking for the QKV block does not wait for W2.
+    pub fn unit(&mut self, li: usize, u: MatrixUnit) -> Result<&StagedLayer> {
+        let target = self.target_idx(u);
+        self.ensure(li, target)?;
+        Ok(self.current.as_ref().expect("ensured above"))
+    }
+
+    /// Obtain layer `li` with EVERY unit staged (the layer-granular
+    /// consume point; also used by whole-layer consumers under matrix
+    /// granularity).
+    pub fn layer(&mut self, li: usize) -> Result<&StagedLayer> {
+        let target = self.units_per_layer() - 1;
+        self.ensure(li, target)?;
+        Ok(self.current.as_ref().expect("ensured above"))
+    }
+
+    /// Make `current` hold layer `li` staged through per-layer walk index
+    /// `target`, consuming ring slots in order, then re-arm the ring.
+    fn ensure(&mut self, li: usize, target: usize) -> Result<()> {
         if li >= self.n_layers {
             bail!("layer {li} out of range ({} layers)", self.n_layers);
         }
-        let have = self.current.as_ref().map(|(i, _)| *i);
-        if have != Some(li) {
-            let armed = self.pending.front() == Some(&li);
-            let occ = if armed { self.pending.len() } else { 0 };
-            if !armed {
-                // the ring does not lead with `li` (out-of-order jump or
-                // broken sequence): discard it wholesale and stage `li`
-                // inline via the worker
-                self.discard_all();
-                self.request(li)?;
+        let keep = matches!(&self.current, Some(sl) if sl.li == li);
+        if !keep {
+            // a different (or no) layer is current: start assembling `li`
+            self.current = Some(StagedLayer::empty(li));
+        }
+        let upl = self.units_per_layer();
+        loop {
+            let filled = self.current.as_ref().expect("set above").filled;
+            if filled > target {
+                break;
             }
-            self.stats.ring_occupancy_sum += occ as u64;
-            self.stats.ring_samples += 1;
-            let (lay, staged_s, wait_s) = self.wait_front()?;
-            self.stats.blocked_transfer_s += wait_s;
-            if armed {
-                // the staging ran in the background; we only waited for
-                // the remainder (0 when the transfer was fully hidden).
-                // Bucket the wait by how full the ring was: waits at high
-                // occupancy mean even a full ring cannot hide transfers.
-                self.stats.prefetch_wait_s += wait_s;
-                self.stats.prefetch_wait_by_occ_s[occ.min(RING_WAIT_BUCKETS - 1)] += wait_s;
-            }
-            self.stats.total_transfer_s += staged_s;
-            self.stats.transfers += 1;
-            self.stats.staged_bytes += lay.host.stream_bytes() as u64;
-            self.current = Some((li, lay));
+            self.consume(li * upl + filled)?;
         }
         if self.mode == SchedMode::Async && self.worker.req_tx.is_some() {
-            self.rearm(li);
+            self.rearm();
         }
-        Ok(&self.current.as_ref().expect("staged above").1)
+        Ok(())
     }
 
-    /// Bring the ring back to "the next `depth - 1` layers after `li`, in
-    /// order" (steady-state re-arm after serving layer `li`).
-    fn rearm(&mut self, li: usize) {
-        self.top_up((li + 1) % self.n_layers);
+    /// Consume ring slot `slot` into `current`, staging it inline (after
+    /// discarding a stale ring) when the ring does not lead with it.
+    fn consume(&mut self, slot: usize) -> Result<()> {
+        let armed = self.pending.front() == Some(&slot);
+        let occ = if armed { self.pending.len() } else { 0 };
+        if !armed {
+            // the ring does not lead with the needed unit (out-of-order
+            // jump or broken sequence): discard it wholesale and stage
+            // the unit inline via the worker
+            self.discard_all();
+            self.request(slot)?;
+        }
+        self.stats.ring_occupancy_sum += occ as u64;
+        self.stats.ring_samples += 1;
+        let (payload, staged_s, wait_s) = self.wait_front()?;
+        self.stats.blocked_transfer_s += wait_s;
+        if armed {
+            // the staging ran in the background; we only waited for the
+            // remainder (0 when the transfer was fully hidden).  Bucket
+            // the wait by how full the ring was: waits at high occupancy
+            // mean even a full ring cannot hide transfers.
+            self.stats.prefetch_wait_s += wait_s;
+            self.stats.prefetch_wait_by_occ_s[occ.min(RING_WAIT_BUCKETS - 1)] += wait_s;
+        }
+        // attribute the visible wait to the matrix unit it gated
+        self.stats.wait_by_unit_s[slot % self.units_per_layer()] += wait_s;
+        self.stats.total_transfer_s += staged_s;
+        self.stats.transfers += 1;
+        self.stats.staged_bytes += payload.stream_bytes() as u64;
+        self.current.as_mut().expect("current set in ensure").fill(payload)
+    }
+
+    /// Ring-walk slot the consumer will need next (steady-state re-arm
+    /// origin).
+    fn next_slot(&self) -> usize {
+        let upl = self.units_per_layer();
+        match &self.current {
+            Some(sl) => (sl.li * upl + sl.filled) % self.slot_count(),
+            None => 0,
+        }
+    }
+
+    /// Bring the ring back to "the next `depth - 1` units after the
+    /// current consume point, in order".
+    fn rearm(&mut self) {
+        self.top_up(self.next_slot());
     }
 
     /// Make the ring hold the consecutive wrapping run starting at
@@ -458,14 +837,15 @@ impl Streamer {
     /// longer matches that sequence (a reset or out-of-order access broke
     /// it) is discarded wholesale — otherwise the streamer would silently
     /// degrade to inline staging.  Send failures are deferred: the next
-    /// `layer()` that actually needs the worker reports them.  Shared by
-    /// [`Streamer::layer`]'s re-arm and [`Streamer::reset`] so the two
-    /// paths cannot drift apart.
+    /// consume that actually needs the worker reports them.  Shared by
+    /// the steady-state re-arm and [`Streamer::reset`] so the two paths
+    /// cannot drift apart.
     fn top_up(&mut self, first_needed: usize) {
         let cap = self.depth - 1;
         if cap == 0 {
             return; // depth 1: inline staging only, nothing to arm
         }
+        let total = self.slot_count();
         let mut expect = first_needed;
         let mut consecutive = true;
         for &p in &self.pending {
@@ -473,48 +853,50 @@ impl Streamer {
                 consecutive = false;
                 break;
             }
-            expect = (expect + 1) % self.n_layers;
+            expect = (expect + 1) % total;
         }
         if !consecutive {
             self.discard_all();
         }
         let mut next = match self.pending.back() {
-            Some(&p) => (p + 1) % self.n_layers,
+            Some(&p) => (p + 1) % total,
             None => first_needed,
         };
         while self.pending.len() < cap {
             if self.request(next).is_err() {
-                break; // dead/shut-down worker: deferred to the next layer()
+                break; // dead/shut-down worker: deferred to the next consume
             }
-            next = (next + 1) % self.n_layers;
+            next = (next + 1) % total;
         }
     }
 
     /// Rewind for a new generation (engine `reset`).  Drains any ring
     /// contents the post-reset walk cannot use and re-arms the ring from
-    /// the layer the next token will need first, so async scheduling
+    /// the unit the next token will need first, so async scheduling
     /// keeps hiding transfers across generations — including resets that
-    /// land mid-token.
+    /// land mid-token (and, under matrix granularity, mid-layer).
     pub fn reset(&mut self) {
         if self.mode != SchedMode::Async {
             return; // sync mode stages inline; nothing is in flight
         }
-        // If layer 0 is already resident, the next staging needed is layer
-        // 1 (layer(0) will not consume the ring); otherwise 0.
-        let desired = match self.current {
-            Some((0, _)) => 1 % self.n_layers,
+        // Units of layer 0 already staged in `current` are reused by the
+        // post-reset walk (weights do not depend on the generation), so
+        // the next staging needed is the first one `current` lacks;
+        // anything else restarts at slot 0.
+        let desired = match &self.current {
+            Some(sl) if sl.li == 0 => sl.filled % self.slot_count(),
             _ => 0,
         };
         // re-point the ring at the post-reset walk: a ring already armed
         // for it (reset on a token boundary) is kept, anything else is
         // drained and re-requested; a dead/shut-down worker never panics
-        // a reset (top_up defers send failures to the next layer() call)
+        // a reset (top_up defers send failures to the next consume)
         self.top_up(desired);
     }
 
     /// Shutdown handshake: drain the staging ring, tell the worker to
     /// exit, and join it.  Idempotent; [`Drop`] runs it too.  After
-    /// shutdown every `layer()` call fails fast instead of hanging.
+    /// shutdown every staging attempt fails fast instead of hanging.
     pub fn shutdown(&mut self) {
         self.discard_all();
         if let Some(tx) = self.worker.req_tx.take() {
@@ -525,10 +907,16 @@ impl Streamer {
         }
     }
 
-    /// Layer index of the *oldest* ring staging, if any (the next one
-    /// `layer()` would consume; test observability).
+    /// Layer index of the *oldest* ring staging, if any (the next one the
+    /// walk would consume; test observability).
     pub fn pending_layer(&self) -> Option<usize> {
-        self.pending.front().copied()
+        self.pending.front().map(|&s| s / self.units_per_layer())
+    }
+
+    /// Oldest ring staging as a [`StageUnit`] (matrix-granular
+    /// observability).
+    pub fn pending_unit(&self) -> Option<StageUnit> {
+        self.pending.front().map(|&s| self.slot_unit(s))
     }
 
     /// Number of armed stagings currently in the ring (in flight or
@@ -540,6 +928,11 @@ impl Streamer {
     /// Configured staging-pipeline depth (resident slot + ring capacity).
     pub fn depth(&self) -> usize {
         self.depth
+    }
+
+    /// Unit of staging this streamer pipelines.
+    pub fn granularity(&self) -> StageGranularity {
+        self.gran
     }
 
     /// Number of transformer layers this streamer cycles through.
@@ -556,12 +949,34 @@ impl Streamer {
 }
 
 impl crate::engine::forward::LayerProvider for Streamer {
-    /// Streamed provision: obtain the staged layer (possibly consuming the
-    /// async prefetch) and hand its host copy to the batched forward pass.
-    /// One call per (layer, step) regardless of how many lanes are decoded,
-    /// which is exactly the ~B× staging reduction of batched decoding.
-    fn provide(&mut self, li: usize) -> Result<&QuantLayer> {
-        Ok(&Streamer::layer(self, li)?.host)
+    /// Streamed provision, matrix-granular: each accessor consumes the
+    /// staging ring only up to the unit the forward pass actually needs,
+    /// so compute on a layer's head matrices overlaps the transfer of its
+    /// tail matrices (and the next layer's head).  One consume per
+    /// (unit, step) regardless of how many lanes are decoded — the ~B×
+    /// staging reduction of batched decoding.
+    fn att_norm(&mut self, li: usize) -> Result<&[f32]> {
+        Ok(self.unit(li, MatrixUnit::Norms)?.att_norm())
+    }
+
+    fn wqkv(&mut self, li: usize) -> Result<&QuantizedTensor> {
+        Ok(&self.unit(li, MatrixUnit::Qkv)?.wqkv().host)
+    }
+
+    fn wo(&mut self, li: usize) -> Result<&QuantizedTensor> {
+        Ok(&self.unit(li, MatrixUnit::Wo)?.wo().host)
+    }
+
+    fn ffn_norm(&mut self, li: usize) -> Result<&[f32]> {
+        Ok(self.unit(li, MatrixUnit::Norms)?.ffn_norm())
+    }
+
+    fn w13(&mut self, li: usize) -> Result<&QuantizedTensor> {
+        Ok(&self.unit(li, MatrixUnit::W13)?.w13().host)
+    }
+
+    fn w2(&mut self, li: usize) -> Result<&QuantizedTensor> {
+        Ok(&self.unit(li, MatrixUnit::W2)?.w2().host)
     }
 }
 
@@ -654,6 +1069,20 @@ mod tests {
         assert!(lt.transfer_s < lt.kernel_s * 2.5, "{lt:?}");
     }
 
+    #[test]
+    fn stage_mb_s_math_including_zero_transfer() {
+        // the zero case must never divide by zero
+        assert_eq!(StreamerStats::default().stage_mb_s(), 0.0);
+        let s = StreamerStats {
+            staged_bytes: 10_000_000,
+            total_transfer_s: 2.0,
+            ..StreamerStats::default()
+        };
+        assert!((s.stage_mb_s() - 5.0).abs() < 1e-12, "{}", s.stage_mb_s());
+        let zero_bytes = StreamerStats { total_transfer_s: 1.0, ..StreamerStats::default() };
+        assert_eq!(zero_bytes.stage_mb_s(), 0.0);
+    }
+
     // Wall-clock Streamer behaviour at scale is covered by rust/tests/
     // integration tests (requires artifacts); prefetch-sequencing
     // regressions are pinned below on the sim runtime.
@@ -690,7 +1119,7 @@ mod streamer_tests {
 
     fn assert_layer_is(s: &mut Streamer, li: usize, layers: &[QuantLayer]) {
         let got = s.layer(li).unwrap();
-        assert_eq!(got.host.wqkv.q, layers[li].wqkv.q, "layer {li} staged wrong weights");
+        assert_eq!(got.wqkv().host.q, layers[li].wqkv.q, "layer {li} staged wrong weights");
     }
 
     #[test]
@@ -775,6 +1204,7 @@ mod streamer_tests {
         }
         assert_eq!(s.stats.staged_bytes, s.stats.transfers * per);
         assert_eq!(s.stats.transfers, 4, "one staging per distinct layer");
+        assert!(s.stats.stage_mb_s() > 0.0, "bandwidth derivable once transfers ran");
     }
 
     #[test]
@@ -1054,5 +1484,168 @@ mod streamer_tests {
         assert!(s.stats.ring_samples >= 7, "every staged consume sampled");
         assert!(s.stats.ring_occupancy_mean() > 0.0);
         assert!(s.stats.ring_occupancy_mean() <= 3.0, "occupancy bounded by ring capacity");
+    }
+
+    // ------------------------------------------------------------------
+    // Matrix-granular staging (the sub-layer pipeline)
+    // ------------------------------------------------------------------
+
+    fn setup_matrix(mode: SchedMode, depth: usize) -> (Streamer, Arc<Vec<QuantLayer>>) {
+        let qm = QuantModel::from_float(&FloatModel::random(tiny_cfg(), 42));
+        let layers = Arc::new(qm.layers);
+        let rt = Arc::new(Runtime::with_shapes(&[]));
+        let fetcher = MemFetcher { layers: Arc::clone(&layers) };
+        let s = Streamer::with_opts(rt, fetcher, mode, depth, StageGranularity::Matrix).unwrap();
+        (s, layers)
+    }
+
+    /// Full-layer equality check against the fused source layer — every
+    /// chunk, not just wqkv.
+    fn assert_full_layer_is(s: &mut Streamer, li: usize, layers: &[QuantLayer]) {
+        let got = s.layer(li).unwrap();
+        assert_eq!(got.att_norm(), &layers[li].att_norm[..], "layer {li} att_norm");
+        assert_eq!(got.ffn_norm(), &layers[li].ffn_norm[..], "layer {li} ffn_norm");
+        assert_eq!(got.wqkv().host, layers[li].wqkv, "layer {li} wqkv");
+        assert_eq!(got.wo().host, layers[li].wo, "layer {li} wo");
+        assert_eq!(got.w13().host, layers[li].w13, "layer {li} w13");
+        assert_eq!(got.w2().host, layers[li].w2, "layer {li} w2");
+    }
+
+    #[test]
+    fn matrix_granularity_walks_bit_identical_at_every_depth() {
+        // matrix-granular staging is a latency knob, never a data path:
+        // every chunk handed out must equal the fused layer bytes, across
+        // depths, generations and resets
+        for depth in [1usize, 2, 4, 8] {
+            let (mut s, layers) = setup_matrix(SchedMode::Async, depth);
+            assert_eq!(s.granularity(), StageGranularity::Matrix);
+            for _gen in 0..3 {
+                for li in 0..4 {
+                    assert_full_layer_is(&mut s, li, &layers);
+                    assert!(s.ring_len() <= depth.saturating_sub(1), "ring over capacity");
+                }
+                s.reset();
+            }
+            // 3 generations x 4 layers x 5 chunks, each staged exactly once
+            assert_eq!(s.stats.transfers, 3 * 4 * STAGE_UNITS as u64);
+        }
+    }
+
+    #[test]
+    fn matrix_chunks_consumed_in_order_while_ring_runs_ahead() {
+        let (mut s, layers) = setup_matrix(SchedMode::Async, 4);
+        // construction staged layer 0's norms; asking for the QKV block
+        // consumes through it WITHOUT waiting for wo/w13/w2
+        let sl = s.unit(0, MatrixUnit::Qkv).unwrap();
+        assert_eq!(sl.wqkv().host, layers[0].wqkv);
+        // the ring leads with the next chunk of the same layer
+        assert_eq!(s.pending_unit(), Some(StageUnit::Matrix(0, MatrixUnit::Wo)));
+        assert_eq!(s.ring_len(), 3);
+        // consuming the rest of the layer rolls the ring into layer 1
+        assert_full_layer_is(&mut s, 0, &layers);
+        assert_eq!(s.pending_unit(), Some(StageUnit::Matrix(1, MatrixUnit::Norms)));
+        assert_eq!(s.pending_layer(), Some(1));
+        // repeated access to an already-staged unit consumes nothing
+        let transfers = s.stats.transfers;
+        s.unit(0, MatrixUnit::Wo).unwrap();
+        assert_eq!(s.stats.transfers, transfers);
+    }
+
+    #[test]
+    fn matrix_ring_spans_layer_and_token_boundaries() {
+        // a deep ring in matrix granularity runs across layers AND the
+        // token wrap: after the last chunk of layer 3, the ring holds the
+        // next token's layer-0 chunks
+        let (mut s, layers) = setup_matrix(SchedMode::Async, 6);
+        for li in 0..4 {
+            assert_full_layer_is(&mut s, li, &layers);
+        }
+        assert_eq!(s.pending_unit(), Some(StageUnit::Matrix(0, MatrixUnit::Norms)));
+        assert_eq!(s.ring_len(), 5);
+        let transfers = s.stats.transfers;
+        // next token consumes the wrapped prefetches without re-staging
+        assert_full_layer_is(&mut s, 0, &layers);
+        assert_eq!(s.stats.transfers, transfers + STAGE_UNITS as u64);
+    }
+
+    #[test]
+    fn matrix_out_of_order_jump_discards_and_restages() {
+        let (mut s, layers) = setup_matrix(SchedMode::Async, 3);
+        assert_full_layer_is(&mut s, 0, &layers);
+        // jump over layer 1: the armed layer-1 chunks are stale
+        assert_full_layer_is(&mut s, 2, &layers);
+        // the ring must lead with layer 3's first chunk afterwards
+        assert_eq!(s.pending_unit(), Some(StageUnit::Matrix(3, MatrixUnit::Norms)));
+        assert_full_layer_is(&mut s, 3, &layers);
+    }
+
+    #[test]
+    fn matrix_reset_mid_layer_rearms_from_missing_chunk() {
+        let (mut s, _layers) = setup_matrix(SchedMode::Async, 4);
+        // consume layer 0 fully, then only the head of layer 1
+        s.layer(0).unwrap();
+        s.unit(1, MatrixUnit::Qkv).unwrap();
+        s.reset();
+        // post-reset walk starts at layer 0 unit 0; current (partial
+        // layer 1) cannot serve it, so the ring re-arms at slot 0
+        assert_eq!(s.pending_unit(), Some(StageUnit::Matrix(0, MatrixUnit::Norms)));
+        // a reset with PARTIAL layer 0 keeps the staged head and re-arms
+        // at the first missing chunk
+        let (mut s2, _layers2) = setup_matrix(SchedMode::Async, 4);
+        // fresh streamer: only layer 0's norms staged at construction
+        s2.reset();
+        assert_eq!(
+            s2.pending_unit(),
+            Some(StageUnit::Matrix(0, MatrixUnit::Qkv)),
+            "reset must not re-stage the already-resident norms chunk"
+        );
+    }
+
+    #[test]
+    fn matrix_wait_attribution_sums_and_lands_per_unit() {
+        let (mut s, layers) = setup_matrix(SchedMode::Async, 4);
+        for _gen in 0..2 {
+            for li in 0..4 {
+                assert_full_layer_is(&mut s, li, &layers);
+            }
+        }
+        let by_unit: f64 = s.stats.wait_by_unit_s.iter().sum();
+        assert!(
+            (by_unit - s.stats.blocked_transfer_s).abs() <= 1e-9,
+            "per-unit waits {by_unit} must sum to blocked_transfer_s {}",
+            s.stats.blocked_transfer_s
+        );
+        // layer granularity attributes everything to the first unit
+        let (mut sl, layers_l) = setup_depth(SchedMode::Async, 2);
+        for li in 0..4 {
+            assert_layer_is(&mut sl, li, &layers_l);
+        }
+        let tail: f64 = sl.stats.wait_by_unit_s[1..].iter().sum();
+        assert_eq!(tail, 0.0, "layer granularity waits land in unit bucket 0 only");
+        let head: f64 = sl.stats.wait_by_unit_s[0];
+        assert!((head - sl.stats.blocked_transfer_s).abs() <= 1e-9);
+    }
+
+    #[test]
+    fn matrix_granularity_sync_mode_stages_inline() {
+        let (mut s, layers) = setup_matrix(SchedMode::Sync, 2);
+        for li in 0..4 {
+            assert_full_layer_is(&mut s, li, &layers);
+            assert_eq!(s.pending_layer(), None, "sync mode must never arm the ring");
+        }
+    }
+
+    #[test]
+    fn matrix_staged_bytes_sum_to_layer_bytes() {
+        let (mut s, layers) = setup_matrix(SchedMode::Async, 2);
+        let per_layer = layers[0].stream_bytes() as u64;
+        for li in 0..4 {
+            assert_full_layer_is(&mut s, li, &layers);
+        }
+        assert_eq!(
+            s.stats.staged_bytes,
+            4 * per_layer,
+            "five chunks per layer must sum exactly to the layer's stream bytes"
+        );
     }
 }

@@ -53,7 +53,7 @@ use crate::engine::session::{Session, SessionPool};
 use crate::metrics::ServerMetrics;
 use crate::model::{LlamaConfig, QuantModel};
 use crate::ps::gqmv::GqmvExec;
-use crate::sched::SchedMode;
+use crate::sched::{SchedMode, StageGranularity};
 use crate::tokenizer::Tokenizer;
 
 /// Factory building GQMV backends (the batch scheduler's decode thread
@@ -76,10 +76,15 @@ pub struct ServeOpts {
     /// meaningful when streaming; rejected together with `resident`.
     pub sync_staging: bool,
     /// Staging-ring depth of the decode thread's weight streamer (CLI
-    /// `--prefetch-depth`): 1 resident layer + `prefetch_depth - 1`
+    /// `--prefetch-depth`): 1 resident unit + `prefetch_depth - 1`
     /// transfers in flight.  Default 2 (double buffering); ignored with
     /// `resident`, degenerate (inline staging) at 1.
     pub prefetch_depth: usize,
+    /// Unit of staging the decode thread's streamer pipelines (CLI
+    /// `--stream-granularity`): whole layers (default) or per-matrix
+    /// chunks, which overlap transfers *within* a layer.  Ignored with
+    /// `resident`.
+    pub granularity: StageGranularity,
     /// Serve zero-copy resident weights ([`WeightMode::Resident`])
     /// instead of streaming them through the staging scheduler — for
     /// deployments where the model truly fits device-side.
@@ -95,6 +100,7 @@ impl Default for ServeOpts {
             max_batch: 8,
             sync_staging: false,
             prefetch_depth: crate::sched::DEFAULT_PREFETCH_DEPTH,
+            granularity: StageGranularity::default(),
             resident: false,
         }
     }
@@ -256,6 +262,7 @@ impl Server {
                 max_pending: opts.max_sessions.max(opts.max_batch),
                 sched: if opts.sync_staging { SchedMode::Sync } else { SchedMode::Async },
                 prefetch_depth: opts.prefetch_depth,
+                granularity: opts.granularity,
                 weights: if opts.resident { WeightMode::Resident } else { WeightMode::Streamed },
             },
         );

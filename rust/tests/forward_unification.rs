@@ -277,3 +277,133 @@ fn unified_greedy_decode_matches_reference_decode() {
     let out = generate(&mut engine, &prompt, steps, Sampler::Greedy, false).unwrap();
     assert_eq!(out.generated, want, "greedy stream diverged from pre-refactor reference");
 }
+
+// ---------------------------------------------------------------------------
+// Streamed-provider and device-path unification (sim runtime, no artifacts)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod streamed {
+    use super::*;
+    use llamaf::engine::forward::{forward_batch, BatchLane, BatchScratch};
+    use llamaf::engine::llamaf::LlamafEngine;
+    use llamaf::runtime::Runtime;
+    use llamaf::sched::{MemFetcher, SchedMode, StageGranularity, Streamer};
+
+    #[test]
+    fn streamer_provider_bit_identical_at_every_granularity_and_depth() {
+        // the Streamer as a LayerProvider — layer-granular or
+        // matrix-granular, at depths 1/2/4 — must reproduce the
+        // pre-refactor op sequence bit for bit: staging granularity is a
+        // latency knob, never a data path
+        let qm = tiny_model(41);
+        let cfg = qm.cfg;
+        let tokens = [5u32, 8, 2, 60, 1, 33];
+
+        let mut ref_exec = ScalarGqmv;
+        let mut ref_s = RefScratch::new(&cfg);
+        let mut ref_kv = KvCache::new(&cfg);
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for (pos, &t) in tokens.iter().enumerate() {
+            ref_forward_pass(&qm, &mut ref_exec, &mut ref_s, &mut ref_kv, t, pos);
+            want.push(ref_s.logits.clone());
+        }
+
+        for gran in [StageGranularity::Layer, StageGranularity::Matrix] {
+            for depth in [1usize, 2, 4] {
+                let rt = Arc::new(Runtime::with_shapes(&[]));
+                let fetcher = MemFetcher { layers: Arc::new(qm.layers.clone()) };
+                let mut provider =
+                    Streamer::with_opts(rt, fetcher, SchedMode::Async, depth, gran).unwrap();
+                let mut exec = ScalarGqmv;
+                let mut scratch = BatchScratch::new(&cfg, 1);
+                let mut kv = KvCache::new(&cfg);
+                let mut prof = ForwardProfile::default();
+                for (pos, &t) in tokens.iter().enumerate() {
+                    let mut lanes = [BatchLane { kv: &mut kv, pos, token: t }];
+                    forward_batch(
+                        &qm,
+                        &mut provider,
+                        &mut exec,
+                        &mut scratch,
+                        &mut lanes,
+                        &mut prof,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        scratch.logits(0),
+                        &want[pos][..],
+                        "{gran:?} depth {depth} diverged at pos {pos}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn device_path_routes_through_forward_batch_bit_identical_to_cpu() {
+        // LlamafEngine no longer carries its own Algorithm-2 copy: it
+        // decodes through forward_batch with the DeviceLayers/DeviceGqmv
+        // pairing, so its logits must equal the CPU engine's bit for bit
+        // at every granularity x depth (the sim runtime's device kernel
+        // shares the exact cast chain with ScalarGqmv)
+        let qm = tiny_model(42);
+        let cfg = qm.cfg;
+        let tokens = [3u32, 40, 7, 1, 22];
+        let mut cpu = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let mut prof = ForwardProfile::default();
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for (pos, &t) in tokens.iter().enumerate() {
+            want.push(cpu.forward(t, pos, &mut prof).unwrap().to_vec());
+        }
+        for gran in [StageGranularity::Layer, StageGranularity::Matrix] {
+            for depth in [1usize, 2, 4] {
+                let rt = Arc::new(Runtime::with_shapes(&cfg.all_mat_shapes()));
+                let mut dev = LlamafEngine::from_model_with_opts(
+                    (*qm).clone(),
+                    rt,
+                    SchedMode::Async,
+                    depth,
+                    gran,
+                )
+                .unwrap();
+                assert_eq!(dev.granularity(), gran);
+                for (pos, &t) in tokens.iter().enumerate() {
+                    let got = dev.forward(t, pos, &mut prof).unwrap();
+                    assert_eq!(got, &want[pos][..], "{gran:?} depth {depth} diverged at pos {pos}");
+                }
+                let stats = dev.streamer_stats();
+                assert!(stats.transfers > 0, "device path must actually stream");
+                assert!(stats.staged_bytes > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn device_path_reset_streams_next_generation_bit_identical() {
+        // a reset mid-stream re-arms the sub-layer ring; the next
+        // generation must reproduce the first one exactly
+        let qm = tiny_model(43);
+        let cfg = qm.cfg;
+        let rt = Arc::new(Runtime::with_shapes(&cfg.all_mat_shapes()));
+        let mut dev = LlamafEngine::from_model_with_opts(
+            (*qm).clone(),
+            rt,
+            SchedMode::Async,
+            3,
+            StageGranularity::Matrix,
+        )
+        .unwrap();
+        let mut prof = ForwardProfile::default();
+        let tokens = [4u32, 19, 8];
+        let mut first: Vec<Vec<f32>> = Vec::new();
+        for (pos, &t) in tokens.iter().enumerate() {
+            first.push(dev.forward(t, pos, &mut prof).unwrap().to_vec());
+        }
+        dev.reset();
+        for (pos, &t) in tokens.iter().enumerate() {
+            let got = dev.forward(t, pos, &mut prof).unwrap();
+            assert_eq!(got, &first[pos][..], "post-reset divergence at pos {pos}");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! PROTOCOL contract: the `STATS` reply carries every field documented in
+//! `docs/PROTOCOL.md`, well-formed — parsed from a REAL server reply, so
+//! the wire format and the spec cannot drift apart silently.
+//!
+//! Runs on the synthetic tiny model — no artifacts required.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use llamaf::model::{FloatModel, LlamaConfig, QuantModel};
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::ScalarGqmv;
+use llamaf::server::{ServeOpts, Server};
+
+fn scalar_exec() -> Box<dyn GqmvExec + Send> {
+    Box::new(ScalarGqmv)
+}
+
+fn tiny_model(seed: u64) -> Arc<QuantModel> {
+    let cfg = LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 512,
+        seq_len: 64,
+        gs: 32,
+    };
+    Arc::new(QuantModel::from_float(&FloatModel::random(cfg, seed)))
+}
+
+/// Every `k=v` numeric field the PROTOCOL doc promises in a `STATS` reply.
+const NUMERIC_FIELDS: &[&str] = &[
+    "sessions_idle",
+    "sessions_busy",
+    "sessions_cap",
+    "workers",
+    "requests",
+    "rejected",
+    "tokens",
+    "queue",
+    "queue_peak",
+    "p50_ms",
+    "p99_ms",
+    "mean_ms",
+    "tok_s_p50",
+    "batch_steps",
+    "batch_tokens",
+    "batch_mean",
+    "batch_max",
+    "bytes_staged",
+    "bytes_per_tok",
+    "prefetch_wait_ms",
+    "prefetch_depth",
+    "ring_occ",
+    "stage_mb_s",
+    "matrix_pct",
+];
+
+#[test]
+fn stats_reply_carries_every_documented_field() {
+    let model = tiny_model(3);
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts { workers: 2, ..Default::default() };
+    let m2 = Arc::clone(&model);
+    let server_thread =
+        std::thread::spawn(move || server.serve_shared(m2, &scalar_exec, &opts, Some(1)).unwrap());
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    // run one real generation so the batch counters are live
+    conn.write_all(b"GEN 4 hello\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    line.clear();
+    conn.write_all(b"STATS\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let stats = line.trim_end().strip_prefix("OK ").expect("STATS must reply OK ...").to_string();
+    conn.write_all(b"QUIT\n").unwrap();
+    drop(conn);
+    server_thread.join().unwrap();
+
+    // the reply is a single line of space-separated k=v fields
+    let mut kv: HashMap<String, String> = HashMap::new();
+    for field in stats.split_whitespace() {
+        let (k, v) = field
+            .split_once('=')
+            .unwrap_or_else(|| panic!("field '{field}' is not k=v: {stats}"));
+        assert!(!kv.contains_key(k), "duplicate field {k}: {stats}");
+        kv.insert(k.to_string(), v.to_string());
+    }
+    let num = |k: &str| -> f64 {
+        kv.get(k)
+            .unwrap_or_else(|| panic!("missing documented field '{k}': {stats}"))
+            .parse()
+            .unwrap_or_else(|_| panic!("field '{k}' is not numeric: {stats}"))
+    };
+    for &k in NUMERIC_FIELDS {
+        let v = num(k);
+        assert!(v.is_finite() && v >= 0.0, "field {k} = {v}: {stats}");
+    }
+    // enum-valued fields
+    let weights = kv.get("weights").map(|s| s.as_str());
+    assert!(matches!(weights, Some("streamed") | Some("resident")), "{stats}");
+    let gran = kv.get("granularity").map(|s| s.as_str());
+    assert!(matches!(gran, Some("layer") | Some("matrix") | Some("none")), "{stats}");
+    // mat_wait_ms is five slash-separated millisecond buckets (one per
+    // matrix unit: norms/qkv/wo/w13/w2)
+    let waits = kv.get("mat_wait_ms").unwrap_or_else(|| panic!("missing mat_wait_ms: {stats}"));
+    let parts: Vec<f64> = waits
+        .split('/')
+        .map(|p| p.parse().unwrap_or_else(|_| panic!("mat_wait_ms part '{p}' not numeric")))
+        .collect();
+    assert_eq!(parts.len(), 5, "one wait bucket per matrix unit: {waits}");
+    assert!(parts.iter().all(|w| w.is_finite() && *w >= 0.0), "{waits}");
+    // the GEN above really ran through the counters
+    assert!(num("requests") >= 1.0, "{stats}");
+    assert!(num("tokens") >= 4.0, "{stats}");
+    assert!(num("batch_steps") >= 1.0, "{stats}");
+    assert_eq!(gran, Some("layer"), "default serving streams layer-granular: {stats}");
+    assert!(num("prefetch_depth") >= 1.0, "{stats}");
+}
+
+#[test]
+fn stats_reports_matrix_granularity_and_bandwidth_when_configured() {
+    use llamaf::sched::StageGranularity;
+    let model = tiny_model(4);
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 1,
+        granularity: StageGranularity::Matrix,
+        prefetch_depth: 4,
+        ..Default::default()
+    };
+    let m2 = Arc::clone(&model);
+    let server_thread =
+        std::thread::spawn(move || server.serve_shared(m2, &scalar_exec, &opts, Some(1)).unwrap());
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    conn.write_all(b"GEN 4 hi\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    line.clear();
+    conn.write_all(b"STATS\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let stats = line.trim_end().to_string();
+    conn.write_all(b"QUIT\n").unwrap();
+    drop(conn);
+    server_thread.join().unwrap();
+
+    assert!(stats.contains("granularity=matrix"), "{stats}");
+    assert!(stats.contains("prefetch_depth=4"), "{stats}");
+    // something was staged, so the derived bandwidth must be nonzero
+    let mbs = stats
+        .split_whitespace()
+        .find_map(|f| f.strip_prefix("stage_mb_s="))
+        .expect("stage_mb_s field present")
+        .parse::<f64>()
+        .unwrap();
+    assert!(mbs > 0.0, "staging ran, bandwidth must be derivable: {stats}");
+}

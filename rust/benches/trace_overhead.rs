@@ -1,0 +1,81 @@
+//! Tracing-overhead micro-benchmark: decode throughput with per-op
+//! execution tracing (`--trace` / `Engine::trace_start`) off vs on.
+//!
+//! Tracing hashes every GQMV output vector (FNV-1a over the f32 bits)
+//! and appends one 24-byte event per op, so the cost scales with
+//! activation volume, not weight volume — it should be a small, flat
+//! tax per decoded token.  The `trace_cost_ms_per_tok` case pins that
+//! tax so `bench-diff` catches an accidentally-hot capture path (e.g.
+//! hashing inside the disabled branch).
+//!
+//! Run: `cargo bench --bench trace_overhead [-- --quick]`
+
+use llamaf::bench::section;
+use llamaf::engine::forward::{CpuEngine, Engine};
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::model::{QuantModel, NANO};
+use llamaf::ps::ScalarGqmv;
+
+/// Greedy-decode `steps` tokens and return tok/s; with `traced` the
+/// engine records (and this fn discards) a full execution trace.
+fn decode_tok_s(engine: &mut CpuEngine, steps: usize, traced: bool) -> f64 {
+    if traced {
+        assert!(engine.trace_start("bench"), "CpuEngine must support tracing");
+    }
+    let out = generate(engine, &[1u32, 5, 9], steps, Sampler::Greedy, false)
+        .expect("bench generation failed");
+    if traced {
+        let t = engine.trace_take().expect("tracing enabled but no trace produced");
+        assert!(!t.is_empty(), "traced run recorded no ops");
+    }
+    out.tok_per_s
+}
+
+fn main() {
+    let smoke = llamaf::bench::smoke();
+    let quick = std::env::args().any(|a| a == "--quick") || smoke;
+    let steps = if smoke {
+        8
+    } else if quick {
+        16
+    } else {
+        64
+    };
+    let reps = if smoke { 2 } else { 3 };
+    let mut engine = CpuEngine::new(QuantModel::synthetic(NANO, 42), Box::new(ScalarGqmv));
+    let mut report = llamaf::bench::Report::new("trace_overhead");
+
+    section("per-op execution tracing overhead (NANO geometry, scalar GQMV)");
+    println!("{steps} greedy decode steps, best of {reps} runs per mode\n");
+
+    // interleave warmup: one throwaway run per mode so neither mode pays
+    // first-touch costs alone
+    decode_tok_s(&mut engine, steps, false);
+    decode_tok_s(&mut engine, steps, true);
+
+    let mut best_off = 0.0f64;
+    let mut best_on = 0.0f64;
+    for _ in 0..reps {
+        best_off = best_off.max(decode_tok_s(&mut engine, steps, false));
+        best_on = best_on.max(decode_tok_s(&mut engine, steps, true));
+    }
+    // per-token cost of tracing: the latency delta, not the ratio, since
+    // the absolute tax is what capture-path regressions move
+    let cost_ms = if best_off > 0.0 && best_on > 0.0 {
+        (1e3 / best_on - 1e3 / best_off).max(0.0)
+    } else {
+        0.0
+    };
+    let pct = if best_off > 0.0 { 100.0 * (1.0 - best_on / best_off).max(0.0) } else { 0.0 };
+    println!("trace off  {best_off:>9.1} tok/s");
+    println!("trace on   {best_on:>9.1} tok/s   (+{cost_ms:.3} ms/tok, -{pct:.1}% throughput)");
+
+    report.case("decode_trace_off", best_off, "tok/s");
+    report.case("decode_trace_on", best_on, "tok/s");
+    report.case("trace_cost", cost_ms, "ms/tok");
+
+    match report.write() {
+        Ok(p) => eprintln!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+}

@@ -26,10 +26,11 @@
 //! independent passes.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -37,7 +38,7 @@ use crate::engine::forward::{
     forward_batch, BatchLane, BatchScratch, LayerProvider, ResidentLayers,
 };
 use crate::engine::session::{Session, SessionGen};
-use crate::metrics::{BatchMetrics, ForwardProfile, TokenMeter};
+use crate::metrics::{BatchMetrics, ForwardProfile, RequestTrace, TokenMeter, TraceBuilder};
 use crate::model::{LlamaConfig, QuantModel};
 use crate::ps::gqmv::GqmvExec;
 use crate::runtime::Runtime;
@@ -164,9 +165,15 @@ enum LaneMsg {
     /// One greedy token was produced for this lane.
     Token { step: usize, id: u32 },
     /// The lane retired; its session is returned to the caller along
-    /// with the decode-side cadence meter.  `Err` carries a
-    /// human-readable reason (step failure, cancellation, ...).
-    Done { sess: Box<Session>, meter: Option<TokenMeter>, result: Result<(), String> },
+    /// with the decode-side cadence meter and (on success) the lane's
+    /// per-request observability trace.  `Err` carries a human-readable
+    /// reason (step failure, cancellation, ...).
+    Done {
+        sess: Box<Session>,
+        meter: Option<TokenMeter>,
+        trace: Option<Box<RequestTrace>>,
+        result: Result<(), String>,
+    },
 }
 
 /// One queued/active generation request.
@@ -183,6 +190,10 @@ struct LaneJob {
     /// token — measures true decode cadence, independent of how fast the
     /// caller drains its channel (a slow client must not skew rates).
     meter: Option<TokenMeter>,
+    /// Per-request observability recorder (queue wait, prefill/decode
+    /// split, staged-byte and stall attribution) — becomes the
+    /// [`RequestTrace`] returned with the lane's [`SessionGen`].
+    trace: TraceBuilder,
     tx: Sender<LaneMsg>,
     cancel: Arc<AtomicBool>,
 }
@@ -207,6 +218,8 @@ pub struct BatchScheduler {
     state: Mutex<SchedState>,
     cv: Condvar,
     metrics: BatchMetrics,
+    /// Monotonic request-id source for per-request traces.
+    next_id: AtomicU64,
     worker: Mutex<Option<JoinHandle<()>>>,
 }
 
@@ -226,6 +239,7 @@ impl BatchScheduler {
             state: Mutex::new(SchedState { pending: VecDeque::new(), shutdown: false }),
             cv: Condvar::new(),
             metrics: BatchMetrics::default(),
+            next_id: AtomicU64::new(0),
             worker: Mutex::new(None),
         });
         let thread_sched = Arc::clone(&sched);
@@ -294,6 +308,7 @@ impl BatchScheduler {
         sess.reset();
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = LaneJob {
             sess: Box::new(sess),
             prompt: prompt_ids.to_vec(),
@@ -302,6 +317,7 @@ impl BatchScheduler {
             steps,
             produced: 0,
             meter: None,
+            trace: TraceBuilder::new(id),
             tx,
             cancel: Arc::clone(&cancel),
         };
@@ -340,7 +356,7 @@ impl BatchScheduler {
                         }
                     }
                 }
-                Ok(LaneMsg::Done { sess, meter, result }) => {
+                Ok(LaneMsg::Done { sess, meter, trace, result }) => {
                     let sess = Some(*sess);
                     return match (cb_err, result) {
                         (Some(e), _) => (sess, Err(e)),
@@ -360,6 +376,7 @@ impl BatchScheduler {
                                     tok_per_s: meter.tok_per_s(),
                                     latency_p50_s: p50,
                                     latency_p99_s: p99,
+                                    trace: trace.map(|t| *t),
                                 }),
                             )
                         }
@@ -448,6 +465,7 @@ fn decode_loop(
     // step, keeping BatchMetrics.bytes_staged == StreamerStats.staged_bytes
     let mut bytes_attributed = 0u64;
     let mut wait_attributed = 0.0f64;
+    let mut unit_attributed = [0.0f64; STAGE_UNITS];
 
     loop {
         // ---- step barrier: retire/admit lanes ------------------------
@@ -478,6 +496,7 @@ fn decode_loop(
                 let _ = j.tx.send(LaneMsg::Done {
                     sess: j.sess,
                     meter,
+                    trace: None,
                     result: Err("canceled by client".into()),
                 });
             } else {
@@ -487,9 +506,15 @@ fn decode_loop(
         if active.is_empty() {
             continue;
         }
+        // queue wait ends at the barrier that admits the lane (idempotent
+        // for lanes already running)
+        for j in active.iter_mut() {
+            j.trace.admit();
+        }
 
         // ---- one step-synchronous batched forward --------------------
         let mut prof = ForwardProfile::default();
+        let step_t = Instant::now();
         let step_result = {
             let mut lanes: Vec<BatchLane> = active
                 .iter_mut()
@@ -508,6 +533,7 @@ fn decode_loop(
                 &mut prof,
             )
         };
+        let step_wall = step_t.elapsed().as_secs_f64();
         if let Err(e) = step_result {
             // submit-time validation makes this unreachable in practice;
             // if it happens, every lane of the step fails loudly and the
@@ -515,28 +541,43 @@ fn decode_loop(
             let msg = format!("batched decode step failed: {e:#}");
             for mut j in active.drain(..) {
                 let meter = j.meter.take();
-                let _ =
-                    j.tx.send(LaneMsg::Done { sess: j.sess, meter, result: Err(msg.clone()) });
+                let _ = j.tx.send(LaneMsg::Done {
+                    sess: j.sess,
+                    meter,
+                    trace: None,
+                    result: Err(msg.clone()),
+                });
             }
             continue;
         }
         let staged = layers.staged_bytes();
         let waited = layers.prefetch_wait_s();
-        sched.metrics.record_step(
-            active.len(),
-            staged - bytes_attributed,
-            waited - wait_attributed,
-            &prof,
-        );
+        let units = layers.wait_by_unit_s();
+        let step_bytes = staged - bytes_attributed;
+        let step_wait = waited - wait_attributed;
+        // same delta pattern, per matrix unit: the step's share of the
+        // streamer's lifetime wait gauges, charged to this step's lanes
+        let mut unit_delta = [0.0f64; STAGE_UNITS];
+        for i in 0..STAGE_UNITS {
+            unit_delta[i] = units[i] - unit_attributed[i];
+        }
+        sched.metrics.record_step(active.len(), step_bytes, step_wait, &prof);
         sched.metrics.set_ring_occupancy(layers.ring_occupancy_mean());
         sched.metrics.set_staging_time(layers.total_transfer_s());
-        sched.metrics.set_unit_waits(layers.wait_by_unit_s());
+        sched.metrics.set_unit_waits(units);
         bytes_attributed = staged;
         wait_attributed = waited;
+        unit_attributed = units;
 
         // ---- per-lane post-step: advance, sample, emit, retire -------
+        let occupancy = active.len();
         let mut keep = Vec::with_capacity(active.len());
         for (b, mut j) in active.drain(..).enumerate() {
+            // a step is prefill while it consumed a prompt token without
+            // sampling: prefill_steps + decode_steps == total forwards,
+            // decode_steps == tokens produced
+            let prefill = j.fed + 1 < j.prompt.len();
+            j.trace.record_step(prefill, step_wall, step_bytes, step_wait, unit_delta, occupancy);
             j.sess.pos += 1;
             j.fed += 1;
             let mut done = false;
@@ -557,7 +598,14 @@ fn decode_loop(
             }
             if done {
                 let meter = j.meter.take();
-                let _ = j.tx.send(LaneMsg::Done { sess: j.sess, meter, result: Ok(()) });
+                let mut trace = j.trace.finish();
+                trace.tok_per_s = meter.as_ref().map(|m| m.tok_per_s()).unwrap_or(0.0);
+                let _ = j.tx.send(LaneMsg::Done {
+                    sess: j.sess,
+                    meter,
+                    trace: Some(Box::new(trace)),
+                    result: Ok(()),
+                });
             } else {
                 keep.push(j);
             }
@@ -574,7 +622,12 @@ fn fail_pending_forever(sched: &BatchScheduler, msg: String) {
     st.shutdown = true;
     for mut j in st.pending.drain(..) {
         let meter = j.meter.take();
-        let _ = j.tx.send(LaneMsg::Done { sess: j.sess, meter, result: Err(msg.clone()) });
+        let _ = j.tx.send(LaneMsg::Done {
+            sess: j.sess,
+            meter,
+            trace: None,
+            result: Err(msg.clone()),
+        });
     }
 }
 
@@ -785,6 +838,29 @@ mod tests {
             assert!(sched.metrics().stage_mb_s() > 0.0, "{summary}");
             sched.shutdown();
         }
+    }
+
+    #[test]
+    fn request_trace_attributes_queue_prefill_and_decode() {
+        let qm = tiny_model(10);
+        let sched =
+            BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let prompt = [3u32, 4, 5];
+        let (_s, out) = sched.generate(Session::new(&qm.cfg), &prompt, 4, |_, _| Ok(()));
+        let gen = out.unwrap();
+        let t = gen.trace.expect("batched generation carries a request trace");
+        assert_eq!(t.prefill_steps, prompt.len() as u64 - 1, "prefill = non-sampling feeds");
+        assert_eq!(t.decode_steps, 4, "decode steps == tokens produced");
+        assert!(t.queue_s >= 0.0);
+        assert!(t.prefill_s + t.decode_s > 0.0, "step wall time was attributed");
+        assert!(t.staged_bytes > 0, "streamed serving stages weights");
+        assert!(t.batch_mean >= 1.0);
+        assert!((t.tok_per_s - gen.tok_per_s).abs() < 1e-9, "trace carries the lane's rate");
+        // ids are monotonic across requests
+        let (_s2, out2) = sched.generate(Session::new(&qm.cfg), &prompt, 2, |_, _| Ok(()));
+        let t2 = out2.unwrap().trace.unwrap();
+        assert!(t2.id > t.id, "ids must be monotonic: {} then {}", t.id, t2.id);
+        sched.shutdown();
     }
 
     #[test]

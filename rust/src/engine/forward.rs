@@ -19,6 +19,7 @@ use crate::ps::float::attention;
 use crate::ps::gqmv::GqmvExec;
 use crate::quant::{quantize_activation_into, QuantizedTensor};
 use crate::tensor;
+use crate::trace::{ExecTrace, TraceOp};
 
 /// A single-token incremental inference engine (batch = 1).
 pub trait Engine {
@@ -31,6 +32,19 @@ pub trait Engine {
     fn reset(&mut self);
     /// Human-readable engine/backend identifier.
     fn name(&self) -> String;
+    /// Start recording an execution trace (per-matrix activation digests)
+    /// labeled `label`; any previous recording is discarded.  Returns
+    /// `false` if this engine cannot trace (the default).
+    fn trace_start(&mut self, label: &str) -> bool {
+        let _ = label;
+        false
+    }
+    /// Detach and return the trace recorded since [`Engine::trace_start`],
+    /// stopping recording.  `None` if tracing was never started or is
+    /// unsupported.
+    fn trace_take(&mut self) -> Option<ExecTrace> {
+        None
+    }
 }
 
 /// One full Algorithm-2 forward pass for a single (token, pos, KV) lane:
@@ -44,6 +58,7 @@ pub trait Engine {
 /// dedicated batch-1 op sequence, pinned by
 /// `rust/tests/forward_unification.rs` against an op-for-op reference of
 /// the pre-unification pass.
+#[allow(clippy::too_many_arguments)]
 fn forward_pass(
     model: &QuantModel,
     exec: &mut dyn GqmvExec,
@@ -52,10 +67,11 @@ fn forward_pass(
     token: u32,
     pos: usize,
     prof: &mut ForwardProfile,
+    tracer: Option<&mut ExecTrace>,
 ) -> Result<()> {
     let mut layers = ModelLayers { model };
     let mut lanes = [BatchLane { kv, pos, token }];
-    forward_batch(model, &mut layers, exec, s, &mut lanes, prof)
+    forward_batch_traced(model, &mut layers, exec, s, &mut lanes, prof, tracer)
 }
 
 // ---------------------------------------------------------------------------
@@ -301,6 +317,26 @@ pub fn forward_batch(
     lanes: &mut [BatchLane<'_>],
     prof: &mut ForwardProfile,
 ) -> Result<()> {
+    forward_batch_traced(model, layers, exec, s, lanes, prof, None)
+}
+
+/// [`forward_batch`] with optional digest tracing: when `tracer` is `Some`,
+/// every GQMV output of the step is hashed with
+/// [`digest64`](crate::trace::digest64) into the trace, per lane —
+/// Wq‖Wk‖Wv pre-RoPE, Wo and W2 pre-residual, W1‖W3 pre-SwiGLU, and the
+/// classifier logits (at layer index `n_layers`).  With `tracer == None`
+/// the cost is one skipped branch per matrix group: no hashing, no
+/// allocation (`benches/trace_overhead.rs` measures exactly this).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_batch_traced(
+    model: &QuantModel,
+    layers: &mut dyn LayerProvider,
+    exec: &mut dyn GqmvExec,
+    s: &mut BatchScratch,
+    lanes: &mut [BatchLane<'_>],
+    prof: &mut ForwardProfile,
+    mut tracer: Option<&mut ExecTrace>,
+) -> Result<()> {
     let cfg = model.cfg;
     let nb = lanes.len();
     anyhow::ensure!(nb >= 1, "empty batch");
@@ -315,6 +351,10 @@ pub fn forward_batch(
             lane.token
         );
         anyhow::ensure!(lane.pos < cfg.seq_len, "pos {} >= seq_len {}", lane.pos, cfg.seq_len);
+    }
+
+    if let Some(t) = tracer.as_deref_mut() {
+        t.begin_step();
     }
 
     let t0 = Instant::now();
@@ -355,6 +395,11 @@ pub fn forward_batch(
             nb,
             prof,
         )?;
+        if let Some(t) = tracer.as_deref_mut() {
+            for b in 0..nb {
+                t.record(li, TraceOp::Qkv, b, &s.qkv[b * qkv_w..(b + 1) * qkv_w]);
+            }
+        }
 
         // RoPE + KV store (l.5), per lane at its own position
         let t = Instant::now();
@@ -392,6 +437,11 @@ pub fn forward_batch(
             nb,
             prof,
         )?;
+        if let Some(t) = tracer.as_deref_mut() {
+            for b in 0..nb {
+                t.record(li, TraceOp::Wo, b, &s.xb[b * d..(b + 1) * d]);
+            }
+        }
         let t = Instant::now();
         for b in 0..nb {
             tensor::add_assign(&mut s.x[b * d..(b + 1) * d], &s.xb[b * d..(b + 1) * d]);
@@ -424,6 +474,11 @@ pub fn forward_batch(
             nb,
             prof,
         )?;
+        if let Some(t) = tracer.as_deref_mut() {
+            for b in 0..nb {
+                t.record(li, TraceOp::W13, b, &s.h13[b * h2..(b + 1) * h2]);
+            }
+        }
         let t = Instant::now();
         for b in 0..nb {
             let lane_h = &mut s.h13[b * h2..(b + 1) * h2];
@@ -446,6 +501,11 @@ pub fn forward_batch(
             nb,
             prof,
         )?;
+        if let Some(t) = tracer.as_deref_mut() {
+            for b in 0..nb {
+                t.record(li, TraceOp::W2, b, &s.xb[b * d..(b + 1) * d]);
+            }
+        }
         let t = Instant::now();
         for b in 0..nb {
             tensor::add_assign(&mut s.x[b * d..(b + 1) * d], &s.xb[b * d..(b + 1) * d]);
@@ -471,6 +531,11 @@ pub fn forward_batch(
         nb,
         prof,
     )?;
+    if let Some(t) = tracer.as_deref_mut() {
+        for b in 0..nb {
+            t.record(cfg.n_layers, TraceOp::Cls, b, s.logits(b));
+        }
+    }
     Ok(())
 }
 
@@ -487,6 +552,7 @@ pub struct CpuEngine {
     pub exec: Box<dyn GqmvExec>,
     session: Session,
     s: BatchScratch,
+    tracer: Option<ExecTrace>,
 }
 
 impl CpuEngine {
@@ -495,7 +561,13 @@ impl CpuEngine {
     pub fn new(model: impl Into<Arc<QuantModel>>, exec: Box<dyn GqmvExec>) -> Self {
         let model = model.into();
         let cfg = model.cfg;
-        CpuEngine { exec, session: Session::new(&cfg), s: BatchScratch::new(&cfg, 1), model }
+        CpuEngine {
+            exec,
+            session: Session::new(&cfg),
+            s: BatchScratch::new(&cfg, 1),
+            tracer: None,
+            model,
+        }
     }
 
     /// Name of the GQMV backend this engine runs on.
@@ -527,6 +599,7 @@ impl CpuEngine {
             token,
             sess.pos,
             prof,
+            self.tracer.as_mut(),
         )?;
         sess.pos += 1;
         Ok(self.s.logits(0))
@@ -547,6 +620,7 @@ impl Engine for CpuEngine {
             token,
             pos,
             prof,
+            self.tracer.as_mut(),
         )?;
         self.session.pos = pos + 1;
         Ok(self.s.logits(0))
@@ -558,6 +632,15 @@ impl Engine for CpuEngine {
 
     fn name(&self) -> String {
         format!("cpu-resident/{}", self.exec.name())
+    }
+
+    fn trace_start(&mut self, label: &str) -> bool {
+        self.tracer = Some(ExecTrace::new(&self.model.cfg, label));
+        true
+    }
+
+    fn trace_take(&mut self) -> Option<ExecTrace> {
+        self.tracer.take()
     }
 }
 
@@ -858,6 +941,39 @@ mod tests {
         let mut p = ForwardProfile::default();
         assert!(e.forward(9999, 0, &mut p).is_err());
         assert!(e.forward(1, 10_000, &mut p).is_err());
+    }
+
+    #[test]
+    fn tracing_captures_every_matrix_op_and_reruns_identically() {
+        let qm = tiny_model(8);
+        let cfg = qm.cfg;
+        let mut e = CpuEngine::new(qm, Box::new(ScalarGqmv));
+        let mut p = ForwardProfile::default();
+        assert!(e.trace_take().is_none(), "no trace before trace_start");
+        assert!(e.trace_start("run1"));
+        for (pos, t) in [5u32, 8, 2].iter().enumerate() {
+            e.forward(*t, pos, &mut p).unwrap();
+        }
+        let t1 = e.trace_take().unwrap();
+        assert!(e.trace_take().is_none(), "trace_take detaches the trace");
+        // 4 per-layer matrix ops + 1 classifier per step, one lane
+        let per_step = cfg.n_layers * 4 + 1;
+        assert_eq!(t1.steps(), 3);
+        assert_eq!(t1.len(), 3 * per_step);
+        let e0 = t1.events()[0];
+        assert_eq!((e0.step, e0.layer, e0.op, e0.lane), (0, 0, crate::trace::TraceOp::Qkv, 0));
+        let last = *t1.events().last().unwrap();
+        assert_eq!(last.op, crate::trace::TraceOp::Cls);
+        assert_eq!(last.layer as usize, cfg.n_layers);
+        // an identical rerun digests identically (digest stability)
+        e.reset();
+        assert!(e.trace_start("run2"));
+        for (pos, t) in [5u32, 8, 2].iter().enumerate() {
+            e.forward(*t, pos, &mut p).unwrap();
+        }
+        let t2 = e.trace_take().unwrap();
+        let r = crate::trace::diff(&t1, &t2);
+        assert!(r.identical(), "{}", r.summary());
     }
 
     #[test]

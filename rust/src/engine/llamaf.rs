@@ -3,7 +3,7 @@
 //!
 //! Since the device-path unification there is **no private copy of the
 //! Algorithm-2 arithmetic here**: decoding runs through the same
-//! [`forward_batch`] as every CPU engine (one lane), with a device-aware
+//! [`forward_batch`](crate::engine::forward::forward_batch) as every CPU engine (one lane), with a device-aware
 //! provider/executor pair replacing the resident model:
 //!
 //! * [`DeviceLayers`] streams layer weights through the staging
@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::ckpt;
-use crate::engine::forward::{forward_batch, BatchLane, BatchScratch, Engine, LayerProvider};
+use crate::engine::forward::{forward_batch_traced, BatchLane, BatchScratch, Engine, LayerProvider};
 use crate::metrics::ForwardProfile;
 use crate::model::{KvCache, LlamaConfig, MatrixUnit, QuantModel};
 use crate::ps::gqmv::{check_shapes, check_shapes_fused, GqmvExec};
@@ -37,6 +37,7 @@ use crate::runtime::{DeviceWeights, Runtime};
 use crate::sched::{
     DiskFetcher, MemFetcher, PreparedMatrix, SchedMode, StageGranularity, Streamer, StreamerStats,
 };
+use crate::trace::ExecTrace;
 
 /// Host-tensor → device-buffer map shared by the [`DeviceLayers`]
 /// provider (which registers buffers as the streamer stages them) and the
@@ -107,7 +108,7 @@ impl Default for DevRegistry {
 
 /// Device-aware [`LayerProvider`]: streams layer weights through the
 /// staging [`Streamer`] at its configured granularity, lends the host
-/// copies to [`forward_batch`] and registers every staged matrix's device
+/// copies to [`forward_batch`](crate::engine::forward::forward_batch) and registers every staged matrix's device
 /// buffer in the shared [`DevRegistry`] so the paired [`DeviceGqmv`]
 /// launches kernels on pre-staged weights — never re-uploading on the
 /// decode hot path.
@@ -217,7 +218,7 @@ impl GqmvExec for DeviceGqmv {
 }
 
 /// The full LlamaF system engine: streamed layer weights + device GQMV,
-/// decoding through the unified [`forward_batch`] (one lane).
+/// decoding through the unified [`forward_batch`](crate::engine::forward::forward_batch) (one lane).
 pub struct LlamafEngine {
     cfg: LlamaConfig,
     /// Resident tensors (embeddings, final norm, classifier) viewed as a
@@ -231,6 +232,7 @@ pub struct LlamafEngine {
     streamer: Streamer,
     kv: KvCache,
     s: BatchScratch,
+    tracer: Option<ExecTrace>,
 }
 
 impl LlamafEngine {
@@ -287,6 +289,7 @@ impl LlamafEngine {
             streamer,
             kv: KvCache::new(&cfg),
             s: BatchScratch::new(&cfg, 1),
+            tracer: None,
         })
     }
 
@@ -340,6 +343,7 @@ impl LlamafEngine {
             streamer,
             kv: KvCache::new(&cfg),
             s: BatchScratch::new(&cfg, 1),
+            tracer: None,
         })
     }
 
@@ -381,13 +385,14 @@ impl Engine for LlamafEngine {
         // the staged buffers.  There is no device-private op sequence.
         let mut provider = DeviceLayers::new(&mut self.streamer, &self.registry);
         let mut lanes = [BatchLane { kv: &mut self.kv, pos, token }];
-        forward_batch(
+        forward_batch_traced(
             &self.resident,
             &mut provider,
             &mut self.exec,
             &mut self.s,
             &mut lanes,
             prof,
+            self.tracer.as_mut(),
         )?;
         Ok(self.s.logits(0))
     }
@@ -408,6 +413,15 @@ impl Engine for LlamafEngine {
                 SchedMode::Async => "async",
             }
         )
+    }
+
+    fn trace_start(&mut self, label: &str) -> bool {
+        self.tracer = Some(ExecTrace::new(&self.cfg, label));
+        true
+    }
+
+    fn trace_take(&mut self) -> Option<ExecTrace> {
+        self.tracer.take()
     }
 }
 

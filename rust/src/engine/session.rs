@@ -161,6 +161,10 @@ pub struct SessionGen {
     pub latency_p50_s: f64,
     /// 99th-percentile per-token latency in seconds.
     pub latency_p99_s: f64,
+    /// Per-request observability record — populated by the batch
+    /// scheduler's decode thread; `None` on the session-pool path, which
+    /// has no shared step counters to attribute.
+    pub trace: Option<crate::metrics::RequestTrace>,
 }
 
 /// Greedy generation against an external [`Session`] — the serving path.
@@ -206,6 +210,7 @@ pub fn generate_session(
         tok_per_s: meter.tok_per_s(),
         latency_p50_s: p50,
         latency_p99_s: p99,
+        trace: None,
     })
 }
 

@@ -53,6 +53,7 @@ pub mod cli;
 pub mod engine;
 pub mod exp;
 pub mod fpga;
+#[warn(missing_docs)]
 pub mod metrics;
 pub mod model;
 pub mod ps;
@@ -65,6 +66,8 @@ pub mod server;
 pub mod tensor;
 pub mod testutil;
 pub mod tokenizer;
+#[warn(missing_docs)]
+pub mod trace;
 pub mod util;
 
 /// Group size used throughout the paper (GS=256); checkpoints carry their

@@ -8,6 +8,7 @@
 //!   profile   — Table II component profiling
 //!   synth     — write a synthetic LFQ8 checkpoint at a chosen geometry
 //!   info      — runtime/artifact inventory
+//!   trace-diff — compare two execution traces (`generate --trace`)
 
 use std::path::Path;
 use std::sync::Arc;
@@ -34,6 +35,8 @@ COMMANDS
             [--sync|--async] [--prefetch-depth N]
             [--stream-granularity layer|matrix]
             [--top-p P --temperature T --seed S]
+            [--trace <out.trace>]  record a per-op execution trace (the
+            digest of every GQMV output) for trace-diff
   serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
             [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
             [--max-batch B] [--prefetch-depth N]
@@ -58,6 +61,10 @@ COMMANDS
             compare two bench-json/ directories case by case and fail
             on regressions beyond the threshold (CI runs this
             advisorily against the previous run's artifact)
+  trace-diff <a.trace> <b.trace>
+            compare two execution traces op by op; prints the first
+            divergent op with (step, layer, matrix, lane) coordinates
+            and exits nonzero unless the traces are identical
 ";
 
 fn main() {
@@ -119,6 +126,7 @@ fn run() -> Result<()> {
         "synth" => cmd_synth(&args),
         "info" => cmd_info(&args),
         "bench-diff" => cmd_bench_diff(&args),
+        "trace-diff" => cmd_trace_diff(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -155,7 +163,20 @@ fn cmd_generate(args: &Args) -> Result<()> {
         Sampler::Greedy
     };
     eprintln!("engine: {}  prompt tokens: {}  steps: {steps}", engine.name(), prompt_ids.len());
+    let trace_out = args.get("trace").map(|s| s.to_string());
+    if trace_out.is_some() {
+        let label = engine.name();
+        anyhow::ensure!(
+            engine.trace_start(&label),
+            "engine '{label}' does not support --trace execution tracing"
+        );
+    }
     let out = generate(engine.as_mut(), &prompt_ids, steps, sampler, !args.flag("greedy"))?;
+    if let Some(path) = trace_out {
+        let trace = engine.trace_take().context("tracing was enabled but no trace was produced")?;
+        trace.save(Path::new(&path))?;
+        eprintln!("wrote execution trace ({} ops, {} steps) to {path}", trace.len(), trace.steps());
+    }
     println!("{}{}", prompt, tok.decode(&out.generated));
     eprintln!(
         "\n[{} tokens  {:.3} tok/s  p50 {:.2} ms  p99 {:.2} ms  matrix {:.0}%]",
@@ -203,7 +224,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             eprintln!(
                 "llamaf serving on {} ({} x{} workers, batch<= {}, {} weights, prefetch \
                  depth {}, {}-granular staging, {} pooled sessions, queue {}) — \
-                 protocol: GEN/SGEN <steps> <prompt> | STATS | PING | SHUTDOWN | QUIT",
+                 protocol: GEN/SGEN <steps> <prompt> | STATS | TRACE | METRICS | PING | \
+                 SHUTDOWN | QUIT",
                 server.local_addr()?,
                 engine_kind,
                 opts.workers,
@@ -297,6 +319,22 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         100.0 * threshold
     );
     anyhow::ensure!(regressed == 0, "{regressed} bench regression(s) beyond the threshold");
+    Ok(())
+}
+
+/// Compare two execution traces written by `generate --trace` op by op.
+/// Prints both trace labels and the diff verdict; exits nonzero unless
+/// the traces are bit-identical over the same op schedule, so CI (and
+/// scripts) can assert cross-backend equivalence directly.
+fn cmd_trace_diff(args: &Args) -> Result<()> {
+    anyhow::ensure!(args.positional.len() == 2, "usage: llamaf trace-diff <a.trace> <b.trace>");
+    let a = llamaf::trace::ExecTrace::load(Path::new(&args.positional[0]))?;
+    let b = llamaf::trace::ExecTrace::load(Path::new(&args.positional[1]))?;
+    println!("a: {} ({} ops, {} steps)", a.label(), a.len(), a.steps());
+    println!("b: {} ({} ops, {} steps)", b.label(), b.len(), b.steps());
+    let report = llamaf::trace::diff(&a, &b);
+    println!("{}", report.summary());
+    anyhow::ensure!(report.identical(), "traces diverge");
     Ok(())
 }
 

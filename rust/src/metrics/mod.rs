@@ -3,9 +3,13 @@
 //! counters (per-request latency/throughput histograms, queue-depth
 //! gauges) the concurrent server exports via its `STATS` command.
 
+pub mod request;
+
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+pub use request::{RequestTrace, TraceBuilder};
 
 use crate::util::stats::percentile;
 
@@ -13,16 +17,20 @@ use crate::util::stats::percentile;
 /// on matrix computation only).
 #[derive(Clone, Debug, Default)]
 pub struct GopsCounter {
+    /// Multiply-accumulates issued so far.
     pub macs: u64,
+    /// Seconds spent issuing them.
     pub seconds: f64,
 }
 
 impl GopsCounter {
+    /// Charge one `rows × cols` GQMV that took `seconds`.
     pub fn record(&mut self, rows: usize, cols: usize, seconds: f64) {
         self.macs += (rows * cols) as u64;
         self.seconds += seconds;
     }
 
+    /// Giga-ops per second over everything recorded (2 ops per MAC).
     pub fn gops(&self) -> f64 {
         if self.seconds == 0.0 {
             0.0
@@ -37,6 +45,7 @@ impl GopsCounter {
 pub struct TokenMeter {
     start: Instant,
     last: Instant,
+    /// Inter-token gaps in seconds, one entry per [`TokenMeter::tick`].
     pub latencies_s: Vec<f64>,
 }
 
@@ -47,6 +56,7 @@ impl Default for TokenMeter {
 }
 
 impl TokenMeter {
+    /// Start the clock now.
     pub fn new() -> Self {
         let now = Instant::now();
         TokenMeter { start: now, last: now, latencies_s: Vec::new() }
@@ -59,10 +69,12 @@ impl TokenMeter {
         self.last = now;
     }
 
+    /// Tokens ticked so far.
     pub fn tokens(&self) -> usize {
         self.latencies_s.len()
     }
 
+    /// Mean decode throughput from first tick to last.
     pub fn tok_per_s(&self) -> f64 {
         let total = self.last.duration_since(self.start).as_secs_f64();
         if total == 0.0 {
@@ -72,6 +84,7 @@ impl TokenMeter {
         }
     }
 
+    /// (p50, p99) of the inter-token latencies, in seconds.
     pub fn p50_p99(&self) -> (f64, f64) {
         if self.latencies_s.is_empty() {
             return (0.0, 0.0);
@@ -85,10 +98,15 @@ impl TokenMeter {
 /// Component timing breakdown of a forward pass (Table II rows).
 #[derive(Clone, Debug, Default)]
 pub struct ForwardProfile {
+    /// GQMV (matrix computation) seconds.
     pub matrix_s: f64,
+    /// Multi-head attention seconds (scores + weighted sum).
     pub attention_s: f64,
+    /// SwiGLU activation seconds.
     pub swiglu_s: f64,
+    /// RoPE rotation seconds.
     pub rope_s: f64,
+    /// RMSNorm seconds.
     pub rmsnorm_s: f64,
     /// quantize + residual + embedding + sampling glue
     pub other_s: f64,
@@ -97,6 +115,7 @@ pub struct ForwardProfile {
 }
 
 impl ForwardProfile {
+    /// Sum of every component, transfer and glue included.
     pub fn total(&self) -> f64 {
         self.matrix_s + self.attention_s + self.swiglu_s + self.rope_s + self.rmsnorm_s
             + self.other_s
@@ -118,6 +137,7 @@ impl ForwardProfile {
         ]
     }
 
+    /// Add another profile's components into this one.
     pub fn merge(&mut self, o: &ForwardProfile) {
         self.matrix_s += o.matrix_s;
         self.attention_s += o.attention_s;
@@ -160,6 +180,7 @@ impl Histogram {
         b.min(HIST_BUCKETS - 1)
     }
 
+    /// Record one sample; non-finite or negative values are discarded.
     pub fn record(&mut self, v: f64) {
         if !v.is_finite() || v < 0.0 {
             return;
@@ -170,10 +191,12 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Exact arithmetic mean of the recorded samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -182,6 +205,7 @@ impl Histogram {
         }
     }
 
+    /// Largest sample recorded (0 when empty).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -203,6 +227,7 @@ impl Histogram {
         self.max
     }
 
+    /// Fold another histogram's buckets and moments into this one.
     pub fn merge(&mut self, o: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(&o.counts) {
             *a += b;
@@ -219,13 +244,23 @@ impl Histogram {
 /// worker.
 #[derive(Default)]
 pub struct ServerMetrics {
+    /// Completed generation requests.
     pub requests: AtomicU64,
+    /// Connections rejected at the admission gate.
     pub rejected: AtomicU64,
+    /// Tokens generated across all completed requests.
     pub tokens: AtomicU64,
     queue_depth: AtomicUsize,
     queue_peak: AtomicUsize,
     latency: Mutex<Histogram>,
     throughput: Mutex<Histogram>,
+    // per-request trace aggregates (the `METRICS` endpoint's additions)
+    traced: AtomicU64,
+    queue_wait: Mutex<Histogram>,
+    prefill_ns: AtomicU64,
+    decode_ns: AtomicU64,
+    prefill_tokens: AtomicU64,
+    decode_tokens: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -239,8 +274,62 @@ impl ServerMetrics {
         }
     }
 
+    /// Count one rejected connection.
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one completed request's [`RequestTrace`] into the aggregates
+    /// the `METRICS` endpoint exports.
+    pub fn record_trace(&self, t: &RequestTrace) {
+        self.traced.fetch_add(1, Ordering::Relaxed);
+        self.queue_wait.lock().unwrap().record(t.queue_s);
+        self.prefill_ns.fetch_add((t.prefill_s.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+        self.decode_ns.fetch_add((t.decode_s.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(t.prefill_steps, Ordering::Relaxed);
+        self.decode_tokens.fetch_add(t.decode_steps, Ordering::Relaxed);
+    }
+
+    /// Requests that came back with a per-request trace.
+    pub fn traced(&self) -> u64 {
+        self.traced.load(Ordering::Relaxed)
+    }
+
+    /// (p50, p99) of per-request queue wait, in milliseconds.
+    pub fn queue_wait_ms_p50_p99(&self) -> (f64, f64) {
+        let h = self.queue_wait.lock().unwrap();
+        (1e3 * h.quantile(0.5), 1e3 * h.quantile(0.99))
+    }
+
+    /// Total wall seconds traced requests spent in prefill steps.
+    pub fn prefill_s(&self) -> f64 {
+        self.prefill_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Total wall seconds traced requests spent in decode steps.
+    pub fn decode_s(&self) -> f64 {
+        self.decode_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Prompt tokens consumed by prefill steps of traced requests.
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefill_tokens.load(Ordering::Relaxed)
+    }
+
+    /// Tokens sampled by decode steps of traced requests.
+    pub fn decode_tokens(&self) -> u64 {
+        self.decode_tokens.load(Ordering::Relaxed)
+    }
+
+    /// (p50, p99, mean) request latency in milliseconds.
+    pub fn latency_ms(&self) -> (f64, f64, f64) {
+        let lat = self.latency.lock().unwrap();
+        (1e3 * lat.quantile(0.5), 1e3 * lat.quantile(0.99), 1e3 * lat.mean())
+    }
+
+    /// Median per-request decode throughput, tok/s.
+    pub fn tok_s_p50(&self) -> f64 {
+        self.throughput.lock().unwrap().quantile(0.5)
     }
 
     /// Gauge: current depth of the pending-connection queue.
@@ -249,10 +338,12 @@ impl ServerMetrics {
         self.queue_peak.fetch_max(depth, Ordering::Relaxed);
     }
 
+    /// Gauge: last reported pending-connection queue depth.
     pub fn queue_depth(&self) -> usize {
         self.queue_depth.load(Ordering::Relaxed)
     }
 
+    /// High-water mark of the pending-connection queue.
     pub fn queue_peak(&self) -> usize {
         self.queue_peak.load(Ordering::Relaxed)
     }
@@ -685,5 +776,36 @@ mod tests {
         assert!(s.contains("tokens=32"), "{s}");
         assert!(s.contains("queue=1"), "{s}");
         assert!(s.contains("queue_peak=3"), "{s}");
+    }
+
+    #[test]
+    fn record_trace_feeds_the_aggregates() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.traced(), 0);
+        assert_eq!(m.queue_wait_ms_p50_p99(), (0.0, 0.0));
+        let t = RequestTrace {
+            id: 0,
+            queue_s: 0.004,
+            prefill_steps: 5,
+            decode_steps: 8,
+            prefill_s: 0.050,
+            decode_s: 0.080,
+            staged_bytes: 1000,
+            prefetch_wait_s: 0.0,
+            unit_wait_s: [0.0; MAT_WAIT_UNITS],
+            batch_mean: 1.0,
+            tok_per_s: 100.0,
+        };
+        m.record_trace(&t);
+        m.record_trace(&t);
+        assert_eq!(m.traced(), 2);
+        assert_eq!(m.prefill_tokens(), 10);
+        assert_eq!(m.decode_tokens(), 16);
+        assert!((m.prefill_s() - 0.100).abs() < 1e-6);
+        assert!((m.decode_s() - 0.160).abs() < 1e-6);
+        let (p50, p99) = m.queue_wait_ms_p50_p99();
+        // log2 buckets: within a factor of 2 of the 4 ms sample
+        assert!((2.0..=8.0).contains(&p50), "p50 {p50}");
+        assert!(p50 <= p99);
     }
 }

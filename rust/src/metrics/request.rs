@@ -1,0 +1,237 @@
+//! Per-request observability: a start/finish-delta recorder that rides one
+//! lane through the batch scheduler and comes back as a [`RequestTrace`].
+//!
+//! The decode thread owns shared lifetime counters (staged bytes, prefetch
+//! waits, per-matrix-unit waits).  Per-request attribution uses the same
+//! delta pattern the scheduler already applies per step: snapshot the
+//! counters before a step, subtract after, and charge the *step delta* to
+//! every lane that was active in that step.  A step's staged weights serve
+//! all its lanes at once, so the same delta is deliberately charged to each
+//! — summing `staged_bytes` across concurrent requests over-counts the wire
+//! by design (each lane reports the bandwidth *it* observed).
+
+use std::time::Instant;
+
+use crate::metrics::MAT_WAIT_UNITS;
+
+/// Accumulates one request's observability record while its lane lives in
+/// the scheduler.  Created at submit time (starting the queue-wait clock),
+/// updated once per batched step, and converted with
+/// [`TraceBuilder::finish`] when the lane retires.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    id: u64,
+    submitted: Instant,
+    admitted: bool,
+    queue_s: f64,
+    prefill_steps: u64,
+    decode_steps: u64,
+    prefill_s: f64,
+    decode_s: f64,
+    staged_bytes: u64,
+    prefetch_wait_s: f64,
+    unit_wait_s: [f64; MAT_WAIT_UNITS],
+    occupancy_sum: u64,
+}
+
+impl TraceBuilder {
+    /// Start the recorder for request `id`; the queue-wait clock starts now.
+    pub fn new(id: u64) -> Self {
+        TraceBuilder {
+            id,
+            submitted: Instant::now(),
+            admitted: false,
+            queue_s: 0.0,
+            prefill_steps: 0,
+            decode_steps: 0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            staged_bytes: 0,
+            prefetch_wait_s: 0.0,
+            unit_wait_s: [0.0; MAT_WAIT_UNITS],
+            occupancy_sum: 0,
+        }
+    }
+
+    /// Mark the lane admitted to the step barrier, freezing the queue wait.
+    /// Idempotent: only the first call records.
+    pub fn admit(&mut self) {
+        if !self.admitted {
+            self.admitted = true;
+            self.queue_s = self.submitted.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Charge one batched step to this lane.  `prefill` is true while the
+    /// step consumed a prompt token without sampling; the remaining deltas
+    /// are the step's shared counter deltas (see module docs) plus the
+    /// step's lane occupancy.
+    pub fn record_step(
+        &mut self,
+        prefill: bool,
+        wall_s: f64,
+        staged_bytes: u64,
+        prefetch_wait_s: f64,
+        unit_wait_s: [f64; MAT_WAIT_UNITS],
+        occupancy: usize,
+    ) {
+        if prefill {
+            self.prefill_steps += 1;
+            self.prefill_s += wall_s;
+        } else {
+            self.decode_steps += 1;
+            self.decode_s += wall_s;
+        }
+        self.staged_bytes += staged_bytes;
+        self.prefetch_wait_s += prefetch_wait_s;
+        for (acc, w) in self.unit_wait_s.iter_mut().zip(unit_wait_s) {
+            *acc += w.max(0.0);
+        }
+        self.occupancy_sum += occupancy as u64;
+    }
+
+    /// Snapshot the record as an immutable [`RequestTrace`].  `tok_per_s`
+    /// is left at 0; the caller fills it from the lane's `TokenMeter`.
+    pub fn finish(&self) -> RequestTrace {
+        let steps = self.prefill_steps + self.decode_steps;
+        RequestTrace {
+            id: self.id,
+            queue_s: self.queue_s,
+            prefill_steps: self.prefill_steps,
+            decode_steps: self.decode_steps,
+            prefill_s: self.prefill_s,
+            decode_s: self.decode_s,
+            staged_bytes: self.staged_bytes,
+            prefetch_wait_s: self.prefetch_wait_s,
+            unit_wait_s: self.unit_wait_s,
+            batch_mean: if steps == 0 { 0.0 } else { self.occupancy_sum as f64 / steps as f64 },
+            tok_per_s: 0.0,
+        }
+    }
+}
+
+/// One completed request's observability record — what the server returns
+/// from the `TRACE` command and folds into the `METRICS` aggregates.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    /// Scheduler-assigned request id (monotonic per scheduler).
+    pub id: u64,
+    /// Seconds between submit and admission to the first step (queue wait).
+    pub queue_s: f64,
+    /// Steps that fed a prompt token without sampling (`prompt_len - 1`).
+    pub prefill_steps: u64,
+    /// Steps that sampled a token — equals the tokens generated.
+    pub decode_steps: u64,
+    /// Wall seconds of the lane's prefill steps.
+    pub prefill_s: f64,
+    /// Wall seconds of the lane's decode steps.
+    pub decode_s: f64,
+    /// Weight bytes the shared streamer staged during the lane's steps
+    /// (step deltas; shared with co-resident lanes — see module docs).
+    pub staged_bytes: u64,
+    /// Visible armed-prefetch wait during the lane's steps (step deltas).
+    pub prefetch_wait_s: f64,
+    /// Visible staging wait per matrix unit (norms/qkv/wo/w13/w2, step
+    /// deltas) — which matrix stalled *this* request.
+    pub unit_wait_s: [f64; MAT_WAIT_UNITS],
+    /// Mean lanes active in this lane's steps (1.0 = it ran alone).
+    pub batch_mean: f64,
+    /// End-to-end decode throughput from the lane's `TokenMeter`.
+    pub tok_per_s: f64,
+}
+
+impl RequestTrace {
+    /// One-line `k=v` rendering — the payload of the server's `TRACE`
+    /// reply.  Field names and units are documented in
+    /// `docs/OBSERVABILITY.md` and pinned by `tests/protocol_stats.rs`.
+    pub fn summary(&self) -> String {
+        let w = &self.unit_wait_s;
+        format!(
+            "id={} queue_ms={:.3} prefill_tokens={} decode_tokens={} prefill_ms={:.3} \
+             decode_ms={:.3} staged_bytes={} prefetch_wait_ms={:.3} \
+             mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} batch_mean={:.2} tok_s={:.1}",
+            self.id,
+            1e3 * self.queue_s,
+            self.prefill_steps,
+            self.decode_steps,
+            1e3 * self.prefill_s,
+            1e3 * self.decode_s,
+            self.staged_bytes,
+            1e3 * self.prefetch_wait_s,
+            1e3 * w[0],
+            1e3 * w[1],
+            1e3 * w[2],
+            1e3 * w[3],
+            1e3 * w[4],
+            self.batch_mean,
+            self.tok_per_s,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_and_splits_phases() {
+        let mut b = TraceBuilder::new(7);
+        b.admit();
+        b.admit(); // idempotent
+        // 2 prefill steps, 3 decode steps, occupancy 2 throughout
+        for _ in 0..2 {
+            b.record_step(true, 0.010, 100, 0.001, [0.001, 0.0, 0.0, 0.0, 0.0], 2);
+        }
+        for _ in 0..3 {
+            b.record_step(false, 0.020, 200, 0.002, [0.0, 0.0, 0.0, 0.003, 0.0], 2);
+        }
+        let t = b.finish();
+        assert_eq!(t.id, 7);
+        assert_eq!(t.prefill_steps, 2);
+        assert_eq!(t.decode_steps, 3);
+        assert!((t.prefill_s - 0.020).abs() < 1e-9);
+        assert!((t.decode_s - 0.060).abs() < 1e-9);
+        assert_eq!(t.staged_bytes, 800);
+        assert!((t.prefetch_wait_s - 0.008).abs() < 1e-9);
+        assert!((t.unit_wait_s[0] - 0.002).abs() < 1e-9);
+        assert!((t.unit_wait_s[3] - 0.009).abs() < 1e-9);
+        assert!((t.batch_mean - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_carries_every_documented_field() {
+        let mut b = TraceBuilder::new(1);
+        b.admit();
+        b.record_step(true, 0.001, 10, 0.0, [0.0; MAT_WAIT_UNITS], 1);
+        b.record_step(false, 0.002, 10, 0.0, [0.0; MAT_WAIT_UNITS], 1);
+        let mut t = b.finish();
+        t.tok_per_s = 42.0;
+        let s = t.summary();
+        for field in [
+            "id=1",
+            "queue_ms=",
+            "prefill_tokens=1",
+            "decode_tokens=1",
+            "prefill_ms=",
+            "decode_ms=",
+            "staged_bytes=20",
+            "prefetch_wait_ms=",
+            "mat_wait_ms=",
+            "batch_mean=1.00",
+            "tok_s=42.0",
+        ] {
+            assert!(s.contains(field), "summary missing {field}: {s}");
+        }
+        // mat_wait_ms is 5 slash-separated buckets, like STATS
+        let mw = s.split_whitespace().find_map(|f| f.strip_prefix("mat_wait_ms=")).unwrap();
+        assert_eq!(mw.split('/').count(), 5);
+    }
+
+    #[test]
+    fn empty_finish_is_all_zero() {
+        let t = TraceBuilder::new(0).finish();
+        assert_eq!(t.prefill_steps + t.decode_steps, 0);
+        assert_eq!(t.batch_mean, 0.0);
+        assert_eq!(t.staged_bytes, 0);
+    }
+}

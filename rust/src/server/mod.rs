@@ -28,6 +28,14 @@
 //!   `STATS`                         →  one-line metrics snapshot
 //!                                      (sessions, queue, latency, batch
 //!                                      occupancy, bytes staged)
+//!   `TRACE`                         →  `OK trace <k=v ...>` — per-request
+//!                                      timing breakdown of the LAST
+//!                                      completed generation on this
+//!                                      connection (shared mode)
+//!   `METRICS`                       →  `METRICS <n>` then `n` lines of
+//!                                      `llamaf_<name> <value>` — a
+//!                                      scrapeable flat text export of
+//!                                      every gauge/counter (shared mode)
 //!   `PING`                          →  `PONG`
 //!   `SHUTDOWN`                      →  `OK shutting down`; drains queued
 //!                                      connections, then exits (shared)
@@ -50,7 +58,7 @@ use crate::engine::batch::{BatchOpts, BatchScheduler, WeightMode};
 use crate::engine::forward::Engine;
 use crate::engine::generate::{generate, Sampler};
 use crate::engine::session::{Session, SessionPool};
-use crate::metrics::ServerMetrics;
+use crate::metrics::{RequestTrace, ServerMetrics};
 use crate::model::{LlamaConfig, QuantModel};
 use crate::ps::gqmv::GqmvExec;
 use crate::sched::{SchedMode, StageGranularity};
@@ -361,6 +369,7 @@ impl Server {
         let mut out = stream.try_clone()?;
         let reader = BufReader::new(stream);
         let mut session: Option<Session> = None;
+        let mut last_trace: Option<RequestTrace> = None;
 
         let mut result = Ok(());
         for line in reader.lines() {
@@ -375,7 +384,8 @@ impl Server {
             if line == "QUIT" {
                 break;
             }
-            let reply = self.shared_command(&line, shared, conn_id, &mut session, &mut out);
+            let reply = self
+                .shared_command(&line, shared, conn_id, &mut session, &mut last_trace, &mut out);
             match reply {
                 Ok(Some(r)) => {
                     if out.write_all(r.as_bytes()).and_then(|_| out.write_all(b"\n")).is_err() {
@@ -401,12 +411,15 @@ impl Server {
 
     /// Execute one shared-mode command.  `Ok(Some(reply))` for one-line
     /// replies, `Ok(None)` when the command streamed its own output.
+    /// `last_trace` is per-connection state: the [`RequestTrace`] of the
+    /// most recent completed generation, served back by `TRACE`.
     fn shared_command(
         &self,
         line: &str,
         shared: &Shared,
         conn_id: u64,
         session: &mut Option<Session>,
+        last_trace: &mut Option<RequestTrace>,
         out: &mut TcpStream,
     ) -> Result<Option<String>> {
         if line == "PING" {
@@ -428,12 +441,27 @@ impl Server {
                 shared.sched.metrics().summary(),
             )));
         }
+        if line == "TRACE" {
+            let t = last_trace
+                .as_ref()
+                .context("no completed generation on this connection (run GEN/SGEN first)")?;
+            return Ok(Some(format!("OK trace {}", t.summary())));
+        }
+        if line == "METRICS" {
+            let lines = metrics_lines(shared);
+            out.write_all(format!("METRICS {}\n", lines.len()).as_bytes())?;
+            for (name, value) in lines {
+                out.write_all(format!("llamaf_{name} {value}\n").as_bytes())?;
+            }
+            out.flush()?;
+            return Ok(None);
+        }
         let (streaming, rest) = if let Some(r) = line.strip_prefix("SGEN ") {
             (true, r)
         } else if let Some(r) = line.strip_prefix("GEN ") {
             (false, r)
         } else {
-            anyhow::bail!("unknown command (GEN/SGEN/STATS/PING/SHUTDOWN/QUIT)")
+            anyhow::bail!("unknown command (GEN/SGEN/STATS/TRACE/METRICS/PING/SHUTDOWN/QUIT)")
         };
 
         let (steps, prompt) = parse_gen(rest, shared.cfg.seq_len)?;
@@ -482,6 +510,10 @@ impl Server {
             }
         };
         shared.metrics.record_request(t.elapsed().as_secs_f64(), gen.generated.len() as u64);
+        if let Some(trace) = &gen.trace {
+            shared.metrics.record_trace(trace);
+            *last_trace = Some(trace.clone());
+        }
 
         if streaming {
             out.write_all(
@@ -509,6 +541,61 @@ fn next_conn(shared: &Shared) -> Option<TcpStream> {
         }
         q = shared.cv.wait(q).unwrap();
     }
+}
+
+/// Every gauge/counter of the `METRICS` export as `(name, value)` pairs
+/// (without the `llamaf_` prefix), in the pinned order documented in
+/// `docs/OBSERVABILITY.md`.  All values are plain decimal numbers.
+fn metrics_lines(shared: &Shared) -> Vec<(&'static str, String)> {
+    let (idle, busy) = shared.pool.counts();
+    let m = &shared.metrics;
+    let b = shared.sched.metrics();
+    let (lat_p50, lat_p99, lat_mean) = m.latency_ms();
+    let (qw_p50, qw_p99) = m.queue_wait_ms_p50_p99();
+    let prof = b.profile();
+    let prof_total = prof.total();
+    let matrix_pct = if prof_total > 0.0 { 100.0 * prof.matrix_s / prof_total } else { 0.0 };
+    let mw = b.unit_wait_ms();
+    vec![
+        ("sessions_idle", idle.to_string()),
+        ("sessions_busy", busy.to_string()),
+        ("sessions_cap", shared.pool.capacity().to_string()),
+        ("workers", shared.workers_live.load(Ordering::SeqCst).to_string()),
+        ("requests_total", m.requests.load(Ordering::Relaxed).to_string()),
+        ("rejected_total", m.rejected.load(Ordering::Relaxed).to_string()),
+        ("tokens_total", m.tokens.load(Ordering::Relaxed).to_string()),
+        ("queue_depth", m.queue_depth().to_string()),
+        ("queue_peak", m.queue_peak().to_string()),
+        ("request_latency_p50_ms", format!("{lat_p50:.3}")),
+        ("request_latency_p99_ms", format!("{lat_p99:.3}")),
+        ("request_latency_mean_ms", format!("{lat_mean:.3}")),
+        ("request_tok_s_p50", format!("{:.3}", m.tok_s_p50())),
+        ("traced_requests_total", m.traced().to_string()),
+        ("queue_wait_ms_p50", format!("{qw_p50:.3}")),
+        ("queue_wait_ms_p99", format!("{qw_p99:.3}")),
+        ("prefill_seconds_total", format!("{:.6}", m.prefill_s())),
+        ("decode_seconds_total", format!("{:.6}", m.decode_s())),
+        ("prefill_tokens_total", m.prefill_tokens().to_string()),
+        ("decode_tokens_total", m.decode_tokens().to_string()),
+        ("batch_steps_total", b.steps().to_string()),
+        ("batch_lane_tokens_total", b.lane_tokens().to_string()),
+        ("batch_occupancy_mean", format!("{:.3}", b.occupancy_mean())),
+        ("batch_occupancy_max", format!("{:.3}", b.occupancy_max())),
+        ("staged_bytes_total", b.bytes_staged().to_string()),
+        ("staged_bytes_per_token", format!("{:.1}", b.bytes_per_token())),
+        ("prefetch_wait_ms_total", format!("{:.3}", 1e3 * b.prefetch_wait_s())),
+        ("prefetch_depth", b.ring_depth().to_string()),
+        ("ring_occupancy", format!("{:.3}", b.ring_occupancy())),
+        ("stage_mb_s", format!("{:.3}", b.stage_mb_s())),
+        ("mat_wait_ms_norms", format!("{:.3}", mw[0])),
+        ("mat_wait_ms_qkv", format!("{:.3}", mw[1])),
+        ("mat_wait_ms_wo", format!("{:.3}", mw[2])),
+        ("mat_wait_ms_w13", format!("{:.3}", mw[3])),
+        ("mat_wait_ms_w2", format!("{:.3}", mw[4])),
+        ("matrix_time_pct", format!("{matrix_pct:.1}")),
+        ("weights_resident", if shared.weights == "resident" { "1" } else { "0" }.to_string()),
+        ("granularity_matrix", if b.granularity() == "matrix" { "1" } else { "0" }.to_string()),
+    ]
 }
 
 /// Parse `"<steps> <prompt...>"`, validating the step count.

@@ -1,0 +1,606 @@
+//! Execution tracing: per-matrix activation digests + cross-backend diff.
+//!
+//! A recorded [`ExecTrace`] is an ordered list of (step, layer, op, lane,
+//! digest) events, one per GQMV output produced by `forward_batch`.  The
+//! digest is a cheap order-sensitive 64-bit FNV-1a hash over the raw f32 bit
+//! patterns of the output tensor, so two traces match iff every hashed
+//! activation is bit-identical — the same contract the bit-exactness tests
+//! assert, but localizable: [`diff`] reports the *first* divergent op with
+//! exact (step, layer, matrix, lane) coordinates instead of a bare `assert`
+//! failure on final logits.
+//!
+//! Traces serialize to a line-oriented text format (see [`ExecTrace::to_text`])
+//! so `llamaf trace-diff` can compare recordings made by different backends
+//! (host vs device runtime, resident vs streamed, layer vs matrix granularity)
+//! or even different builds.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::LlamaConfig;
+
+/// Hard cap on recorded events per trace: a runaway generation degrades to a
+/// truncated trace instead of unbounded memory growth (~24 MiB at the cap).
+pub const MAX_EVENTS: usize = 1 << 20;
+
+/// Order-sensitive 64-bit FNV-1a over the little-endian bit patterns of each
+/// `f32`.  Distinguishes `0.0` from `-0.0` and any NaN payload difference —
+/// exactly as strict as the repo's bit-exactness contract.
+pub fn digest64(vals: &[f32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for v in vals {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// Which GQMV output a [`TraceEvent`] digests (mirrors `MatKind`, minus the
+/// shapes: trace coordinates name the op, geometry lives in the header).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOp {
+    /// Fused Wq‖Wk‖Wv output (pre-RoPE).
+    Qkv,
+    /// Attention output projection (pre-residual).
+    Wo,
+    /// Fused W1‖W3 output (pre-SwiGLU).
+    W13,
+    /// FFN down-projection (pre-residual).
+    W2,
+    /// Classifier logits (recorded with `layer == n_layers`).
+    Cls,
+}
+
+impl TraceOp {
+    /// Stable wire/CLI label for this op.
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceOp::Qkv => "qkv",
+            TraceOp::Wo => "wo",
+            TraceOp::W13 => "w13",
+            TraceOp::W2 => "w2",
+            TraceOp::Cls => "cls",
+        }
+    }
+
+    /// Inverse of [`TraceOp::label`].
+    pub fn parse(s: &str) -> Option<TraceOp> {
+        Some(match s {
+            "qkv" => TraceOp::Qkv,
+            "wo" => TraceOp::Wo,
+            "w13" => TraceOp::W13,
+            "w2" => TraceOp::W2,
+            "cls" => TraceOp::Cls,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for TraceOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One digested GQMV output: where it happened and what it hashed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Forward step index within the trace (0-based; one per `forward_batch`).
+    pub step: u32,
+    /// Transformer layer index; `n_layers` for the classifier.
+    pub layer: u32,
+    /// Which matrix output was digested.
+    pub op: TraceOp,
+    /// Batch lane index within the step (always 0 for batch-1 engines).
+    pub lane: u32,
+    /// [`digest64`] of the op's output tensor for that lane.
+    pub digest: u64,
+}
+
+/// A recorded execution trace: model geometry, a backend label, and the
+/// ordered digest events captured during `forward_batch`.
+#[derive(Clone, Debug)]
+pub struct ExecTrace {
+    cfg: LlamaConfig,
+    label: String,
+    events: Vec<TraceEvent>,
+    steps: u32,
+    truncated: bool,
+}
+
+impl ExecTrace {
+    /// Start an empty trace for a model with the given geometry.  `label`
+    /// names the producing backend (e.g. `Engine::name()`); it is carried in
+    /// the file but never compared by [`diff`].
+    pub fn new(cfg: &LlamaConfig, label: &str) -> Self {
+        ExecTrace {
+            cfg: *cfg,
+            label: label.to_string(),
+            events: Vec::new(),
+            steps: 0,
+            truncated: false,
+        }
+    }
+
+    /// Open a new forward step; subsequent [`ExecTrace::record`] calls are
+    /// stamped with its index.
+    pub fn begin_step(&mut self) {
+        self.steps += 1;
+    }
+
+    /// Digest `vals` and append an event at (current step, `layer`, `op`,
+    /// `lane`).  Silently stops recording (and marks the trace truncated)
+    /// once [`MAX_EVENTS`] is reached.
+    pub fn record(&mut self, layer: usize, op: TraceOp, lane: usize, vals: &[f32]) {
+        debug_assert!(self.steps > 0, "record() before begin_step()");
+        if self.events.len() >= MAX_EVENTS {
+            self.truncated = true;
+            return;
+        }
+        self.events.push(TraceEvent {
+            step: self.steps.saturating_sub(1),
+            layer: layer as u32,
+            op,
+            lane: lane as u32,
+            digest: digest64(vals),
+        });
+    }
+
+    /// Model geometry the trace was recorded against.
+    pub fn cfg(&self) -> &LlamaConfig {
+        &self.cfg
+    }
+
+    /// Backend label supplied at [`ExecTrace::new`] time.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Recorded events, in execution order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when no events were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of forward steps begun.
+    pub fn steps(&self) -> u32 {
+        self.steps
+    }
+
+    /// True if recording hit [`MAX_EVENTS`] and dropped the tail.
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+
+    /// Serialize to the `llamaf-trace v1` text format:
+    ///
+    /// ```text
+    /// llamaf-trace v1
+    /// label cpu-resident/scalar
+    /// geom dim=64 hidden=128 layers=2 heads=2 kv_heads=1 vocab=512 seq=64 gs=32
+    /// e <step> <layer> <op> <lane> <digest:016x>
+    /// ...
+    /// end <count>
+    /// ```
+    pub fn to_text(&self) -> String {
+        let c = &self.cfg;
+        let mut out = String::with_capacity(64 + self.events.len() * 24);
+        out.push_str("llamaf-trace v1\n");
+        out.push_str(&format!("label {}\n", self.label));
+        out.push_str(&format!(
+            "geom dim={} hidden={} layers={} heads={} kv_heads={} vocab={} seq={} gs={}\n",
+            c.dim, c.hidden_dim, c.n_layers, c.n_heads, c.n_kv_heads, c.vocab_size, c.seq_len, c.gs
+        ));
+        for e in &self.events {
+            out.push_str(&format!(
+                "e {} {} {} {} {:016x}\n",
+                e.step,
+                e.layer,
+                e.op.label(),
+                e.lane,
+                e.digest
+            ));
+        }
+        let tail = if self.truncated { " truncated" } else { "" };
+        out.push_str(&format!("end {}{}\n", self.events.len(), tail));
+        out
+    }
+
+    /// Parse the text format produced by [`ExecTrace::to_text`].
+    pub fn parse(text: &str) -> Result<ExecTrace> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty trace file")?;
+        if header.trim() != "llamaf-trace v1" {
+            bail!("not a llamaf trace (bad header: '{header}')");
+        }
+        let label_line = lines.next().context("missing label line")?;
+        let label =
+            label_line.strip_prefix("label ").context("second line must be 'label <text>'")?;
+        let geom_line = lines.next().context("missing geom line")?;
+        let geom = geom_line.strip_prefix("geom ").context("third line must be 'geom ...'")?;
+        let mut g = std::collections::HashMap::new();
+        for kv in geom.split_whitespace() {
+            let (k, v) = kv.split_once('=').with_context(|| format!("bad geom field '{kv}'"))?;
+            g.insert(k, v.parse::<usize>().with_context(|| format!("geom {k}='{v}'"))?);
+        }
+        let get = |k: &str| g.get(k).copied().with_context(|| format!("geom missing '{k}'"));
+        let cfg = LlamaConfig {
+            dim: get("dim")?,
+            hidden_dim: get("hidden")?,
+            n_layers: get("layers")?,
+            n_heads: get("heads")?,
+            n_kv_heads: get("kv_heads")?,
+            vocab_size: get("vocab")?,
+            seq_len: get("seq")?,
+            gs: get("gs")?,
+        };
+        let mut events = Vec::new();
+        let mut footer: Option<(usize, bool)> = None;
+        for line in lines {
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("end ") {
+                let mut it = rest.split_whitespace();
+                let n: usize = it.next().context("end line missing count")?.parse()?;
+                let truncated = it.next() == Some("truncated");
+                footer = Some((n, truncated));
+                break;
+            }
+            let rest = line.strip_prefix("e ").with_context(|| format!("bad line '{line}'"))?;
+            let mut it = rest.split_whitespace();
+            let mut next = || it.next().with_context(|| format!("short event line '{line}'"));
+            let step: u32 = next()?.parse()?;
+            let layer: u32 = next()?.parse()?;
+            let op_s = next()?;
+            let op = TraceOp::parse(op_s).with_context(|| format!("unknown op '{op_s}'"))?;
+            let lane: u32 = next()?.parse()?;
+            let digest = u64::from_str_radix(next()?, 16)
+                .with_context(|| format!("bad digest in '{line}'"))?;
+            events.push(TraceEvent { step, layer, op, lane, digest });
+        }
+        let (count, truncated) = footer.context("trace missing 'end <count>' footer")?;
+        if count != events.len() {
+            bail!("trace footer says {count} events, found {}", events.len());
+        }
+        let steps = events.last().map(|e| e.step + 1).unwrap_or(0);
+        Ok(ExecTrace { cfg, label: label.to_string(), events, steps, truncated })
+    }
+
+    /// Write the trace to `path` in the text format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    /// Load a trace previously written with [`ExecTrace::save`].
+    pub fn load(path: &Path) -> Result<ExecTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        ExecTrace::parse(&text).with_context(|| format!("parsing trace {}", path.display()))
+    }
+}
+
+/// The first event where two traces disagree on the digest while agreeing on
+/// the coordinates — the earliest point the backends computed different bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Divergence {
+    /// Event index into both traces.
+    pub index: usize,
+    /// Forward step of the divergent op.
+    pub step: u32,
+    /// Transformer layer (`n_layers` ⇒ classifier).
+    pub layer: u32,
+    /// Which matrix output diverged.
+    pub op: TraceOp,
+    /// Batch lane within the step.
+    pub lane: u32,
+    /// Digest recorded by trace `a`.
+    pub a: u64,
+    /// Digest recorded by trace `b`.
+    pub b: u64,
+}
+
+/// Outcome of comparing two traces with [`diff`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DiffOutcome {
+    /// Same geometry, same schedule, every digest equal.
+    Identical,
+    /// The traces were recorded against different model geometries; digests
+    /// are not comparable.  Carries the two `geom` header strings.
+    GeometryMismatch {
+        /// Geometry of trace `a`.
+        a: String,
+        /// Geometry of trace `b`.
+        b: String,
+    },
+    /// The traces executed different op sequences (coordinates disagree
+    /// before any digest does) — e.g. different prompts or batch shapes.
+    ScheduleMismatch {
+        /// Index of the first coordinate disagreement.
+        index: usize,
+        /// `step/layer/op/lane` of trace `a` at that index.
+        a: String,
+        /// `step/layer/op/lane` of trace `b` at that index.
+        b: String,
+    },
+    /// Coordinates agree but at least one digest differs.
+    Diverged {
+        /// First divergent event.
+        first: Divergence,
+        /// Total number of divergent events over the compared prefix.
+        total: usize,
+    },
+    /// All compared events match but one trace is longer.
+    LengthMismatch {
+        /// Event count of trace `a`.
+        a: usize,
+        /// Event count of trace `b`.
+        b: usize,
+    },
+}
+
+/// Result of [`diff`]: how many events were compared and what was found.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DiffReport {
+    /// Number of event pairs compared (min of the two lengths).
+    pub compared: usize,
+    /// What the comparison found.
+    pub outcome: DiffOutcome,
+}
+
+impl DiffReport {
+    /// True iff the traces are bit-identical over their full length.
+    pub fn identical(&self) -> bool {
+        self.outcome == DiffOutcome::Identical
+    }
+
+    /// One-line human summary of the outcome (what `trace-diff` prints).
+    pub fn summary(&self) -> String {
+        match &self.outcome {
+            DiffOutcome::Identical => {
+                format!("identical: {} events compared, 0 divergences", self.compared)
+            }
+            DiffOutcome::GeometryMismatch { a, b } => {
+                format!("geometry mismatch:\n  a: {a}\n  b: {b}")
+            }
+            DiffOutcome::ScheduleMismatch { index, a, b } => format!(
+                "schedule mismatch at event {index}: a ran {a}, b ran {b} \
+                 (different prompts or batch shapes?)"
+            ),
+            DiffOutcome::Diverged { first, total } => format!(
+                "first divergence at event {}: step {} layer {} op {} lane {}: \
+                 a={:016x} b={:016x} ({} divergent of {} compared)",
+                first.index,
+                first.step,
+                first.layer,
+                first.op,
+                first.lane,
+                first.a,
+                first.b,
+                total,
+                self.compared
+            ),
+            DiffOutcome::LengthMismatch { a, b } => format!(
+                "prefix identical ({} events) but lengths differ: a={a} b={b}",
+                self.compared
+            ),
+        }
+    }
+}
+
+/// Compare two traces event-by-event.  Geometry must match; then the op
+/// schedules must match; then the first digest disagreement (if any) is
+/// reported with its coordinates.
+pub fn diff(a: &ExecTrace, b: &ExecTrace) -> DiffReport {
+    if a.cfg != b.cfg {
+        let geom = |t: &ExecTrace| {
+            let c = t.cfg();
+            format!(
+                "dim={} hidden={} layers={} heads={} kv_heads={} vocab={} seq={} gs={}",
+                c.dim,
+                c.hidden_dim,
+                c.n_layers,
+                c.n_heads,
+                c.n_kv_heads,
+                c.vocab_size,
+                c.seq_len,
+                c.gs
+            )
+        };
+        return DiffReport {
+            compared: 0,
+            outcome: DiffOutcome::GeometryMismatch { a: geom(a), b: geom(b) },
+        };
+    }
+    let n = a.events.len().min(b.events.len());
+    let coords = |e: &TraceEvent| format!("{}/{}/{}/{}", e.step, e.layer, e.op, e.lane);
+    let mut first: Option<Divergence> = None;
+    let mut total = 0usize;
+    for i in 0..n {
+        let (ea, eb) = (&a.events[i], &b.events[i]);
+        if (ea.step, ea.layer, ea.op, ea.lane) != (eb.step, eb.layer, eb.op, eb.lane) {
+            return DiffReport {
+                compared: i,
+                outcome: DiffOutcome::ScheduleMismatch { index: i, a: coords(ea), b: coords(eb) },
+            };
+        }
+        if ea.digest != eb.digest {
+            total += 1;
+            if first.is_none() {
+                first = Some(Divergence {
+                    index: i,
+                    step: ea.step,
+                    layer: ea.layer,
+                    op: ea.op,
+                    lane: ea.lane,
+                    a: ea.digest,
+                    b: eb.digest,
+                });
+            }
+        }
+    }
+    if let Some(first) = first {
+        return DiffReport { compared: n, outcome: DiffOutcome::Diverged { first, total } };
+    }
+    if a.events.len() != b.events.len() {
+        return DiffReport {
+            compared: n,
+            outcome: DiffOutcome::LengthMismatch { a: a.events.len(), b: b.events.len() },
+        };
+    }
+    DiffReport { compared: n, outcome: DiffOutcome::Identical }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 512,
+            seq_len: 64,
+            gs: 32,
+        }
+    }
+
+    // Goldens pin the exact FNV-1a-over-LE-f32-bits definition: a silent
+    // change to the hash breaks cross-build trace comparison.
+    #[test]
+    fn digest_goldens() {
+        assert_eq!(digest64(&[]), 0xcbf2_9ce4_8422_2325); // FNV offset basis
+        assert_eq!(digest64(&[0.0]), 0x4d25_767f_9dce_13f5);
+        assert_eq!(digest64(&[1.0]), 0x4b72_477f_9c5c_2f98);
+        assert_eq!(digest64(&[1.0, 2.0]), 0x097a_69ee_2da3_01d8);
+    }
+
+    #[test]
+    fn digest_is_order_and_sign_sensitive() {
+        assert_ne!(digest64(&[1.0, 2.0]), digest64(&[2.0, 1.0]));
+        assert_ne!(digest64(&[0.0]), digest64(&[-0.0]), "bit-exact: -0.0 != 0.0");
+        assert_eq!(digest64(&[0.5, -3.25]), digest64(&[0.5, -3.25]));
+    }
+
+    fn sample_trace(label: &str) -> ExecTrace {
+        let cfg = tiny_cfg();
+        let mut t = ExecTrace::new(&cfg, label);
+        for step in 0..3u32 {
+            t.begin_step();
+            for layer in 0..cfg.n_layers {
+                for op in [TraceOp::Qkv, TraceOp::Wo, TraceOp::W13, TraceOp::W2] {
+                    t.record(layer, op, 0, &[step as f32, layer as f32]);
+                }
+            }
+            t.record(cfg.n_layers, TraceOp::Cls, 0, &[step as f32]);
+        }
+        t
+    }
+
+    #[test]
+    fn text_round_trip_preserves_everything() {
+        let t = sample_trace("cpu-resident/scalar");
+        let back = ExecTrace::parse(&t.to_text()).unwrap();
+        assert_eq!(back.cfg(), t.cfg());
+        assert_eq!(back.label(), t.label());
+        assert_eq!(back.events(), t.events());
+        assert_eq!(back.steps(), t.steps());
+        assert!(!back.truncated());
+    }
+
+    #[test]
+    fn parse_rejects_corrupt_files() {
+        assert!(ExecTrace::parse("").is_err());
+        assert!(ExecTrace::parse("not a trace\n").is_err());
+        let t = sample_trace("x");
+        let text = t.to_text();
+        // footer count mismatch
+        let bad = text.replace(&format!("end {}", t.len()), "end 999");
+        assert!(ExecTrace::parse(&bad).is_err());
+        // missing footer
+        let cut = text.rsplit_once("end").unwrap().0;
+        assert!(ExecTrace::parse(cut).is_err());
+    }
+
+    #[test]
+    fn diff_identical_and_label_insensitive() {
+        let a = sample_trace("host");
+        let b = sample_trace("device");
+        let r = diff(&a, &b);
+        assert!(r.identical(), "{}", r.summary());
+        assert_eq!(r.compared, a.len());
+    }
+
+    #[test]
+    fn diff_reports_first_divergence_coordinates() {
+        let a = sample_trace("a");
+        let mut b = sample_trace("b");
+        // perturb one known event: step 1, layer 1, op W13, lane 0
+        let idx = b
+            .events
+            .iter()
+            .position(|e| e.step == 1 && e.layer == 1 && e.op == TraceOp::W13)
+            .unwrap();
+        b.events[idx].digest ^= 1;
+        let r = diff(&a, &b);
+        match r.outcome {
+            DiffOutcome::Diverged { first, total } => {
+                assert_eq!(total, 1);
+                assert_eq!(first.index, idx);
+                assert_eq!(
+                    (first.step, first.layer, first.op, first.lane),
+                    (1, 1, TraceOp::W13, 0)
+                );
+                assert_eq!(first.a ^ first.b, 1);
+            }
+            other => panic!("expected Diverged, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn diff_distinguishes_schedule_geometry_and_length() {
+        let a = sample_trace("a");
+        // schedule: same length, different op at one slot
+        let mut b = sample_trace("b");
+        let i = 2;
+        b.events[i].op = TraceOp::W2;
+        match diff(&a, &b).outcome {
+            DiffOutcome::ScheduleMismatch { index, .. } => assert_eq!(index, i),
+            other => panic!("expected ScheduleMismatch, got {other:?}"),
+        }
+        // geometry
+        let mut cfg2 = tiny_cfg();
+        cfg2.dim = 128;
+        let g = ExecTrace::new(&cfg2, "g");
+        assert!(matches!(diff(&a, &g).outcome, DiffOutcome::GeometryMismatch { .. }));
+        // length: identical prefix, one longer
+        let mut c = sample_trace("c");
+        c.events.pop();
+        match diff(&a, &c).outcome {
+            DiffOutcome::LengthMismatch { a: la, b: lb } => {
+                assert_eq!((la, lb), (a.len(), a.len() - 1))
+            }
+            other => panic!("expected LengthMismatch, got {other:?}"),
+        }
+    }
+}

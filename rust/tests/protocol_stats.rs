@@ -1,6 +1,7 @@
-//! PROTOCOL contract: the `STATS` reply carries every field documented in
-//! `docs/PROTOCOL.md`, well-formed — parsed from a REAL server reply, so
-//! the wire format and the spec cannot drift apart silently.
+//! PROTOCOL contract: the `STATS`, `TRACE` and `METRICS` replies carry
+//! every field documented in `docs/PROTOCOL.md` /
+//! `docs/OBSERVABILITY.md`, well-formed — parsed from REAL server
+//! replies, so the wire format and the spec cannot drift apart silently.
 //!
 //! Runs on the synthetic tiny model — no artifacts required.
 
@@ -166,4 +167,180 @@ fn stats_reports_matrix_granularity_and_bandwidth_when_configured() {
         .parse::<f64>()
         .unwrap();
     assert!(mbs > 0.0, "staging ran, bandwidth must be derivable: {stats}");
+}
+
+/// Every `k=v` field a `TRACE` reply promises (`mat_wait_ms`, the one
+/// non-scalar field, is checked separately below).
+const TRACE_FIELDS: &[&str] = &[
+    "id",
+    "queue_ms",
+    "prefill_tokens",
+    "decode_tokens",
+    "prefill_ms",
+    "decode_ms",
+    "staged_bytes",
+    "prefetch_wait_ms",
+    "batch_mean",
+    "tok_s",
+];
+
+/// Every `llamaf_<name>` line the `METRICS` export promises, in the
+/// order pinned by `docs/OBSERVABILITY.md`.
+const METRIC_NAMES: &[&str] = &[
+    "sessions_idle",
+    "sessions_busy",
+    "sessions_cap",
+    "workers",
+    "requests_total",
+    "rejected_total",
+    "tokens_total",
+    "queue_depth",
+    "queue_peak",
+    "request_latency_p50_ms",
+    "request_latency_p99_ms",
+    "request_latency_mean_ms",
+    "request_tok_s_p50",
+    "traced_requests_total",
+    "queue_wait_ms_p50",
+    "queue_wait_ms_p99",
+    "prefill_seconds_total",
+    "decode_seconds_total",
+    "prefill_tokens_total",
+    "decode_tokens_total",
+    "batch_steps_total",
+    "batch_lane_tokens_total",
+    "batch_occupancy_mean",
+    "batch_occupancy_max",
+    "staged_bytes_total",
+    "staged_bytes_per_token",
+    "prefetch_wait_ms_total",
+    "prefetch_depth",
+    "ring_occupancy",
+    "stage_mb_s",
+    "mat_wait_ms_norms",
+    "mat_wait_ms_qkv",
+    "mat_wait_ms_wo",
+    "mat_wait_ms_w13",
+    "mat_wait_ms_w2",
+    "matrix_time_pct",
+    "weights_resident",
+    "granularity_matrix",
+];
+
+#[test]
+fn trace_and_metrics_replies_match_the_documented_contract() {
+    let model = tiny_model(5);
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts { workers: 1, ..Default::default() };
+    let m2 = Arc::clone(&model);
+    let server_thread =
+        std::thread::spawn(move || server.serve_shared(m2, &scalar_exec, &opts, Some(1)).unwrap());
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+
+    // TRACE before any generation on this connection is an explicit error
+    conn.write_all(b"TRACE\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR "), "TRACE with no prior generation must ERR: {line}");
+
+    // one streamed generation: TOK lines then DONE
+    conn.write_all(b"SGEN 4 hello\n").unwrap();
+    let mut toks = 0usize;
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        if line.starts_with("TOK ") {
+            toks += 1;
+        } else {
+            assert!(line.starts_with("DONE "), "unexpected SGEN line: {line}");
+            break;
+        }
+    }
+    assert_eq!(toks, 4, "SGEN 4 must stream exactly 4 tokens");
+
+    // TRACE now returns the per-request breakdown of that generation
+    line.clear();
+    conn.write_all(b"TRACE\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let trace = line
+        .trim_end()
+        .strip_prefix("OK trace ")
+        .unwrap_or_else(|| panic!("TRACE must reply 'OK trace ...': {line}"))
+        .to_string();
+    let mut kv: HashMap<String, String> = HashMap::new();
+    for field in trace.split_whitespace() {
+        let (k, v) = field
+            .split_once('=')
+            .unwrap_or_else(|| panic!("TRACE field '{field}' is not k=v: {trace}"));
+        assert!(!kv.contains_key(k), "duplicate TRACE field {k}: {trace}");
+        kv.insert(k.to_string(), v.to_string());
+    }
+    let num = |k: &str| -> f64 {
+        kv.get(k)
+            .unwrap_or_else(|| panic!("missing documented TRACE field '{k}': {trace}"))
+            .parse()
+            .unwrap_or_else(|_| panic!("TRACE field '{k}' is not numeric: {trace}"))
+    };
+    for &k in TRACE_FIELDS {
+        let v = num(k);
+        assert!(v.is_finite() && v >= 0.0, "TRACE field {k} = {v}: {trace}");
+    }
+    // mat_wait_ms mirrors STATS: five slash-separated ms buckets
+    let waits = kv.get("mat_wait_ms").unwrap_or_else(|| panic!("missing mat_wait_ms: {trace}"));
+    let parts: Vec<f64> = waits
+        .split('/')
+        .map(|p| p.parse().unwrap_or_else(|_| panic!("mat_wait_ms part '{p}' not numeric")))
+        .collect();
+    assert_eq!(parts.len(), 5, "one wait bucket per matrix unit: {waits}");
+    // the phase split must reconcile with what the wire protocol streamed
+    assert_eq!(num("decode_tokens"), 4.0, "decode split must equal streamed tokens: {trace}");
+    assert!(num("decode_ms") > 0.0, "4 decode steps took nonzero time: {trace}");
+    assert!(num("staged_bytes") > 0.0, "streamed serving stages weights: {trace}");
+    assert!(num("batch_mean") >= 1.0, "the lane itself occupies the batch: {trace}");
+    assert_eq!(kv.len(), TRACE_FIELDS.len() + 1, "undocumented TRACE field present: {trace}");
+
+    // METRICS: `METRICS <n>` header, then exactly n `llamaf_<name> <value>`
+    // lines covering the documented name set and nothing else
+    line.clear();
+    conn.write_all(b"METRICS\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let n: usize = line
+        .trim_end()
+        .strip_prefix("METRICS ")
+        .unwrap_or_else(|| panic!("METRICS must reply 'METRICS <n>': {line}"))
+        .parse()
+        .expect("METRICS count must be an integer");
+    let mut metrics: HashMap<String, f64> = HashMap::new();
+    for _ in 0..n {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let body = line
+            .trim_end()
+            .strip_prefix("llamaf_")
+            .unwrap_or_else(|| panic!("metric line must start llamaf_: {line}"));
+        let (name, value) =
+            body.split_once(' ').unwrap_or_else(|| panic!("metric line not 'name value': {line}"));
+        let value: f64 = value.parse().unwrap_or_else(|_| panic!("metric not numeric: {line}"));
+        assert!(value.is_finite() && value >= 0.0, "metric {name} = {value}");
+        assert!(metrics.insert(name.to_string(), value).is_none(), "duplicate metric {name}");
+    }
+    assert_eq!(n, METRIC_NAMES.len(), "header count must match the documented export");
+    for &name in METRIC_NAMES {
+        assert!(metrics.contains_key(name), "missing documented metric llamaf_{name}");
+    }
+    assert_eq!(metrics.len(), METRIC_NAMES.len(), "undocumented metric exported");
+    // the SGEN above flowed through the aggregates
+    assert!(metrics["requests_total"] >= 1.0);
+    assert!(metrics["traced_requests_total"] >= 1.0, "completed request must be traced");
+    assert!(metrics["decode_tokens_total"] >= 4.0);
+    assert!(metrics["batch_steps_total"] >= 1.0);
+    assert!(metrics["staged_bytes_total"] > 0.0);
+    assert_eq!(metrics["weights_resident"], 0.0, "default serving streams");
+
+    conn.write_all(b"QUIT\n").unwrap();
+    drop(conn);
+    server_thread.join().unwrap();
 }

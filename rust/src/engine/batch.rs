@@ -1,5 +1,5 @@
-//! Step-synchronous batched decoding: one weight-streaming pass per step,
-//! shared by every active session.
+//! Continuously batched decoding: one weight-streaming pass per step,
+//! shared by every active session, with admission at every step.
 //!
 //! The paper's bottleneck analysis (§III-B, Fig. 2) says TinyLlama decode
 //! on the ZCU102 is off-chip-bandwidth bound: per token, every layer's
@@ -8,22 +8,42 @@
 //! the same layer is staged N times per wall-clock step.  The
 //! [`BatchScheduler`] removes the multiplier: a dedicated decode thread
 //! collects every session with a pending token into *lanes*, then drives
-//! **one** [`forward_batch`] walk over the layers, staging each layer
+//! **one** [`forward_batch`](crate::engine::forward::forward_batch) walk
+//! over the layers, staging each layer
 //! exactly once (via the async [`Streamer`] prefetch) and applying it to
 //! all B activation vectors before moving on.
 //!
-//! A *step barrier* sits between tokens: lanes join and leave only at
-//! step boundaries, so a new connection enters mid-flight without
-//! perturbing anyone else's arithmetic.  Because every lane's math is the
-//! exact batch-1 operation sequence (see [`forward_batch`]), token
-//! streams are **bit-identical** to sequential batch-1 generation no
-//! matter how lanes interleave — integration-tested in
-//! `rust/tests/batched_decoding.rs`.
+//! Admission is **continuous**: at the top of every step the scheduler
+//! tops the active set up from the pending queue, so a request joins the
+//! very next forward after it arrives — it never waits for the resident
+//! batch to drain — and each lane retires independently the moment its
+//! own step budget is met.  ([`Admission::Drain`] restores the
+//! static-batch baseline for A/B occupancy measurements.)  A prompt may
+//! prefill in **bounded chunks**: with [`BatchOpts::prefill_chunk`] = C,
+//! a prefilling request occupies up to C lanes of one step at
+//! consecutive positions over ONE shared KV ([`BatchLane::kv`]), cutting
+//! its time-to-first-token by ~C× while decode lanes ride the same
+//! weight pass.  Because every lane's math is the exact batch-1
+//! operation sequence (see
+//! [`forward_batch`](crate::engine::forward::forward_batch), including
+//! the chunked-prefill ordering argument there), token streams are
+//! **bit-identical** to sequential batch-1 generation no matter how
+//! lanes interleave — integration-tested in
+//! `rust/tests/batched_decoding.rs` and, against randomized arrival
+//! schedules with per-op digest traces, `rust/tests/continuous_batching.rs`.
 //!
-//! Occupancy and staging volume are exported through [`BatchMetrics`]
-//! (the server appends them to `STATS`): with B sessions active, the
-//! weight-bytes-staged-per-token counter drops by ~B× relative to B
-//! independent passes.
+//! Sessions backed by the paged KV pool (`serve --kv-pages`) also get
+//! **prefix reuse** here: at admission the scheduler adopts the longest
+//! cached page-aligned prompt prefix
+//! ([`SessionKv::adopt_prefix`](crate::engine::session::SessionKv::adopt_prefix))
+//! and skips feeding those tokens; at successful retirement it publishes
+//! the session's own prefix back
+//! ([`SessionKv::cache_prefix`](crate::engine::session::SessionKv::cache_prefix)).
+//!
+//! Occupancy, admission latency, chunk feeds and staging volume are
+//! exported through [`BatchMetrics`] (the server appends them to
+//! `STATS`): with B sessions active, the weight-bytes-staged-per-token
+//! counter drops by ~B× relative to B independent passes.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -35,15 +55,16 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::engine::forward::{
-    forward_batch, BatchLane, BatchScratch, LayerProvider, ResidentLayers,
+    forward_batch_traced, BatchLane, BatchScratch, LayerProvider, ResidentLayers,
 };
 use crate::engine::session::{Session, SessionGen};
 use crate::metrics::{BatchMetrics, ForwardProfile, RequestTrace, TokenMeter, TraceBuilder};
-use crate::model::{LlamaConfig, QuantModel};
+use crate::model::{KvStore, LlamaConfig, QuantModel};
 use crate::ps::gqmv::GqmvExec;
 use crate::runtime::Runtime;
 use crate::sched::{ModelFetcher, SchedMode, StageGranularity, Streamer, STAGE_UNITS};
 use crate::tensor;
+use crate::trace::{ExecTrace, TraceOp, TraceSink};
 
 /// How the decode thread obtains each layer's weights.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,7 +79,20 @@ pub enum WeightMode {
     Resident,
 }
 
-/// Knobs of the step-synchronous batch scheduler.
+/// When pending requests may join the active set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Top the batch up from the pending queue at the start of EVERY
+    /// step: a request joins the next forward after it arrives and lanes
+    /// retire independently.  The default.
+    Continuous,
+    /// Admit only when the active set is empty (the classic static
+    /// batch: collect, run to completion, drain).  Kept as the baseline
+    /// the ragged-arrival occupancy bench compares against.
+    Drain,
+}
+
+/// Knobs of the continuous batch scheduler.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchOpts {
     /// Maximum lanes decoded per step (bounds scratch memory and the
@@ -87,6 +121,19 @@ pub struct BatchOpts {
     pub granularity: StageGranularity,
     /// Streamed (staged-per-step) vs resident (zero-copy) weights.
     pub weights: WeightMode,
+    /// Continuous (default) vs drain-then-refill admission.
+    pub admission: Admission,
+    /// Maximum prompt tokens one prefilling request may consume in a
+    /// single step (CLI `--prefill-chunk`), as extra lanes at
+    /// consecutive positions over its one KV.  1 = classic one token per
+    /// step; larger values cut time-to-first-token when spare lane
+    /// capacity exists.  Bit-identical at any value.
+    pub prefill_chunk: usize,
+    /// Record a per-op digest [`ExecTrace`] for every request and return
+    /// it in [`SessionGen::exec_trace`] — the equivalence harness's
+    /// divergence localizer.  Off in production serving (small but
+    /// nonzero per-op cost).
+    pub trace: bool,
 }
 
 impl Default for BatchOpts {
@@ -98,6 +145,9 @@ impl Default for BatchOpts {
             prefetch_depth: crate::sched::DEFAULT_PREFETCH_DEPTH,
             granularity: StageGranularity::default(),
             weights: WeightMode::Streamed,
+            admission: Admission::Continuous,
+            prefill_chunk: 1,
+            trace: false,
         }
     }
 }
@@ -172,6 +222,8 @@ enum LaneMsg {
         sess: Box<Session>,
         meter: Option<TokenMeter>,
         trace: Option<Box<RequestTrace>>,
+        /// Per-op digest trace ([`BatchOpts::trace`] runs only).
+        exec: Option<Box<ExecTrace>>,
         result: Result<(), String>,
     },
 }
@@ -194,6 +246,10 @@ struct LaneJob {
     /// split, staged-byte and stall attribution) — becomes the
     /// [`RequestTrace`] returned with the lane's [`SessionGen`].
     trace: TraceBuilder,
+    /// Per-op digest trace, armed at admission when [`BatchOpts::trace`]
+    /// is set; lanes of this job are renumbered to chunk offsets so the
+    /// trace diffs cleanly against a batch-1 reference.
+    exec: Option<Box<ExecTrace>>,
     tx: Sender<LaneMsg>,
     cancel: Arc<AtomicBool>,
 }
@@ -233,6 +289,7 @@ impl BatchScheduler {
         assert!(opts.max_batch >= 1);
         assert!(opts.max_pending >= 1);
         assert!(opts.prefetch_depth >= 1, "prefetch depth must be >= 1");
+        assert!(opts.prefill_chunk >= 1, "prefill chunk must be >= 1");
         let sched = Arc::new(BatchScheduler {
             cfg: model.cfg,
             max_pending: opts.max_pending,
@@ -318,6 +375,7 @@ impl BatchScheduler {
             produced: 0,
             meter: None,
             trace: TraceBuilder::new(id),
+            exec: None,
             tx,
             cancel: Arc::clone(&cancel),
         };
@@ -356,7 +414,7 @@ impl BatchScheduler {
                         }
                     }
                 }
-                Ok(LaneMsg::Done { sess, meter, trace, result }) => {
+                Ok(LaneMsg::Done { sess, meter, trace, exec, result }) => {
                     let sess = Some(*sess);
                     return match (cb_err, result) {
                         (Some(e), _) => (sess, Err(e)),
@@ -377,6 +435,7 @@ impl BatchScheduler {
                                     latency_p50_s: p50,
                                     latency_p99_s: p99,
                                     trace: trace.map(|t| *t),
+                                    exec_trace: exec.map(|t| *t),
                                 }),
                             )
                         }
@@ -404,8 +463,36 @@ impl BatchScheduler {
     }
 }
 
-/// The decode thread: admit lanes at the step barrier, run one batched
-/// forward, emit tokens, retire finished lanes, repeat.
+/// Routes per-op digest records from a batched forward to the per-job
+/// [`ExecTrace`]s: forward lanes are renumbered to each job's chunk
+/// offset, so at `prefill_chunk == 1` every job's trace reads exactly
+/// like a batch-1 lane-0 trace no matter how the step was shared.
+struct LaneTraceRouter<'a> {
+    /// Per-job trace slots, indexed by job position in the active set.
+    traces: Vec<Option<&'a mut ExecTrace>>,
+    /// Forward-lane index → owning job index.
+    lane_job: &'a [usize],
+    /// Forward-lane index → offset within the job's chunk this step.
+    lane_off: &'a [usize],
+}
+
+impl TraceSink for LaneTraceRouter<'_> {
+    fn begin_step(&mut self) {
+        for t in self.traces.iter_mut().flatten() {
+            t.begin_step();
+        }
+    }
+
+    fn record(&mut self, layer: usize, op: TraceOp, lane: usize, vals: &[f32]) {
+        if let Some(t) = self.traces[self.lane_job[lane]].as_mut() {
+            t.record(layer, op, self.lane_off[lane], vals);
+        }
+    }
+}
+
+/// The decode thread: top the active set up from the pending queue, run
+/// one batched forward (decode lanes plus bounded prefill chunks), emit
+/// tokens, retire finished lanes, repeat.
 fn decode_loop(
     sched: Arc<BatchScheduler>,
     model: Arc<QuantModel>,
@@ -413,6 +500,7 @@ fn decode_loop(
     opts: BatchOpts,
 ) {
     let cfg = model.cfg;
+    sched.metrics.set_prefill_chunk(opts.prefill_chunk);
     // Streamed mode stages layers out of the Arc'd model ("DDR") into the
     // device runtime, hiding the copy behind the batched kernels in async
     // mode.  No compiled-kernel shapes are needed: the batched GQMV runs
@@ -468,14 +556,23 @@ fn decode_loop(
     let mut unit_attributed = [0.0f64; STAGE_UNITS];
 
     loop {
-        // ---- step barrier: retire/admit lanes ------------------------
+        // ---- continuous admission: top the batch up every step -------
+        let mut newly: Vec<usize> = Vec::new();
         {
             let mut st = sched.state.lock().unwrap();
             loop {
-                while active.len() < opts.max_batch {
-                    match st.pending.pop_front() {
-                        Some(j) => active.push(j),
-                        None => break,
+                // Drain mode (the static-batch baseline) only admits into
+                // an empty set; continuous mode admits whenever a slot is
+                // free — a request never waits for the batch to drain.
+                if opts.admission == Admission::Continuous || active.is_empty() {
+                    while active.len() < opts.max_batch {
+                        match st.pending.pop_front() {
+                            Some(j) => {
+                                newly.push(active.len());
+                                active.push(j);
+                            }
+                            None => break,
+                        }
                     }
                 }
                 if !active.is_empty() {
@@ -487,7 +584,27 @@ fn decode_loop(
                 st = sched.cv.wait(st).unwrap();
             }
         }
-        // lanes whose client vanished leave at the barrier
+        // Admission work runs outside the lock: stamp the queue→admit
+        // latency, adopt any cached KV prefix of the prompt (paged
+        // sessions; the adopted positions are never fed), arm the per-op
+        // digest trace.
+        for &ji in &newly {
+            let j = &mut active[ji];
+            if let Some(wait_s) = j.trace.admit() {
+                sched.metrics.record_admission(wait_s);
+            }
+            let adopted = j.sess.kv.adopt_prefix(&j.prompt);
+            if adopted > 0 {
+                j.fed = adopted;
+                j.sess.pos = adopted;
+                j.trace.set_prefix_tokens(adopted as u64);
+            }
+            if opts.trace {
+                j.exec =
+                    Some(Box::new(ExecTrace::new(&cfg, &format!("lane-{}", j.trace.id()))));
+            }
+        }
+        // lanes whose client vanished leave before the next forward
         let mut i = 0;
         while i < active.len() {
             if active[i].cancel.load(Ordering::Relaxed) {
@@ -497,6 +614,7 @@ fn decode_loop(
                     sess: j.sess,
                     meter,
                     trace: None,
+                    exec: None,
                     result: Err("canceled by client".into()),
                 });
             } else {
@@ -506,31 +624,59 @@ fn decode_loop(
         if active.is_empty() {
             continue;
         }
-        // queue wait ends at the barrier that admits the lane (idempotent
-        // for lanes already running)
-        for j in active.iter_mut() {
-            j.trace.admit();
-        }
 
-        // ---- one step-synchronous batched forward --------------------
+        // ---- lane plan: one lane per job, plus bounded prefill chunks
+        // (extra lanes at consecutive positions over the job's one KV,
+        // drawn from whatever step capacity is spare) ------------------
+        let n_jobs = active.len();
+        let mut feeds: Vec<usize> = vec![1; n_jobs];
+        let mut spare = opts.max_batch - n_jobs;
+        for (ji, j) in active.iter().enumerate() {
+            if j.fed < j.prompt.len() {
+                let remaining = j.prompt.len() - j.fed;
+                let extra = opts.prefill_chunk.min(remaining).saturating_sub(1).min(spare);
+                spare -= extra;
+                feeds[ji] = 1 + extra;
+            }
+        }
+        let n_lanes: usize = feeds.iter().sum();
+        let mut last_lane: Vec<usize> = vec![0; n_jobs];
+
+        // ---- one continuously-batched forward ------------------------
         let mut prof = ForwardProfile::default();
         let step_t = Instant::now();
         let step_result = {
-            let mut lanes: Vec<BatchLane> = active
-                .iter_mut()
-                .map(|j| BatchLane {
-                    pos: j.sess.pos,
-                    token: if j.fed < j.prompt.len() { j.prompt[j.fed] } else { j.last },
-                    kv: &mut j.sess.kv,
-                })
-                .collect();
-            forward_batch(
+            let mut lanes: Vec<BatchLane> = Vec::with_capacity(n_lanes);
+            let mut lane_job: Vec<usize> = Vec::with_capacity(n_lanes);
+            let mut lane_off: Vec<usize> = Vec::with_capacity(n_lanes);
+            let mut kvs: Vec<&mut dyn KvStore> = Vec::with_capacity(n_jobs);
+            let mut traces: Vec<Option<&mut ExecTrace>> = Vec::with_capacity(n_jobs);
+            for (ji, j) in active.iter_mut().enumerate() {
+                for k in 0..feeds[ji] {
+                    let fed = j.fed + k;
+                    let token = if fed < j.prompt.len() { j.prompt[fed] } else { j.last };
+                    lanes.push(BatchLane { kv: ji, pos: j.sess.pos + k, token });
+                    lane_job.push(ji);
+                    lane_off.push(k);
+                }
+                last_lane[ji] = lanes.len() - 1;
+                kvs.push(&mut j.sess.kv);
+                traces.push(j.exec.as_deref_mut());
+            }
+            let any_trace = traces.iter().any(|t| t.is_some());
+            let mut router =
+                LaneTraceRouter { traces, lane_job: &lane_job, lane_off: &lane_off };
+            let tracer: Option<&mut dyn TraceSink> =
+                if any_trace { Some(&mut router) } else { None };
+            forward_batch_traced(
                 &model,
                 layers.provider(),
                 exec.as_mut(),
                 &mut scratch,
-                &mut lanes,
+                &lanes,
+                &mut kvs,
                 &mut prof,
+                tracer,
             )
         };
         let step_wall = step_t.elapsed().as_secs_f64();
@@ -545,6 +691,7 @@ fn decode_loop(
                     sess: j.sess,
                     meter,
                     trace: None,
+                    exec: None,
                     result: Err(msg.clone()),
                 });
             }
@@ -561,7 +708,7 @@ fn decode_loop(
         for i in 0..STAGE_UNITS {
             unit_delta[i] = units[i] - unit_attributed[i];
         }
-        sched.metrics.record_step(active.len(), step_bytes, step_wait, &prof);
+        sched.metrics.record_step(n_lanes, step_bytes, step_wait, &prof);
         sched.metrics.set_ring_occupancy(layers.ring_occupancy_mean());
         sched.metrics.set_staging_time(layers.total_transfer_s());
         sched.metrics.set_unit_waits(units);
@@ -569,20 +716,33 @@ fn decode_loop(
         wait_attributed = waited;
         unit_attributed = units;
 
-        // ---- per-lane post-step: advance, sample, emit, retire -------
-        let occupancy = active.len();
+        // ---- per-job post-step: advance, sample, emit, retire --------
         let mut keep = Vec::with_capacity(active.len());
-        for (b, mut j) in active.drain(..).enumerate() {
-            // a step is prefill while it consumed a prompt token without
-            // sampling: prefill_steps + decode_steps == total forwards,
-            // decode_steps == tokens produced
-            let prefill = j.fed + 1 < j.prompt.len();
-            j.trace.record_step(prefill, step_wall, step_bytes, step_wait, unit_delta, occupancy);
-            j.sess.pos += 1;
-            j.fed += 1;
+        for (ji, mut j) in active.drain(..).enumerate() {
+            let c = feeds[ji];
+            let fed_after = j.fed + c;
+            // the chunk samples iff it reached the prompt's end: its last
+            // lane's logits continue the sequence.  prefill_steps counts
+            // non-sampling prompt feeds, so prefill + decode == forwards.
+            let sampled = fed_after >= j.prompt.len();
+            let prefill_feeds = (c - usize::from(sampled)) as u64;
+            j.trace.record_step(
+                prefill_feeds,
+                sampled,
+                step_wall,
+                step_bytes,
+                step_wait,
+                unit_delta,
+                n_lanes,
+            );
+            if c > 1 {
+                sched.metrics.record_chunk_feed();
+            }
+            j.sess.pos += c;
+            j.fed = fed_after;
             let mut done = false;
-            if j.fed >= j.prompt.len() {
-                let next = tensor::argmax(scratch.logits(b)) as u32;
+            if sampled {
+                let next = tensor::argmax(scratch.logits(last_lane[ji])) as u32;
                 // cadence is metered HERE on the decode thread: baseline
                 // at the first sample, tick on each subsequent one
                 if j.meter.is_none() {
@@ -597,6 +757,10 @@ fn decode_loop(
                 done = j.produced >= j.steps;
             }
             if done {
+                // publish this session's page-aligned prompt prefix so a
+                // later admission with the same prefix can adopt the
+                // pages instead of recomputing (paged sessions only)
+                j.sess.kv.cache_prefix(&j.prompt);
                 let meter = j.meter.take();
                 let mut trace = j.trace.finish();
                 trace.tok_per_s = meter.as_ref().map(|m| m.tok_per_s()).unwrap_or(0.0);
@@ -604,6 +768,7 @@ fn decode_loop(
                     sess: j.sess,
                     meter,
                     trace: Some(Box::new(trace)),
+                    exec: j.exec.take(),
                     result: Ok(()),
                 });
             } else {
@@ -626,6 +791,7 @@ fn fail_pending_forever(sched: &BatchScheduler, msg: String) {
             sess: j.sess,
             meter,
             trace: None,
+            exec: None,
             result: Err(msg.clone()),
         });
     }
@@ -851,6 +1017,8 @@ mod tests {
         let t = gen.trace.expect("batched generation carries a request trace");
         assert_eq!(t.prefill_steps, prompt.len() as u64 - 1, "prefill = non-sampling feeds");
         assert_eq!(t.decode_steps, 4, "decode steps == tokens produced");
+        assert_eq!(t.chunk_feeds, 0, "prefill_chunk=1 never multi-feeds");
+        assert_eq!(t.prefix_tokens, 0, "contiguous sessions never adopt a prefix");
         assert!(t.queue_s >= 0.0);
         assert!(t.prefill_s + t.decode_s > 0.0, "step wall time was attributed");
         assert!(t.staged_bytes > 0, "streamed serving stages weights");
@@ -860,6 +1028,124 @@ mod tests {
         let (_s2, out2) = sched.generate(Session::new(&qm.cfg), &prompt, 2, |_, _| Ok(()));
         let t2 = out2.unwrap().trace.unwrap();
         assert!(t2.id > t.id, "ids must be monotonic: {} then {}", t.id, t2.id);
+        assert_eq!(sched.metrics().admissions(), 2, "each request admitted exactly once");
+        assert!(sched.metrics().summary().contains("admission_ms="));
+        sched.shutdown();
+    }
+
+    #[test]
+    fn chunked_prefill_streams_bit_identical_and_counts_feeds() {
+        let qm = tiny_model(11);
+        let prompt = [1u32, 10, 11, 12, 13];
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let want = generate(&mut ref_engine, &prompt, 6, Sampler::Greedy, false).unwrap();
+        for chunk in [1usize, 3, 16] {
+            let sched = BatchScheduler::new(
+                Arc::clone(&qm),
+                Box::new(ScalarGqmv),
+                BatchOpts { prefill_chunk: chunk, ..Default::default() },
+            );
+            let (sess, out) =
+                sched.generate(Session::new(&qm.cfg), &prompt, 6, |_, _| Ok(()));
+            assert!(sess.is_some());
+            let gen = out.unwrap();
+            assert_eq!(gen.generated, want.generated, "chunk {chunk} diverged");
+            let t = gen.trace.unwrap();
+            assert_eq!(t.prefill_steps, prompt.len() as u64 - 1, "feeds counted, not steps");
+            assert_eq!(t.decode_steps, 6);
+            if chunk == 1 {
+                assert_eq!(t.chunk_feeds, 0);
+                assert_eq!(sched.metrics().chunk_feeds(), 0);
+            } else {
+                assert!(t.chunk_feeds > 0, "chunk {chunk} recorded no multi-token feeds");
+                assert!(sched.metrics().chunk_feeds() > 0);
+            }
+            assert!(
+                sched.metrics().summary().contains(&format!("prefill_chunk={chunk}")),
+                "summary missing the configured chunk"
+            );
+            sched.shutdown();
+        }
+    }
+
+    #[test]
+    fn drain_admission_stays_bit_identical() {
+        let qm = tiny_model(12);
+        let prompt = [2u32, 7, 9];
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let want = generate(&mut ref_engine, &prompt, 5, Sampler::Greedy, false).unwrap();
+        let sched = BatchScheduler::new(
+            Arc::clone(&qm),
+            Box::new(ScalarGqmv),
+            BatchOpts { admission: Admission::Drain, ..Default::default() },
+        );
+        let (sess, out) = sched.generate(Session::new(&qm.cfg), &prompt, 5, |_, _| Ok(()));
+        assert!(sess.is_some());
+        assert_eq!(out.unwrap().generated, want.generated, "drain admission diverged");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn paged_sessions_adopt_cached_prefixes_across_requests() {
+        let qm = tiny_model(13);
+        let prompt: Vec<u32> = (1..=9).collect();
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let want = generate(&mut ref_engine, &prompt, 4, Sampler::Greedy, false).unwrap();
+        // page_size 4: positions 0..8 of the 9-token prompt are cacheable
+        let pool = Arc::new(crate::model::PagePool::new(&qm.cfg, 64, 4));
+        let sched =
+            BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+
+        let (s1, out1) =
+            sched.generate(Session::paged(Arc::clone(&pool)), &prompt, 4, |_, _| Ok(()));
+        let g1 = out1.unwrap();
+        assert_eq!(g1.generated, want.generated, "cold paged run diverged");
+        assert_eq!(g1.trace.unwrap().prefix_tokens, 0, "nothing cached yet");
+        assert_eq!(pool.hits(), 0);
+        assert!(pool.cached_prefixes() >= 1, "retirement published the prompt prefix");
+
+        let (s2, out2) =
+            sched.generate(Session::paged(Arc::clone(&pool)), &prompt, 4, |_, _| Ok(()));
+        let g2 = out2.unwrap();
+        assert_eq!(g2.generated, want.generated, "warm paged run diverged");
+        let t2 = g2.trace.unwrap();
+        assert_eq!(t2.prefix_tokens, 8, "two cached pages adopted");
+        assert_eq!(t2.prefill_steps, 0, "adopted positions are never fed");
+        assert_eq!(pool.hits(), 1);
+        sched.shutdown();
+
+        drop(s1);
+        drop(s2);
+        assert_eq!(
+            pool.pages_used(),
+            pool.cached_page_ids().len(),
+            "after both sessions drop, only the prefix cache holds pages"
+        );
+        pool.clear_cache();
+        assert_eq!(pool.pages_used(), 0, "cache drain frees every page");
+    }
+
+    #[test]
+    fn exec_trace_opt_in_matches_batch1_reference() {
+        use crate::engine::forward::Engine;
+        let qm = tiny_model(14);
+        let prompt = [1u32, 10, 11];
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        assert!(ref_engine.trace_start("ref"));
+        let want = generate(&mut ref_engine, &prompt, 4, Sampler::Greedy, false).unwrap();
+        let ref_trace = ref_engine.trace_take().unwrap();
+
+        let sched = BatchScheduler::new(
+            Arc::clone(&qm),
+            Box::new(ScalarGqmv),
+            BatchOpts { trace: true, ..Default::default() },
+        );
+        let (_s, out) = sched.generate(Session::new(&qm.cfg), &prompt, 4, |_, _| Ok(()));
+        let gen = out.unwrap();
+        assert_eq!(gen.generated, want.generated);
+        let exec = gen.exec_trace.expect("trace: true returns a per-request op trace");
+        let report = crate::trace::diff(&ref_trace, &exec);
+        assert!(report.identical(), "op trace diverged from batch-1: {}", report.summary());
         sched.shutdown();
     }
 

@@ -14,12 +14,12 @@ use std::time::Instant;
 
 use crate::engine::session::Session;
 use crate::metrics::ForwardProfile;
-use crate::model::{KvCache, LlamaConfig, QuantModel};
+use crate::model::{KvStore, LlamaConfig, QuantModel};
 use crate::ps::float::attention;
 use crate::ps::gqmv::GqmvExec;
 use crate::quant::{quantize_activation_into, QuantizedTensor};
 use crate::tensor;
-use crate::trace::{ExecTrace, TraceOp};
+use crate::trace::{ExecTrace, TraceOp, TraceSink};
 
 /// A single-token incremental inference engine (batch = 1).
 pub trait Engine {
@@ -63,15 +63,16 @@ fn forward_pass(
     model: &QuantModel,
     exec: &mut dyn GqmvExec,
     s: &mut BatchScratch,
-    kv: &mut KvCache,
+    kv: &mut dyn KvStore,
     token: u32,
     pos: usize,
     prof: &mut ForwardProfile,
-    tracer: Option<&mut ExecTrace>,
+    tracer: Option<&mut dyn TraceSink>,
 ) -> Result<()> {
     let mut layers = ModelLayers { model };
-    let mut lanes = [BatchLane { kv, pos, token }];
-    forward_batch_traced(model, &mut layers, exec, s, &mut lanes, prof, tracer)
+    let lanes = [BatchLane { kv: 0, pos, token }];
+    let mut kvs: [&mut dyn KvStore; 1] = [kv];
+    forward_batch_traced(model, &mut layers, exec, s, &lanes, &mut kvs, prof, tracer)
 }
 
 // ---------------------------------------------------------------------------
@@ -175,12 +176,19 @@ macro_rules! provide_from_resident_layer {
 provide_from_resident_layer!(ResidentLayers);
 provide_from_resident_layer!(ModelLayers<'_>);
 
-/// One decoding lane of a batched step: a session's KV cache plus the
-/// token to feed at its position.  Lanes are independent — only the
-/// weight traversal is shared.
-pub struct BatchLane<'a> {
-    /// This lane's private KV cache.
-    pub kv: &'a mut KvCache,
+/// One decoding lane of a batched step: the index of the KV cache it
+/// writes (into the `kvs` slice passed alongside) plus the token to feed
+/// at its position.  Distinct sessions use distinct `kv` indices and are
+/// fully independent — only the weight traversal is shared.  **Chunked
+/// prefill** maps several lanes onto *one* `kv` index: such lanes must be
+/// adjacent with consecutive ascending positions, and the pass is then
+/// bit-identical to feeding those tokens one step at a time (each lane's
+/// attention at position *p* sees exactly positions `0..=p`, the earlier
+/// ones stored this very step by its left-hand siblings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchLane {
+    /// Index of this lane's KV cache in the step's `kvs` slice.
+    pub kv: usize,
     /// Decode position of `token` (the lane's session position).
     pub pos: usize,
     /// Token fed to the embedding lookup this step.
@@ -309,15 +317,20 @@ fn quant_gqmv_fused_batch(
 /// dedicated batch-1 forward of that lane's (token, pos, KV) state.
 /// Lane sessions' positions are *not* advanced; the caller does that
 /// after consuming the logits.
+///
+/// `kvs` carries one mutable KV-store handle per distinct session in the
+/// step; `lanes[i].kv` indexes into it (see [`BatchLane`] for the
+/// shared-index chunked-prefill contract).
 pub fn forward_batch(
     model: &QuantModel,
     layers: &mut dyn LayerProvider,
     exec: &mut dyn GqmvExec,
     s: &mut BatchScratch,
-    lanes: &mut [BatchLane<'_>],
+    lanes: &[BatchLane],
+    kvs: &mut [&mut dyn KvStore],
     prof: &mut ForwardProfile,
 ) -> Result<()> {
-    forward_batch_traced(model, layers, exec, s, lanes, prof, None)
+    forward_batch_traced(model, layers, exec, s, lanes, kvs, prof, None)
 }
 
 /// [`forward_batch`] with optional digest tracing: when `tracer` is `Some`,
@@ -333,9 +346,10 @@ pub fn forward_batch_traced(
     layers: &mut dyn LayerProvider,
     exec: &mut dyn GqmvExec,
     s: &mut BatchScratch,
-    lanes: &mut [BatchLane<'_>],
+    lanes: &[BatchLane],
+    kvs: &mut [&mut dyn KvStore],
     prof: &mut ForwardProfile,
-    mut tracer: Option<&mut ExecTrace>,
+    mut tracer: Option<&mut dyn TraceSink>,
 ) -> Result<()> {
     let cfg = model.cfg;
     let nb = lanes.len();
@@ -344,6 +358,7 @@ pub fn forward_batch_traced(
     let (d, kv_d, hd, gs) = (cfg.dim, cfg.kv_dim(), cfg.head_dim(), cfg.gs);
     let (qkv_w, h2) = (s.qkv_w, s.h2);
     debug_assert_eq!(d, s.dim);
+    let mut last_pos: Vec<Option<usize>> = vec![None; kvs.len()];
     for lane in lanes.iter() {
         anyhow::ensure!(
             (lane.token as usize) < cfg.vocab_size,
@@ -351,9 +366,22 @@ pub fn forward_batch_traced(
             lane.token
         );
         anyhow::ensure!(lane.pos < cfg.seq_len, "pos {} >= seq_len {}", lane.pos, cfg.seq_len);
+        anyhow::ensure!(lane.kv < kvs.len(), "lane kv index {} out of range", lane.kv);
+        // chunked-prefill contract: lanes sharing one KV cache feed
+        // consecutive positions, left to right — anything else would make
+        // this step's store/attention order diverge from one-at-a-time
+        if let Some(prev) = last_pos[lane.kv].replace(lane.pos) {
+            anyhow::ensure!(
+                lane.pos == prev + 1,
+                "lanes sharing kv {} must advance consecutive positions (got {} after {})",
+                lane.kv,
+                lane.pos,
+                prev
+            );
+        }
     }
 
-    if let Some(t) = tracer.as_deref_mut() {
+    if let Some(t) = tracer.as_mut() {
         t.begin_step();
     }
 
@@ -395,29 +423,31 @@ pub fn forward_batch_traced(
             nb,
             prof,
         )?;
-        if let Some(t) = tracer.as_deref_mut() {
+        if let Some(t) = tracer.as_mut() {
             for b in 0..nb {
                 t.record(li, TraceOp::Qkv, b, &s.qkv[b * qkv_w..(b + 1) * qkv_w]);
             }
         }
 
-        // RoPE + KV store (l.5), per lane at its own position
+        // RoPE + KV store (l.5), per lane at its own position.  Stores run
+        // in lane order, so chunked-prefill siblings have already written
+        // their (earlier) positions by the time attention below reads them.
         let t = Instant::now();
-        for (b, lane) in lanes.iter_mut().enumerate() {
+        for (b, lane) in lanes.iter().enumerate() {
             let qkv = &mut s.qkv[b * qkv_w..(b + 1) * qkv_w];
-            let (q, kvs) = qkv.split_at_mut(d);
-            let (k, v) = kvs.split_at_mut(kv_d);
+            let (q, rest) = qkv.split_at_mut(d);
+            let (k, v) = rest.split_at_mut(kv_d);
             tensor::rope(q, lane.pos, hd);
             tensor::rope(k, lane.pos, hd);
-            lane.kv.store(li, lane.pos, k, v);
+            kvs[lane.kv].store(li, lane.pos, k, v);
         }
         prof.rope_s += t.elapsed().as_secs_f64();
 
-        // multi-head attention on the PS (l.6-7), per lane on its own KV
+        // multi-head attention on the PS (l.6-7), per lane on its KV
         let t = Instant::now();
         for (b, lane) in lanes.iter().enumerate() {
             let q = &s.qkv[b * qkv_w..b * qkv_w + d];
-            attention(&cfg, &*lane.kv, li, lane.pos, q, &mut s.att_out[b * d..(b + 1) * d]);
+            attention(&cfg, &*kvs[lane.kv], li, lane.pos, q, &mut s.att_out[b * d..(b + 1) * d]);
         }
         prof.attention_s += t.elapsed().as_secs_f64();
 
@@ -437,7 +467,7 @@ pub fn forward_batch_traced(
             nb,
             prof,
         )?;
-        if let Some(t) = tracer.as_deref_mut() {
+        if let Some(t) = tracer.as_mut() {
             for b in 0..nb {
                 t.record(li, TraceOp::Wo, b, &s.xb[b * d..(b + 1) * d]);
             }
@@ -474,7 +504,7 @@ pub fn forward_batch_traced(
             nb,
             prof,
         )?;
-        if let Some(t) = tracer.as_deref_mut() {
+        if let Some(t) = tracer.as_mut() {
             for b in 0..nb {
                 t.record(li, TraceOp::W13, b, &s.h13[b * h2..(b + 1) * h2]);
             }
@@ -501,7 +531,7 @@ pub fn forward_batch_traced(
             nb,
             prof,
         )?;
-        if let Some(t) = tracer.as_deref_mut() {
+        if let Some(t) = tracer.as_mut() {
             for b in 0..nb {
                 t.record(li, TraceOp::W2, b, &s.xb[b * d..(b + 1) * d]);
             }
@@ -531,7 +561,7 @@ pub fn forward_batch_traced(
         nb,
         prof,
     )?;
-    if let Some(t) = tracer.as_deref_mut() {
+    if let Some(t) = tracer.as_mut() {
         for b in 0..nb {
             t.record(cfg.n_layers, TraceOp::Cls, b, s.logits(b));
         }
@@ -599,7 +629,7 @@ impl CpuEngine {
             token,
             sess.pos,
             prof,
-            self.tracer.as_mut(),
+            self.tracer.as_mut().map(|t| t as &mut dyn TraceSink),
         )?;
         sess.pos += 1;
         Ok(self.s.logits(0))
@@ -620,7 +650,7 @@ impl Engine for CpuEngine {
             token,
             pos,
             prof,
-            self.tracer.as_mut(),
+            self.tracer.as_mut().map(|t| t as &mut dyn TraceSink),
         )?;
         self.session.pos = pos + 1;
         Ok(self.s.logits(0))
@@ -813,29 +843,30 @@ mod tests {
             // late lane catches up on its missed steps first (sequentially)
             if step == 2 {
                 for catchup in 0..2 {
-                    let mut lanes = vec![BatchLane {
-                        pos: sessions[2].pos,
-                        token: seqs[2][catchup],
-                        kv: &mut sessions[2].kv,
-                    }];
-                    forward_batch(&qm, &mut provider, &mut exec, &mut bs, &mut lanes, &mut prof)
+                    let lanes =
+                        [BatchLane { pos: sessions[2].pos, token: seqs[2][catchup], kv: 0 }];
+                    let mut kvs: [&mut dyn KvStore; 1] = [&mut sessions[2].kv];
+                    forward_batch(&qm, &mut provider, &mut exec, &mut bs, &lanes, &mut kvs, &mut prof)
                         .unwrap();
                     sessions[2].pos += 1;
                     assert_eq!(bs.logits(0), &want[2][catchup][..], "catchup {catchup}");
                 }
             }
             let mut lanes: Vec<BatchLane> = Vec::new();
+            let mut kvs: Vec<&mut dyn KvStore> = Vec::new();
             for (idx, sess) in sessions.iter_mut().enumerate() {
                 if joined.contains(&idx) {
                     lanes.push(BatchLane {
                         pos: sess.pos,
                         token: seqs[idx][sess.pos],
-                        kv: &mut sess.kv,
+                        kv: kvs.len(),
                     });
+                    kvs.push(&mut sess.kv);
                 }
             }
-            forward_batch(&qm, &mut provider, &mut exec, &mut bs, &mut lanes, &mut prof).unwrap();
-            drop(lanes);
+            forward_batch(&qm, &mut provider, &mut exec, &mut bs, &lanes, &mut kvs, &mut prof)
+                .unwrap();
+            drop(kvs);
             for (b, &lane_idx) in joined.iter().enumerate() {
                 let pos = sessions[lane_idx].pos;
                 assert_eq!(
@@ -925,13 +956,87 @@ mod tests {
         let mut provider = ResidentLayers { model: Arc::clone(&qm) };
         let mut bs = BatchScratch::new(&cfg, 2);
         let mut prof = ForwardProfile::default();
-        let mut lanes =
-            vec![BatchLane { pos: 0, token: 9999, kv: &mut sess.kv }];
-        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &mut lanes, &mut prof)
+        // bad token
+        let lanes = [BatchLane { pos: 0, token: 9999, kv: 0 }];
+        let mut kvs: [&mut dyn KvStore; 1] = [&mut sess.kv];
+        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &lanes, &mut kvs, &mut prof)
             .is_err());
-        let mut lanes: Vec<BatchLane> = Vec::new();
-        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &mut lanes, &mut prof)
+        // empty batch
+        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &[], &mut kvs, &mut prof)
             .is_err());
+        // kv index out of range
+        let lanes = [BatchLane { pos: 0, token: 1, kv: 3 }];
+        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &lanes, &mut kvs, &mut prof)
+            .is_err());
+        // lanes sharing a kv with non-consecutive positions
+        let lanes =
+            [BatchLane { pos: 0, token: 1, kv: 0 }, BatchLane { pos: 2, token: 1, kv: 0 }];
+        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &lanes, &mut kvs, &mut prof)
+            .is_err());
+        // lanes sharing a kv at the *same* position (would double-store)
+        let lanes =
+            [BatchLane { pos: 0, token: 1, kv: 0 }, BatchLane { pos: 0, token: 2, kv: 0 }];
+        assert!(forward_batch(&qm, &mut provider, &mut exec, &mut bs, &lanes, &mut kvs, &mut prof)
+            .is_err());
+    }
+
+    #[test]
+    fn chunked_prefill_lanes_share_one_kv_bit_exactly() {
+        use crate::engine::session::Session;
+        // feeding a 3-token prompt as 3 lanes over ONE kv in a single step
+        // must be bit-identical (logits AND stored KV) to feeding it one
+        // token per step
+        let qm = Arc::new(tiny_model(13));
+        let cfg = qm.cfg;
+        let prompt = [5u32, 8, 2];
+        let mut exec = ScalarGqmv;
+        let mut provider = ResidentLayers { model: Arc::clone(&qm) };
+        let mut prof = ForwardProfile::default();
+
+        // reference: one token at a time
+        let mut ref_sess = Session::new(&cfg);
+        let mut bs1 = BatchScratch::new(&cfg, 1);
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for (pos, &t) in prompt.iter().enumerate() {
+            let lanes = [BatchLane { pos, token: t, kv: 0 }];
+            let mut kvs: [&mut dyn KvStore; 1] = [&mut ref_sess.kv];
+            forward_batch(&qm, &mut provider, &mut exec, &mut bs1, &lanes, &mut kvs, &mut prof)
+                .unwrap();
+            want.push(bs1.logits(0).to_vec());
+        }
+
+        // chunked: all 3 positions in one forward_batch call
+        let mut sess = Session::new(&cfg);
+        let mut bs3 = BatchScratch::new(&cfg, 3);
+        let lanes: Vec<BatchLane> = prompt
+            .iter()
+            .enumerate()
+            .map(|(pos, &t)| BatchLane { pos, token: t, kv: 0 })
+            .collect();
+        let mut kvs: [&mut dyn KvStore; 1] = [&mut sess.kv];
+        forward_batch(&qm, &mut provider, &mut exec, &mut bs3, &lanes, &mut kvs, &mut prof)
+            .unwrap();
+        for (b, w) in want.iter().enumerate() {
+            assert_eq!(bs3.logits(b), &w[..], "lane {b} logits diverged");
+        }
+        // KV contents identical at every (layer, pos)
+        let hd = cfg.head_dim();
+        for li in 0..cfg.n_layers {
+            for pos in 0..prompt.len() {
+                for h in 0..cfg.n_kv_heads {
+                    assert_eq!(
+                        sess.kv.key(li, pos, h, hd),
+                        ref_sess.kv.key(li, pos, h, hd),
+                        "key layer {li} pos {pos}"
+                    );
+                    assert_eq!(
+                        sess.kv.value(li, pos, h, hd),
+                        ref_sess.kv.value(li, pos, h, hd),
+                        "value layer {li} pos {pos}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

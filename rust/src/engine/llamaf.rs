@@ -30,14 +30,14 @@ use anyhow::{Context, Result};
 use crate::ckpt;
 use crate::engine::forward::{forward_batch_traced, BatchLane, BatchScratch, Engine, LayerProvider};
 use crate::metrics::ForwardProfile;
-use crate::model::{KvCache, LlamaConfig, MatrixUnit, QuantModel};
+use crate::model::{KvCache, KvStore, LlamaConfig, MatrixUnit, QuantModel};
 use crate::ps::gqmv::{check_shapes, check_shapes_fused, GqmvExec};
 use crate::quant::QuantizedTensor;
 use crate::runtime::{DeviceWeights, Runtime};
 use crate::sched::{
     DiskFetcher, MemFetcher, PreparedMatrix, SchedMode, StageGranularity, Streamer, StreamerStats,
 };
-use crate::trace::ExecTrace;
+use crate::trace::{ExecTrace, TraceSink};
 
 /// Host-tensor → device-buffer map shared by the [`DeviceLayers`]
 /// provider (which registers buffers as the streamer stages them) and the
@@ -384,15 +384,17 @@ impl Engine for LlamafEngine {
         // streams + registers weights, DeviceGqmv launches the kernels on
         // the staged buffers.  There is no device-private op sequence.
         let mut provider = DeviceLayers::new(&mut self.streamer, &self.registry);
-        let mut lanes = [BatchLane { kv: &mut self.kv, pos, token }];
+        let lanes = [BatchLane { kv: 0, pos, token }];
+        let mut kvs: [&mut dyn KvStore; 1] = [&mut self.kv];
         forward_batch_traced(
             &self.resident,
             &mut provider,
             &mut self.exec,
             &mut self.s,
-            &mut lanes,
+            &lanes,
+            &mut kvs,
             prof,
-            self.tracer.as_mut(),
+            self.tracer.as_mut().map(|t| t as &mut dyn TraceSink),
         )?;
         Ok(self.s.logits(0))
     }

@@ -13,20 +13,110 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::engine::forward::{CpuEngine, Engine};
 use crate::metrics::{ForwardProfile, TokenMeter};
-use crate::model::{KvCache, LlamaConfig};
+use crate::model::{KvCache, KvStore, LlamaConfig, PagePool, PagedKv};
 use crate::tensor;
+
+/// A session's KV storage: the contiguous per-session slab (the paper's
+/// layout, and the default), or a paged view drawing from a shared
+/// [`PagePool`] (`serve --kv-pages N`).  Both implement [`KvStore`], and
+/// the forward path only ever sees the trait — backends cannot tell the
+/// layouts apart, which is what keeps them bit-identical.
+pub enum SessionKv {
+    /// One private `n_layers × seq_len × kv_dim` slab.
+    Contiguous(KvCache),
+    /// On-demand pages from a shared pool, with copy-on-write prefix
+    /// sharing (see `model::paged`).
+    Paged(PagedKv),
+}
+
+impl SessionKv {
+    /// Adopt the longest cached prompt prefix from the page pool's
+    /// prefix cache; returns positions pre-filled (0 for contiguous
+    /// storage or a cache miss).  Called by the batch scheduler at
+    /// admission, after the session reset.
+    pub fn adopt_prefix(&mut self, prompt: &[u32]) -> usize {
+        match self {
+            SessionKv::Contiguous(_) => 0,
+            SessionKv::Paged(kv) => kv.adopt_prefix(prompt),
+        }
+    }
+
+    /// Publish this session's page-aligned prompt prefix to the pool's
+    /// prefix cache (no-op for contiguous storage).  Called by the batch
+    /// scheduler when a lane retires successfully.
+    pub fn cache_prefix(&self, prompt: &[u32]) {
+        if let SessionKv::Paged(kv) = self {
+            kv.cache_prefix(prompt);
+        }
+    }
+}
+
+impl KvStore for SessionKv {
+    fn store(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        match self {
+            SessionKv::Contiguous(kv) => kv.store(layer, pos, k, v),
+            SessionKv::Paged(kv) => kv.store(layer, pos, k, v),
+        }
+    }
+
+    fn key(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        match self {
+            SessionKv::Contiguous(kv) => kv.key(layer, pos, kv_head, head_dim),
+            SessionKv::Paged(kv) => kv.key(layer, pos, kv_head, head_dim),
+        }
+    }
+
+    fn value(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        match self {
+            SessionKv::Contiguous(kv) => kv.value(layer, pos, kv_head, head_dim),
+            SessionKv::Paged(kv) => kv.value(layer, pos, kv_head, head_dim),
+        }
+    }
+
+    fn filled(&self) -> usize {
+        match self {
+            SessionKv::Contiguous(kv) => kv.filled,
+            SessionKv::Paged(kv) => kv.filled(),
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            SessionKv::Contiguous(kv) => kv.reset(),
+            SessionKv::Paged(kv) => kv.reset(),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            SessionKv::Contiguous(kv) => kv.bytes(),
+            SessionKv::Paged(kv) => kv.bytes(),
+        }
+    }
+}
+
+impl fmt::Debug for SessionKv {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SessionKv::Contiguous(kv) => write!(f, "Contiguous(filled={})", kv.filled),
+            SessionKv::Paged(kv) => {
+                write!(f, "Paged(filled={}, pages={})", kv.filled(), kv.n_pages())
+            }
+        }
+    }
+}
 
 /// Mutable per-user decode state (everything `Arc`-shared weights are not).
 #[derive(Debug)]
 pub struct Session {
-    /// This session's private KV cache.
-    pub kv: KvCache,
+    /// This session's private KV state.
+    pub kv: SessionKv,
     /// Next decode position (== tokens consumed so far).
     pub pos: usize,
     /// LRU stamp, maintained by the pool on release.
@@ -34,12 +124,18 @@ pub struct Session {
 }
 
 impl Session {
-    /// Fresh session at position 0 with an empty KV cache.
+    /// Fresh session at position 0 with an empty contiguous KV cache.
     pub fn new(cfg: &LlamaConfig) -> Self {
-        Session { kv: KvCache::new(cfg), pos: 0, last_used: 0 }
+        Session { kv: SessionKv::Contiguous(KvCache::new(cfg)), pos: 0, last_used: 0 }
     }
 
-    /// Rewind to an empty context (the KV cache is lazily overwritten).
+    /// Fresh session at position 0 drawing KV pages from `pool`.
+    pub fn paged(pool: Arc<PagePool>) -> Self {
+        Session { kv: SessionKv::Paged(PagedKv::new(pool)), pos: 0, last_used: 0 }
+    }
+
+    /// Rewind to an empty context (contiguous storage is lazily
+    /// overwritten; paged storage returns its pages to the pool).
     pub fn reset(&mut self) {
         self.kv.reset();
         self.pos = 0;
@@ -79,6 +175,7 @@ struct PoolInner {
 pub struct SessionPool {
     cfg: LlamaConfig,
     capacity: usize,
+    pages: Option<Arc<PagePool>>,
     inner: Mutex<PoolInner>,
 }
 
@@ -89,8 +186,22 @@ impl SessionPool {
         SessionPool {
             cfg,
             capacity,
+            pages: None,
             inner: Mutex::new(PoolInner { idle: HashMap::new(), in_use: 0, clock: 0 }),
         }
+    }
+
+    /// Pool whose sessions draw KV storage from a shared [`PagePool`]
+    /// instead of owning contiguous slabs (`serve --kv-pages N`).
+    pub fn with_pages(cfg: LlamaConfig, capacity: usize, pages: Arc<PagePool>) -> Self {
+        let mut pool = SessionPool::new(cfg, capacity);
+        pool.pages = Some(pages);
+        pool
+    }
+
+    /// The shared KV page pool, when paged storage is configured.
+    pub fn page_pool(&self) -> Option<&Arc<PagePool>> {
+        self.pages.as_ref()
     }
 
     /// Maximum number of sessions (idle + checked out).
@@ -128,7 +239,10 @@ impl SessionPool {
             }
         }
         g.in_use += 1;
-        Ok(Session::new(&self.cfg))
+        Ok(match &self.pages {
+            Some(pool) => Session::paged(Arc::clone(pool)),
+            None => Session::new(&self.cfg),
+        })
     }
 
     /// Return `id`'s session for later reuse (stamps it most recently
@@ -165,6 +279,10 @@ pub struct SessionGen {
     /// scheduler's decode thread; `None` on the session-pool path, which
     /// has no shared step counters to attribute.
     pub trace: Option<crate::metrics::RequestTrace>,
+    /// Per-op digest trace of this request's forwards (batch scheduler
+    /// with `BatchOpts::trace` only) — diffable against a batch-1
+    /// reference trace to localize any scheduling divergence.
+    pub exec_trace: Option<crate::trace::ExecTrace>,
 }
 
 /// Greedy generation against an external [`Session`] — the serving path.
@@ -211,6 +329,7 @@ pub fn generate_session(
         latency_p50_s: p50,
         latency_p99_s: p99,
         trace: None,
+        exec_trace: None,
     })
 }
 

@@ -41,17 +41,23 @@ COMMANDS
             [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
             [--max-batch B] [--prefetch-depth N]
             [--stream-granularity layer|matrix] [--sync | --resident]
+            [--kv-pages P] [--prefill-chunk C]
             ps/ps-scalar/sim: concurrent requests are folded into
-            step-synchronous batched decoding over one shared weight
-            copy (up to B lanes/step, weights staged once per step by
-            a persistent prefetch worker running a depth-N staging
-            ring: --prefetch-depth N keeps N-1 transfers in flight,
-            default 2 = double buffering; --stream-granularity matrix
-            streams per-matrix chunks so transfers overlap compute
-            WITHIN a layer, layer streams whole layers; --sync
-            disables the async prefetch, --resident skips staging
-            entirely and serves zero-copy resident weights); llamaf:
-            sequential batch-1 streaming
+            continuously batched decoding over one shared weight
+            copy (requests join at the next step, up to B lanes/step,
+            weights staged once per step by a persistent prefetch
+            worker running a depth-N staging ring: --prefetch-depth N
+            keeps N-1 transfers in flight, default 2 = double
+            buffering; --stream-granularity matrix streams per-matrix
+            chunks so transfers overlap compute WITHIN a layer, layer
+            streams whole layers; --sync disables the async prefetch,
+            --resident skips staging entirely and serves zero-copy
+            resident weights; --kv-pages P draws session KV from a
+            shared pool of P 16-position pages with copy-on-write
+            prompt-prefix reuse instead of per-session slabs;
+            --prefill-chunk C lets one prompt prefill up to C tokens
+            per step — bit-identical either way); llamaf: sequential
+            batch-1 streaming
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
@@ -208,6 +214,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 prefetch_depth: prefetch_depth(args)?,
                 granularity: stream_granularity(args)?,
                 resident: args.flag("resident"),
+                kv_pages: args.get_usize("kv-pages", 0)?,
+                prefill_chunk: {
+                    let c = args.get_usize("prefill-chunk", 1)?;
+                    anyhow::ensure!(c >= 1, "--prefill-chunk must be >= 1");
+                    c
+                },
             };
             let threads = args.get_usize("threads", 4)?;
             let make_exec: Box<llamaf::server::ExecFactory> = match engine_kind.as_str() {

@@ -405,6 +405,16 @@ pub struct BatchMetrics {
     granularity: Mutex<&'static str>,
     occupancy: Mutex<Histogram>,
     profile: Mutex<ForwardProfile>,
+    /// Requests admitted into the active set (once per request).
+    admissions: AtomicU64,
+    /// Total submit→admission wait across admitted requests (ns).
+    admission_wait_ns: AtomicU64,
+    /// Configured chunked-prefill budget (gauge; 1 = classic one token
+    /// per step).
+    prefill_chunk: AtomicU64,
+    /// Scheduler steps in which some lane fed more than one prompt token
+    /// (chunked-prefill multi-lane feeds, summed over requests).
+    chunk_feeds: AtomicU64,
 }
 
 /// Matrix-granular wait buckets exported through `STATS` (`mat_wait_ms`):
@@ -526,6 +536,54 @@ impl BatchMetrics {
         out
     }
 
+    /// Record one request's admission into the active set with its
+    /// measured submit→admission wait (call exactly once per request).
+    pub fn record_admission(&self, wait_s: f64) {
+        self.admissions.fetch_add(1, Ordering::Relaxed);
+        if wait_s.is_finite() && wait_s > 0.0 {
+            self.admission_wait_ns.fetch_add((wait_s * 1e9) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Requests admitted into the active set so far.
+    pub fn admissions(&self) -> u64 {
+        self.admissions.load(Ordering::Relaxed)
+    }
+
+    /// Mean submit→admission latency in milliseconds (0 before the first
+    /// admission).
+    pub fn admission_ms_mean(&self) -> f64 {
+        let n = self.admissions();
+        if n == 0 {
+            0.0
+        } else {
+            self.admission_wait_ns.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        }
+    }
+
+    /// Record the configured chunked-prefill budget (once, at
+    /// decode-thread start).
+    pub fn set_prefill_chunk(&self, chunk: usize) {
+        self.prefill_chunk.store(chunk as u64, Ordering::Relaxed);
+    }
+
+    /// Configured chunked-prefill budget (lanes a prefilling request may
+    /// occupy in one step; 0 until the decode thread starts).
+    pub fn prefill_chunk(&self) -> u64 {
+        self.prefill_chunk.load(Ordering::Relaxed)
+    }
+
+    /// Count one multi-token chunked-prefill feed (a request consuming
+    /// more than one prompt token in a single scheduler step).
+    pub fn record_chunk_feed(&self) {
+        self.chunk_feeds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Multi-token chunked-prefill feeds so far (0 at `--prefill-chunk 1`).
+    pub fn chunk_feeds(&self) -> u64 {
+        self.chunk_feeds.load(Ordering::Relaxed)
+    }
+
     /// Record the streaming granularity label (once, at decode-thread
     /// start; never set under resident serving).
     pub fn set_granularity(&self, label: &'static str) {
@@ -580,7 +638,8 @@ impl BatchMetrics {
             "batch_steps={} batch_tokens={} batch_mean={:.2} batch_max={:.0} \
              bytes_staged={} bytes_per_tok={:.0} prefetch_wait_ms={:.3} \
              prefetch_depth={} ring_occ={:.2} granularity={} stage_mb_s={:.2} \
-             mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} matrix_pct={:.0}",
+             mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} matrix_pct={:.0} \
+             admission_ms={:.3} prefill_chunk={} chunk_feeds={}",
             self.steps(),
             self.lane_tokens(),
             self.occupancy_mean(),
@@ -598,6 +657,9 @@ impl BatchMetrics {
             mw[3],
             mw[4],
             matrix_pct,
+            self.admission_ms_mean(),
+            self.prefill_chunk(),
+            self.chunk_feeds(),
         )
     }
 }
@@ -723,9 +785,24 @@ mod tests {
             "granularity=matrix",
             "stage_mb_s=2.00",
             "mat_wait_ms=1.000/2.000/0.000/0.000/0.500",
+            "admission_ms=0.000",
+            "prefill_chunk=0",
+            "chunk_feeds=0",
         ] {
             assert!(s.contains(field), "summary missing {field}: {s}");
         }
+        // continuous-admission counters: two admissions waiting 2 ms and
+        // 4 ms average to 3 ms; chunk feeds count multi-token steps
+        m.record_admission(0.002);
+        m.record_admission(0.004);
+        m.set_prefill_chunk(4);
+        m.record_chunk_feed();
+        assert_eq!(m.admissions(), 2);
+        assert!((m.admission_ms_mean() - 3.0).abs() < 1e-6, "{}", m.admission_ms_mean());
+        let s = m.summary();
+        assert!(s.contains("admission_ms=3.000"), "{s}");
+        assert!(s.contains("prefill_chunk=4"), "{s}");
+        assert!(s.contains("chunk_feeds=1"), "{s}");
         // batch-1 baseline on the same workload stages 4x the bytes/token
         let b1 = BatchMetrics::default();
         for _ in 0..40 {
@@ -795,6 +872,8 @@ mod tests {
             unit_wait_s: [0.0; MAT_WAIT_UNITS],
             batch_mean: 1.0,
             tok_per_s: 100.0,
+            chunk_feeds: 0,
+            prefix_tokens: 0,
         };
         m.record_trace(&t);
         m.record_trace(&t);

@@ -26,6 +26,9 @@ pub struct TraceBuilder {
     queue_s: f64,
     prefill_steps: u64,
     decode_steps: u64,
+    sched_steps: u64,
+    chunk_feeds: u64,
+    prefix_tokens: u64,
     prefill_s: f64,
     decode_s: f64,
     staged_bytes: u64,
@@ -44,6 +47,9 @@ impl TraceBuilder {
             queue_s: 0.0,
             prefill_steps: 0,
             decode_steps: 0,
+            sched_steps: 0,
+            chunk_feeds: 0,
+            prefix_tokens: 0,
             prefill_s: 0.0,
             decode_s: 0.0,
             staged_bytes: 0,
@@ -53,35 +59,57 @@ impl TraceBuilder {
         }
     }
 
-    /// Mark the lane admitted to the step barrier, freezing the queue wait.
-    /// Idempotent: only the first call records.
-    pub fn admit(&mut self) {
+    /// The request id this recorder was started for.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Mark the lane admitted into the active set, freezing the queue
+    /// wait.  Idempotent: only the first call records, and only the first
+    /// call returns the measured wait (so the scheduler can feed its
+    /// admission-latency aggregate exactly once per request).
+    pub fn admit(&mut self) -> Option<f64> {
         if !self.admitted {
             self.admitted = true;
             self.queue_s = self.submitted.elapsed().as_secs_f64();
+            Some(self.queue_s)
+        } else {
+            None
         }
     }
 
-    /// Charge one batched step to this lane.  `prefill` is true while the
-    /// step consumed a prompt token without sampling; the remaining deltas
-    /// are the step's shared counter deltas (see module docs) plus the
-    /// step's lane occupancy.
+    /// Record the prompt tokens this request adopted from the page pool's
+    /// prefix cache instead of recomputing (0 = cold start).
+    pub fn set_prefix_tokens(&mut self, n: u64) {
+        self.prefix_tokens = n;
+    }
+
+    /// Charge one batched step to this lane.  The step fed
+    /// `prefill_feeds` prompt tokens *without* sampling (under chunked
+    /// prefill a step may feed several), plus one more feed that sampled
+    /// when `produced`; the remaining deltas are the step's shared counter
+    /// deltas (see module docs) plus the step's lane occupancy.
     pub fn record_step(
         &mut self,
-        prefill: bool,
+        prefill_feeds: u64,
+        produced: bool,
         wall_s: f64,
         staged_bytes: u64,
         prefetch_wait_s: f64,
         unit_wait_s: [f64; MAT_WAIT_UNITS],
         occupancy: usize,
     ) {
-        if prefill {
-            self.prefill_steps += 1;
-            self.prefill_s += wall_s;
-        } else {
+        self.prefill_steps += prefill_feeds;
+        if produced {
             self.decode_steps += 1;
             self.decode_s += wall_s;
+        } else {
+            self.prefill_s += wall_s;
         }
+        if prefill_feeds + u64::from(produced) > 1 {
+            self.chunk_feeds += 1;
+        }
+        self.sched_steps += 1;
         self.staged_bytes += staged_bytes;
         self.prefetch_wait_s += prefetch_wait_s;
         for (acc, w) in self.unit_wait_s.iter_mut().zip(unit_wait_s) {
@@ -93,12 +121,14 @@ impl TraceBuilder {
     /// Snapshot the record as an immutable [`RequestTrace`].  `tok_per_s`
     /// is left at 0; the caller fills it from the lane's `TokenMeter`.
     pub fn finish(&self) -> RequestTrace {
-        let steps = self.prefill_steps + self.decode_steps;
+        let steps = self.sched_steps;
         RequestTrace {
             id: self.id,
             queue_s: self.queue_s,
             prefill_steps: self.prefill_steps,
             decode_steps: self.decode_steps,
+            chunk_feeds: self.chunk_feeds,
+            prefix_tokens: self.prefix_tokens,
             prefill_s: self.prefill_s,
             decode_s: self.decode_s,
             staged_bytes: self.staged_bytes,
@@ -118,10 +148,18 @@ pub struct RequestTrace {
     pub id: u64,
     /// Seconds between submit and admission to the first step (queue wait).
     pub queue_s: f64,
-    /// Steps that fed a prompt token without sampling (`prompt_len - 1`).
+    /// Prompt tokens fed without sampling (`prompt_len - 1 -
+    /// prefix_tokens`); under chunked prefill one scheduler step may
+    /// contribute several.
     pub prefill_steps: u64,
     /// Steps that sampled a token — equals the tokens generated.
     pub decode_steps: u64,
+    /// Scheduler steps in which this request fed more than one token
+    /// (chunked-prefill multi-lane feeds; 0 at `--prefill-chunk 1`).
+    pub chunk_feeds: u64,
+    /// Prompt tokens adopted from the page pool's shared-prefix cache
+    /// instead of recomputed (0 = cold start or contiguous KV).
+    pub prefix_tokens: u64,
     /// Wall seconds of the lane's prefill steps.
     pub prefill_s: f64,
     /// Wall seconds of the lane's decode steps.
@@ -149,7 +187,8 @@ impl RequestTrace {
         format!(
             "id={} queue_ms={:.3} prefill_tokens={} decode_tokens={} prefill_ms={:.3} \
              decode_ms={:.3} staged_bytes={} prefetch_wait_ms={:.3} \
-             mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} batch_mean={:.2} tok_s={:.1}",
+             mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} batch_mean={:.2} tok_s={:.1} \
+             chunk_feeds={} prefix_tokens={}",
             self.id,
             1e3 * self.queue_s,
             self.prefill_steps,
@@ -165,6 +204,8 @@ impl RequestTrace {
             1e3 * w[4],
             self.batch_mean,
             self.tok_per_s,
+            self.chunk_feeds,
+            self.prefix_tokens,
         )
     }
 }
@@ -176,19 +217,20 @@ mod tests {
     #[test]
     fn builder_accumulates_and_splits_phases() {
         let mut b = TraceBuilder::new(7);
-        b.admit();
-        b.admit(); // idempotent
+        assert!(b.admit().is_some(), "first admit returns the measured wait");
+        assert!(b.admit().is_none(), "idempotent");
         // 2 prefill steps, 3 decode steps, occupancy 2 throughout
         for _ in 0..2 {
-            b.record_step(true, 0.010, 100, 0.001, [0.001, 0.0, 0.0, 0.0, 0.0], 2);
+            b.record_step(1, false, 0.010, 100, 0.001, [0.001, 0.0, 0.0, 0.0, 0.0], 2);
         }
         for _ in 0..3 {
-            b.record_step(false, 0.020, 200, 0.002, [0.0, 0.0, 0.0, 0.003, 0.0], 2);
+            b.record_step(0, true, 0.020, 200, 0.002, [0.0, 0.0, 0.0, 0.003, 0.0], 2);
         }
         let t = b.finish();
         assert_eq!(t.id, 7);
         assert_eq!(t.prefill_steps, 2);
         assert_eq!(t.decode_steps, 3);
+        assert_eq!(t.chunk_feeds, 0, "single-token feeds are not chunk feeds");
         assert!((t.prefill_s - 0.020).abs() < 1e-9);
         assert!((t.decode_s - 0.060).abs() < 1e-9);
         assert_eq!(t.staged_bytes, 800);
@@ -199,11 +241,32 @@ mod tests {
     }
 
     #[test]
+    fn chunked_steps_count_feeds_not_steps() {
+        // a 7-token prompt fed as chunks of 3+3+1(sampled), then 2 decode
+        // steps: prefill_tokens == 6 == prompt_len - 1, decode == 3
+        let mut b = TraceBuilder::new(9);
+        b.admit();
+        b.record_step(3, false, 0.010, 0, 0.0, [0.0; MAT_WAIT_UNITS], 3);
+        b.record_step(3, false, 0.010, 0, 0.0, [0.0; MAT_WAIT_UNITS], 3);
+        b.record_step(0, true, 0.010, 0, 0.0, [0.0; MAT_WAIT_UNITS], 1);
+        b.record_step(0, true, 0.010, 0, 0.0, [0.0; MAT_WAIT_UNITS], 1);
+        b.record_step(0, true, 0.010, 0, 0.0, [0.0; MAT_WAIT_UNITS], 1);
+        b.set_prefix_tokens(4);
+        let t = b.finish();
+        assert_eq!(t.prefill_steps, 6);
+        assert_eq!(t.decode_steps, 3);
+        assert_eq!(t.chunk_feeds, 2, "two multi-token feeds");
+        assert_eq!(t.prefix_tokens, 4);
+        // batch_mean averages over scheduler steps (5), not feeds (9)
+        assert!((t.batch_mean - 9.0 / 5.0).abs() < 1e-9, "{}", t.batch_mean);
+    }
+
+    #[test]
     fn summary_carries_every_documented_field() {
         let mut b = TraceBuilder::new(1);
         b.admit();
-        b.record_step(true, 0.001, 10, 0.0, [0.0; MAT_WAIT_UNITS], 1);
-        b.record_step(false, 0.002, 10, 0.0, [0.0; MAT_WAIT_UNITS], 1);
+        b.record_step(1, false, 0.001, 10, 0.0, [0.0; MAT_WAIT_UNITS], 1);
+        b.record_step(0, true, 0.002, 10, 0.0, [0.0; MAT_WAIT_UNITS], 1);
         let mut t = b.finish();
         t.tok_per_s = 42.0;
         let s = t.summary();
@@ -219,6 +282,8 @@ mod tests {
             "mat_wait_ms=",
             "batch_mean=1.00",
             "tok_s=42.0",
+            "chunk_feeds=0",
+            "prefix_tokens=0",
         ] {
             assert!(s.contains(field), "summary missing {field}: {s}");
         }

@@ -3,6 +3,30 @@
 
 use crate::model::LlamaConfig;
 
+/// Abstract KV storage the forward pass decodes against.
+///
+/// Implemented by the contiguous per-session [`KvCache`] (the paper's
+/// layout: one `n_layers × seq_len × kv_dim` slab per session) and by the
+/// paged view [`crate::model::PagedKv`] (fixed-size position pages drawn
+/// from a shared [`crate::model::PagePool`] with copy-on-write prefix
+/// sharing).  `forward_batch` and `attention` consume this trait, so every
+/// backend — host and device — goes through the same interface regardless
+/// of how the cache is laid out.
+pub trait KvStore {
+    /// Store k/v vectors (each `kv_dim` long) for (layer, pos).
+    fn store(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+    /// Key vector of one kv-head at (layer, pos).
+    fn key(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32];
+    /// Value vector of one kv-head at (layer, pos).
+    fn value(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32];
+    /// Highest position written + 1.
+    fn filled(&self) -> usize;
+    /// Forget all cached positions (storage may be retained or released).
+    fn reset(&mut self);
+    /// Memory footprint in bytes currently held by this cache.
+    fn bytes(&self) -> usize;
+}
+
 /// Per-layer key/value cache for incremental decoding, batch size 1.
 #[derive(Clone, Debug)]
 pub struct KvCache {
@@ -65,6 +89,32 @@ impl KvCache {
     /// Memory footprint in bytes (PS DDR budget accounting).
     pub fn bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 4
+    }
+}
+
+impl KvStore for KvCache {
+    fn store(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        KvCache::store(self, layer, pos, k, v);
+    }
+
+    fn key(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        KvCache::key(self, layer, pos, kv_head, head_dim)
+    }
+
+    fn value(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        KvCache::value(self, layer, pos, kv_head, head_dim)
+    }
+
+    fn filled(&self) -> usize {
+        self.filled
+    }
+
+    fn reset(&mut self) {
+        KvCache::reset(self);
+    }
+
+    fn bytes(&self) -> usize {
+        KvCache::bytes(self)
     }
 }
 

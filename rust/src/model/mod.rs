@@ -2,10 +2,12 @@
 
 pub mod config;
 pub mod kv;
+pub mod paged;
 pub mod weights;
 
 pub use config::{LlamaConfig, MatKind, NANO, TINYLLAMA_1_1B};
-pub use kv::KvCache;
+pub use kv::{KvCache, KvStore};
+pub use paged::{PagePool, PagedKv, DEFAULT_PAGE_POSITIONS};
 pub use weights::{
     FloatLayer, FloatModel, LayerChunk, MatrixUnit, QuantLayer, QuantModel, MATRIX_UNITS,
 };

@@ -1,0 +1,509 @@
+//! Paged KV cache: fixed-size position pages drawn from a shared pool.
+//!
+//! The contiguous [`KvCache`](crate::model::KvCache) reserves
+//! `n_layers × seq_len × kv_dim` floats per session up front — at paper
+//! scale ~92 MB each — even when a session decodes ten tokens.  The page
+//! pool breaks that allocation into **pages** of `page_size` consecutive
+//! positions (across all layers), allocated on demand as a session's
+//! context grows and returned when it resets, so resident KV memory
+//! tracks *live context*, not the session count × `seq_len` worst case.
+//!
+//! On top of the block allocator sits **refcounted copy-on-write prefix
+//! sharing**: when a session retires, the page-aligned prefix of its
+//! prompt can be published to the pool's prefix cache
+//! ([`PagedKv::cache_prefix`]).  A later session with the same prompt
+//! prefix adopts those pages by `Arc` clone ([`PagedKv::adopt_prefix`]) —
+//! zero copies, zero recompute — and the scheduler skips feeding the
+//! covered tokens.  Shared pages are immutable through sharing: a write
+//! to a page with other holders first replaces it with a private copy
+//! ([`PagePool::cow_replace`]), so one session can never corrupt another
+//! session's (or the cache's) view.  This is bit-exact by construction:
+//! a cached page holds exactly the floats the same prompt prefix would
+//! recompute, because KV at position *p* depends only on tokens `0..=p`.
+//!
+//! Under memory pressure the pool evicts prefix-cache entries in LRU
+//! order.  `capacity` is a soft bound for *live* demand (a session that
+//! genuinely needs one more page gets it rather than panicking the
+//! decode thread) and a hard bound for cached memory: allocation evicts
+//! the cache before overcommitting.  Hit/miss/eviction counters feed the
+//! `STATS`/`METRICS` surfaces (`docs/OBSERVABILITY.md`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::model::kv::KvStore;
+use crate::model::LlamaConfig;
+
+/// Default positions per page (CLI `--kv-pages` counts pages of this
+/// size unless a pool is built with an explicit `page_size`).
+pub const DEFAULT_PAGE_POSITIONS: usize = 16;
+
+/// One page: `page_size` consecutive positions × all layers × `kv_dim`
+/// floats of keys and of values.  Pages are immutable while shared
+/// (refcount > 1) — writers go through copy-on-write.
+struct Page {
+    /// Pool-unique id (monotone); lets tests account distinct pages.
+    id: u64,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// One published prompt prefix: the exact token ids it covers (always a
+/// whole number of pages) and the shared pages holding their KV.
+struct PrefixEntry {
+    tokens: Vec<u32>,
+    pages: Vec<Arc<Page>>,
+    last_used: u64,
+}
+
+struct PoolState {
+    /// Distinct live pages (session-held and/or cache-held).
+    allocated: usize,
+    next_id: u64,
+    cache: Vec<PrefixEntry>,
+    clock: u64,
+}
+
+/// Shared block allocator + prefix cache for paged KV storage.
+///
+/// One pool serves every session of a server (`serve --kv-pages N`).
+/// All refcount transitions that affect the `allocated` ledger happen
+/// under the pool mutex, so the ledger exactly equals the number of
+/// distinct live pages at all times (pinned by `tests/property.rs`).
+pub struct PagePool {
+    /// Positions per page.
+    pub page_size: usize,
+    /// Soft page budget: allocation evicts cached prefixes to stay
+    /// under it; live sessions may overcommit past it rather than fail.
+    pub capacity: usize,
+    n_layers: usize,
+    kv_dim: usize,
+    seq_len: usize,
+    /// Floats per page per side (k or v).
+    page_floats: usize,
+    state: Mutex<PoolState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PagePool {
+    /// Pool for `cfg`-shaped sessions with `capacity` pages of
+    /// `page_size` positions each.
+    pub fn new(cfg: &LlamaConfig, capacity: usize, page_size: usize) -> Self {
+        assert!(page_size > 0, "page_size must be >= 1");
+        assert!(capacity > 0, "page capacity must be >= 1");
+        PagePool {
+            page_size,
+            capacity,
+            n_layers: cfg.n_layers,
+            kv_dim: cfg.kv_dim(),
+            seq_len: cfg.seq_len,
+            page_floats: cfg.n_layers * page_size * cfg.kv_dim(),
+            state: Mutex::new(PoolState { allocated: 0, next_id: 0, cache: Vec::new(), clock: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Evict the least-recently-used cached prefix, releasing every page
+    /// the cache was the last holder of.  Returns false when the cache
+    /// is empty.
+    fn evict_lru_locked(&self, st: &mut PoolState) -> bool {
+        let Some(idx) = (0..st.cache.len()).min_by_key(|&i| st.cache[i].last_used) else {
+            return false;
+        };
+        let entry = st.cache.swap_remove(idx);
+        for page in entry.pages {
+            if Arc::strong_count(&page) == 1 {
+                st.allocated -= 1;
+            }
+        }
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    fn fresh_page_locked(&self, st: &mut PoolState) -> Arc<Page> {
+        let id = st.next_id;
+        st.next_id += 1;
+        st.allocated += 1;
+        Arc::new(Page { id, k: vec![0.0; self.page_floats], v: vec![0.0; self.page_floats] })
+    }
+
+    /// Allocate one page, evicting cached prefixes first when the pool
+    /// is at capacity.  Live demand may overcommit past `capacity`.
+    fn alloc(&self) -> Arc<Page> {
+        let mut st = self.lock();
+        while st.allocated >= self.capacity && self.evict_lru_locked(&mut st) {}
+        self.fresh_page_locked(&mut st)
+    }
+
+    /// Replace a shared page behind `slot` with a private deep copy
+    /// (copy-on-write).  No-op when the caller is already the sole
+    /// holder.  Runs under the pool lock so the `allocated` ledger and
+    /// the refcounts it mirrors change atomically together.
+    fn cow_replace(&self, slot: &mut Arc<Page>) {
+        let mut st = self.lock();
+        if Arc::strong_count(slot) == 1 {
+            return; // raced: the other holder vanished before we locked
+        }
+        while st.allocated >= self.capacity && self.evict_lru_locked(&mut st) {}
+        let id = st.next_id;
+        st.next_id += 1;
+        st.allocated += 1;
+        let copy = Arc::new(Page { id, k: slot.k.clone(), v: slot.v.clone() });
+        // Dropping our ref to the shared page cannot free it (another
+        // holder exists under this lock), so no ledger decrement here.
+        *slot = copy;
+    }
+
+    /// Return a session's pages to the pool, decrementing the ledger
+    /// for every page this was the last reference to.
+    fn release(&self, pages: Vec<Arc<Page>>) {
+        if pages.is_empty() {
+            return;
+        }
+        let mut st = self.lock();
+        for page in pages {
+            if Arc::strong_count(&page) == 1 {
+                st.allocated -= 1;
+            }
+        }
+    }
+
+    /// Longest cached prefix of `prompt` usable for admission: the
+    /// match must leave at least one prompt token to feed (the final
+    /// token's forward produces the first logits).  Counts a hit or a
+    /// miss; hits refresh the entry's LRU stamp.
+    fn fork(&self, prompt: &[u32]) -> Option<(Vec<Arc<Page>>, usize)> {
+        let mut st = self.lock();
+        st.clock += 1;
+        let clock = st.clock;
+        let best = st
+            .cache
+            .iter_mut()
+            .filter(|e| e.tokens.len() < prompt.len() && prompt.starts_with(&e.tokens))
+            .max_by_key(|e| e.tokens.len());
+        match best {
+            Some(entry) => {
+                entry.last_used = clock;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some((entry.pages.clone(), entry.tokens.len()))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Publish `tokens` (a whole number of pages) backed by `pages`.
+    /// An existing identical entry is refreshed instead of duplicated.
+    fn cache_insert(&self, tokens: &[u32], pages: Vec<Arc<Page>>) {
+        debug_assert_eq!(tokens.len(), pages.len() * self.page_size);
+        let mut st = self.lock();
+        st.clock += 1;
+        let clock = st.clock;
+        if let Some(entry) = st.cache.iter_mut().find(|e| e.tokens == tokens) {
+            entry.last_used = clock;
+            return;
+        }
+        st.cache.push(PrefixEntry { tokens: tokens.to_vec(), pages, last_used: clock });
+    }
+
+    /// Distinct live pages right now (session-held and/or cache-held).
+    pub fn pages_used(&self) -> usize {
+        self.lock().allocated
+    }
+
+    /// Cached prefix entries right now.
+    pub fn cached_prefixes(&self) -> usize {
+        self.lock().cache.len()
+    }
+
+    /// Prefix-cache hits (admissions that adopted cached pages).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Prefix-cache misses (admissions that found no usable prefix).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Prefix-cache entries evicted under memory pressure (or by
+    /// [`PagePool::clear_cache`]).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Evict every cached prefix (testing / explicit drain).
+    pub fn clear_cache(&self) {
+        let mut st = self.lock();
+        while self.evict_lru_locked(&mut st) {}
+    }
+
+    /// Page ids currently held by the prefix cache (test accounting).
+    pub fn cached_page_ids(&self) -> Vec<u64> {
+        let st = self.lock();
+        st.cache.iter().flat_map(|e| e.pages.iter().map(|p| p.id)).collect()
+    }
+}
+
+/// A session's view of pool-backed KV storage: an ordered run of pages
+/// covering positions `0..filled`, growing on demand.
+///
+/// Reads (`key`/`value`) touch no lock — the session owns `Arc`s to its
+/// pages.  Writes to a page shared with the prefix cache (or another
+/// session) go through copy-on-write first.
+pub struct PagedKv {
+    pool: Arc<PagePool>,
+    pages: Vec<Arc<Page>>,
+    filled: usize,
+}
+
+impl PagedKv {
+    /// Empty paged cache drawing from `pool`.
+    pub fn new(pool: Arc<PagePool>) -> Self {
+        PagedKv { pool, pages: Vec::new(), filled: 0 }
+    }
+
+    #[inline]
+    fn offset(&self, layer: usize, pos: usize) -> (usize, usize) {
+        let ps = self.pool.page_size;
+        (pos / ps, (layer * ps + pos % ps) * self.pool.kv_dim)
+    }
+
+    fn page_mut(&mut self, idx: usize) -> &mut Page {
+        if Arc::get_mut(&mut self.pages[idx]).is_none() {
+            self.pool.cow_replace(&mut self.pages[idx]);
+        }
+        Arc::get_mut(&mut self.pages[idx]).expect("page uniquely owned after copy-on-write")
+    }
+
+    /// Adopt the longest cached prefix of `prompt` from the pool's
+    /// prefix cache.  Must be called on an empty (reset) cache; returns
+    /// the number of positions now pre-filled (0 on a cache miss) — the
+    /// scheduler skips feeding that many prompt tokens.
+    pub fn adopt_prefix(&mut self, prompt: &[u32]) -> usize {
+        assert_eq!(self.filled, 0, "adopt_prefix requires a reset cache");
+        match self.pool.fork(prompt) {
+            Some((pages, len)) => {
+                self.pages = pages;
+                self.filled = len;
+                len
+            }
+            None => 0,
+        }
+    }
+
+    /// Publish the page-aligned prefix of `prompt` this session computed
+    /// to the pool's prefix cache, sharing its pages (no copy).  A
+    /// prefix shorter than one page is not cached.
+    pub fn cache_prefix(&self, prompt: &[u32]) {
+        let ps = self.pool.page_size;
+        // Cacheable span: fully-computed prompt positions, whole pages
+        // only, and never the final prompt token (an adopter must still
+        // feed at least one token to get logits).
+        let span = prompt.len().saturating_sub(1).min(self.filled) / ps * ps;
+        if span == 0 {
+            return;
+        }
+        let pages: Vec<Arc<Page>> = self.pages[..span / ps].to_vec();
+        self.pool.cache_insert(&prompt[..span], pages);
+    }
+
+    /// Pages currently held by this session.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Ids of the pages currently held (test accounting).
+    pub fn page_ids(&self) -> Vec<u64> {
+        self.pages.iter().map(|p| p.id).collect()
+    }
+
+    /// The shared pool this cache draws from.
+    pub fn pool(&self) -> &Arc<PagePool> {
+        &self.pool
+    }
+}
+
+impl KvStore for PagedKv {
+    fn store(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.pool.seq_len, "pos {pos} >= seq_len {}", self.pool.seq_len);
+        assert_eq!(k.len(), self.pool.kv_dim);
+        assert_eq!(v.len(), self.pool.kv_dim);
+        let (pi, off) = self.offset(layer, pos);
+        while self.pages.len() <= pi {
+            let page = self.pool.alloc();
+            self.pages.push(page);
+        }
+        let kv_dim = self.pool.kv_dim;
+        let page = self.page_mut(pi);
+        page.k[off..off + kv_dim].copy_from_slice(k);
+        page.v[off..off + kv_dim].copy_from_slice(v);
+        self.filled = self.filled.max(pos + 1);
+    }
+
+    #[inline]
+    fn key(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        let (pi, off) = self.offset(layer, pos);
+        let i = off + kv_head * head_dim;
+        &self.pages[pi].k[i..i + head_dim]
+    }
+
+    #[inline]
+    fn value(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        let (pi, off) = self.offset(layer, pos);
+        let i = off + kv_head * head_dim;
+        &self.pages[pi].v[i..i + head_dim]
+    }
+
+    fn filled(&self) -> usize {
+        self.filled
+    }
+
+    fn reset(&mut self) {
+        self.pool.release(std::mem::take(&mut self.pages));
+        self.filled = 0;
+    }
+
+    fn bytes(&self) -> usize {
+        self.pages.len() * self.pool.page_floats * 2 * 4
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        self.pool.release(std::mem::take(&mut self.pages));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::NANO;
+    use crate::model::KvCache;
+
+    fn pool(cap: usize, ps: usize) -> Arc<PagePool> {
+        Arc::new(PagePool::new(&NANO, cap, ps))
+    }
+
+    fn fill(kv: &mut dyn KvStore, positions: usize, seed: f32) {
+        let kd = NANO.kv_dim();
+        for pos in 0..positions {
+            for layer in 0..NANO.n_layers {
+                let k: Vec<f32> =
+                    (0..kd).map(|i| seed + (layer * 100 + pos * 10 + i) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                kv.store(layer, pos, &k, &v);
+            }
+        }
+    }
+
+    #[test]
+    fn paged_reads_match_contiguous() {
+        let p = pool(64, 4);
+        let mut paged = PagedKv::new(Arc::clone(&p));
+        let mut flat = KvCache::new(&NANO);
+        fill(&mut paged, 10, 0.5);
+        fill(&mut flat, 10, 0.5);
+        let hd = NANO.head_dim();
+        for layer in 0..NANO.n_layers {
+            for pos in 0..10 {
+                for h in 0..NANO.n_kv_heads {
+                    assert_eq!(paged.key(layer, pos, h, hd), flat.key(layer, pos, h, hd));
+                    assert_eq!(paged.value(layer, pos, h, hd), flat.value(layer, pos, h, hd));
+                }
+            }
+        }
+        assert_eq!(paged.filled(), 10);
+        assert_eq!(paged.n_pages(), 3); // ceil(10 / 4)
+    }
+
+    #[test]
+    fn release_returns_every_page() {
+        let p = pool(16, 4);
+        let mut a = PagedKv::new(Arc::clone(&p));
+        let mut b = PagedKv::new(Arc::clone(&p));
+        fill(&mut a, 9, 1.0);
+        fill(&mut b, 5, 2.0);
+        assert_eq!(p.pages_used(), 3 + 2);
+        a.reset();
+        assert_eq!(p.pages_used(), 2);
+        drop(b);
+        assert_eq!(p.pages_used(), 0);
+    }
+
+    #[test]
+    fn prefix_adoption_shares_pages_and_cow_isolates_writes() {
+        let p = pool(64, 4);
+        let mut a = PagedKv::new(Arc::clone(&p));
+        fill(&mut a, 9, 3.0);
+        let prompt: Vec<u32> = (0..9).collect();
+        a.cache_prefix(&prompt); // caches 2 pages = 8 positions
+        assert_eq!(p.cached_prefixes(), 1);
+
+        let mut b = PagedKv::new(Arc::clone(&p));
+        let adopted = b.adopt_prefix(&prompt);
+        assert_eq!(adopted, 8);
+        assert_eq!(p.hits(), 1);
+        // shared pages: same ids, no new allocation
+        assert_eq!(b.page_ids(), a.page_ids()[..2].to_vec());
+        let used_before = p.pages_used();
+
+        // writing into a shared page must COW, not corrupt a's view
+        let hd = NANO.head_dim();
+        let before: Vec<f32> = a.key(0, 0, 0, hd).to_vec();
+        let z = vec![9.9f32; NANO.kv_dim()];
+        b.store(0, 0, &z, &z);
+        assert_eq!(a.key(0, 0, 0, hd), &before[..], "COW failed to isolate the writer");
+        assert_eq!(b.key(0, 0, 0, hd), &z[..hd]);
+        assert_ne!(b.page_ids()[0], a.page_ids()[0]);
+        assert_eq!(p.pages_used(), used_before + 1);
+    }
+
+    #[test]
+    fn lru_eviction_frees_cache_only_pages() {
+        let p = pool(4, 2);
+        let mut a = PagedKv::new(Arc::clone(&p));
+        fill(&mut a, 5, 4.0); // 3 pages
+        let prompt: Vec<u32> = (0..5).collect();
+        a.cache_prefix(&prompt); // caches 2 pages (4 positions)
+        a.reset(); // cache is now the sole holder of those 2 pages
+        assert_eq!(p.pages_used(), 2);
+
+        // demand past capacity evicts the cached prefix
+        let mut b = PagedKv::new(Arc::clone(&p));
+        fill(&mut b, 6, 5.0); // needs 3 pages; cap 4 forces eviction
+        assert_eq!(p.evictions(), 1);
+        assert_eq!(p.cached_prefixes(), 0);
+        assert_eq!(p.pages_used(), 3);
+    }
+
+    #[test]
+    fn short_or_unaligned_prefixes_are_not_adopted_past_the_last_token() {
+        let p = pool(16, 4);
+        let mut a = PagedKv::new(Arc::clone(&p));
+        fill(&mut a, 4, 6.0);
+        // prompt of 4: only 3 positions are cacheable (the adopter must
+        // feed the final token), which rounds down to 0 whole pages
+        a.cache_prefix(&[1, 2, 3, 4]);
+        assert_eq!(p.cached_prefixes(), 0);
+
+        fill(&mut a, 9, 6.0);
+        let prompt: Vec<u32> = (10..19).collect();
+        a.cache_prefix(&prompt); // 8 positions = 2 pages cached
+        let mut b = PagedKv::new(Arc::clone(&p));
+        // a prompt equal to the cached prefix alone leaves no token to
+        // feed -> must NOT adopt the full entry
+        assert_eq!(b.adopt_prefix(&prompt[..8]), 0);
+        assert_eq!(p.misses(), 1);
+    }
+}

@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::model::{FloatModel, KvCache};
+use crate::model::{FloatModel, KvCache, KvStore};
 use crate::tensor;
 
 /// Incremental float forward pass with KV cache.
@@ -82,11 +82,12 @@ impl FloatEngine {
     }
 }
 
-/// Multi-head GQA attention over the KV cache (shared by float and
-/// quantized engines — both run it on the PS, per the paper).
+/// Multi-head GQA attention over any [`KvStore`] (shared by float and
+/// quantized engines — both run it on the PS, per the paper; contiguous
+/// and paged caches go through the same loop).
 pub fn attention(
     cfg: &crate::model::LlamaConfig,
-    kv: &KvCache,
+    kv: &dyn KvStore,
     layer: usize,
     pos: usize,
     q: &[f32],

@@ -12,13 +12,18 @@
 //!   workers.  Workers do not run private forward passes: every `GEN` /
 //!   `SGEN` is submitted to one shared
 //!   [`BatchScheduler`](crate::engine::batch::BatchScheduler), whose
-//!   decode thread folds all concurrent requests into step-synchronous
-//!   batched passes — each layer's weights are staged once per step for
-//!   the whole batch.  Per-client KV state comes from a capacity-bounded
-//!   [`SessionPool`] with LRU eviction.  Greedy outputs are byte-identical
-//!   to batch-1 serving.  Weights are streamed (staged once per step via
-//!   the persistent prefetch worker) by default, or served zero-copy with
-//!   `--resident` when the model truly fits device-side.
+//!   decode thread folds all concurrent requests into continuously
+//!   batched passes — requests join at the very next step after arrival,
+//!   prompts may prefill in bounded chunks (`--prefill-chunk`), and each
+//!   layer's weights are staged once per step for the whole batch.
+//!   Per-client KV state comes from a capacity-bounded [`SessionPool`]
+//!   with LRU eviction; with `--kv-pages N` sessions draw KV storage
+//!   from a shared page pool with copy-on-write prompt-prefix reuse
+//!   instead of owning contiguous slabs.  Greedy outputs are
+//!   byte-identical to batch-1 serving.  Weights are streamed (staged
+//!   once per step via the persistent prefetch worker) by default, or
+//!   served zero-copy with `--resident` when the model truly fits
+//!   device-side.
 //!
 //! Protocol (one request per line over TCP):
 //!   `GEN <steps> <prompt text...>`  →  one line: `OK <tok/s> | <text>`
@@ -59,7 +64,7 @@ use crate::engine::forward::Engine;
 use crate::engine::generate::{generate, Sampler};
 use crate::engine::session::{Session, SessionPool};
 use crate::metrics::{RequestTrace, ServerMetrics};
-use crate::model::{LlamaConfig, QuantModel};
+use crate::model::{LlamaConfig, PagePool, QuantModel, DEFAULT_PAGE_POSITIONS};
 use crate::ps::gqmv::GqmvExec;
 use crate::sched::{SchedMode, StageGranularity};
 use crate::tokenizer::Tokenizer;
@@ -97,6 +102,15 @@ pub struct ServeOpts {
     /// instead of streaming them through the staging scheduler — for
     /// deployments where the model truly fits device-side.
     pub resident: bool,
+    /// Shared KV page-pool capacity in pages of
+    /// [`DEFAULT_PAGE_POSITIONS`] positions (CLI `--kv-pages`); 0 (the
+    /// default) keeps the contiguous per-session KV slabs.  Paged
+    /// sessions get copy-on-write prompt-prefix reuse across requests.
+    pub kv_pages: usize,
+    /// Maximum prompt tokens one request may prefill per batched step
+    /// (CLI `--prefill-chunk`); 1 (the default) is the classic one token
+    /// per step.  Bit-identical at any value.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeOpts {
@@ -110,6 +124,8 @@ impl Default for ServeOpts {
             prefetch_depth: crate::sched::DEFAULT_PREFETCH_DEPTH,
             granularity: StageGranularity::default(),
             resident: false,
+            kv_pages: 0,
+            prefill_chunk: 1,
         }
     }
 }
@@ -125,6 +141,15 @@ pub struct ServeReport {
     pub rejected: u64,
     /// Tokens generated across all requests.
     pub tokens: u64,
+    /// Sessions idle in the pool when the server drained.
+    pub idle_at_exit: usize,
+    /// Sessions still checked out at drain — 0 unless a session was lost
+    /// with the decode thread (soak tests pin this).
+    pub busy_at_exit: usize,
+    /// Live KV pages left after the drained pool's idle sessions and the
+    /// prefix cache were released — 0 if the page ledger balances (soak
+    /// tests pin this; always 0 without `--kv-pages`).
+    pub kv_pages_at_exit: usize,
 }
 
 /// State shared by the accept loop and every worker.
@@ -253,6 +278,7 @@ impl Server {
         anyhow::ensure!(opts.queue_depth >= 1, "need a queue depth of at least 1");
         anyhow::ensure!(opts.max_batch >= 1, "need a batch capacity of at least 1");
         anyhow::ensure!(opts.prefetch_depth >= 1, "need a prefetch depth of at least 1");
+        anyhow::ensure!(opts.prefill_chunk >= 1, "need a prefill chunk of at least 1");
         anyhow::ensure!(
             !(opts.resident && opts.sync_staging),
             "--resident serves from memory; --sync only applies to streamed staging"
@@ -272,13 +298,20 @@ impl Server {
                 prefetch_depth: opts.prefetch_depth,
                 granularity: opts.granularity,
                 weights: if opts.resident { WeightMode::Resident } else { WeightMode::Streamed },
+                prefill_chunk: opts.prefill_chunk,
+                ..Default::default()
             },
         );
+        let page_pool = (opts.kv_pages > 0)
+            .then(|| Arc::new(PagePool::new(&model.cfg, opts.kv_pages, DEFAULT_PAGE_POSITIONS)));
         let shared = Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            pool: SessionPool::new(model.cfg, opts.max_sessions),
+            pool: match &page_pool {
+                Some(p) => SessionPool::with_pages(model.cfg, opts.max_sessions, Arc::clone(p)),
+                None => SessionPool::new(model.cfg, opts.max_sessions),
+            },
             metrics: ServerMetrics::default(),
             sched: Arc::clone(&sched),
             cfg: model.cfg,
@@ -356,11 +389,29 @@ impl Server {
         drop(shutdown_guard);
         scope_result?;
 
+        let (idle_at_exit, busy_at_exit) = shared.pool.counts();
+        let requests = shared.metrics.requests.load(Ordering::Relaxed);
+        let rejected = shared.metrics.rejected.load(Ordering::Relaxed);
+        let tokens = shared.metrics.tokens.load(Ordering::Relaxed);
+        // Page-ledger drain check: dropping the session pool releases
+        // every idle session's pages, clearing the prefix cache releases
+        // the rest — a balanced ledger then reads exactly 0.
+        drop(shared);
+        let kv_pages_at_exit = page_pool
+            .map(|p| {
+                p.clear_cache();
+                p.pages_used()
+            })
+            .unwrap_or(0);
+
         Ok(ServeReport {
             accepted,
-            requests: shared.metrics.requests.load(Ordering::Relaxed),
-            rejected: shared.metrics.rejected.load(Ordering::Relaxed),
-            tokens: shared.metrics.tokens.load(Ordering::Relaxed),
+            requests,
+            rejected,
+            tokens,
+            idle_at_exit,
+            busy_at_exit,
+            kv_pages_at_exit,
         })
     }
 
@@ -433,12 +484,13 @@ impl Server {
             let (idle, in_use) = shared.pool.counts();
             return Ok(Some(format!(
                 "OK sessions_idle={idle} sessions_busy={in_use} sessions_cap={} workers={} \
-                 weights={} {} {}",
+                 weights={} {} {} {}",
                 shared.pool.capacity(),
                 shared.workers_live.load(Ordering::SeqCst),
                 shared.weights,
                 shared.metrics.summary(),
                 shared.sched.metrics().summary(),
+                page_pool_summary(shared),
             )));
         }
         if line == "TRACE" {
@@ -528,6 +580,25 @@ impl Server {
     }
 }
 
+/// Page-pool segment of the `STATS` reply.  All five fields are present
+/// in every reply (zeros without `--kv-pages`) so scrapers never branch
+/// on server configuration.
+fn page_pool_summary(shared: &Shared) -> String {
+    match shared.pool.page_pool() {
+        Some(p) => format!(
+            "page_hits={} page_misses={} page_evictions={} kv_pages_used={} kv_pages_cap={}",
+            p.hits(),
+            p.misses(),
+            p.evictions(),
+            p.pages_used(),
+            p.capacity,
+        ),
+        None => {
+            "page_hits=0 page_misses=0 page_evictions=0 kv_pages_used=0 kv_pages_cap=0".into()
+        }
+    }
+}
+
 /// Pop the next queued connection, or None when shut down and drained.
 fn next_conn(shared: &Shared) -> Option<TcpStream> {
     let mut q = shared.queue.lock().unwrap();
@@ -556,6 +627,7 @@ fn metrics_lines(shared: &Shared) -> Vec<(&'static str, String)> {
     let prof_total = prof.total();
     let matrix_pct = if prof_total > 0.0 { 100.0 * prof.matrix_s / prof_total } else { 0.0 };
     let mw = b.unit_wait_ms();
+    let pp = shared.pool.page_pool();
     vec![
         ("sessions_idle", idle.to_string()),
         ("sessions_busy", busy.to_string()),
@@ -595,6 +667,14 @@ fn metrics_lines(shared: &Shared) -> Vec<(&'static str, String)> {
         ("matrix_time_pct", format!("{matrix_pct:.1}")),
         ("weights_resident", if shared.weights == "resident" { "1" } else { "0" }.to_string()),
         ("granularity_matrix", if b.granularity() == "matrix" { "1" } else { "0" }.to_string()),
+        ("admission_ms_mean", format!("{:.3}", b.admission_ms_mean())),
+        ("prefill_chunk", b.prefill_chunk().to_string()),
+        ("chunk_feeds_total", b.chunk_feeds().to_string()),
+        ("page_hits_total", pp.map(|p| p.hits()).unwrap_or(0).to_string()),
+        ("page_misses_total", pp.map(|p| p.misses()).unwrap_or(0).to_string()),
+        ("page_evictions_total", pp.map(|p| p.evictions()).unwrap_or(0).to_string()),
+        ("kv_pages_used", pp.map(|p| p.pages_used()).unwrap_or(0).to_string()),
+        ("kv_pages_cap", pp.map(|p| p.capacity).unwrap_or(0).to_string()),
     ]
 }
 

@@ -14,12 +14,28 @@
 
 use crate::util::Rng;
 
-/// Run `prop` for `iters` seeded cases; panic with the failing seed.
+/// Multiplier for randomized-suite case counts, read from the
+/// `LLAMAF_TEST_REPEATS` environment variable (default 1, the fixed-seed
+/// CI configuration).  Setting it to N sweeps N× the seeds — the opt-in
+/// soak knob for multi-seed runs (`LLAMAF_TEST_REPEATS=8 cargo test`).
+/// Unparseable or zero values fall back to 1 rather than silently
+/// skipping cases.
+pub fn repeats() -> u64 {
+    std::env::var("LLAMAF_TEST_REPEATS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// Run `prop` for `iters * repeats()` seeded cases; panic with the
+/// failing seed.  Seeds are deterministic and independent of the repeat
+/// multiplier: case `i` always replays identically.
 pub fn forall<F>(name: &str, iters: u64, prop: F)
 where
     F: Fn(&mut Rng) -> bool,
 {
-    for seed in 0..iters {
+    for seed in 0..iters.saturating_mul(repeats()) {
         let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
         if !prop(&mut rng) {
             panic!(

@@ -88,6 +88,32 @@ impl fmt::Display for TraceOp {
     }
 }
 
+/// Consumer of per-op digest events emitted by the forward pass.
+///
+/// [`ExecTrace`] is the canonical sink (it stores the events); the batch
+/// scheduler's lane router implements it too, forwarding each lane's
+/// events into that lane's *per-request* trace with the lane renumbered
+/// to 0 — which is what lets a request decoded inside an arbitrary batch
+/// be diffed against a batch-1 recording of the same prompt.
+pub trait TraceSink {
+    /// Open a new forward step; subsequent [`TraceSink::record`] calls
+    /// belong to it.
+    fn begin_step(&mut self);
+    /// Digest `vals` produced at (`layer`, `op`, `lane`) in the current
+    /// step.
+    fn record(&mut self, layer: usize, op: TraceOp, lane: usize, vals: &[f32]);
+}
+
+impl TraceSink for ExecTrace {
+    fn begin_step(&mut self) {
+        ExecTrace::begin_step(self);
+    }
+
+    fn record(&mut self, layer: usize, op: TraceOp, lane: usize, vals: &[f32]) {
+        ExecTrace::record(self, layer, op, lane, vals);
+    }
+}
+
 /// One digested GQMV output: where it happened and what it hashed to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TraceEvent {

@@ -1,0 +1,312 @@
+//! Integration: continuous batching pinned by a randomized-schedule
+//! equivalence harness.
+//!
+//! The scheduler invariant under test is stronger than "same tokens":
+//! for ANY admission schedule — requests arriving at random times, with
+//! ragged prompt lengths and step budgets, joining mid-decode and
+//! retiring independently — every session's output AND its per-op
+//! digest trace ([`ExecTrace`]) must be bit-identical to sequential
+//! batch-1 greedy generation of the same prompt.  On divergence the
+//! trace diff names the first differing (step, layer, op) instead of
+//! just "tokens differ".
+//!
+//! Also here: chunked-prefill equivalence (chunk sizes 1, 3 and
+//! whole-prompt leave identical KV contents and outputs, covering the
+//! prompt-boundary off-by-one) and a serve-level soak with join/leave
+//! churn — including a client that drops mid-generation — pinning that
+//! sessions and KV pages drain to exactly zero.
+//!
+//! Randomized cases run a fixed seed set by default (CI-reproducible);
+//! `LLAMAF_TEST_REPEATS=N` sweeps N× the seeds (`testutil::repeats`).
+//! Runs on the synthetic tiny model — no artifacts required.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use llamaf::engine::batch::{Admission, BatchOpts, BatchScheduler};
+use llamaf::engine::forward::{CpuEngine, Engine};
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::engine::session::Session;
+use llamaf::model::{FloatModel, KvStore, LlamaConfig, QuantModel};
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::ScalarGqmv;
+use llamaf::server::{ServeOpts, Server};
+use llamaf::testutil::forall;
+use llamaf::trace;
+
+fn tiny_cfg() -> LlamaConfig {
+    LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 64,
+        seq_len: 64,
+        gs: 32,
+    }
+}
+
+fn tiny_model(seed: u64) -> Arc<QuantModel> {
+    Arc::new(QuantModel::from_float(&FloatModel::random(tiny_cfg(), seed)))
+}
+
+fn scalar_exec() -> Box<dyn GqmvExec + Send> {
+    Box::new(ScalarGqmv)
+}
+
+/// Batch-1 oracle: a dedicated engine generating greedily with the per-op
+/// digest recorder armed.  Returns (tokens, trace).
+fn batch1_oracle(
+    model: &Arc<QuantModel>,
+    prompt: &[u32],
+    steps: usize,
+) -> (Vec<u32>, trace::ExecTrace) {
+    let mut eng = CpuEngine::new(Arc::clone(model), Box::new(ScalarGqmv));
+    assert!(eng.trace_start("oracle"));
+    let out = generate(&mut eng, prompt, steps, Sampler::Greedy, false).unwrap();
+    (out.generated, eng.trace_take().unwrap())
+}
+
+#[test]
+fn randomized_admission_schedules_match_batch1_oracle() {
+    // The tentpole harness: seeded random arrival times, ragged prompts,
+    // random step budgets through a traced continuous-admission
+    // scheduler.  Every session must match its batch-1 oracle token for
+    // token AND op for op; a scheduling bug that perturbs even one
+    // intermediate digest fails with the first divergent op named.
+    let model = tiny_model(31);
+    forall("random admission schedules", 4, |rng| {
+        let max_batch = *rng.choose(&[2usize, 3, 4, 8]);
+        let n_clients = rng.below(5) as usize + 3;
+        let sched = BatchScheduler::new(
+            Arc::clone(&model),
+            Box::new(ScalarGqmv),
+            BatchOpts { max_batch, trace: true, ..Default::default() },
+        );
+        let handles: Vec<std::thread::JoinHandle<bool>> = (0..n_clients)
+            .map(|ci| {
+                let plen = rng.below(6) as usize + 1;
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(64) as u32).collect();
+                let steps = rng.below(10) as usize + 1;
+                let delay_ms = rng.below(30);
+                let model = Arc::clone(&model);
+                let sched = Arc::clone(&sched);
+                std::thread::spawn(move || -> bool {
+                    std::thread::sleep(Duration::from_millis(delay_ms));
+                    let (want, ref_trace) = batch1_oracle(&model, &prompt, steps);
+                    let mut streamed = Vec::new();
+                    let (sess, out) =
+                        sched.generate(Session::new(&model.cfg), &prompt, steps, |step, id| {
+                            assert_eq!(step, streamed.len(), "out-of-order token");
+                            streamed.push(id);
+                            Ok(())
+                        });
+                    assert!(sess.is_some(), "client {ci}: session not returned");
+                    let gen = out.expect("batched generation failed");
+                    if gen.generated != want || streamed != want {
+                        eprintln!(
+                            "client {ci}: tokens diverged (prompt {prompt:?}, {steps} steps): \
+                             got {:?} want {want:?}",
+                            gen.generated
+                        );
+                        return false;
+                    }
+                    let exec = gen.exec_trace.expect("trace: true returns an op trace");
+                    let report = trace::diff(&ref_trace, &exec);
+                    if !report.identical() {
+                        eprintln!(
+                            "client {ci}: op trace diverged from batch-1: {}",
+                            report.summary()
+                        );
+                        return false;
+                    }
+                    true
+                })
+            })
+            .collect();
+        let ok = handles.into_iter().all(|h| h.join().unwrap());
+        sched.shutdown();
+        ok
+    });
+}
+
+#[test]
+fn chunked_prefill_leaves_identical_kv_and_outputs() {
+    // Prefill chunk sizes 1, 3 and whole-prompt must be indistinguishable
+    // after the fact: same tokens, same final position, and bit-identical
+    // KV floats at every (layer, pos, head).  Prompt lengths 2..=5 and 7
+    // sweep the chunk-boundary off-by-ones (len % chunk ∈ {0, 1, 2},
+    // including the final-token-samples case landing on each offset).
+    let model = tiny_model(32);
+    let cfg = model.cfg;
+    let hd = cfg.head_dim();
+    let steps = 5usize;
+    for plen in [2usize, 3, 4, 5, 7] {
+        let prompt: Vec<u32> = (0..plen).map(|i| ((3 * i + 1) % 64) as u32).collect();
+        let mut eng = CpuEngine::new(Arc::clone(&model), Box::new(ScalarGqmv));
+        let want = generate(&mut eng, &prompt, steps, Sampler::Greedy, false).unwrap().generated;
+        let mut baseline: Option<Session> = None;
+        for chunk in [1usize, 3, plen] {
+            let sched = BatchScheduler::new(
+                Arc::clone(&model),
+                Box::new(ScalarGqmv),
+                BatchOpts { prefill_chunk: chunk, ..Default::default() },
+            );
+            let (sess, out) = sched.generate(Session::new(&cfg), &prompt, steps, |_, _| Ok(()));
+            sched.shutdown();
+            let sess = sess.expect("session returned");
+            assert_eq!(
+                out.unwrap().generated,
+                want,
+                "plen {plen} chunk {chunk}: tokens diverged"
+            );
+            assert_eq!(sess.pos, plen - 1 + steps, "plen {plen} chunk {chunk}: bad position");
+            assert_eq!(sess.kv.filled(), plen - 1 + steps);
+            match &baseline {
+                None => baseline = Some(sess),
+                Some(b) => {
+                    for layer in 0..cfg.n_layers {
+                        for pos in 0..b.kv.filled() {
+                            for h in 0..cfg.n_kv_heads {
+                                assert_eq!(
+                                    sess.kv.key(layer, pos, h, hd),
+                                    b.kv.key(layer, pos, h, hd),
+                                    "plen {plen} chunk {chunk}: K diverged at \
+                                     layer {layer} pos {pos} head {h}"
+                                );
+                                assert_eq!(
+                                    sess.kv.value(layer, pos, h, hd),
+                                    b.kv.value(layer, pos, h, hd),
+                                    "plen {plen} chunk {chunk}: V diverged at \
+                                     layer {layer} pos {pos} head {h}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn drain_admission_matches_oracle_under_concurrency() {
+    // The static-batch baseline must be just as exact as continuous
+    // admission — it only changes WHEN lanes join, never what they
+    // compute.  Three concurrent ragged clients through Drain mode.
+    let model = tiny_model(33);
+    let sched = BatchScheduler::new(
+        Arc::clone(&model),
+        Box::new(ScalarGqmv),
+        BatchOpts { max_batch: 3, admission: Admission::Drain, ..Default::default() },
+    );
+    let handles: Vec<_> = (0..3usize)
+        .map(|i| {
+            let model = Arc::clone(&model);
+            let sched = Arc::clone(&sched);
+            std::thread::spawn(move || {
+                let prompt: Vec<u32> = (0..2 + i).map(|k| ((5 * i + k + 1) % 64) as u32).collect();
+                let steps = 4 + i;
+                let mut eng = CpuEngine::new(Arc::clone(&model), Box::new(ScalarGqmv));
+                let want =
+                    generate(&mut eng, &prompt, steps, Sampler::Greedy, false).unwrap().generated;
+                let (sess, out) =
+                    sched.generate(Session::new(&model.cfg), &prompt, steps, |_, _| Ok(()));
+                assert!(sess.is_some());
+                assert_eq!(out.unwrap().generated, want, "drain lane {i} diverged");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    sched.shutdown();
+}
+
+#[test]
+fn serve_soak_with_churn_drains_sessions_and_kv_pages_to_zero() {
+    // Serve-level soak: clients join and leave at staggered times, some
+    // vanish mid-generation without QUIT (dead-socket cancel path), all
+    // over a paged KV pool.  After the server drains, no session may
+    // still be checked out and the page ledger must read exactly zero —
+    // a leaked page or double-free shows up as a nonzero count.
+    let cfg = LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 512,
+        seq_len: 64,
+        gs: 32,
+    };
+    let model = Arc::new(QuantModel::from_float(&FloatModel::random(cfg, 34)));
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 3,
+        queue_depth: 16,
+        max_sessions: 4,
+        kv_pages: 32,
+        ..Default::default()
+    };
+    let n_clients = 9usize;
+    let server_thread = std::thread::spawn(move || {
+        server.serve_shared(model, &scalar_exec, &opts, Some(n_clients)).unwrap()
+    });
+
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis((i as u64 % 4) * 15));
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                if i % 3 == 2 {
+                    // churn client: start a long generation, read two
+                    // tokens, then vanish — the server must cancel the
+                    // lane and reclaim the session and its pages
+                    conn.write_all(format!("SGEN 32 soak prompt {i}\n").as_bytes()).unwrap();
+                    for _ in 0..2 {
+                        let mut line = String::new();
+                        reader.read_line(&mut line).unwrap();
+                        assert!(line.starts_with("TOK "), "unexpected line: {line:?}");
+                    }
+                    drop(reader);
+                    drop(conn); // no QUIT: dead socket mid-stream
+                } else {
+                    conn.write_all(format!("SGEN 4 soak prompt {i}\n").as_bytes()).unwrap();
+                    let mut toks = 0usize;
+                    loop {
+                        let mut line = String::new();
+                        reader.read_line(&mut line).unwrap();
+                        let line = line.trim_end();
+                        if line.starts_with("TOK ") {
+                            toks += 1;
+                        } else if line.starts_with("DONE ") {
+                            break;
+                        } else {
+                            panic!("unexpected server line: {line:?}");
+                        }
+                    }
+                    assert_eq!(toks, 4, "client {i} lost tokens");
+                    conn.write_all(b"QUIT\n").unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let report = server_thread.join().unwrap();
+    assert_eq!(report.accepted, n_clients);
+    assert!(report.tokens > 0, "soak produced no tokens");
+    assert_eq!(report.busy_at_exit, 0, "a session leaked out of the pool");
+    assert!(report.idle_at_exit <= 4, "more idle sessions than the pool cap");
+    assert_eq!(
+        report.kv_pages_at_exit, 0,
+        "KV page ledger did not drain to zero after churn"
+    );
+}

@@ -287,6 +287,7 @@ mod streamed {
     use super::*;
     use llamaf::engine::forward::{forward_batch, BatchLane, BatchScratch};
     use llamaf::engine::llamaf::LlamafEngine;
+    use llamaf::model::KvStore;
     use llamaf::runtime::Runtime;
     use llamaf::sched::{MemFetcher, SchedMode, StageGranularity, Streamer};
 
@@ -320,13 +321,15 @@ mod streamed {
                 let mut kv = KvCache::new(&cfg);
                 let mut prof = ForwardProfile::default();
                 for (pos, &t) in tokens.iter().enumerate() {
-                    let mut lanes = [BatchLane { kv: &mut kv, pos, token: t }];
+                    let lanes = [BatchLane { kv: 0, pos, token: t }];
+                    let mut kvs: [&mut dyn KvStore; 1] = [&mut kv];
                     forward_batch(
                         &qm,
                         &mut provider,
                         &mut exec,
                         &mut scratch,
-                        &mut lanes,
+                        &lanes,
+                        &mut kvs,
                         &mut prof,
                     )
                     .unwrap();

@@ -6,7 +6,7 @@
 use std::sync::Arc;
 
 use llamaf::fpga::{AxiModel, DataflowSim, PlConfig};
-use llamaf::model::{FloatModel, LlamaConfig, QuantModel};
+use llamaf::model::{FloatModel, KvStore, LlamaConfig, PagePool, PagedKv, QuantModel};
 use llamaf::ps::gqmv::GqmvExec;
 use llamaf::ps::{ScalarGqmv, ThreadedGqmv};
 use llamaf::quant::{quantize_activation, QuantizedTensor};
@@ -169,5 +169,163 @@ fn prop_engine_backends_same_tokens() {
         let a = generate(&mut e1, &prompt, 10, Sampler::Greedy, false).unwrap();
         let b = generate(&mut e2, &prompt, 10, Sampler::Greedy, false).unwrap();
         a.ids == b.ids
+    });
+}
+
+/// Tiny geometry for page-pool churn: 2 layers × kv_dim 16 keeps each
+/// `store` cheap so thousands of churn ops stay fast.
+const PAGED: LlamaConfig = LlamaConfig {
+    dim: 32,
+    hidden_dim: 64,
+    n_layers: 2,
+    n_heads: 2,
+    n_kv_heads: 1,
+    vocab_size: 64,
+    seq_len: 64,
+    gs: 32,
+};
+
+/// Write one position (all layers) of deterministic, tag-distinguishable
+/// KV rows into `kv`.
+fn store_pos(kv: &mut PagedKv, pos: usize, tag: f32) {
+    let kd = PAGED.kv_dim();
+    for layer in 0..PAGED.n_layers {
+        let k: Vec<f32> = (0..kd).map(|i| tag + (layer * 1000 + pos * 10 + i) as f32).collect();
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        kv.store(layer, pos, &k, &v);
+    }
+}
+
+#[test]
+fn prop_page_pool_ledger_exact_under_churn() {
+    use std::collections::HashSet;
+    // Random alloc / free / fork(COW) / evict churn: at every step the
+    // pool's `pages_used()` ledger must equal the number of DISTINCT
+    // pages reachable from live sessions plus the prefix cache (i.e.
+    // nothing double-freed, nothing leaked), and after dropping every
+    // session and clearing the cache the ledger drains to exactly zero.
+    forall("page pool ledger exact", 24, |rng| {
+        let ps = *rng.choose(&[2usize, 4]);
+        let cap = rng.below(14) as usize + 2;
+        let pool = Arc::new(PagePool::new(&PAGED, cap, ps));
+        let mut sessions: Vec<(PagedKv, Vec<u32>)> = Vec::new();
+
+        for op in 0..48u64 {
+            match rng.below(7) {
+                0 | 1 => {
+                    // admit: fresh session, random prompt, try adoption
+                    if sessions.len() < 6 {
+                        let plen = rng.below(12) as usize + 2;
+                        let prompt: Vec<u32> = (0..plen).map(|_| rng.below(6) as u32).collect();
+                        let mut kv = PagedKv::new(Arc::clone(&pool));
+                        let adopted = kv.adopt_prefix(&prompt);
+                        if adopted >= prompt.len() {
+                            return false; // must leave >=1 token to feed
+                        }
+                        sessions.push((kv, prompt));
+                    }
+                }
+                2 => {
+                    // grow: feed the next position of a random session
+                    if !sessions.is_empty() {
+                        let i = rng.below(sessions.len() as u64) as usize;
+                        let (kv, _) = &mut sessions[i];
+                        let pos = kv.filled();
+                        if pos < PAGED.seq_len {
+                            store_pos(kv, pos, op as f32);
+                        }
+                    }
+                }
+                3 => {
+                    // overwrite a filled position: COW when shared
+                    if !sessions.is_empty() {
+                        let i = rng.below(sessions.len() as u64) as usize;
+                        let (kv, _) = &mut sessions[i];
+                        if kv.filled() > 0 {
+                            let pos = rng.below(kv.filled() as u64) as usize;
+                            store_pos(kv, pos, 7000.0 + op as f32);
+                        }
+                    }
+                }
+                4 => {
+                    // publish a random session's prompt prefix
+                    if !sessions.is_empty() {
+                        let i = rng.below(sessions.len() as u64) as usize;
+                        let (kv, prompt) = &sessions[i];
+                        kv.cache_prefix(prompt);
+                    }
+                }
+                5 => {
+                    // retire: reset or drop a random session
+                    if !sessions.is_empty() {
+                        let i = rng.below(sessions.len() as u64) as usize;
+                        if rng.below(2) == 0 {
+                            sessions[i].0.reset();
+                        } else {
+                            sessions.swap_remove(i);
+                        }
+                    }
+                }
+                _ => {
+                    // occasional explicit cache flush (mass eviction)
+                    if rng.below(4) == 0 {
+                        pool.clear_cache();
+                    }
+                }
+            }
+            // Ledger invariant after every single operation.
+            let mut live: HashSet<u64> = HashSet::new();
+            for (kv, _) in &sessions {
+                live.extend(kv.page_ids());
+            }
+            live.extend(pool.cached_page_ids());
+            if pool.pages_used() != live.len() {
+                return false;
+            }
+        }
+
+        // Refcounts must drain to zero: no page outlives its holders.
+        sessions.clear();
+        pool.clear_cache();
+        pool.pages_used() == 0 && pool.cached_page_ids().is_empty()
+    });
+}
+
+#[test]
+fn prop_cow_write_never_corrupts_other_holders() {
+    // Fork a cached prefix into a second session, scribble over a shared
+    // position, and require the donor's view to be bit-identical to its
+    // pre-write snapshot (copy-on-write isolation) at every geometry.
+    forall("cow isolates writers", 24, |rng| {
+        let ps = *rng.choose(&[2usize, 4, 8]);
+        let pool = Arc::new(PagePool::new(&PAGED, 32, ps));
+        let n = rng.below(20) as usize + ps + 2; // >= one cacheable page
+        let mut donor = PagedKv::new(Arc::clone(&pool));
+        for pos in 0..n {
+            store_pos(&mut donor, pos, 1.0);
+        }
+        let prompt: Vec<u32> = (0..n as u32).collect();
+        donor.cache_prefix(&prompt);
+
+        let mut writer = PagedKv::new(Arc::clone(&pool));
+        let adopted = writer.adopt_prefix(&prompt);
+        if adopted == 0 {
+            return true; // prefix rounded below one page: nothing shared
+        }
+        let kd = PAGED.kv_dim();
+        let snapshot: Vec<Vec<f32>> = (0..PAGED.n_layers)
+            .flat_map(|l| (0..n).map(move |p| (l, p)))
+            .map(|(l, p)| donor.key(l, p, 0, kd).to_vec())
+            .collect();
+
+        let pos = rng.below(adopted as u64) as usize;
+        store_pos(&mut writer, pos, -999.0);
+
+        let unchanged = (0..PAGED.n_layers)
+            .flat_map(|l| (0..n).map(move |p| (l, p)))
+            .zip(&snapshot)
+            .all(|((l, p), snap)| donor.key(l, p, 0, kd) == &snap[..]);
+        let wrote = writer.key(0, pos, 0, kd)[0] != donor.key(0, pos, 0, kd)[0];
+        unchanged && wrote
     });
 }

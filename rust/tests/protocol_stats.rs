@@ -59,6 +59,14 @@ const NUMERIC_FIELDS: &[&str] = &[
     "ring_occ",
     "stage_mb_s",
     "matrix_pct",
+    "admission_ms",
+    "prefill_chunk",
+    "chunk_feeds",
+    "page_hits",
+    "page_misses",
+    "page_evictions",
+    "kv_pages_used",
+    "kv_pages_cap",
 ];
 
 #[test]
@@ -182,6 +190,8 @@ const TRACE_FIELDS: &[&str] = &[
     "prefetch_wait_ms",
     "batch_mean",
     "tok_s",
+    "chunk_feeds",
+    "prefix_tokens",
 ];
 
 /// Every `llamaf_<name>` line the `METRICS` export promises, in the
@@ -225,6 +235,14 @@ const METRIC_NAMES: &[&str] = &[
     "matrix_time_pct",
     "weights_resident",
     "granularity_matrix",
+    "admission_ms_mean",
+    "prefill_chunk",
+    "chunk_feeds_total",
+    "page_hits_total",
+    "page_misses_total",
+    "page_evictions_total",
+    "kv_pages_used",
+    "kv_pages_cap",
 ];
 
 #[test]

@@ -208,6 +208,29 @@ fn main() {
         "\n(reduction ≈ mean occupancy: each step stages every layer once, shared by B lanes)"
     );
 
+    section("quant-format sweep at B=4 (--quant-format analogue: bytes per token)");
+    {
+        use llamaf::quant::FormatId;
+        let mut bpt_by_fmt = Vec::new();
+        for fmt in FormatId::ALL {
+            let m = Arc::new(QuantModel::synthetic_fmt(NANO, 42, fmt));
+            let (tps, bpt, _occ, _ring, mbs) = run_batch(&m, 4, steps, 2, StageGranularity::Layer);
+            println!(
+                "format={:<5}  aggregate {tps:>9.1} tok/s  staged {bpt:>12.0} B/tok  \
+                 staging {mbs:>8.1} MB/s",
+                fmt.name()
+            );
+            report.case(&format!("fmt_{}_aggregate", fmt.name()), tps, "tok/s");
+            report.case(&format!("fmt_{}_bytes_per_token", fmt.name()), bpt, "B/tok");
+            bpt_by_fmt.push(bpt);
+        }
+        println!(
+            "\n(a Q4_0 wire group is GS/2+4 bytes against Q8's GS+4: at GS=256 the staged \
+             bytes per token drop to {:.2}x of INT8)",
+            bpt_by_fmt[1] / bpt_by_fmt[0].max(1e-9)
+        );
+    }
+
     section("ragged arrivals: continuous vs drain admission (B=4, staggered joins)");
     println!("8 lanes, 5 ms arrival stagger, uneven step budgets\n");
     let mut occ_by_policy = [0.0f64; 2];

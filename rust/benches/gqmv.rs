@@ -23,6 +23,7 @@ fn bench_backend(exec: &mut dyn GqmvExec, m: usize, n: usize, gs: usize, b: &Ben
         rows: m,
         cols: n,
         gs,
+        fmt: llamaf::quant::FormatId::Q8,
     };
     let (xq, xs) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
     let mut out = vec![0.0f32; m];
@@ -305,6 +306,7 @@ fn main() {
                 rows: m,
                 cols: n,
                 gs,
+                fmt: llamaf::quant::FormatId::Q8,
             };
             let (xq, xs) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
             let mut out = vec![0.0f32; m];

@@ -1,0 +1,742 @@
+//! GGUF import: read llama.cpp-ecosystem checkpoints into native LFQ*
+//! files.
+//!
+//! GGUF (v2/v3) is a little-endian container: magic `GGUF`, version,
+//! tensor count, a string-keyed metadata table, tensor descriptors
+//! (name, dims, ggml type, data offset), then an aligned data section.
+//! We parse the metadata generically (every value type is length-
+//! delimited, so unknown keys skip cleanly), dequantize the ggml block
+//! formats we understand (F32, F16, Q8_0, Q4_0, Q5_0) to f32, assemble
+//! a [`FloatModel`] from the standard llama tensor names, and re-
+//! quantize through the native write path.
+//!
+//! Re-quantizing instead of transcoding blocks is deliberate: ggml
+//! blocks are a fixed 32 elements while our group size must equal the
+//! model's activation group size (the GQMV cast chain pairs weight and
+//! activation scales group-for-group), so block boundaries do not line
+//! up.  The cost is one extra rounding step; the payoff is that an
+//! imported checkpoint is byte-compatible with every native consumer —
+//! streaming layouts, staging ring, kernels — with no special cases.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{FloatLayer, FloatModel, LlamaConfig};
+use crate::quant::FormatId;
+
+// ggml tensor type ids (ggml.h)
+pub const GGML_F32: u32 = 0;
+pub const GGML_F16: u32 = 1;
+pub const GGML_Q4_0: u32 = 2;
+pub const GGML_Q5_0: u32 = 6;
+pub const GGML_Q8_0: u32 = 8;
+
+/// Elements per ggml quantized block (fixed by the format family).
+pub const GGML_BLOCK: usize = 32;
+
+const DEFAULT_ALIGNMENT: u64 = 32;
+
+// ---------------------------------------------------------------------------
+// half-precision conversion (the crate has no half dependency)
+// ---------------------------------------------------------------------------
+
+/// IEEE 754 binary16 -> f32 (handles subnormals, inf, NaN).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = (h as u32 >> 15) & 1;
+    let exp = (h as u32 >> 10) & 0x1F;
+    let frac = h as u32 & 0x3FF;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31
+        } else {
+            // subnormal: renormalize into f32's larger exponent range
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | (e << 23) | ((f & 0x3FF) << 13)
+        }
+    } else if exp == 0x1F {
+        (sign << 31) | (0xFF << 23) | (frac << 13)
+    } else {
+        (sign << 31) | ((exp + 112) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> IEEE 754 binary16, round-to-nearest-even.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        return sign | 0x7C00 | u16::from(frac != 0) << 9; // inf / NaN
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> signed zero
+        }
+        let frac = frac | 0x80_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let sub = (frac >> shift) as u16;
+        let rem = frac & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let round_up = rem > half || (rem == half && sub & 1 == 1);
+        return sign | (sub + u16::from(round_up));
+    }
+    let out = sign | ((e as u16) << 10) | ((frac >> 13) as u16);
+    let rem = frac & 0x1FFF;
+    // mantissa carry into the exponent is the correct IEEE rounding
+    let round_up = rem > 0x1000 || (rem == 0x1000 && out & 1 == 1);
+    out.wrapping_add(u16::from(round_up))
+}
+
+// ---------------------------------------------------------------------------
+// parsing
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated GGUF: need {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u64()? as usize;
+        Ok(String::from_utf8_lossy(self.take(len)?).into_owned())
+    }
+}
+
+/// One metadata value we retain (others are skipped, not lost to
+/// parsing — every GGUF value is self-delimiting).
+#[derive(Clone, Debug, PartialEq)]
+pub enum GgufValue {
+    /// Any integer type (u8..u64, i8..i64, bool), widened.
+    Int(u64),
+    /// f32 or f64, narrowed to f32.
+    Float(f32),
+    /// A UTF-8 string.
+    Str(String),
+}
+
+fn read_value(c: &mut Cursor, ty: u32) -> Result<Option<GgufValue>> {
+    Ok(match ty {
+        0 | 1 | 7 => Some(GgufValue::Int(c.take(1)?[0] as u64)), // u8/i8/bool
+        2 | 3 => {
+            Some(GgufValue::Int(u16::from_le_bytes(c.take(2)?.try_into().unwrap()) as u64))
+        }
+        4 | 5 => Some(GgufValue::Int(c.u32()? as u64)),
+        10 | 11 => Some(GgufValue::Int(c.u64()?)),
+        6 => Some(GgufValue::Float(f32::from_le_bytes(c.take(4)?.try_into().unwrap()))),
+        12 => {
+            Some(GgufValue::Float(
+                f64::from_le_bytes(c.take(8)?.try_into().unwrap()) as f32
+            ))
+        }
+        8 => Some(GgufValue::Str(c.string()?)),
+        9 => {
+            // array: recurse per element to skip (tokenizer vocab etc.)
+            let elem_ty = c.u32()?;
+            let count = c.u64()?;
+            for _ in 0..count {
+                read_value(c, elem_ty)?;
+            }
+            None
+        }
+        other => bail!("unknown GGUF value type {other}"),
+    })
+}
+
+/// One tensor descriptor. `dims` is in ggml order: `dims[0]` is the
+/// contiguous (column) extent, so a matrix stored row-major with our
+/// `(rows, cols)` convention has `dims == [cols, rows]`.
+#[derive(Clone, Debug)]
+pub struct GgufTensorInfo {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub ggml_type: u32,
+    /// Offset into the (aligned) data section.
+    pub offset: u64,
+}
+
+impl GgufTensorInfo {
+    pub fn n_elems(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// Encoded byte size of this tensor's data.
+    pub fn data_bytes(&self) -> Result<usize> {
+        let n = self.n_elems();
+        Ok(match self.ggml_type {
+            GGML_F32 => n * 4,
+            GGML_F16 => n * 2,
+            GGML_Q8_0 => n / GGML_BLOCK * 34,
+            GGML_Q4_0 => n / GGML_BLOCK * 18,
+            GGML_Q5_0 => n / GGML_BLOCK * 22,
+            other => bail!("unsupported ggml tensor type {other} for {:?}", self.name),
+        })
+    }
+}
+
+/// A parsed GGUF file: retained metadata, tensor directory, and the raw
+/// bytes of the data section.
+pub struct Gguf {
+    pub version: u32,
+    pub alignment: u64,
+    pub kv: HashMap<String, GgufValue>,
+    pub tensors: Vec<GgufTensorInfo>,
+    data: Vec<u8>,
+}
+
+impl Gguf {
+    pub fn tensor(&self, name: &str) -> Option<&GgufTensorInfo> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    fn kv_usize(&self, key: &str) -> Result<usize> {
+        match self.kv.get(key) {
+            Some(GgufValue::Int(v)) => Ok(*v as usize),
+            Some(other) => bail!("GGUF key {key} has non-integer value {other:?}"),
+            None => bail!("GGUF metadata missing required key {key}"),
+        }
+    }
+
+    /// Dequantize one tensor to f32, in storage (row-major) order.
+    pub fn dequantize(&self, t: &GgufTensorInfo) -> Result<Vec<f32>> {
+        let bytes = t.data_bytes()?;
+        let off = t.offset as usize;
+        if off + bytes > self.data.len() {
+            bail!("tensor {:?} data out of range", t.name);
+        }
+        let raw = &self.data[off..off + bytes];
+        let n = t.n_elems();
+        let mut out = Vec::with_capacity(n);
+        match t.ggml_type {
+            GGML_F32 => {
+                out.extend(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+            }
+            GGML_F16 => {
+                out.extend(
+                    raw.chunks_exact(2)
+                        .map(|c| f16_to_f32(u16::from_le_bytes(c.try_into().unwrap()))),
+                );
+            }
+            GGML_Q8_0 => {
+                for b in raw.chunks_exact(34) {
+                    let d = f16_to_f32(u16::from_le_bytes(b[0..2].try_into().unwrap()));
+                    out.extend(b[2..34].iter().map(|&q| (q as i8) as f32 * d));
+                }
+            }
+            GGML_Q4_0 => {
+                for b in raw.chunks_exact(18) {
+                    let d = f16_to_f32(u16::from_le_bytes(b[0..2].try_into().unwrap()));
+                    let qs = &b[2..18];
+                    // block elements j and j+16 share byte j (low/high nibble)
+                    out.extend(qs.iter().map(|&v| ((v & 0x0F) as i32 - 8) as f32 * d));
+                    out.extend(qs.iter().map(|&v| ((v >> 4) as i32 - 8) as f32 * d));
+                }
+            }
+            GGML_Q5_0 => {
+                for b in raw.chunks_exact(22) {
+                    let d = f16_to_f32(u16::from_le_bytes(b[0..2].try_into().unwrap()));
+                    let qh = u32::from_le_bytes(b[2..6].try_into().unwrap());
+                    let qs = &b[6..22];
+                    for (j, &q) in qs.iter().enumerate() {
+                        let v = (q & 0x0F) as u32 | ((qh >> j) & 1) << 4;
+                        out.push((v as i32 - 16) as f32 * d);
+                    }
+                    for (j, &q) in qs.iter().enumerate() {
+                        let v = (q >> 4) as u32 | ((qh >> (j + 16)) & 1) << 4;
+                        out.push((v as i32 - 16) as f32 * d);
+                    }
+                }
+            }
+            other => bail!("unsupported ggml tensor type {other}"),
+        }
+        Ok(out)
+    }
+}
+
+/// Parse a GGUF v2/v3 file (the whole file is read into memory; model
+/// files at this repo's scale are small, and the importer is a one-shot
+/// offline tool).
+pub fn read_gguf(path: &Path) -> Result<Gguf> {
+    let buf = std::fs::read(path).with_context(|| format!("open {path:?}"))?;
+    let mut c = Cursor { buf: &buf, pos: 0 };
+    if c.take(4)? != b"GGUF" {
+        bail!("not a GGUF file (bad magic)");
+    }
+    let version = c.u32()?;
+    if !(2..=3).contains(&version) {
+        bail!("unsupported GGUF version {version} (v2/v3 only)");
+    }
+    let tensor_count = c.u64()? as usize;
+    let kv_count = c.u64()? as usize;
+    let mut kv = HashMap::new();
+    for _ in 0..kv_count {
+        let key = c.string()?;
+        let ty = c.u32()?;
+        if let Some(v) = read_value(&mut c, ty).with_context(|| format!("key {key:?}"))? {
+            kv.insert(key, v);
+        }
+    }
+    let mut tensors = Vec::with_capacity(tensor_count);
+    for _ in 0..tensor_count {
+        let name = c.string()?;
+        let n_dims = c.u32()? as usize;
+        if n_dims == 0 || n_dims > 4 {
+            bail!("tensor {name:?} has {n_dims} dims");
+        }
+        let dims: Vec<usize> =
+            (0..n_dims).map(|_| c.u64().map(|v| v as usize)).collect::<Result<_>>()?;
+        let ggml_type = c.u32()?;
+        let offset = c.u64()?;
+        tensors.push(GgufTensorInfo { name, dims, ggml_type, offset });
+    }
+    let alignment = match kv.get("general.alignment") {
+        Some(GgufValue::Int(a)) if *a > 0 => *a,
+        _ => DEFAULT_ALIGNMENT,
+    };
+    let data_start = (c.pos as u64).div_ceil(alignment) * alignment;
+    if data_start as usize > buf.len() {
+        bail!("GGUF data section starts past EOF");
+    }
+    let data = buf[data_start as usize..].to_vec();
+    Ok(Gguf { version, alignment, kv, tensors, data })
+}
+
+// ---------------------------------------------------------------------------
+// model assembly
+// ---------------------------------------------------------------------------
+
+fn fetch(g: &Gguf, name: &str, rows: usize, cols: usize) -> Result<Vec<f32>> {
+    let t = g.tensor(name).with_context(|| format!("GGUF tensor {name:?} missing"))?;
+    if t.n_elems() != rows * cols {
+        bail!(
+            "GGUF tensor {name:?} has {} elements, model geometry wants {rows}x{cols}",
+            t.n_elems()
+        );
+    }
+    if cols > 1 && t.dims.first() != Some(&cols) {
+        bail!("GGUF tensor {name:?} dims {:?} not laid out as {rows} rows x {cols} cols", t.dims);
+    }
+    g.dequantize(t)
+}
+
+/// Pick the largest supported group size compatible with the geometry
+/// (every quantized tensor extent must divide by it; 256 is the paper's
+/// choice and the largest we try).
+pub fn choose_gs(dim: usize, hidden_dim: usize, vocab: usize) -> Option<usize> {
+    [256usize, 128, 64, 32, 16, 8]
+        .into_iter()
+        .find(|g| dim % g == 0 && hidden_dim % g == 0 && vocab % g == 0)
+}
+
+/// Assemble a float model from a parsed GGUF using the standard llama
+/// tensor naming (`token_embd`, `blk.N.*`, `output_norm`, `output`).
+/// `gs` overrides the group size; otherwise [`choose_gs`] picks one.
+pub fn gguf_to_float(g: &Gguf, gs: Option<usize>) -> Result<FloatModel> {
+    let dim = g.kv_usize("llama.embedding_length")?;
+    let hidden_dim = g.kv_usize("llama.feed_forward_length")?;
+    let n_layers = g.kv_usize("llama.block_count")?;
+    let n_heads = g.kv_usize("llama.attention.head_count")?;
+    let n_kv_heads = match g.kv.get("llama.attention.head_count_kv") {
+        Some(GgufValue::Int(v)) => *v as usize,
+        _ => n_heads,
+    };
+    let seq_len = g.kv_usize("llama.context_length")?;
+    let emb = g.tensor("token_embd.weight").context("GGUF missing token_embd.weight")?;
+    if emb.dims.first() != Some(&dim) || emb.dims.len() != 2 {
+        bail!("token_embd.weight dims {:?} inconsistent with dim {dim}", emb.dims);
+    }
+    let vocab_size = emb.dims[1];
+    let gs = match gs {
+        Some(g) => g,
+        None => choose_gs(dim, hidden_dim, vocab_size).with_context(|| {
+            format!("no group size divides dim={dim}/hidden={hidden_dim}/vocab={vocab_size}")
+        })?,
+    };
+    let cfg = LlamaConfig {
+        dim,
+        hidden_dim,
+        n_layers,
+        n_heads,
+        n_kv_heads,
+        vocab_size,
+        seq_len,
+        gs,
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!("GGUF geometry unsupported: {e}"))?;
+    let kv_dim = cfg.kv_dim();
+
+    let tok_emb = fetch(g, "token_embd.weight", vocab_size, dim)?;
+    let mut layers = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        let t = |suffix: &str, rows: usize, cols: usize| {
+            fetch(g, &format!("blk.{i}.{suffix}.weight"), rows, cols)
+        };
+        layers.push(FloatLayer {
+            att_norm: t("attn_norm", dim, 1)?,
+            wq: t("attn_q", dim, dim)?,
+            wk: t("attn_k", kv_dim, dim)?,
+            wv: t("attn_v", kv_dim, dim)?,
+            wo: t("attn_output", dim, dim)?,
+            ffn_norm: t("ffn_norm", dim, 1)?,
+            w1: t("ffn_gate", hidden_dim, dim)?,
+            w2: t("ffn_down", dim, hidden_dim)?,
+            w3: t("ffn_up", hidden_dim, dim)?,
+        });
+    }
+    let final_norm = fetch(g, "output_norm.weight", dim, 1)?;
+    // tied embeddings: many llama GGUFs omit output.weight entirely
+    let cls = if g.tensor("output.weight").is_some() {
+        fetch(g, "output.weight", vocab_size, dim)?
+    } else {
+        tok_emb.clone()
+    };
+    Ok(FloatModel { cfg, tok_emb, layers, final_norm, cls })
+}
+
+/// Import a GGUF checkpoint into a native quantized checkpoint in
+/// format `fmt`: dequantize every tensor to f32, then re-quantize on
+/// the model's own group lattice through [`super::write_ckpt_from_float`].
+/// Returns the imported model's config.
+pub fn import_gguf(
+    gguf_path: &Path,
+    out_path: &Path,
+    fmt: FormatId,
+    gs: Option<usize>,
+) -> Result<LlamaConfig> {
+    let g = read_gguf(gguf_path)?;
+    let fm = gguf_to_float(&g, gs)?;
+    super::write_ckpt_from_float(out_path, &fm, fmt)?;
+    Ok(fm.cfg)
+}
+
+// ---------------------------------------------------------------------------
+// test/export writer — enough GGUF to round-trip our own models
+// ---------------------------------------------------------------------------
+
+fn ggml_quantize_block(chunk: &[f32], ggml_type: u32, out: &mut Vec<u8>) {
+    let qmax = match ggml_type {
+        GGML_Q8_0 => 127i32,
+        GGML_Q4_0 => 7,
+        GGML_Q5_0 => 15,
+        _ => unreachable!(),
+    };
+    let amax = chunk.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let d = if amax == 0.0 { 0.0 } else { amax / qmax as f32 };
+    let inv = if d == 0.0 { 0.0 } else { 1.0 / d };
+    let q: Vec<i32> =
+        chunk.iter().map(|&v| (v * inv).round().clamp(-qmax as f32, qmax as f32) as i32).collect();
+    out.extend_from_slice(&f32_to_f16(d).to_le_bytes());
+    match ggml_type {
+        GGML_Q8_0 => out.extend(q.iter().map(|&v| v as i8 as u8)),
+        GGML_Q4_0 => {
+            for j in 0..16 {
+                out.push(((q[j] + 8) as u8 & 0x0F) | (((q[j + 16] + 8) as u8 & 0x0F) << 4));
+            }
+        }
+        GGML_Q5_0 => {
+            let mut qh = 0u32;
+            for (j, &v) in q.iter().enumerate() {
+                qh |= ((((v + 16) as u32) >> 4) & 1) << j;
+            }
+            out.extend_from_slice(&qh.to_le_bytes());
+            for j in 0..16 {
+                out.push(((q[j] + 16) as u8 & 0x0F) | (((q[j + 16] + 16) as u8 & 0x0F) << 4));
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn encode_tensor(data: &[f32], ggml_type: u32) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    match ggml_type {
+        GGML_F32 => {
+            for &v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        GGML_F16 => {
+            for &v in data {
+                out.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+            }
+        }
+        GGML_Q8_0 | GGML_Q4_0 | GGML_Q5_0 => {
+            anyhow::ensure!(
+                data.len() % GGML_BLOCK == 0,
+                "quantized ggml tensors need a multiple of {GGML_BLOCK} elements"
+            );
+            for chunk in data.chunks_exact(GGML_BLOCK) {
+                ggml_quantize_block(chunk, ggml_type, &mut out);
+            }
+        }
+        other => bail!("unsupported ggml type {other}"),
+    }
+    Ok(out)
+}
+
+/// Write a minimal valid GGUF v3 file from a float model, encoding
+/// matrices in `ggml_type` (norm vectors stay F32, as real exporters
+/// do).  This exists for round-trip testing of the importer; it is not
+/// a general GGUF exporter.
+/// (name, dims in ggml order, ggml type, float data) — writer work list.
+type TensorEntry<'a> = (String, Vec<usize>, u32, &'a [f32]);
+
+pub fn write_gguf_from_float(path: &Path, fm: &FloatModel, ggml_type: u32) -> Result<()> {
+    let cfg = fm.cfg;
+    let kv_dim = cfg.kv_dim();
+    let mut tensors: Vec<TensorEntry> = vec![(
+        "token_embd.weight".into(),
+        vec![cfg.dim, cfg.vocab_size],
+        ggml_type,
+        &fm.tok_emb,
+    )];
+    for (i, l) in fm.layers.iter().enumerate() {
+        tensors.push((format!("blk.{i}.attn_norm.weight"), vec![cfg.dim], GGML_F32, &l.att_norm));
+        tensors.push((format!("blk.{i}.attn_q.weight"), vec![cfg.dim, cfg.dim], ggml_type, &l.wq));
+        tensors.push((format!("blk.{i}.attn_k.weight"), vec![cfg.dim, kv_dim], ggml_type, &l.wk));
+        tensors.push((format!("blk.{i}.attn_v.weight"), vec![cfg.dim, kv_dim], ggml_type, &l.wv));
+        tensors.push((
+            format!("blk.{i}.attn_output.weight"),
+            vec![cfg.dim, cfg.dim],
+            ggml_type,
+            &l.wo,
+        ));
+        tensors.push((format!("blk.{i}.ffn_norm.weight"), vec![cfg.dim], GGML_F32, &l.ffn_norm));
+        tensors.push((
+            format!("blk.{i}.ffn_gate.weight"),
+            vec![cfg.dim, cfg.hidden_dim],
+            ggml_type,
+            &l.w1,
+        ));
+        tensors.push((
+            format!("blk.{i}.ffn_down.weight"),
+            vec![cfg.hidden_dim, cfg.dim],
+            ggml_type,
+            &l.w2,
+        ));
+        tensors.push((
+            format!("blk.{i}.ffn_up.weight"),
+            vec![cfg.dim, cfg.hidden_dim],
+            ggml_type,
+            &l.w3,
+        ));
+    }
+    tensors.push(("output_norm.weight".into(), vec![cfg.dim], GGML_F32, &fm.final_norm));
+    tensors.push(("output.weight".into(), vec![cfg.dim, cfg.vocab_size], ggml_type, &fm.cls));
+
+    let mut head = Vec::new();
+    head.extend_from_slice(b"GGUF");
+    head.extend_from_slice(&3u32.to_le_bytes());
+    head.extend_from_slice(&(tensors.len() as u64).to_le_bytes());
+    let kvs: [(&str, u64); 6] = [
+        ("llama.embedding_length", cfg.dim as u64),
+        ("llama.feed_forward_length", cfg.hidden_dim as u64),
+        ("llama.block_count", cfg.n_layers as u64),
+        ("llama.attention.head_count", cfg.n_heads as u64),
+        ("llama.attention.head_count_kv", cfg.n_kv_heads as u64),
+        ("llama.context_length", cfg.seq_len as u64),
+    ];
+    head.extend_from_slice(&(kvs.len() as u64).to_le_bytes());
+    for (k, v) in kvs {
+        head.extend_from_slice(&(k.len() as u64).to_le_bytes());
+        head.extend_from_slice(k.as_bytes());
+        head.extend_from_slice(&4u32.to_le_bytes()); // u32 value
+        head.extend_from_slice(&(v as u32).to_le_bytes());
+    }
+    // encode data first so tensor offsets are known
+    let mut data = Vec::new();
+    let mut infos = Vec::new();
+    for (name, dims, ty, payload) in &tensors {
+        // every tensor starts aligned inside the data section
+        while data.len() % DEFAULT_ALIGNMENT as usize != 0 {
+            data.push(0);
+        }
+        infos.push((name.clone(), dims.clone(), *ty, data.len() as u64));
+        data.extend(encode_tensor(payload, *ty)?);
+    }
+    for (name, dims, ty, offset) in infos {
+        head.extend_from_slice(&(name.len() as u64).to_le_bytes());
+        head.extend_from_slice(name.as_bytes());
+        head.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for d in dims {
+            head.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        head.extend_from_slice(&ty.to_le_bytes());
+        head.extend_from_slice(&offset.to_le_bytes());
+    }
+    while head.len() % DEFAULT_ALIGNMENT as usize != 0 {
+        head.push(0);
+    }
+    head.extend_from_slice(&data);
+    std::fs::write(path, head).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_for_representable() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, -65504.0, 1.0 / 1024.0, 0.099975586] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v, "{v}");
+        }
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), f32::INFINITY); // overflow
+        // subnormal survives
+        let tiny = f16_to_f32(1); // smallest positive f16 subnormal
+        assert!(tiny > 0.0);
+        assert_eq!(f32_to_f16(tiny), 1);
+    }
+
+    #[test]
+    fn f16_conversion_error_bounded() {
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..1000 {
+            let v = rng.next_f32() * 2.0 - 1.0;
+            let r = f16_to_f32(f32_to_f16(v));
+            // half has 11 significand bits: relative error <= 2^-11
+            assert!((r - v).abs() <= v.abs() * (1.0 / 2048.0) + 1e-12, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn gguf_roundtrip_every_type() {
+        let fm = FloatModel::random(tiny_cfg(), 31);
+        let cases = [
+            (GGML_F32, 0.0f32),
+            (GGML_F16, 1.0 / 2048.0),
+            (GGML_Q8_0, 1.0 / 127.0),
+            (GGML_Q4_0, 1.0 / 7.0),
+            (GGML_Q5_0, 1.0 / 15.0),
+        ];
+        for (ty, tol_scale) in cases {
+            let path = std::env::temp_dir().join(format!("llamaf_test_gguf_{ty}.gguf"));
+            write_gguf_from_float(&path, &fm, ty).unwrap();
+            let g = read_gguf(&path).unwrap();
+            assert_eq!(g.version, 3);
+            let fm2 = gguf_to_float(&g, None).unwrap();
+            assert_eq!(fm2.cfg, fm.cfg);
+            // norms are always F32: exact for every matrix type
+            assert_eq!(fm2.layers[0].att_norm, fm.layers[0].att_norm);
+            assert_eq!(fm2.final_norm, fm.final_norm);
+            if ty == GGML_F32 {
+                assert_eq!(fm2.tok_emb, fm.tok_emb);
+                assert_eq!(fm2.layers[1].w2, fm.layers[1].w2);
+            } else {
+                // block quantization: per-element error <= step size, where
+                // step = block_absmax / qmax; 4.5 sigma bounds the absmax
+                // of N(0, 0.02) blocks, f16 scale rounding adds ~2^-11
+                let tol = 0.02 * 4.5 * tol_scale * 1.01 + 1e-6;
+                for (a, b) in fm.layers[1].w2.iter().zip(&fm2.layers[1].w2) {
+                    assert!((a - b).abs() <= tol, "{ty}: {a} vs {b}");
+                }
+            }
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn tied_embeddings_fall_back_to_token_embd() {
+        let fm = FloatModel::random(tiny_cfg(), 32);
+        let path = std::env::temp_dir().join("llamaf_test_gguf_tied.gguf");
+        write_gguf_from_float(&path, &fm, GGML_F32).unwrap();
+        // strip output.weight by rewriting without it: easier — parse and
+        // check the fallback path directly on a file that HAS the tensor,
+        // then on a synthetic Gguf with it removed
+        let mut g = read_gguf(&path).unwrap();
+        g.tensors.retain(|t| t.name != "output.weight");
+        let fm2 = gguf_to_float(&g, None).unwrap();
+        assert_eq!(fm2.cls, fm2.tok_emb);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn import_f32_gguf_is_bit_identical_to_native_quantization() {
+        use crate::model::QuantModel;
+        let fm = FloatModel::random(tiny_cfg(), 33);
+        let gguf = std::env::temp_dir().join("llamaf_test_import.gguf");
+        write_gguf_from_float(&gguf, &fm, GGML_F32).unwrap();
+        for fmt in FormatId::ALL {
+            let out = std::env::temp_dir().join(format!("llamaf_test_import_{}.lfq", fmt.name()));
+            let cfg = import_gguf(&gguf, &out, fmt, None).unwrap();
+            assert_eq!(cfg, fm.cfg);
+            let imported = super::super::read_ckpt(&out).unwrap();
+            let native = QuantModel::from_float_fmt(&fm, fmt);
+            assert_eq!(imported.tok_emb, native.tok_emb, "{fmt}");
+            assert_eq!(imported.layers[0].wqkv, native.layers[0].wqkv, "{fmt}");
+            assert_eq!(imported.cls, native.cls, "{fmt}");
+            std::fs::remove_file(out).ok();
+        }
+        std::fs::remove_file(gguf).ok();
+    }
+
+    #[test]
+    fn choose_gs_prefers_largest() {
+        assert_eq!(choose_gs(2048, 5632, 32000), Some(256));
+        assert_eq!(choose_gs(64, 128, 64), Some(64));
+        assert_eq!(choose_gs(48, 96, 48), Some(16));
+        assert_eq!(choose_gs(7, 7, 7), None);
+    }
+
+    #[test]
+    fn truncated_and_bad_magic_rejected() {
+        let path = std::env::temp_dir().join("llamaf_test_gguf_bad.gguf");
+        std::fs::write(&path, b"GGML").unwrap();
+        assert!(read_gguf(&path).is_err());
+        std::fs::write(&path, b"GGUF\x03\x00\x00\x00").unwrap();
+        assert!(read_gguf(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unknown_ggml_type_reported() {
+        let fm = FloatModel::random(tiny_cfg(), 34);
+        let path = std::env::temp_dir().join("llamaf_test_gguf_q2.gguf");
+        assert!(write_gguf_from_float(&path, &fm, 99).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

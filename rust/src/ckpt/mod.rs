@@ -1,13 +1,25 @@
-//! Checkpoint I/O — bit-for-bit mirror of `python/compile/quantize.py`.
+//! Checkpoint I/O — bit-for-bit mirror of `python/compile/quantize.py`
+//! for INT8, generalized over [`FormatId`] for sub-INT8 formats.
 //!
-//! `LFCK` = float32 checkpoint, `LFQ8` = W8A8 group-quantized checkpoint.
-//! Layout (little-endian): 4-byte magic, 9×u32 header (version, dim,
-//! hidden_dim, n_layers, n_heads, n_kv_heads, vocab_size, seq_len, gs),
-//! then tensors in a fixed order grouped *per layer* — the grouping is what
-//! allows the engine to stream one layer at a time from "DDR" (paper
-//! §III-B) instead of keeping all weights resident.
+//! Magics: `LFCK` = float32 checkpoint; `LFQ8` / `LFQ4` / `LFQ5` =
+//! group-quantized checkpoints in the corresponding [`FormatId`] wire
+//! encoding.  Layout (little-endian): 4-byte magic, 9×u32 header
+//! (version, dim, hidden_dim, n_layers, n_heads, n_kv_heads,
+//! vocab_size, seq_len, gs), then tensors in a fixed order grouped
+//! *per layer* — the grouping is what allows the engine to stream one
+//! layer (or one matrix) at a time from "DDR" (paper §III-B) instead of
+//! keeping all weights resident.
 //!
-//! Quantized tensors are stored as int8 data followed by f32 group scales.
+//! Quantized tensors are stored as the format's packed payload
+//! (row-major groups, see [`crate::quant::PackedTensor`]) followed by
+//! f32 group scales.  For `LFQ8` the payload is raw int8 — byte-for-
+//! byte the historical format, pinned by
+//! `layer_and_matrix_offsets_pin_written_byte_layout`.
+//!
+//! All offset/byte arithmetic lives in [`CkptLayout`]; the historical
+//! `q8_*` free functions remain one PR as deprecated wrappers.
+
+pub mod gguf;
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -18,7 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::model::{
     FloatLayer, FloatModel, LayerChunk, LlamaConfig, MatrixUnit, QuantLayer, QuantModel,
 };
-use crate::quant::QuantizedTensor;
+use crate::quant::{FormatId, PackedTensor, QuantizedTensor};
 
 pub const MAGIC_F32: &[u8; 4] = b"LFCK";
 pub const MAGIC_Q8: &[u8; 4] = b"LFQ8";
@@ -29,16 +41,7 @@ pub const HEADER_BYTES: u64 = 40;
 // header
 // ---------------------------------------------------------------------------
 
-fn read_header(r: &mut impl Read, magic: &[u8; 4]) -> Result<LlamaConfig> {
-    let mut m = [0u8; 4];
-    r.read_exact(&mut m).context("reading magic")?;
-    if &m != magic {
-        bail!(
-            "bad magic {:?} (expected {:?})",
-            String::from_utf8_lossy(&m),
-            String::from_utf8_lossy(magic)
-        );
-    }
+fn read_header_body(r: &mut impl Read) -> Result<LlamaConfig> {
     let mut buf = [0u8; 36];
     r.read_exact(&mut buf).context("reading header")?;
     let u = |i: usize| u32::from_le_bytes(buf[4 * i..4 * i + 4].try_into().unwrap()) as usize;
@@ -60,6 +63,30 @@ fn read_header(r: &mut impl Read, magic: &[u8; 4]) -> Result<LlamaConfig> {
     Ok(cfg)
 }
 
+fn read_header(r: &mut impl Read, magic: &[u8; 4]) -> Result<LlamaConfig> {
+    let mut m = [0u8; 4];
+    r.read_exact(&mut m).context("reading magic")?;
+    if &m != magic {
+        bail!(
+            "bad magic {:?} (expected {:?})",
+            String::from_utf8_lossy(&m),
+            String::from_utf8_lossy(magic)
+        );
+    }
+    read_header_body(r)
+}
+
+/// Read the header of a quantized checkpoint in ANY supported format,
+/// identifying the format from the magic.
+fn read_quant_header(r: &mut impl Read) -> Result<(LlamaConfig, FormatId)> {
+    let mut m = [0u8; 4];
+    r.read_exact(&mut m).context("reading magic")?;
+    let fmt = FormatId::from_magic(&m).with_context(|| {
+        format!("bad magic {:?} (expected a quantized checkpoint)", String::from_utf8_lossy(&m))
+    })?;
+    Ok((read_header_body(r)?, fmt))
+}
+
 fn write_header(w: &mut impl Write, magic: &[u8; 4], cfg: &LlamaConfig) -> Result<()> {
     w.write_all(magic)?;
     for v in [
@@ -78,15 +105,19 @@ fn write_header(w: &mut impl Write, magic: &[u8; 4], cfg: &LlamaConfig) -> Resul
     Ok(())
 }
 
-/// Peek only the config of a checkpoint file (either format).
-pub fn peek_config(path: &Path) -> Result<(LlamaConfig, bool)> {
+/// Peek only the config of a checkpoint file: `(cfg, None)` for a float
+/// `LFCK` file, `(cfg, Some(fmt))` for a quantized one.
+pub fn peek_config(path: &Path) -> Result<(LlamaConfig, Option<FormatId>)> {
     let mut f = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
     let mut m = [0u8; 4];
     f.read_exact(&mut m)?;
     f.seek(SeekFrom::Start(0))?;
-    let quantized = &m == MAGIC_Q8;
-    let cfg = read_header(&mut f, if quantized { MAGIC_Q8 } else { MAGIC_F32 })?;
-    Ok((cfg, quantized))
+    if &m == MAGIC_F32 {
+        Ok((read_header(&mut f, MAGIC_F32)?, None))
+    } else {
+        let (cfg, fmt) = read_quant_header(&mut f)?;
+        Ok((cfg, Some(fmt)))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -102,12 +133,6 @@ fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
         .collect())
 }
 
-fn read_i8s(r: &mut impl Read, n: usize) -> Result<Vec<i8>> {
-    let mut bytes = vec![0u8; n];
-    r.read_exact(&mut bytes).context("reading i8 tensor")?;
-    Ok(bytes.into_iter().map(|b| b as i8).collect())
-}
-
 fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
     for &v in data {
         w.write_all(&v.to_le_bytes())?;
@@ -115,41 +140,183 @@ fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn write_i8s(w: &mut impl Write, data: &[i8]) -> Result<()> {
-    // i8 -> u8 reinterpretation is the identity at byte level
-    let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
-    w.write_all(&bytes)?;
-    Ok(())
+/// Read one quantized tensor: the format's packed payload, then one f32
+/// scale per group.  Unpacks into the i8 compute form on the way in (the
+/// host-sim analogue of the FPGA's post-DDR nibble-unpack stage).
+fn read_quant(
+    r: &mut impl Read,
+    rows: usize,
+    cols: usize,
+    gs: usize,
+    fmt: FormatId,
+) -> Result<QuantizedTensor> {
+    let groups = rows * cols / gs;
+    let mut data = vec![0u8; groups * fmt.format().group_payload_bytes(gs)];
+    r.read_exact(&mut data).context("reading quantized payload")?;
+    let s = read_f32s(r, groups)?;
+    Ok(PackedTensor { fmt, data, s, rows, cols, gs }.unpack())
 }
 
-fn read_quant(r: &mut impl Read, rows: usize, cols: usize, gs: usize) -> Result<QuantizedTensor> {
-    let q = read_i8s(r, rows * cols)?;
-    let s = read_f32s(r, rows * cols / gs)?;
-    Ok(QuantizedTensor { q, s, rows, cols, gs })
-}
-
+/// Write one quantized tensor in its format's wire encoding.
 fn write_quant(w: &mut impl Write, t: &QuantizedTensor) -> Result<()> {
-    write_i8s(w, &t.q)?;
-    write_f32s(w, &t.s)?;
+    let p = PackedTensor::pack(t);
+    w.write_all(&p.data)?;
+    write_f32s(w, &p.s)?;
     Ok(())
 }
 
 // ---------------------------------------------------------------------------
-// LFQ8 (quantized) — what the engines load
+// CkptLayout — offsets and byte counts, computed from the format
 // ---------------------------------------------------------------------------
 
-/// Read one LFQ8 layer block. Fuses Wq‖Wk‖Wv and W1‖W3 on the fly.
-fn read_q8_layer(r: &mut impl Read, cfg: &LlamaConfig) -> Result<QuantLayer> {
+/// Byte layout of a quantized checkpoint: every offset and length the
+/// streaming path needs, computed from the [`FormatId`]'s wire encoding
+/// so matrix-granular staging and the staging ring work for every
+/// format unchanged (PR 5's `q8_*` free functions, generalized).
+#[derive(Clone, Copy, Debug)]
+pub struct CkptLayout {
+    /// Model geometry (from the checkpoint header).
+    pub cfg: LlamaConfig,
+    /// Wire format of every quantized tensor in the file.
+    pub fmt: FormatId,
+}
+
+impl CkptLayout {
+    /// Layout of a `cfg`-geometry checkpoint in format `fmt`.
+    pub fn new(cfg: LlamaConfig, fmt: FormatId) -> CkptLayout {
+        CkptLayout { cfg, fmt }
+    }
+
+    /// On-disk bytes of one `rows × cols` quantized tensor (packed
+    /// payload + f32 scales).
+    pub fn tensor_bytes(&self, rows: usize, cols: usize) -> u64 {
+        self.fmt.format().bytes_for(rows, cols, self.cfg.gs) as u64
+    }
+
+    /// Byte size of one layer block.
+    pub fn layer_bytes(&self) -> u64 {
+        let (d, h, kv) = (self.cfg.dim, self.cfg.hidden_dim, self.cfg.kv_dim());
+        4 * d as u64 // att_norm
+            + self.tensor_bytes(d, d) // wq
+            + 2 * self.tensor_bytes(kv, d) // wk wv
+            + self.tensor_bytes(d, d) // wo
+            + 4 * d as u64 // ffn_norm
+            + 2 * self.tensor_bytes(h, d) // w1 w3
+            + self.tensor_bytes(d, h) // w2
+    }
+
+    /// File offset of layer `layer`'s block.
+    pub fn layer_offset(&self, layer: usize) -> u64 {
+        HEADER_BYTES
+            + self.tensor_bytes(self.cfg.vocab_size, self.cfg.dim)
+            + layer as u64 * self.layer_bytes()
+    }
+
+    /// On-disk byte segments `(absolute_offset, length)` of one
+    /// matrix-granular staging unit inside layer `layer`'s block.
+    ///
+    /// Most units are one contiguous segment; two span a pair because of
+    /// the fixed tensor order (`att_norm wq wk wv wo ffn_norm w1 w2
+    /// w3`): [`MatrixUnit::Norms`] covers `att_norm` + `ffn_norm`, and
+    /// [`MatrixUnit::W13`] covers `w1` + `w3` (the on-disk layout
+    /// interleaves `w2` between them).  Across all five units the
+    /// segments are disjoint and tile the layer block exactly — pinned
+    /// by unit tests against the bytes [`write_ckpt_from_float`]
+    /// actually writes.
+    pub fn matrix_segments(&self, layer: usize, unit: MatrixUnit) -> Vec<(u64, u64)> {
+        let (d, h, kv) = (self.cfg.dim, self.cfg.hidden_dim, self.cfg.kv_dim());
+        let base = self.layer_offset(layer);
+        let norm = 4 * d as u64;
+        let dd = self.tensor_bytes(d, d); // wq / wo
+        let kvd = self.tensor_bytes(kv, d); // wk / wv
+        let hd = self.tensor_bytes(h, d); // w1 / w3
+        let dh = self.tensor_bytes(d, h); // w2
+        let wq_off = base + norm;
+        let wo_off = wq_off + dd + 2 * kvd;
+        let ffn_off = wo_off + dd;
+        let w1_off = ffn_off + norm;
+        let w2_off = w1_off + hd;
+        let w3_off = w2_off + dh;
+        match unit {
+            MatrixUnit::Norms => vec![(base, norm), (ffn_off, norm)],
+            MatrixUnit::Qkv => vec![(wq_off, dd + 2 * kvd)],
+            MatrixUnit::Wo => vec![(wo_off, dd)],
+            MatrixUnit::W13 => vec![(w1_off, hd), (w3_off, hd)],
+            MatrixUnit::W2 => vec![(w2_off, dh)],
+        }
+    }
+
+    /// Absolute file offset of `unit`'s first on-disk segment in layer
+    /// `layer` (see [`CkptLayout::matrix_segments`] for the units that
+    /// span two segments).
+    pub fn matrix_offset(&self, layer: usize, unit: MatrixUnit) -> u64 {
+        self.matrix_segments(layer, unit)[0].0
+    }
+
+    /// Total on-disk bytes of one matrix-granular unit (all segments).
+    pub fn matrix_bytes(&self, unit: MatrixUnit) -> u64 {
+        self.matrix_segments(0, unit).iter().map(|&(_, len)| len).sum()
+    }
+
+    /// Total file size of the checkpoint: header, embeddings, every
+    /// layer block, final norm, classifier.
+    pub fn total_bytes(&self) -> u64 {
+        self.layer_offset(self.cfg.n_layers)
+            + 4 * self.cfg.dim as u64
+            + self.tensor_bytes(self.cfg.vocab_size, self.cfg.dim)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// deprecated q8_* wrappers (one PR of grace for external call sites)
+// ---------------------------------------------------------------------------
+
+/// Byte size of one LFQ8 layer block.
+#[deprecated(note = "use CkptLayout::new(cfg, FormatId::Q8).layer_bytes()")]
+pub fn q8_layer_bytes(cfg: &LlamaConfig) -> u64 {
+    CkptLayout::new(*cfg, FormatId::Q8).layer_bytes()
+}
+
+/// File offset of layer `l`'s block in an LFQ8 file.
+#[deprecated(note = "use CkptLayout::new(cfg, FormatId::Q8).layer_offset(layer)")]
+pub fn q8_layer_offset(cfg: &LlamaConfig, layer: usize) -> u64 {
+    CkptLayout::new(*cfg, FormatId::Q8).layer_offset(layer)
+}
+
+/// On-disk byte segments of one matrix-granular unit in an LFQ8 file.
+#[deprecated(note = "use CkptLayout::new(cfg, FormatId::Q8).matrix_segments(layer, unit)")]
+pub fn q8_matrix_segments(cfg: &LlamaConfig, layer: usize, unit: MatrixUnit) -> Vec<(u64, u64)> {
+    CkptLayout::new(*cfg, FormatId::Q8).matrix_segments(layer, unit)
+}
+
+/// Absolute file offset of `unit`'s first segment in an LFQ8 file.
+#[deprecated(note = "use CkptLayout::new(cfg, FormatId::Q8).matrix_offset(layer, unit)")]
+pub fn q8_matrix_offset(cfg: &LlamaConfig, layer: usize, unit: MatrixUnit) -> u64 {
+    CkptLayout::new(*cfg, FormatId::Q8).matrix_offset(layer, unit)
+}
+
+/// Total on-disk bytes of one matrix-granular unit in an LFQ8 file.
+#[deprecated(note = "use CkptLayout::new(cfg, FormatId::Q8).matrix_bytes(unit)")]
+pub fn q8_matrix_bytes(cfg: &LlamaConfig, unit: MatrixUnit) -> u64 {
+    CkptLayout::new(*cfg, FormatId::Q8).matrix_bytes(unit)
+}
+
+// ---------------------------------------------------------------------------
+// quantized checkpoints — what the engines load
+// ---------------------------------------------------------------------------
+
+/// Read one quantized layer block. Fuses Wq‖Wk‖Wv and W1‖W3 on the fly.
+fn read_layer(r: &mut impl Read, cfg: &LlamaConfig, fmt: FormatId) -> Result<QuantLayer> {
     let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
     let att_norm = read_f32s(r, d)?;
-    let wq = read_quant(r, d, d, gs)?;
-    let wk = read_quant(r, kv, d, gs)?;
-    let wv = read_quant(r, kv, d, gs)?;
-    let wo = read_quant(r, d, d, gs)?;
+    let wq = read_quant(r, d, d, gs, fmt)?;
+    let wk = read_quant(r, kv, d, gs, fmt)?;
+    let wv = read_quant(r, kv, d, gs, fmt)?;
+    let wo = read_quant(r, d, d, gs, fmt)?;
     let ffn_norm = read_f32s(r, d)?;
-    let w1 = read_quant(r, h, d, gs)?;
-    let w2 = read_quant(r, d, h, gs)?;
-    let w3 = read_quant(r, h, d, gs)?;
+    let w1 = read_quant(r, h, d, gs, fmt)?;
+    let w2 = read_quant(r, d, h, gs, fmt)?;
+    let w3 = read_quant(r, h, d, gs, fmt)?;
     Ok(QuantLayer {
         att_norm,
         wqkv: QuantizedTensor::concat_rows(&[&wq, &wk, &wv]),
@@ -160,17 +327,18 @@ fn read_q8_layer(r: &mut impl Read, cfg: &LlamaConfig) -> Result<QuantLayer> {
     })
 }
 
-/// Load a full LFQ8 checkpoint with every layer resident.
-pub fn read_q8(path: &Path) -> Result<QuantModel> {
+/// Load a full quantized checkpoint (any [`FormatId`], identified by
+/// its magic) with every layer resident.
+pub fn read_ckpt(path: &Path) -> Result<QuantModel> {
     let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
-    let cfg = read_header(&mut r, MAGIC_Q8)?;
-    let tok_emb = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs)?;
+    let (cfg, fmt) = read_quant_header(&mut r)?;
+    let tok_emb = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs, fmt)?;
     let mut layers = Vec::with_capacity(cfg.n_layers);
     for li in 0..cfg.n_layers {
-        layers.push(read_q8_layer(&mut r, &cfg).with_context(|| format!("layer {li}"))?);
+        layers.push(read_layer(&mut r, &cfg, fmt).with_context(|| format!("layer {li}"))?);
     }
     let final_norm = read_f32s(&mut r, cfg.dim)?;
-    let cls = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs)?;
+    let cls = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs, fmt)?;
     let mut trailing = Vec::new();
     r.read_to_end(&mut trailing)?;
     if !trailing.is_empty() {
@@ -179,87 +347,40 @@ pub fn read_q8(path: &Path) -> Result<QuantModel> {
     Ok(QuantModel { cfg, tok_emb, layers, final_norm, cls })
 }
 
-fn q8_tensor_bytes(rows: usize, cols: usize, gs: usize) -> u64 {
-    (rows * cols + 4 * rows * cols / gs) as u64
+/// Load a quantized checkpoint with every layer resident (historical
+/// name; reads any quantized format — see [`read_ckpt`]).
+pub fn read_q8(path: &Path) -> Result<QuantModel> {
+    read_ckpt(path)
 }
 
-/// Byte size of one LFQ8 layer block.
-pub fn q8_layer_bytes(cfg: &LlamaConfig) -> u64 {
-    let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
-    4 * d as u64 // att_norm
-        + q8_tensor_bytes(d, d, gs) // wq
-        + 2 * q8_tensor_bytes(kv, d, gs) // wk wv
-        + q8_tensor_bytes(d, d, gs) // wo
-        + 4 * d as u64 // ffn_norm
-        + 2 * q8_tensor_bytes(h, d, gs) // w1 w3
-        + q8_tensor_bytes(d, h, gs) // w2
-}
-
-/// File offset of layer `l`'s block in an LFQ8 file.
-pub fn q8_layer_offset(cfg: &LlamaConfig, layer: usize) -> u64 {
-    HEADER_BYTES
-        + q8_tensor_bytes(cfg.vocab_size, cfg.dim, cfg.gs)
-        + layer as u64 * q8_layer_bytes(cfg)
-}
-
-/// On-disk byte segments `(absolute_offset, length)` of one matrix-granular
-/// staging unit inside layer `layer`'s LFQ8 block.
-///
-/// Most units are one contiguous segment; two span a pair because of the
-/// fixed tensor order (`att_norm wq wk wv wo ffn_norm w1 w2 w3`):
-/// [`MatrixUnit::Norms`] covers `att_norm` + `ffn_norm`, and
-/// [`MatrixUnit::W13`] covers `w1` + `w3` (the on-disk layout interleaves
-/// `w2` between them).  Across all five units the segments are disjoint and
-/// tile the layer block exactly — pinned by unit tests against the bytes
-/// [`write_q8_from_float`] actually writes.
-pub fn q8_matrix_segments(cfg: &LlamaConfig, layer: usize, unit: MatrixUnit) -> Vec<(u64, u64)> {
-    let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
-    let base = q8_layer_offset(cfg, layer);
-    let norm = 4 * d as u64;
-    let dd = q8_tensor_bytes(d, d, gs); // wq / wo
-    let kvd = q8_tensor_bytes(kv, d, gs); // wk / wv
-    let hd = q8_tensor_bytes(h, d, gs); // w1 / w3
-    let dh = q8_tensor_bytes(d, h, gs); // w2
-    let wq_off = base + norm;
-    let wo_off = wq_off + dd + 2 * kvd;
-    let ffn_off = wo_off + dd;
-    let w1_off = ffn_off + norm;
-    let w2_off = w1_off + hd;
-    let w3_off = w2_off + dh;
-    match unit {
-        MatrixUnit::Norms => vec![(base, norm), (ffn_off, norm)],
-        MatrixUnit::Qkv => vec![(wq_off, dd + 2 * kvd)],
-        MatrixUnit::Wo => vec![(wo_off, dd)],
-        MatrixUnit::W13 => vec![(w1_off, hd), (w3_off, hd)],
-        MatrixUnit::W2 => vec![(w2_off, dh)],
-    }
-}
-
-/// Absolute file offset of `unit`'s first on-disk segment in layer `layer`
-/// (see [`q8_matrix_segments`] for the units that span two segments).
-pub fn q8_matrix_offset(cfg: &LlamaConfig, layer: usize, unit: MatrixUnit) -> u64 {
-    q8_matrix_segments(cfg, layer, unit)[0].0
-}
-
-/// Total on-disk bytes of one matrix-granular unit (all segments).
-pub fn q8_matrix_bytes(cfg: &LlamaConfig, unit: MatrixUnit) -> u64 {
-    q8_matrix_segments(cfg, 0, unit).iter().map(|&(_, len)| len).sum()
-}
-
-/// Streaming LFQ8 reader: fetches one layer block at a time from disk —
-/// the "DDR" the scheduler transfers from.  Keeping only the embeddings,
-/// norms and classifier resident mirrors the paper's 111.5 MB buffer
-/// strategy instead of the 1.1 GB all-resident layout.
-pub struct Q8LayerSource {
+/// Streaming checkpoint reader: fetches one layer block at a time from
+/// disk — the "DDR" the scheduler transfers from.  Keeping only the
+/// embeddings, norms and classifier resident mirrors the paper's
+/// 111.5 MB buffer strategy instead of the 1.1 GB all-resident layout.
+/// Works for every quantized [`FormatId`]; all offsets come from the
+/// file's [`CkptLayout`].
+pub struct CkptSource {
     file: File,
+    /// Model geometry (from the checkpoint header).
     pub cfg: LlamaConfig,
+    /// Wire format of the file (from the magic).
+    pub fmt: FormatId,
 }
 
-impl Q8LayerSource {
+/// Historical name for [`CkptSource`].
+#[deprecated(note = "use CkptSource (reads every quantized format)")]
+pub type Q8LayerSource = CkptSource;
+
+impl CkptSource {
     pub fn open(path: &Path) -> Result<Self> {
         let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
-        let cfg = read_header(&mut file, MAGIC_Q8)?;
-        Ok(Q8LayerSource { file, cfg })
+        let (cfg, fmt) = read_quant_header(&mut file)?;
+        Ok(CkptSource { file, cfg, fmt })
+    }
+
+    /// This file's byte layout.
+    pub fn layout(&self) -> CkptLayout {
+        CkptLayout::new(self.cfg, self.fmt)
     }
 
     /// Read layer `l`'s block (a real disk read every call — deliberate:
@@ -268,25 +389,27 @@ impl Q8LayerSource {
         if layer >= self.cfg.n_layers {
             bail!("layer {layer} out of range ({} layers)", self.cfg.n_layers);
         }
-        self.file
-            .seek(SeekFrom::Start(q8_layer_offset(&self.cfg, layer)))?;
+        self.file.seek(SeekFrom::Start(self.layout().layer_offset(layer)))?;
+        let fmt = self.fmt;
+        let cfg = self.cfg;
         let mut r = BufReader::new(&mut self.file);
-        read_q8_layer(&mut r, &self.cfg.clone())
+        read_layer(&mut r, &cfg, fmt)
     }
 
     /// Read one matrix-granular chunk of layer `layer` — the sub-layer
     /// staging unit of `--stream-granularity matrix`.  Only the chunk's
     /// own byte segments are read (a ~45 MB TinyLlama layer is never
     /// pulled to fetch its ~66 KB norm vectors), and fused blocks come
-    /// back exactly as [`Q8LayerSource::fetch_layer`] fuses them, so
+    /// back exactly as [`CkptSource::fetch_layer`] fuses them, so
     /// matrix-granular staging is bit-identical to layer-granular.
     pub fn fetch_matrix(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
         if layer >= self.cfg.n_layers {
             bail!("layer {layer} out of range ({} layers)", self.cfg.n_layers);
         }
         let cfg = self.cfg;
+        let fmt = self.fmt;
         let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
-        let segs = q8_matrix_segments(&cfg, layer, unit);
+        let segs = self.layout().matrix_segments(layer, unit);
         self.file.seek(SeekFrom::Start(segs[0].0))?;
         match unit {
             MatrixUnit::Norms => {
@@ -297,24 +420,24 @@ impl Q8LayerSource {
             }
             MatrixUnit::Qkv => {
                 let mut r = BufReader::new(&mut self.file);
-                let wq = read_quant(&mut r, d, d, gs)?;
-                let wk = read_quant(&mut r, kv, d, gs)?;
-                let wv = read_quant(&mut r, kv, d, gs)?;
+                let wq = read_quant(&mut r, d, d, gs, fmt)?;
+                let wk = read_quant(&mut r, kv, d, gs, fmt)?;
+                let wv = read_quant(&mut r, kv, d, gs, fmt)?;
                 Ok(LayerChunk::Mat(QuantizedTensor::concat_rows(&[&wq, &wk, &wv])))
             }
             MatrixUnit::Wo => {
                 let mut r = BufReader::new(&mut self.file);
-                Ok(LayerChunk::Mat(read_quant(&mut r, d, d, gs)?))
+                Ok(LayerChunk::Mat(read_quant(&mut r, d, d, gs, fmt)?))
             }
             MatrixUnit::W13 => {
-                let w1 = read_quant(&mut BufReader::new(&mut self.file), h, d, gs)?;
+                let w1 = read_quant(&mut BufReader::new(&mut self.file), h, d, gs, fmt)?;
                 self.file.seek(SeekFrom::Start(segs[1].0))?;
-                let w3 = read_quant(&mut BufReader::new(&mut self.file), h, d, gs)?;
+                let w3 = read_quant(&mut BufReader::new(&mut self.file), h, d, gs, fmt)?;
                 Ok(LayerChunk::Mat(QuantizedTensor::concat_rows(&[&w1, &w3])))
             }
             MatrixUnit::W2 => {
                 let mut r = BufReader::new(&mut self.file);
-                Ok(LayerChunk::Mat(read_quant(&mut r, d, h, gs)?))
+                Ok(LayerChunk::Mat(read_quant(&mut r, d, h, gs, fmt)?))
             }
         }
     }
@@ -324,28 +447,29 @@ impl Q8LayerSource {
         &mut self,
     ) -> Result<(QuantizedTensor, Vec<f32>, QuantizedTensor)> {
         let cfg = self.cfg;
+        let fmt = self.fmt;
+        let layout = self.layout();
         self.file.seek(SeekFrom::Start(HEADER_BYTES))?;
         let mut r = BufReader::new(&mut self.file);
-        let tok_emb = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs)?;
+        let tok_emb = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs, fmt)?;
         drop(r);
-        self.file
-            .seek(SeekFrom::Start(q8_layer_offset(&cfg, cfg.n_layers)))?;
+        self.file.seek(SeekFrom::Start(layout.layer_offset(cfg.n_layers)))?;
         let mut r = BufReader::new(&mut self.file);
         let final_norm = read_f32s(&mut r, cfg.dim)?;
-        let cls = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs)?;
+        let cls = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs, fmt)?;
         Ok((tok_emb, final_norm, cls))
     }
 }
 
-/// Write an LFQ8 checkpoint from an (unfused) float model by quantizing —
-/// used by tests and by `llamaf synth` to build paper-geometry checkpoints.
-pub fn write_q8_from_float(path: &Path, fm: &FloatModel) -> Result<()> {
+/// Write a quantized checkpoint in format `fmt` from an (unfused) float
+/// model — used by tests, `llamaf synth` and `llamaf import-gguf`.
+pub fn write_ckpt_from_float(path: &Path, fm: &FloatModel, fmt: FormatId) -> Result<()> {
     let cfg = fm.cfg;
     let gs = cfg.gs;
     let mut w = BufWriter::new(File::create(path)?);
-    write_header(&mut w, MAGIC_Q8, &cfg)?;
+    write_header(&mut w, &fmt.magic(), &cfg)?;
     let q = |data: &[f32], rows: usize, cols: usize| {
-        QuantizedTensor::from_f32(data, rows, cols, gs)
+        QuantizedTensor::from_f32_fmt(data, rows, cols, gs, fmt)
     };
     write_quant(&mut w, &q(&fm.tok_emb, cfg.vocab_size, cfg.dim))?;
     for l in &fm.layers {
@@ -363,6 +487,12 @@ pub fn write_q8_from_float(path: &Path, fm: &FloatModel) -> Result<()> {
     write_quant(&mut w, &q(&fm.cls, cfg.vocab_size, cfg.dim))?;
     w.flush()?;
     Ok(())
+}
+
+/// Write an LFQ8 checkpoint from an (unfused) float model by quantizing
+/// (the INT8 special case of [`write_ckpt_from_float`]).
+pub fn write_q8_from_float(path: &Path, fm: &FloatModel) -> Result<()> {
+    write_ckpt_from_float(path, fm, FormatId::Q8)
 }
 
 // ---------------------------------------------------------------------------
@@ -449,7 +579,7 @@ mod tests {
         let fm = FloatModel::random(tiny_cfg(), 2);
         let path = std::env::temp_dir().join("llamaf_test_q8.lfq8");
         write_q8_from_float(&path, &fm).unwrap();
-        let qm_file = read_q8(&path).unwrap();
+        let qm_file = read_ckpt(&path).unwrap();
         let qm_mem = QuantModel::from_float(&fm);
         assert_eq!(qm_file.tok_emb, qm_mem.tok_emb);
         for (a, b) in qm_file.layers.iter().zip(&qm_mem.layers) {
@@ -464,29 +594,66 @@ mod tests {
     }
 
     #[test]
-    fn layer_source_matches_full_read() {
-        let fm = FloatModel::random(tiny_cfg(), 3);
-        let path = std::env::temp_dir().join("llamaf_test_stream.lfq8");
-        write_q8_from_float(&path, &fm).unwrap();
-        let qm = read_q8(&path).unwrap();
-        let mut src = Q8LayerSource::open(&path).unwrap();
-        for li in 0..qm.cfg.n_layers {
-            let layer = src.fetch_layer(li).unwrap();
-            assert_eq!(layer.wqkv, qm.layers[li].wqkv);
-            assert_eq!(layer.w2, qm.layers[li].w2);
+    fn every_format_roundtrips_and_pins_file_size() {
+        // write -> read round trip per format, against the in-memory
+        // quantizer, plus CkptLayout::total_bytes pinning the real file
+        // length (the byte-accounting contract the streamer bills by)
+        let fm = FloatModel::random(tiny_cfg(), 20);
+        for fmt in FormatId::ALL {
+            let path =
+                std::env::temp_dir().join(format!("llamaf_test_rt_{}.lfq", fmt.name()));
+            write_ckpt_from_float(&path, &fm, fmt).unwrap();
+            let layout = CkptLayout::new(fm.cfg, fmt);
+            assert_eq!(
+                std::fs::metadata(&path).unwrap().len(),
+                layout.total_bytes(),
+                "{fmt}: file length != CkptLayout::total_bytes"
+            );
+            let (cfg, peeked) = peek_config(&path).unwrap();
+            assert_eq!(cfg, fm.cfg);
+            assert_eq!(peeked, Some(fmt));
+            let qm_file = read_ckpt(&path).unwrap();
+            let qm_mem = QuantModel::from_float_fmt(&fm, fmt);
+            assert_eq!(qm_file.tok_emb, qm_mem.tok_emb, "{fmt}");
+            for (a, b) in qm_file.layers.iter().zip(&qm_mem.layers) {
+                assert_eq!(a.wqkv, b.wqkv, "{fmt}");
+                assert_eq!(a.w13, b.w13, "{fmt}");
+                assert_eq!(a.w2, b.w2, "{fmt}");
+            }
+            assert_eq!(qm_file.cls, qm_mem.cls, "{fmt}");
+            assert_eq!(qm_file.fmt(), fmt);
+            std::fs::remove_file(path).ok();
         }
-        let (emb, norm, cls) = src.fetch_resident().unwrap();
-        assert_eq!(emb, qm.tok_emb);
-        assert_eq!(norm, qm.final_norm);
-        assert_eq!(cls, qm.cls);
-        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn layer_source_matches_full_read_every_format() {
+        let fm = FloatModel::random(tiny_cfg(), 3);
+        for fmt in FormatId::ALL {
+            let path =
+                std::env::temp_dir().join(format!("llamaf_test_stream_{}.lfq", fmt.name()));
+            write_ckpt_from_float(&path, &fm, fmt).unwrap();
+            let qm = read_ckpt(&path).unwrap();
+            let mut src = CkptSource::open(&path).unwrap();
+            assert_eq!(src.fmt, fmt);
+            for li in 0..qm.cfg.n_layers {
+                let layer = src.fetch_layer(li).unwrap();
+                assert_eq!(layer.wqkv, qm.layers[li].wqkv, "{fmt} layer {li}");
+                assert_eq!(layer.w2, qm.layers[li].w2, "{fmt} layer {li}");
+            }
+            let (emb, norm, cls) = src.fetch_resident().unwrap();
+            assert_eq!(emb, qm.tok_emb);
+            assert_eq!(norm, qm.final_norm);
+            assert_eq!(cls, qm.cls);
+            std::fs::remove_file(path).ok();
+        }
     }
 
     #[test]
     fn bad_magic_rejected() {
         let path = std::env::temp_dir().join("llamaf_test_badmagic.lfq8");
         std::fs::write(&path, b"XXXX0000000000000000000000000000000000000000").unwrap();
-        assert!(read_q8(&path).is_err());
+        assert!(read_ckpt(&path).is_err());
         std::fs::remove_file(path).ok();
     }
 
@@ -497,7 +664,7 @@ mod tests {
         write_q8_from_float(&path, &fm).unwrap();
         let data = std::fs::read(&path).unwrap();
         std::fs::write(&path, &data[..data.len() - 10]).unwrap();
-        assert!(read_q8(&path).is_err());
+        assert!(read_ckpt(&path).is_err());
         std::fs::remove_file(path).ok();
     }
 
@@ -509,7 +676,7 @@ mod tests {
         let mut data = std::fs::read(&path).unwrap();
         data.extend_from_slice(&[0u8; 13]);
         std::fs::write(&path, &data).unwrap();
-        assert!(read_q8(&path).is_err());
+        assert!(read_ckpt(&path).is_err());
         std::fs::remove_file(path).ok();
     }
 
@@ -520,10 +687,12 @@ mod tests {
         let path = std::env::temp_dir().join("llamaf_test_off.lfq8");
         write_q8_from_float(&path, &fm).unwrap();
         let file_len = std::fs::metadata(&path).unwrap().len();
-        let expected = q8_layer_offset(&cfg, cfg.n_layers)
+        let layout = CkptLayout::new(cfg, FormatId::Q8);
+        let expected = layout.layer_offset(cfg.n_layers)
             + 4 * cfg.dim as u64
-            + q8_tensor_bytes(cfg.vocab_size, cfg.dim, cfg.gs);
+            + layout.tensor_bytes(cfg.vocab_size, cfg.dim);
         assert_eq!(file_len, expected);
+        assert_eq!(file_len, layout.total_bytes());
         std::fs::remove_file(path).ok();
     }
 
@@ -542,34 +711,61 @@ mod tests {
     }
 
     #[test]
-    fn matrix_segments_tile_every_layer_block() {
+    fn matrix_segments_tile_every_layer_block_every_format() {
         let cfg = tiny_cfg();
-        for layer in 0..cfg.n_layers {
-            let mut segs: Vec<(u64, u64)> = crate::model::MATRIX_UNITS
-                .iter()
-                .flat_map(|&u| q8_matrix_segments(&cfg, layer, u))
-                .collect();
-            segs.sort_unstable();
-            let base = q8_layer_offset(&cfg, layer);
-            let mut cursor = base;
-            for (off, len) in segs {
-                assert_eq!(off, cursor, "gap or overlap at offset {off}");
-                cursor += len;
+        for fmt in FormatId::ALL {
+            let layout = CkptLayout::new(cfg, fmt);
+            for layer in 0..cfg.n_layers {
+                let mut segs: Vec<(u64, u64)> = crate::model::MATRIX_UNITS
+                    .iter()
+                    .flat_map(|&u| layout.matrix_segments(layer, u))
+                    .collect();
+                segs.sort_unstable();
+                let base = layout.layer_offset(layer);
+                let mut cursor = base;
+                for (off, len) in segs {
+                    assert_eq!(off, cursor, "{fmt}: gap or overlap at offset {off}");
+                    cursor += len;
+                }
+                assert_eq!(
+                    cursor,
+                    base + layout.layer_bytes(),
+                    "{fmt}: segments must cover the block"
+                );
             }
-            assert_eq!(cursor, base + q8_layer_bytes(&cfg), "segments must cover the block");
+            let total: u64 = crate::model::MATRIX_UNITS
+                .iter()
+                .map(|&u| layout.matrix_bytes(u))
+                .sum();
+            assert_eq!(total, layout.layer_bytes());
         }
-        let total: u64 = crate::model::MATRIX_UNITS
-            .iter()
-            .map(|&u| q8_matrix_bytes(&cfg, u))
-            .sum();
-        assert_eq!(total, q8_layer_bytes(&cfg));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_q8_wrappers_agree_with_layout() {
+        // the one-PR compatibility contract: every q8_* free function
+        // returns exactly what CkptLayout(Q8) computes
+        let cfg = tiny_cfg();
+        let layout = CkptLayout::new(cfg, FormatId::Q8);
+        assert_eq!(q8_layer_bytes(&cfg), layout.layer_bytes());
+        for layer in 0..cfg.n_layers {
+            assert_eq!(q8_layer_offset(&cfg, layer), layout.layer_offset(layer));
+            for &u in &crate::model::MATRIX_UNITS {
+                assert_eq!(q8_matrix_segments(&cfg, layer, u), layout.matrix_segments(layer, u));
+                assert_eq!(q8_matrix_offset(&cfg, layer, u), layout.matrix_offset(layer, u));
+            }
+        }
+        for &u in &crate::model::MATRIX_UNITS {
+            assert_eq!(q8_matrix_bytes(&cfg, u), layout.matrix_bytes(u));
+        }
     }
 
     #[test]
     fn layer_and_matrix_offsets_pin_written_byte_layout() {
-        // The format contract: q8_layer_offset/q8_layer_bytes and the new
-        // q8_matrix_offset must locate the EXACT bytes write_q8_from_float
-        // puts on disk — format drift fails here, loudly.
+        // The format contract: CkptLayout's offsets must locate the EXACT
+        // bytes write_ckpt_from_float puts on disk for the historical Q8
+        // encoding — format drift fails here, loudly.
         use crate::model::MatrixUnit;
         let cfg = tiny_cfg();
         let fm = FloatModel::random(cfg, 8);
@@ -577,32 +773,33 @@ mod tests {
         write_q8_from_float(&path, &fm).unwrap();
         let raw = std::fs::read(&path).unwrap();
         let gs = cfg.gs;
+        let layout = CkptLayout::new(cfg, FormatId::Q8);
         let at = |off: u64, len: usize| &raw[off as usize..off as usize + len];
         assert_eq!(
-            q8_layer_offset(&cfg, 1) - q8_layer_offset(&cfg, 0),
-            q8_layer_bytes(&cfg),
-            "consecutive layer blocks must be exactly q8_layer_bytes apart"
+            layout.layer_offset(1) - layout.layer_offset(0),
+            layout.layer_bytes(),
+            "consecutive layer blocks must be exactly layer_bytes apart"
         );
         for (li, fl) in fm.layers.iter().enumerate() {
             // layer block starts with the raw f32 att_norm
-            let base = q8_layer_offset(&cfg, li);
+            let base = layout.layer_offset(li);
             assert_eq!(at(base, 4 * cfg.dim), &f32_bytes(&fl.att_norm)[..], "layer {li} base");
             // Norms unit: att_norm at segment 0, ffn_norm at segment 1
-            let segs = q8_matrix_segments(&cfg, li, MatrixUnit::Norms);
-            assert_eq!(q8_matrix_offset(&cfg, li, MatrixUnit::Norms), base);
+            let segs = layout.matrix_segments(li, MatrixUnit::Norms);
+            assert_eq!(layout.matrix_offset(li, MatrixUnit::Norms), base);
             assert_eq!(at(segs[1].0, segs[1].1 as usize), &f32_bytes(&fl.ffn_norm)[..]);
             // Qkv unit: wq then wk then wv, quantized exactly like the writer
             let wq = QuantizedTensor::from_f32(&fl.wq, cfg.dim, cfg.dim, gs);
-            let off = q8_matrix_offset(&cfg, li, MatrixUnit::Qkv);
+            let off = layout.matrix_offset(li, MatrixUnit::Qkv);
             let wq_bytes = q8_bytes(&wq);
             assert_eq!(at(off, wq_bytes.len()), &wq_bytes[..], "layer {li} wq");
             // W2 unit is one contiguous tensor
             let w2 = QuantizedTensor::from_f32(&fl.w2, cfg.dim, cfg.hidden_dim, gs);
-            let off = q8_matrix_offset(&cfg, li, MatrixUnit::W2);
+            let off = layout.matrix_offset(li, MatrixUnit::W2);
             let w2_bytes = q8_bytes(&w2);
             assert_eq!(at(off, w2_bytes.len()), &w2_bytes[..], "layer {li} w2");
             // W13 unit: w1 at segment 0, w3 at segment 1 (w2 sits between)
-            let segs = q8_matrix_segments(&cfg, li, MatrixUnit::W13);
+            let segs = layout.matrix_segments(li, MatrixUnit::W13);
             let w1 = QuantizedTensor::from_f32(&fl.w1, cfg.hidden_dim, cfg.dim, gs);
             let w3 = QuantizedTensor::from_f32(&fl.w3, cfg.hidden_dim, cfg.dim, gs);
             assert_eq!(at(segs[0].0, segs[0].1 as usize), &q8_bytes(&w1)[..], "layer {li} w1");
@@ -612,30 +809,44 @@ mod tests {
     }
 
     #[test]
-    fn fetch_matrix_matches_fused_layer_read() {
+    fn fetch_matrix_matches_fused_layer_read_every_format() {
         use crate::model::{LayerChunk, MATRIX_UNITS};
         let fm = FloatModel::random(tiny_cfg(), 9);
-        let path = std::env::temp_dir().join("llamaf_test_fetchmat.lfq8");
-        write_q8_from_float(&path, &fm).unwrap();
-        let qm = read_q8(&path).unwrap();
-        let mut src = Q8LayerSource::open(&path).unwrap();
-        for (li, lay) in qm.layers.iter().enumerate() {
-            for &u in &MATRIX_UNITS {
-                match (src.fetch_matrix(li, u).unwrap(), u) {
-                    (LayerChunk::Norms { att_norm, ffn_norm }, crate::model::MatrixUnit::Norms) => {
-                        assert_eq!(att_norm, lay.att_norm);
-                        assert_eq!(ffn_norm, lay.ffn_norm);
+        for fmt in FormatId::ALL {
+            let path =
+                std::env::temp_dir().join(format!("llamaf_test_fetchmat_{}.lfq", fmt.name()));
+            write_ckpt_from_float(&path, &fm, fmt).unwrap();
+            let qm = read_ckpt(&path).unwrap();
+            let mut src = CkptSource::open(&path).unwrap();
+            for (li, lay) in qm.layers.iter().enumerate() {
+                for &u in &MATRIX_UNITS {
+                    match (src.fetch_matrix(li, u).unwrap(), u) {
+                        (
+                            LayerChunk::Norms { att_norm, ffn_norm },
+                            crate::model::MatrixUnit::Norms,
+                        ) => {
+                            assert_eq!(att_norm, lay.att_norm);
+                            assert_eq!(ffn_norm, lay.ffn_norm);
+                        }
+                        (LayerChunk::Mat(t), crate::model::MatrixUnit::Qkv) => {
+                            assert_eq!(t, lay.wqkv, "{fmt}")
+                        }
+                        (LayerChunk::Mat(t), crate::model::MatrixUnit::Wo) => {
+                            assert_eq!(t, lay.wo, "{fmt}")
+                        }
+                        (LayerChunk::Mat(t), crate::model::MatrixUnit::W13) => {
+                            assert_eq!(t, lay.w13, "{fmt}")
+                        }
+                        (LayerChunk::Mat(t), crate::model::MatrixUnit::W2) => {
+                            assert_eq!(t, lay.w2, "{fmt}")
+                        }
+                        _ => panic!("chunk shape does not match requested unit {u:?}"),
                     }
-                    (LayerChunk::Mat(t), crate::model::MatrixUnit::Qkv) => assert_eq!(t, lay.wqkv),
-                    (LayerChunk::Mat(t), crate::model::MatrixUnit::Wo) => assert_eq!(t, lay.wo),
-                    (LayerChunk::Mat(t), crate::model::MatrixUnit::W13) => assert_eq!(t, lay.w13),
-                    (LayerChunk::Mat(t), crate::model::MatrixUnit::W2) => assert_eq!(t, lay.w2),
-                    _ => panic!("chunk shape does not match requested unit {u:?}"),
                 }
             }
+            assert!(src.fetch_matrix(99, crate::model::MatrixUnit::Qkv).is_err());
+            std::fs::remove_file(path).ok();
         }
-        assert!(src.fetch_matrix(99, crate::model::MatrixUnit::Qkv).is_err());
-        std::fs::remove_file(path).ok();
     }
 
     #[test]
@@ -643,8 +854,25 @@ mod tests {
         let fm = FloatModel::random(tiny_cfg(), 7);
         let path = std::env::temp_dir().join("llamaf_test_oor.lfq8");
         write_q8_from_float(&path, &fm).unwrap();
-        let mut src = Q8LayerSource::open(&path).unwrap();
+        let mut src = CkptSource::open(&path).unwrap();
         assert!(src.fetch_layer(99).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn sub_int8_formats_really_shrink_the_file() {
+        let fm = FloatModel::random(tiny_cfg(), 21);
+        let mut sizes = std::collections::HashMap::new();
+        for fmt in FormatId::ALL {
+            let path =
+                std::env::temp_dir().join(format!("llamaf_test_size_{}.lfq", fmt.name()));
+            write_ckpt_from_float(&path, &fm, fmt).unwrap();
+            sizes.insert(fmt, std::fs::metadata(&path).unwrap().len() as f64);
+            std::fs::remove_file(path).ok();
+        }
+        let ratio = sizes[&FormatId::Q40] / sizes[&FormatId::Q8];
+        assert!(ratio <= 0.62, "q4_0 file should be ~half of q8 (got {ratio:.3})");
+        assert!(sizes[&FormatId::Q50] < sizes[&FormatId::Q8]);
+        assert!(sizes[&FormatId::Q40] < sizes[&FormatId::Q50]);
     }
 }

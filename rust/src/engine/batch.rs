@@ -501,6 +501,7 @@ fn decode_loop(
 ) {
     let cfg = model.cfg;
     sched.metrics.set_prefill_chunk(opts.prefill_chunk);
+    sched.metrics.set_quant(model.fmt().name());
     // Streamed mode stages layers out of the Arc'd model ("DDR") into the
     // device runtime, hiding the copy behind the batched kernels in async
     // mode.  No compiled-kernel shapes are needed: the batched GQMV runs

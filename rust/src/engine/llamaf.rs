@@ -236,9 +236,10 @@ pub struct LlamafEngine {
 }
 
 impl LlamafEngine {
-    /// Open an LFQ8 checkpoint, compile/validate kernels, stage the first
-    /// unit, with the default double-buffer staging depth and layer
-    /// granularity.
+    /// Open a quantized checkpoint (any [`crate::quant::FormatId`],
+    /// identified by its magic), compile/validate kernels, stage the
+    /// first unit, with the default double-buffer staging depth and
+    /// layer granularity.
     pub fn open(ckpt_path: &Path, rt: Arc<Runtime>, mode: SchedMode) -> Result<Self> {
         Self::open_with_depth(ckpt_path, rt, mode, crate::sched::DEFAULT_PREFETCH_DEPTH)
     }
@@ -273,7 +274,7 @@ impl LlamafEngine {
             rt.ensure_shape(m, n)
                 .with_context(|| format!("kernel for GQMV {m}x{n}"))?;
         }
-        let mut src = ckpt::Q8LayerSource::open(ckpt_path)?;
+        let mut src = ckpt::CkptSource::open(ckpt_path)?;
         let (tok_emb, final_norm, cls) = src.fetch_resident()?;
         let cls_dev = Arc::new(rt.upload(&cls)?);
         let resident = QuantModel { cfg, tok_emb, layers: Vec::new(), final_norm, cls };

@@ -239,7 +239,14 @@ mod tests {
 
     #[test]
     fn non_power_of_two_gs_rejected() {
-        let w = QuantizedTensor { q: vec![0; 96], s: vec![0.0; 2], rows: 1, cols: 96, gs: 48 };
+        let w = QuantizedTensor {
+            q: vec![0; 96],
+            s: vec![0.0; 2],
+            rows: 1,
+            cols: 96,
+            gs: 48,
+            fmt: crate::quant::FormatId::Q8,
+        };
         let xq = vec![0i8; 96];
         let xs = vec![0f32; 2];
         let mut out = vec![0.0; 1];

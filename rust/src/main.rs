@@ -6,7 +6,9 @@
 //!   tables    — regenerate every paper table/figure (see exp/)
 //!   ppl       — Table V perplexity evaluation
 //!   profile   — Table II component profiling
-//!   synth     — write a synthetic LFQ8 checkpoint at a chosen geometry
+//!   synth     — write a synthetic quantized checkpoint at a chosen geometry
+//!   import-gguf — convert a GGUF checkpoint to a native quantized one
+//!   quant-error — per-matrix quantization error of a float checkpoint
 //!   info      — runtime/artifact inventory
 //!   trace-diff — compare two execution traces (`generate --trace`)
 
@@ -31,13 +33,13 @@ llamaf — LlamaF (Llama2-on-FPGA) reproduction
 USAGE: llamaf <command> [options]
 
 COMMANDS
-  generate  --ckpt <lfq8> --prompt <text> [--steps N] [--engine ps|llamaf]
+  generate  --ckpt <lfq*> --prompt <text> [--steps N] [--engine ps|llamaf]
             [--sync|--async] [--prefetch-depth N]
             [--stream-granularity layer|matrix]
             [--top-p P --temperature T --seed S]
             [--trace <out.trace>]  record a per-op execution trace (the
             digest of every GQMV output) for trace-diff
-  serve     --ckpt <lfq8> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
+  serve     --ckpt <lfq*> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
             [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
             [--max-batch B] [--prefetch-depth N]
             [--stream-granularity layer|matrix] [--sync | --resident]
@@ -61,7 +63,17 @@ COMMANDS
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
-  synth     --out <path.lfq8> [--geometry nano|tinyllama] [--seed S]
+  synth     --out <path.lfq*> [--geometry nano|tinyllama] [--seed S]
+            [--quant-format q8|q4_0|q5_0]
+  import-gguf --gguf <model.gguf> --out <path.lfq*>
+            [--quant-format q8|q4_0|q5_0] [--gs N]
+            dequantize a GGUF (F32/F16/Q8_0/Q4_0/Q5_0 tensors) and
+            re-quantize onto the model's own group lattice as a native
+            streaming checkpoint
+  quant-error --f32-ckpt <path.lfck> [--quant-format q8|q4_0|q5_0]
+            per-matrix and whole-model quantization error (RMS + the
+            paper's error-percentage stats) of a float checkpoint on
+            the chosen weight lattice
   info      [--artifacts <dir>]
   bench-diff --prev <dir> --cur <dir> [--threshold 0.20]
             compare two bench-json/ directories case by case and fail
@@ -90,16 +102,16 @@ fn build_engine(args: &Args) -> Result<Box<dyn Engine>> {
     anyhow::ensure!(path.exists(), "checkpoint {ckpt} not found (run `make artifacts`)");
     match args.get_or("engine", "llamaf") {
         "ps" => {
-            let qm = llamaf::ckpt::read_q8(path)?;
+            let qm = llamaf::ckpt::read_ckpt(path)?;
             let pool = Arc::new(ThreadPool::new(args.get_usize("threads", 4)?));
             Ok(Box::new(CpuEngine::new(qm, Box::new(ThreadedGqmv::new(pool)))))
         }
         "ps-scalar" => {
-            let qm = llamaf::ckpt::read_q8(path)?;
+            let qm = llamaf::ckpt::read_ckpt(path)?;
             Ok(Box::new(CpuEngine::new(qm, Box::new(ScalarGqmv))))
         }
         "sim" => {
-            let qm = llamaf::ckpt::read_q8(path)?;
+            let qm = llamaf::ckpt::read_ckpt(path)?;
             Ok(Box::new(CpuEngine::new(
                 qm,
                 Box::new(llamaf::fpga::DataflowSim::new(llamaf::fpga::PlConfig::default())),
@@ -130,6 +142,8 @@ fn run() -> Result<()> {
         "ppl" => llamaf::exp::table5::run(&args),
         "profile" => llamaf::exp::table2::run(&args),
         "synth" => cmd_synth(&args),
+        "import-gguf" => cmd_import_gguf(&args),
+        "quant-error" => cmd_quant_error(&args),
         "info" => cmd_info(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "trace-diff" => cmd_trace_diff(&args),
@@ -142,6 +156,13 @@ fn prefetch_depth(args: &Args) -> Result<usize> {
     let depth = args.get_usize("prefetch-depth", llamaf::sched::DEFAULT_PREFETCH_DEPTH)?;
     anyhow::ensure!(depth >= 1, "--prefetch-depth must be >= 1");
     Ok(depth)
+}
+
+/// Parse `--quant-format` (weight wire format, default q8).
+fn quant_format(args: &Args) -> Result<llamaf::quant::FormatId> {
+    let s = args.get_or("quant-format", "q8");
+    llamaf::quant::FormatId::parse(s)
+        .with_context(|| format!("--quant-format must be q8, q4_0 or q5_0 (got '{s}')"))
 }
 
 /// Parse `--stream-granularity` (staging unit, default layer).
@@ -204,7 +225,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let ckpt = args.get_or("ckpt", "artifacts/nano_q8.lfq8");
             let path = Path::new(ckpt);
             anyhow::ensure!(path.exists(), "checkpoint {ckpt} not found (run `make artifacts`)");
-            let qm = Arc::new(llamaf::ckpt::read_q8(path)?);
+            let qm = Arc::new(llamaf::ckpt::read_ckpt(path)?);
             let opts = llamaf::server::ServeOpts {
                 workers: args.get_usize("workers", 4)?,
                 queue_depth: args.get_usize("queue-depth", 64)?,
@@ -276,14 +297,83 @@ fn cmd_synth(args: &Args) -> Result<()> {
         _ => llamaf::model::NANO,
     };
     let seed = args.get_usize("seed", 42)? as u64;
+    let fmt = quant_format(args)?;
     eprintln!(
-        "building synthetic float model ({:.1}M params) and quantizing...",
+        "building synthetic float model ({:.1}M params) and quantizing to {fmt}...",
         cfg.param_count() as f64 / 1e6
     );
     let fm = llamaf::model::FloatModel::random(cfg, seed);
-    llamaf::ckpt::write_q8_from_float(Path::new(out), &fm)?;
+    llamaf::ckpt::write_ckpt_from_float(Path::new(out), &fm, fmt)?;
     eprintln!("wrote {out}");
     Ok(())
+}
+
+/// Convert a GGUF checkpoint into a native quantized streaming
+/// checkpoint: dequantize every tensor, then re-quantize on the model's
+/// own group lattice (ggml's fixed 32-element blocks cannot be streamed
+/// through the GQMV cast chain, whose weight scale groups must match the
+/// activation groups).
+fn cmd_import_gguf(args: &Args) -> Result<()> {
+    let gguf = args.get("gguf").context("--gguf <model.gguf> required")?;
+    let out = args.get("out").context("--out <path> required")?;
+    let fmt = quant_format(args)?;
+    let gs = match args.get("gs") {
+        Some(_) => Some(args.get_usize("gs", 0)?),
+        None => None,
+    };
+    let cfg = llamaf::ckpt::gguf::import_gguf(Path::new(gguf), Path::new(out), fmt, gs)?;
+    let layout = llamaf::ckpt::CkptLayout::new(cfg, fmt);
+    eprintln!(
+        "imported {gguf}: dim={} hidden={} layers={} vocab={} gs={} -> {out} ({fmt}, {:.1} MB)",
+        cfg.dim,
+        cfg.hidden_dim,
+        cfg.n_layers,
+        cfg.vocab_size,
+        cfg.gs,
+        layout.total_bytes() as f64 / 1e6
+    );
+    Ok(())
+}
+
+/// Per-matrix quantization error of a float checkpoint on a chosen
+/// weight lattice (generalizes the paper's Table IV error statistics to
+/// sub-INT8 formats).
+fn cmd_quant_error(args: &Args) -> Result<()> {
+    let ckpt = args.get("f32-ckpt").context("--f32-ckpt <path.lfck> required")?;
+    let fmt = quant_format(args)?;
+    let fm = llamaf::ckpt::read_f32_model(Path::new(ckpt))?;
+    let cfg = fm.cfg;
+    let gs = cfg.gs;
+    println!("quantization error of {ckpt} on the {fmt} lattice (gs={gs}):");
+    let mut total = llamaf::quant::QuantErrorStats::default();
+    qe_row(&mut total, "tok_emb", &fm.tok_emb, cfg.vocab_size, cfg.dim, gs, fmt);
+    for (i, l) in fm.layers.iter().enumerate() {
+        qe_row(&mut total, &format!("L{i}.wq"), &l.wq, cfg.dim, cfg.dim, gs, fmt);
+        qe_row(&mut total, &format!("L{i}.wk"), &l.wk, cfg.kv_dim(), cfg.dim, gs, fmt);
+        qe_row(&mut total, &format!("L{i}.wv"), &l.wv, cfg.kv_dim(), cfg.dim, gs, fmt);
+        qe_row(&mut total, &format!("L{i}.wo"), &l.wo, cfg.dim, cfg.dim, gs, fmt);
+        qe_row(&mut total, &format!("L{i}.w1"), &l.w1, cfg.hidden_dim, cfg.dim, gs, fmt);
+        qe_row(&mut total, &format!("L{i}.w2"), &l.w2, cfg.dim, cfg.hidden_dim, gs, fmt);
+        qe_row(&mut total, &format!("L{i}.w3"), &l.w3, cfg.hidden_dim, cfg.dim, gs, fmt);
+    }
+    qe_row(&mut total, "cls", &fm.cls, cfg.vocab_size, cfg.dim, gs, fmt);
+    println!("  {:<14} rms {:.6}  {}", "TOTAL", total.rms(), total.row());
+    Ok(())
+}
+
+/// Print one `quant-error` table row and fold the tensor into `total`.
+fn qe_row(
+    total: &mut llamaf::quant::QuantErrorStats,
+    name: &str,
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    gs: usize,
+    fmt: llamaf::quant::FormatId,
+) {
+    let st = llamaf::quant::error_stats_fmt(data, rows, cols, gs, fmt);
+    println!("  {name:<14} rms {:.6}  {}", st.rms(), st.row());
+    total.add_tensor_fmt(data, rows, cols, gs, fmt);
 }
 
 /// Compare two `bench-json/` directories (previous vs current run) case
@@ -370,14 +460,17 @@ fn cmd_info(args: &Args) -> Result<()> {
     for ck in ["nano_q8.lfq8", "nano_f32.lfck"] {
         let p = Path::new(art).join(ck);
         if p.exists() {
-            let (cfg, quant) = llamaf::ckpt::peek_config(&p)?;
+            let (cfg, fmt) = llamaf::ckpt::peek_config(&p)?;
             println!(
                 "checkpoint {ck}: dim={} hidden={} layers={} vocab={} ({})",
                 cfg.dim,
                 cfg.hidden_dim,
                 cfg.n_layers,
                 cfg.vocab_size,
-                if quant { "W8A8" } else { "f32" }
+                match fmt {
+                    Some(f) => f.name(),
+                    None => "f32",
+                }
             );
         }
     }

@@ -403,6 +403,9 @@ pub struct BatchMetrics {
     /// Streaming granularity label; empty until the decode thread starts
     /// a streamer (resident serving never sets it).
     granularity: Mutex<&'static str>,
+    /// Weight wire-format label of the serving model (`q8`, `q4_0`,
+    /// `q5_0`); empty until the decode thread records it.
+    quant: Mutex<&'static str>,
     occupancy: Mutex<Histogram>,
     profile: Mutex<ForwardProfile>,
     /// Requests admitted into the active set (once per request).
@@ -601,6 +604,23 @@ impl BatchMetrics {
         }
     }
 
+    /// Record the serving model's weight format label (once, at
+    /// decode-thread start).
+    pub fn set_quant(&self, label: &'static str) {
+        *self.quant.lock().unwrap() = label;
+    }
+
+    /// Weight wire-format label of the serving model.  Historical
+    /// deployments were all INT8, so an unset label reads as `q8`.
+    pub fn quant(&self) -> &'static str {
+        let q = *self.quant.lock().unwrap();
+        if q.is_empty() {
+            "q8"
+        } else {
+            q
+        }
+    }
+
     /// Mean armed-ring occupancy observed by the streamer — > 0 means the
     /// prefetch pipeline genuinely ran ahead of compute.
     pub fn ring_occupancy(&self) -> f64 {
@@ -637,7 +657,8 @@ impl BatchMetrics {
         format!(
             "batch_steps={} batch_tokens={} batch_mean={:.2} batch_max={:.0} \
              bytes_staged={} bytes_per_tok={:.0} prefetch_wait_ms={:.3} \
-             prefetch_depth={} ring_occ={:.2} granularity={} stage_mb_s={:.2} \
+             prefetch_depth={} ring_occ={:.2} granularity={} quant={} \
+             stage_mb_s={:.2} \
              mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} matrix_pct={:.0} \
              admission_ms={:.3} prefill_chunk={} chunk_feeds={}",
             self.steps(),
@@ -650,6 +671,7 @@ impl BatchMetrics {
             self.ring_depth(),
             self.ring_occupancy(),
             self.granularity(),
+            self.quant(),
             self.stage_mb_s(),
             mw[0],
             mw[1],
@@ -767,6 +789,7 @@ mod tests {
         m.set_ring_depth(4);
         m.set_ring_occupancy(2.25);
         m.set_granularity("matrix");
+        m.set_quant("q4_0");
         m.set_staging_time(0.005);
         m.set_unit_waits([0.001, 0.002, 0.0, 0.0, 0.0005]);
         assert_eq!(m.ring_depth(), 4);
@@ -783,6 +806,7 @@ mod tests {
             "prefetch_depth=4",
             "ring_occ=2.25",
             "granularity=matrix",
+            "quant=q4_0",
             "stage_mb_s=2.00",
             "mat_wait_ms=1.000/2.000/0.000/0.000/0.500",
             "admission_ms=0.000",
@@ -818,6 +842,7 @@ mod tests {
         assert_eq!(m.occupancy_mean(), 0.0);
         assert_eq!(m.steps(), 0);
         assert_eq!(m.granularity(), "none", "unset granularity reads as none");
+        assert_eq!(m.quant(), "q8", "unset quant label reads as the historical q8");
         assert_eq!(m.unit_wait_ms(), [0.0; MAT_WAIT_UNITS]);
     }
 

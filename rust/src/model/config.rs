@@ -130,16 +130,23 @@ impl LlamaConfig {
         2 * self.vocab_size * self.dim + self.n_layers * per_layer + self.dim
     }
 
-    /// Size of one transformer layer's quantized stream (int8 + f32 scales
-    /// + f32 norms) — the paper's per-layer DDR buffer (§III-B: 111.5 MB
-    /// for all-layers-resident TinyLlama would be 1.1 GB).
+    /// Size of one transformer layer's INT8 quantized stream (int8 + f32
+    /// scales + f32 norms) — the paper's per-layer DDR buffer (§III-B:
+    /// 111.5 MB for all-layers-resident TinyLlama would be 1.1 GB).
     pub fn layer_stream_bytes(&self) -> usize {
-        let q8 = |elems: usize| elems + 4 * elems / self.gs;
+        self.layer_stream_bytes_fmt(crate::quant::FormatId::Q8)
+    }
+
+    /// [`LlamaConfig::layer_stream_bytes`] on an arbitrary weight wire
+    /// format — packed payload + f32 scales + f32 norms.
+    pub fn layer_stream_bytes_fmt(&self, fmt: crate::quant::FormatId) -> usize {
+        let f = fmt.format();
+        let q = |elems: usize| elems / self.gs * (f.group_payload_bytes(self.gs) + 4);
         2 * self.dim * 4 // att_norm + ffn_norm (f32)
-            + q8(self.dim * self.dim) // wq
-            + q8(2 * self.kv_dim() * self.dim) // wk, wv
-            + q8(self.dim * self.dim) // wo
-            + q8(3 * self.hidden_dim * self.dim) // w1, w2, w3
+            + q(self.dim * self.dim) // wq
+            + q(2 * self.kv_dim() * self.dim) // wk, wv
+            + q(self.dim * self.dim) // wo
+            + q(3 * self.hidden_dim * self.dim) // w1, w2, w3
     }
 
     /// Paper Table I rows: (name, rows, cols, quantized).
@@ -199,6 +206,18 @@ mod tests {
         // embeddings; one TinyLlama layer block is ~45 MB.
         let b = TINYLLAMA_1_1B.layer_stream_bytes();
         assert!(b > 40_000_000 && b < 50_000_000, "bytes {b}");
+    }
+
+    #[test]
+    fn q4_layer_stream_roughly_halves_q8() {
+        use crate::quant::FormatId;
+        let c = TINYLLAMA_1_1B;
+        assert_eq!(c.layer_stream_bytes(), c.layer_stream_bytes_fmt(FormatId::Q8));
+        let q8 = c.layer_stream_bytes_fmt(FormatId::Q8) as f64;
+        let q4 = c.layer_stream_bytes_fmt(FormatId::Q40) as f64;
+        let q5 = c.layer_stream_bytes_fmt(FormatId::Q50) as f64;
+        assert!(q4 / q8 <= 0.55, "q4/q8 = {:.3}", q4 / q8);
+        assert!(q5 < q8 && q4 < q5);
     }
 
     #[test]

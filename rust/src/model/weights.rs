@@ -5,7 +5,7 @@
 //! as one (2·hidden, dim) tensor, so each becomes a single kernel launch.
 
 use crate::model::LlamaConfig;
-use crate::quant::QuantizedTensor;
+use crate::quant::{FormatId, QuantizedTensor};
 use crate::util::Rng;
 
 /// One transformer layer, quantized + fused.
@@ -35,7 +35,7 @@ impl QuantLayer {
 
     /// Clone one matrix-granular chunk of this layer — how in-memory
     /// fetchers serve sub-layer staging requests (the disk path reads the
-    /// same chunks directly via `ckpt::Q8LayerSource::fetch_matrix`).
+    /// same chunks directly via `ckpt::CkptSource::fetch_matrix`).
     pub fn chunk(&self, unit: MatrixUnit) -> LayerChunk {
         match unit {
             MatrixUnit::Norms => LayerChunk::Norms {
@@ -163,17 +163,33 @@ impl QuantModel {
     /// Synthetic quantized model with N(0, std)-shaped weights, used for
     /// the TinyLlama-geometry performance experiments (DESIGN.md §5.2).
     pub fn synthetic(cfg: LlamaConfig, seed: u64) -> Self {
+        Self::synthetic_fmt(cfg, seed, FormatId::Q8)
+    }
+
+    /// [`QuantModel::synthetic`] on an arbitrary weight lattice.  The Q8
+    /// draw sequence is unchanged (same seed => same Q8 model as before);
+    /// narrower formats fold the same int8 draws onto their lattice so
+    /// the weight spread survives the clamp.
+    pub fn synthetic_fmt(cfg: LlamaConfig, seed: u64, fmt: FormatId) -> Self {
         let mut rng = Rng::new(seed);
         let gs = cfg.gs;
         let std = 0.02f32;
+        let qmax = fmt.qmax() as i32;
         let mk = |rng: &mut Rng, rows: usize, cols: usize| {
             // draw int8 + scales directly: statistically equivalent to
             // quantizing N(0, std) weights, ~30x faster to build at 1.1B
-            let q = rng.i8_vec(rows * cols);
+            let mut q = rng.i8_vec(rows * cols);
+            if fmt != FormatId::Q8 {
+                // fold onto the narrow lattice instead of clamping, which
+                // would pile ~90% of draws onto the endpoints
+                for v in &mut q {
+                    *v = ((*v as i32 + 128) % (2 * qmax + 1) - qmax) as i8;
+                }
+            }
             let s = (0..rows * cols / gs)
-                .map(|_| (rng.next_f32() * 0.5 + 0.75) * (3.0 * std / 127.0))
+                .map(|_| (rng.next_f32() * 0.5 + 0.75) * (3.0 * std / qmax as f32))
                 .collect();
-            QuantizedTensor { q, s, rows, cols, gs }
+            QuantizedTensor { q, s, rows, cols, gs, fmt }
         };
         let layers = (0..cfg.n_layers)
             .map(|_| QuantLayer {
@@ -196,11 +212,16 @@ impl QuantModel {
 
     /// Quantize a float model (post-training quantization, paper §III-A).
     pub fn from_float(fm: &FloatModel) -> Self {
+        Self::from_float_fmt(fm, FormatId::Q8)
+    }
+
+    /// Post-training quantization onto an arbitrary [`FormatId`] lattice.
+    pub fn from_float_fmt(fm: &FloatModel, fmt: FormatId) -> Self {
         let cfg = fm.cfg;
         let gs = cfg.gs;
         let kv = cfg.kv_dim();
         let q = |data: &[f32], rows: usize, cols: usize| {
-            QuantizedTensor::from_f32(data, rows, cols, gs)
+            QuantizedTensor::from_f32_fmt(data, rows, cols, gs, fmt)
         };
         let layers = fm
             .layers
@@ -228,6 +249,12 @@ impl QuantModel {
             final_norm: fm.final_norm.clone(),
             cls: q(&fm.cls, cfg.vocab_size, cfg.dim),
         }
+    }
+
+    /// Weight lattice / wire format of this model (uniform across
+    /// tensors by construction).
+    pub fn fmt(&self) -> FormatId {
+        self.tok_emb.fmt
     }
 
     pub fn total_stream_bytes(&self) -> usize {
@@ -349,6 +376,46 @@ mod tests {
             assert_eq!(u.index(), i);
         }
         assert_eq!(MatrixUnit::W2.name(), "w2");
+    }
+
+    #[test]
+    fn synthetic_fmt_q8_is_plain_synthetic() {
+        // the Q8 draw sequence is pinned: benches and golden runs depend
+        // on synthetic(NANO, seed) producing the same model as ever
+        let a = QuantModel::synthetic(NANO, 7);
+        let b = QuantModel::synthetic_fmt(NANO, 7, FormatId::Q8);
+        assert_eq!(a.tok_emb, b.tok_emb);
+        assert_eq!(a.layers[0].wqkv, b.layers[0].wqkv);
+        assert_eq!(a.fmt(), FormatId::Q8);
+    }
+
+    #[test]
+    fn synthetic_fmt_respects_lattice_and_keeps_spread() {
+        for fmt in FormatId::ALL {
+            let qm = QuantModel::synthetic_fmt(tiny_cfg(), 11, fmt);
+            assert_eq!(qm.fmt(), fmt);
+            let qmax = fmt.qmax() as i8;
+            let w = &qm.layers[0].w13;
+            assert!(w.q.iter().all(|&v| (-qmax..=qmax).contains(&v)), "{fmt}");
+            // folding (not clamping) must keep interior lattice points common
+            let interior =
+                w.q.iter().filter(|&&v| v.abs() < qmax).count() as f64 / w.q.len() as f64;
+            assert!(interior > 0.5, "{fmt}: only {interior:.2} interior points");
+        }
+    }
+
+    #[test]
+    fn from_float_fmt_narrows_the_lattice() {
+        let fm = FloatModel::random(tiny_cfg(), 12);
+        let q8 = QuantModel::from_float_fmt(&fm, FormatId::Q8);
+        let q4 = QuantModel::from_float_fmt(&fm, FormatId::Q40);
+        assert_eq!(q8.layers[0].w2.q.len(), q4.layers[0].w2.q.len());
+        assert!(q4.layers[0].w2.q.iter().all(|&v| (-7..=7).contains(&v)));
+        // same reals, narrower lattice => larger step => larger scales
+        assert!(q4.layers[0].w2.s[0] > q8.layers[0].w2.s[0]);
+        // and the streamed footprint roughly halves
+        let ratio = q4.total_stream_bytes() as f64 / q8.total_stream_bytes() as f64;
+        assert!(ratio < 0.62, "q4/q8 stream bytes ratio {ratio:.3}");
     }
 
     #[test]

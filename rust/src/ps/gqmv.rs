@@ -28,7 +28,7 @@
 use anyhow::Result;
 use std::sync::Arc;
 
-use crate::quant::QuantizedTensor;
+use crate::quant::{PackedTensor, QuantizedTensor};
 use crate::util::ThreadPool;
 
 /// A GQMV execution backend.  `xq`/`xs` are the run-time-quantized
@@ -120,6 +120,25 @@ pub trait GqmvExec {
         for (w, out) in ws.iter().zip(outs.iter_mut()) {
             self.gqmv_batch(xq, xs, w, out, batch)?;
         }
+        Ok(())
+    }
+
+    /// Multiply a **packed** weight tensor by one quantized activation
+    /// vector, running the format's packed row kernel
+    /// ([`crate::quant::QuantFormat::gqmv_rows_packed`]) directly over
+    /// the wire bytes — no unpacked staging copy.  Bit-identical to
+    /// unpacking `w` and calling [`GqmvExec::gqmv`]: the packed kernels
+    /// replay the same blocked loop nest and cast chain.  The default
+    /// runs single-threaded; backends override to parallelize rows.
+    fn gqmv_packed(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        w: &PackedTensor,
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_shapes_packed(xq, xs, w, out)?;
+        w.fmt.format().gqmv_rows_packed(xq, xs, w, 0, out);
         Ok(())
     }
 
@@ -418,6 +437,29 @@ impl GqmvExec for ThreadedGqmv {
         Ok(())
     }
 
+    fn gqmv_packed(
+        &mut self,
+        xq: &[i8],
+        xs: &[f32],
+        w: &PackedTensor,
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_shapes_packed(xq, xs, w, out)?;
+        let f = w.fmt.format();
+        if w.rows * w.cols < self.min_parallel_macs {
+            f.gqmv_rows_packed(xq, xs, w, 0, out);
+            return Ok(());
+        }
+        // Same disjoint row-block split as the unpacked path; each part
+        // runs the packed kernel from its own row0 over the shared bytes.
+        let k = self.pool.workers().min(w.rows).max(1);
+        let parts = split_rows(out, w.rows.div_ceil(k));
+        self.pool.run_parts(parts, |(row0, chunk)| {
+            f.gqmv_rows_packed(xq, xs, w, row0, chunk);
+        });
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "ps-threaded"
     }
@@ -460,6 +502,24 @@ pub(crate) fn check_shapes(
     xq: &[i8],
     xs: &[f32],
     w: &QuantizedTensor,
+    out: &mut [f32],
+) -> Result<()> {
+    if xq.len() != w.cols {
+        anyhow::bail!("xq len {} != cols {}", xq.len(), w.cols);
+    }
+    if xs.len() != w.cols / w.gs {
+        anyhow::bail!("xs len {} != groups {}", xs.len(), w.cols / w.gs);
+    }
+    if out.len() != w.rows {
+        anyhow::bail!("out len {} != rows {}", out.len(), w.rows);
+    }
+    Ok(())
+}
+
+pub(crate) fn check_shapes_packed(
+    xq: &[i8],
+    xs: &[f32],
+    w: &PackedTensor,
     out: &mut [f32],
 ) -> Result<()> {
     if xq.len() != w.cols {
@@ -589,6 +649,7 @@ mod tests {
             rows: 1,
             cols: 4,
             gs: 4,
+            fmt: crate::quant::FormatId::Q8,
         };
         let xq = vec![10i8, 20, -30, 40];
         let xs = vec![0.1f32];
@@ -624,6 +685,7 @@ mod tests {
             rows: 1,
             cols: n,
             gs,
+            fmt: crate::quant::FormatId::Q8,
         };
         let xq = vec![127i8; n];
         let xs = vec![0.02f32; n / gs];
@@ -884,6 +946,44 @@ mod tests {
     }
 
     #[test]
+    fn packed_dispatch_bit_identical_to_unpacked_per_format() {
+        // GqmvExec::gqmv_packed must agree bit-for-bit with gqmv on the
+        // unpacked tensor, for every format and backend (scalar default
+        // impl + the threaded row-split override)
+        use crate::quant::FormatId;
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut rng = Rng::new(77);
+        for fmt in FormatId::ALL {
+            for (m, n, gs) in [(8usize, 256usize, 256usize), (21, 256, 64)] {
+                let w = QuantizedTensor::from_f32_fmt(&rng.normal_vec(m * n, 0.5), m, n, gs, fmt);
+                let (xq, xs) = quantize_activation(&rng.normal_vec(n, 1.0), gs);
+                let p = PackedTensor::pack(&w);
+                let mut want = vec![0.0; m];
+                ScalarGqmv.gqmv(&xq, &xs, &w, &mut want).unwrap();
+                let mut got = vec![0.0; m];
+                ScalarGqmv.gqmv_packed(&xq, &xs, &p, &mut got).unwrap();
+                assert_eq!(got, want, "scalar packed {} m={m} n={n} gs={gs}", fmt.name());
+                let mut th = ThreadedGqmv::new(pool.clone());
+                th.min_parallel_macs = 0; // force threading
+                let mut got_th = vec![0.0; m];
+                th.gqmv_packed(&xq, &xs, &p, &mut got_th).unwrap();
+                assert_eq!(got_th, want, "threaded packed {} m={m} n={n} gs={gs}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_shape_mismatches_rejected() {
+        let (xq, xs, w) = random_case(8, 256, 256, 31);
+        let p = PackedTensor::pack(&w);
+        let mut out = vec![0.0; 8];
+        assert!(ScalarGqmv.gqmv_packed(&xq[..128], &xs, &p, &mut out).is_err());
+        assert!(ScalarGqmv.gqmv_packed(&xq, &xs[..0], &p, &mut out).is_err());
+        let mut short = vec![0.0; 4];
+        assert!(ScalarGqmv.gqmv_packed(&xq, &xs, &p, &mut short).is_err());
+    }
+
+    #[test]
     fn matches_golden_fixture_if_present() {
         // artifacts/golden_gqmv_*.bin are written by python aot.py from the
         // numpy oracle; when built, verify bit-level agreement.
@@ -911,7 +1011,8 @@ mod tests {
         let expect = read_f32(&paths[4]);
         let (m, gs) = (expect.len(), 256);
         let n = wq.len() / m;
-        let w = QuantizedTensor { q: wq, s: ws, rows: m, cols: n, gs };
+        let w =
+            QuantizedTensor { q: wq, s: ws, rows: m, cols: n, gs, fmt: crate::quant::FormatId::Q8 };
         let mut out = vec![0.0; m];
         ScalarGqmv.gqmv(&xq, &xs, &w, &mut out).unwrap();
         for i in 0..m {

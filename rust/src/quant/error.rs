@@ -1,7 +1,7 @@
 //! Quantization error statistics — reproduces paper Table IV and the
 //! error-percentage figures quoted in §V-B (mean 3.30%, std 11.57%).
 
-use super::QuantizedTensor;
+use super::{FormatId, QuantizedTensor};
 use crate::util::OnlineStats;
 
 /// Statistics of |rhat - r| and of the relative error percentage.
@@ -12,9 +12,23 @@ pub struct QuantErrorStats {
 }
 
 impl QuantErrorStats {
-    /// Accumulate errors for one float tensor quantized at group size `gs`.
+    /// Accumulate errors for one float tensor quantized at group size `gs`
+    /// on the INT8 lattice.
     pub fn add_tensor(&mut self, data: &[f32], rows: usize, cols: usize, gs: usize) {
-        let t = QuantizedTensor::from_f32(data, rows, cols, gs);
+        self.add_tensor_fmt(data, rows, cols, gs, FormatId::Q8)
+    }
+
+    /// [`QuantErrorStats::add_tensor`] on an arbitrary weight lattice —
+    /// what `llamaf quant-error --format` sweeps to compare formats.
+    pub fn add_tensor_fmt(
+        &mut self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        gs: usize,
+        fmt: FormatId,
+    ) {
+        let t = QuantizedTensor::from_f32_fmt(data, rows, cols, gs, fmt);
         let back = t.dequantize();
         for i in 0..data.len() {
             let err = (back[i] - data[i]).abs() as f64;
@@ -24,6 +38,12 @@ impl QuantErrorStats {
                 self.pct.push(err / r * 100.0);
             }
         }
+    }
+
+    /// Root-mean-square absolute error (the per-matrix figure
+    /// `llamaf quant-error` prints).
+    pub fn rms(&self) -> f64 {
+        (self.abs.mean().powi(2) + self.abs.std().powi(2)).sqrt()
     }
 
     pub fn row(&self) -> String {
@@ -39,10 +59,21 @@ impl QuantErrorStats {
     }
 }
 
-/// One-shot helper for a single tensor.
+/// One-shot helper for a single tensor (INT8 lattice).
 pub fn error_stats(data: &[f32], rows: usize, cols: usize, gs: usize) -> QuantErrorStats {
+    error_stats_fmt(data, rows, cols, gs, FormatId::Q8)
+}
+
+/// One-shot helper for a single tensor on an arbitrary lattice.
+pub fn error_stats_fmt(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    gs: usize,
+    fmt: FormatId,
+) -> QuantErrorStats {
     let mut s = QuantErrorStats::default();
-    s.add_tensor(data, rows, cols, gs);
+    s.add_tensor_fmt(data, rows, cols, gs, fmt);
     s
 }
 
@@ -64,6 +95,34 @@ mod tests {
         assert!(st.abs.mean() < st.abs.max());
         // paper-order percentages: a few percent mean
         assert!(st.pct.mean() > 0.1 && st.pct.mean() < 20.0, "pct {}", st.pct.mean());
+    }
+
+    #[test]
+    fn narrower_lattices_cost_monotonically_more_error() {
+        let mut rng = Rng::new(3);
+        let data = rng.normal_vec(128 * 128, 0.02f32);
+        let errs: Vec<f64> = FormatId::ALL
+            .iter()
+            .map(|&f| error_stats_fmt(&data, 128, 128, 64, f).abs.mean())
+            .collect();
+        // ALL = [Q8, Q40, Q50]: q8 < q5_0 < q4_0 mean error
+        assert!(errs[0] < errs[2] && errs[2] < errs[1], "{errs:?}");
+        // and each format's mean error is about step/4:
+        // step = group_absmax/qmax ~ 3 sigma/qmax for gs=64
+        for (&fmt, &e) in FormatId::ALL.iter().zip(&errs) {
+            let step = 3.0 * 0.02 / fmt.qmax() as f64;
+            assert!(e < step, "{fmt}: mean {e} vs step {step}");
+            assert!(e > step / 16.0, "{fmt}: mean {e} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn rms_between_mean_and_max() {
+        let mut rng = Rng::new(4);
+        let data = rng.normal_vec(64 * 64, 0.02f32);
+        let st = error_stats(&data, 64, 64, 32);
+        assert!(st.rms() >= st.abs.mean());
+        assert!(st.rms() <= st.abs.max());
     }
 
     #[test]

@@ -1,0 +1,580 @@
+//! The quantization-format abstraction: `QuantFormat`.
+//!
+//! PR 5's streaming machinery (matrix-granular offsets, the staging
+//! ring) and the GQMV kernels are format-agnostic in *shape* — they only
+//! care about rows, group counts and byte totals — but until this module
+//! every byte count in the tree hardcoded INT8's "one byte per weight".
+//! `QuantFormat` owns everything a format actually decides:
+//!
+//! * the **lattice** — `qmax`, so quantize/dequantize share one generic
+//!   group routine (scale `S = max|r| / qmax`, `q = clamp(round(r/S))`);
+//! * the **wire encoding** — `pack_group`/`unpack_group` turn lattice
+//!   values into the packed bytes a checkpoint stores and the AXI/DDR
+//!   transfer model bills (`bytes_for`), Q4_0 packing two weights per
+//!   byte and Q5_0 adding a 1-bit plane;
+//! * a **`gqmv_rows`-compatible packed row kernel** — group-outer /
+//!   row-inner in [`ROW_BLOCK`]-row cache blocks over the *packed* bytes,
+//!   unpacking each group inline, with the exact Algorithm-1 cast chain
+//!   (i16 products, i32 group sums, f32 scaled accumulation in ascending
+//!   group order) so it is bit-identical to the unpacked kernel.
+//!
+//! The in-memory compute form stays one unpacked `i8` per weight
+//! ([`QuantizedTensor`]) for every format: sub-INT8 lattices are subsets
+//! of INT8, so the entire forward path — host and device — runs
+//! unchanged and stays bit-exact per format.  What a format changes is
+//! the *wire* form: checkpoint bytes, staged bytes, bytes per token.
+//! (On the FPGA this is the post-DDR nibble-unpack stage; in the host
+//! sim it is [`PackedTensor::unpack`] at the staging boundary.)
+//!
+//! Block geometry note: ggml's Q4_0/Q5_0 use 32-element blocks; here a
+//! block is one quantization **group** of the model's `gs` (the paper's
+//! g = 256), because the GQMV cast chain requires weight scale groups to
+//! coincide with activation groups.  The GGUF importer re-groups on
+//! import (`ckpt/gguf.rs`).
+
+use crate::quant::{round_half_away, QuantizedTensor};
+
+/// Rows per cache block of the packed row kernels — kept equal to the
+/// unpacked kernel's [`crate::ps::gqmv::ROW_BLOCK`] so the two loop
+/// nests are step-for-step twins.
+pub const ROW_BLOCK: usize = crate::ps::gqmv::ROW_BLOCK;
+
+/// Identifies a quantization format (the `--quant-format` values).
+///
+/// This is the plain-old-data handle stored on tensors and checkpoints;
+/// behaviour lives behind [`FormatId::format`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FormatId {
+    /// Group-wise symmetric INT8 (the paper's format; magic `LFQ8`).
+    Q8,
+    /// 4-bit group format, two weights per byte (magic `LFQ4`).
+    Q40,
+    /// 5-bit group format, nibble plane + 1-bit plane (magic `LFQ5`).
+    Q50,
+}
+
+static Q8_FORMAT: Q8Format = Q8Format;
+static Q40_FORMAT: Q40Format = Q40Format;
+static Q50_FORMAT: Q50Format = Q50Format;
+
+impl FormatId {
+    /// Every supported format, in CLI/doc order.
+    pub const ALL: [FormatId; 3] = [FormatId::Q8, FormatId::Q40, FormatId::Q50];
+
+    /// Stable lowercase name (CLI values, STATS `quant=` label, bench
+    /// case tags).
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatId::Q8 => "q8",
+            FormatId::Q40 => "q4_0",
+            FormatId::Q50 => "q5_0",
+        }
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<FormatId> {
+        match s {
+            "q8" | "q8_0" | "int8" => Some(FormatId::Q8),
+            "q4" | "q4_0" => Some(FormatId::Q40),
+            "q5" | "q5_0" => Some(FormatId::Q50),
+            _ => None,
+        }
+    }
+
+    /// Checkpoint magic for this format (`ckpt` module file headers).
+    pub fn magic(self) -> [u8; 4] {
+        match self {
+            FormatId::Q8 => *b"LFQ8",
+            FormatId::Q40 => *b"LFQ4",
+            FormatId::Q50 => *b"LFQ5",
+        }
+    }
+
+    /// Inverse of [`FormatId::magic`].
+    pub fn from_magic(magic: &[u8; 4]) -> Option<FormatId> {
+        FormatId::ALL.into_iter().find(|f| &f.magic() == magic)
+    }
+
+    /// The behaviour object for this format.
+    pub fn format(self) -> &'static dyn QuantFormat {
+        match self {
+            FormatId::Q8 => &Q8_FORMAT,
+            FormatId::Q40 => &Q40_FORMAT,
+            FormatId::Q50 => &Q50_FORMAT,
+        }
+    }
+
+    /// Largest lattice magnitude (`127` / `7` / `15`).
+    pub fn qmax(self) -> i8 {
+        self.format().qmax()
+    }
+}
+
+impl std::fmt::Display for FormatId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Behaviour of one quantization format: lattice, wire encoding, byte
+/// accounting, and a packed row kernel.  Implementations are stateless
+/// statics reached through [`FormatId::format`].
+pub trait QuantFormat: Sync {
+    /// The identifier this behaviour object belongs to.
+    fn id(&self) -> FormatId;
+
+    /// Stable lowercase name (same as [`FormatId::name`]).
+    fn name(&self) -> &'static str {
+        self.id().name()
+    }
+
+    /// Largest representable lattice magnitude: quantization clamps to
+    /// `[-qmax, qmax]` and scales by `max|r| / qmax`.
+    fn qmax(&self) -> i8;
+
+    /// Packed payload bytes for one `gs`-sized group, excluding the f32
+    /// scale.  Panics if `gs` is incompatible with the format's packing
+    /// (Q4 needs `gs % 2 == 0`, Q5 needs `gs % 8 == 0`).
+    fn group_payload_bytes(&self, gs: usize) -> usize;
+
+    /// Total wire bytes of a `rows × cols` tensor at group size `gs`:
+    /// packed payload plus one f32 scale per group.  This is what the
+    /// checkpoint stores per tensor and what the AXI/DDR transfer model
+    /// bills per staged copy.
+    fn bytes_for(&self, rows: usize, cols: usize, gs: usize) -> usize {
+        let groups = rows * cols / gs;
+        groups * (self.group_payload_bytes(gs) + 4)
+    }
+
+    /// Quantize one group onto this format's lattice, returning the
+    /// scale.  Generic over `qmax`; for [`FormatId::Q8`] this is
+    /// bit-exact with [`crate::quant::quantize_group`].
+    fn quantize_group_into(&self, chunk: &[f32], q: &mut [i8]) -> f32 {
+        debug_assert_eq!(chunk.len(), q.len());
+        let qmax = self.qmax() as f32;
+        let mut max = 0f32;
+        for &v in chunk {
+            max = max.max(v.abs());
+        }
+        let scale = max / qmax;
+        let inv = if scale == 0.0 { 0.0 } else { 1.0 / scale };
+        for (dst, &v) in q.iter_mut().zip(chunk) {
+            *dst = round_half_away(v * inv).clamp(-qmax, qmax) as i8;
+        }
+        scale
+    }
+
+    /// Pack one group of lattice values (each in `[-qmax, qmax]`) into
+    /// `group_payload_bytes(q.len())` wire bytes.
+    fn pack_group(&self, q: &[i8], out: &mut [u8]);
+
+    /// Inverse of [`QuantFormat::pack_group`]; exact for lattice values.
+    fn unpack_group(&self, packed: &[u8], q: &mut [i8]);
+
+    /// Cache-blocked row kernel over the **packed** bytes: computes
+    /// `out.len()` consecutive output rows of Algorithm 1 starting at
+    /// row `row0` of `w`, unpacking each weight group inline.  The loop
+    /// nest and cast chain mirror [`crate::ps::gqmv::gqmv_rows`]
+    /// exactly, so outputs are bit-identical to unpacking first and
+    /// running the unpacked kernel (pinned by tests).
+    fn gqmv_rows_packed(
+        &self,
+        xq: &[i8],
+        xs: &[f32],
+        w: &PackedTensor,
+        row0: usize,
+        out: &mut [f32],
+    ) {
+        let gs = w.gs;
+        let groups = xq.len() / gs;
+        let gpb = self.group_payload_bytes(gs);
+        let row_payload = groups * gpb;
+        let mut scratch = vec![0i8; gs];
+        let rows = out.len();
+        let mut r = 0;
+        while r < rows {
+            let rb = ROW_BLOCK.min(rows - r);
+            let mut acc = [0.0f32; ROW_BLOCK];
+            for g in 0..groups {
+                let base = g * gs;
+                let xg = &xq[base..base + gs];
+                let xscale = xs[g];
+                for (i, a) in acc.iter_mut().enumerate().take(rb) {
+                    let row = row0 + r + i;
+                    let pbase = row * row_payload + g * gpb;
+                    self.unpack_group(&w.data[pbase..pbase + gpb], &mut scratch);
+                    let group_sum: i32 = scratch
+                        .iter()
+                        .zip(xg)
+                        .map(|(&wv, &x)| ((wv as i16) * (x as i16)) as i32)
+                        .sum();
+                    *a += group_sum as f32 * (w.s[row * groups + g] * xscale);
+                }
+            }
+            out[r..r + rb].copy_from_slice(&acc[..rb]);
+            r += rb;
+        }
+    }
+}
+
+/// Group-wise symmetric INT8 — the paper's format (§II-B Eq. 1–2), one
+/// byte per weight on the wire.
+pub struct Q8Format;
+
+impl QuantFormat for Q8Format {
+    fn id(&self) -> FormatId {
+        FormatId::Q8
+    }
+
+    fn qmax(&self) -> i8 {
+        127
+    }
+
+    fn group_payload_bytes(&self, gs: usize) -> usize {
+        gs
+    }
+
+    fn pack_group(&self, q: &[i8], out: &mut [u8]) {
+        debug_assert_eq!(out.len(), q.len());
+        for (dst, &v) in out.iter_mut().zip(q) {
+            *dst = v as u8;
+        }
+    }
+
+    fn unpack_group(&self, packed: &[u8], q: &mut [i8]) {
+        debug_assert_eq!(packed.len(), q.len());
+        for (dst, &b) in q.iter_mut().zip(packed) {
+            *dst = b as i8;
+        }
+    }
+}
+
+/// 4-bit group format: lattice `[-7, 7]`, packed two weights per byte
+/// (weight `2k` in the low nibble of byte `k`, `2k+1` in the high
+/// nibble, biased by +8).  Halves the wire bytes of Q8 at the cost of
+/// ~16× coarser steps.
+pub struct Q40Format;
+
+impl QuantFormat for Q40Format {
+    fn id(&self) -> FormatId {
+        FormatId::Q40
+    }
+
+    fn qmax(&self) -> i8 {
+        7
+    }
+
+    fn group_payload_bytes(&self, gs: usize) -> usize {
+        assert!(gs % 2 == 0, "q4_0 packs two weights per byte; gs={gs} must be even");
+        gs / 2
+    }
+
+    fn pack_group(&self, q: &[i8], out: &mut [u8]) {
+        debug_assert_eq!(out.len(), q.len() / 2);
+        for (k, dst) in out.iter_mut().enumerate() {
+            let lo = (q[2 * k] + 8) as u8;
+            let hi = (q[2 * k + 1] + 8) as u8;
+            *dst = lo | (hi << 4);
+        }
+    }
+
+    fn unpack_group(&self, packed: &[u8], q: &mut [i8]) {
+        debug_assert_eq!(packed.len(), q.len() / 2);
+        for (k, &b) in packed.iter().enumerate() {
+            q[2 * k] = (b & 0x0F) as i8 - 8;
+            q[2 * k + 1] = (b >> 4) as i8 - 8;
+        }
+    }
+
+    fn gqmv_rows_packed(
+        &self,
+        xq: &[i8],
+        xs: &[f32],
+        w: &PackedTensor,
+        row0: usize,
+        out: &mut [f32],
+    ) {
+        // Specialized nibble-inline variant: no scratch buffer, each
+        // packed byte feeds two MACs directly.  Same blocked loop nest
+        // and cast chain as the generic path, so still bit-identical.
+        let gs = w.gs;
+        let groups = xq.len() / gs;
+        let gpb = gs / 2;
+        let row_payload = groups * gpb;
+        let rows = out.len();
+        let mut r = 0;
+        while r < rows {
+            let rb = ROW_BLOCK.min(rows - r);
+            let mut acc = [0.0f32; ROW_BLOCK];
+            for g in 0..groups {
+                let base = g * gs;
+                let xg = &xq[base..base + gs];
+                let xscale = xs[g];
+                for (i, a) in acc.iter_mut().enumerate().take(rb) {
+                    let row = row0 + r + i;
+                    let pbase = row * row_payload + g * gpb;
+                    let bytes = &w.data[pbase..pbase + gpb];
+                    let group_sum: i32 = bytes
+                        .iter()
+                        .zip(xg.chunks_exact(2))
+                        .map(|(&b, x2)| {
+                            let lo = ((b & 0x0F) as i16 - 8) * (x2[0] as i16);
+                            let hi = ((b >> 4) as i16 - 8) * (x2[1] as i16);
+                            lo as i32 + hi as i32
+                        })
+                        .sum();
+                    *a += group_sum as f32 * (w.s[row * groups + g] * xscale);
+                }
+            }
+            out[r..r + rb].copy_from_slice(&acc[..rb]);
+            r += rb;
+        }
+    }
+}
+
+/// 5-bit group format: lattice `[-15, 15]`, packed as a Q4-style nibble
+/// plane (low 4 bits of the +16-biased value) plus a 1-bit high plane
+/// (`gs/8` bytes, weight `8b + j` in bit `j` of plane byte `b`).
+pub struct Q50Format;
+
+impl QuantFormat for Q50Format {
+    fn id(&self) -> FormatId {
+        FormatId::Q50
+    }
+
+    fn qmax(&self) -> i8 {
+        15
+    }
+
+    fn group_payload_bytes(&self, gs: usize) -> usize {
+        assert!(gs % 8 == 0, "q5_0 packs a 1-bit plane per 8 weights; gs={gs} % 8 != 0");
+        gs / 2 + gs / 8
+    }
+
+    fn pack_group(&self, q: &[i8], out: &mut [u8]) {
+        let gs = q.len();
+        debug_assert_eq!(out.len(), gs / 2 + gs / 8);
+        let (nibbles, plane) = out.split_at_mut(gs / 2);
+        for (k, dst) in nibbles.iter_mut().enumerate() {
+            let lo = (q[2 * k] + 16) as u8 & 0x0F;
+            let hi = (q[2 * k + 1] + 16) as u8 & 0x0F;
+            *dst = lo | (hi << 4);
+        }
+        for (b, dst) in plane.iter_mut().enumerate() {
+            let mut bits = 0u8;
+            for j in 0..8 {
+                bits |= (((q[8 * b + j] + 16) as u8 >> 4) & 1) << j;
+            }
+            *dst = bits;
+        }
+    }
+
+    fn unpack_group(&self, packed: &[u8], q: &mut [i8]) {
+        let gs = q.len();
+        debug_assert_eq!(packed.len(), gs / 2 + gs / 8);
+        let (nibbles, plane) = packed.split_at(gs / 2);
+        for (k, &b) in nibbles.iter().enumerate() {
+            q[2 * k] = (b & 0x0F) as i8 - 16;
+            q[2 * k + 1] = (b >> 4) as i8 - 16;
+        }
+        for (b, &bits) in plane.iter().enumerate() {
+            for j in 0..8 {
+                q[8 * b + j] += (((bits >> j) & 1) as i8) << 4;
+            }
+        }
+    }
+}
+
+/// A tensor in its packed wire form: what a checkpoint stores per
+/// matrix and what the staging path transfers.  `data` is row-major
+/// groups of `fmt`'s packed payload; `s` is one f32 scale per group in
+/// the same order as [`QuantizedTensor::s`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    /// Wire encoding of `data`.
+    pub fmt: FormatId,
+    /// Packed payload: `rows × (cols/gs)` groups of
+    /// `group_payload_bytes(gs)` each, row-major.
+    pub data: Vec<u8>,
+    /// One f32 scale per group, row-major.
+    pub s: Vec<f32>,
+    /// Output rows.
+    pub rows: usize,
+    /// Input columns.
+    pub cols: usize,
+    /// Quantization group size (equals the model's activation gs).
+    pub gs: usize,
+}
+
+impl PackedTensor {
+    /// Pack an unpacked tensor into its format's wire encoding.
+    pub fn pack(t: &QuantizedTensor) -> PackedTensor {
+        let f = t.fmt.format();
+        let gpb = f.group_payload_bytes(t.gs);
+        let groups = t.s.len();
+        let mut data = vec![0u8; groups * gpb];
+        for g in 0..groups {
+            f.pack_group(&t.q[g * t.gs..(g + 1) * t.gs], &mut data[g * gpb..(g + 1) * gpb]);
+        }
+        PackedTensor { fmt: t.fmt, data, s: t.s.clone(), rows: t.rows, cols: t.cols, gs: t.gs }
+    }
+
+    /// Unpack back to the i8 compute form; exact (pack is lossless on
+    /// the lattice).
+    pub fn unpack(&self) -> QuantizedTensor {
+        let f = self.fmt.format();
+        let gpb = f.group_payload_bytes(self.gs);
+        let groups = self.s.len();
+        let mut q = vec![0i8; groups * self.gs];
+        for g in 0..groups {
+            f.unpack_group(
+                &self.data[g * gpb..(g + 1) * gpb],
+                &mut q[g * self.gs..(g + 1) * self.gs],
+            );
+        }
+        QuantizedTensor {
+            q,
+            s: self.s.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            gs: self.gs,
+            fmt: self.fmt,
+        }
+    }
+
+    /// Wire bytes of this tensor (packed payload + scales) — equals
+    /// `fmt.format().bytes_for(rows, cols, gs)`.
+    pub fn wire_bytes(&self) -> usize {
+        self.data.len() + 4 * self.s.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::gqmv::gqmv_rows;
+    use crate::quant::quantize_activation;
+    use crate::util::Rng;
+
+    #[test]
+    fn names_magics_and_parse_round_trip() {
+        for fmt in FormatId::ALL {
+            assert_eq!(FormatId::parse(fmt.name()), Some(fmt));
+            assert_eq!(FormatId::from_magic(&fmt.magic()), Some(fmt));
+            assert_eq!(fmt.format().id(), fmt);
+        }
+        assert_eq!(FormatId::parse("q4"), Some(FormatId::Q40));
+        assert_eq!(FormatId::parse("int8"), Some(FormatId::Q8));
+        assert_eq!(FormatId::parse("fp16"), None);
+        assert_eq!(FormatId::from_magic(b"LFCK"), None);
+    }
+
+    #[test]
+    fn bytes_for_matches_hand_counts() {
+        // one 2x256 tensor at gs=256: 2 groups
+        let (r, c, gs) = (2, 256, 256);
+        assert_eq!(FormatId::Q8.format().bytes_for(r, c, gs), 2 * (256 + 4));
+        assert_eq!(FormatId::Q40.format().bytes_for(r, c, gs), 2 * (128 + 4));
+        assert_eq!(FormatId::Q50.format().bytes_for(r, c, gs), 2 * (128 + 32 + 4));
+        // the acceptance ratio: q4_0 <= 0.55x q8 at the paper's gs
+        let q8 = FormatId::Q8.format().bytes_for(64, 256, 256) as f64;
+        let q4 = FormatId::Q40.format().bytes_for(64, 256, 256) as f64;
+        assert!(q4 / q8 <= 0.55, "q4/q8 = {}", q4 / q8);
+    }
+
+    #[test]
+    fn q8_quantize_group_matches_legacy() {
+        let mut rng = Rng::new(11);
+        let x = rng.normal_vec(256, 1.3);
+        let (legacy_q, legacy_s) = crate::quant::quantize_group(&x);
+        let mut q = vec![0i8; 256];
+        let s = FormatId::Q8.format().quantize_group_into(&x, &mut q);
+        assert_eq!(q, legacy_q);
+        assert_eq!(s, legacy_s);
+    }
+
+    #[test]
+    fn quantize_error_bounded_by_half_step() {
+        let mut rng = Rng::new(12);
+        for fmt in FormatId::ALL {
+            let f = fmt.format();
+            let x = rng.normal_vec(512, 2.1);
+            for chunk in x.chunks(64) {
+                let mut q = vec![0i8; chunk.len()];
+                let s = f.quantize_group_into(chunk, &mut q);
+                for (qi, &v) in q.iter().zip(chunk) {
+                    assert!(qi.abs() <= f.qmax(), "{fmt}: |{qi}| > qmax");
+                    let err = (*qi as f32 * s - v).abs();
+                    assert!(err <= s / 2.0 + 1e-7, "{fmt}: err {err} > S/2 {}", s / 2.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_exact_on_full_lattice() {
+        for fmt in FormatId::ALL {
+            let f = fmt.format();
+            let qmax = f.qmax() as i32;
+            // every lattice value appears, plus the extremes at the ends
+            let gs = 64;
+            let q: Vec<i8> =
+                (0..gs).map(|i| ((i as i32 * 7 + 3) % (2 * qmax + 1) - qmax) as i8).collect();
+            let mut packed = vec![0u8; f.group_payload_bytes(gs)];
+            f.pack_group(&q, &mut packed);
+            let mut back = vec![0i8; gs];
+            f.unpack_group(&packed, &mut back);
+            assert_eq!(back, q, "{fmt}: pack/unpack not lossless");
+        }
+    }
+
+    #[test]
+    fn packed_tensor_round_trips_and_counts_bytes() {
+        let mut rng = Rng::new(13);
+        for fmt in FormatId::ALL {
+            let (rows, cols, gs) = (5, 128, 32);
+            let x = rng.normal_vec(rows * cols, 0.9);
+            let t = QuantizedTensor::from_f32_fmt(&x, rows, cols, gs, fmt);
+            let p = PackedTensor::pack(&t);
+            assert_eq!(p.wire_bytes(), fmt.format().bytes_for(rows, cols, gs));
+            assert_eq!(p.wire_bytes(), t.stream_bytes());
+            assert_eq!(p.unpack(), t, "{fmt}: packed round trip diverged");
+        }
+    }
+
+    #[test]
+    fn packed_kernel_bit_identical_to_unpacked() {
+        let mut rng = Rng::new(14);
+        // row counts off the ROW_BLOCK boundary on purpose
+        for (rows, cols, gs) in [(1usize, 256usize, 256usize), (7, 256, 64), (21, 512, 128)] {
+            let x = rng.normal_vec(cols, 1.0);
+            let (xq, xs) = quantize_activation(&x, gs);
+            for fmt in FormatId::ALL {
+                let t = QuantizedTensor::from_f32_fmt(
+                    &rng.normal_vec(rows * cols, 0.5),
+                    rows,
+                    cols,
+                    gs,
+                    fmt,
+                );
+                let mut want = vec![0.0f32; rows];
+                gqmv_rows(&xq, &xs, &t.q, &t.s, gs, &mut want);
+                let p = PackedTensor::pack(&t);
+                let mut got = vec![0.0f32; rows];
+                fmt.format().gqmv_rows_packed(&xq, &xs, &p, 0, &mut got);
+                assert_eq!(got, want, "{fmt} rows={rows} cols={cols} gs={gs}");
+                // nonzero row0: the tail half of the matrix alone
+                let half = rows / 2;
+                let mut tail = vec![0.0f32; rows - half];
+                fmt.format().gqmv_rows_packed(&xq, &xs, &p, half, &mut tail);
+                assert_eq!(tail, want[half..], "{fmt} row0={half}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "q4_0")]
+    fn q4_rejects_odd_group_size() {
+        FormatId::Q40.format().group_payload_bytes(33);
+    }
+}

@@ -10,10 +10,18 @@
 //! fused tensor (e.g. Wq‖Wk‖Wv) is just a row-wise concatenation.
 
 pub mod error;
+pub mod format;
 
-pub use error::{error_stats, QuantErrorStats};
+pub use error::{error_stats, error_stats_fmt, QuantErrorStats};
+pub use format::{FormatId, PackedTensor, QuantFormat};
 
 /// A group-quantized matrix (weights) or vector (activations, rows == 1).
+///
+/// This is the in-memory **compute** form for every [`FormatId`]: one
+/// `i8` per weight regardless of format (sub-INT8 lattices are subsets
+/// of INT8, so kernels run unchanged).  `fmt` records which lattice the
+/// values live on and which packed **wire** encoding the tensor uses on
+/// disk and across the staging path — see [`format::PackedTensor`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct QuantizedTensor {
     pub q: Vec<i8>,
@@ -21,6 +29,8 @@ pub struct QuantizedTensor {
     pub rows: usize,
     pub cols: usize,
     pub gs: usize,
+    /// Quantization format: lattice of `q` and wire encoding.
+    pub fmt: FormatId,
 }
 
 impl QuantizedTensor {
@@ -28,20 +38,25 @@ impl QuantizedTensor {
         self.cols / self.gs
     }
 
-    /// Quantize a row-major float matrix.
+    /// Quantize a row-major float matrix onto the INT8 lattice.
     pub fn from_f32(data: &[f32], rows: usize, cols: usize, gs: usize) -> Self {
+        Self::from_f32_fmt(data, rows, cols, gs, FormatId::Q8)
+    }
+
+    /// Quantize a row-major float matrix onto `fmt`'s lattice (scale
+    /// `max|r|/qmax` per group; bit-exact with the legacy INT8 path for
+    /// [`FormatId::Q8`]).
+    pub fn from_f32_fmt(data: &[f32], rows: usize, cols: usize, gs: usize, fmt: FormatId) -> Self {
         assert_eq!(data.len(), rows * cols);
         assert!(cols % gs == 0, "cols={cols} not divisible by gs={gs}");
+        let f = fmt.format();
         let n_groups = data.len() / gs;
         let mut q = vec![0i8; data.len()];
         let mut s = vec![0f32; n_groups];
         for g in 0..n_groups {
-            let chunk = &data[g * gs..(g + 1) * gs];
-            let (qc, scale) = quantize_group(chunk);
-            q[g * gs..(g + 1) * gs].copy_from_slice(&qc);
-            s[g] = scale;
+            s[g] = f.quantize_group_into(&data[g * gs..(g + 1) * gs], &mut q[g * gs..(g + 1) * gs]);
         }
-        QuantizedTensor { q, s, rows, cols, gs }
+        QuantizedTensor { q, s, rows, cols, gs, fmt }
     }
 
     /// Dequantize everything back to f32 (Eq. 2).
@@ -76,9 +91,11 @@ impl QuantizedTensor {
         assert!(!parts.is_empty());
         let cols = parts[0].cols;
         let gs = parts[0].gs;
+        let fmt = parts[0].fmt;
         for p in parts {
             assert_eq!(p.cols, cols);
             assert_eq!(p.gs, gs);
+            assert_eq!(p.fmt, fmt);
         }
         let rows = parts.iter().map(|p| p.rows).sum();
         let mut q = Vec::with_capacity(rows * cols);
@@ -87,13 +104,16 @@ impl QuantizedTensor {
             q.extend_from_slice(&p.q);
             s.extend_from_slice(&p.s);
         }
-        QuantizedTensor { q, s, rows, cols, gs }
+        QuantizedTensor { q, s, rows, cols, gs, fmt }
     }
 
-    /// Bytes this tensor occupies in the streamed format (i8 data + f32
-    /// scales) — the quantity the AXI transfer model bills.
+    /// Bytes this tensor occupies in its packed wire form (the format's
+    /// payload encoding + f32 scales) — the quantity the checkpoint
+    /// stores and the AXI/DDR transfer model bills.  Delegates to
+    /// [`QuantFormat::bytes_for`], so sub-INT8 formats report their real
+    /// (halved) wire size even while computing on unpacked i8.
     pub fn stream_bytes(&self) -> usize {
-        self.q.len() + 4 * self.s.len()
+        self.fmt.format().bytes_for(self.rows, self.cols, self.gs)
     }
 }
 

@@ -62,7 +62,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::ckpt::Q8LayerSource;
+use crate::ckpt::CkptSource;
 use crate::fpga::{AxiModel, PlConfig};
 use crate::model::{LayerChunk, LlamaConfig, MatKind, MatrixUnit, QuantLayer, MATRIX_UNITS};
 use crate::quant::QuantizedTensor;
@@ -241,26 +241,33 @@ pub trait LayerFetcher: Send {
     /// Produce one matrix-granular chunk of layer `layer`.  The default
     /// fetches the whole layer and carves the chunk out (correct but
     /// unamortized); real sources override it with targeted reads
-    /// ([`Q8LayerSource::fetch_matrix`]) or per-chunk clones.
+    /// ([`CkptSource::fetch_matrix`]) or per-chunk clones.
     fn fetch_chunk(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
         Ok(self.fetch(layer)?.chunk(unit))
     }
 }
 
-/// Streams layers from an LFQ8 file (real disk I/O per fetch).
+/// Streams layers from a quantized checkpoint file of any
+/// [`crate::quant::FormatId`] (real disk I/O per fetch).
 pub struct DiskFetcher {
-    src: Q8LayerSource,
+    src: CkptSource,
 }
 
 impl DiskFetcher {
-    /// Open an LFQ8 checkpoint for layer-at-a-time streaming.
+    /// Open a quantized checkpoint for layer-at-a-time streaming; the
+    /// wire format is identified from the file magic.
     pub fn open(path: &std::path::Path) -> Result<Self> {
-        Ok(DiskFetcher { src: Q8LayerSource::open(path)? })
+        Ok(DiskFetcher { src: CkptSource::open(path)? })
     }
 
     /// Model geometry read from the checkpoint header.
     pub fn cfg(&self) -> LlamaConfig {
         self.src.cfg
+    }
+
+    /// Weight wire format of the underlying checkpoint.
+    pub fn fmt(&self) -> crate::quant::FormatId {
+        self.src.fmt
     }
 }
 

@@ -118,6 +118,8 @@ fn stats_reply_carries_every_documented_field() {
     assert!(matches!(weights, Some("streamed") | Some("resident")), "{stats}");
     let gran = kv.get("granularity").map(|s| s.as_str());
     assert!(matches!(gran, Some("layer") | Some("matrix") | Some("none")), "{stats}");
+    let quant = kv.get("quant").map(|s| s.as_str());
+    assert!(matches!(quant, Some("q8") | Some("q4_0") | Some("q5_0")), "{stats}");
     // mat_wait_ms is five slash-separated millisecond buckets (one per
     // matrix unit: norms/qkv/wo/w13/w2)
     let waits = kv.get("mat_wait_ms").unwrap_or_else(|| panic!("missing mat_wait_ms: {stats}"));
@@ -132,6 +134,7 @@ fn stats_reply_carries_every_documented_field() {
     assert!(num("tokens") >= 4.0, "{stats}");
     assert!(num("batch_steps") >= 1.0, "{stats}");
     assert_eq!(gran, Some("layer"), "default serving streams layer-granular: {stats}");
+    assert_eq!(quant, Some("q8"), "from_float model serves on the INT8 lattice: {stats}");
     assert!(num("prefetch_depth") >= 1.0, "{stats}");
 }
 

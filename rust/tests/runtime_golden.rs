@@ -90,7 +90,14 @@ fn pjrt_kernel_matches_python_golden_fixture() {
     let expect = read_f32(&dir.join("golden_gqmv_out.bin"));
     let m = expect.len();
     let n = wq.len() / m;
-    let w = QuantizedTensor { q: wq, s: ws, rows: m, cols: n, gs: 256 };
+    let w = QuantizedTensor {
+        q: wq,
+        s: ws,
+        rows: m,
+        cols: n,
+        gs: 256,
+        fmt: llamaf::quant::FormatId::Q8,
+    };
 
     let pool = Arc::new(ThreadPool::new(4));
     let mut backends: Vec<Box<dyn GqmvExec>> = vec![

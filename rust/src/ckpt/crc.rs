@@ -1,0 +1,99 @@
+//! Hand-rolled CRC-32 (IEEE 802.3: reflected, polynomial `0xEDB88320`)
+//! — the checksum of the checkpoint integrity footer.
+//!
+//! The table is built at compile time; no dependencies.  This is the
+//! same CRC-32 as zlib/PNG/gzip, so footers can be cross-checked with
+//! standard tools (`python -c "import zlib; print(zlib.crc32(...))"`).
+
+/// Byte-indexed CRC table for the reflected polynomial `0xEDB88320`.
+const TABLE: [u32; 256] = make_table();
+
+const fn make_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+/// Streaming CRC-32 state: feed bytes with [`Crc32::update`], read the
+/// digest with [`Crc32::finish`].  Useful when the checksummed region is
+/// larger than what should be held in memory (checkpoint segments are
+/// streamed through a fixed buffer).
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    /// Fresh CRC state (all-ones preset, per the IEEE definition).
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the running CRC.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = TABLE[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// Final digest (with the standard output inversion).
+    pub fn finish(self) -> u32 {
+        !self.state
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the canonical CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let mut c = Crc32::new();
+        for chunk in data.chunks(37) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finish(), crc32(&data));
+    }
+
+    #[test]
+    fn single_bit_flip_changes_digest() {
+        let mut data: Vec<u8> = (0..100u8).collect();
+        let clean = crc32(&data);
+        data[42] ^= 0x10;
+        assert_ne!(crc32(&data), clean);
+    }
+}

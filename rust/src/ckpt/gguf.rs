@@ -111,11 +111,15 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            bail!("truncated GGUF: need {n} bytes at offset {}", self.pos);
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        // checked: a corrupt length field can put pos + n past usize::MAX,
+        // which must be a parse error, not an arithmetic panic
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .with_context(|| format!("truncated GGUF: need {n} bytes at offset {}", self.pos))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(s)
     }
 
@@ -145,7 +149,12 @@ pub enum GgufValue {
     Str(String),
 }
 
-fn read_value(c: &mut Cursor, ty: u32) -> Result<Option<GgufValue>> {
+/// Nested-array nesting cap.  Real GGUF files nest at most one level
+/// (arrays of scalars); a corrupt file declaring arrays-of-arrays all
+/// the way down must hit a parse error, not exhaust the stack.
+const MAX_ARRAY_DEPTH: u32 = 8;
+
+fn read_value(c: &mut Cursor, ty: u32, depth: u32) -> Result<Option<GgufValue>> {
     Ok(match ty {
         0 | 1 | 7 => Some(GgufValue::Int(c.take(1)?[0] as u64)), // u8/i8/bool
         2 | 3 => {
@@ -162,10 +171,13 @@ fn read_value(c: &mut Cursor, ty: u32) -> Result<Option<GgufValue>> {
         8 => Some(GgufValue::Str(c.string()?)),
         9 => {
             // array: recurse per element to skip (tokenizer vocab etc.)
+            if depth >= MAX_ARRAY_DEPTH {
+                bail!("GGUF arrays nested deeper than {MAX_ARRAY_DEPTH} levels");
+            }
             let elem_ty = c.u32()?;
             let count = c.u64()?;
             for _ in 0..count {
-                read_value(c, elem_ty)?;
+                read_value(c, elem_ty, depth + 1)?;
             }
             None
         }
@@ -187,20 +199,51 @@ pub struct GgufTensorInfo {
 
 impl GgufTensorInfo {
     pub fn n_elems(&self) -> usize {
-        self.dims.iter().product::<usize>().max(1)
+        self.checked_elems().unwrap_or(usize::MAX)
     }
 
-    /// Encoded byte size of this tensor's data.
+    /// Element count with overflow detection — corrupt dims whose
+    /// product exceeds `usize` are a parse error, never a wrap or panic.
+    pub fn checked_elems(&self) -> Result<usize> {
+        let mut n = 1usize;
+        for &d in &self.dims {
+            n = n
+                .checked_mul(d)
+                .with_context(|| format!("tensor {:?} dims {:?} overflow", self.name, self.dims))?;
+        }
+        Ok(n.max(1))
+    }
+
+    /// Encoded byte size of this tensor's data.  Quantized types require
+    /// a whole number of blocks: a corrupt extent that is not a multiple
+    /// of [`GGML_BLOCK`] is rejected instead of silently truncating the
+    /// tail block.
     pub fn data_bytes(&self) -> Result<usize> {
-        let n = self.n_elems();
-        Ok(match self.ggml_type {
-            GGML_F32 => n * 4,
-            GGML_F16 => n * 2,
-            GGML_Q8_0 => n / GGML_BLOCK * 34,
-            GGML_Q4_0 => n / GGML_BLOCK * 18,
-            GGML_Q5_0 => n / GGML_BLOCK * 22,
+        let n = self.checked_elems()?;
+        let blocks = |per_block: usize| -> Result<usize> {
+            if n % GGML_BLOCK != 0 {
+                bail!(
+                    "tensor {:?} has {n} elements (not a multiple of the {GGML_BLOCK}-element \
+                     ggml block)",
+                    self.name
+                );
+            }
+            (n / GGML_BLOCK)
+                .checked_mul(per_block)
+                .with_context(|| format!("tensor {:?} byte size overflows", self.name))
+        };
+        match self.ggml_type {
+            GGML_F32 => n
+                .checked_mul(4)
+                .with_context(|| format!("tensor {:?} byte size overflows", self.name)),
+            GGML_F16 => n
+                .checked_mul(2)
+                .with_context(|| format!("tensor {:?} byte size overflows", self.name)),
+            GGML_Q8_0 => blocks(34),
+            GGML_Q4_0 => blocks(18),
+            GGML_Q5_0 => blocks(22),
             other => bail!("unsupported ggml tensor type {other} for {:?}", self.name),
-        })
+        }
     }
 }
 
@@ -230,11 +273,15 @@ impl Gguf {
     /// Dequantize one tensor to f32, in storage (row-major) order.
     pub fn dequantize(&self, t: &GgufTensorInfo) -> Result<Vec<f32>> {
         let bytes = t.data_bytes()?;
-        let off = t.offset as usize;
-        if off + bytes > self.data.len() {
-            bail!("tensor {:?} data out of range", t.name);
-        }
-        let raw = &self.data[off..off + bytes];
+        let off = usize::try_from(t.offset)
+            .ok()
+            .and_then(|o| o.checked_add(bytes).map(|end| (o, end)));
+        let raw = match off {
+            Some((o, end)) if end <= self.data.len() => &self.data[o..end],
+            _ => bail!("tensor {:?} data out of range", t.name),
+        };
+        // data_bytes() succeeded above, so n is overflow-checked and the
+        // allocation is bounded by the in-range byte extent just verified
         let n = t.n_elems();
         let mut out = Vec::with_capacity(n);
         match t.ggml_type {
@@ -298,11 +345,21 @@ pub fn read_gguf(path: &Path) -> Result<Gguf> {
     }
     let tensor_count = c.u64()? as usize;
     let kv_count = c.u64()? as usize;
+    // each kv entry is >= 13 bytes (key length + type + 1-byte value) and
+    // each tensor record >= 32; counts implying more records than the file
+    // could hold are corruption — reject BEFORE any count-sized allocation
+    let remaining = buf.len() - c.pos;
+    if kv_count > remaining / 13 {
+        bail!("GGUF kv count {kv_count} impossible for a {} byte file", buf.len());
+    }
+    if tensor_count > remaining / 32 {
+        bail!("GGUF tensor count {tensor_count} impossible for a {} byte file", buf.len());
+    }
     let mut kv = HashMap::new();
     for _ in 0..kv_count {
         let key = c.string()?;
         let ty = c.u32()?;
-        if let Some(v) = read_value(&mut c, ty).with_context(|| format!("key {key:?}"))? {
+        if let Some(v) = read_value(&mut c, ty, 0).with_context(|| format!("key {key:?}"))? {
             kv.insert(key, v);
         }
     }
@@ -337,7 +394,10 @@ pub fn read_gguf(path: &Path) -> Result<Gguf> {
 
 fn fetch(g: &Gguf, name: &str, rows: usize, cols: usize) -> Result<Vec<f32>> {
     let t = g.tensor(name).with_context(|| format!("GGUF tensor {name:?} missing"))?;
-    if t.n_elems() != rows * cols {
+    let want = rows
+        .checked_mul(cols)
+        .with_context(|| format!("model geometry {rows}x{cols} overflows"))?;
+    if t.checked_elems()? != want {
         bail!(
             "GGUF tensor {name:?} has {} elements, model geometry wants {rows}x{cols}",
             t.n_elems()
@@ -729,6 +789,67 @@ mod tests {
         assert!(read_gguf(&path).is_err());
         std::fs::write(&path, b"GGUF\x03\x00\x00\x00").unwrap();
         assert!(read_gguf(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Mutation corpus: seeded byte flips and truncations of a valid
+    /// GGUF must come back as `Ok` or `Err` — never a panic, hang, or
+    /// count-sized allocation.  (Runs in-process: any panic fails the
+    /// test; an unchecked `Vec::with_capacity` from a flipped length
+    /// field would abort the runner.)
+    #[test]
+    fn mutation_corpus_gguf_reader_never_panics() {
+        let fm = FloatModel::random(tiny_cfg(), 35);
+        let path = std::env::temp_dir().join("llamaf_test_gguf_mutate.gguf");
+        write_gguf_from_float(&path, &fm, GGML_Q4_0).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let mut rng = crate::util::Rng::new(0xFA01);
+        let mut survived = 0usize;
+        for i in 0..300 {
+            let mut bad = clean.clone();
+            match i % 3 {
+                0 => {
+                    // single-byte flip (XOR with a nonzero mask: always a change)
+                    let pos = rng.below(bad.len() as u64) as usize;
+                    bad[pos] ^= rng.below(255) as u8 + 1;
+                }
+                1 => {
+                    bad.truncate(rng.below(bad.len() as u64) as usize);
+                }
+                _ => {
+                    // burst of flips, biased toward the header/directory
+                    for _ in 0..8 {
+                        let pos = rng.below(bad.len().min(512) as u64) as usize;
+                        bad[pos] ^= rng.below(255) as u8 + 1;
+                    }
+                }
+            }
+            std::fs::write(&path, &bad).unwrap();
+            // either outcome is fine; returning at all is the assertion
+            if let Ok(g) = read_gguf(&path) {
+                if gguf_to_float(&g, None).is_ok() {
+                    survived += 1; // flip landed in padding or tensor data
+                }
+            }
+        }
+        // sanity: the corpus must actually exercise the error paths
+        assert!(survived < 150, "corpus too tame: {survived}/300 parsed clean");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn implausible_counts_rejected_before_allocation() {
+        // hand-build a header claiming 2^60 tensors: must bail on the
+        // count check, not die inside Vec::with_capacity
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"GGUF");
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&(1u64 << 60).to_le_bytes()); // tensor count
+        buf.extend_from_slice(&0u64.to_le_bytes()); // kv count
+        let path = std::env::temp_dir().join("llamaf_test_gguf_bigcount.gguf");
+        std::fs::write(&path, &buf).unwrap();
+        let err = format!("{:#}", read_gguf(&path).unwrap_err());
+        assert!(err.contains("impossible"), "{err}");
         std::fs::remove_file(path).ok();
     }
 

@@ -18,7 +18,17 @@
 //!
 //! All offset/byte arithmetic lives in [`CkptLayout`]; the historical
 //! `q8_*` free functions remain one PR as deprecated wrappers.
+//!
+//! Quantized checkpoints written by this crate additionally carry an
+//! **integrity footer** after the content: per-segment CRC-32 checksums
+//! (one per staging unit — embeddings, every layer × [`MatrixUnit`],
+//! final norm + classifier) so corruption is caught **at staging time**,
+//! before bad bytes ever reach a kernel.  Files without the footer
+//! (older writers, hand-built fixtures) still load, flagged
+//! `unverified` ([`CkptSource::verified`]); `llamaf verify-ckpt` runs
+//! the same pass offline ([`verify_ckpt`]).
 
+pub mod crc;
 pub mod gguf;
 
 use std::fs::File;
@@ -36,6 +46,12 @@ pub const MAGIC_F32: &[u8; 4] = b"LFCK";
 pub const MAGIC_Q8: &[u8; 4] = b"LFQ8";
 pub const VERSION: u32 = 1;
 pub const HEADER_BYTES: u64 = 40;
+
+/// Magic of the integrity footer appended after the checkpoint content
+/// ("LlamaF CheckSums").
+pub const FOOTER_MAGIC: &[u8; 4] = b"LFCS";
+/// Integrity-footer format version.
+pub const FOOTER_VERSION: u32 = 1;
 
 // ---------------------------------------------------------------------------
 // header
@@ -258,13 +274,216 @@ impl CkptLayout {
         self.matrix_segments(0, unit).iter().map(|&(_, len)| len).sum()
     }
 
-    /// Total file size of the checkpoint: header, embeddings, every
-    /// layer block, final norm, classifier.
+    /// Total *content* size of the checkpoint: header, embeddings, every
+    /// layer block, final norm, classifier — excluding the integrity
+    /// footer ([`CkptLayout::file_bytes`] includes it).
     pub fn total_bytes(&self) -> u64 {
         self.layer_offset(self.cfg.n_layers)
             + 4 * self.cfg.dim as u64
             + self.tensor_bytes(self.cfg.vocab_size, self.cfg.dim)
     }
+
+    /// Number of checksummed segments in the integrity footer: the
+    /// embedding block, one entry per layer × [`MatrixUnit`] (the
+    /// staging units, so staging-time verification needs exactly one
+    /// checksum per fetch), and the final-norm + classifier tail.
+    pub fn checksum_count(&self) -> usize {
+        2 + self.cfg.n_layers * crate::model::MATRIX_UNITS.len()
+    }
+
+    /// Byte size of the integrity footer: magic + version + count +
+    /// one u32 CRC per segment + the footer's own CRC.
+    pub fn footer_bytes(&self) -> u64 {
+        16 + 4 * self.checksum_count() as u64
+    }
+
+    /// Total file size *with* the integrity footer appended.
+    pub fn file_bytes(&self) -> u64 {
+        self.total_bytes() + self.footer_bytes()
+    }
+
+    /// Footer index of layer `layer`'s `unit` checksum.
+    pub fn checksum_index(&self, layer: usize, unit: MatrixUnit) -> usize {
+        1 + layer * crate::model::MATRIX_UNITS.len() + unit.index()
+    }
+
+    /// On-disk byte segments covered by footer entry `index` (the
+    /// concatenation of the segments is what the CRC runs over).
+    pub fn checksum_segments(&self, index: usize) -> Vec<(u64, u64)> {
+        let upl = crate::model::MATRIX_UNITS.len();
+        if index == 0 {
+            // entry 0 starts at byte 0 so the header itself is covered:
+            // a header flip that leaves the implied file length unchanged
+            // (e.g. seq_len) would otherwise evade both the length gate
+            // and every content CRC
+            vec![(0, HEADER_BYTES + self.tensor_bytes(self.cfg.vocab_size, self.cfg.dim))]
+        } else if index == self.checksum_count() - 1 {
+            vec![(
+                self.layer_offset(self.cfg.n_layers),
+                4 * self.cfg.dim as u64 + self.tensor_bytes(self.cfg.vocab_size, self.cfg.dim),
+            )]
+        } else {
+            let layer = (index - 1) / upl;
+            let unit = crate::model::MATRIX_UNITS[(index - 1) % upl];
+            self.matrix_segments(layer, unit)
+        }
+    }
+
+    /// Human-readable name of footer entry `index` for error messages.
+    pub fn checksum_label(&self, index: usize) -> String {
+        let upl = crate::model::MATRIX_UNITS.len();
+        if index == 0 {
+            "header+tok_emb".into()
+        } else if index == self.checksum_count() - 1 {
+            "final_norm+cls".into()
+        } else {
+            let layer = (index - 1) / upl;
+            let unit = crate::model::MATRIX_UNITS[(index - 1) % upl];
+            format!("layer {layer} ({})", unit.name())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// integrity footer — per-segment CRC-32 after the content
+// ---------------------------------------------------------------------------
+
+/// The integrity footer of a quantized checkpoint: one CRC-32 per
+/// staging segment (see [`CkptLayout::checksum_segments`]).  On-disk
+/// encoding, little-endian, appended at [`CkptLayout::total_bytes`]:
+/// `LFCS` magic, u32 version, u32 count, `count` × u32 CRCs, then the
+/// CRC-32 of the preceding footer bytes (so a corrupted footer is
+/// detected rather than trusted).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CkptFooter {
+    /// Per-segment CRC-32s, indexed by [`CkptLayout::checksum_index`].
+    pub crcs: Vec<u32>,
+}
+
+impl CkptFooter {
+    /// Serialize to the on-disk encoding (including the self-CRC).
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + 4 * self.crcs.len());
+        out.extend_from_slice(FOOTER_MAGIC);
+        out.extend_from_slice(&FOOTER_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.crcs.len() as u32).to_le_bytes());
+        for &c in &self.crcs {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        let self_crc = crc::crc32(&out);
+        out.extend_from_slice(&self_crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and validate a footer read from disk.
+    fn from_bytes(buf: &[u8], expected_count: usize) -> Result<CkptFooter> {
+        if buf.len() != 16 + 4 * expected_count {
+            bail!("integrity footer is {} bytes (expected {})", buf.len(), 16 + 4 * expected_count);
+        }
+        if &buf[0..4] != FOOTER_MAGIC {
+            bail!(
+                "bad footer magic {:?} (expected {:?})",
+                String::from_utf8_lossy(&buf[0..4]),
+                String::from_utf8_lossy(FOOTER_MAGIC)
+            );
+        }
+        let u = |i: usize| u32::from_le_bytes(buf[i..i + 4].try_into().unwrap());
+        if u(4) != FOOTER_VERSION {
+            bail!("unsupported footer version {}", u(4));
+        }
+        let count = u(8) as usize;
+        if count != expected_count {
+            bail!("footer carries {count} checksums (layout expects {expected_count})");
+        }
+        let self_crc = u(buf.len() - 4);
+        let computed = crc::crc32(&buf[..buf.len() - 4]);
+        if self_crc != computed {
+            bail!("integrity footer is itself corrupt (footer CRC mismatch)");
+        }
+        let crcs = (0..count).map(|i| u(12 + 4 * i)).collect();
+        Ok(CkptFooter { crcs })
+    }
+}
+
+/// CRC-32 over the concatenation of `segs`, streamed from `file`
+/// through a fixed buffer (segments can be hundreds of MB at scale).
+fn crc_of_segments(file: &mut File, segs: &[(u64, u64)]) -> Result<u32> {
+    let mut c = crc::Crc32::new();
+    let mut buf = vec![0u8; 1 << 16];
+    for &(off, len) in segs {
+        file.seek(SeekFrom::Start(off))?;
+        let mut left = len;
+        while left > 0 {
+            let n = (buf.len() as u64).min(left) as usize;
+            file.read_exact(&mut buf[..n]).context("reading checksummed segment")?;
+            c.update(&buf[..n]);
+            left -= n as u64;
+        }
+    }
+    Ok(c.finish())
+}
+
+/// Compute the full integrity footer of `path`'s content by streaming
+/// every checksummed segment, then append it.  The file must be exactly
+/// [`CkptLayout::total_bytes`] long (content only, no footer yet).
+pub fn append_footer(path: &Path) -> Result<()> {
+    let (cfg, fmt) = match peek_config(path)? {
+        (cfg, Some(fmt)) => (cfg, fmt),
+        _ => bail!("only quantized checkpoints carry integrity footers"),
+    };
+    let layout = CkptLayout::new(cfg, fmt);
+    let len = std::fs::metadata(path)?.len();
+    if len != layout.total_bytes() {
+        bail!(
+            "cannot append footer: {path:?} is {len} bytes (expected content of {})",
+            layout.total_bytes()
+        );
+    }
+    let mut file = File::open(path)?;
+    let mut crcs = Vec::with_capacity(layout.checksum_count());
+    for i in 0..layout.checksum_count() {
+        crcs.push(crc_of_segments(&mut file, &layout.checksum_segments(i))?);
+    }
+    drop(file);
+    let footer = CkptFooter { crcs };
+    let mut w = std::fs::OpenOptions::new().append(true).open(path)?;
+    w.write_all(&footer.to_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Outcome of an offline integrity pass ([`verify_ckpt`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VerifyOutcome {
+    /// The file predates integrity footers: nothing to verify against.
+    NoFooter,
+    /// Every checksummed segment matched its footer CRC.
+    Ok {
+        /// Number of segments verified.
+        segments: usize,
+    },
+}
+
+/// Offline integrity pass: stream every checksummed segment of `path`
+/// and compare against the footer, naming the first corrupt segment.
+/// `llamaf verify-ckpt` is a thin CLI wrapper over this.
+pub fn verify_ckpt(path: &Path) -> Result<VerifyOutcome> {
+    let mut src = CkptSource::open(path)?;
+    let layout = src.layout();
+    let Some(footer) = src.footer.clone() else {
+        return Ok(VerifyOutcome::NoFooter);
+    };
+    for i in 0..layout.checksum_count() {
+        let got = crc_of_segments(&mut src.file, &layout.checksum_segments(i))?;
+        if got != footer.crcs[i] {
+            bail!(
+                "checksum mismatch in {} (segment {i}: stored {:08x}, computed {got:08x})",
+                layout.checksum_label(i),
+                footer.crcs[i]
+            );
+        }
+    }
+    Ok(VerifyOutcome::Ok { segments: layout.checksum_count() })
 }
 
 // ---------------------------------------------------------------------------
@@ -328,21 +547,17 @@ fn read_layer(r: &mut impl Read, cfg: &LlamaConfig, fmt: FormatId) -> Result<Qua
 }
 
 /// Load a full quantized checkpoint (any [`FormatId`], identified by
-/// its magic) with every layer resident.
+/// its magic) with every layer resident.  Goes through [`CkptSource`],
+/// so the exact-length gate applies (truncation and trailing bytes are
+/// rejected) and every segment is CRC-verified when the file carries an
+/// integrity footer.
 pub fn read_ckpt(path: &Path) -> Result<QuantModel> {
-    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
-    let (cfg, fmt) = read_quant_header(&mut r)?;
-    let tok_emb = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs, fmt)?;
+    let mut src = CkptSource::open(path)?;
+    let cfg = src.cfg;
+    let (tok_emb, final_norm, cls) = src.fetch_resident()?;
     let mut layers = Vec::with_capacity(cfg.n_layers);
     for li in 0..cfg.n_layers {
-        layers.push(read_layer(&mut r, &cfg, fmt).with_context(|| format!("layer {li}"))?);
-    }
-    let final_norm = read_f32s(&mut r, cfg.dim)?;
-    let cls = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs, fmt)?;
-    let mut trailing = Vec::new();
-    r.read_to_end(&mut trailing)?;
-    if !trailing.is_empty() {
-        bail!("{} trailing bytes after checkpoint", trailing.len());
+        layers.push(src.fetch_layer(li).with_context(|| format!("layer {li}"))?);
     }
     Ok(QuantModel { cfg, tok_emb, layers, final_norm, cls })
 }
@@ -365,6 +580,9 @@ pub struct CkptSource {
     pub cfg: LlamaConfig,
     /// Wire format of the file (from the magic).
     pub fmt: FormatId,
+    /// Integrity footer, when the file carries one.  Every fetch is then
+    /// CRC-verified against it before the bytes are parsed.
+    footer: Option<CkptFooter>,
 }
 
 /// Historical name for [`CkptSource`].
@@ -375,7 +593,29 @@ impl CkptSource {
     pub fn open(path: &Path) -> Result<Self> {
         let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
         let (cfg, fmt) = read_quant_header(&mut file)?;
-        Ok(CkptSource { file, cfg, fmt })
+        let layout = CkptLayout::new(cfg, fmt);
+        // Exact-length gate: the header's geometry fixes the file size
+        // (bare content, or content + footer).  Anything else — a
+        // truncated copy, trailing garbage, a bit-flipped header that
+        // implies a wildly different layout — is rejected here, before
+        // any tensor-sized allocation happens.
+        let len = file.metadata()?.len();
+        let footer = if len == layout.total_bytes() {
+            None // pre-footer file: loads, flagged unverified
+        } else if len == layout.file_bytes() {
+            file.seek(SeekFrom::Start(layout.total_bytes()))?;
+            let mut buf = vec![0u8; layout.footer_bytes() as usize];
+            file.read_exact(&mut buf).context("reading integrity footer")?;
+            Some(CkptFooter::from_bytes(&buf, layout.checksum_count())?)
+        } else {
+            bail!(
+                "checkpoint {path:?} is {len} bytes; header implies {} (bare) or {} (with \
+                 integrity footer) — truncated, trailing bytes, or corrupt header",
+                layout.total_bytes(),
+                layout.file_bytes()
+            );
+        };
+        Ok(CkptSource { file, cfg, fmt, footer })
     }
 
     /// This file's byte layout.
@@ -383,25 +623,82 @@ impl CkptSource {
         CkptLayout::new(self.cfg, self.fmt)
     }
 
+    /// Whether fetches from this source are CRC-verified (the file
+    /// carries an integrity footer).  Footer-less files still serve
+    /// fetches, unverified.
+    pub fn verified(&self) -> bool {
+        self.footer.is_some()
+    }
+
+    /// Read the concatenation of `segs` into one buffer.
+    fn read_segments(&mut self, segs: &[(u64, u64)]) -> Result<Vec<u8>> {
+        let total: u64 = segs.iter().map(|&(_, len)| len).sum();
+        let mut buf = vec![0u8; total as usize];
+        let mut at = 0usize;
+        for &(off, len) in segs {
+            self.file.seek(SeekFrom::Start(off))?;
+            self.file
+                .read_exact(&mut buf[at..at + len as usize])
+                .context("reading checkpoint segment")?;
+            at += len as usize;
+        }
+        Ok(buf)
+    }
+
+    /// Verify footer entry `index` against `bytes` (the concatenated
+    /// segments it covers).  A mismatch is *detected corruption*: the
+    /// staged read is failed before the bytes are parsed, so garbage
+    /// never reaches a kernel.
+    fn verify_entry(&self, index: usize, bytes: &[u8]) -> Result<()> {
+        if let Some(f) = &self.footer {
+            let got = crc::crc32(bytes);
+            if got != f.crcs[index] {
+                bail!(
+                    "checksum mismatch in {} (stored {:08x}, computed {got:08x}) — corrupted \
+                     checkpoint",
+                    self.layout().checksum_label(index),
+                    f.crcs[index]
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Read layer `l`'s block (a real disk read every call — deliberate:
-    /// this is the off-chip transfer the async scheduler overlaps).
+    /// this is the off-chip transfer the async scheduler overlaps),
+    /// CRC-verifying every staging unit when the file has a footer.
     pub fn fetch_layer(&mut self, layer: usize) -> Result<QuantLayer> {
         if layer >= self.cfg.n_layers {
             bail!("layer {layer} out of range ({} layers)", self.cfg.n_layers);
         }
-        self.file.seek(SeekFrom::Start(self.layout().layer_offset(layer)))?;
-        let fmt = self.fmt;
+        let layout = self.layout();
+        let base = layout.layer_offset(layer);
+        let block = self.read_segments(&[(base, layout.layer_bytes())])?;
+        if self.footer.is_some() {
+            for &u in &crate::model::MATRIX_UNITS {
+                let unit_bytes: Vec<u8> = layout
+                    .matrix_segments(layer, u)
+                    .iter()
+                    .flat_map(|&(off, len)| {
+                        let rel = (off - base) as usize;
+                        block[rel..rel + len as usize].iter().copied()
+                    })
+                    .collect();
+                self.verify_entry(layout.checksum_index(layer, u), &unit_bytes)?;
+            }
+        }
         let cfg = self.cfg;
-        let mut r = BufReader::new(&mut self.file);
-        read_layer(&mut r, &cfg, fmt)
+        let mut r: &[u8] = &block;
+        read_layer(&mut r, &cfg, self.fmt)
     }
 
     /// Read one matrix-granular chunk of layer `layer` — the sub-layer
     /// staging unit of `--stream-granularity matrix`.  Only the chunk's
     /// own byte segments are read (a ~45 MB TinyLlama layer is never
-    /// pulled to fetch its ~66 KB norm vectors), and fused blocks come
-    /// back exactly as [`CkptSource::fetch_layer`] fuses them, so
-    /// matrix-granular staging is bit-identical to layer-granular.
+    /// pulled to fetch its ~66 KB norm vectors), CRC-verified as a unit
+    /// when the file has a footer, and fused blocks come back exactly as
+    /// [`CkptSource::fetch_layer`] fuses them, so matrix-granular
+    /// staging is bit-identical to layer-granular.
     pub fn fetch_matrix(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
         if layer >= self.cfg.n_layers {
             bail!("layer {layer} out of range ({} layers)", self.cfg.n_layers);
@@ -409,52 +706,51 @@ impl CkptSource {
         let cfg = self.cfg;
         let fmt = self.fmt;
         let (d, h, kv, gs) = (cfg.dim, cfg.hidden_dim, cfg.kv_dim(), cfg.gs);
-        let segs = self.layout().matrix_segments(layer, unit);
-        self.file.seek(SeekFrom::Start(segs[0].0))?;
+        let layout = self.layout();
+        let segs = layout.matrix_segments(layer, unit);
+        let buf = self.read_segments(&segs)?;
+        self.verify_entry(layout.checksum_index(layer, unit), &buf)?;
+        // the concatenated segment order matches the parse order exactly
+        let mut r: &[u8] = &buf;
         match unit {
             MatrixUnit::Norms => {
-                let att_norm = read_f32s(&mut self.file, d)?;
-                self.file.seek(SeekFrom::Start(segs[1].0))?;
-                let ffn_norm = read_f32s(&mut self.file, d)?;
+                let att_norm = read_f32s(&mut r, d)?;
+                let ffn_norm = read_f32s(&mut r, d)?;
                 Ok(LayerChunk::Norms { att_norm, ffn_norm })
             }
             MatrixUnit::Qkv => {
-                let mut r = BufReader::new(&mut self.file);
                 let wq = read_quant(&mut r, d, d, gs, fmt)?;
                 let wk = read_quant(&mut r, kv, d, gs, fmt)?;
                 let wv = read_quant(&mut r, kv, d, gs, fmt)?;
                 Ok(LayerChunk::Mat(QuantizedTensor::concat_rows(&[&wq, &wk, &wv])))
             }
-            MatrixUnit::Wo => {
-                let mut r = BufReader::new(&mut self.file);
-                Ok(LayerChunk::Mat(read_quant(&mut r, d, d, gs, fmt)?))
-            }
+            MatrixUnit::Wo => Ok(LayerChunk::Mat(read_quant(&mut r, d, d, gs, fmt)?)),
             MatrixUnit::W13 => {
-                let w1 = read_quant(&mut BufReader::new(&mut self.file), h, d, gs, fmt)?;
-                self.file.seek(SeekFrom::Start(segs[1].0))?;
-                let w3 = read_quant(&mut BufReader::new(&mut self.file), h, d, gs, fmt)?;
+                let w1 = read_quant(&mut r, h, d, gs, fmt)?;
+                let w3 = read_quant(&mut r, h, d, gs, fmt)?;
                 Ok(LayerChunk::Mat(QuantizedTensor::concat_rows(&[&w1, &w3])))
             }
-            MatrixUnit::W2 => {
-                let mut r = BufReader::new(&mut self.file);
-                Ok(LayerChunk::Mat(read_quant(&mut r, d, h, gs, fmt)?))
-            }
+            MatrixUnit::W2 => Ok(LayerChunk::Mat(read_quant(&mut r, d, h, gs, fmt)?)),
         }
     }
 
-    /// Non-layer ("resident") tensors: embeddings, final norm, classifier.
+    /// Non-layer ("resident") tensors: embeddings, final norm,
+    /// classifier — CRC-verified when the file has a footer.
     pub fn fetch_resident(
         &mut self,
     ) -> Result<(QuantizedTensor, Vec<f32>, QuantizedTensor)> {
         let cfg = self.cfg;
         let fmt = self.fmt;
         let layout = self.layout();
-        self.file.seek(SeekFrom::Start(HEADER_BYTES))?;
-        let mut r = BufReader::new(&mut self.file);
+        let emb = self.read_segments(&layout.checksum_segments(0))?;
+        self.verify_entry(0, &emb)?;
+        // entry 0's segment includes the header; the tensor starts after it
+        let mut r: &[u8] = &emb[HEADER_BYTES as usize..];
         let tok_emb = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs, fmt)?;
-        drop(r);
-        self.file.seek(SeekFrom::Start(layout.layer_offset(cfg.n_layers)))?;
-        let mut r = BufReader::new(&mut self.file);
+        let tail_idx = layout.checksum_count() - 1;
+        let tail = self.read_segments(&layout.checksum_segments(tail_idx))?;
+        self.verify_entry(tail_idx, &tail)?;
+        let mut r: &[u8] = &tail;
         let final_norm = read_f32s(&mut r, cfg.dim)?;
         let cls = read_quant(&mut r, cfg.vocab_size, cfg.dim, cfg.gs, fmt)?;
         Ok((tok_emb, final_norm, cls))
@@ -463,6 +759,7 @@ impl CkptSource {
 
 /// Write a quantized checkpoint in format `fmt` from an (unfused) float
 /// model — used by tests, `llamaf synth` and `llamaf import-gguf`.
+/// Appends the CRC-32 integrity footer after the content.
 pub fn write_ckpt_from_float(path: &Path, fm: &FloatModel, fmt: FormatId) -> Result<()> {
     let cfg = fm.cfg;
     let gs = cfg.gs;
@@ -486,7 +783,8 @@ pub fn write_ckpt_from_float(path: &Path, fm: &FloatModel, fmt: FormatId) -> Res
     write_f32s(&mut w, &fm.final_norm)?;
     write_quant(&mut w, &q(&fm.cls, cfg.vocab_size, cfg.dim))?;
     w.flush()?;
-    Ok(())
+    drop(w);
+    append_footer(path)
 }
 
 /// Write an LFQ8 checkpoint from an (unfused) float model by quantizing
@@ -596,8 +894,9 @@ mod tests {
     #[test]
     fn every_format_roundtrips_and_pins_file_size() {
         // write -> read round trip per format, against the in-memory
-        // quantizer, plus CkptLayout::total_bytes pinning the real file
-        // length (the byte-accounting contract the streamer bills by)
+        // quantizer, plus CkptLayout::file_bytes pinning the real file
+        // length (content + integrity footer — the byte-accounting
+        // contract the streamer bills by)
         let fm = FloatModel::random(tiny_cfg(), 20);
         for fmt in FormatId::ALL {
             let path =
@@ -606,8 +905,8 @@ mod tests {
             let layout = CkptLayout::new(fm.cfg, fmt);
             assert_eq!(
                 std::fs::metadata(&path).unwrap().len(),
-                layout.total_bytes(),
-                "{fmt}: file length != CkptLayout::total_bytes"
+                layout.file_bytes(),
+                "{fmt}: file length != CkptLayout::file_bytes"
             );
             let (cfg, peeked) = peek_config(&path).unwrap();
             assert_eq!(cfg, fm.cfg);
@@ -691,8 +990,8 @@ mod tests {
         let expected = layout.layer_offset(cfg.n_layers)
             + 4 * cfg.dim as u64
             + layout.tensor_bytes(cfg.vocab_size, cfg.dim);
-        assert_eq!(file_len, expected);
-        assert_eq!(file_len, layout.total_bytes());
+        assert_eq!(file_len, expected + layout.footer_bytes());
+        assert_eq!(file_len, layout.file_bytes());
         std::fs::remove_file(path).ok();
     }
 
@@ -874,5 +1173,159 @@ mod tests {
         assert!(ratio <= 0.62, "q4_0 file should be ~half of q8 (got {ratio:.3})");
         assert!(sizes[&FormatId::Q50] < sizes[&FormatId::Q8]);
         assert!(sizes[&FormatId::Q40] < sizes[&FormatId::Q50]);
+    }
+
+    // ------------------------------------------------------------------
+    // Integrity footer
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn footer_written_verified_and_optional() {
+        let fm = FloatModel::random(tiny_cfg(), 30);
+        let path = std::env::temp_dir().join("llamaf_test_footer.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        // freshly written files verify end to end
+        let layout = CkptLayout::new(fm.cfg, FormatId::Q8);
+        assert_eq!(
+            verify_ckpt(&path).unwrap(),
+            VerifyOutcome::Ok { segments: layout.checksum_count() }
+        );
+        assert!(CkptSource::open(&path).unwrap().verified());
+        // stripping the footer leaves a legal pre-footer file: it loads
+        // (flagged unverified) and the offline pass reports NoFooter
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..layout.total_bytes() as usize]).unwrap();
+        assert!(!CkptSource::open(&path).unwrap().verified());
+        assert_eq!(verify_ckpt(&path).unwrap(), VerifyOutcome::NoFooter);
+        let qm = read_ckpt(&path).unwrap();
+        assert_eq!(qm.cfg, fm.cfg);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_segment_rejected_at_staging_time() {
+        use crate::model::MatrixUnit;
+        let fm = FloatModel::random(tiny_cfg(), 31);
+        let path = std::env::temp_dir().join("llamaf_test_corrupt.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let layout = CkptLayout::new(fm.cfg, FormatId::Q8);
+        // flip one payload byte inside layer 1's W2 — a flip that parses
+        // fine as int8, so only the CRC can catch it
+        let mut data = std::fs::read(&path).unwrap();
+        let off = layout.matrix_segments(1, MatrixUnit::W2)[0].0 as usize + 7;
+        data[off] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        // the footer itself is intact, so the file opens...
+        let mut src = CkptSource::open(&path).unwrap();
+        assert!(src.verified());
+        // ...clean segments stage fine...
+        src.fetch_layer(0).unwrap();
+        src.fetch_matrix(1, MatrixUnit::Qkv).unwrap();
+        src.fetch_resident().unwrap();
+        // ...and the corrupt unit is rejected BEFORE parsing, at both
+        // granularities
+        let e = src.fetch_matrix(1, MatrixUnit::W2).unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch in layer 1 (w2)"), "{e}");
+        let e = src.fetch_layer(1).unwrap_err().to_string();
+        assert!(e.contains("checksum"), "{e}");
+        // full loads refuse too, and the offline pass names the segment
+        assert!(read_ckpt(&path).is_err());
+        let e = verify_ckpt(&path).unwrap_err().to_string();
+        assert!(e.contains("layer 1 (w2)"), "{e}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_footer_is_detected_not_trusted() {
+        let fm = FloatModel::random(tiny_cfg(), 32);
+        let path = std::env::temp_dir().join("llamaf_test_badfooter.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let layout = CkptLayout::new(fm.cfg, FormatId::Q8);
+        let mut data = std::fs::read(&path).unwrap();
+        // flip a stored CRC inside the footer (past magic/version/count)
+        let off = layout.total_bytes() as usize + 13;
+        data[off] ^= 0x55;
+        std::fs::write(&path, &data).unwrap();
+        let e = CkptSource::open(&path).unwrap_err().to_string();
+        assert!(e.contains("footer"), "{e}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_resident_tensors_rejected() {
+        let fm = FloatModel::random(tiny_cfg(), 33);
+        let path = std::env::temp_dir().join("llamaf_test_badresident.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        data[HEADER_BYTES as usize + 3] ^= 0x01; // inside tok_emb
+        std::fs::write(&path, &data).unwrap();
+        let mut src = CkptSource::open(&path).unwrap();
+        let e = src.fetch_resident().unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch in header+tok_emb"), "{e}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn footer_survives_every_format() {
+        let fm = FloatModel::random(tiny_cfg(), 34);
+        for fmt in FormatId::ALL {
+            let path =
+                std::env::temp_dir().join(format!("llamaf_test_vfy_{}.lfq", fmt.name()));
+            write_ckpt_from_float(&path, &fm, fmt).unwrap();
+            let layout = CkptLayout::new(fm.cfg, fmt);
+            assert_eq!(
+                verify_ckpt(&path).unwrap(),
+                VerifyOutcome::Ok { segments: layout.checksum_count() },
+                "{fmt}"
+            );
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    /// Mutation corpus for the LFQ* reader.  With the integrity footer
+    /// in place the guarantee is stronger than "no panic": EVERY
+    /// mutation must be rejected — any byte flip lands in the header
+    /// (magic/geometry gate), the content (segment CRC), or the footer
+    /// (footer self-CRC), and any truncation or extension trips the
+    /// exact-length gate at open.
+    #[test]
+    fn mutation_corpus_lfq_reader_rejects_everything() {
+        let fm = FloatModel::random(tiny_cfg(), 35);
+        let path = std::env::temp_dir().join("llamaf_test_lfq_mutate.lfq8");
+        write_q8_from_float(&path, &fm).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let mut rng = crate::util::Rng::new(0xFA02);
+        for i in 0..200 {
+            let mut bad = clean.clone();
+            match i % 4 {
+                0 => {
+                    let pos = rng.below(bad.len() as u64) as usize;
+                    bad[pos] ^= rng.below(255) as u8 + 1;
+                }
+                1 => {
+                    // any cut except exactly stripping the footer (which
+                    // is a legal pre-footer file, not a corruption)
+                    let legal = CkptLayout::new(fm.cfg, FormatId::Q8).total_bytes();
+                    let mut cut = rng.below(bad.len() as u64);
+                    if cut == legal {
+                        cut -= 1;
+                    }
+                    bad.truncate(cut as usize);
+                }
+                2 => bad.extend_from_slice(&[0u8; 17]),
+                _ => {
+                    // burst inside the header: geometry fields — the
+                    // length gate must reject count-sized implications
+                    // before any allocation happens
+                    for _ in 0..4 {
+                        let pos = rng.below(HEADER_BYTES) as usize;
+                        bad[pos] ^= rng.below(255) as u8 + 1;
+                    }
+                }
+            }
+            std::fs::write(&path, &bad).unwrap();
+            assert!(read_ckpt(&path).is_err(), "mutation {i} was accepted");
+        }
+        std::fs::remove_file(path).ok();
     }
 }

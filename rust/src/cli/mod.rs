@@ -142,4 +142,16 @@ mod tests {
         let a = parse("run file1 file2 --k v");
         assert_eq!(a.positional, vec!["file1", "file2"]);
     }
+
+    #[test]
+    fn fault_injection_flags_take_values() {
+        // the serve/generate fault-tolerance flags are ordinary
+        // value-taking options, not BOOL_FLAGS
+        let a = parse("serve --inject-faults p=0.01,seed=7 --request-timeout 250");
+        assert_eq!(a.get("inject-faults"), Some("p=0.01,seed=7"));
+        assert_eq!(a.get_usize("request-timeout", 0).unwrap(), 250);
+        let b = parse("verify-ckpt model.lfq8");
+        assert_eq!(b.command.as_deref(), Some("verify-ckpt"));
+        assert_eq!(b.positional, vec!["model.lfq8"]);
+    }
 }

@@ -50,7 +50,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -62,7 +62,10 @@ use crate::metrics::{BatchMetrics, ForwardProfile, RequestTrace, TokenMeter, Tra
 use crate::model::{KvStore, LlamaConfig, QuantModel};
 use crate::ps::gqmv::GqmvExec;
 use crate::runtime::Runtime;
-use crate::sched::{ModelFetcher, SchedMode, StageGranularity, Streamer, STAGE_UNITS};
+use crate::sched::{
+    FaultPlan, FaultyFetcher, ModelFetcher, RetryPolicy, SchedMode, StageGranularity, Streamer,
+    STAGE_UNITS,
+};
 use crate::tensor;
 use crate::trace::{ExecTrace, TraceOp, TraceSink};
 
@@ -203,12 +206,40 @@ impl StepLayers {
             StepLayers::Streamed(s) => s.stats.wait_by_unit_s,
         }
     }
+
+    /// (retries, faults, timeouts) of the staging layer — resident
+    /// serving has no I/O to fault.
+    fn fault_counters(&self) -> (u64, u64, u64) {
+        match self {
+            StepLayers::Resident(_) => (0, 0, 0),
+            StepLayers::Streamed(s) => {
+                (s.stats.retries, s.stats.stage_faults, s.stats.stage_timeouts)
+            }
+        }
+    }
 }
 
 /// Prefix of load-shedding errors from [`BatchScheduler::generate`]
 /// (scheduler saturation).  The server matches on this to count
 /// rejections; keep the two in lockstep via this constant.
 pub const BUSY_ERR_PREFIX: &str = "busy:";
+
+/// Prefix of lane-failure errors caused by an unrecoverable I/O fault:
+/// a step that kept failing after [`MAX_STEP_ATTEMPTS`] attempts sheds
+/// one lane with this prefix while the rest of the batch keeps decoding.
+pub const FAULT_ERR_PREFIX: &str = "fault:";
+
+/// Prefix of per-request deadline expiries
+/// ([`BatchScheduler::generate_with_deadline`], server
+/// `--request-timeout`).
+pub const DEADLINE_ERR_PREFIX: &str = "deadline:";
+
+/// Consecutive failed attempts at one batched step before the scheduler
+/// stops retrying and sheds a lane.  The staging layer below retries
+/// transient I/O itself ([`RetryPolicy`]); attempts here are full-step
+/// retries, so by the time this trips the fault has survived
+/// `MAX_STEP_ATTEMPTS × RetryPolicy::max_attempts` reads.
+pub const MAX_STEP_ATTEMPTS: u32 = 3;
 
 /// Messages from the decode thread back to a waiting [`BatchScheduler::generate`].
 enum LaneMsg {
@@ -250,6 +281,13 @@ struct LaneJob {
     /// is set; lanes of this job are renumbered to chunk offsets so the
     /// trace diffs cleanly against a batch-1 reference.
     exec: Option<Box<ExecTrace>>,
+    /// Forward steps that actually *completed* since `exec` was armed —
+    /// the fault path rolls the trace back to exactly this many steps,
+    /// whether or not the aborted attempt got as far as `begin_step`.
+    exec_steps: u32,
+    /// Absolute completion deadline ([`BatchScheduler::generate_with_deadline`]);
+    /// swept before every step and failed with [`DEADLINE_ERR_PREFIX`].
+    deadline: Option<Instant>,
     tx: Sender<LaneMsg>,
     cancel: Arc<AtomicBool>,
 }
@@ -286,6 +324,21 @@ impl BatchScheduler {
         exec: Box<dyn GqmvExec + Send>,
         opts: BatchOpts,
     ) -> Arc<Self> {
+        Self::with_faults(model, exec, opts, None)
+    }
+
+    /// [`BatchScheduler::new`] with a deterministic I/O fault-injection
+    /// plan (CLI `--inject-faults`): when `faults` is set, the decode
+    /// thread's weight staging runs through a [`FaultyFetcher`], so the
+    /// retry/isolation machinery is exercised on demand.  `None` is a
+    /// passthrough.  Ignored under [`WeightMode::Resident`] (there is no
+    /// I/O to fault).
+    pub fn with_faults(
+        model: Arc<QuantModel>,
+        exec: Box<dyn GqmvExec + Send>,
+        opts: BatchOpts,
+        faults: Option<FaultPlan>,
+    ) -> Arc<Self> {
         assert!(opts.max_batch >= 1);
         assert!(opts.max_pending >= 1);
         assert!(opts.prefetch_depth >= 1, "prefetch depth must be >= 1");
@@ -308,7 +361,7 @@ impl BatchScheduler {
                 // scheduler shut down and rejects queued lanes, so no
                 // caller ever blocks on a decode thread that is gone.
                 let _guard = ExitGuard(Arc::clone(&thread_sched));
-                decode_loop(thread_sched, model, exec, opts);
+                decode_loop(thread_sched, model, exec, opts, faults);
             })
             .expect("spawn batch decode thread");
         *sched.worker.lock().unwrap() = Some(handle);
@@ -336,9 +389,27 @@ impl BatchScheduler {
     /// the decode thread died with the lane in flight.
     pub fn generate(
         &self,
+        sess: Session,
+        prompt_ids: &[u32],
+        steps: usize,
+        on_token: impl FnMut(usize, u32) -> Result<()>,
+    ) -> (Option<Session>, Result<SessionGen>) {
+        self.generate_with_deadline(sess, prompt_ids, steps, None, on_token)
+    }
+
+    /// [`BatchScheduler::generate`] with a completion deadline (server
+    /// `--request-timeout`): a lane still decoding when `timeout` elapses
+    /// is failed with a [`DEADLINE_ERR_PREFIX`] error at the next step
+    /// barrier — its KV pages return to the pool and every other lane
+    /// keeps decoding.  The clock starts at submission, so time spent in
+    /// the pending queue counts against the budget (an overloaded server
+    /// sheds honestly instead of queueing work it cannot finish in time).
+    pub fn generate_with_deadline(
+        &self,
         mut sess: Session,
         prompt_ids: &[u32],
         steps: usize,
+        timeout: Option<Duration>,
         mut on_token: impl FnMut(usize, u32) -> Result<()>,
     ) -> (Option<Session>, Result<SessionGen>) {
         // Validation mirrors generate_session; a bad request must never
@@ -376,6 +447,8 @@ impl BatchScheduler {
             meter: None,
             trace: TraceBuilder::new(id),
             exec: None,
+            exec_steps: 0,
+            deadline: timeout.map(|t| Instant::now() + t),
             tx,
             cancel: Arc::clone(&cancel),
         };
@@ -498,6 +571,7 @@ fn decode_loop(
     model: Arc<QuantModel>,
     mut exec: Box<dyn GqmvExec + Send>,
     opts: BatchOpts,
+    faults: Option<FaultPlan>,
 ) {
     let cfg = model.cfg;
     sched.metrics.set_prefill_chunk(opts.prefill_chunk);
@@ -534,8 +608,29 @@ fn decode_loop(
             }
         };
         let fetcher = ModelFetcher { model: Arc::clone(&model) };
-        match Streamer::with_opts(rt, fetcher, opts.sched, opts.prefetch_depth, opts.granularity)
-        {
+        let retry = RetryPolicy::default();
+        // the injector decorates the fetcher *below* the retry layer, so
+        // injected faults exercise the exact retry/backoff/timeout path
+        // real I/O errors take
+        let streamer = match faults {
+            Some(plan) if !plan.is_empty() => Streamer::with_retry(
+                rt,
+                FaultyFetcher::new(fetcher, plan),
+                opts.sched,
+                opts.prefetch_depth,
+                opts.granularity,
+                retry,
+            ),
+            _ => Streamer::with_retry(
+                rt,
+                fetcher,
+                opts.sched,
+                opts.prefetch_depth,
+                opts.granularity,
+                retry,
+            ),
+        };
+        match streamer {
             Ok(s) => {
                 sched.metrics.set_ring_depth(opts.prefetch_depth);
                 sched.metrics.set_granularity(opts.granularity.label());
@@ -555,6 +650,9 @@ fn decode_loop(
     let mut bytes_attributed = 0u64;
     let mut wait_attributed = 0.0f64;
     let mut unit_attributed = [0.0f64; STAGE_UNITS];
+    // consecutive failed attempts at the CURRENT step; reset by success
+    // and by shedding a lane
+    let mut step_failures = 0u32;
 
     loop {
         // ---- continuous admission: top the batch up every step -------
@@ -605,18 +703,30 @@ fn decode_loop(
                     Some(Box::new(ExecTrace::new(&cfg, &format!("lane-{}", j.trace.id()))));
             }
         }
-        // lanes whose client vanished leave before the next forward
+        // lanes whose client vanished leave before the next forward, and
+        // lanes past their completion deadline are shed with their KV
+        // donated back — both before any further weight staging is spent
+        // on them
+        let now = Instant::now();
         let mut i = 0;
         while i < active.len() {
-            if active[i].cancel.load(Ordering::Relaxed) {
+            let expired = active[i].deadline.map(|d| now >= d).unwrap_or(false);
+            if active[i].cancel.load(Ordering::Relaxed) || expired {
                 let mut j = active.swap_remove(i);
+                let result = if expired {
+                    j.sess.reset(); // donate KV pages back to the pool now
+                    sched.metrics.record_deadline_expired();
+                    Err(format!("{DEADLINE_ERR_PREFIX} request deadline expired mid-decode"))
+                } else {
+                    Err("canceled by client".into())
+                };
                 let meter = j.meter.take();
                 let _ = j.tx.send(LaneMsg::Done {
                     sess: j.sess,
                     meter,
                     trace: None,
                     exec: None,
-                    result: Err("canceled by client".into()),
+                    result,
                 });
             } else {
                 i += 1;
@@ -682,22 +792,49 @@ fn decode_loop(
         };
         let step_wall = step_t.elapsed().as_secs_f64();
         if let Err(e) = step_result {
-            // submit-time validation makes this unreachable in practice;
-            // if it happens, every lane of the step fails loudly and the
-            // sessions travel back to their callers
-            let msg = format!("batched decode step failed: {e:#}");
-            for mut j in active.drain(..) {
+            // Lane-level fault isolation: a failed step does NOT fail the
+            // batch.  Roll every per-op trace back to its last completed
+            // step (the aborted attempt may or may not have reached
+            // `begin_step`), then retry the identical step — nothing was
+            // advanced, and KV writes at the same positions are
+            // overwritten idempotently, so a successful retry leaves
+            // every surviving lane bit-identical to a fault-free run.
+            // After MAX_STEP_ATTEMPTS consecutive failures the lane at
+            // the tail of the active set is shed with a FAULT_ERR_PREFIX
+            // error (KV pages donated back) and the rest keep decoding.
+            for j in active.iter_mut() {
+                if let Some(t) = j.exec.as_deref_mut() {
+                    while t.steps() > j.exec_steps {
+                        t.rollback_step();
+                    }
+                }
+                j.trace.record_fault();
+            }
+            sched.metrics.record_step_retry();
+            // the failed attempt still moved the staging counters; export
+            // them now — this may be the last activity before going idle
+            let (s_retries, s_faults, s_timeouts) = layers.fault_counters();
+            sched.metrics.set_stage_faults(s_retries, s_faults, s_timeouts);
+            step_failures += 1;
+            if step_failures >= MAX_STEP_ATTEMPTS {
+                step_failures = 0;
+                let mut j = active.pop().expect("error path requires an active lane");
+                j.sess.reset(); // donate KV pages back to the pool now
+                sched.metrics.record_lane_fault();
                 let meter = j.meter.take();
                 let _ = j.tx.send(LaneMsg::Done {
                     sess: j.sess,
                     meter,
                     trace: None,
                     exec: None,
-                    result: Err(msg.clone()),
+                    result: Err(format!(
+                        "{FAULT_ERR_PREFIX} decode step failed {MAX_STEP_ATTEMPTS} times: {e:#}"
+                    )),
                 });
             }
             continue;
         }
+        step_failures = 0;
         let staged = layers.staged_bytes();
         let waited = layers.prefetch_wait_s();
         let units = layers.wait_by_unit_s();
@@ -713,6 +850,8 @@ fn decode_loop(
         sched.metrics.set_ring_occupancy(layers.ring_occupancy_mean());
         sched.metrics.set_staging_time(layers.total_transfer_s());
         sched.metrics.set_unit_waits(units);
+        let (s_retries, s_faults, s_timeouts) = layers.fault_counters();
+        sched.metrics.set_stage_faults(s_retries, s_faults, s_timeouts);
         bytes_attributed = staged;
         wait_attributed = waited;
         unit_attributed = units;
@@ -741,6 +880,9 @@ fn decode_loop(
             }
             j.sess.pos += c;
             j.fed = fed_after;
+            if j.exec.is_some() {
+                j.exec_steps += 1; // this step completed; rollback floor moves up
+            }
             let mut done = false;
             if sampled {
                 let next = tensor::argmax(scratch.logits(last_lane[ji])) as u32;
@@ -1147,6 +1289,84 @@ mod tests {
         let exec = gen.exec_trace.expect("trace: true returns a per-request op trace");
         let report = crate::trace::diff(&ref_trace, &exec);
         assert!(report.identical(), "op trace diverged from batch-1: {}", report.summary());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn transient_injected_fault_is_absorbed_bit_identically() {
+        // a one-shot read error at layer 1 is retried inside the staging
+        // worker: the caller sees nothing but the retry counter moving
+        let qm = tiny_model(20);
+        let prompt = [1u32, 10, 11];
+        let mut ref_engine = CpuEngine::new(Arc::clone(&qm), Box::new(ScalarGqmv));
+        let want = generate(&mut ref_engine, &prompt, 8, Sampler::Greedy, false).unwrap();
+        let plan = FaultPlan::parse("at=1/any/readerr").unwrap();
+        let sched = BatchScheduler::with_faults(
+            Arc::clone(&qm),
+            Box::new(ScalarGqmv),
+            BatchOpts::default(),
+            Some(plan),
+        );
+        let (sess, out) = sched.generate(Session::new(&qm.cfg), &prompt, 8, |_, _| Ok(()));
+        assert!(sess.is_some());
+        assert_eq!(out.unwrap().generated, want.generated, "retried fault changed tokens");
+        assert!(sched.metrics().stage_retries() >= 1, "the retry must be visible in STATS");
+        assert_eq!(sched.metrics().lane_faults(), 0, "no lane failed");
+        assert_eq!(sched.metrics().stage_faults(), 0, "no stage exhausted its retries");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn persistent_fault_sheds_the_lane_with_a_fault_error() {
+        // a layer that NEVER reads exhausts staging retries, then step
+        // retries, then sheds exactly one lane with the "fault:" prefix —
+        // and the scheduler stays alive for later requests
+        let qm = tiny_model(21);
+        let plan = FaultPlan::parse("at=1/any/readerr/always").unwrap();
+        let sched = BatchScheduler::with_faults(
+            Arc::clone(&qm),
+            Box::new(ScalarGqmv),
+            BatchOpts::default(),
+            Some(plan),
+        );
+        let (sess, out) = sched.generate(Session::new(&qm.cfg), &[1, 2, 3], 4, |_, _| Ok(()));
+        assert!(sess.is_some(), "the session must come back from a shed lane");
+        let e = out.unwrap_err().to_string();
+        assert!(e.starts_with(FAULT_ERR_PREFIX), "{e}");
+        assert!(e.contains("injected fault"), "cause must be preserved: {e}");
+        assert_eq!(sched.metrics().lane_faults(), 1);
+        assert_eq!(sched.metrics().step_retries(), u64::from(MAX_STEP_ATTEMPTS));
+        assert!(sched.metrics().stage_faults() >= 1, "staging-layer faults surfaced");
+        assert_eq!(sess.unwrap().pos, 0, "shed session was reset (pages donated)");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_fails_the_lane_cleanly() {
+        let qm = tiny_model(22);
+        let sched =
+            BatchScheduler::new(Arc::clone(&qm), Box::new(ScalarGqmv), BatchOpts::default());
+        let (sess, out) = sched.generate_with_deadline(
+            Session::new(&qm.cfg),
+            &[1, 2, 3],
+            4,
+            Some(Duration::from_millis(0)),
+            |_, _| Ok(()),
+        );
+        assert!(sess.is_some());
+        let e = out.unwrap_err().to_string();
+        assert!(e.starts_with(DEADLINE_ERR_PREFIX), "{e}");
+        assert_eq!(sched.metrics().deadline_expired(), 1);
+        // a sane deadline does not interfere
+        let (_s, out) = sched.generate_with_deadline(
+            Session::new(&qm.cfg),
+            &[1, 2, 3],
+            4,
+            Some(Duration::from_secs(3600)),
+            |_, _| Ok(()),
+        );
+        assert!(out.is_ok(), "generous deadline must not fire");
+        assert_eq!(sched.metrics().deadline_expired(), 1);
         sched.shutdown();
     }
 

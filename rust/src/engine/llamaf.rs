@@ -35,7 +35,8 @@ use crate::ps::gqmv::{check_shapes, check_shapes_fused, GqmvExec};
 use crate::quant::QuantizedTensor;
 use crate::runtime::{DeviceWeights, Runtime};
 use crate::sched::{
-    DiskFetcher, MemFetcher, PreparedMatrix, SchedMode, StageGranularity, Streamer, StreamerStats,
+    DiskFetcher, FaultPlan, FaultyFetcher, MemFetcher, PreparedMatrix, RetryPolicy, SchedMode,
+    StageGranularity, Streamer, StreamerStats,
 };
 use crate::trace::{ExecTrace, TraceSink};
 
@@ -267,6 +268,22 @@ impl LlamafEngine {
         depth: usize,
         gran: StageGranularity,
     ) -> Result<Self> {
+        Self::open_with_faults(ckpt_path, rt, mode, depth, gran, None)
+    }
+
+    /// [`LlamafEngine::open_with_opts`] with a deterministic I/O
+    /// fault-injection plan (CLI `--inject-faults`) wrapped around the
+    /// disk fetcher.  Injected faults exercise the staging retry path and
+    /// the engine's error surface end to end; `None` (or an empty plan)
+    /// is a passthrough.
+    pub fn open_with_faults(
+        ckpt_path: &Path,
+        rt: Arc<Runtime>,
+        mode: SchedMode,
+        depth: usize,
+        gran: StageGranularity,
+        faults: Option<FaultPlan>,
+    ) -> Result<Self> {
         let probe = DiskFetcher::open(ckpt_path)?;
         let cfg = probe.cfg();
         // validate all kernel shapes up front (fail fast before serving)
@@ -280,8 +297,19 @@ impl LlamafEngine {
         let resident = QuantModel { cfg, tok_emb, layers: Vec::new(), final_norm, cls };
         let registry = DevRegistry::new();
         registry.pin(&resident.cls, cls_dev);
-        // probe re-used as the streaming fetcher
-        let streamer = Streamer::with_opts(Arc::clone(&rt), probe, mode, depth, gran)?;
+        // probe re-used as the streaming fetcher, wrapped in the fault
+        // injector when a non-empty plan was supplied
+        let streamer = match faults {
+            Some(plan) if !plan.is_empty() => Streamer::with_retry(
+                Arc::clone(&rt),
+                FaultyFetcher::new(probe, plan),
+                mode,
+                depth,
+                gran,
+                RetryPolicy::default(),
+            )?,
+            _ => Streamer::with_opts(Arc::clone(&rt), probe, mode, depth, gran)?,
+        };
         Ok(LlamafEngine {
             cfg,
             resident,

@@ -10,6 +10,7 @@
 //!   import-gguf — convert a GGUF checkpoint to a native quantized one
 //!   quant-error — per-matrix quantization error of a float checkpoint
 //!   info      — runtime/artifact inventory
+//!   verify-ckpt — offline integrity pass over a checkpoint's CRC footer
 //!   trace-diff — compare two execution traces (`generate --trace`)
 
 use std::path::Path;
@@ -39,11 +40,19 @@ COMMANDS
             [--top-p P --temperature T --seed S]
             [--trace <out.trace>]  record a per-op execution trace (the
             digest of every GQMV output) for trace-diff
+            [--inject-faults <spec>]  deterministic staged-read fault
+            injection (llamaf engine): spec is comma-separated
+            p=<prob>, seed=<u64>, stall_ms=<ms> and
+            at=<layer>/<unit>/<kind>[/<count|always>] triggers with
+            kind readerr|truncated|corrupt|stall and unit
+            norms|qkv|wo|w13|w2|layer|any — transient faults are
+            absorbed by the staging retry, persistent ones surface
   serve     --ckpt <lfq*> [--addr 127.0.0.1:7077] [--engine ps|ps-scalar|sim|llamaf]
             [--workers N] [--queue-depth N] [--max-sessions N] [--threads N]
             [--max-batch B] [--prefetch-depth N]
             [--stream-granularity layer|matrix] [--sync | --resident]
-            [--kv-pages P] [--prefill-chunk C]
+            [--kv-pages P] [--prefill-chunk C] [--request-timeout MS]
+            [--inject-faults <spec>]
             ps/ps-scalar/sim: concurrent requests are folded into
             continuously batched decoding over one shared weight
             copy (requests join at the next step, up to B lanes/step,
@@ -58,8 +67,13 @@ COMMANDS
             shared pool of P 16-position pages with copy-on-write
             prompt-prefix reuse instead of per-session slabs;
             --prefill-chunk C lets one prompt prefill up to C tokens
-            per step — bit-identical either way); llamaf: sequential
-            batch-1 streaming
+            per step — bit-identical either way; --request-timeout MS
+            sheds any request still decoding MS ms after submission
+            with ERR deadline:, --inject-faults injects deterministic
+            staged-read faults — a lane whose step keeps failing is
+            shed with ERR fault: while the rest of the batch keeps
+            decoding bit-identically); llamaf: sequential batch-1
+            streaming
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
@@ -75,6 +89,11 @@ COMMANDS
             paper's error-percentage stats) of a float checkpoint on
             the chosen weight lattice
   info      [--artifacts <dir>]
+  verify-ckpt <path.lfq*>
+            stream every CRC32-checksummed segment of a quantized
+            checkpoint against its integrity footer; names the first
+            corrupt segment and exits nonzero on mismatch (footer-less
+            legacy files report 'no integrity footer')
   bench-diff --prev <dir> --cur <dir> [--threshold 0.20]
             compare two bench-json/ directories case by case and fail
             on regressions beyond the threshold (CI runs this
@@ -100,7 +119,13 @@ fn build_engine(args: &Args) -> Result<Box<dyn Engine>> {
     let ckpt = args.get_or("ckpt", "artifacts/nano_q8.lfq8");
     let path = Path::new(ckpt);
     anyhow::ensure!(path.exists(), "checkpoint {ckpt} not found (run `make artifacts`)");
-    match args.get_or("engine", "llamaf") {
+    let engine_kind = args.get_or("engine", "llamaf");
+    anyhow::ensure!(
+        engine_kind == "llamaf" || args.get("inject-faults").is_none(),
+        "--inject-faults requires the streaming llamaf engine \
+         (resident CPU engines have no staged reads to fail)"
+    );
+    match engine_kind {
         "ps" => {
             let qm = llamaf::ckpt::read_ckpt(path)?;
             let pool = Arc::new(ThreadPool::new(args.get_usize("threads", 4)?));
@@ -123,7 +148,8 @@ fn build_engine(args: &Args) -> Result<Box<dyn Engine>> {
             let mode = if args.flag("sync") { SchedMode::Sync } else { SchedMode::Async };
             let depth = prefetch_depth(args)?;
             let gran = stream_granularity(args)?;
-            Ok(Box::new(LlamafEngine::open_with_opts(path, rt, mode, depth, gran)?))
+            let faults = fault_plan(args)?;
+            Ok(Box::new(LlamafEngine::open_with_faults(path, rt, mode, depth, gran, faults)?))
         }
         other => bail!("unknown engine '{other}' (ps | ps-scalar | sim | llamaf)"),
     }
@@ -145,6 +171,7 @@ fn run() -> Result<()> {
         "import-gguf" => cmd_import_gguf(&args),
         "quant-error" => cmd_quant_error(&args),
         "info" => cmd_info(&args),
+        "verify-ckpt" => cmd_verify_ckpt(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "trace-diff" => cmd_trace_diff(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -163,6 +190,18 @@ fn quant_format(args: &Args) -> Result<llamaf::quant::FormatId> {
     let s = args.get_or("quant-format", "q8");
     llamaf::quant::FormatId::parse(s)
         .with_context(|| format!("--quant-format must be q8, q4_0 or q5_0 (got '{s}')"))
+}
+
+/// Parse `--inject-faults` into a [`llamaf::sched::FaultPlan`] (None
+/// when the flag is absent).
+fn fault_plan(args: &Args) -> Result<Option<llamaf::sched::FaultPlan>> {
+    match args.get("inject-faults") {
+        None => Ok(None),
+        Some(spec) => Ok(Some(
+            llamaf::sched::FaultPlan::parse(spec)
+                .with_context(|| format!("--inject-faults '{spec}'"))?,
+        )),
+    }
 }
 
 /// Parse `--stream-granularity` (staging unit, default layer).
@@ -241,7 +280,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     anyhow::ensure!(c >= 1, "--prefill-chunk must be >= 1");
                     c
                 },
+                request_timeout_ms: match args.get("request-timeout") {
+                    None => None,
+                    Some(_) => {
+                        let ms = args.get_usize("request-timeout", 0)? as u64;
+                        anyhow::ensure!(ms >= 1, "--request-timeout must be >= 1 ms");
+                        Some(ms)
+                    }
+                },
+                faults: fault_plan(args)?,
             };
+            anyhow::ensure!(
+                !(opts.resident && opts.faults.is_some()),
+                "--inject-faults needs streamed weights (--resident has no staged reads)"
+            );
             let threads = args.get_usize("threads", 4)?;
             let make_exec: Box<llamaf::server::ExecFactory> = match engine_kind.as_str() {
                 "ps" => {
@@ -374,6 +426,28 @@ fn qe_row(
     let st = llamaf::quant::error_stats_fmt(data, rows, cols, gs, fmt);
     println!("  {name:<14} rms {:.6}  {}", st.rms(), st.row());
     total.add_tensor_fmt(data, rows, cols, gs, fmt);
+}
+
+/// Offline integrity pass: verify every CRC32-checksummed segment of a
+/// quantized checkpoint against its footer.  Exits nonzero on the first
+/// mismatch (with the corrupt segment named); footer-less legacy files
+/// are reported but pass, matching the loader's lenient-open behaviour.
+fn cmd_verify_ckpt(args: &Args) -> Result<()> {
+    let path = match args.positional.first().map(String::as_str).or_else(|| args.get("ckpt")) {
+        Some(p) => p.to_string(),
+        None => bail!("usage: llamaf verify-ckpt <path.lfq*>"),
+    };
+    match llamaf::ckpt::verify_ckpt(Path::new(&path))
+        .with_context(|| format!("verifying {path}"))?
+    {
+        llamaf::ckpt::VerifyOutcome::Ok { segments } => {
+            println!("{path}: OK ({segments} segments verified)");
+        }
+        llamaf::ckpt::VerifyOutcome::NoFooter => {
+            println!("{path}: no integrity footer (legacy file; loads unverified)");
+        }
+    }
+    Ok(())
 }
 
 /// Compare two `bench-json/` directories (previous vs current run) case

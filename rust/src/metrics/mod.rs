@@ -418,6 +418,23 @@ pub struct BatchMetrics {
     /// Scheduler steps in which some lane fed more than one prompt token
     /// (chunked-prefill multi-lane feeds, summed over requests).
     chunk_feeds: AtomicU64,
+    /// Batched steps that failed and were retried (all lanes rolled back
+    /// to the pre-step snapshot; counted once per failed attempt).
+    step_retries: AtomicU64,
+    /// Lanes shed because a step kept failing past the retry budget (each
+    /// one is an `ERR fault:` surfaced to exactly one client).
+    lane_faults: AtomicU64,
+    /// Lanes shed because their per-request deadline expired mid-decode.
+    deadline_expired: AtomicU64,
+    /// Latest lifetime staged-read retry count of the shared streamer
+    /// (gauge, mirrors `StreamerStats::retries`).
+    stage_retries: AtomicU64,
+    /// Latest lifetime count of staging requests that exhausted their
+    /// retry budget (gauge, mirrors `StreamerStats::stage_faults`).
+    stage_faults: AtomicU64,
+    /// Latest lifetime count of staging requests that blew their stage
+    /// deadline (gauge, mirrors `StreamerStats::stage_timeouts`).
+    stage_timeouts: AtomicU64,
 }
 
 /// Matrix-granular wait buckets exported through `STATS` (`mat_wait_ms`):
@@ -587,6 +604,67 @@ impl BatchMetrics {
         self.chunk_feeds.load(Ordering::Relaxed)
     }
 
+    /// Count one failed-and-retried batched step (every active lane was
+    /// rolled back to the pre-step snapshot before the retry).
+    pub fn record_step_retry(&self) {
+        self.step_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Failed-and-retried batched steps so far.
+    pub fn step_retries(&self) -> u64 {
+        self.step_retries.load(Ordering::Relaxed)
+    }
+
+    /// Count one lane shed after a step kept failing past the retry
+    /// budget (its client got an `ERR fault:`; every other lane kept
+    /// decoding).
+    pub fn record_lane_fault(&self) {
+        self.lane_faults.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lanes shed to isolate persistent step faults.
+    pub fn lane_faults(&self) -> u64 {
+        self.lane_faults.load(Ordering::Relaxed)
+    }
+
+    /// Count one lane shed because its per-request deadline expired
+    /// mid-decode (its client got an `ERR deadline:`).
+    pub fn record_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lanes shed on an expired per-request deadline.
+    pub fn deadline_expired(&self) -> u64 {
+        self.deadline_expired.load(Ordering::Relaxed)
+    }
+
+    /// Update the staging-fault gauges from the streamer's lifetime
+    /// counters (sampled once per step, and again on step failure so a
+    /// shed before idle still exports its cause).
+    pub fn set_stage_faults(&self, retries: u64, faults: u64, timeouts: u64) {
+        self.stage_retries.store(retries, Ordering::Relaxed);
+        self.stage_faults.store(faults, Ordering::Relaxed);
+        self.stage_timeouts.store(timeouts, Ordering::Relaxed);
+    }
+
+    /// Staged reads that failed transiently and were retried in place by
+    /// the prefetch worker (lifetime streamer counter; 0 when resident).
+    pub fn stage_retries(&self) -> u64 {
+        self.stage_retries.load(Ordering::Relaxed)
+    }
+
+    /// Staging requests that exhausted their retry budget and surfaced an
+    /// error to the decode thread (lifetime streamer counter).
+    pub fn stage_faults(&self) -> u64 {
+        self.stage_faults.load(Ordering::Relaxed)
+    }
+
+    /// Staging requests that blew the per-stage deadline and surfaced a
+    /// timeout instead of hanging (lifetime streamer counter).
+    pub fn stage_timeouts(&self) -> u64 {
+        self.stage_timeouts.load(Ordering::Relaxed)
+    }
+
     /// Record the streaming granularity label (once, at decode-thread
     /// start; never set under resident serving).
     pub fn set_granularity(&self, label: &'static str) {
@@ -660,7 +738,9 @@ impl BatchMetrics {
              prefetch_depth={} ring_occ={:.2} granularity={} quant={} \
              stage_mb_s={:.2} \
              mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} matrix_pct={:.0} \
-             admission_ms={:.3} prefill_chunk={} chunk_feeds={}",
+             admission_ms={:.3} prefill_chunk={} chunk_feeds={} \
+             stage_retries={} stage_faults={} stage_timeouts={} \
+             step_retries={} lane_faults={} deadline_expired={}",
             self.steps(),
             self.lane_tokens(),
             self.occupancy_mean(),
@@ -682,6 +762,12 @@ impl BatchMetrics {
             self.admission_ms_mean(),
             self.prefill_chunk(),
             self.chunk_feeds(),
+            self.stage_retries(),
+            self.stage_faults(),
+            self.stage_timeouts(),
+            self.step_retries(),
+            self.lane_faults(),
+            self.deadline_expired(),
         )
     }
 }
@@ -812,6 +898,12 @@ mod tests {
             "admission_ms=0.000",
             "prefill_chunk=0",
             "chunk_feeds=0",
+            "stage_retries=0",
+            "stage_faults=0",
+            "stage_timeouts=0",
+            "step_retries=0",
+            "lane_faults=0",
+            "deadline_expired=0",
         ] {
             assert!(s.contains(field), "summary missing {field}: {s}");
         }
@@ -833,6 +925,37 @@ mod tests {
             b1.record_step(1, 1000, 0.0, &ForwardProfile::default());
         }
         assert!(b1.bytes_per_token() / m.bytes_per_token() >= 3.0);
+    }
+
+    #[test]
+    fn fault_counters_count_and_export() {
+        let m = BatchMetrics::default();
+        m.record_step_retry();
+        m.record_step_retry();
+        m.record_lane_fault();
+        m.record_deadline_expired();
+        m.set_stage_faults(7, 1, 2);
+        assert_eq!(m.step_retries(), 2);
+        assert_eq!(m.lane_faults(), 1);
+        assert_eq!(m.deadline_expired(), 1);
+        assert_eq!(m.stage_retries(), 7);
+        assert_eq!(m.stage_faults(), 1);
+        assert_eq!(m.stage_timeouts(), 2);
+        let s = m.summary();
+        for field in [
+            "stage_retries=7",
+            "stage_faults=1",
+            "stage_timeouts=2",
+            "step_retries=2",
+            "lane_faults=1",
+            "deadline_expired=1",
+        ] {
+            assert!(s.contains(field), "summary missing {field}: {s}");
+        }
+        // gauges overwrite, they never accumulate
+        m.set_stage_faults(9, 0, 0);
+        assert_eq!(m.stage_retries(), 9);
+        assert_eq!(m.stage_faults(), 0);
     }
 
     #[test]
@@ -899,6 +1022,7 @@ mod tests {
             tok_per_s: 100.0,
             chunk_feeds: 0,
             prefix_tokens: 0,
+            faults: 0,
         };
         m.record_trace(&t);
         m.record_trace(&t);

@@ -35,6 +35,7 @@ pub struct TraceBuilder {
     prefetch_wait_s: f64,
     unit_wait_s: [f64; MAT_WAIT_UNITS],
     occupancy_sum: u64,
+    faults: u64,
 }
 
 impl TraceBuilder {
@@ -56,6 +57,7 @@ impl TraceBuilder {
             prefetch_wait_s: 0.0,
             unit_wait_s: [0.0; MAT_WAIT_UNITS],
             occupancy_sum: 0,
+            faults: 0,
         }
     }
 
@@ -118,6 +120,14 @@ impl TraceBuilder {
         self.occupancy_sum += occupancy as u64;
     }
 
+    /// Count one failed step attempt this lane lived through (the step
+    /// was rolled back and retried, or the lane was shed).  A non-zero
+    /// count on a *successful* request means it survived faults that were
+    /// absorbed by retries.
+    pub fn record_fault(&mut self) {
+        self.faults += 1;
+    }
+
     /// Snapshot the record as an immutable [`RequestTrace`].  `tok_per_s`
     /// is left at 0; the caller fills it from the lane's `TokenMeter`.
     pub fn finish(&self) -> RequestTrace {
@@ -136,6 +146,7 @@ impl TraceBuilder {
             unit_wait_s: self.unit_wait_s,
             batch_mean: if steps == 0 { 0.0 } else { self.occupancy_sum as f64 / steps as f64 },
             tok_per_s: 0.0,
+            faults: self.faults,
         }
     }
 }
@@ -176,6 +187,10 @@ pub struct RequestTrace {
     pub batch_mean: f64,
     /// End-to-end decode throughput from the lane's `TokenMeter`.
     pub tok_per_s: f64,
+    /// Failed step attempts this lane lived through (rolled back and
+    /// retried, or shed).  Non-zero on a successful request means the
+    /// faults were absorbed by retries.
+    pub faults: u64,
 }
 
 impl RequestTrace {
@@ -188,7 +203,7 @@ impl RequestTrace {
             "id={} queue_ms={:.3} prefill_tokens={} decode_tokens={} prefill_ms={:.3} \
              decode_ms={:.3} staged_bytes={} prefetch_wait_ms={:.3} \
              mat_wait_ms={:.3}/{:.3}/{:.3}/{:.3}/{:.3} batch_mean={:.2} tok_s={:.1} \
-             chunk_feeds={} prefix_tokens={}",
+             chunk_feeds={} prefix_tokens={} faults={}",
             self.id,
             1e3 * self.queue_s,
             self.prefill_steps,
@@ -206,6 +221,7 @@ impl RequestTrace {
             self.tok_per_s,
             self.chunk_feeds,
             self.prefix_tokens,
+            self.faults,
         )
     }
 }
@@ -284,6 +300,7 @@ mod tests {
             "tok_s=42.0",
             "chunk_feeds=0",
             "prefix_tokens=0",
+            "faults=0",
         ] {
             assert!(s.contains(field), "summary missing {field}: {s}");
         }
@@ -298,5 +315,18 @@ mod tests {
         assert_eq!(t.prefill_steps + t.decode_steps, 0);
         assert_eq!(t.batch_mean, 0.0);
         assert_eq!(t.staged_bytes, 0);
+        assert_eq!(t.faults, 0);
+    }
+
+    #[test]
+    fn faults_accumulate_and_render() {
+        let mut b = TraceBuilder::new(3);
+        b.admit();
+        b.record_fault();
+        b.record_fault();
+        b.record_step(0, true, 0.001, 0, 0.0, [0.0; MAT_WAIT_UNITS], 1);
+        let t = b.finish();
+        assert_eq!(t.faults, 2);
+        assert!(t.summary().contains("faults=2"), "{}", t.summary());
     }
 }

@@ -1,0 +1,416 @@
+//! Deterministic I/O fault injection for the weight-staging path.
+//!
+//! Production serving streams every layer's weights from "DDR" (a
+//! checkpoint file or the shared in-memory model) on the critical path of
+//! every token, so a flaky read, a truncated file, a corrupted segment or
+//! a stuck transfer must surface as a *bounded, recoverable* error — not
+//! a hang and not silent garbage.  This module provides the test double
+//! for all of those: a [`FaultPlan`] (seeded probability plus scripted
+//! per-(layer, matrix) triggers) and a [`FaultyFetcher`] decorator that
+//! injects the planned faults around any [`LayerFetcher`].
+//!
+//! Fault model:
+//!
+//! * [`FaultKind::ReadErr`] — the fetch fails outright (an I/O error on
+//!   the DDR/disk path).
+//! * [`FaultKind::Truncated`] — the fetch observes fewer bytes than the
+//!   layout promises (a truncated checkpoint / short DMA).
+//! * [`FaultKind::Corrupt`] — the fetched bytes were flipped in flight
+//!   and the integrity layer (the per-segment CRC32 footer verified at
+//!   staging time, see [`crate::ckpt`]) *caught* the mismatch.  The
+//!   decorator injects the detected outcome — a checksum-mismatch error —
+//!   because a fetcher-level decorator sits above the checksum
+//!   verification; genuine on-disk bit flips are exercised separately
+//!   against [`crate::ckpt::CkptSource`] in the mutation-corpus tests.
+//! * [`FaultKind::Stall`] — the fetch completes correctly but only after
+//!   sleeping a configured number of milliseconds, modelling a stuck
+//!   transfer.  The streamer's per-stage deadline
+//!   ([`crate::sched::RetryPolicy::stage_timeout_ms`]) turns a stall past
+//!   the deadline into a timeout error instead of a hang.
+//!
+//! All three error kinds are *retryable*: the prefetch worker retries a
+//! failed stage with capped exponential backoff before surfacing the
+//! error, so a one-shot injected fault is absorbed transparently (and
+//! counted in [`crate::sched::StreamerStats::retries`]), while a
+//! persistent one exhausts the budget and fails the stage.
+//!
+//! Plans parse from the `--inject-faults` CLI spec — see
+//! [`FaultPlan::parse`].  Everything is seeded and deterministic: the
+//! same spec produces the same fault sequence on every run, which is what
+//! lets CI assert survivor bit-exactness under injected faults.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{LayerChunk, MatrixUnit, QuantLayer};
+use crate::sched::LayerFetcher;
+use crate::util::Rng;
+
+/// One kind of injected staging fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The fetch fails with an I/O-style read error.
+    ReadErr,
+    /// The fetch observes a truncated source (short read).
+    Truncated,
+    /// The fetched bytes were corrupted and the checksum layer caught it
+    /// (surfaces as a checksum-mismatch error; see the module docs).
+    Corrupt,
+    /// The fetch succeeds, but only after stalling for this many
+    /// milliseconds (models a stuck DDR/disk transfer).
+    Stall(u64),
+}
+
+impl FaultKind {
+    /// Stable spec/CLI label for this kind.
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::ReadErr => "readerr",
+            FaultKind::Truncated => "truncated",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Stall(_) => "stall",
+        }
+    }
+
+    fn parse(s: &str, stall_ms: u64) -> Result<FaultKind> {
+        Ok(match s {
+            "readerr" => FaultKind::ReadErr,
+            "truncated" => FaultKind::Truncated,
+            "corrupt" => FaultKind::Corrupt,
+            "stall" => FaultKind::Stall(stall_ms),
+            other => bail!(
+                "unknown fault kind '{other}' (expected readerr|truncated|corrupt|stall)"
+            ),
+        })
+    }
+}
+
+/// A scripted fault: fire `kind` on fetches of (`layer`, `unit`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultTrigger {
+    /// Transformer layer the trigger matches.
+    pub layer: usize,
+    /// Matrix unit the trigger matches; `None` matches any unit and
+    /// whole-layer fetches (a whole-layer fetch contains every unit, so
+    /// unit-specific triggers match it too).
+    pub unit: Option<MatrixUnit>,
+    /// Fault to inject when the trigger matches.
+    pub kind: FaultKind,
+    /// Remaining fires; `u32::MAX` means "always".
+    pub times: u32,
+}
+
+/// A deterministic fault schedule: seeded background probability plus
+/// scripted triggers.  Parsed from the `--inject-faults` spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Per-fetch probability of a random retryable fault (alternating
+    /// [`FaultKind::ReadErr`] / [`FaultKind::Corrupt`], seeded).
+    pub p: f64,
+    /// PRNG seed for the probabilistic faults.
+    pub seed: u64,
+    /// Stall duration used by `stall` triggers, in milliseconds.
+    pub stall_ms: u64,
+    /// Scripted (layer, unit, kind) triggers, checked before the
+    /// probabilistic draw.
+    pub triggers: Vec<FaultTrigger>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { p: 0.0, seed: 0x5eed, stall_ms: 50, triggers: Vec::new() }
+    }
+}
+
+fn parse_unit(s: &str) -> Result<Option<MatrixUnit>> {
+    Ok(Some(match s {
+        "any" | "layer" => return Ok(None),
+        "norms" => MatrixUnit::Norms,
+        "qkv" => MatrixUnit::Qkv,
+        "wo" => MatrixUnit::Wo,
+        "w13" => MatrixUnit::W13,
+        "w2" => MatrixUnit::W2,
+        other => bail!("unknown matrix unit '{other}' (expected norms|qkv|wo|w13|w2|any)"),
+    }))
+}
+
+impl FaultPlan {
+    /// Parse an `--inject-faults` spec: comma-separated items of
+    ///
+    /// * `p=<f64>` — per-fetch probability of a random retryable fault,
+    /// * `seed=<u64>` — PRNG seed for the probabilistic draws,
+    /// * `stall_ms=<u64>` — duration injected stalls sleep for,
+    /// * `at=<layer>/<unit>/<kind>[/<count>]` — a scripted trigger:
+    ///   `unit` is `norms|qkv|wo|w13|w2|any`, `kind` is
+    ///   `readerr|truncated|corrupt|stall`, `count` is a fire count
+    ///   (default 1) or `always`.
+    ///
+    /// Examples: `p=0.01,seed=42` (1% random faults),
+    /// `at=1/qkv/readerr` (fail the first fetch of layer 1's QKV block
+    /// once), `stall_ms=200,at=0/any/stall/always` (every layer-0 fetch
+    /// stalls 200 ms).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let mut raw_triggers: Vec<String> = Vec::new();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (key, val) =
+                item.split_once('=').with_context(|| format!("bad fault spec item '{item}'"))?;
+            match key {
+                "p" => {
+                    plan.p = val.parse().with_context(|| format!("bad probability '{val}'"))?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&plan.p),
+                        "fault probability {} outside [0, 1]",
+                        plan.p
+                    );
+                }
+                "seed" => {
+                    plan.seed = val.parse().with_context(|| format!("bad seed '{val}'"))?;
+                }
+                "stall_ms" => {
+                    plan.stall_ms =
+                        val.parse().with_context(|| format!("bad stall_ms '{val}'"))?;
+                }
+                // triggers are parsed after the scalar keys so `stall_ms`
+                // applies regardless of item order in the spec
+                "at" => raw_triggers.push(val.to_string()),
+                other => bail!("unknown fault spec key '{other}' (expected p|seed|stall_ms|at)"),
+            }
+        }
+        for val in raw_triggers {
+            let parts: Vec<&str> = val.split('/').collect();
+            anyhow::ensure!(
+                parts.len() == 3 || parts.len() == 4,
+                "bad trigger '{val}' (expected <layer>/<unit>/<kind>[/<count>])"
+            );
+            let layer: usize =
+                parts[0].parse().with_context(|| format!("bad trigger layer '{}'", parts[0]))?;
+            let unit = parse_unit(parts[1])?;
+            let kind = FaultKind::parse(parts[2], plan.stall_ms)?;
+            let times = match parts.get(3) {
+                None => 1,
+                Some(&"always") => u32::MAX,
+                Some(n) => {
+                    let n: u32 =
+                        n.parse().with_context(|| format!("bad trigger count '{n}'"))?;
+                    anyhow::ensure!(n >= 1, "trigger count must be >= 1");
+                    n
+                }
+            };
+            plan.triggers.push(FaultTrigger { layer, unit, kind, times });
+        }
+        Ok(plan)
+    }
+
+    /// True when this plan can never inject anything.
+    pub fn is_empty(&self) -> bool {
+        self.p <= 0.0 && self.triggers.is_empty()
+    }
+}
+
+/// [`LayerFetcher`] decorator that injects the faults of a [`FaultPlan`]
+/// around an inner fetcher.  Scripted triggers are consulted first (and
+/// consume a fire), then the seeded probabilistic draw.  Deterministic:
+/// the fault sequence depends only on the plan and the order of fetches.
+pub struct FaultyFetcher<F: LayerFetcher> {
+    inner: F,
+    plan: FaultPlan,
+    rng: Rng,
+}
+
+impl<F: LayerFetcher> FaultyFetcher<F> {
+    /// Wrap `inner` with the faults of `plan`.
+    pub fn new(inner: F, plan: FaultPlan) -> Self {
+        let rng = Rng::new(plan.seed);
+        FaultyFetcher { inner, plan, rng }
+    }
+
+    /// Decide whether this fetch faults; scripted triggers consume a fire.
+    fn decide(&mut self, layer: usize, unit: Option<MatrixUnit>) -> Option<FaultKind> {
+        for t in &mut self.plan.triggers {
+            if t.times == 0 || t.layer != layer {
+                continue;
+            }
+            // a whole-layer fetch (unit None) contains every unit, so any
+            // trigger on this layer matches it; unit-specific fetches
+            // match wildcard triggers and their own unit
+            let matches = match (t.unit, unit) {
+                (None, _) | (Some(_), None) => true,
+                (Some(tu), Some(fu)) => tu == fu,
+            };
+            if !matches {
+                continue;
+            }
+            if t.times != u32::MAX {
+                t.times -= 1;
+            }
+            return Some(t.kind);
+        }
+        if self.plan.p > 0.0 && self.rng.next_f64() < self.plan.p {
+            // probabilistic faults alternate between the two retryable
+            // error kinds; stalls are scripted-only so probabilistic soak
+            // runs stay fast
+            return Some(if self.rng.next_u64() & 1 == 0 {
+                FaultKind::ReadErr
+            } else {
+                FaultKind::Corrupt
+            });
+        }
+        None
+    }
+
+    /// Fire one injected fault (error kinds bail, stalls sleep then pass).
+    fn trip(&self, kind: FaultKind, layer: usize, what: &str) -> Result<()> {
+        match kind {
+            FaultKind::ReadErr => bail!("injected fault: read error at layer {layer} ({what})"),
+            FaultKind::Truncated => {
+                bail!("injected fault: truncated read at layer {layer} ({what})")
+            }
+            FaultKind::Corrupt => bail!(
+                "injected fault: segment checksum mismatch at layer {layer} ({what}) [corrupt]"
+            ),
+            FaultKind::Stall(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<F: LayerFetcher> LayerFetcher for FaultyFetcher<F> {
+    fn fetch(&mut self, layer: usize) -> Result<QuantLayer> {
+        if let Some(kind) = self.decide(layer, None) {
+            self.trip(kind, layer, "layer")?;
+        }
+        self.inner.fetch(layer)
+    }
+
+    fn n_layers(&self) -> usize {
+        self.inner.n_layers()
+    }
+
+    fn fetch_chunk(&mut self, layer: usize, unit: MatrixUnit) -> Result<LayerChunk> {
+        if let Some(kind) = self.decide(layer, Some(unit)) {
+            self.trip(kind, layer, unit.name())?;
+        }
+        self.inner.fetch_chunk(layer, unit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::model::{FloatModel, LlamaConfig, QuantModel};
+    use crate::sched::MemFetcher;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
+            dim: 64,
+            hidden_dim: 128,
+            n_layers: 4,
+            n_heads: 2,
+            n_kv_heads: 1,
+            vocab_size: 64,
+            seq_len: 32,
+            gs: 32,
+        }
+    }
+
+    fn mem_fetcher() -> MemFetcher {
+        let qm = QuantModel::from_float(&FloatModel::random(tiny_cfg(), 42));
+        MemFetcher { layers: Arc::new(qm.layers) }
+    }
+
+    #[test]
+    fn spec_round_trips_every_field() {
+        let p = FaultPlan::parse("p=0.25,seed=7,stall_ms=120,at=2/qkv/readerr/3").unwrap();
+        assert_eq!(p.p, 0.25);
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.stall_ms, 120);
+        assert_eq!(
+            p.triggers,
+            vec![FaultTrigger {
+                layer: 2,
+                unit: Some(MatrixUnit::Qkv),
+                kind: FaultKind::ReadErr,
+                times: 3,
+            }]
+        );
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn stall_ms_applies_regardless_of_item_order() {
+        // the trigger appears BEFORE stall_ms in the spec but must still
+        // pick up the configured duration
+        let p = FaultPlan::parse("at=0/any/stall,stall_ms=250").unwrap();
+        assert_eq!(p.triggers[0].kind, FaultKind::Stall(250));
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in [
+            "nope",
+            "p=2.0",
+            "p=x",
+            "at=0/qkv",
+            "at=0/qkv/explode",
+            "at=0/huh/readerr",
+            "at=0/qkv/readerr/0",
+            "wat=1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn scripted_trigger_fires_exactly_n_times() {
+        let plan = FaultPlan::parse("at=1/any/readerr/2").unwrap();
+        let mut f = FaultyFetcher::new(mem_fetcher(), plan);
+        assert!(f.fetch(0).is_ok(), "untargeted layer passes through");
+        let e = f.fetch(1).unwrap_err().to_string();
+        assert!(e.contains("injected fault: read error"), "{e}");
+        assert!(f.fetch(1).is_err(), "second fire");
+        assert!(f.fetch(1).is_ok(), "budget exhausted: layer 1 fetches cleanly again");
+    }
+
+    #[test]
+    fn unit_triggers_match_their_unit_and_whole_layer_fetches() {
+        let plan = FaultPlan::parse("at=0/w2/corrupt/always").unwrap();
+        let mut f = FaultyFetcher::new(mem_fetcher(), plan);
+        assert!(f.fetch_chunk(0, MatrixUnit::Qkv).is_ok(), "other units unaffected");
+        let e = f.fetch_chunk(0, MatrixUnit::W2).unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch"), "{e}");
+        assert!(f.fetch(0).is_err(), "whole-layer fetch contains the targeted unit");
+        assert!(f.fetch(1).is_ok());
+    }
+
+    #[test]
+    fn probabilistic_faults_are_seed_deterministic() {
+        let decisions = |seed: u64| {
+            let plan = FaultPlan { p: 0.3, seed, ..FaultPlan::default() };
+            let mut f = FaultyFetcher::new(mem_fetcher(), plan);
+            (0..64).map(|i| f.fetch(i % 4).is_err()).collect::<Vec<bool>>()
+        };
+        assert_eq!(decisions(9), decisions(9), "same seed, same fault sequence");
+        assert_ne!(decisions(9), decisions(10), "different seeds diverge");
+        assert!(decisions(9).iter().any(|&e| e), "p=0.3 over 64 draws faults at least once");
+        assert!(!decisions(9).iter().all(|&e| e), "...but not always");
+    }
+
+    #[test]
+    fn empty_plan_is_a_passthrough() {
+        let mut f = FaultyFetcher::new(mem_fetcher(), FaultPlan::default());
+        for li in 0..4 {
+            assert!(f.fetch(li).is_ok());
+            assert!(f.fetch_chunk(li, MatrixUnit::Norms).is_ok());
+        }
+        assert_eq!(f.n_layers(), 4);
+    }
+}

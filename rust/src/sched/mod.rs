@@ -55,12 +55,16 @@
 //! models rather than wall-clock.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
+
+pub mod fault;
+
+pub use fault::{FaultKind, FaultPlan, FaultTrigger, FaultyFetcher};
 
 use crate::ckpt::CkptSource;
 use crate::fpga::{AxiModel, PlConfig};
@@ -356,6 +360,34 @@ pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
 /// the last bucket.
 pub const RING_WAIT_BUCKETS: usize = 9;
 
+/// Retry and deadline policy of the staged-read path.
+///
+/// The prefetch worker retries a failed stage (an I/O error, an injected
+/// fault, a checksum mismatch caught by the ckpt integrity layer) with
+/// capped exponential backoff before surfacing the error — the ring is
+/// never torn down for a transient fault.  Independently, the compute
+/// side bounds every wait on the worker with `stage_timeout_ms`, so a
+/// stalled transfer surfaces as a timeout error instead of a hang.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per stage (1 = no retry).  Default 3.
+    pub max_attempts: u32,
+    /// Initial backoff between attempts, in milliseconds (doubles per
+    /// retry).  Default 2.
+    pub backoff_ms: u64,
+    /// Backoff cap in milliseconds.  Default 50.
+    pub backoff_cap_ms: u64,
+    /// Compute-side deadline for one stage wait, in milliseconds; a wait
+    /// past it fails with a timeout error.  Default 30 000.
+    pub stage_timeout_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff_ms: 2, backoff_cap_ms: 50, stage_timeout_ms: 30_000 }
+    }
+}
+
 /// Staging counters of a [`Streamer`] (Fig. 2 accounting plus the serving
 /// metrics exported through `STATS`).
 #[derive(Clone, Copy, Debug, Default)]
@@ -405,6 +437,20 @@ pub struct StreamerStats {
     pub ring_occupancy_sum: u64,
     /// Number of occupancy samples (one per staged-unit consume).
     pub ring_samples: u64,
+    /// Failed stage attempts the worker retried (capped exponential
+    /// backoff, [`RetryPolicy`]).  Retries never increment
+    /// [`StreamerStats::transfers`] or [`StreamerStats::staged_bytes`] —
+    /// only the final successful payload is billed — so a fault-free run
+    /// and a run whose faults were all absorbed report identical transfer
+    /// counters, with the recovery cost visible here.
+    pub retries: u64,
+    /// Stages that kept failing after every retry and surfaced an error
+    /// to the compute side.
+    pub stage_faults: u64,
+    /// Stage waits that hit the per-stage deadline
+    /// ([`RetryPolicy::stage_timeout_ms`]) — stalled transfers surfaced
+    /// as timeout errors instead of hangs.
+    pub stage_timeouts: u64,
 }
 
 impl StreamerStats {
@@ -485,8 +531,11 @@ struct StagedResp {
     slot: usize,
     /// The staged payload, or the fetch/upload failure.
     result: Result<StagedPayload>,
-    /// Worker-side wall time of the fetch + upload.
+    /// Worker-side wall time of the fetch + upload (including retries).
     staged_s: f64,
+    /// Failed attempts retried before this response (0 on the fault-free
+    /// path).
+    retries: u32,
 }
 
 /// The long-lived staging thread plus its request/response channels.  Up
@@ -497,6 +546,12 @@ struct PrefetchWorker {
     req_tx: Option<Sender<StageReq>>,
     resp_rx: Receiver<StagedResp>,
     handle: Option<JoinHandle<()>>,
+    /// Slots whose wait hit the stage deadline: their responses are still
+    /// in flight and must be received-and-dropped before younger ones.
+    /// Responses arrive strictly in request order and a timed-out request
+    /// is always older than everything still pending, so this queue is
+    /// drained positionally (front first) as late answers arrive.
+    abandoned: VecDeque<usize>,
 }
 
 /// Upload one host matrix to the device, pairing the host copy with its
@@ -539,19 +594,33 @@ fn stage_unit(
 
 /// Body of the persistent prefetch worker: owns the fetcher ("DDR") and
 /// the device runtime handle, serves staging requests until told to stop.
-/// A panic inside `fetch`/upload drops `resp_tx`, which the compute side
-/// observes as a disconnected channel — an error, never a hang.
+/// A *failed* stage (I/O error, injected fault, checksum mismatch) is
+/// retried in place with capped exponential backoff — the ring survives
+/// transient faults without being torn down.  A panic inside
+/// `fetch`/upload drops `resp_tx`, which the compute side observes as a
+/// disconnected channel — an error, never a hang.
 fn prefetch_worker_loop(
     rt: Arc<Runtime>,
     mut fetcher: Box<dyn LayerFetcher>,
     req_rx: Receiver<StageReq>,
     resp_tx: Sender<StagedResp>,
+    policy: RetryPolicy,
 ) {
     while let Ok(StageReq::Stage { slot, unit }) = req_rx.recv() {
         let t = Instant::now();
-        let result = stage_unit(&rt, fetcher.as_mut(), unit);
+        let mut retries = 0u32;
+        let mut backoff = policy.backoff_ms;
+        let mut result = stage_unit(&rt, fetcher.as_mut(), unit);
+        while result.is_err() && retries + 1 < policy.max_attempts.max(1) {
+            std::thread::sleep(Duration::from_millis(backoff));
+            backoff = (backoff.saturating_mul(2)).min(policy.backoff_cap_ms);
+            retries += 1;
+            result = stage_unit(&rt, fetcher.as_mut(), unit);
+        }
+        let result = result
+            .with_context(|| format!("staging {unit:?} failed after {} attempts", retries + 1));
         let staged_s = t.elapsed().as_secs_f64();
-        if resp_tx.send(StagedResp { slot, result, staged_s }).is_err() {
+        if resp_tx.send(StagedResp { slot, result, staged_s, retries }).is_err() {
             break; // streamer gone without the handshake; nothing to serve
         }
     }
@@ -591,6 +660,9 @@ pub struct Streamer {
     /// flight or already completed and parked in the response channel).
     pending: VecDeque<usize>,
     worker: PrefetchWorker,
+    /// Retry/backoff policy of the worker plus the compute-side stage
+    /// deadline ([`RetryPolicy::stage_timeout_ms`]).
+    retry: RetryPolicy,
     /// Staging counters (time, transfers, bytes, spawns, ring occupancy).
     pub stats: StreamerStats,
 }
@@ -638,6 +710,21 @@ impl Streamer {
         depth: usize,
         gran: StageGranularity,
     ) -> Result<Self> {
+        Self::with_retry(rt, fetcher, mode, depth, gran, RetryPolicy::default())
+    }
+
+    /// [`Streamer::with_opts`] with an explicit staged-read
+    /// [`RetryPolicy`]: how many times the worker retries a failed stage
+    /// (capped exponential backoff) and how long the compute side waits
+    /// on any one stage before surfacing a timeout error.
+    pub fn with_retry(
+        rt: Arc<Runtime>,
+        fetcher: impl LayerFetcher + 'static,
+        mode: SchedMode,
+        depth: usize,
+        gran: StageGranularity,
+        retry: RetryPolicy,
+    ) -> Result<Self> {
         anyhow::ensure!(depth >= 1, "prefetch depth must be >= 1 (got {depth})");
         let n_layers = fetcher.n_layers();
         anyhow::ensure!(n_layers >= 1, "cannot stream a zero-layer model");
@@ -646,7 +733,7 @@ impl Streamer {
         let fetcher: Box<dyn LayerFetcher> = Box::new(fetcher);
         let handle = std::thread::Builder::new()
             .name("llamaf-prefetch".into())
-            .spawn(move || prefetch_worker_loop(rt, fetcher, req_rx, resp_tx))
+            .spawn(move || prefetch_worker_loop(rt, fetcher, req_rx, resp_tx, retry))
             .expect("spawn prefetch worker");
         let mut s = Streamer {
             mode,
@@ -655,7 +742,13 @@ impl Streamer {
             gran,
             current: None,
             pending: VecDeque::with_capacity(depth),
-            worker: PrefetchWorker { req_tx: Some(req_tx), resp_rx, handle: Some(handle) },
+            worker: PrefetchWorker {
+                req_tx: Some(req_tx),
+                resp_rx,
+                handle: Some(handle),
+                abandoned: VecDeque::new(),
+            },
+            retry,
             stats: StreamerStats { spawns: 1, ring_depth: depth, ..StreamerStats::default() },
         };
         // stage the walk's first unit (construction staging is billed to
@@ -717,32 +810,91 @@ impl Streamer {
         Ok(())
     }
 
-    /// Block until the *oldest* ring staging completes.  Returns the
-    /// staged payload, the worker-side staging seconds, and the seconds
-    /// *this* thread spent waiting.  A dead worker (panicked
-    /// fetcher/runtime) surfaces as an error here instead of a hang.
+    /// Block until the *oldest* ring staging completes, bounded by the
+    /// per-stage deadline ([`RetryPolicy::stage_timeout_ms`]).  Returns
+    /// the staged payload, the worker-side staging seconds, and the
+    /// seconds *this* thread spent waiting.  A dead worker (panicked
+    /// fetcher/runtime) surfaces as an error here instead of a hang, and
+    /// a stalled transfer surfaces as a timeout error — the slot is
+    /// parked on the abandoned queue so its late answer is dropped
+    /// without desequencing the ring.
     fn wait_front(&mut self) -> Result<(StagedPayload, f64, f64)> {
         let slot = self.pending.pop_front().expect("no staging in flight");
         let t = Instant::now();
-        let resp = self.worker.resp_rx.recv().map_err(|_| {
-            anyhow!("prefetch worker died while staging {:?} (panicked?)", self.slot_unit(slot))
-        })?;
-        let wait_s = t.elapsed().as_secs_f64();
-        anyhow::ensure!(
-            resp.slot == slot,
-            "prefetch worker answered slot {} for request {slot}",
-            resp.slot
-        );
-        Ok((resp.result?, resp.staged_s, wait_s))
+        let deadline = Duration::from_millis(self.retry.stage_timeout_ms);
+        loop {
+            let Some(remaining) = deadline.checked_sub(t.elapsed()) else {
+                self.worker.abandoned.push_back(slot);
+                self.stats.stage_timeouts += 1;
+                return Err(anyhow!(
+                    "staging {:?} timed out after {} ms (stalled transfer?)",
+                    self.slot_unit(slot),
+                    self.retry.stage_timeout_ms
+                ));
+            };
+            match self.worker.resp_rx.recv_timeout(remaining) {
+                Ok(resp) => {
+                    if !self.worker.abandoned.is_empty() {
+                        // a late answer to a previously timed-out request:
+                        // responses are FIFO and abandoned slots are older
+                        // than everything pending, so drop positionally
+                        self.worker.abandoned.pop_front();
+                        continue;
+                    }
+                    let wait_s = t.elapsed().as_secs_f64();
+                    self.stats.retries += u64::from(resp.retries);
+                    anyhow::ensure!(
+                        resp.slot == slot,
+                        "prefetch worker answered slot {} for request {slot}",
+                        resp.slot
+                    );
+                    match resp.result {
+                        Ok(p) => return Ok((p, resp.staged_s, wait_s)),
+                        Err(e) => {
+                            self.stats.stage_faults += 1;
+                            return Err(e);
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    self.worker.abandoned.push_back(slot);
+                    self.stats.stage_timeouts += 1;
+                    return Err(anyhow!(
+                        "staging {:?} timed out after {} ms (stalled transfer?)",
+                        self.slot_unit(slot),
+                        self.retry.stage_timeout_ms
+                    ));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!(
+                        "prefetch worker died while staging {:?} (panicked?)",
+                        self.slot_unit(slot)
+                    ));
+                }
+            }
+        }
     }
 
-    /// Drain the whole ring: every queued staging is received and dropped
-    /// (stale after a reset or an out-of-order access).  Discards are not
-    /// billed to any counter; a dead worker is tolerated (the next
-    /// `request` reports it).
+    /// Drain the whole ring: every queued staging — including late
+    /// answers to abandoned (timed-out) requests — is received and
+    /// dropped (stale after a reset or an out-of-order access).  Discards
+    /// are not billed to any counter; a dead worker is tolerated (the
+    /// next `request` reports it).
     fn discard_all(&mut self) {
-        while self.pending.pop_front().is_some() {
-            let _ = self.worker.resp_rx.recv();
+        while !self.worker.abandoned.is_empty() || !self.pending.is_empty() {
+            match self.worker.resp_rx.recv() {
+                Ok(_) => {
+                    // FIFO: abandoned slots are older than pending ones
+                    if self.worker.abandoned.pop_front().is_none() {
+                        self.pending.pop_front();
+                    }
+                }
+                Err(_) => {
+                    self.worker.abandoned.clear();
+                    self.pending.clear();
+                    break;
+                }
+            }
         }
     }
 
@@ -1654,5 +1806,102 @@ mod streamer_tests {
             4 * per_layer,
             "five chunks per layer must sum exactly to the layer's stream bytes"
         );
+    }
+
+    // ------------------------------------------------------------------
+    // Staged-read retry, fault surfacing, and the stage deadline
+    // ------------------------------------------------------------------
+
+    /// Streamer over a [`FaultyFetcher`]-wrapped [`MemFetcher`] with an
+    /// explicit retry policy (backoff zeroed so tests run fast).
+    fn setup_faulty(
+        spec: &str,
+        retry: RetryPolicy,
+    ) -> Result<(Streamer, Arc<Vec<QuantLayer>>)> {
+        let qm = QuantModel::from_float(&FloatModel::random(tiny_cfg(), 42));
+        let layers = Arc::new(qm.layers);
+        let rt = Arc::new(Runtime::with_shapes(&[]));
+        let plan = FaultPlan::parse(spec).unwrap();
+        let fetcher = FaultyFetcher::new(MemFetcher { layers: Arc::clone(&layers) }, plan);
+        let s = Streamer::with_retry(
+            rt,
+            fetcher,
+            SchedMode::Async,
+            DEFAULT_PREFETCH_DEPTH,
+            StageGranularity::Layer,
+            retry,
+        )?;
+        Ok((s, layers))
+    }
+
+    fn fast_retry() -> RetryPolicy {
+        RetryPolicy { backoff_ms: 0, backoff_cap_ms: 0, ..RetryPolicy::default() }
+    }
+
+    #[test]
+    fn flaky_fetch_is_retried_transparently() {
+        // one scripted read error at layer 1: the worker's retry absorbs
+        // it, the walk sees no error, and the recovery cost is visible
+        // only in the retry counter — transfers/bytes match a clean run
+        let (mut s, layers) = setup_faulty("at=1/any/readerr", fast_retry()).unwrap();
+        for li in 0..4 {
+            assert_layer_is(&mut s, li, &layers);
+        }
+        assert_eq!(s.stats.retries, 1, "exactly one failed attempt retried");
+        assert_eq!(s.stats.stage_faults, 0, "no fault surfaced to compute");
+        assert_eq!(s.stats.stage_timeouts, 0);
+        assert_eq!(s.stats.transfers, 4, "retries are not billed as transfers");
+    }
+
+    #[test]
+    fn exhausted_retries_surface_error_and_ring_survives() {
+        // layer 2 fails on EVERY attempt: after max_attempts the error
+        // surfaces to the compute side, but the worker and ring stay up —
+        // other layers keep staging
+        let (mut s, layers) = setup_faulty("at=2/any/readerr/always", fast_retry()).unwrap();
+        assert_layer_is(&mut s, 0, &layers);
+        assert_layer_is(&mut s, 1, &layers);
+        let e = s.layer(2).unwrap_err();
+        let chain = format!("{e:#}");
+        assert!(chain.contains("injected fault"), "{chain}");
+        assert!(chain.contains("failed after 3 attempts"), "{chain}");
+        assert_eq!(s.stats.stage_faults, 1);
+        assert_eq!(s.stats.retries, 2, "two retries before giving up");
+        // the ring recovers: a different layer stages fine afterwards
+        assert_layer_is(&mut s, 3, &layers);
+    }
+
+    #[test]
+    fn stall_past_deadline_is_a_timeout_not_a_hang() {
+        // layer 1 stalls 300 ms on every fetch; the stage deadline is
+        // 40 ms, so the wait surfaces as a timeout error — and the late
+        // answer is drained (abandoned-slot discipline), letting the
+        // walk continue on other layers
+        let retry = RetryPolicy { stage_timeout_ms: 40, ..fast_retry() };
+        let (mut s, layers) =
+            setup_faulty("stall_ms=300,at=1/any/stall/always", retry).unwrap();
+        assert_layer_is(&mut s, 0, &layers);
+        let e = s.layer(1).unwrap_err().to_string();
+        assert!(e.contains("timed out after 40 ms"), "{e}");
+        assert_eq!(s.stats.stage_timeouts, 1);
+        // skipping the stalled layer works: discard_all absorbs the late
+        // response before restaging, so the ring never desequences
+        assert_layer_is(&mut s, 2, &layers);
+        assert_layer_is(&mut s, 3, &layers);
+        s.shutdown(); // clean join even after an abandoned slot
+    }
+
+    #[test]
+    fn default_fault_plan_is_a_passthrough() {
+        let (mut s, layers) = setup_faulty("p=0.0", RetryPolicy::default()).unwrap();
+        for _gen in 0..2 {
+            for li in 0..4 {
+                assert_layer_is(&mut s, li, &layers);
+            }
+            s.reset();
+        }
+        assert_eq!(s.stats.retries, 0);
+        assert_eq!(s.stats.stage_faults, 0);
+        assert_eq!(s.stats.stage_timeouts, 0);
     }
 }

@@ -49,13 +49,19 @@
 //! Overload behaviour is explicit: when the connection queue is full the
 //! accept loop answers `ERR busy` and closes instead of queueing unbounded
 //! work; when every session is checked out, `GEN`/`SGEN` answer `ERR busy`.
+//!
+//! Failure behaviour is equally explicit (see `docs/ARCHITECTURE.md`,
+//! "Failure domains"): an I/O fault that survives the staging retries and
+//! the step retries sheds exactly one lane with `ERR fault:`; a request
+//! past its `--request-timeout` deadline is shed with `ERR deadline:`.
+//! Both leave every other lane decoding bit-identically.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -74,7 +80,7 @@ use crate::tokenizer::Tokenizer;
 pub type ExecFactory = dyn Fn() -> Box<dyn GqmvExec + Send> + Sync;
 
 /// Knobs of the concurrent serving mode.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeOpts {
     /// Protocol worker threads (connection parsing + streaming replies).
     pub workers: usize,
@@ -111,6 +117,16 @@ pub struct ServeOpts {
     /// (CLI `--prefill-chunk`); 1 (the default) is the classic one token
     /// per step.  Bit-identical at any value.
     pub prefill_chunk: usize,
+    /// Per-request deadline in milliseconds (CLI `--request-timeout`);
+    /// the clock starts at submission, so queue wait counts against it.
+    /// A lane past its deadline is shed with `ERR deadline:` while the
+    /// rest of the batch keeps decoding.  None (the default) = no limit.
+    pub request_timeout_ms: Option<u64>,
+    /// Deterministic I/O fault-injection plan applied to the decode
+    /// thread's staged reads (CLI `--inject-faults`); None = no injection.
+    /// Test-only in spirit, but safe in production: an empty plan is a
+    /// passthrough.
+    pub faults: Option<crate::sched::FaultPlan>,
 }
 
 impl Default for ServeOpts {
@@ -126,6 +142,8 @@ impl Default for ServeOpts {
             resident: false,
             kv_pages: 0,
             prefill_chunk: 1,
+            request_timeout_ms: None,
+            faults: None,
         }
     }
 }
@@ -163,6 +181,8 @@ struct Shared {
     cfg: LlamaConfig,
     /// `resident` or `streamed` — surfaced in `STATS`.
     weights: &'static str,
+    /// Per-request deadline every submission carries (None = no limit).
+    timeout: Option<Duration>,
     next_conn: AtomicU64,
     workers_live: AtomicUsize,
     addr: std::net::SocketAddr,
@@ -286,7 +306,7 @@ impl Server {
         // resolve the address BEFORE spawning the decode thread: any `?`
         // between scheduler creation and `sched.shutdown()` would leak it
         let addr = self.local_addr()?;
-        let sched = BatchScheduler::new(
+        let sched = BatchScheduler::with_faults(
             Arc::clone(&model),
             make_exec(),
             BatchOpts {
@@ -301,6 +321,7 @@ impl Server {
                 prefill_chunk: opts.prefill_chunk,
                 ..Default::default()
             },
+            opts.faults.clone(),
         );
         let page_pool = (opts.kv_pages > 0)
             .then(|| Arc::new(PagePool::new(&model.cfg, opts.kv_pages, DEFAULT_PAGE_POSITIONS)));
@@ -316,6 +337,7 @@ impl Server {
             sched: Arc::clone(&sched),
             cfg: model.cfg,
             weights: if opts.resident { "resident" } else { "streamed" },
+            timeout: opts.request_timeout_ms.map(Duration::from_millis),
             next_conn: AtomicU64::new(0),
             workers_live: AtomicUsize::new(0),
             addr,
@@ -535,14 +557,16 @@ impl Server {
         // never stalls the batch.
         let t = Instant::now();
         let (sess_back, gen) = if streaming {
-            shared.sched.generate(sess, &prompt_ids, steps, |i, id| {
+            shared.sched.generate_with_deadline(sess, &prompt_ids, steps, shared.timeout, |i, id| {
                 let piece = self.tokenizer.decode_one(id).replace('\n', " ");
                 out.write_all(format!("TOK {i} {id} {piece}\n").as_bytes())?;
                 out.flush()?;
                 Ok(())
             })
         } else {
-            shared.sched.generate(sess, &prompt_ids, steps, |_, _| Ok(()))
+            shared.sched.generate_with_deadline(sess, &prompt_ids, steps, shared.timeout, |_, _| {
+                Ok(())
+            })
         };
         *session = sess_back; // released to the pool when the conn closes
         if session.is_none() {
@@ -670,6 +694,12 @@ fn metrics_lines(shared: &Shared) -> Vec<(&'static str, String)> {
         ("admission_ms_mean", format!("{:.3}", b.admission_ms_mean())),
         ("prefill_chunk", b.prefill_chunk().to_string()),
         ("chunk_feeds_total", b.chunk_feeds().to_string()),
+        ("stage_retries_total", b.stage_retries().to_string()),
+        ("stage_faults_total", b.stage_faults().to_string()),
+        ("stage_timeouts_total", b.stage_timeouts().to_string()),
+        ("step_retries_total", b.step_retries().to_string()),
+        ("lane_faults_total", b.lane_faults().to_string()),
+        ("deadline_expired_total", b.deadline_expired().to_string()),
         ("page_hits_total", pp.map(|p| p.hits()).unwrap_or(0).to_string()),
         ("page_misses_total", pp.map(|p| p.misses()).unwrap_or(0).to_string()),
         ("page_evictions_total", pp.map(|p| p.evictions()).unwrap_or(0).to_string()),

@@ -178,6 +178,23 @@ impl ExecTrace {
         });
     }
 
+    /// Discard the current (most recent) step: pop its events and step
+    /// the counter back.  Used by the batch scheduler's fault path — a
+    /// forward step that errors mid-flight is retried, and the retry
+    /// must not leave the aborted attempt's partial events in the
+    /// trace (they would diff as a schedule mismatch against a clean
+    /// run).  No-op on an empty trace.
+    pub fn rollback_step(&mut self) {
+        if self.steps == 0 {
+            return;
+        }
+        let cur = self.steps - 1;
+        while self.events.last().map(|e| e.step == cur).unwrap_or(false) {
+            self.events.pop();
+        }
+        self.steps -= 1;
+    }
+
     /// Model geometry the trace was recorded against.
     pub fn cfg(&self) -> &LlamaConfig {
         &self.cfg
@@ -566,6 +583,38 @@ mod tests {
         // missing footer
         let cut = text.rsplit_once("end").unwrap().0;
         assert!(ExecTrace::parse(cut).is_err());
+    }
+
+    #[test]
+    fn rollback_erases_a_partial_step_exactly() {
+        let clean = sample_trace("clean");
+        // same schedule, but step 1 is attempted, aborted mid-flight,
+        // rolled back, and re-run — the trace must come out identical
+        let cfg = tiny_cfg();
+        let mut t = ExecTrace::new(&cfg, "retried");
+        let run_step = |t: &mut ExecTrace, step: u32| {
+            t.begin_step();
+            for layer in 0..cfg.n_layers {
+                for op in [TraceOp::Qkv, TraceOp::Wo, TraceOp::W13, TraceOp::W2] {
+                    t.record(layer, op, 0, &[step as f32, layer as f32]);
+                }
+            }
+            t.record(cfg.n_layers, TraceOp::Cls, 0, &[step as f32]);
+        };
+        run_step(&mut t, 0);
+        // aborted attempt: partial events, then rollback
+        t.begin_step();
+        t.record(0, TraceOp::Qkv, 0, &[99.0]);
+        t.record(0, TraceOp::Wo, 0, &[98.0]);
+        t.rollback_step();
+        run_step(&mut t, 1);
+        run_step(&mut t, 2);
+        let r = diff(&clean, &t);
+        assert!(r.identical(), "{}", r.summary());
+        // rollback on empty is a no-op
+        let mut e = ExecTrace::new(&cfg, "empty");
+        e.rollback_step();
+        assert_eq!(e.steps(), 0);
     }
 
     #[test]

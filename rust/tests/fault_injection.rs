@@ -1,0 +1,390 @@
+//! Integration: the fault-tolerant serving core under injected I/O
+//! faults, end to end.
+//!
+//! The contract under test (see `docs/ARCHITECTURE.md`, "Failure
+//! domains"): an injected staging fault is absorbed by the retry ladder
+//! — staged-read retries first, full-step retries above them — and a
+//! request that survives faults via retries must be **bit-identical**
+//! (tokens AND per-op digest trace) to a fault-free batch-1 run.  A
+//! fault that exhausts every retry sheds exactly ONE lane with a
+//! `fault:` error while every other lane keeps decoding bit-identically;
+//! an expired per-request deadline sheds with `deadline:`.  In all
+//! cases the server drains to zero checked-out sessions and zero live
+//! KV pages, and a checksum-corrupted checkpoint is rejected at staging
+//! time, before any token could be produced from bad weights.
+//!
+//! Everything is deterministic: fault plans are scripted or seeded, so
+//! the same spec produces the same fault sequence on every run.  Runs on
+//! the synthetic tiny model — no artifacts required.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use llamaf::engine::batch::{
+    BatchOpts, BatchScheduler, DEADLINE_ERR_PREFIX, FAULT_ERR_PREFIX, MAX_STEP_ATTEMPTS,
+};
+use llamaf::engine::forward::{CpuEngine, Engine};
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::engine::session::Session;
+use llamaf::model::{FloatModel, LlamaConfig, MatrixUnit, QuantModel};
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::ScalarGqmv;
+use llamaf::sched::{DiskFetcher, FaultPlan, LayerFetcher};
+use llamaf::server::{ServeOpts, Server};
+use llamaf::tokenizer::Tokenizer;
+use llamaf::trace;
+
+fn tiny_cfg() -> LlamaConfig {
+    LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 64,
+        seq_len: 64,
+        gs: 32,
+    }
+}
+
+fn tiny_model(seed: u64) -> Arc<QuantModel> {
+    Arc::new(QuantModel::from_float(&FloatModel::random(tiny_cfg(), seed)))
+}
+
+fn scalar_exec() -> Box<dyn GqmvExec + Send> {
+    Box::new(ScalarGqmv)
+}
+
+/// Batch-1 oracle: a dedicated fault-free engine generating greedily with
+/// the per-op digest recorder armed.  Returns (tokens, trace).
+fn batch1_oracle(
+    model: &Arc<QuantModel>,
+    prompt: &[u32],
+    steps: usize,
+) -> (Vec<u32>, trace::ExecTrace) {
+    let mut eng = CpuEngine::new(Arc::clone(model), Box::new(ScalarGqmv));
+    assert!(eng.trace_start("oracle"));
+    let out = generate(&mut eng, prompt, steps, Sampler::Greedy, false).unwrap();
+    (out.generated, eng.trace_take().unwrap())
+}
+
+#[test]
+fn scripted_transient_faults_absorbed_bit_identically_under_concurrency() {
+    // Three one-shot faults — a read error on layer 0, a corruption and a
+    // truncation on layer 1 — land while several clients share the batch.
+    // Every fault is absorbed below the step level by the staged-read
+    // retries, so every client must match its batch-1 oracle token for
+    // token AND op for op, and only the retry counter may move.
+    let model = tiny_model(40);
+    let plan =
+        FaultPlan::parse("at=0/any/readerr/1,at=1/any/corrupt/1,at=1/any/truncated/1").unwrap();
+    let sched = BatchScheduler::with_faults(
+        Arc::clone(&model),
+        Box::new(ScalarGqmv),
+        BatchOpts { max_batch: 4, trace: true, ..Default::default() },
+        Some(plan),
+    );
+    let handles: Vec<_> = (0..4u64)
+        .map(|ci| {
+            let model = Arc::clone(&model);
+            let sched = Arc::clone(&sched);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(ci * 10));
+                let prompt: Vec<u32> = vec![1 + ci as u32, 10, 11];
+                let steps = 6;
+                let (want, ref_trace) = batch1_oracle(&model, &prompt, steps);
+                let (sess, out) =
+                    sched.generate(Session::new(&model.cfg), &prompt, steps, |_, _| Ok(()));
+                assert!(sess.is_some(), "client {ci}: session not returned");
+                let gen = out.expect("transient faults must be invisible to the caller");
+                assert_eq!(gen.generated, want, "client {ci}: tokens diverged after retries");
+                let exec = gen.exec_trace.expect("trace: true returns an op trace");
+                let report = trace::diff(&ref_trace, &exec);
+                assert!(
+                    report.identical(),
+                    "client {ci}: op trace diverged from batch-1: {}",
+                    report.summary()
+                );
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        sched.metrics().stage_retries() >= 3,
+        "all three injected faults must surface as staged-read retries"
+    );
+    assert_eq!(sched.metrics().stage_faults(), 0, "no stage may exhaust its retries");
+    assert_eq!(sched.metrics().step_retries(), 0, "faults were absorbed below the step level");
+    assert_eq!(sched.metrics().lane_faults(), 0, "no lane may be shed");
+    sched.shutdown();
+}
+
+#[test]
+fn exhausted_retries_shed_one_lane_while_survivors_stay_bit_identical() {
+    // A nine-strike fault burst on layer 1: each failed step burns the
+    // staging layer's full retry budget (3 reads), and after
+    // MAX_STEP_ATTEMPTS failed steps the scheduler sheds exactly one
+    // lane.  9 = 3 × 3 strikes are consumed precisely by that ladder, so
+    // the outcome is deterministic: ONE request fails with a `fault:`
+    // error, the burst is then exhausted, and every surviving request
+    // must be bit-identical to its fault-free batch-1 oracle.
+    let model = tiny_model(41);
+    let plan = FaultPlan::parse("at=1/any/readerr/9").unwrap();
+    let sched = BatchScheduler::with_faults(
+        Arc::clone(&model),
+        Box::new(ScalarGqmv),
+        BatchOpts { max_batch: 4, trace: true, ..Default::default() },
+        Some(plan),
+    );
+    let handles: Vec<_> = (0..3u64)
+        .map(|ci| {
+            let model = Arc::clone(&model);
+            let sched = Arc::clone(&sched);
+            std::thread::spawn(move || -> Option<String> {
+                std::thread::sleep(Duration::from_millis(ci * 25));
+                let prompt: Vec<u32> = vec![2 + ci as u32, 7, 9];
+                let steps = 5;
+                let (sess, out) =
+                    sched.generate(Session::new(&model.cfg), &prompt, steps, |_, _| Ok(()));
+                assert!(sess.is_some(), "client {ci}: session not returned");
+                match out {
+                    Ok(gen) => {
+                        let (want, ref_trace) = batch1_oracle(&model, &prompt, steps);
+                        assert_eq!(gen.generated, want, "client {ci}: survivor diverged");
+                        let exec = gen.exec_trace.expect("trace: true returns an op trace");
+                        let report = trace::diff(&ref_trace, &exec);
+                        assert!(
+                            report.identical(),
+                            "client {ci}: survivor op trace diverged: {}",
+                            report.summary()
+                        );
+                        None
+                    }
+                    Err(e) => Some(e.to_string()),
+                }
+            })
+        })
+        .collect();
+    let errors: Vec<String> = handles.into_iter().filter_map(|h| h.join().unwrap()).collect();
+    assert_eq!(errors.len(), 1, "exactly one lane must be shed, got: {errors:?}");
+    assert!(errors[0].starts_with(FAULT_ERR_PREFIX), "{}", errors[0]);
+    assert!(errors[0].contains("injected fault"), "cause must be preserved: {}", errors[0]);
+    assert_eq!(sched.metrics().lane_faults(), 1);
+    assert_eq!(sched.metrics().step_retries(), u64::from(MAX_STEP_ATTEMPTS));
+    assert!(sched.metrics().stage_faults() >= 1, "staging-layer exhaustion must be exported");
+    sched.shutdown();
+}
+
+#[test]
+fn stall_injection_is_absorbed_and_never_hangs() {
+    // Two 40 ms stalls on layer-1 staging: well inside the per-stage
+    // deadline, so the fetches complete late but correctly.  Tokens and
+    // the op trace must be bit-identical to the fault-free oracle, and
+    // nothing may count as an error — a stall is lost time, not lost
+    // data.  (The test finishing at all is the no-hang assertion; a
+    // stall past RetryPolicy::stage_timeout_ms would surface as a
+    // timeout error, covered by the sched unit tests.)
+    let model = tiny_model(42);
+    let prompt = [3u32, 12, 13];
+    let steps = 6;
+    let (want, ref_trace) = batch1_oracle(&model, &prompt, steps);
+    let plan = FaultPlan::parse("stall_ms=40,at=1/any/stall/2").unwrap();
+    let sched = BatchScheduler::with_faults(
+        Arc::clone(&model),
+        Box::new(ScalarGqmv),
+        BatchOpts { trace: true, ..Default::default() },
+        Some(plan),
+    );
+    let (sess, out) = sched.generate(Session::new(&model.cfg), &prompt, steps, |_, _| Ok(()));
+    assert!(sess.is_some());
+    let gen = out.expect("a stall inside the stage deadline must be invisible");
+    assert_eq!(gen.generated, want, "stalled staging changed tokens");
+    let report = trace::diff(&ref_trace, &gen.exec_trace.unwrap());
+    assert!(report.identical(), "stalled staging perturbed ops: {}", report.summary());
+    assert_eq!(sched.metrics().stage_retries(), 0, "a stall is not a retryable error");
+    assert_eq!(sched.metrics().lane_faults(), 0);
+    sched.shutdown();
+}
+
+#[test]
+fn corrupt_checkpoint_rejected_at_staging_before_any_token() {
+    // A single flipped byte inside layer 1's W2 segment must be caught by
+    // the CRC32 footer when that layer is STAGED — the fetch errors out
+    // before the bad weights could ever reach a forward pass — while
+    // untouched layers still stage cleanly.  `verify_ckpt` must flag the
+    // same mismatch offline.
+    use llamaf::ckpt::{verify_ckpt, write_ckpt_from_float, CkptLayout, VerifyOutcome};
+    use llamaf::quant::FormatId;
+
+    let cfg = tiny_cfg();
+    let fm = FloatModel::random(cfg, 43);
+    let path = std::env::temp_dir().join("llamaf_test_fault_corrupt.lfq8");
+    write_ckpt_from_float(&path, &fm, FormatId::Q8).unwrap();
+    match verify_ckpt(&path).unwrap() {
+        VerifyOutcome::Ok { segments } => assert!(segments > 0, "footer covers no segments"),
+        VerifyOutcome::NoFooter => panic!("freshly written checkpoint must carry a footer"),
+    }
+
+    let off = CkptLayout::new(cfg, FormatId::Q8).matrix_offset(1, MatrixUnit::W2) as usize;
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[off + 7] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut fetcher = DiskFetcher::open(&path).expect("geometry is intact, open succeeds");
+    assert!(fetcher.fetch(0).is_ok(), "untouched layer 0 stages cleanly");
+    let e = fetcher.fetch(1).unwrap_err().to_string();
+    assert!(
+        e.contains("checksum mismatch in layer 1 (w2)"),
+        "corruption must be named at staging time: {e}"
+    );
+    let e = verify_ckpt(&path).unwrap_err().to_string();
+    assert!(e.contains("checksum mismatch"), "offline verify must agree: {e}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serve_soak_under_injected_faults_drains_clean_and_matches_oracle() {
+    // End-to-end soak: seeded probabilistic faults plus a guaranteed
+    // scripted strike while staggered clients stream over a paged KV
+    // pool.  Retries make the faults invisible: completed requests must
+    // be token-identical to the batch-1 oracle, failed ones (possible
+    // only via the explicit shed paths) must carry an honest ERR code,
+    // and the drained server must report zero checked-out sessions and
+    // zero live KV pages either way.
+    let cfg = LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 512,
+        seq_len: 64,
+        gs: 32,
+    };
+    let model = Arc::new(QuantModel::from_float(&FloatModel::random(cfg, 44)));
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 3,
+        queue_depth: 16,
+        max_sessions: 4,
+        kv_pages: 32,
+        faults: Some(FaultPlan::parse("p=0.03,seed=11,at=1/any/readerr/1").unwrap()),
+        request_timeout_ms: Some(30_000),
+        ..Default::default()
+    };
+    let n_clients = 8usize;
+    let server_model = Arc::clone(&model);
+    let server_thread = std::thread::spawn(move || {
+        server.serve_shared(server_model, &scalar_exec, &opts, Some(n_clients)).unwrap()
+    });
+
+    let tokenizer = Tokenizer::new(512);
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let model = Arc::clone(&model);
+            let want = {
+                let ids = tokenizer.encode(&format!("soak prompt {i}"), true);
+                batch1_oracle(&model, &ids, 4).0
+            };
+            std::thread::spawn(move || -> (usize, usize) {
+                std::thread::sleep(Duration::from_millis((i as u64 % 4) * 20));
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                conn.write_all(format!("SGEN 4 soak prompt {i}\n").as_bytes()).unwrap();
+                let mut got: Vec<u32> = Vec::new();
+                loop {
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let line = line.trim_end();
+                    if line.starts_with("TOK ") {
+                        let id: u32 = line.split_whitespace().nth(2).unwrap().parse().unwrap();
+                        got.push(id);
+                    } else if line.starts_with("DONE ") {
+                        assert_eq!(got, want, "client {i}: streamed tokens diverged");
+                        conn.write_all(b"QUIT\n").unwrap();
+                        return (1, 0);
+                    } else if line.starts_with("ERR ") {
+                        // the only legitimate failures are the explicit
+                        // shed paths — never a hang, never garbage tokens
+                        let honest = line.starts_with("ERR fault:")
+                            || line.starts_with("ERR deadline:")
+                            || line.starts_with("ERR busy");
+                        assert!(honest, "client {i}: dishonest error: {line:?}");
+                        return (0, 1);
+                    } else {
+                        panic!("client {i}: unexpected server line: {line:?}");
+                    }
+                }
+            })
+        })
+        .collect();
+    let (mut done, mut errs) = (0usize, 0usize);
+    for h in handles {
+        let (d, e) = h.join().unwrap();
+        done += d;
+        errs += e;
+    }
+    let report = server_thread.join().unwrap();
+    assert_eq!(done + errs, n_clients);
+    assert!(done >= n_clients / 2, "soak mostly failed: {done} done, {errs} errors");
+    assert!(report.tokens > 0, "soak produced no tokens");
+    assert_eq!(report.busy_at_exit, 0, "a session leaked out of the pool");
+    assert_eq!(
+        report.kv_pages_at_exit, 0,
+        "KV page ledger did not drain to zero under injected faults"
+    );
+}
+
+#[test]
+fn request_timeout_sheds_stalled_requests_with_deadline_err() {
+    // A permanent 25 ms stall on layer-1 staging makes every step slow;
+    // a 60 ms request deadline then expires a 32-step generation after a
+    // couple of steps.  The server must answer `ERR deadline:` promptly
+    // — the stall may slow the lane but can never hold it past its
+    // deadline — and still drain to zero sessions and pages.
+    let cfg = LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: 512,
+        seq_len: 64,
+        gs: 32,
+    };
+    let model = Arc::new(QuantModel::from_float(&FloatModel::random(cfg, 45)));
+    let server = Server::bind("127.0.0.1:0", 512).unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 1,
+        queue_depth: 4,
+        max_sessions: 2,
+        kv_pages: 16,
+        faults: Some(FaultPlan::parse("stall_ms=25,at=1/any/stall/always").unwrap()),
+        request_timeout_ms: Some(60),
+        ..Default::default()
+    };
+    let server_thread = std::thread::spawn(move || {
+        server.serve_shared(model, &scalar_exec, &opts, Some(1)).unwrap()
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"GEN 32 slow prompt\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.starts_with(&format!("ERR {DEADLINE_ERR_PREFIX}")),
+        "expired request must shed with the deadline code: {line:?}"
+    );
+    conn.write_all(b"QUIT\n").unwrap();
+    let report = server_thread.join().unwrap();
+    assert_eq!(report.requests, 0, "the timed-out request must not count as completed");
+    assert_eq!(report.busy_at_exit, 0);
+    assert_eq!(report.kv_pages_at_exit, 0, "deadline shed must donate its pages back");
+}

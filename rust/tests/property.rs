@@ -211,7 +211,7 @@ fn prop_page_pool_ledger_exact_under_churn() {
         let mut sessions: Vec<(PagedKv, Vec<u32>)> = Vec::new();
 
         for op in 0..48u64 {
-            match rng.below(7) {
+            match rng.below(8) {
                 0 | 1 => {
                     // admit: fresh session, random prompt, try adoption
                     if sessions.len() < 6 {
@@ -263,6 +263,23 @@ fn prop_page_pool_ledger_exact_under_churn() {
                             sessions[i].0.reset();
                         } else {
                             sessions.swap_remove(i);
+                        }
+                    }
+                }
+                6 => {
+                    // fail_lane: shed a random session the way the
+                    // scheduler's fault-isolation path does — reset
+                    // (donating every page back to the pool) then drop.
+                    // The failed lane itself must hold zero pages; its
+                    // cache-published pages stay alive through the
+                    // prefix cache's own refs (the ledger check below
+                    // proves the release was exact, not a double-free).
+                    if !sessions.is_empty() {
+                        let i = rng.below(sessions.len() as u64) as usize;
+                        let (mut kv, _) = sessions.swap_remove(i);
+                        kv.reset();
+                        if !kv.page_ids().is_empty() {
+                            return false;
                         }
                     }
                 }

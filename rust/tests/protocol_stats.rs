@@ -62,6 +62,12 @@ const NUMERIC_FIELDS: &[&str] = &[
     "admission_ms",
     "prefill_chunk",
     "chunk_feeds",
+    "stage_retries",
+    "stage_faults",
+    "stage_timeouts",
+    "step_retries",
+    "lane_faults",
+    "deadline_expired",
     "page_hits",
     "page_misses",
     "page_evictions",
@@ -195,6 +201,7 @@ const TRACE_FIELDS: &[&str] = &[
     "tok_s",
     "chunk_feeds",
     "prefix_tokens",
+    "faults",
 ];
 
 /// Every `llamaf_<name>` line the `METRICS` export promises, in the
@@ -241,6 +248,12 @@ const METRIC_NAMES: &[&str] = &[
     "admission_ms_mean",
     "prefill_chunk",
     "chunk_feeds_total",
+    "stage_retries_total",
+    "stage_faults_total",
+    "stage_timeouts_total",
+    "step_retries_total",
+    "lane_faults_total",
+    "deadline_expired_total",
     "page_hits_total",
     "page_misses_total",
     "page_evictions_total",
@@ -360,6 +373,12 @@ fn trace_and_metrics_replies_match_the_documented_contract() {
     assert!(metrics["batch_steps_total"] >= 1.0);
     assert!(metrics["staged_bytes_total"] > 0.0);
     assert_eq!(metrics["weights_resident"], 0.0, "default serving streams");
+    // no injection, no deadline: every fault counter must read zero
+    for name in
+        ["stage_faults_total", "stage_timeouts_total", "lane_faults_total", "deadline_expired_total"]
+    {
+        assert_eq!(metrics[name], 0.0, "fault-free run must export zero {name}");
+    }
 
     conn.write_all(b"QUIT\n").unwrap();
     drop(conn);

@@ -236,7 +236,7 @@ fn q4_checkpoint_is_about_half_the_q8_bytes_on_disk() {
         llamaf::ckpt::write_ckpt_from_float(&path, &fm, fmt).unwrap();
         let on_disk = std::fs::metadata(&path).unwrap().len();
         let layout = llamaf::ckpt::CkptLayout::new(cfg, fmt);
-        assert_eq!(on_disk, layout.total_bytes(), "{fmt}: layout accounting vs real file");
+        assert_eq!(on_disk, layout.file_bytes(), "{fmt}: layout accounting vs real file");
         sizes.insert(fmt, on_disk as f64);
         std::fs::remove_file(&path).ok();
     }

@@ -1,0 +1,163 @@
+//! Gateway scale-out macro-benchmark: aggregate streaming throughput of
+//! one `llamaf gateway` front as the replica pool grows 1 → 2 → 3.
+//!
+//! Each replica is a full `serve_shared` engine (NANO geometry, scalar
+//! GQMV, continuous batching at max_batch=4), so a single replica
+//! saturates at ~4 concurrent decode lanes.  The client swarm offers 3×
+//! that concurrency; adding replicas should then scale aggregate tok/s
+//! near-linearly, because the gateway's least-loaded routing spreads the
+//! swarm across pools of lanes while each stream stays pinned to one
+//! replica (sticky sessions keep KV local).  The gap from perfect
+//! scaling is the gateway's proxy overhead plus batching edge effects.
+//!
+//! Run: `cargo bench --bench gateway [-- --quick]`
+//! (synthetic weights; no artifacts required)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use llamaf::bench::section;
+use llamaf::model::{QuantModel, NANO};
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::ScalarGqmv;
+use llamaf::server::gateway::{Gateway, GatewayOpts};
+use llamaf::server::{ServeOpts, Server};
+
+fn scalar_exec() -> Box<dyn GqmvExec + Send> {
+    Box::new(ScalarGqmv)
+}
+
+/// Send `SHUTDOWN` and wait for the ack.
+fn shutdown(addr: SocketAddr) {
+    if let Ok(mut conn) = TcpStream::connect(addr) {
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let _ = conn.write_all(b"SHUTDOWN\n");
+        let mut line = String::new();
+        let _ = reader.read_line(&mut line);
+        let _ = conn.write_all(b"QUIT\n");
+    }
+}
+
+/// Drive `clients` concurrent connections through a gateway fronting
+/// `n_replicas` engine replicas; each client streams `reqs` generations
+/// of `steps` tokens.  Returns aggregate tok/s over the whole swarm.
+fn run_pool(
+    model: &Arc<QuantModel>,
+    n_replicas: usize,
+    clients: usize,
+    reqs: usize,
+    steps: usize,
+) -> f64 {
+    let vocab = model.cfg.vocab_size;
+    let mut replica_addrs = Vec::new();
+    let mut replica_threads = Vec::new();
+    for _ in 0..n_replicas {
+        let server = Server::bind("127.0.0.1:0", vocab).unwrap();
+        replica_addrs.push(server.local_addr().unwrap());
+        let model = Arc::clone(model);
+        replica_threads.push(std::thread::spawn(move || {
+            let opts = ServeOpts {
+                workers: 16,
+                queue_depth: 64,
+                max_sessions: 16,
+                max_batch: 4,
+                ..Default::default()
+            };
+            server.serve_shared(model, &scalar_exec, &opts, None).unwrap()
+        }));
+    }
+
+    let gw = Gateway::bind("127.0.0.1:0").unwrap();
+    let gw_addr = gw.local_addr().unwrap();
+    let opts = GatewayOpts {
+        backends: replica_addrs.iter().map(|a| a.to_string()).collect(),
+        workers: 16,
+        queue_depth: 64,
+        max_queue: 16,
+        ..Default::default()
+    };
+    let gw_thread = std::thread::spawn(move || gw.run(&opts, None).unwrap());
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            std::thread::spawn(move || -> usize {
+                let mut conn = TcpStream::connect(gw_addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                let mut tokens = 0usize;
+                for ri in 0..reqs {
+                    conn.write_all(format!("SGEN {steps} swarm {ci} {ri}\n").as_bytes())
+                        .unwrap();
+                    loop {
+                        let mut line = String::new();
+                        reader.read_line(&mut line).unwrap();
+                        let line = line.trim_end();
+                        if line.starts_with("TOK ") {
+                            tokens += 1;
+                        } else if line.starts_with("DONE ") {
+                            break;
+                        } else {
+                            panic!("client {ci}: unexpected line {line:?}");
+                        }
+                    }
+                }
+                conn.write_all(b"QUIT\n").unwrap();
+                tokens
+            })
+        })
+        .collect();
+    let tokens: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(tokens, clients * reqs * steps, "swarm lost tokens");
+
+    shutdown(gw_addr);
+    let report = gw_thread.join().unwrap();
+    assert_eq!(report.in_flight_at_exit, 0, "gateway queues did not drain");
+    for (addr, t) in replica_addrs.into_iter().zip(replica_threads) {
+        shutdown(addr);
+        let rep = t.join().unwrap();
+        assert_eq!(rep.busy_at_exit, 0, "replica session leaked");
+    }
+    tokens as f64 / dt.max(1e-9)
+}
+
+fn main() {
+    let smoke = llamaf::bench::smoke();
+    let quick = std::env::args().any(|a| a == "--quick") || smoke;
+    let (clients, reqs, steps) = if smoke {
+        (6, 1, 8)
+    } else if quick {
+        (9, 2, 16)
+    } else {
+        (12, 3, 32)
+    };
+    let model = Arc::new(QuantModel::synthetic(NANO, 42));
+    let mut report = llamaf::bench::Report::new("gateway");
+
+    section("replica scaling through one gateway (NANO geometry, scalar GQMV)");
+    println!(
+        "{clients} clients x {reqs} requests x {steps} steps, max_batch=4 per replica, \
+         least-loaded sticky routing\n"
+    );
+    let mut base = 0.0f64;
+    for n in [1usize, 2, 3] {
+        let tps = run_pool(&model, n, clients, reqs, steps);
+        if n == 1 {
+            base = tps;
+        }
+        let speedup = if base > 0.0 { tps / base } else { 0.0 };
+        println!("replicas={n}  aggregate {tps:>9.1} tok/s  speedup {speedup:>5.2}x");
+        report.case(&format!("scaling_{n}_tok_s"), tps, "tok/s");
+    }
+    println!(
+        "\n(the swarm offers ~3x one replica's lane capacity, so tok/s should grow \
+         near-linearly with the pool; the shortfall is proxy overhead + batching edges)"
+    );
+
+    match report.write() {
+        Ok(p) => eprintln!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+}

@@ -1371,6 +1371,37 @@ mod tests {
     }
 
     #[test]
+    fn drain_admission_sheds_an_expired_pending_request_before_decoding() {
+        // Under Admission::Drain a pending request waits for the active
+        // set to empty; one whose deadline expired while it waited must
+        // be shed with ERR deadline: at the admission barrier — never
+        // decoded late.
+        let qm = tiny_model(23);
+        let sched = BatchScheduler::new(
+            Arc::clone(&qm),
+            Box::new(ScalarGqmv),
+            BatchOpts { admission: Admission::Drain, ..Default::default() },
+        );
+        let mut streamed = 0usize;
+        let (sess, out) = sched.generate_with_deadline(
+            Session::new(&qm.cfg),
+            &[1, 2, 3],
+            4,
+            Some(Duration::from_millis(0)),
+            |_, _| {
+                streamed += 1;
+                Ok(())
+            },
+        );
+        assert!(sess.is_some(), "the session comes back from a swept pending lane");
+        let e = out.unwrap_err().to_string();
+        assert!(e.starts_with(DEADLINE_ERR_PREFIX), "{e}");
+        assert_eq!(streamed, 0, "an expired request must not stream tokens late");
+        assert_eq!(sched.metrics().deadline_expired(), 1);
+        sched.shutdown();
+    }
+
+    #[test]
     fn shutdown_is_idempotent_and_drains() {
         let qm = tiny_model(4);
         let sched =

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   generate  — greedy/top-p text generation (PS / LlamaF engines)
 //!   serve     — line-oriented TCP generation server (batch=1 realtime)
+//!   gateway   — front N serve replicas: health-checked least-loaded
+//!               routing with failover (see server::gateway)
 //!   tables    — regenerate every paper table/figure (see exp/)
 //!   ppl       — Table V perplexity evaluation
 //!   profile   — Table II component profiling
@@ -74,6 +76,24 @@ COMMANDS
             shed with ERR fault: while the rest of the batch keeps
             decoding bit-identically); llamaf: sequential batch-1
             streaming
+  gateway   --backends <addr,addr,...> [--addr 127.0.0.1:7078]
+            [--workers N] [--queue-depth N] [--max-queue N]
+            [--probe-interval-ms MS] [--probe-timeout-ms MS]
+            [--connect-timeout-ms MS] [--chaos <spec>]
+            front N `serve` replicas behind one address: periodic HEALTH
+            probes drive an up/degraded/down table, generations are
+            routed least-loaded with sticky per-connection replica
+            pinning, per-backend queues are bounded by --max-queue
+            (overflow answered ERR busy, never silently dropped),
+            generations whose replica dies before any output are
+            transparently redirected to a survivor, in-flight streams
+            are shed honestly with `ERR fault: backend lost`, and
+            SHUTDOWN drains (stop admitting, finish what's in flight,
+            exit — replicas stay up); --chaos injects deterministic
+            backend faults for drills: comma-separated p=<prob>,
+            seed=<u64>, stall_ms=<ms>, after=<routed-requests> and
+            at=<backend>/<kind>[/<count|always>] triggers with kind
+            kill|stall|slowaccept
   tables    [--table 1..6 | --fig 2] [--geometry nano|tinyllama]
   ppl       [--f32-ckpt <lfck>] [--ckpt <lfq8>] [--corpus <txt>] [--ppl-tokens N]
   profile   [--geometry nano|tinyllama] [--threads N]
@@ -164,6 +184,7 @@ fn run() -> Result<()> {
     match args.command.as_deref().unwrap() {
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
+        "gateway" => cmd_gateway(&args),
         "tables" => llamaf::exp::run(&args),
         "ppl" => llamaf::exp::table5::run(&args),
         "profile" => llamaf::exp::table2::run(&args),
@@ -339,6 +360,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
             server.serve(engine.as_mut(), None)?;
         }
     }
+    Ok(())
+}
+
+/// `llamaf gateway`: front N `serve` replicas with the health-checked,
+/// least-loaded, failover-capable gateway (see [`llamaf::server::gateway`]).
+fn cmd_gateway(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7078");
+    let spec = args
+        .get("backends")
+        .or_else(|| args.get("backend"))
+        .context("--backends <addr,addr,...> required")?;
+    let backends: Vec<String> =
+        spec.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+    anyhow::ensure!(!backends.is_empty(), "--backends needs at least one address");
+    let chaos = match args.get("chaos") {
+        None => None,
+        Some(spec) => Some(
+            llamaf::server::gateway::ChaosPlan::parse(spec)
+                .with_context(|| format!("--chaos '{spec}'"))?,
+        ),
+    };
+    let opts = llamaf::server::gateway::GatewayOpts {
+        backends,
+        workers: args.get_usize("workers", 4)?,
+        queue_depth: args.get_usize("queue-depth", 64)?,
+        max_queue: args.get_usize("max-queue", 8)?,
+        probe_interval_ms: args.get_usize("probe-interval-ms", 50)? as u64,
+        probe_timeout_ms: args.get_usize("probe-timeout-ms", 1000)? as u64,
+        connect_timeout_ms: args.get_usize("connect-timeout-ms", 1000)? as u64,
+        chaos,
+    };
+    let max_conns = match args.get("max-conns") {
+        None => None,
+        Some(_) => Some(args.get_usize("max-conns", 0)?),
+    };
+    let gw = llamaf::server::gateway::Gateway::bind(addr)?;
+    eprintln!(
+        "llamaf gateway on {} fronting {} replica(s) ({} workers, per-backend bound {}, \
+         probe every {} ms) — protocol: GEN/SGEN <steps> <prompt> | STATS | TRACE | \
+         METRICS | PING | HEALTH | SHUTDOWN | QUIT",
+        gw.local_addr()?,
+        opts.backends.len(),
+        opts.workers,
+        opts.max_queue,
+        opts.probe_interval_ms,
+    );
+    for (i, b) in opts.backends.iter().enumerate() {
+        eprintln!("  backend {i}: {b}");
+    }
+    let report = gw.run(&opts, max_conns)?;
+    eprintln!(
+        "llamaf gateway done: {} conns, {} routed ({} redirected, {} shed, {} rejected), \
+         probes {} ok / {} failed",
+        report.accepted,
+        report.routed,
+        report.redirected,
+        report.shed,
+        report.rejected,
+        report.probes_ok,
+        report.probes_failed,
+    );
     Ok(())
 }
 

@@ -388,6 +388,27 @@ impl Default for RetryPolicy {
     }
 }
 
+/// Sleep source of the staged-read retry backoff.
+///
+/// Production code uses [`SystemClock`] (a real [`std::thread::sleep`]);
+/// tests inject a recording fake through [`Streamer::with_clock`] so
+/// backoff *schedules* are asserted exactly — no wall-clock measurement,
+/// no dependence on CI runner speed.
+pub trait Clock: Send + Sync {
+    /// Block the calling thread for `d` (or just record it, in tests).
+    fn sleep(&self, d: Duration);
+}
+
+/// The production [`Clock`]: delegates to [`std::thread::sleep`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
 /// Staging counters of a [`Streamer`] (Fig. 2 accounting plus the serving
 /// metrics exported through `STATS`).
 #[derive(Clone, Copy, Debug, Default)]
@@ -605,6 +626,7 @@ fn prefetch_worker_loop(
     req_rx: Receiver<StageReq>,
     resp_tx: Sender<StagedResp>,
     policy: RetryPolicy,
+    clock: Arc<dyn Clock>,
 ) {
     while let Ok(StageReq::Stage { slot, unit }) = req_rx.recv() {
         let t = Instant::now();
@@ -612,7 +634,7 @@ fn prefetch_worker_loop(
         let mut backoff = policy.backoff_ms;
         let mut result = stage_unit(&rt, fetcher.as_mut(), unit);
         while result.is_err() && retries + 1 < policy.max_attempts.max(1) {
-            std::thread::sleep(Duration::from_millis(backoff));
+            clock.sleep(Duration::from_millis(backoff));
             backoff = (backoff.saturating_mul(2)).min(policy.backoff_cap_ms);
             retries += 1;
             result = stage_unit(&rt, fetcher.as_mut(), unit);
@@ -725,6 +747,23 @@ impl Streamer {
         gran: StageGranularity,
         retry: RetryPolicy,
     ) -> Result<Self> {
+        Self::with_clock(rt, fetcher, mode, depth, gran, retry, Arc::new(SystemClock))
+    }
+
+    /// [`Streamer::with_retry`] with an explicit [`Clock`] driving the
+    /// worker's retry-backoff sleeps.  Production callers stay on
+    /// [`SystemClock`] (via [`Streamer::with_retry`]); tests inject a
+    /// recording fake so backoff-timing assertions check the *schedule*
+    /// the worker requested instead of measuring wall-clock time.
+    pub fn with_clock(
+        rt: Arc<Runtime>,
+        fetcher: impl LayerFetcher + 'static,
+        mode: SchedMode,
+        depth: usize,
+        gran: StageGranularity,
+        retry: RetryPolicy,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Self> {
         anyhow::ensure!(depth >= 1, "prefetch depth must be >= 1 (got {depth})");
         let n_layers = fetcher.n_layers();
         anyhow::ensure!(n_layers >= 1, "cannot stream a zero-layer model");
@@ -733,7 +772,7 @@ impl Streamer {
         let fetcher: Box<dyn LayerFetcher> = Box::new(fetcher);
         let handle = std::thread::Builder::new()
             .name("llamaf-prefetch".into())
-            .spawn(move || prefetch_worker_loop(rt, fetcher, req_rx, resp_tx, retry))
+            .spawn(move || prefetch_worker_loop(rt, fetcher, req_rx, resp_tx, retry, clock))
             .expect("spawn prefetch worker");
         let mut s = Streamer {
             mode,
@@ -1903,5 +1942,95 @@ mod streamer_tests {
         assert_eq!(s.stats.retries, 0);
         assert_eq!(s.stats.stage_faults, 0);
         assert_eq!(s.stats.stage_timeouts, 0);
+    }
+
+    // ------------------------------------------------------------------
+    // Deterministic backoff: assert the requested schedule, not the wall
+    // clock — these tests are immune to CI runner speed
+    // ------------------------------------------------------------------
+
+    /// Recording [`Clock`]: never sleeps, just logs each requested
+    /// duration in milliseconds.
+    #[derive(Default)]
+    struct TestClock {
+        sleeps_ms: std::sync::Mutex<Vec<u64>>,
+    }
+
+    impl Clock for TestClock {
+        fn sleep(&self, d: Duration) {
+            self.sleeps_ms.lock().unwrap().push(d.as_millis() as u64);
+        }
+    }
+
+    /// [`setup_faulty`] with an injected recording clock in place of
+    /// [`SystemClock`].
+    fn setup_faulty_clock(
+        spec: &str,
+        retry: RetryPolicy,
+        clock: Arc<TestClock>,
+    ) -> Result<(Streamer, Arc<Vec<QuantLayer>>)> {
+        let qm = QuantModel::from_float(&FloatModel::random(tiny_cfg(), 42));
+        let layers = Arc::new(qm.layers);
+        let rt = Arc::new(Runtime::with_shapes(&[]));
+        let plan = FaultPlan::parse(spec).unwrap();
+        let fetcher = FaultyFetcher::new(MemFetcher { layers: Arc::clone(&layers) }, plan);
+        let s = Streamer::with_clock(
+            rt,
+            fetcher,
+            SchedMode::Async,
+            DEFAULT_PREFETCH_DEPTH,
+            StageGranularity::Layer,
+            retry,
+            clock,
+        )?;
+        Ok((s, layers))
+    }
+
+    #[test]
+    fn one_shot_retry_sleeps_exactly_once_at_initial_backoff() {
+        // the PR 9 transparent-retry contract, now with the REAL default
+        // backoff (2 ms) instead of a zeroed one: the worker requests
+        // exactly one sleep of backoff_ms, and staging stays bit-exact
+        let clock = Arc::new(TestClock::default());
+        let (mut s, layers) =
+            setup_faulty_clock("at=1/any/readerr", RetryPolicy::default(), Arc::clone(&clock))
+                .unwrap();
+        for li in 0..4 {
+            assert_layer_is(&mut s, li, &layers);
+        }
+        assert_eq!(s.stats.retries, 1);
+        assert_eq!(*clock.sleeps_ms.lock().unwrap(), vec![2], "one sleep at backoff_ms");
+    }
+
+    #[test]
+    fn backoff_schedule_doubles_exactly_under_a_mock_clock() {
+        // layer 1 fails every attempt; max_attempts 4 means 3 retries,
+        // each preceded by one backoff sleep: exactly 2, 4, 8 ms
+        let clock = Arc::new(TestClock::default());
+        let retry = RetryPolicy { max_attempts: 4, ..RetryPolicy::default() };
+        let (mut s, layers) =
+            setup_faulty_clock("at=1/any/readerr/always", retry, Arc::clone(&clock)).unwrap();
+        assert_layer_is(&mut s, 0, &layers);
+        let e = s.layer(1).unwrap_err();
+        assert!(format!("{e:#}").contains("failed after 4 attempts"), "{e:#}");
+        assert_eq!(s.stats.retries, 3);
+        assert_eq!(*clock.sleeps_ms.lock().unwrap(), vec![2, 4, 8], "exact doubling schedule");
+    }
+
+    #[test]
+    fn backoff_cap_clamps_the_schedule() {
+        // cap at 4 ms: the doubling sequence 2, 4, 8, 16 clamps to
+        // 2, 4, 4, 4 from the third sleep on
+        let clock = Arc::new(TestClock::default());
+        let retry =
+            RetryPolicy { max_attempts: 5, backoff_cap_ms: 4, ..RetryPolicy::default() };
+        let (mut s, layers) =
+            setup_faulty_clock("at=2/any/readerr/always", retry, Arc::clone(&clock)).unwrap();
+        assert_layer_is(&mut s, 0, &layers);
+        assert_layer_is(&mut s, 1, &layers);
+        let e = s.layer(2).unwrap_err();
+        assert!(format!("{e:#}").contains("failed after 5 attempts"), "{e:#}");
+        assert_eq!(s.stats.retries, 4);
+        assert_eq!(*clock.sleeps_ms.lock().unwrap(), vec![2, 4, 4, 4], "cap binds from 8 on");
     }
 }

@@ -1,0 +1,1025 @@
+//! Replicated-serving gateway: one front process speaking the engine
+//! server's line protocol to clients and multiplexing their sessions
+//! across N engine-replica backends.
+//!
+//! Topology (`llamaf gateway --backends a,b,c`):
+//!
+//! ```text
+//!   clients ──► accept loop ──► bounded conn queue ──► gateway workers
+//!                                                        │ sticky pin
+//!                                                        ▼
+//!                                  router (least-loaded over Up > Degraded,
+//!                                          bounded per-backend in-flight)
+//!                                   │            │            │
+//!                                   ▼            ▼            ▼
+//!                               replica 0    replica 1    replica 2
+//!                                   ▲            ▲            ▲
+//!                                   └───── health prober ─────┘
+//!                                          (HEALTH, per interval)
+//! ```
+//!
+//! Robustness contract:
+//!
+//! * **Sticky sessions** — a client connection pins one replica
+//!   connection for its lifetime, so the replica-side KV session (and
+//!   `TRACE` state) stays on one engine.  The pin is chosen least-loaded
+//!   at the first generation and re-chosen after a backend loss.
+//! * **End-to-end backpressure** — the client connection queue and the
+//!   per-backend in-flight bound (`--max-queue`) are both bounded;
+//!   overflow is answered `ERR busy: ...` immediately, never queued
+//!   unbounded, never silently dropped.
+//! * **Retry-with-redirect** — a generation whose backend dies before
+//!   *any* reply line reached the client is transparently re-routed to
+//!   another live replica (greedy decoding is deterministic, so the
+//!   redirected stream is the stream the dead replica would have sent).
+//! * **Honest shedding** — a stream that dies after output started is
+//!   shed with `ERR fault: backend lost`; the client never sees a
+//!   silently-truncated or mixed stream.
+//! * **Drain on SHUTDOWN** — the gateway stops accepting (late
+//!   connections get an immediate `ERR busy`), lets replicas finish
+//!   everything in flight, then exits.  Replicas are left running: a
+//!   supervisor that wants them down sends them `SHUTDOWN` directly.
+//!   (`SIGTERM` drains the same way when the supervisor maps it to the
+//!   `SHUTDOWN` command — the process installs no signal handlers.)
+//!
+//! The deterministic chaos plan ([`ChaosPlan`], CLI `--chaos`) mirrors
+//! the staged-read [`FaultPlan`](crate::sched::FaultPlan): seeded
+//! probabilistic connect faults plus scripted per-backend triggers
+//! (`kill`, `stall`, `slowaccept`) armed after a chosen number of routed
+//! requests, so `tests/gateway_chaos.rs` can kill a chosen replica at a
+//! chosen point and replay the identical run from the seed.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::health;
+use super::router::{Pick, Router};
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------
+// Chaos plan (mirrors sched::fault::FaultPlan, but the unit is a backend
+// replica instead of a checkpoint layer)
+// ---------------------------------------------------------------------
+
+/// What a chaos trigger does to gateway↔backend I/O.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// Sever ALL gateway I/O to the backend, permanently: connects,
+    /// request sends, and stream reads all fail immediately.  The
+    /// replica process itself keeps running — this models a network
+    /// partition or a crashed peer as the gateway experiences it.
+    Kill,
+    /// Sleep this many milliseconds before each request send (and model
+    /// probes to the backend as timed out when the stall exceeds the
+    /// probe timeout) — a slow, not dead, replica.
+    Stall(u64),
+    /// Sleep this many milliseconds before each connect to the backend —
+    /// an accept loop that is alive but overloaded.
+    SlowAccept(u64),
+}
+
+impl ChaosKind {
+    fn parse(s: &str, stall_ms: u64) -> Result<Self> {
+        match s {
+            "kill" => Ok(ChaosKind::Kill),
+            "stall" => Ok(ChaosKind::Stall(stall_ms)),
+            "slowaccept" => Ok(ChaosKind::SlowAccept(stall_ms)),
+            other => anyhow::bail!("unknown chaos kind '{other}' (kill|stall|slowaccept)"),
+        }
+    }
+}
+
+/// One scripted fault: backend index, kind, and how many times it fires
+/// (`u32::MAX` = always; `kill` is permanent regardless).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosTrigger {
+    /// Backend index (configuration order) the fault applies to.
+    pub backend: usize,
+    /// What happens.
+    pub kind: ChaosKind,
+    /// Remaining fires (`u32::MAX` = every time).
+    pub times: u32,
+}
+
+/// Deterministic gateway chaos plan (CLI `--chaos`), same spec grammar
+/// as `--inject-faults`:
+/// `p=<prob>,seed=<u64>,stall_ms=<ms>,after=<n>,at=<backend>/<kind>[/<count|always>]`
+/// with `kind` ∈ `kill|stall|slowaccept`.  `p` injects seeded transient
+/// connect failures from the start; `at=` triggers arm only once
+/// `after=` requests have been routed, so a replica can be killed at a
+/// chosen *point in the workload* (request count, not wall clock — the
+/// run replays identically from the seed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosPlan {
+    /// Per-connect probability of a seeded transient failure.
+    pub p: f64,
+    /// RNG seed for the probabilistic faults.
+    pub seed: u64,
+    /// Default stall/slow-accept duration for triggers, in milliseconds.
+    pub stall_ms: u64,
+    /// Routed-request count at which `at=` triggers arm (0 = immediately).
+    pub after: u64,
+    /// Scripted per-backend faults.
+    pub triggers: Vec<ChaosTrigger>,
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan { p: 0.0, seed: 0x5eed, stall_ms: 50, after: 0, triggers: Vec::new() }
+    }
+}
+
+impl ChaosPlan {
+    /// Parse a comma-separated spec.  Scalar keys may appear in any
+    /// order relative to `at=` triggers: triggers are resolved after all
+    /// scalars so `at=0/stall,stall_ms=80` means an 80 ms stall.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = ChaosPlan::default();
+        let mut raw_triggers: Vec<&str> = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) =
+                part.split_once('=').with_context(|| format!("chaos spec '{part}': want k=v"))?;
+            match key {
+                "p" => plan.p = value.parse().with_context(|| format!("bad p '{value}'"))?,
+                "seed" => {
+                    plan.seed = value.parse().with_context(|| format!("bad seed '{value}'"))?
+                }
+                "stall_ms" => {
+                    plan.stall_ms =
+                        value.parse().with_context(|| format!("bad stall_ms '{value}'"))?
+                }
+                "after" => {
+                    plan.after = value.parse().with_context(|| format!("bad after '{value}'"))?
+                }
+                "at" => raw_triggers.push(value),
+                other => anyhow::bail!(
+                    "unknown chaos spec key '{other}' (expected p|seed|stall_ms|after|at)"
+                ),
+            }
+        }
+        anyhow::ensure!((0.0..=1.0).contains(&plan.p), "p must be in [0, 1] (got {})", plan.p);
+        for raw in raw_triggers {
+            let parts: Vec<&str> = raw.split('/').collect();
+            anyhow::ensure!(
+                parts.len() == 2 || parts.len() == 3,
+                "chaos trigger '{raw}': want <backend>/<kind>[/<count|always>]"
+            );
+            let backend: usize =
+                parts[0].parse().with_context(|| format!("bad backend index '{}'", parts[0]))?;
+            let kind = ChaosKind::parse(parts[1], plan.stall_ms)?;
+            let times = match parts.get(2) {
+                None => 1,
+                Some(&"always") => u32::MAX,
+                Some(n) => {
+                    let n: u32 = n.parse().with_context(|| format!("bad count '{n}'"))?;
+                    anyhow::ensure!(n >= 1, "trigger count must be >= 1");
+                    n
+                }
+            };
+            plan.triggers.push(ChaosTrigger { backend, kind, times });
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing (a passthrough).
+    pub fn is_empty(&self) -> bool {
+        self.p == 0.0 && self.triggers.is_empty()
+    }
+}
+
+/// Runtime state of a [`ChaosPlan`]: the seeded RNG, per-trigger
+/// remaining-fire counts, and the routed-request counter that arms the
+/// scripted triggers.
+pub struct ChaosInjector {
+    plan: ChaosPlan,
+    rng: Mutex<Rng>,
+    fires: Mutex<Vec<u32>>,
+    routed: AtomicU64,
+}
+
+impl ChaosInjector {
+    /// Arm a plan.
+    pub fn new(plan: ChaosPlan) -> Self {
+        let fires = plan.triggers.iter().map(|t| t.times).collect();
+        let rng = Mutex::new(Rng::new(plan.seed));
+        ChaosInjector { plan, rng, fires: Mutex::new(fires), routed: AtomicU64::new(0) }
+    }
+
+    /// Count one routed request (arms `after=`-gated triggers).
+    pub fn note_routed(&self) {
+        self.routed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn armed(&self) -> bool {
+        self.routed.load(Ordering::SeqCst) >= self.plan.after
+    }
+
+    /// Is `bi` killed?  `kill` triggers are permanent once armed: every
+    /// connect, send, and read to the backend fails until the process
+    /// restarts (there is no un-kill).
+    pub fn killed(&self, bi: usize) -> bool {
+        self.armed()
+            && self
+                .plan
+                .triggers
+                .iter()
+                .any(|t| t.backend == bi && t.kind == ChaosKind::Kill)
+    }
+
+    /// The `always`-scoped stall duration on `bi`, if armed — the prober
+    /// models a stall past its timeout as a failed probe.
+    pub fn always_stall_ms(&self, bi: usize) -> Option<u64> {
+        if !self.armed() {
+            return None;
+        }
+        self.plan.triggers.iter().find_map(|t| match t.kind {
+            ChaosKind::Stall(ms) if t.backend == bi && t.times == u32::MAX => Some(ms),
+            _ => None,
+        })
+    }
+
+    /// Consume one fire of the first armed trigger on `bi` matching
+    /// `want`, returning its duration.
+    fn consume(&self, bi: usize, want: fn(ChaosKind) -> Option<u64>) -> Option<u64> {
+        if !self.armed() {
+            return None;
+        }
+        let mut fires = self.fires.lock().unwrap();
+        for (ti, t) in self.plan.triggers.iter().enumerate() {
+            if t.backend != bi || fires[ti] == 0 {
+                continue;
+            }
+            if let Some(ms) = want(t.kind) {
+                if fires[ti] != u32::MAX {
+                    fires[ti] -= 1;
+                }
+                return Some(ms);
+            }
+        }
+        None
+    }
+
+    /// Gate one connect to `bi`: killed backends fail, slow-accept
+    /// triggers sleep, and the seeded `p` roll injects transient
+    /// failures.
+    pub fn on_connect(&self, bi: usize) -> Result<()> {
+        anyhow::ensure!(!self.killed(bi), "chaos: backend {bi} killed");
+        if let Some(ms) = self.consume(bi, |k| match k {
+            ChaosKind::SlowAccept(ms) => Some(ms),
+            _ => None,
+        }) {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if self.plan.p > 0.0 && self.rng.lock().unwrap().next_f64() < self.plan.p {
+            anyhow::bail!("chaos: transient connect failure to backend {bi}");
+        }
+        Ok(())
+    }
+
+    /// Gate one request send to `bi`: killed backends fail, stall
+    /// triggers sleep.
+    pub fn on_send(&self, bi: usize) -> Result<()> {
+        anyhow::ensure!(!self.killed(bi), "chaos: backend {bi} killed");
+        if let Some(ms) = self.consume(bi, |k| match k {
+            ChaosKind::Stall(ms) => Some(ms),
+            _ => None,
+        }) {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        Ok(())
+    }
+
+    /// Gate one stream read from `bi`: killed backends fail (this is how
+    /// a kill severs an in-flight stream mid-generation).
+    pub fn on_read(&self, bi: usize) -> Result<()> {
+        anyhow::ensure!(!self.killed(bi), "chaos: backend {bi} killed");
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gateway configuration and report
+// ---------------------------------------------------------------------
+
+/// Knobs of the gateway process (CLI `llamaf gateway`).
+#[derive(Clone, Debug)]
+pub struct GatewayOpts {
+    /// Replica addresses, configuration order (`--backends a,b,c`).
+    pub backends: Vec<String>,
+    /// Gateway protocol worker threads.
+    pub workers: usize,
+    /// Pending client-connection queue bound; overflow is answered
+    /// `ERR busy` at accept time.
+    pub queue_depth: usize,
+    /// Per-backend in-flight request bound (`--max-queue`): the bounded
+    /// queue that propagates backpressure client → gateway → replica.
+    pub max_queue: usize,
+    /// Health-probe period, in milliseconds.
+    pub probe_interval_ms: u64,
+    /// Per-probe deadline (connect + write + read each), in milliseconds.
+    pub probe_timeout_ms: u64,
+    /// Backend connect deadline for request routing, in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Deterministic chaos plan (`--chaos`); None = no injection.
+    pub chaos: Option<ChaosPlan>,
+}
+
+impl Default for GatewayOpts {
+    fn default() -> Self {
+        GatewayOpts {
+            backends: Vec::new(),
+            workers: 4,
+            queue_depth: 64,
+            max_queue: 8,
+            probe_interval_ms: 50,
+            probe_timeout_ms: 1000,
+            connect_timeout_ms: 1000,
+            chaos: None,
+        }
+    }
+}
+
+/// What a gateway run did (tests and the CLI summary).
+#[derive(Clone, Copy, Debug)]
+pub struct GatewayReport {
+    /// Client connections taken by the accept loop (incl. rejected).
+    pub accepted: usize,
+    /// Requests routed to a backend (incl. ones later shed).
+    pub routed: u64,
+    /// Not-yet-started generations transparently re-routed off a failed
+    /// backend.
+    pub redirected: u64,
+    /// In-flight streams shed with `ERR fault: backend lost`.
+    pub shed: u64,
+    /// Requests/connections refused with `ERR busy`.
+    pub rejected: u64,
+    /// Successful health probes.
+    pub probes_ok: u64,
+    /// Failed health probes.
+    pub probes_failed: u64,
+    /// Per-backend in-flight total at exit — 0 when the gateway's
+    /// bounded queues drained (chaos tests pin this).
+    pub in_flight_at_exit: usize,
+    /// Client connections still queued at exit — 0 after a clean drain.
+    pub queued_at_exit: usize,
+}
+
+/// State shared by the accept loop, the workers, and the prober.
+struct GwShared {
+    queue: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    router: Router,
+    chaos: Option<ChaosInjector>,
+    workers_live: AtomicUsize,
+    addr: SocketAddr,
+    started: Instant,
+    connect_timeout: Duration,
+    probe_timeout: Duration,
+    probe_interval: Duration,
+    rejected: AtomicU64,
+    queue_depth_gauge: AtomicUsize,
+}
+
+impl GwShared {
+    /// Signal shutdown and unblock the workers and the accept loop (the
+    /// latter by poking a throwaway connection at ourselves).
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Backend connections (the sticky pin)
+// ---------------------------------------------------------------------
+
+/// One pinned gateway→replica connection (a replica-side session).
+struct BackendConn {
+    /// Backend index in the router table.
+    bi: usize,
+    write: TcpStream,
+    read: BufReader<TcpStream>,
+}
+
+impl BackendConn {
+    fn connect(shared: &GwShared, bi: usize) -> Result<BackendConn> {
+        if let Some(c) = &shared.chaos {
+            c.on_connect(bi)?;
+        }
+        let addr = shared.router.backends()[bi].addr;
+        let stream = TcpStream::connect_timeout(&addr, shared.connect_timeout)
+            .with_context(|| format!("connect backend {bi} ({addr})"))?;
+        let read = BufReader::new(stream.try_clone()?);
+        Ok(BackendConn { bi, write: stream, read })
+    }
+
+    fn send_line(&mut self, shared: &GwShared, line: &str) -> Result<()> {
+        if let Some(c) = &shared.chaos {
+            c.on_send(self.bi)?;
+        }
+        self.write.write_all(line.as_bytes())?;
+        self.write.write_all(b"\n")?;
+        self.write.flush()?;
+        Ok(())
+    }
+
+    fn read_line(&mut self, shared: &GwShared) -> Result<String> {
+        if let Some(c) = &shared.chaos {
+            c.on_read(self.bi)?;
+        }
+        let mut line = String::new();
+        let n = self.read.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "backend {} closed the connection", self.bi);
+        Ok(line.trim_end().to_string())
+    }
+}
+
+/// Why a proxied request failed.
+enum ProxyFail {
+    /// The backend failed before any reply line reached the client —
+    /// safe to retry on another replica.
+    NotStarted(anyhow::Error),
+    /// The backend failed after output started — the client must be told
+    /// (`ERR fault: backend lost`), never handed a truncated stream.
+    MidStream(anyhow::Error),
+    /// The *client* went away mid-stream; drop the pin so the replica
+    /// sees the hangup and cancels the lane (no counters move).
+    ClientGone,
+}
+
+// ---------------------------------------------------------------------
+// The gateway
+// ---------------------------------------------------------------------
+
+/// A bound gateway listener (see the module docs for the topology).
+pub struct Gateway {
+    /// The bound listener the accept loop runs on.
+    pub listener: TcpListener,
+}
+
+impl Gateway {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(Gateway { listener })
+    }
+
+    /// Address the listener actually bound (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Run the gateway until `SHUTDOWN` (or until `max_conns` client
+    /// connections were taken; rejected ones count).  Returns the run's
+    /// report once every worker and the prober have drained.
+    pub fn run(&self, opts: &GatewayOpts, max_conns: Option<usize>) -> Result<GatewayReport> {
+        anyhow::ensure!(opts.workers >= 1, "need at least one gateway worker");
+        anyhow::ensure!(opts.queue_depth >= 1, "need a queue depth of at least 1");
+        anyhow::ensure!(!opts.backends.is_empty(), "need at least one --backends address");
+        let mut addrs = Vec::with_capacity(opts.backends.len());
+        for b in &opts.backends {
+            let addr = b
+                .to_socket_addrs()
+                .with_context(|| format!("resolve backend '{b}'"))?
+                .next()
+                .with_context(|| format!("backend '{b}' resolved to no address"))?;
+            addrs.push(addr);
+        }
+        let shared = GwShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            router: Router::new(addrs, opts.max_queue),
+            chaos: opts.chaos.clone().map(ChaosInjector::new),
+            workers_live: AtomicUsize::new(0),
+            addr: self.local_addr()?,
+            started: Instant::now(),
+            connect_timeout: Duration::from_millis(opts.connect_timeout_ms.max(1)),
+            probe_timeout: Duration::from_millis(opts.probe_timeout_ms.max(1)),
+            probe_interval: Duration::from_millis(opts.probe_interval_ms.max(1)),
+            rejected: AtomicU64::new(0),
+            queue_depth_gauge: AtomicUsize::new(0),
+        };
+        let mut accepted = 0usize;
+
+        std::thread::scope(|scope| -> Result<()> {
+            for wi in 0..opts.workers {
+                let shared = &shared;
+                std::thread::Builder::new()
+                    .name(format!("llamaf-gw-{wi}"))
+                    .spawn_scoped(scope, move || {
+                        shared.workers_live.fetch_add(1, Ordering::SeqCst);
+                        while let Some(conn) = next_client(shared) {
+                            if let Err(e) = handle_client(conn, shared) {
+                                eprintln!("llamaf-gw-{wi}: connection error: {e:#}");
+                            }
+                        }
+                        shared.workers_live.fetch_sub(1, Ordering::SeqCst);
+                    })
+                    .expect("spawn gateway worker");
+            }
+            {
+                let shared = &shared;
+                std::thread::Builder::new()
+                    .name("llamaf-gw-probe".into())
+                    .spawn_scoped(scope, move || prober_loop(shared))
+                    .expect("spawn gateway prober");
+            }
+
+            for stream in self.listener.incoming() {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    // usually the shutdown self-poke (already closed; the
+                    // write fails harmlessly), possibly a racing client:
+                    // refuse it honestly either way
+                    if let Ok(mut s) = stream {
+                        let _ = s.write_all(b"ERR busy: gateway shutting down\n");
+                    }
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                accepted += 1;
+                let mut q = shared.queue.lock().unwrap();
+                if q.len() >= opts.queue_depth {
+                    drop(q);
+                    shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    let mut s = stream;
+                    let _ = s.write_all(b"ERR busy: connection queue full\n");
+                    let _ = s.flush();
+                } else {
+                    q.push_back(stream);
+                    shared.queue_depth_gauge.store(q.len(), Ordering::Relaxed);
+                    shared.cv.notify_one();
+                }
+                if let Some(max) = max_conns {
+                    if accepted >= max {
+                        break;
+                    }
+                }
+            }
+            // Drain: stop admitting first, then let workers finish what
+            // is queued.  Late connections are refused immediately (same
+            // contract as the engine server's drain).
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.cv.notify_all();
+            self.listener.set_nonblocking(true)?;
+            while shared.workers_live.load(Ordering::SeqCst) > 0 {
+                match self.listener.accept() {
+                    Ok((mut s, _)) => {
+                        let _ = s.write_all(b"ERR busy: gateway shutting down\n");
+                        let _ = s.flush();
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+            let _ = self.listener.set_nonblocking(false);
+            Ok(())
+        })?;
+
+        let queued_at_exit = shared.queue.lock().unwrap().len();
+        Ok(GatewayReport {
+            accepted,
+            routed: shared.router.routed_total(),
+            redirected: shared.router.redirected(),
+            shed: shared.router.shed(),
+            rejected: shared.rejected.load(Ordering::Relaxed) + shared.router.busy_rejected(),
+            probes_ok: shared.router.probes_ok(),
+            probes_failed: shared.router.probes_failed(),
+            in_flight_at_exit: shared.router.in_flight_total(),
+            queued_at_exit,
+        })
+    }
+}
+
+/// Pop the next queued client connection, or None when shut down and
+/// drained.
+fn next_client(shared: &GwShared) -> Option<TcpStream> {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if let Some(conn) = q.pop_front() {
+            shared.queue_depth_gauge.store(q.len(), Ordering::Relaxed);
+            return Some(conn);
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return None;
+        }
+        q = shared.cv.wait(q).unwrap();
+    }
+}
+
+/// Health-prober body: probe every backend once per interval until
+/// shutdown.  A killed backend fails its probe; an `always`-stalled one
+/// whose stall exceeds the probe timeout counts as timed out.
+fn prober_loop(shared: &GwShared) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        for (bi, b) in shared.router.backends().iter().enumerate() {
+            let busy = probe_backend(shared, bi, b.addr);
+            shared.router.note_probe(bi, busy);
+        }
+        // sleep in slices so SHUTDOWN is prompt even at long intervals
+        let mut left = shared.probe_interval;
+        while !left.is_zero() && !shared.shutdown.load(Ordering::SeqCst) {
+            let slice = left.min(Duration::from_millis(5));
+            std::thread::sleep(slice);
+            left -= slice;
+        }
+    }
+}
+
+/// One chaos-aware probe: Some(busy) on success, None on failure.
+fn probe_backend(shared: &GwShared, bi: usize, addr: SocketAddr) -> Option<u64> {
+    if let Some(c) = &shared.chaos {
+        if c.killed(bi) {
+            return None;
+        }
+        if let Some(ms) = c.always_stall_ms(bi) {
+            if Duration::from_millis(ms) >= shared.probe_timeout {
+                return None; // stalled past the deadline == timed out
+            }
+        }
+    }
+    health::probe(addr, shared.probe_timeout).ok().map(|r| r.busy)
+}
+
+/// Serve one client connection: local commands answered in place,
+/// generations proxied through the sticky backend pin.
+fn handle_client(stream: TcpStream, shared: &GwShared) -> Result<()> {
+    let mut out = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut pinned: Option<BackendConn> = None;
+
+    let mut result = Ok(());
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                result = Err(e.into());
+                break;
+            }
+        };
+        let line = line.trim().to_string();
+        if line == "QUIT" {
+            break;
+        }
+        let reply = gw_command(&line, shared, &mut pinned, &mut out);
+        match reply {
+            Ok(Some(r)) => {
+                if out.write_all(r.as_bytes()).and_then(|_| out.write_all(b"\n")).is_err() {
+                    break; // client went away mid-reply
+                }
+                let _ = out.flush();
+            }
+            Ok(None) => {} // streaming command wrote its own lines
+            Err(e) => {
+                let _ = out.write_all(format!("ERR {e}\n").as_bytes());
+                let _ = out.flush();
+            }
+        }
+        if line == "SHUTDOWN" {
+            break;
+        }
+    }
+    // dropping the pin closes the replica connection, which releases the
+    // replica-side session (and cancels any lane the client abandoned)
+    drop(pinned);
+    result
+}
+
+/// Execute one client command.  `Ok(Some(reply))` for one-line replies,
+/// `Ok(None)` when the command streamed its own output.
+fn gw_command(
+    line: &str,
+    shared: &GwShared,
+    pinned: &mut Option<BackendConn>,
+    out: &mut TcpStream,
+) -> Result<Option<String>> {
+    if line == "PING" {
+        return Ok(Some("PONG".into()));
+    }
+    if line == "SHUTDOWN" {
+        shared.begin_shutdown();
+        return Ok(Some("OK shutting down".into()));
+    }
+    if line == "HEALTH" {
+        let (up, _degraded, _down) = shared.router.state_counts();
+        return Ok(Some(format!(
+            "OK up={} busy={} lanes={up}",
+            shared.started.elapsed().as_secs(),
+            shared.router.in_flight_total(),
+        )));
+    }
+    if line == "STATS" {
+        return Ok(Some(gateway_stats(shared)));
+    }
+    if line == "METRICS" {
+        let lines = gateway_metrics(shared);
+        out.write_all(format!("METRICS {}\n", lines.len()).as_bytes())?;
+        for (name, value) in lines {
+            out.write_all(format!("llamaf_gateway_{name} {value}\n").as_bytes())?;
+        }
+        out.flush()?;
+        return Ok(None);
+    }
+    if line == "TRACE" {
+        // per-request trace state lives on the replica that served the
+        // generation — exactly the sticky pin
+        let bc = pinned
+            .as_mut()
+            .context("no completed generation on this connection (run GEN/SGEN first)")?;
+        let relayed = bc.send_line(shared, "TRACE").and_then(|_| bc.read_line(shared));
+        return match relayed {
+            Ok(reply) => Ok(Some(reply)),
+            Err(e) => {
+                *pinned = None; // conn state unknown; re-pin next request
+                Err(e)
+            }
+        };
+    }
+    if line.starts_with("SGEN ") || line.starts_with("GEN ") {
+        route_generation(line, shared, pinned, out)?;
+        return Ok(None);
+    }
+    anyhow::bail!("unknown command (GEN/SGEN/STATS/TRACE/METRICS/PING/HEALTH/SHUTDOWN/QUIT)")
+}
+
+/// Route one generation: pin a backend (least-loaded, retrying the
+/// connect on other replicas), enforce the bounded per-backend queue,
+/// proxy the stream, and redirect or shed on failure per the module
+/// contract.  Writes every client-visible line itself.
+fn route_generation(
+    line: &str,
+    shared: &GwShared,
+    pinned: &mut Option<BackendConn>,
+    out: &mut TcpStream,
+) -> Result<()> {
+    let streaming = line.starts_with("SGEN ");
+    let mut tried: Vec<usize> = Vec::new();
+    let mut redirected = false;
+    loop {
+        if pinned.is_none() {
+            match pin_backend(shared, &mut tried) {
+                Ok(bc) => {
+                    if redirected {
+                        shared.router.note_redirected();
+                    }
+                    *pinned = Some(bc);
+                }
+                Err(Pick::Saturated) => {
+                    shared.router.note_busy_rejected();
+                    out.write_all(b"ERR busy: all backends at their queue bound\n")?;
+                    out.flush()?;
+                    return Ok(());
+                }
+                Err(_) => {
+                    out.write_all(b"ERR fault: no backend available\n")?;
+                    out.flush()?;
+                    return Ok(());
+                }
+            }
+        }
+        let bc = pinned.as_mut().expect("pinned above");
+        let bi = bc.bi;
+        if !shared.router.admit(bi) {
+            // the sticky replica is at its bound; stealing another
+            // replica's KV would break stickiness, so shed honestly
+            shared.router.note_busy_rejected();
+            out.write_all(b"ERR busy: backend queue full\n")?;
+            out.flush()?;
+            return Ok(());
+        }
+        shared.router.note_routed(bi);
+        if let Some(c) = &shared.chaos {
+            c.note_routed();
+        }
+        let proxied = proxy_request(bc, shared, line, streaming, out);
+        shared.router.release(bi);
+        match proxied {
+            Ok(()) => return Ok(()),
+            Err(ProxyFail::ClientGone) => {
+                *pinned = None;
+                return Ok(());
+            }
+            Err(ProxyFail::NotStarted(e)) => {
+                // replica died before the client saw anything: redirect
+                eprintln!("llamaf-gw: backend {bi} failed pre-stream, redirecting: {e:#}");
+                shared.router.note_backend_failure(bi);
+                *pinned = None;
+                tried.push(bi);
+                redirected = true;
+                continue;
+            }
+            Err(ProxyFail::MidStream(e)) => {
+                eprintln!("llamaf-gw: backend {bi} lost mid-stream: {e:#}");
+                shared.router.note_backend_failure(bi);
+                shared.router.note_shed();
+                *pinned = None;
+                let _ = out.write_all(b"ERR fault: backend lost\n");
+                let _ = out.flush();
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Pick and connect a backend for a fresh pin, excluding (and extending)
+/// `tried` as connects fail.  `Err` carries the final [`Pick`] verdict.
+fn pin_backend(shared: &GwShared, tried: &mut Vec<usize>) -> Result<BackendConn, Pick> {
+    loop {
+        let bi = match shared.router.pick(tried) {
+            Pick::Backend(bi) => bi,
+            verdict => return Err(verdict),
+        };
+        match BackendConn::connect(shared, bi) {
+            Ok(bc) => return Ok(bc),
+            Err(_) => {
+                shared.router.note_backend_failure(bi);
+                tried.push(bi);
+            }
+        }
+    }
+}
+
+/// Forward one generation request over the pin and relay the reply
+/// stream.  Terminal lines: `DONE`/`OK`/`ERR` (forwarded verbatim — a
+/// replica's own `ERR busy`/`ERR fault`/`ERR deadline` stays honest
+/// end-to-end).
+fn proxy_request(
+    bc: &mut BackendConn,
+    shared: &GwShared,
+    line: &str,
+    streaming: bool,
+    out: &mut TcpStream,
+) -> Result<(), ProxyFail> {
+    if let Err(e) = bc.send_line(shared, line) {
+        return Err(ProxyFail::NotStarted(e));
+    }
+    let mut forwarded = false;
+    loop {
+        let reply = match bc.read_line(shared) {
+            Ok(r) => r,
+            Err(e) if forwarded => return Err(ProxyFail::MidStream(e)),
+            Err(e) => return Err(ProxyFail::NotStarted(e)),
+        };
+        if out
+            .write_all(reply.as_bytes())
+            .and_then(|_| out.write_all(b"\n"))
+            .and_then(|_| out.flush())
+            .is_err()
+        {
+            return Err(ProxyFail::ClientGone);
+        }
+        forwarded = true;
+        let terminal = if streaming {
+            reply.starts_with("DONE ") || reply.starts_with("ERR ")
+        } else {
+            true // GEN replies are a single OK/ERR line
+        };
+        if terminal {
+            return Ok(());
+        }
+    }
+}
+
+/// The gateway's one-line `STATS` reply: aggregate counters plus a
+/// `b<i>=<state>/<in_flight>/<routed>` token per backend.
+fn gateway_stats(shared: &GwShared) -> String {
+    let (up, degraded, down) = shared.router.state_counts();
+    let mut s = format!(
+        "OK gateway backends={} up={up} degraded={degraded} down={down} routed={} \
+         redirected={} shed={} busy_rejected={} queue_depth={} in_flight={} probes_ok={} \
+         probes_failed={}",
+        shared.router.backends().len(),
+        shared.router.routed_total(),
+        shared.router.redirected(),
+        shared.router.shed(),
+        shared.rejected.load(Ordering::Relaxed) + shared.router.busy_rejected(),
+        shared.queue_depth_gauge.load(Ordering::Relaxed),
+        shared.router.in_flight_total(),
+        shared.router.probes_ok(),
+        shared.router.probes_failed(),
+    );
+    for (bi, b) in shared.router.backends().iter().enumerate() {
+        s.push_str(&format!(" b{bi}={}/{}/{}", b.state().label(), b.in_flight(), b.routed()));
+    }
+    s
+}
+
+/// The gateway's `METRICS` export (names get the `llamaf_gateway_`
+/// prefix): 12 aggregate lines plus 4 per backend, in table order.
+fn gateway_metrics(shared: &GwShared) -> Vec<(String, String)> {
+    let (u, d, n) = shared.router.state_counts();
+    let r = &shared.router;
+    let mut lines: Vec<(String, String)> = vec![
+        ("backends".into(), r.backends().len().to_string()),
+        ("backends_up".into(), u.to_string()),
+        ("backends_degraded".into(), d.to_string()),
+        ("backends_down".into(), n.to_string()),
+        ("routed_total".into(), r.routed_total().to_string()),
+        ("redirected_total".into(), r.redirected().to_string()),
+        ("shed_total".into(), r.shed().to_string()),
+        (
+            "rejected_total".into(),
+            (shared.rejected.load(Ordering::Relaxed) + r.busy_rejected()).to_string(),
+        ),
+        ("queue_depth".into(), shared.queue_depth_gauge.load(Ordering::Relaxed).to_string()),
+        ("in_flight".into(), r.in_flight_total().to_string()),
+        ("probes_ok_total".into(), r.probes_ok().to_string()),
+        ("probes_failed_total".into(), r.probes_failed().to_string()),
+    ];
+    for (bi, b) in r.backends().iter().enumerate() {
+        let state_num = match b.state().label() {
+            "up" => 2,
+            "degraded" => 1,
+            _ => 0,
+        };
+        lines.push((format!("backend{bi}_state"), state_num.to_string()));
+        lines.push((format!("backend{bi}_in_flight"), b.in_flight().to_string()));
+        lines.push((format!("backend{bi}_routed"), b.routed().to_string()));
+        lines.push((format!("backend{bi}_probe_busy"), b.probe_busy().to_string()));
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_plan_parses_like_a_fault_plan() {
+        let p = ChaosPlan::parse("p=0.25,seed=7,stall_ms=80,after=4,at=1/kill").unwrap();
+        assert_eq!(p.p, 0.25);
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.after, 4);
+        assert_eq!(
+            p.triggers,
+            vec![ChaosTrigger { backend: 1, kind: ChaosKind::Kill, times: 1 }]
+        );
+        // triggers resolve after scalars regardless of spec order
+        let p = ChaosPlan::parse("at=0/stall,stall_ms=80").unwrap();
+        assert_eq!(p.triggers[0].kind, ChaosKind::Stall(80));
+        let p = ChaosPlan::parse("at=2/slowaccept/always").unwrap();
+        assert_eq!(p.triggers[0].times, u32::MAX);
+        assert_eq!(p.triggers[0].kind, ChaosKind::SlowAccept(50));
+        let p = ChaosPlan::parse("at=0/stall/3").unwrap();
+        assert_eq!(p.triggers[0].times, 3);
+        assert!(ChaosPlan::parse("").unwrap().is_empty());
+        assert!(ChaosPlan::parse("bogus=1").is_err());
+        assert!(ChaosPlan::parse("at=0/explode").is_err());
+        assert!(ChaosPlan::parse("at=0").is_err());
+        assert!(ChaosPlan::parse("p=1.5").is_err());
+        assert!(ChaosPlan::parse("at=0/stall/0").is_err());
+    }
+
+    #[test]
+    fn kill_is_permanent_and_gated_by_after() {
+        let inj = ChaosInjector::new(ChaosPlan::parse("after=2,at=1/kill").unwrap());
+        assert!(!inj.killed(1), "not armed before `after` requests routed");
+        assert!(inj.on_connect(1).is_ok());
+        inj.note_routed();
+        inj.note_routed();
+        assert!(inj.killed(1), "armed at the request-count mark");
+        assert!(!inj.killed(0), "only the targeted backend");
+        assert!(inj.on_connect(1).is_err());
+        assert!(inj.on_send(1).is_err());
+        assert!(inj.on_read(1).is_err());
+        assert!(inj.on_read(1).is_err(), "kill never heals");
+        assert!(inj.on_connect(0).is_ok());
+    }
+
+    #[test]
+    fn counted_stalls_consume_fires_and_always_does_not() {
+        let inj = ChaosInjector::new(ChaosPlan::parse("stall_ms=0,at=0/stall/2").unwrap());
+        assert!(inj.on_send(0).is_ok()); // fire 1 (0 ms: no real sleep)
+        assert!(inj.on_send(0).is_ok()); // fire 2
+        assert_eq!(inj.consume(0, |k| matches!(k, ChaosKind::Stall(_)).then_some(0)), None);
+        let inj = ChaosInjector::new(ChaosPlan::parse("stall_ms=7,at=0/stall/always").unwrap());
+        assert_eq!(inj.always_stall_ms(0), Some(7));
+        assert_eq!(inj.always_stall_ms(1), None);
+    }
+
+    #[test]
+    fn seeded_connect_faults_replay_identically() {
+        let run = |seed: u64| -> Vec<bool> {
+            let inj =
+                ChaosInjector::new(ChaosPlan::parse(&format!("p=0.5,seed={seed}")).unwrap());
+            (0..32).map(|_| inj.on_connect(0).is_ok()).collect()
+        };
+        assert_eq!(run(9), run(9), "same seed, same fault sequence");
+        assert_ne!(run(9), run(10), "different seed, different sequence");
+        let faults = run(9).iter().filter(|ok| !**ok).count();
+        assert!(faults > 0, "p=0.5 over 32 rolls injects something");
+    }
+}

@@ -1,0 +1,206 @@
+//! Per-backend health probing for the serving gateway.
+//!
+//! Two halves, kept separate so each is testable alone:
+//!
+//! * [`HealthTracker`] — a pure `Up`/`Degraded`/`Down` state machine fed
+//!   probe outcomes.  One failed probe demotes `Up` → `Degraded` (the
+//!   backend stays routable as a last resort); [`HealthTracker::down_after`]
+//!   consecutive failures demote to `Down` (never routed); any success
+//!   restores `Up` immediately.
+//! * [`probe`] — one wire probe: connect with a deadline, send the
+//!   engine server's one-line `HEALTH` command, parse
+//!   `OK up=<s> busy=<n> lanes=<n>`.  Every step is bounded by the
+//!   timeout, so a stalled backend costs the prober one timeout, never a
+//!   hang.
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// Routability of one backend as seen by the gateway's prober.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendState {
+    /// Last probe succeeded: preferred routing target.
+    Up,
+    /// At least one recent probe failed (but fewer than
+    /// [`HealthTracker::down_after`] in a row): routed only when no `Up`
+    /// backend can take the request.
+    Degraded,
+    /// [`HealthTracker::down_after`] consecutive probes failed: never
+    /// routed until a probe succeeds again.
+    Down,
+}
+
+impl BackendState {
+    /// Lower-case label used in `STATS` replies (`up`/`degraded`/`down`).
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendState::Up => "up",
+            BackendState::Degraded => "degraded",
+            BackendState::Down => "down",
+        }
+    }
+}
+
+/// Pure probe-outcome state machine (no I/O, no clock): feed it
+/// [`HealthTracker::record_success`] / [`HealthTracker::record_failure`]
+/// and read [`HealthTracker::state`].
+#[derive(Clone, Copy, Debug)]
+pub struct HealthTracker {
+    /// Consecutive probe failures that demote `Degraded` → `Down`.
+    pub down_after: u32,
+    failures: u32,
+    state: BackendState,
+}
+
+/// Default consecutive-failure threshold for `Down`.
+pub const DEFAULT_DOWN_AFTER: u32 = 3;
+
+impl Default for HealthTracker {
+    fn default() -> Self {
+        HealthTracker::new(DEFAULT_DOWN_AFTER)
+    }
+}
+
+impl HealthTracker {
+    /// Fresh tracker, optimistically `Up` (a gateway can route before the
+    /// first probe completes; the prober demotes liars within one
+    /// interval).
+    pub fn new(down_after: u32) -> Self {
+        HealthTracker { down_after: down_after.max(1), failures: 0, state: BackendState::Up }
+    }
+
+    /// A probe succeeded: back to `Up`, failure streak reset.
+    pub fn record_success(&mut self) {
+        self.failures = 0;
+        self.state = BackendState::Up;
+    }
+
+    /// A probe failed (connect error, timeout, malformed reply).
+    pub fn record_failure(&mut self) {
+        self.failures = self.failures.saturating_add(1);
+        self.state = if self.failures >= self.down_after {
+            BackendState::Down
+        } else {
+            BackendState::Degraded
+        };
+    }
+
+    /// Current routability.
+    pub fn state(&self) -> BackendState {
+        self.state
+    }
+
+    /// Consecutive failures recorded since the last success.
+    pub fn failures(&self) -> u32 {
+        self.failures
+    }
+}
+
+/// Parsed fields of an engine server's `HEALTH` reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProbeReply {
+    /// Backend uptime in whole seconds.
+    pub up_s: u64,
+    /// Sessions currently checked out (busy) on the backend.
+    pub busy: u64,
+    /// The backend's lane capacity per batched step (`--max-batch`).
+    pub lanes: u64,
+}
+
+/// Parse `OK up=<s> busy=<n> lanes=<n>` (the engine server's `HEALTH`
+/// reply).  Strict: every field must be present and numeric, so a
+/// half-written reply from a dying backend counts as a failed probe.
+pub fn parse_health_reply(line: &str) -> Result<ProbeReply> {
+    let rest = line
+        .trim()
+        .strip_prefix("OK ")
+        .with_context(|| format!("HEALTH reply not OK: {line:?}"))?;
+    let mut up_s = None;
+    let mut busy = None;
+    let mut lanes = None;
+    for field in rest.split_whitespace() {
+        let (key, value) = field
+            .split_once('=')
+            .with_context(|| format!("malformed HEALTH field {field:?}"))?;
+        let value: u64 =
+            value.parse().with_context(|| format!("non-numeric HEALTH field {field:?}"))?;
+        match key {
+            "up" => up_s = Some(value),
+            "busy" => busy = Some(value),
+            "lanes" => lanes = Some(value),
+            _ => {} // forward-compatible: unknown fields are ignored
+        }
+    }
+    Ok(ProbeReply {
+        up_s: up_s.context("HEALTH reply missing up=")?,
+        busy: busy.context("HEALTH reply missing busy=")?,
+        lanes: lanes.context("HEALTH reply missing lanes=")?,
+    })
+}
+
+/// One wire probe of `addr`: connect, send `HEALTH`, read and parse the
+/// one-line reply.  Connect, write, and read are all bounded by
+/// `timeout` — a stalled backend surfaces as an error within ~3×
+/// `timeout` worst case, never a hang.
+pub fn probe(addr: SocketAddr, timeout: Duration) -> Result<ProbeReply> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut conn = TcpStream::connect_timeout(&addr, timeout)
+        .with_context(|| format!("probe connect {addr}"))?;
+    conn.set_read_timeout(Some(timeout))?;
+    conn.set_write_timeout(Some(timeout))?;
+    conn.write_all(b"HEALTH\n").with_context(|| format!("probe write {addr}"))?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line).with_context(|| format!("probe read {addr}"))?;
+    anyhow::ensure!(!line.is_empty(), "probe {addr}: connection closed before reply");
+    let reply = parse_health_reply(&line)?;
+    let _ = conn.write_all(b"QUIT\n");
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_walks_up_degraded_down_and_recovers() {
+        let mut t = HealthTracker::new(3);
+        assert_eq!(t.state(), BackendState::Up, "optimistic start");
+        t.record_failure();
+        assert_eq!(t.state(), BackendState::Degraded, "one failure degrades");
+        t.record_failure();
+        assert_eq!(t.state(), BackendState::Degraded);
+        t.record_failure();
+        assert_eq!(t.state(), BackendState::Down, "3 consecutive failures");
+        assert_eq!(t.failures(), 3);
+        t.record_failure();
+        assert_eq!(t.state(), BackendState::Down, "down is sticky under failures");
+        t.record_success();
+        assert_eq!(t.state(), BackendState::Up, "one success fully restores");
+        assert_eq!(t.failures(), 0);
+        t.record_failure();
+        assert_eq!(t.state(), BackendState::Degraded, "streak restarted from zero");
+    }
+
+    #[test]
+    fn down_after_is_clamped_to_at_least_one() {
+        let mut t = HealthTracker::new(0);
+        t.record_failure();
+        assert_eq!(t.state(), BackendState::Down, "threshold 0 behaves as 1");
+    }
+
+    #[test]
+    fn health_reply_parses_and_rejects_garbage() {
+        let r = parse_health_reply("OK up=42 busy=3 lanes=8\n").unwrap();
+        assert_eq!(r, ProbeReply { up_s: 42, busy: 3, lanes: 8 });
+        // unknown fields are ignored (forward compatibility)
+        let r = parse_health_reply("OK up=1 busy=0 lanes=4 extra=9").unwrap();
+        assert_eq!(r.lanes, 4);
+        assert!(parse_health_reply("ERR busy: shutting down").is_err());
+        assert!(parse_health_reply("OK up=1 busy=0").is_err(), "missing lanes=");
+        assert!(parse_health_reply("OK up=x busy=0 lanes=4").is_err(), "non-numeric");
+        assert!(parse_health_reply("OK up busy=0 lanes=4").is_err(), "missing =");
+    }
+}

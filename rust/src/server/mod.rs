@@ -42,9 +42,21 @@
 //!                                      scrapeable flat text export of
 //!                                      every gauge/counter (shared mode)
 //!   `PING`                          →  `PONG`
-//!   `SHUTDOWN`                      →  `OK shutting down`; drains queued
-//!                                      connections, then exits (shared)
+//!   `HEALTH`                        →  one line: `OK up=<s> busy=<n>
+//!                                      lanes=<n>` — uptime seconds, busy
+//!                                      sessions, lane capacity; the
+//!                                      minimal liveness probe gateway
+//!                                      health checks poll (shared mode)
+//!   `SHUTDOWN`                      →  `OK shutting down`; stops
+//!                                      accepting (a late connection gets
+//!                                      an immediate `ERR busy`, never a
+//!                                      hang), drains queued connections,
+//!                                      then exits (shared mode)
 //!   `QUIT`                          →  closes the connection
+//!
+//! Scale-out serving fronts N replicas of this server with the
+//! [`gateway`] module: health-checked least-loaded routing ([`router`],
+//! [`health`]) speaking this same protocol on both sides.
 //!
 //! Overload behaviour is explicit: when the connection queue is full the
 //! accept loop answers `ERR busy` and closes instead of queueing unbounded
@@ -74,6 +86,10 @@ use crate::model::{LlamaConfig, PagePool, QuantModel, DEFAULT_PAGE_POSITIONS};
 use crate::ps::gqmv::GqmvExec;
 use crate::sched::{SchedMode, StageGranularity};
 use crate::tokenizer::Tokenizer;
+
+pub mod gateway;
+pub mod health;
+pub mod router;
 
 /// Factory building GQMV backends (the batch scheduler's decode thread
 /// gets one; the backend must be `Send` to move onto it).
@@ -186,6 +202,10 @@ struct Shared {
     next_conn: AtomicU64,
     workers_live: AtomicUsize,
     addr: std::net::SocketAddr,
+    /// When serving started — `HEALTH` reports whole-second uptime.
+    started: Instant,
+    /// Lane capacity per batched step — `HEALTH` reports it as `lanes=`.
+    max_batch: usize,
 }
 
 impl Shared {
@@ -341,6 +361,8 @@ impl Server {
             next_conn: AtomicU64::new(0),
             workers_live: AtomicUsize::new(0),
             addr,
+            started: Instant::now(),
+            max_batch: opts.max_batch,
         };
         let mut accepted = 0usize;
 
@@ -377,6 +399,13 @@ impl Server {
 
             for stream in self.listener.incoming() {
                 if shared.shutdown.load(Ordering::SeqCst) {
+                    // The stream that woke us is usually the shutdown
+                    // self-poke (already closed — the write fails
+                    // harmlessly), but it may be a real client racing the
+                    // shutdown: refuse it honestly either way.
+                    if let Ok(mut s) = stream {
+                        let _ = s.write_all(b"ERR busy: server shutting down\n");
+                    }
                     break;
                 }
                 let stream = match stream {
@@ -405,6 +434,27 @@ impl Server {
             // Drain: workers finish everything already queued, then exit.
             shared.shutdown.store(true, Ordering::SeqCst);
             shared.cv.notify_all();
+            // Accepting stopped BEFORE the drain — but the listener stays
+            // bound, so a client connecting mid-drain would otherwise sit
+            // in the OS backlog until its own timeout.  Keep servicing
+            // the listener while workers finish, answering each late
+            // connection with an immediate honest refusal.  (Counters are
+            // left untouched: the shutdown self-poke can land here, and
+            // it must not perturb accepted/rejected accounting.)
+            self.listener.set_nonblocking(true)?;
+            while shared.workers_live.load(Ordering::SeqCst) > 0 {
+                match self.listener.accept() {
+                    Ok((mut s, _)) => {
+                        let _ = s.write_all(b"ERR busy: server shutting down\n");
+                        let _ = s.flush();
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+            let _ = self.listener.set_nonblocking(false);
             Ok(())
         });
         // All workers have joined; no lanes can be in flight any more.
@@ -498,6 +548,17 @@ impl Server {
         if line == "PING" {
             return Ok(Some("PONG".into()));
         }
+        if line == "HEALTH" {
+            // One line, three fields, no histogram math: cheap enough for
+            // a gateway to poll every probe interval without parsing the
+            // full STATS reply.
+            let (_idle, in_use) = shared.pool.counts();
+            return Ok(Some(format!(
+                "OK up={} busy={in_use} lanes={}",
+                shared.started.elapsed().as_secs(),
+                shared.max_batch,
+            )));
+        }
         if line == "SHUTDOWN" {
             shared.begin_shutdown();
             return Ok(Some("OK shutting down".into()));
@@ -535,7 +596,9 @@ impl Server {
         } else if let Some(r) = line.strip_prefix("GEN ") {
             (false, r)
         } else {
-            anyhow::bail!("unknown command (GEN/SGEN/STATS/TRACE/METRICS/PING/SHUTDOWN/QUIT)")
+            anyhow::bail!(
+                "unknown command (GEN/SGEN/STATS/TRACE/METRICS/PING/HEALTH/SHUTDOWN/QUIT)"
+            )
         };
 
         let (steps, prompt) = parse_gen(rest, shared.cfg.seq_len)?;
@@ -724,8 +787,8 @@ mod tests {
     use crate::ps::ScalarGqmv;
     use std::io::{BufRead, BufReader, Write};
 
-    fn tiny_engine() -> CpuEngine {
-        let cfg = LlamaConfig {
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig {
             dim: 64,
             hidden_dim: 128,
             n_layers: 2,
@@ -734,8 +797,22 @@ mod tests {
             vocab_size: 512,
             seq_len: 64,
             gs: 32,
-        };
-        CpuEngine::new(QuantModel::from_float(&FloatModel::random(cfg, 1)), Box::new(ScalarGqmv))
+        }
+    }
+
+    fn tiny_engine() -> CpuEngine {
+        CpuEngine::new(
+            QuantModel::from_float(&FloatModel::random(tiny_cfg(), 1)),
+            Box::new(ScalarGqmv),
+        )
+    }
+
+    fn tiny_model() -> Arc<QuantModel> {
+        Arc::new(QuantModel::from_float(&FloatModel::random(tiny_cfg(), 1)))
+    }
+
+    fn scalar_exec() -> Box<dyn GqmvExec + Send> {
+        Box::new(ScalarGqmv)
     }
 
     #[test]
@@ -789,6 +866,72 @@ mod tests {
         // server's read loop alive.
         conn.write_all(b"QUIT\n").unwrap();
         drop(conn);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn health_reports_uptime_busy_and_lanes() {
+        let server = Server::bind("127.0.0.1:0", 512).unwrap();
+        let addr = server.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let opts = ServeOpts { workers: 1, max_batch: 4, ..ServeOpts::default() };
+            server.serve_shared(tiny_model(), &scalar_exec, &opts, Some(1)).unwrap()
+        });
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        conn.write_all(b"HEALTH\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let l = line.trim();
+        assert!(l.starts_with("OK up="), "{l}");
+        assert!(l.contains(" busy=0"), "no session checked out by HEALTH alone: {l}");
+        assert!(l.ends_with(" lanes=4"), "lanes = configured max_batch: {l}");
+        conn.write_all(b"QUIT\n").unwrap();
+        drop(conn);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_during_drain_is_refused_not_hung() {
+        // Regression: SHUTDOWN stops accepting BEFORE the worker drain.
+        // A client connecting while workers finish queued connections
+        // must get an immediate honest refusal, not hang in the OS
+        // backlog until its own timeout.
+        let server = Server::bind("127.0.0.1:0", 512).unwrap();
+        let addr = server.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let opts = ServeOpts { workers: 1, ..ServeOpts::default() };
+            server.serve_shared(tiny_model(), &scalar_exec, &opts, None).unwrap()
+        });
+        // A occupies the single worker
+        let mut a = std::net::TcpStream::connect(addr).unwrap();
+        let mut ra = BufReader::new(a.try_clone().unwrap());
+        let mut line = String::new();
+        a.write_all(b"PING\n").unwrap();
+        ra.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+        // B parks in the connection queue behind A and holds the drain
+        // open (the worker will block reading it until it QUITs)
+        let mut b = std::net::TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        line.clear();
+        a.write_all(b"SHUTDOWN\n").unwrap();
+        ra.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "OK shutting down");
+        a.write_all(b"QUIT\n").unwrap();
+        drop(a);
+        // give the accept loop a moment to switch into drain mode
+        std::thread::sleep(Duration::from_millis(50));
+        // C connects during the drain
+        let c = std::net::TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut rc = BufReader::new(c);
+        line.clear();
+        rc.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ERR busy: server shutting down");
+        // B drains normally, then the server exits
+        b.write_all(b"QUIT\n").unwrap();
+        drop(b);
         t.join().unwrap();
     }
 }

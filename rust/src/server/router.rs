@@ -1,0 +1,336 @@
+//! Health-aware, least-loaded routing table for the serving gateway.
+//!
+//! The [`Router`] owns one [`Backend`] entry per engine replica: its
+//! address, its prober-fed [`HealthTracker`], a bounded in-flight
+//! request count (the per-backend queue that propagates backpressure
+//! client → gateway → replica), and the routed/probe counters exported
+//! through the gateway's `STATS`/`METRICS`.
+//!
+//! Routing policy ([`Router::pick`]): among backends that are not
+//! excluded, not `Down`, and not at their in-flight bound, choose the
+//! least-loaded one, preferring `Up` over `Degraded`.  Session
+//! stickiness is the *gateway's* job (one pinned replica connection per
+//! client connection); the router only decides where a session starts —
+//! and where it restarts after a redirect.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::health::{BackendState, HealthTracker};
+
+/// One engine replica as the gateway sees it.
+pub struct Backend {
+    /// Replica address the gateway connects to.
+    pub addr: SocketAddr,
+    health: Mutex<HealthTracker>,
+    in_flight: AtomicUsize,
+    routed: AtomicU64,
+    /// `busy=` gauge from the replica's last successful `HEALTH` probe.
+    probe_busy: AtomicU64,
+}
+
+impl Backend {
+    fn new(addr: SocketAddr) -> Self {
+        Backend {
+            addr,
+            health: Mutex::new(HealthTracker::default()),
+            in_flight: AtomicUsize::new(0),
+            routed: AtomicU64::new(0),
+            probe_busy: AtomicU64::new(0),
+        }
+    }
+
+    /// Current health state (prober-fed).
+    pub fn state(&self) -> BackendState {
+        self.health.lock().unwrap().state()
+    }
+
+    /// Requests currently in flight on this backend through the gateway.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Requests ever routed to this backend.
+    pub fn routed(&self) -> u64 {
+        self.routed.load(Ordering::Relaxed)
+    }
+
+    /// `busy=` sessions reported by the last successful probe.
+    pub fn probe_busy(&self) -> u64 {
+        self.probe_busy.load(Ordering::Relaxed)
+    }
+}
+
+/// Outcome of a routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pick {
+    /// Route to this backend index.
+    Backend(usize),
+    /// At least one backend is alive, but every alive one is at its
+    /// in-flight bound — answer `ERR busy` (backpressure, not failure).
+    Saturated,
+    /// Every backend is `Down` or excluded — answer `ERR fault`.
+    NoneAlive,
+}
+
+/// Routing table plus the gateway-level counters.
+pub struct Router {
+    backends: Vec<Backend>,
+    /// Per-backend in-flight bound (CLI `--max-queue`).
+    pub max_queue: usize,
+    redirected: AtomicU64,
+    shed: AtomicU64,
+    busy_rejected: AtomicU64,
+    probes_ok: AtomicU64,
+    probes_failed: AtomicU64,
+}
+
+impl Router {
+    /// Build a table over `addrs` with a per-backend in-flight bound of
+    /// `max_queue` (clamped to ≥ 1).
+    pub fn new(addrs: Vec<SocketAddr>, max_queue: usize) -> Self {
+        Router {
+            backends: addrs.into_iter().map(Backend::new).collect(),
+            max_queue: max_queue.max(1),
+            redirected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            busy_rejected: AtomicU64::new(0),
+            probes_ok: AtomicU64::new(0),
+            probes_failed: AtomicU64::new(0),
+        }
+    }
+
+    /// The replica table, in configuration order.
+    pub fn backends(&self) -> &[Backend] {
+        &self.backends
+    }
+
+    /// Least-loaded routing decision, skipping `exclude`d indices (the
+    /// backends already tried for this request).  `Up` beats `Degraded`
+    /// at any load; `Down` and at-bound backends are never picked.
+    pub fn pick(&self, exclude: &[usize]) -> Pick {
+        let mut best: Option<(u8, usize, usize)> = None; // (state rank, load, index)
+        let mut any_alive = false;
+        for (bi, b) in self.backends.iter().enumerate() {
+            if exclude.contains(&bi) {
+                continue;
+            }
+            let rank = match b.state() {
+                BackendState::Up => 0u8,
+                BackendState::Degraded => 1,
+                BackendState::Down => continue,
+            };
+            any_alive = true;
+            let load = b.in_flight();
+            if load >= self.max_queue {
+                continue; // at bound: backpressure, look elsewhere
+            }
+            if best.map(|(r, l, _)| (rank, load) < (r, l)).unwrap_or(true) {
+                best = Some((rank, load, bi));
+            }
+        }
+        match best {
+            Some((_, _, bi)) => Pick::Backend(bi),
+            None if any_alive => Pick::Saturated,
+            None => Pick::NoneAlive,
+        }
+    }
+
+    /// Reserve one in-flight slot on `bi` (bounded by
+    /// [`Router::max_queue`]).  Returns false when the backend is already
+    /// at its bound — the caller re-picks or sheds with `ERR busy`.
+    pub fn admit(&self, bi: usize) -> bool {
+        self.backends[bi]
+            .in_flight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n < self.max_queue).then_some(n + 1)
+            })
+            .is_ok()
+    }
+
+    /// Release the in-flight slot taken by [`Router::admit`].
+    pub fn release(&self, bi: usize) {
+        let prev = self.backends[bi].in_flight.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0, "release without admit on backend {bi}");
+    }
+
+    /// Count one request routed to `bi`.
+    pub fn note_routed(&self, bi: usize) {
+        self.backends[bi].routed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one not-yet-started generation redirected off a failed
+    /// backend.
+    pub fn note_redirected(&self) {
+        self.redirected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one in-flight stream shed with `ERR fault: backend lost`.
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request refused with `ERR busy` (all alive backends at
+    /// their bound).
+    pub fn note_busy_rejected(&self) {
+        self.busy_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Feed one probe outcome for `bi` into its tracker and the probe
+    /// counters; a success carries the replica's `busy=` gauge.
+    pub fn note_probe(&self, bi: usize, busy: Option<u64>) {
+        let mut h = self.backends[bi].health.lock().unwrap();
+        match busy {
+            Some(n) => {
+                h.record_success();
+                self.backends[bi].probe_busy.store(n, Ordering::Relaxed);
+                self.probes_ok.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                h.record_failure();
+                self.probes_failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record one observed request-path failure (a failed connect or a
+    /// dead stream) against `bi`'s health — demotes `Up` → `Degraded`
+    /// immediately so new sessions prefer other replicas; the prober
+    /// escalates to `Down` (or restores `Up`) within its next intervals.
+    pub fn note_backend_failure(&self, bi: usize) {
+        self.backends[bi].health.lock().unwrap().record_failure();
+    }
+
+    /// Force `bi` down as if [`HealthTracker::down_after`] probes failed
+    /// — the routing fast path for an observed hard connection failure,
+    /// so new sessions stop picking a dead replica before the prober
+    /// confirms it.
+    pub fn mark_down(&self, bi: usize) {
+        let mut h = self.backends[bi].health.lock().unwrap();
+        for _ in 0..h.down_after {
+            h.record_failure();
+        }
+    }
+
+    /// Backend counts by state: `(up, degraded, down)`.
+    pub fn state_counts(&self) -> (usize, usize, usize) {
+        let mut counts = (0, 0, 0);
+        for b in &self.backends {
+            match b.state() {
+                BackendState::Up => counts.0 += 1,
+                BackendState::Degraded => counts.1 += 1,
+                BackendState::Down => counts.2 += 1,
+            }
+        }
+        counts
+    }
+
+    /// Total requests routed (sum over backends).
+    pub fn routed_total(&self) -> u64 {
+        self.backends.iter().map(|b| b.routed()).sum()
+    }
+
+    /// Total in-flight requests (sum over backends).
+    pub fn in_flight_total(&self) -> usize {
+        self.backends.iter().map(|b| b.in_flight()).sum()
+    }
+
+    /// Redirected-generation counter.
+    pub fn redirected(&self) -> u64 {
+        self.redirected.load(Ordering::Relaxed)
+    }
+
+    /// Shed-stream counter.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Busy-rejection counter.
+    pub fn busy_rejected(&self) -> u64 {
+        self.busy_rejected.load(Ordering::Relaxed)
+    }
+
+    /// Successful-probe counter.
+    pub fn probes_ok(&self) -> u64 {
+        self.probes_ok.load(Ordering::Relaxed)
+    }
+
+    /// Failed-probe counter.
+    pub fn probes_failed(&self) -> u64 {
+        self.probes_failed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<SocketAddr> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i).parse().unwrap()).collect()
+    }
+
+    #[test]
+    fn pick_is_least_loaded_and_sticky_free() {
+        let r = Router::new(addrs(3), 4);
+        assert!(r.admit(0));
+        assert!(r.admit(0));
+        assert!(r.admit(1));
+        // loads: [2, 1, 0] -> backend 2
+        assert_eq!(r.pick(&[]), Pick::Backend(2));
+        assert!(r.admit(2));
+        assert!(r.admit(2));
+        // loads: [2, 1, 2] -> backend 1
+        assert_eq!(r.pick(&[]), Pick::Backend(1));
+        // excluding 1 -> tie between 0 and 2 broken by index order
+        assert_eq!(r.pick(&[1]), Pick::Backend(0));
+    }
+
+    #[test]
+    fn up_beats_degraded_at_any_load() {
+        let r = Router::new(addrs(2), 8);
+        r.note_probe(0, None); // backend 0 degraded
+        assert!(r.admit(1));
+        assert!(r.admit(1));
+        // degraded 0 is empty, up 1 carries load: up still wins
+        assert_eq!(r.pick(&[]), Pick::Backend(1));
+        // ...until up is excluded; degraded remains routable
+        assert_eq!(r.pick(&[1]), Pick::Backend(0));
+    }
+
+    #[test]
+    fn down_backends_are_never_picked() {
+        let r = Router::new(addrs(2), 8);
+        r.mark_down(0);
+        assert_eq!(r.backends()[0].state(), BackendState::Down);
+        assert_eq!(r.pick(&[]), Pick::Backend(1));
+        r.mark_down(1);
+        assert_eq!(r.pick(&[]), Pick::NoneAlive);
+        // recovery: one good probe restores routability
+        r.note_probe(0, Some(2));
+        assert_eq!(r.pick(&[]), Pick::Backend(0));
+        assert_eq!(r.backends()[0].probe_busy(), 2);
+        assert_eq!(r.state_counts(), (1, 0, 1));
+    }
+
+    #[test]
+    fn bounded_admission_saturates_honestly() {
+        let r = Router::new(addrs(2), 2);
+        for bi in 0..2 {
+            assert!(r.admit(bi));
+            assert!(r.admit(bi));
+            assert!(!r.admit(bi), "bound is {}", r.max_queue);
+        }
+        assert_eq!(r.pick(&[]), Pick::Saturated, "alive but full != dead");
+        r.release(0);
+        assert_eq!(r.pick(&[]), Pick::Backend(0));
+        assert_eq!(r.in_flight_total(), 3);
+    }
+
+    #[test]
+    fn max_queue_is_clamped_to_at_least_one() {
+        let r = Router::new(addrs(1), 0);
+        assert!(r.admit(0), "clamped bound still admits one");
+        assert!(!r.admit(0));
+    }
+}

@@ -1,0 +1,507 @@
+//! Integration: the replicated-serving gateway under deterministic
+//! chaos, end to end.
+//!
+//! The contract under test (see `docs/ARCHITECTURE.md`, "Scale-out
+//! topology"): killing one of three replicas mid-soak leaves every
+//! completed stream **bit-exact** against the batch-1 oracle (greedy
+//! decoding is deterministic and every replica serves the same
+//! checkpoint, so a redirected request produces the very tokens the dead
+//! replica would have); every client sees either a complete stream or an
+//! honest `ERR` (`fault:`/`busy`/`deadline:` taxonomy — never a silent
+//! truncation, never garbage); the gateway's bounded queues drain to
+//! zero; and every replica drains to zero checked-out sessions and zero
+//! live KV pages.  Chaos plans are scripted and seeded, so a run is
+//! reproducible from its seed.
+//!
+//! CI sweeps the kill/stall × replica matrix through the environment:
+//! `LLAMAF_CHAOS_FAULT` (kill|stall), `LLAMAF_CHAOS_BACKEND` (replica
+//! index), `LLAMAF_CHAOS_SEED` (u64).  Defaults exercise killing replica
+//! 1.  Runs on the synthetic tiny model — no artifacts required.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use llamaf::engine::forward::CpuEngine;
+use llamaf::engine::generate::{generate, Sampler};
+use llamaf::model::{FloatModel, LlamaConfig, QuantModel};
+use llamaf::ps::gqmv::GqmvExec;
+use llamaf::ps::ScalarGqmv;
+use llamaf::sched::FaultPlan;
+use llamaf::server::gateway::{ChaosPlan, Gateway, GatewayOpts, GatewayReport};
+use llamaf::server::{ServeOpts, ServeReport, Server};
+use llamaf::tokenizer::Tokenizer;
+
+const VOCAB: usize = 512;
+
+fn tiny_cfg() -> LlamaConfig {
+    LlamaConfig {
+        dim: 64,
+        hidden_dim: 128,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab_size: VOCAB,
+        seq_len: 64,
+        gs: 32,
+    }
+}
+
+fn tiny_model(seed: u64) -> Arc<QuantModel> {
+    Arc::new(QuantModel::from_float(&FloatModel::random(tiny_cfg(), seed)))
+}
+
+fn scalar_exec() -> Box<dyn GqmvExec + Send> {
+    Box::new(ScalarGqmv)
+}
+
+/// Batch-1 greedy oracle for `prompt`: the tokens every replica (and
+/// therefore the gateway) must stream for it, bit for bit.
+fn batch1_oracle(model: &Arc<QuantModel>, prompt: &[u32], steps: usize) -> Vec<u32> {
+    let mut eng = CpuEngine::new(Arc::clone(model), Box::new(ScalarGqmv));
+    generate(&mut eng, prompt, steps, Sampler::Greedy, false).unwrap().generated
+}
+
+/// One engine replica serving the shared checkpoint until `SHUTDOWN`.
+struct Replica {
+    addr: SocketAddr,
+    thread: JoinHandle<ServeReport>,
+}
+
+fn spawn_replica(model: &Arc<QuantModel>, faults: Option<FaultPlan>) -> Replica {
+    let server = Server::bind("127.0.0.1:0", VOCAB).unwrap();
+    let addr = server.local_addr().unwrap();
+    let model = Arc::clone(model);
+    let thread = std::thread::spawn(move || {
+        let opts = ServeOpts {
+            workers: 2,
+            queue_depth: 16,
+            max_sessions: 4,
+            kv_pages: 32,
+            faults,
+            ..Default::default()
+        };
+        server.serve_shared(model, &scalar_exec, &opts, None).unwrap()
+    });
+    Replica { addr, thread }
+}
+
+fn spawn_gateway(
+    backends: &[SocketAddr],
+    max_queue: usize,
+    chaos: Option<ChaosPlan>,
+) -> (SocketAddr, JoinHandle<GatewayReport>) {
+    let gw = Gateway::bind("127.0.0.1:0").unwrap();
+    let addr = gw.local_addr().unwrap();
+    let opts = GatewayOpts {
+        backends: backends.iter().map(|a| a.to_string()).collect(),
+        workers: 4,
+        queue_depth: 32,
+        max_queue,
+        probe_interval_ms: 10,
+        probe_timeout_ms: 200,
+        connect_timeout_ms: 1000,
+        chaos,
+    };
+    let thread = std::thread::spawn(move || gw.run(&opts, None).unwrap());
+    (addr, thread)
+}
+
+/// Send `SHUTDOWN` to a gateway or replica and read the ack.
+fn shutdown(addr: SocketAddr) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"SHUTDOWN\n").unwrap();
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    assert!(line.starts_with("OK"), "SHUTDOWN not acknowledged: {line:?}");
+    let _ = conn.write_all(b"QUIT\n");
+}
+
+/// What one soak client observed, normalized for comparison across runs.
+#[derive(Debug, PartialEq, Eq)]
+enum Outcome {
+    /// A complete stream: the exact token ids, in order.
+    Done(Vec<u32>),
+    /// An honest refusal/shed line (`ERR ...`), verbatim.
+    Refused(String),
+}
+
+/// Run one client through the gateway: `SGEN steps <prompt>`, collect
+/// the stream, classify the outcome.  Panics on anything dishonest —
+/// an unknown line, or an `ERR` outside the documented taxonomy.
+fn run_client(addr: SocketAddr, prompt: &str, steps: usize) -> Outcome {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(format!("SGEN {steps} {prompt}\n").as_bytes()).unwrap();
+    let mut got: Vec<u32> = Vec::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let line = line.trim_end().to_string();
+        if let Some(rest) = line.strip_prefix("TOK ") {
+            let id: u32 = rest.split_whitespace().nth(1).unwrap().parse().unwrap();
+            got.push(id);
+        } else if line.starts_with("DONE ") {
+            let _ = conn.write_all(b"QUIT\n");
+            return Outcome::Done(got);
+        } else if line.starts_with("ERR ") {
+            let honest = line.starts_with("ERR fault:")
+                || line.starts_with("ERR deadline:")
+                || line.starts_with("ERR busy");
+            assert!(honest, "dishonest error line: {line:?}");
+            assert!(
+                got.is_empty() || line.starts_with("ERR fault:"),
+                "a started stream may only end in a fault shed: {line:?}"
+            );
+            let _ = conn.write_all(b"QUIT\n");
+            return Outcome::Refused(line);
+        } else {
+            panic!("unexpected gateway line: {line:?}");
+        }
+    }
+}
+
+fn env_or(name: &str, default: &str) -> String {
+    std::env::var(name).unwrap_or_else(|_| default.to_string())
+}
+
+/// Send one command and read its first reply line.
+fn ask(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, cmd: &str) -> String {
+    conn.write_all(format!("{cmd}\n").as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim_end().to_string()
+}
+
+#[test]
+fn killing_one_of_three_replicas_mid_soak_keeps_survivors_bit_exact() {
+    // The tentpole drill, CI-parameterized: 12 staggered clients stream
+    // through a 3-replica gateway while a scripted fault (default: kill
+    // replica 1 after 6 routed requests) lands mid-soak.  Every DONE
+    // stream must match the batch-1 oracle exactly; every failure must be
+    // an honest ERR; gateway and replica ledgers must drain to zero.
+    let fault = env_or("LLAMAF_CHAOS_FAULT", "kill");
+    let backend = env_or("LLAMAF_CHAOS_BACKEND", "1");
+    let seed = env_or("LLAMAF_CHAOS_SEED", "7");
+    let spec = match fault.as_str() {
+        "kill" => format!("seed={seed},after=6,at={backend}/kill"),
+        "stall" => format!("seed={seed},stall_ms=30,after=6,at={backend}/stall/3"),
+        other => panic!("LLAMAF_CHAOS_FAULT must be kill or stall, got {other:?}"),
+    };
+    let chaos = ChaosPlan::parse(&spec).unwrap();
+
+    let model = tiny_model(50);
+    let replicas: Vec<Replica> = (0..3).map(|_| spawn_replica(&model, None)).collect();
+    let backend_addrs: Vec<SocketAddr> = replicas.iter().map(|r| r.addr).collect();
+    let (gw_addr, gw_thread) = spawn_gateway(&backend_addrs, 4, Some(chaos));
+
+    let tokenizer = Tokenizer::new(VOCAB);
+    let n_clients = 12usize;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let want = batch1_oracle(&model, &tokenizer.encode(&format!("soak {i}"), true), 4);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(i as u64 * 15));
+                let outcome = run_client(gw_addr, &format!("soak {i}"), 4);
+                match outcome {
+                    Outcome::Done(got) => {
+                        assert_eq!(got, want, "client {i}: stream diverged from the oracle");
+                        (1usize, 0usize)
+                    }
+                    Outcome::Refused(_) => (0, 1),
+                }
+            })
+        })
+        .collect();
+    let (mut done, mut errs) = (0usize, 0usize);
+    for h in handles {
+        let (d, e) = h.join().unwrap();
+        done += d;
+        errs += e;
+    }
+    assert_eq!(done + errs, n_clients);
+    assert!(done >= n_clients / 2, "soak mostly failed: {done} done, {errs} errors");
+
+    shutdown(gw_addr);
+    let report = gw_thread.join().unwrap();
+    assert!(report.routed >= done as u64, "every DONE stream was routed");
+    assert_eq!(report.in_flight_at_exit, 0, "per-backend queues did not drain");
+    assert_eq!(report.queued_at_exit, 0, "client connections left queued at exit");
+    if fault == "kill" {
+        assert!(report.probes_failed > 0, "the prober never saw the killed replica");
+    }
+
+    // chaos severs only the gateway's view — the replica processes are
+    // healthy and must drain to zero sessions and zero KV pages
+    for (ri, r) in replicas.into_iter().enumerate() {
+        shutdown(r.addr);
+        let rep = r.thread.join().unwrap();
+        assert_eq!(rep.busy_at_exit, 0, "replica {ri}: session leaked");
+        assert_eq!(rep.kv_pages_at_exit, 0, "replica {ri}: KV pages leaked");
+    }
+}
+
+#[test]
+fn pre_stream_backend_death_redirects_transparently() {
+    // Replica 0 is killed by the chaos plan after the first routed
+    // request — i.e. between the client's pin (connect) and its first
+    // send.  The gateway must notice the dead send before any output
+    // reached the client and replay the request on replica 1: the client
+    // sees ONE clean stream, bit-exact, and never learns anything failed.
+    let model = tiny_model(51);
+    let replicas: Vec<Replica> = (0..2).map(|_| spawn_replica(&model, None)).collect();
+    let backend_addrs: Vec<SocketAddr> = replicas.iter().map(|r| r.addr).collect();
+    let chaos = ChaosPlan::parse("after=1,at=0/kill").unwrap();
+    let (gw_addr, gw_thread) = spawn_gateway(&backend_addrs, 4, Some(chaos));
+
+    let tokenizer = Tokenizer::new(VOCAB);
+    let want = batch1_oracle(&model, &tokenizer.encode("redirect me", true), 5);
+    match run_client(gw_addr, "redirect me", 5) {
+        Outcome::Done(got) => assert_eq!(got, want, "redirected stream diverged"),
+        Outcome::Refused(e) => panic!("pre-stream death must be transparent, got {e:?}"),
+    }
+
+    shutdown(gw_addr);
+    let report = gw_thread.join().unwrap();
+    assert_eq!(report.redirected, 1, "exactly one transparent redirect");
+    assert_eq!(report.shed, 0, "nothing was client-visibly shed");
+    assert_eq!(report.in_flight_at_exit, 0);
+    for r in replicas {
+        shutdown(r.addr);
+        let rep = r.thread.join().unwrap();
+        assert_eq!(rep.busy_at_exit, 0);
+        assert_eq!(rep.kv_pages_at_exit, 0);
+    }
+}
+
+#[test]
+fn mid_stream_backend_loss_is_shed_honestly_and_the_replica_drains() {
+    // One replica whose engine stalls 30 ms per step (so a generation is
+    // slow enough to observe mid-flight).  Client A starts a long stream
+    // and reads its first tokens; then client B's request arms the kill
+    // (after=2).  A's stream must end in `ERR fault: backend lost` with
+    // the tokens-so-far a bit-exact PREFIX of the oracle; B must get an
+    // honest `ERR fault:` (no backend left to redirect to); the orphaned
+    // replica lane must be cancelled by the dropped pin, draining the
+    // replica to zero sessions and pages.
+    let model = tiny_model(52);
+    let stall = FaultPlan::parse("stall_ms=30,at=1/any/stall/always").unwrap();
+    let replica = spawn_replica(&model, Some(stall));
+    let chaos = ChaosPlan::parse("after=2,at=0/kill").unwrap();
+    let (gw_addr, gw_thread) = spawn_gateway(&[replica.addr], 4, Some(chaos));
+
+    let tokenizer = Tokenizer::new(VOCAB);
+    let want = batch1_oracle(&model, &tokenizer.encode("long slow stream", true), 20);
+
+    let mut a = TcpStream::connect(gw_addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    a.write_all(b"SGEN 20 long slow stream\n").unwrap();
+    let mut got: Vec<u32> = Vec::new();
+    let mut first = String::new();
+    a_reader.read_line(&mut first).unwrap();
+    let first = first.trim_end();
+    assert!(first.starts_with("TOK "), "stream did not start: {first:?}");
+    got.push(first.split_whitespace().nth(2).unwrap().parse().unwrap());
+
+    // B arms the kill and is refused honestly (sole backend is now dead)
+    match run_client(gw_addr, "second request", 4) {
+        Outcome::Refused(e) => assert!(e.starts_with("ERR fault:"), "{e:?}"),
+        Outcome::Done(_) => panic!("B must not complete on a killed backend"),
+    }
+
+    // A's stream must now die with the documented shed line
+    let shed_line = loop {
+        let mut line = String::new();
+        a_reader.read_line(&mut line).unwrap();
+        let line = line.trim_end().to_string();
+        if let Some(rest) = line.strip_prefix("TOK ") {
+            got.push(rest.split_whitespace().nth(1).unwrap().parse().unwrap());
+        } else {
+            break line;
+        }
+    };
+    assert_eq!(shed_line, "ERR fault: backend lost", "shed must be explicit");
+    assert!(!got.is_empty() && got.len() < 20, "shed landed mid-stream (got {})", got.len());
+    assert_eq!(got[..], want[..got.len()], "pre-shed tokens must be oracle-exact");
+    let _ = a.write_all(b"QUIT\n");
+    drop(a_reader);
+    drop(a);
+
+    shutdown(gw_addr);
+    let report = gw_thread.join().unwrap();
+    assert_eq!(report.shed, 1, "exactly one mid-stream shed");
+    assert_eq!(report.in_flight_at_exit, 0);
+
+    // the dropped pin cancels the orphaned lane on the (healthy) replica
+    shutdown(replica.addr);
+    let rep = replica.thread.join().unwrap();
+    assert_eq!(rep.busy_at_exit, 0, "orphaned session leaked");
+    assert_eq!(rep.kv_pages_at_exit, 0, "orphaned KV pages leaked");
+}
+
+#[test]
+fn gateway_shutdown_drains_in_flight_work_and_refuses_late_connections() {
+    // SHUTDOWN mid-conversation: client A holds an open connection, B
+    // orders the shutdown, C connects late.  A must still be served until
+    // it quits (drain, not abort), C must be refused immediately with an
+    // honest ERR busy — never silently dropped, never hung.
+    let model = tiny_model(53);
+    let replica = spawn_replica(&model, None);
+    let (gw_addr, gw_thread) = spawn_gateway(&[replica.addr], 4, None);
+
+    let tokenizer = Tokenizer::new(VOCAB);
+    let want = batch1_oracle(&model, &tokenizer.encode("drain me", true), 4);
+    let mut a = TcpStream::connect(gw_addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    a.write_all(b"PING\n").unwrap();
+    let mut pong = String::new();
+    a_reader.read_line(&mut pong).unwrap();
+    assert_eq!(pong.trim_end(), "PONG");
+
+    shutdown(gw_addr); // B
+
+    // C: late connection is refused, not queued and not hung
+    let mut c = TcpStream::connect(gw_addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut c_reader = BufReader::new(c.try_clone().unwrap());
+    let mut refusal = String::new();
+    c_reader.read_line(&mut refusal).unwrap();
+    assert_eq!(refusal.trim_end(), "ERR busy: gateway shutting down");
+
+    // A keeps working through the drain: a full generation, bit-exact
+    a.write_all(b"SGEN 4 drain me\n").unwrap();
+    let mut got: Vec<u32> = Vec::new();
+    loop {
+        let mut line = String::new();
+        a_reader.read_line(&mut line).unwrap();
+        let line = line.trim_end();
+        if let Some(rest) = line.strip_prefix("TOK ") {
+            got.push(rest.split_whitespace().nth(1).unwrap().parse().unwrap());
+        } else {
+            assert!(line.starts_with("DONE "), "drain aborted A's stream: {line:?}");
+            break;
+        }
+    }
+    assert_eq!(got, want, "drained stream diverged");
+    a.write_all(b"QUIT\n").unwrap();
+    drop(a_reader);
+    drop(a);
+
+    let report = gw_thread.join().unwrap();
+    assert_eq!(report.in_flight_at_exit, 0);
+    assert_eq!(report.queued_at_exit, 0);
+
+    shutdown(replica.addr);
+    let rep = replica.thread.join().unwrap();
+    assert_eq!(rep.busy_at_exit, 0);
+    assert_eq!(rep.kv_pages_at_exit, 0);
+}
+
+#[test]
+fn same_seed_chaos_runs_are_reproducible() {
+    // Two sequential-client soaks under seeded probabilistic connect
+    // faults (p=0.4): the per-client outcome sequence — which requests
+    // completed, which tokens, which error lines — must be identical
+    // across runs with the same seed.  Clients run one at a time so RNG
+    // consumption order is schedule-independent.
+    let model = tiny_model(54);
+    let tokenizer = Tokenizer::new(VOCAB);
+    let run_once = || -> Vec<Outcome> {
+        let replicas: Vec<Replica> = (0..2).map(|_| spawn_replica(&model, None)).collect();
+        let backend_addrs: Vec<SocketAddr> = replicas.iter().map(|r| r.addr).collect();
+        let chaos = ChaosPlan::parse("p=0.4,seed=99").unwrap();
+        let (gw_addr, gw_thread) = spawn_gateway(&backend_addrs, 4, Some(chaos));
+        let outcomes: Vec<Outcome> = (0..8)
+            .map(|i| {
+                // let at least one probe cycle land between clients so a
+                // transient-fault streak never accumulates into Down
+                // (which would skip a backend without consuming an RNG
+                // roll and desynchronize the two runs)
+                std::thread::sleep(Duration::from_millis(25));
+                run_client(gw_addr, &format!("replay {i}"), 3)
+            })
+            .collect();
+        shutdown(gw_addr);
+        let report = gw_thread.join().unwrap();
+        assert_eq!(report.in_flight_at_exit, 0);
+        for r in replicas {
+            shutdown(r.addr);
+            let rep = r.thread.join().unwrap();
+            assert_eq!(rep.busy_at_exit, 0);
+            assert_eq!(rep.kv_pages_at_exit, 0);
+        }
+        outcomes
+    };
+    let first = run_once();
+    let second = run_once();
+    assert_eq!(first, second, "same seed must replay the same outcome sequence");
+    // and completed streams are still oracle-exact, faults or not
+    for (i, o) in first.iter().enumerate() {
+        if let Outcome::Done(got) = o {
+            let want = batch1_oracle(&model, &tokenizer.encode(&format!("replay {i}"), true), 3);
+            assert_eq!(got, &want, "client {i}: faulty-run stream diverged");
+        }
+    }
+}
+
+#[test]
+fn gateway_observability_surfaces_answer_locally() {
+    // PING / HEALTH / STATS / METRICS are gateway-local (never proxied):
+    // pin their shapes so dashboards and the prober can rely on them.
+    let model = tiny_model(55);
+    let replica = spawn_replica(&model, None);
+    let (gw_addr, gw_thread) = spawn_gateway(&[replica.addr], 4, None);
+
+    // complete one generation so the counters are non-trivial
+    match run_client(gw_addr, "warm up", 3) {
+        Outcome::Done(got) => assert_eq!(got.len(), 3),
+        Outcome::Refused(e) => panic!("healthy gateway refused: {e:?}"),
+    }
+
+    let mut conn = TcpStream::connect(gw_addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    assert_eq!(ask(&mut conn, &mut reader, "PING"), "PONG");
+
+    let health = ask(&mut conn, &mut reader, "HEALTH");
+    let parsed = llamaf::server::health::parse_health_reply(&health).unwrap();
+    assert_eq!(parsed.busy, 0, "nothing in flight");
+    assert_eq!(parsed.lanes, 1, "lanes= counts Up backends at the gateway");
+
+    let stats = ask(&mut conn, &mut reader, "STATS");
+    assert!(stats.starts_with("OK gateway backends=1 "), "{stats:?}");
+    assert!(stats.contains(" routed=1 "), "warm-up request not counted: {stats:?}");
+    assert!(stats.contains(" b0=up/0/1"), "per-backend triple missing: {stats:?}");
+
+    let head = ask(&mut conn, &mut reader, "METRICS");
+    let n: usize = head.strip_prefix("METRICS ").unwrap().parse().unwrap();
+    assert_eq!(n, 16, "12 aggregate + 4 per-backend lines for one backend");
+    for _ in 0..n {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("llamaf_gateway_"), "unprefixed metric: {line:?}");
+        assert_eq!(line.trim_end().split(' ').count(), 2, "name value: {line:?}");
+    }
+
+    // TRACE before any generation on THIS connection is an honest error
+    let trace = ask(&mut conn, &mut reader, "TRACE");
+    assert!(trace.starts_with("ERR "), "{trace:?}");
+    conn.write_all(b"QUIT\n").unwrap();
+    drop(reader);
+    drop(conn);
+
+    shutdown(gw_addr);
+    let report = gw_thread.join().unwrap();
+    assert_eq!(report.routed, 1);
+    assert_eq!(report.in_flight_at_exit, 0);
+    shutdown(replica.addr);
+    let rep = replica.thread.join().unwrap();
+    assert_eq!(rep.busy_at_exit, 0);
+    assert_eq!(rep.kv_pages_at_exit, 0);
+}

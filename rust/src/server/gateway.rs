@@ -51,7 +51,7 @@
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -499,7 +499,9 @@ impl Gateway {
             shutdown: AtomicBool::new(false),
             router: Router::new(addrs, opts.max_queue),
             chaos: opts.chaos.clone().map(ChaosInjector::new),
-            workers_live: AtomicUsize::new(0),
+            // pre-counted (decrement-only) so a SHUTDOWN racing worker
+            // startup can't observe 0 and skip the drain loop below
+            workers_live: AtomicUsize::new(opts.workers),
             addr: self.local_addr()?,
             started: Instant::now(),
             connect_timeout: Duration::from_millis(opts.connect_timeout_ms.max(1)),
@@ -516,7 +518,6 @@ impl Gateway {
                 std::thread::Builder::new()
                     .name(format!("llamaf-gw-{wi}"))
                     .spawn_scoped(scope, move || {
-                        shared.workers_live.fetch_add(1, Ordering::SeqCst);
                         while let Some(conn) = next_client(shared) {
                             if let Err(e) = handle_client(conn, shared) {
                                 eprintln!("llamaf-gw-{wi}: connection error: {e:#}");
@@ -769,11 +770,13 @@ fn route_generation(
     let mut tried: Vec<usize> = Vec::new();
     let mut redirected = false;
     loop {
-        if pinned.is_none() {
+        let fresh_pin = pinned.is_none();
+        if fresh_pin {
             match pin_backend(shared, &mut tried) {
                 Ok(bc) => {
                     if redirected {
                         shared.router.note_redirected();
+                        redirected = false;
                     }
                     *pinned = Some(bc);
                 }
@@ -793,6 +796,13 @@ fn route_generation(
         let bc = pinned.as_mut().expect("pinned above");
         let bi = bc.bi;
         if !shared.router.admit(bi) {
+            if fresh_pin {
+                // lost the race between pick's load check and admit; the
+                // pin carries no session state yet, so try another replica
+                *pinned = None;
+                tried.push(bi);
+                continue;
+            }
             // the sticky replica is at its bound; stealing another
             // replica's KV would break stickiness, so shed honestly
             shared.router.note_busy_rejected();

@@ -359,7 +359,9 @@ impl Server {
             weights: if opts.resident { "resident" } else { "streamed" },
             timeout: opts.request_timeout_ms.map(Duration::from_millis),
             next_conn: AtomicU64::new(0),
-            workers_live: AtomicUsize::new(0),
+            // pre-counted (decrement-only) so a SHUTDOWN racing worker
+            // startup can't observe 0 and skip the drain loop below
+            workers_live: AtomicUsize::new(opts.workers),
             addr,
             started: Instant::now(),
             max_batch: opts.max_batch,
@@ -386,7 +388,6 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("llamaf-serve-{wi}"))
                     .spawn_scoped(scope, move || {
-                        shared.workers_live.fetch_add(1, Ordering::SeqCst);
                         while let Some(conn) = next_conn(shared) {
                             if let Err(e) = self.handle_shared_conn(conn, shared) {
                                 eprintln!("llamaf-serve-{wi}: connection error: {e:#}");
